@@ -1,0 +1,10 @@
+//! Figure-1 regeneration as a standalone example: MicroNet-V2 top-1
+//! vs quantisation bit width, original vs DFQ. CSV lands in results/.
+//!
+//!     cargo run --release --example bitwidth_sweep
+
+fn main() -> dfq::Result<()> {
+    dfq::experiments::run("fig1")?;
+    println!("series saved to results/fig1.csv");
+    Ok(())
+}

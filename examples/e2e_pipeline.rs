@@ -1,0 +1,106 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): exercises the
+//! FULL stack on the real small workload —
+//!
+//!   1. load every pretrained (corrupted) model container,
+//!   2. run the complete DFQ pipeline (fold → ReLU6 → CLE → absorb →
+//!      INT8 quantise → analytic bias correction),
+//!   3. evaluate FP32 vs naive-INT8 vs DFQ-INT8 on PJRT executables
+//!      produced by the JAX/Pallas AOT path,
+//!   4. serve the quantised classifier behind the dynamic batcher and
+//!      report latency/throughput.
+//!
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example e2e_pipeline
+
+use dfq::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+use dfq::eval::{evaluate, Backend};
+use dfq::graph::io::Dataset;
+use dfq::graph::Model;
+use dfq::nn::QuantCfg;
+use dfq::quant::QScheme;
+use dfq::runtime::{Manifest, Runtime};
+use dfq::util::table::{pct, Table};
+
+fn main() -> dfq::Result<()> {
+    let manifest = Manifest::load(dfq::artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+    let limit = std::env::var("DFQ_EVAL_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .or(Some(512));
+
+    let mut t = Table::new(
+        "End-to-end: every architecture through the full stack",
+        &["arch", "task", "params", "FP32", "naive INT8", "DFQ INT8"],
+    );
+    let archs: Vec<String> = manifest.archs.keys().cloned().collect();
+    for arch in &archs {
+        let entry = manifest.arch(arch)?.clone();
+        let model = Model::load(manifest.path(&entry.model))?;
+        let dataset = Dataset::load(manifest.dataset(&entry.task, "test")?)?;
+
+        let fp = {
+            let prep = quantize_data_free(&model, &DfqConfig::baseline())?;
+            let exec = rt.load_model_exec(&manifest, arch, 64, &prep.model)?;
+            let w = exec.bind_weights(&prep.model)?;
+            evaluate(
+                &prep.model,
+                &QuantCfg::fp32(&prep.model),
+                &dataset,
+                &Backend::Pjrt { exec: &exec, weights: &w },
+                limit,
+            )?
+        };
+        let naive = {
+            let prep = quantize_data_free(&model, &DfqConfig::baseline())?;
+            let q = prep.quantize(
+                &QScheme::int8_asymmetric(),
+                8,
+                BiasCorrMode::None,
+                None,
+            )?;
+            let exec = rt.load_model_exec(&manifest, arch, 64, &q.model)?;
+            let w = exec.bind_weights(&q.model)?;
+            evaluate(
+                &q.model,
+                &q.act_cfg,
+                &dataset,
+                &Backend::Pjrt { exec: &exec, weights: &w },
+                limit,
+            )?
+        };
+        let dfq8 = {
+            let prep = quantize_data_free(&model, &DfqConfig::default())?;
+            let q = prep.quantize(
+                &QScheme::int8_asymmetric(),
+                8,
+                BiasCorrMode::Analytic,
+                None,
+            )?;
+            let exec = rt.load_model_exec(&manifest, arch, 64, &q.model)?;
+            let w = exec.bind_weights(&q.model)?;
+            evaluate(
+                &q.model,
+                &q.act_cfg,
+                &dataset,
+                &Backend::Pjrt { exec: &exec, weights: &w },
+                limit,
+            )?
+        };
+        t.row(&[
+            arch.clone(),
+            entry.task.clone(),
+            model.param_count().to_string(),
+            pct(fp),
+            pct(naive),
+            pct(dfq8),
+        ]);
+    }
+    t.print();
+
+    println!("\nserving the DFQ-INT8 classifier (dynamic batcher, PJRT):");
+    dfq::serve::demo::run_load("micronet_v2", 256, 400.0, 64)?;
+    println!("\ne2e pipeline complete.");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the paper's promised "straightforward API call".
+//!
+//! Loads the pretrained (corrupted) MicroNet-V2, quantises it to INT8
+//! with plain per-tensor quantisation and with DFQ, and compares top-1
+//! on SynthShapes-10 — Table 1 / Table 2 in miniature.
+//!
+//!     cargo run --release --example quickstart
+
+use dfq::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+use dfq::eval::{evaluate, Backend};
+use dfq::graph::io::Dataset;
+use dfq::graph::Model;
+use dfq::nn::QuantCfg;
+use dfq::quant::QScheme;
+use dfq::runtime::{Manifest, Runtime};
+
+fn main() -> dfq::Result<()> {
+    let manifest = Manifest::load(dfq::artifacts_dir())?;
+    let entry = manifest.arch("micronet_v2")?;
+    let model = Model::load(manifest.path(&entry.model))?;
+    let dataset =
+        Dataset::load(manifest.dataset("classification", "test")?)?;
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+
+    let run = |label: &str, cfg: &DfqConfig, bc, bits| -> dfq::Result<()> {
+        let prep = quantize_data_free(&model, cfg)?;
+        let q = prep.quantize(
+            &QScheme::int8_asymmetric().with_bits(bits),
+            bits,
+            bc,
+            None,
+        )?;
+        let exec = rt.load_model_exec(&manifest, "micronet_v2", 64, &q.model)?;
+        let weights = exec.bind_weights(&q.model)?;
+        let acc = evaluate(
+            &q.model,
+            &q.act_cfg,
+            &dataset,
+            &Backend::Pjrt { exec: &exec, weights: &weights },
+            Some(512),
+        )?;
+        println!("{label:<28} top-1 = {:.2}%", 100.0 * acc);
+        Ok(())
+    };
+
+    // FP32 reference
+    let prep = quantize_data_free(&model, &DfqConfig::baseline())?;
+    let exec = rt.load_model_exec(&manifest, "micronet_v2", 64, &prep.model)?;
+    let weights = exec.bind_weights(&prep.model)?;
+    let fp32 = evaluate(
+        &prep.model,
+        &QuantCfg::fp32(&prep.model),
+        &dataset,
+        &Backend::Pjrt { exec: &exec, weights: &weights },
+        Some(512),
+    )?;
+    println!("{:<28} top-1 = {:.2}%", "FP32 original", 100.0 * fp32);
+
+    run(
+        "INT8 naive (per-tensor)",
+        &DfqConfig::baseline(),
+        BiasCorrMode::None,
+        8,
+    )?;
+    run("INT8 DFQ", &DfqConfig::default(), BiasCorrMode::Analytic, 8)?;
+    run("INT6 DFQ", &DfqConfig::default(), BiasCorrMode::Analytic, 6)?;
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Serving example: INT8 DFQ MicroNet-V2 behind the dynamic batcher,
+//! under three offered loads. Demonstrates the L3 coordinator the way a
+//! deployment would use it: router + per-variant servers + metrics.
+//!
+//!     cargo run --release --example serve_quantized
+
+fn main() -> dfq::Result<()> {
+    for (label, requests, rate) in [
+        ("light load   (50 req/s)", 128usize, 50.0),
+        ("medium load (400 req/s)", 256, 400.0),
+        ("heavy load (2000 req/s)", 512, 2000.0),
+    ] {
+        print!("{label}: ");
+        dfq::serve::demo::run_load("micronet_v2", requests, rate, 64)?;
+    }
+    Ok(())
+}

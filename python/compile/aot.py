@@ -1,0 +1,211 @@
+"""AOT build orchestrator: ``make artifacts`` entrypoint.
+
+Runs exactly once (Make caches on the python sources): trains the micro
+model zoo, applies the ill-conditioning corruption, writes ``.dfqm``
+model containers and ``.dfqd`` datasets, and lowers the folded quant-sim
+forward of every (architecture, batch) to HLO **text** — the interchange
+format the Rust runtime loads (see /opt/xla-example/README.md: serialized
+HloModuleProto from jax >= 0.5 is rejected by xla_extension 0.5.1; text
+round-trips cleanly).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corrupt as C
+from . import data as D
+from . import dfqm, model, specs, train
+
+BATCH_SIZES = (1, 64)
+N_TEST = 1024
+N_CALIB = 512
+
+TRAIN_CFG = {
+    "micronet_v2": dict(steps=600),
+    "micronet_v1": dict(steps=600),
+    "microresnet18": dict(steps=600),
+    "microdeeplab": dict(steps=650),
+    "microssd": dict(steps=1000),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_model(nodes, outputs, input_shape, batch: int) -> tuple[str, dict]:
+    """Lower the folded quant-sim forward; returns (hlo_text, meta)."""
+    folded, remap = model.fold_spec(nodes)
+    order = model.weight_args(folded)
+    sites = model.act_sites(folded)
+    shapes = {}
+    for n in nodes:
+        if n["op"] == "conv":
+            shapes[n["w"]] = (n["out_ch"], n["in_ch"] // n["groups"],
+                              n["k"], n["k"])
+            shapes[n["b"] or f"fb{n['id']}"] = (n["out_ch"],)
+        elif n["op"] == "linear":
+            shapes[n["w"]] = (n["out_dim"], n["in_dim"])
+            shapes[n["b"]] = (n["out_dim"],)
+
+    x_spec = jax.ShapeDtypeStruct((batch, *input_shape), jnp.float32)
+    w_specs = [jax.ShapeDtypeStruct(shapes[name], jnp.float32)
+               for name, _ in order]
+    q_spec = jax.ShapeDtypeStruct((len(sites), 4), jnp.float32)
+
+    def fn(x, *rest):
+        weights, qcfg = rest[:-1], rest[-1]
+        return model.quantsim_forward(folded, outputs, remap,
+                                      list(weights), x, qcfg)
+
+    lowered = jax.jit(fn).lower(x_spec, *w_specs, q_spec)
+    meta = {
+        "weight_args": [[name, kind, list(shapes[name])]
+                        for name, kind in order],
+        "sites": sites,
+        "num_outputs": len(outputs),
+        "batch": batch,
+    }
+    return to_hlo_text(lowered), meta
+
+
+def lower_kernel_bench(m=1024, k=64, n=64) -> str:
+    """Standalone fused-kernel HLO for the Rust microbench."""
+    from .kernels.fq_matmul import fq_matmul
+    s = jax.ShapeDtypeStruct
+    lowered = jax.jit(
+        lambda x, w, b, c: (fq_matmul(x, w, b, c),)
+    ).lower(s((m, k), jnp.float32), s((k, n), jnp.float32),
+            s((n,), jnp.float32), s((8,), jnp.float32))
+    return to_hlo_text(lowered)
+
+
+def build_datasets(out: str, manifest: dict):
+    ds = {}
+    for task, gen in (("classification", D.make_classification),
+                      ("segmentation", D.make_segmentation),
+                      ("detection", D.make_detection)):
+        x_test, y_test = gen(N_TEST, seed=1234)
+        x_cal, y_cal = gen(N_CALIB, seed=5678)
+        files = {}
+        for split, (x, y) in (("test", (x_test, y_test)),
+                              ("calib", (x_cal, y_cal))):
+            path = f"{task}_{split}.dfqd"
+            arrs = {"x": x.astype(np.float32)}
+            if task == "detection":
+                arrs["boxes"] = y.astype(np.float32)
+            else:
+                arrs["y"] = y.astype(np.int32)
+            dfqm.write_dataset(os.path.join(out, path),
+                               f"synthshapes-{task}-{split}", task, arrs)
+            files[split] = path
+        ds[task] = files
+    manifest["datasets"] = ds
+
+
+def relower_arch(name: str, out: str, manifest: dict):
+    """Re-lower HLO for an already-trained arch (tile/kernel changes;
+    no retraining). Reads the graph spec back from the .dfqm header."""
+    t0 = time.time()
+    header, _ = dfqm.read(os.path.join(out, f"{name}.dfqm"))
+    nodes, outputs = header["nodes"], header["outputs"]
+    entry = manifest["archs"][name]
+    for b in BATCH_SIZES:
+        hlo, meta = lower_model(nodes, outputs, header["input_shape"], b)
+        path = f"{name}_b{b}.hlo.txt"
+        with open(os.path.join(out, path), "w") as f:
+            f.write(hlo)
+        entry["hlo"][str(b)] = path
+        entry.update({k: v for k, v in meta.items() if k != "batch"})
+    print(f"  [{name}] re-lowered in {time.time()-t0:.0f}s")
+
+
+def build_arch(name: str, out: str, manifest: dict, fast: bool):
+    cfg = dict(TRAIN_CFG[name])
+    if fast:
+        cfg["steps"] = 60
+    t0 = time.time()
+    params, (nodes, outputs, task, shapes, input_shape) = train.train(
+        name, **cfg)
+    if task == "classification":
+        x_train = D.make_classification(512, seed=42)[0]
+    elif task == "segmentation":
+        x_train = D.make_segmentation(512, seed=42)[0]
+    else:
+        x_train = D.make_detection(512, seed=42)[0]
+    params_np = {k: np.asarray(v) for k, v in params.items()}
+    corrupted = C.corrupt(nodes, outputs, params_np, x_train)
+
+    for tag, p in (("", corrupted), ("_clean", params_np)):
+        dfqm.write_model(
+            os.path.join(out, f"{name}{tag}.dfqm"),
+            name, task, input_shape, D.CLS_CLASSES, nodes, outputs,
+            {k: np.asarray(v, np.float32) for k, v in p.items()},
+            meta={"corrupted": tag == ""})
+
+    entry = {"task": task, "model": f"{name}.dfqm",
+             "model_clean": f"{name}_clean.dfqm", "hlo": {}}
+    for b in BATCH_SIZES:
+        hlo, meta = lower_model(nodes, outputs, input_shape, b)
+        path = f"{name}_b{b}.hlo.txt"
+        with open(os.path.join(out, path), "w") as f:
+            f.write(hlo)
+        entry["hlo"][str(b)] = path
+        entry.update({k: v for k, v in meta.items() if k != "batch"})
+    manifest["archs"][name] = entry
+    print(f"  [{name}] done in {time.time()-t0:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny step count — CI smoke only")
+    ap.add_argument("--archs", default=",".join(specs.ARCHS))
+    ap.add_argument("--lower-only", action="store_true",
+                    help="re-lower HLO from existing .dfqm files")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # partial rebuilds (--archs subset) merge into an existing manifest
+    manifest = {"version": 1, "archs": {}}
+    prev = os.path.join(args.out, "manifest.json")
+    if os.path.exists(prev):
+        with open(prev) as f:
+            manifest = json.load(f)
+    if args.lower_only:
+        for name in args.archs.split(","):
+            relower_arch(name, args.out, manifest)
+        with open(os.path.join(args.out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print("re-lowering complete")
+        return
+
+    build_datasets(args.out, manifest)
+    for name in args.archs.split(","):
+        build_arch(name, args.out, manifest, args.fast)
+
+    with open(os.path.join(args.out, "kernel_fq_matmul.hlo.txt"), "w") as f:
+        f.write(lower_kernel_bench())
+    manifest["kernel_bench"] = {"hlo": "kernel_fq_matmul.hlo.txt",
+                                "m": 1024, "k": 64, "n": 64}
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Ill-conditioning corruption — the MobileNetV2 pathology, synthesised.
+
+The paper's headline failure mode (Fig. 2, §3.1) is strong per-output-
+channel weight-range disparity that makes per-tensor INT8 quantisation
+collapse. Trained-from-scratch micro models are too well-conditioned to
+show it, so we *induce* it through the very invariance DFQ exploits
+(eq. 5-7): at every CLE-eligible pair boundary, scale BN's affine output
+of the first conv per channel by ``s_i`` and divide the second conv's
+matching input-channel weights by ``s_i``.
+
+Exactness: for ReLU / linear chains this preserves the FP32 function
+bit-for-bit (up to fp rounding). For ReLU6 the clip breaks positive
+homogeneity, so ``s_i`` is bounded per channel by ``6 / zmax_i`` (the
+channel's observed post-BN maximum on training data); channels that
+already saturate are left untouched. The corrupted model therefore keeps
+the original FP32 accuracy while per-tensor INT8 collapses — precisely
+the paper's starting point.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, specs
+
+SMAX = 200.0  # scale magnitude bound, log-uniform in [1/SMAX, SMAX]
+# At 200x the per-tensor INT8 grid starves the downscaled channels
+# (~1 level) and the corrupted "original model" collapses to chance,
+# matching the paper's Table 1 starting point; CLE recovers it exactly.
+
+
+def channel_zmax(nodes, outputs, params, x, bs=256):
+    """Per-channel max of every bn node's output over data ``x``."""
+    zmax = {}
+    for i in range(0, x.shape[0], bs):
+        _, vals, _ = layers.forward(
+            nodes, outputs, params, jnp.asarray(x[i:i + bs]), False)
+        for n in nodes:
+            if n["op"] != "bn":
+                continue
+            m = np.asarray(jnp.max(vals[n["id"]], axis=(0, 2, 3)))
+            zmax[n["id"]] = (np.maximum(zmax[n["id"]], m)
+                             if n["id"] in zmax else m)
+    return zmax
+
+
+def _chain_between(nodes, a_id, b_id):
+    """The (bn, act) nodes on the single-consumer chain a -> b."""
+    by_id = {n["id"]: n for n in nodes}
+    bn, act = None, None
+    cur = a_id
+    while cur != b_id:
+        cons = specs.consumers(nodes, cur)
+        assert len(cons) == 1
+        nxt = cons[0]
+        if nxt["op"] == "bn":
+            bn = nxt
+        elif nxt["op"] == "act":
+            act = nxt
+        cur = nxt["id"]
+        if cur == b_id:
+            break
+    _ = by_id
+    return bn, act
+
+
+def corrupt(nodes, outputs, params, x_train, seed: int = 0,
+            smax: float = SMAX):
+    """Apply the corruption in place on a params dict copy; returns it."""
+    params = dict(params)
+    zmax = channel_zmax(nodes, outputs, params, x_train[:1024])
+    rng = np.random.default_rng(seed + 77)
+    by_id = {n["id"]: n for n in nodes}
+    n_scaled = 0
+    for a_id, b_id in specs.cle_pairs(nodes):
+        bn, act = _chain_between(nodes, a_id, b_id)
+        if bn is None:
+            continue  # no BN to carry the scale (not present in the zoo)
+        ch = bn["ch"]
+        lo = np.full(ch, 1.0 / smax, np.float32)
+        hi = np.full(ch, smax, np.float32)
+        if act is not None and act["kind"] == "relu6":
+            z = zmax[bn["id"]]
+            sat = z > 6.0
+            hi = np.minimum(hi, np.where(z > 0, 6.0 / np.maximum(z, 1e-6),
+                                         smax))
+            hi = np.maximum(hi, 1.0)          # keep interval non-empty
+            lo[sat] = 1.0
+            hi[sat] = 1.0
+        s = np.exp(rng.uniform(np.log(lo), np.log(np.maximum(hi, lo))))
+        s = s.astype(np.float32)
+        n_scaled += int(np.sum(s != 1.0))
+
+        params[bn["gamma"]] = np.asarray(params[bn["gamma"]]) * s
+        params[bn["beta"]] = np.asarray(params[bn["beta"]]) * s
+
+        b = by_id[b_id]
+        w = np.asarray(params[b["w"]], np.float32).copy()
+        if b["groups"] == b["in_ch"] and b["groups"] > 1:   # depthwise
+            w /= s[:, None, None, None]
+        else:
+            w /= s[None, :, None, None]
+        params[b["w"]] = w
+    print(f"  corrupted {n_scaled} channels over "
+          f"{len(specs.cle_pairs(nodes))} CLE pairs")
+    return params

@@ -1,0 +1,179 @@
+"""SynthShapes — procedural datasets for the DFQ reproduction.
+
+The paper evaluates on ImageNet / Pascal VOC with pretrained MobileNets.
+Neither the data nor the checkpoints are available here (repro band 0/5),
+so we substitute seeded procedural datasets that exercise the same code
+paths (see DESIGN.md §1):
+
+* ``SynthShapes-10``  — 10-way classification, 32x32x3.
+* ``SynthShapes-seg`` — 4-class per-pixel segmentation (bg + 3 shapes).
+* ``SynthShapes-det`` — 1..3 shapes with boxes, 3 foreground classes.
+
+Everything is numpy-vectorised; generation of the full corpus takes a few
+seconds on one core. Containers are written by :mod:`compile.dfqm`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 32  # image side
+CLS_CLASSES = 10
+SEG_CLASSES = 4  # 0 = background
+DET_CLASSES = 3
+DET_MAX_OBJ = 3
+
+# Shape ids used across tasks. The first DET_CLASSES are the detection /
+# segmentation foreground shapes.
+SHAPES = [
+    "circle", "square", "triangle", "cross", "ring",
+    "diamond", "hbar", "vbar", "checker", "dots",
+]
+
+
+def _grid():
+    ys, xs = np.mgrid[0:IMG, 0:IMG].astype(np.float32) + 0.5
+    return xs, ys
+
+
+def shape_mask(shape: str, cx, cy, r):
+    """Boolean mask (N, IMG, IMG) for N shape instances.
+
+    ``cx, cy, r`` are float arrays of shape (N,).
+    """
+    xs, ys = _grid()
+    cx = np.asarray(cx, np.float32)[:, None, None]
+    cy = np.asarray(cy, np.float32)[:, None, None]
+    r = np.asarray(r, np.float32)[:, None, None]
+    dx, dy = xs[None] - cx, ys[None] - cy
+    ax, ay = np.abs(dx), np.abs(dy)
+    if shape == "circle":
+        return dx * dx + dy * dy <= r * r
+    if shape == "square":
+        return np.maximum(ax, ay) <= r
+    if shape == "triangle":
+        # upward triangle: inside |dx| <= (r - dy_shifted)/ slope
+        return (dy >= -r) & (dy <= r) & (ax <= (dy + r) * 0.6)
+    if shape == "cross":
+        t = np.maximum(r * 0.35, 1.2)
+        return ((ax <= t) & (ay <= r)) | ((ay <= t) & (ax <= r))
+    if shape == "ring":
+        d2 = dx * dx + dy * dy
+        return (d2 <= r * r) & (d2 >= (0.55 * r) ** 2)
+    if shape == "diamond":
+        return ax + ay <= r * 1.3
+    if shape == "hbar":
+        return (ax <= r * 1.3) & (ay <= r * 0.45)
+    if shape == "vbar":
+        return (ay <= r * 1.3) & (ax <= r * 0.45)
+    if shape == "checker":
+        box = np.maximum(ax, ay) <= r
+        par = ((xs[None] // 3).astype(np.int32) + (ys[None] // 3).astype(np.int32)) % 2 == 0
+        return box & par
+    if shape == "dots":
+        box = np.maximum(ax, ay) <= r
+        par = ((xs[None] % 5) < 2.5) & ((ys[None] % 5) < 2.5)
+        return box & par
+    raise ValueError(f"unknown shape {shape}")
+
+
+def _render(n, masks_colors, rng):
+    """Compose images from a list of (mask(N,H,W), color(N,3)) layers."""
+    img = rng.uniform(0.0, 0.25, size=(n, IMG, IMG, 3)).astype(np.float32)
+    # low-frequency background tint per image
+    tint = rng.uniform(0.0, 0.3, size=(n, 1, 1, 3)).astype(np.float32)
+    img += tint
+    for mask, color in masks_colors:
+        m = mask[..., None].astype(np.float32)
+        img = img * (1 - m) + m * color[:, None, None, :]
+    img += rng.normal(0.0, 0.04, size=img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def _rand_color(rng, n, lo=0.45):
+    c = rng.uniform(lo, 1.0, size=(n, 3)).astype(np.float32)
+    # knock one channel down for saturation
+    ch = rng.integers(0, 3, size=n)
+    c[np.arange(n), ch] *= rng.uniform(0.0, 0.5, size=n).astype(np.float32)
+    return c
+
+
+def make_classification(n: int, seed: int):
+    """Images (N,3,32,32) f32 NCHW + labels (N,) i32."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, CLS_CLASSES, size=n).astype(np.int32)
+    cx = rng.uniform(10, IMG - 10, size=n)
+    cy = rng.uniform(10, IMG - 10, size=n)
+    r = rng.uniform(6.0, 10.0, size=n)
+    color = _rand_color(rng, n)
+    masks = np.zeros((n, IMG, IMG), dtype=bool)
+    for k, name in enumerate(SHAPES):
+        idx = np.where(labels == k)[0]
+        if idx.size:
+            masks[idx] = shape_mask(name, cx[idx], cy[idx], r[idx])
+    imgs = _render(n, [(masks, color)], rng)
+    return imgs.transpose(0, 3, 1, 2).copy(), labels
+
+
+def make_segmentation(n: int, seed: int):
+    """Images (N,3,32,32) + per-pixel labels (N,32,32) i32 in [0,SEG_CLASSES)."""
+    rng = np.random.default_rng(seed)
+    seg = np.zeros((n, IMG, IMG), dtype=np.int32)
+    layers = []
+    n_obj = rng.integers(1, 3, size=n)  # 1..2 shapes
+    for j in range(2):
+        active = n_obj > j
+        cls = rng.integers(0, DET_CLASSES, size=n).astype(np.int32)
+        cx = rng.uniform(8, IMG - 8, size=n)
+        cy = rng.uniform(8, IMG - 8, size=n)
+        r = rng.uniform(4.5, 8.0, size=n)
+        color = _rand_color(rng, n)
+        masks = np.zeros((n, IMG, IMG), dtype=bool)
+        for k in range(DET_CLASSES):
+            idx = np.where(active & (cls == k))[0]
+            if idx.size:
+                masks[idx] = shape_mask(SHAPES[k], cx[idx], cy[idx], r[idx])
+        layers.append((masks, color))
+        for k in range(DET_CLASSES):
+            sel = active & (cls == k)
+            seg[sel] = np.where(masks[sel], k + 1, seg[sel])
+    imgs = _render(n, layers, rng)
+    return imgs.transpose(0, 3, 1, 2).copy(), seg
+
+
+def make_detection(n: int, seed: int):
+    """Images + boxes (N, DET_MAX_OBJ, 5) f32 rows ``[cls, x1, y1, x2, y2]``.
+
+    ``cls`` is -1 for padding rows; coordinates are in pixels.
+    """
+    rng = np.random.default_rng(seed)
+    boxes = np.full((n, DET_MAX_OBJ, 5), -1.0, dtype=np.float32)
+    layers = []
+    n_obj = rng.integers(1, DET_MAX_OBJ + 1, size=n)
+    # objects occupy *distinct* 3x3 placement cells (sampled without
+    # replacement per image) so boxes never overlap and each object lands
+    # in its own detection-grid cell
+    cells = np.stack([rng.permutation(9)[:DET_MAX_OBJ] for _ in range(n)])
+    for j in range(DET_MAX_OBJ):
+        active = n_obj > j
+        cls = rng.integers(0, DET_CLASSES, size=n).astype(np.int32)
+        gx = cells[:, j] % 3  # 3x3 placement cells
+        gy = cells[:, j] // 3
+        cx = gx * 10 + rng.uniform(5.0, 7.0, size=n)
+        cy = gy * 10 + rng.uniform(5.0, 7.0, size=n)
+        r = rng.uniform(3.5, 5.5, size=n)
+        color = _rand_color(rng, n)
+        masks = np.zeros((n, IMG, IMG), dtype=bool)
+        for k in range(DET_CLASSES):
+            idx = np.where(active & (cls == k))[0]
+            if idx.size:
+                masks[idx] = shape_mask(SHAPES[k], cx[idx], cy[idx], r[idx])
+        layers.append((masks, color))
+        sel = np.where(active)[0]
+        boxes[sel, j, 0] = cls[sel]
+        boxes[sel, j, 1] = np.clip(cx[sel] - r[sel], 0, IMG)
+        boxes[sel, j, 2] = np.clip(cy[sel] - r[sel], 0, IMG)
+        boxes[sel, j, 3] = np.clip(cx[sel] + r[sel], 0, IMG)
+        boxes[sel, j, 4] = np.clip(cy[sel] + r[sel], 0, IMG)
+    imgs = _render(n, layers, rng)
+    return imgs.transpose(0, 3, 1, 2).copy(), boxes

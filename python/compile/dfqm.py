@@ -1,0 +1,108 @@
+"""``.dfqm`` / ``.dfqd`` containers — the python↔rust interchange format.
+
+Layout (little-endian):
+
+    magic   4 bytes  b"DFQM" (model) or b"DFQD" (dataset)
+    version u32      currently 1
+    hdr_len u64      length of the JSON header in bytes
+    header  hdr_len  UTF-8 JSON
+    blobs   ...      raw arrays, each 64-byte aligned, at header-recorded
+                     offsets *relative to the start of the blob section*
+
+Model header schema (see rust/src/graph/io.rs for the reader):
+
+    {"kind": "model", "name": ..., "task": ...,
+     "input_shape": [C,H,W], "num_classes": K,
+     "nodes": [...],                 # graph spec, SSA node list
+     "outputs": [node_id, ...],
+     "tensors": {name: {"shape": [...], "dtype": "f32", "offset": o}}}
+
+Dataset header schema:
+
+    {"kind": "dataset", "name": ..., "task": ...,
+     "arrays": {name: {"shape": [...], "dtype": "f32"|"i32", "offset": o}}}
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+ALIGN = 64
+_DTYPES = {"f32": np.float32, "i32": np.int32}
+
+
+def _pad(n: int) -> int:
+    return (ALIGN - n % ALIGN) % ALIGN
+
+
+def write(path: str, magic: bytes, header: dict, arrays: dict):
+    """Write a container. ``header[...]['offset']`` fields are filled here."""
+    assert magic in (b"DFQM", b"DFQD")
+    table_key = "tensors" if magic == b"DFQM" else "arrays"
+    table = header[table_key] = {}
+    blobs = []
+    off = 0
+    for name, arr in arrays.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.float32:
+            dt = "f32"
+        elif arr.dtype == np.int32:
+            dt = "i32"
+        else:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        table[name] = {"shape": list(arr.shape), "dtype": dt, "offset": off}
+        raw = arr.tobytes()
+        blobs.append(raw)
+        off += len(raw) + _pad(len(raw))
+    hdr = json.dumps(header).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(magic)
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<Q", len(hdr)))
+        f.write(hdr)
+        f.write(b"\0" * _pad(16 + len(hdr)))
+        for raw in blobs:
+            f.write(raw)
+            f.write(b"\0" * _pad(len(raw)))
+
+
+def read(path: str):
+    """Read a container back. Returns (header, {name: np.ndarray})."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    magic, version = buf[:4], struct.unpack("<I", buf[4:8])[0]
+    assert magic in (b"DFQM", b"DFQD"), f"bad magic {magic!r}"
+    assert version == 1
+    (hdr_len,) = struct.unpack("<Q", buf[8:16])
+    header = json.loads(buf[16 : 16 + hdr_len].decode("utf-8"))
+    base = 16 + hdr_len
+    base += _pad(base)
+    table = header["tensors" if magic == b"DFQM" else "arrays"]
+    arrays = {}
+    for name, meta in table.items():
+        dt = _DTYPES[meta["dtype"]]
+        count = int(np.prod(meta["shape"])) if meta["shape"] else 1
+        start = base + meta["offset"]
+        arrays[name] = np.frombuffer(
+            buf, dtype=dt, count=count, offset=start
+        ).reshape(meta["shape"]).copy()
+    return header, arrays
+
+
+def write_model(path: str, name: str, task: str, input_shape, num_classes,
+                nodes, outputs, params: dict, meta: dict | None = None):
+    header = {
+        "kind": "model", "name": name, "task": task,
+        "input_shape": list(input_shape), "num_classes": int(num_classes),
+        "nodes": nodes, "outputs": list(outputs),
+    }
+    if meta:
+        header["meta"] = meta
+    write(path, b"DFQM", header, params)
+
+
+def write_dataset(path: str, name: str, task: str, arrays: dict):
+    write(path, b"DFQD", {"kind": "dataset", "name": name, "task": task}, arrays)

@@ -1,0 +1,108 @@
+"""Layer-1 Pallas kernel: fused fake-quantized matmul.
+
+The inference hot-spot of the quant-sim models: every pointwise (1x1)
+convolution and the classifier head lower to
+
+    y = fq( clip( x @ w + b, lo, hi ), scale, zp, n )
+
+with the epilogue (bias add, clipped-linear activation, activation
+fake-quantisation) fused into the matmul so each output tile makes a
+single HBM round-trip — the TPU analogue of the paper's fused integer
+pipeline (DESIGN.md §2).
+
+TPU mapping
+-----------
+* grid = (M/tm, N/tn); the full K dimension stays VMEM-resident per tile
+  (channels are <= 160 in the micro zoo, so tm*K + K*tn + tm*tn floats is
+  ~230 KB at the largest tiling — well under VMEM).
+* tiles target the MXU: tm in {16,..,256} and tn multiples of 8.
+* ``interpret=True`` everywhere: CPU PJRT cannot execute Mosaic
+  custom-calls; the kernel still lowers into the same HLO as the model.
+
+The epilogue config rides in an 8-float operand broadcast to every tile:
+``[clip_lo, clip_hi, scale, zero_point, n_levels, 0, 0, 0]``.
+``n_levels == 0`` disables fake-quant (pure matmul+bias+clip).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile-size ladder; pick the largest that divides the dimension.
+#
+# §Perf note: tm tops out at 2048 — the largest M-tile whose VMEM
+# footprint (tm*K + K*tn + tm*tn floats, K <= 160 in the zoo) stays
+# under ~2.5 MB, leaving ample double-buffering headroom in a 16 MB
+# VMEM. Larger M-tiles also cut the sequential grid-step count of the
+# interpret-mode lowering 8x, which dominated batch-64 latency on the
+# CPU PJRT backend (EXPERIMENTS.md §Perf).
+_TM_CHOICES = (2048, 1024, 512, 256, 128, 64, 32, 16, 8)
+_TN_CHOICES = (128, 64, 32, 16, 8)
+
+
+def pick_tile(dim: int, choices) -> int:
+    for t in choices:
+        if dim % t == 0:
+            return t
+    return 0
+
+
+def supported(m: int, n: int) -> bool:
+    """Whether the pallas path can tile this problem."""
+    return pick_tile(m, _TM_CHOICES) > 0 and pick_tile(n, _TN_CHOICES) > 0
+
+
+def _kernel(x_ref, w_ref, b_ref, cfg_ref, o_ref):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    cfg = cfg_ref[...]
+    lo, hi, scale, zp, n = cfg[0], cfg[1], cfg[2], cfg[3], cfg[4]
+    acc = jnp.clip(acc, lo, hi)
+    # fake-quant: quantize-dequantize on the fp32 grid (paper's simulation).
+    s = jnp.where(n > 0, scale, 1.0)
+    q = jnp.round(acc / s) + zp
+    q = jnp.clip(q, 0.0, jnp.maximum(n - 1.0, 1.0))
+    fq = (q - zp) * s
+    o_ref[...] = jnp.where(n > 0, fq, acc)
+
+
+@functools.partial(jax.named_call, name="fq_matmul")
+def fq_matmul(x, w, b, cfg):
+    """``fq(clip(x @ w + b))`` — x:(M,K) w:(K,N) b:(N,) cfg:(8,)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,) and cfg.shape == (8,)
+    tm, tn = pick_tile(m, _TM_CHOICES), pick_tile(n, _TN_CHOICES)
+    assert tm and tn, f"untileable problem ({m}, {n}); use the jnp fallback"
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((8,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b, cfg)
+
+
+def vmem_bytes(m: int, n: int, k: int) -> int:
+    """Estimated VMEM footprint of one grid step (f32)."""
+    tm, tn = pick_tile(m, _TM_CHOICES), pick_tile(n, _TN_CHOICES)
+    return 4 * (tm * k + k * tn + tn + 8 + tm * tn)
+
+
+def mxu_utilization(m: int, n: int, k: int) -> float:
+    """Fraction of 128x128x128 MXU macro-ops doing useful work."""
+    tm, tn = pick_tile(m, _TM_CHOICES), pick_tile(n, _TN_CHOICES)
+    pad = lambda d, t: -(-d // t) * t
+    useful = m * n * k
+    issued = pad(tm, 128) * pad(tn, 128) * pad(k, 128) * (m // tm) * (n // tn)
+    return useful / issued

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the L1 kernel — the correctness reference.
+
+Every behaviour of :func:`compile.kernels.fq_matmul.fq_matmul` must match
+this function bit-for-bit under ``assert_allclose`` (pytest +
+hypothesis sweep in python/tests/test_kernel.py). The Rust quant-sim
+engine (rust/src/nn) implements the same semantics; keeping this oracle
+tiny and obviously-correct anchors all three implementations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fake_quant(x, scale, zero_point, n_levels):
+    """Quantize-dequantize on the fp32 grid; identity when n_levels == 0.
+
+    Rounding is ties-to-even (jnp.round), matching f32::round_ties_even
+    on the Rust side.
+    """
+    s = jnp.where(n_levels > 0, scale, 1.0)
+    q = jnp.round(x / s) + zero_point
+    q = jnp.clip(q, 0.0, jnp.maximum(n_levels - 1.0, 1.0))
+    return jnp.where(n_levels > 0, (q - zero_point) * s, x)
+
+
+def fq_matmul_ref(x, w, b, cfg):
+    """Reference for the fused kernel: fq(clip(x @ w + b, lo, hi))."""
+    lo, hi, scale, zp, n = cfg[0], cfg[1], cfg[2], cfg[3], cfg[4]
+    y = x @ w + b[None, :]
+    y = jnp.clip(y, lo, hi)
+    return fake_quant(y, scale, zp, n)

@@ -1,0 +1,204 @@
+"""Layer-2: folded quant-sim forward — the graph that ships to Rust.
+
+This interpreter evaluates the *BatchNorm-folded* spec with quantisation
+hooks, and is what :mod:`compile.aot` lowers to HLO text. The executable
+contract (DESIGN.md §3) is::
+
+    args   = [x]  +  [w, b  per conv/linear in node order]  +  [qcfg]
+    qcfg   = f32[S, 4] rows (scale, zero_point, n_levels, clip_hi)
+    sites  = [input] + [act/add nodes in folded node order]
+
+Weights arrive *already fake-quantised* (or plain FP32) from the Rust
+coordinator; activation fake-quant is driven entirely by ``qcfg`` so a
+single executable serves FP32 eval (n_levels = 0) and every quantised
+table row. Pointwise convs and the classifier run through the fused
+Pallas kernel (fq_matmul) with the following activation's clip+fq folded
+into the matmul epilogue.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import fq_matmul as K
+from .kernels.ref import fake_quant
+from .layers import conv2d
+
+NO_CLIP = 1e30
+
+
+def fold_spec(nodes):
+    """Remove bn nodes; every conv gains a bias tensor (synthetic name
+    ``fb{id}`` when it had none). Returns (folded_nodes, remap) where
+    remap maps original node ids to folded producer ids."""
+    remap = {}
+    folded = []
+    for n in nodes:
+        if n["op"] == "bn":
+            remap[n["id"]] = remap.get(n["inputs"][0], n["inputs"][0])
+            continue
+        m = dict(n)
+        m["inputs"] = [remap.get(i, i) for i in n["inputs"]]
+        if m["op"] == "conv" and m["b"] is None:
+            m["b"] = f"fb{m['id']}"
+        folded.append(m)
+        remap[n["id"]] = n["id"]
+    return folded, remap
+
+
+def weight_args(folded):
+    """(name, kind) list defining the executable's weight-argument order."""
+    order = []
+    for n in folded:
+        if n["op"] in ("conv", "linear"):
+            order.append((n["w"], "weight"))
+            order.append((n["b"], "bias"))
+    return order
+
+
+def act_sites(folded):
+    """Site list: index 0 is the model input, then act/add nodes in order."""
+    sites = [{"node": "input"}]
+    for n in folded:
+        if n["op"] in ("act", "add"):
+            sites.append({"node": n["id"], "op": n["op"],
+                          "kind": n.get("kind")})
+    return sites
+
+
+def _site_index(folded):
+    idx = {"input": 0}
+    i = 1
+    for n in folded:
+        if n["op"] in ("act", "add"):
+            idx[n["id"]] = i
+            i += 1
+    return idx
+
+
+def _fusable(folded, conv):
+    """If ``conv``'s single consumer is an act node, return it — its
+    clip+fq epilogue then fuses into the Pallas kernel call."""
+    cons = [m for m in folded if conv["id"] in m["inputs"]]
+    if len(cons) == 1 and cons[0]["op"] == "act":
+        return cons[0]
+    return None
+
+
+def quantsim_forward(folded, outputs, remap, weights, x, qcfg):
+    """Evaluate the folded graph. ``weights`` follows weight_args order."""
+    wmap = {}
+    order = weight_args(folded)
+    assert len(weights) == len(order), (len(weights), len(order))
+    for (name, _), w in zip(order, weights):
+        wmap[name] = w
+    site = _site_index(folded)
+
+    def fq_site(v, s):
+        row = qcfg[s]
+        return fake_quant(v, row[0], row[1], row[2])
+
+    vals = {0: fq_site(x, 0)}
+    fused = {}  # act node id -> epilogue already applied by producer kernel
+    for n in folded:
+        op = n["op"]
+        if op == "input":
+            continue
+        nid = n["id"]
+        a = vals[n["inputs"][0]]
+        if op == "conv":
+            w, b = wmap[n["w"]], wmap[n["b"]]
+            act = _fusable(folded, n)
+            pallas_ok = (
+                n["k"] == 1 and n["groups"] == 1 and n["stride"] == 1
+                and K.supported(a.shape[0] * a.shape[2] * a.shape[3],
+                                n["out_ch"])
+            )
+            if pallas_ok:
+                bsz, cin, h, wd = a.shape
+                x2d = a.transpose(0, 2, 3, 1).reshape(bsz * h * wd, cin)
+                if act is not None:
+                    row = qcfg[site[act["id"]]]
+                    cfg = jnp.concatenate([
+                        jnp.zeros((1,), jnp.float32), row[3:4], row[0:1],
+                        row[1:2], row[2:3], jnp.zeros((3,), jnp.float32)])
+                    fused[act["id"]] = True
+                else:
+                    cfg = jnp.array(
+                        [-NO_CLIP, NO_CLIP, 1.0, 0.0, 0.0, 0, 0, 0],
+                        jnp.float32)
+                y2d = K.fq_matmul(x2d, w.reshape(n["out_ch"], cin).T, b, cfg)
+                y = y2d.reshape(bsz, h, wd, n["out_ch"]).transpose(0, 3, 1, 2)
+            else:
+                y = conv2d(a, w, n["stride"], n["pad"], n["groups"])
+                y = y + b[None, :, None, None]
+        elif op == "act":
+            if fused.get(nid):
+                y = a  # epilogue already applied in the kernel
+            else:
+                row = qcfg[site[nid]]
+                y = jnp.clip(a, 0.0, row[3])
+                y = fake_quant(y, row[0], row[1], row[2])
+        elif op == "add":
+            y = a + vals[n["inputs"][1]]
+            y = fq_site(y, site[nid])
+        elif op == "gap":
+            y = jnp.mean(a, axis=(2, 3))
+        elif op == "linear":
+            w, b = wmap[n["w"]], wmap[n["b"]]
+            if K.supported(a.shape[0], n["out_dim"]):
+                cfg = jnp.array([-NO_CLIP, NO_CLIP, 1.0, 0.0, 0.0, 0, 0, 0],
+                                jnp.float32)
+                y = K.fq_matmul(a, w.T, b, cfg)
+            else:
+                y = a @ w.T + b
+        elif op == "upsample":
+            f = n["factor"]
+            y = jnp.repeat(jnp.repeat(a, f, axis=2), f, axis=3)
+        else:
+            raise ValueError(op)
+        vals[nid] = y
+    return tuple(vals[remap.get(o, o)] for o in outputs)
+
+
+def fold_params(nodes, params, bn_eps=1e-5):
+    """Numerically fold BN into the preceding conv (python reference;
+    the production fold lives in rust/src/dfq/bn_fold.rs).
+
+    Returns the weights list in weight_args order plus per-conv
+    (|gamma|, beta) activation statistics of the folded graph, used by
+    cross-checks in python/tests.
+    """
+    import numpy as np
+
+    folded, _ = fold_spec(nodes)
+    bn_after = {}
+    for n in nodes:
+        if n["op"] == "bn":
+            bn_after[n["inputs"][0]] = n
+    out = {}
+    stats = {}
+    for n in nodes:
+        if n["op"] == "conv":
+            w = np.asarray(params[n["w"]], np.float32).copy()
+            b = (np.asarray(params[n["b"]], np.float32).copy()
+                 if n["b"] else np.zeros(n["out_ch"], np.float32))
+            bn = bn_after.get(n["id"])
+            if bn is not None:
+                g = np.asarray(params[bn["gamma"]])
+                be = np.asarray(params[bn["beta"]])
+                mu = np.asarray(params[bn["mean"]])
+                var = np.asarray(params[bn["var"]])
+                scale = g / np.sqrt(var + bn_eps)
+                w *= scale[:, None, None, None]
+                b = (b - mu) * scale + be
+                stats[n["id"]] = (np.abs(g).astype(np.float32),
+                                  be.astype(np.float32))
+            name_b = n["b"] if n["b"] else f"fb{n['id']}"
+            out[n["w"]] = w
+            out[name_b] = b
+        elif n["op"] == "linear":
+            out[n["w"]] = np.asarray(params[n["w"]], np.float32)
+            out[n["b"]] = np.asarray(params[n["b"]], np.float32)
+    weights = [out[name] for name, _ in weight_args(folded)]
+    return weights, stats

@@ -1,0 +1,50 @@
+"""Regenerate the corrupted model containers from the saved clean
+checkpoints (no retraining). Usage:
+
+    python -m compile.recorrupt --out ../artifacts [--smax 48]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from . import corrupt as C
+from . import data as D
+from . import dfqm, specs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--smax", type=float, default=C.SMAX)
+    ap.add_argument("--archs", default=",".join(specs.ARCHS))
+    args = ap.parse_args()
+
+    for arch in args.archs.split(","):
+        clean_path = os.path.join(args.out, f"{arch}_clean.dfqm")
+        header, params = dfqm.read(clean_path)
+        nodes, outputs = header["nodes"], header["outputs"]
+        task = header["task"]
+        if task == "classification":
+            x = D.make_classification(512, seed=42)[0]
+        elif task == "segmentation":
+            x = D.make_segmentation(512, seed=42)[0]
+        else:
+            x = D.make_detection(512, seed=42)[0]
+        params = {k: np.asarray(v) for k, v in params.items()}
+        print(f"[{arch}] corrupting with smax={args.smax}")
+        cor = C.corrupt(nodes, outputs, params, x, seed=0, smax=args.smax)
+        dfqm.write_model(
+            os.path.join(args.out, f"{arch}.dfqm"),
+            arch, task, header["input_shape"], header["num_classes"],
+            nodes, outputs,
+            {k: np.asarray(v, np.float32) for k, v in cor.items()},
+            meta={"corrupted": True, "smax": args.smax})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""Architecture specs — the single source of truth for model graphs.
+
+A spec is a JSON-serialisable SSA node list interpreted by three consumers:
+
+* ``compile.layers``      — training-mode JAX forward (BatchNorm live),
+* ``compile.model``       — folded quant-sim JAX forward (AOT → HLO),
+* ``rust/src/graph``      — the Rust IR (DFQ passes + reference engine).
+
+Node schema (all shapes NCHW):
+
+    {"id", "op", "inputs": [ids...], ...op fields}
+
+    conv:   w, b(optional), in_ch, out_ch, k, stride, pad, groups
+    bn:     ch, gamma, beta, mean, var         (inference: running stats)
+    act:    kind: "relu" | "relu6"
+    add:    two inputs
+    gap:    global average pool -> (N, C)
+    linear: w, b, in_dim, out_dim
+    upsample: factor (nearest-neighbour)
+
+Micro architectures mirror the paper's model zoo at 32x32 scale
+(DESIGN.md §1): MicroNet-V2 (inverted residuals + ReLU6), MicroNet-V1
+(depthwise-separable chain + ReLU6), MicroResNet-18 (basic blocks + ReLU),
+plus DeepLab-lite and SSD-lite heads over the V2 backbone.
+"""
+
+from __future__ import annotations
+
+from . import data as D
+
+
+class Builder:
+    """Incrementally builds a node list; returns node ids."""
+
+    def __init__(self, input_shape):
+        self.nodes = [{"id": 0, "op": "input", "inputs": []}]
+        self.shapes = {}  # tensor name -> shape
+        self.input_shape = list(input_shape)
+        self._n = 0
+
+    def _new(self, op, inputs, **kw):
+        nid = len(self.nodes)
+        node = {"id": nid, "op": op, "inputs": list(inputs)}
+        node.update(kw)
+        self.nodes.append(node)
+        return nid
+
+    def _name(self, prefix):
+        self._n += 1
+        return f"{prefix}{self._n}"
+
+    def conv(self, x, in_ch, out_ch, k, stride=1, pad=None, groups=1, bias=False):
+        pad = (k // 2) if pad is None else pad
+        w = self._name("w")
+        self.shapes[w] = [out_ch, in_ch // groups, k, k]
+        b = None
+        if bias:
+            b = self._name("b")
+            self.shapes[b] = [out_ch]
+        return self._new("conv", [x], w=w, b=b, in_ch=in_ch, out_ch=out_ch,
+                         k=k, stride=stride, pad=pad, groups=groups)
+
+    def bn(self, x, ch):
+        names = {}
+        for f in ("gamma", "beta", "mean", "var"):
+            n = self._name(f[0] if f != "mean" else "m")
+            self.shapes[n] = [ch]
+            names[f] = n
+        return self._new("bn", [x], ch=ch, **names)
+
+    def act(self, x, kind):
+        return self._new("act", [x], kind=kind)
+
+    def add(self, a, b):
+        return self._new("add", [a, b])
+
+    def gap(self, x):
+        return self._new("gap", [x])
+
+    def linear(self, x, in_dim, out_dim):
+        w, b = self._name("fw"), self._name("fb")
+        self.shapes[w] = [out_dim, in_dim]
+        self.shapes[b] = [out_dim]
+        return self._new("linear", [x], w=w, b=b, in_dim=in_dim, out_dim=out_dim)
+
+    def upsample(self, x, factor):
+        return self._new("upsample", [x], factor=factor)
+
+    # ---- composite blocks -------------------------------------------------
+
+    def conv_bn_act(self, x, in_ch, out_ch, k, stride=1, groups=1, act="relu6"):
+        c = self.conv(x, in_ch, out_ch, k, stride=stride, groups=groups)
+        b = self.bn(c, out_ch)
+        return self.act(b, act) if act else b
+
+    def inverted_residual(self, x, in_ch, out_ch, stride, expand, act="relu6"):
+        """MobileNetV2 block: pw-expand -> dw -> pw-project (linear)."""
+        mid = in_ch * expand
+        h = self.conv_bn_act(x, in_ch, mid, 1, act=act)           # expand
+        h = self.conv_bn_act(h, mid, mid, 3, stride=stride, groups=mid, act=act)  # dw
+        c = self.conv(h, mid, out_ch, 1)                          # project
+        h = self.bn(c, out_ch)                                    # linear bottleneck
+        if stride == 1 and in_ch == out_ch:
+            h = self.add(h, x)
+        return h
+
+    def basic_block(self, x, in_ch, out_ch, stride):
+        """ResNet-18 basic block with ReLU."""
+        h = self.conv_bn_act(x, in_ch, out_ch, 3, stride=stride, act="relu")
+        c = self.conv(h, out_ch, out_ch, 3)
+        h = self.bn(c, out_ch)
+        if stride != 1 or in_ch != out_ch:
+            s = self.conv(x, in_ch, out_ch, 1, stride=stride, pad=0)
+            x = self.bn(s, out_ch)
+        h = self.add(h, x)
+        return self.act(h, "relu")
+
+
+def micronet_v2(width=1):
+    """MicroNet-V2: stem + 5 inverted residual blocks + head. ReLU6."""
+    b = Builder([3, D.IMG, D.IMG])
+    c = [int(w * width) for w in (16, 16, 24, 24, 40, 40)]
+    x = b.conv_bn_act(0, 3, c[0], 3, stride=2)                 # 16x16
+    x = b.inverted_residual(x, c[0], c[1], 1, 4)
+    x = b.inverted_residual(x, c[1], c[2], 2, 4)               # 8x8
+    x = b.inverted_residual(x, c[2], c[3], 1, 4)
+    x = b.inverted_residual(x, c[3], c[4], 2, 4)               # 4x4
+    x = b.inverted_residual(x, c[4], c[5], 1, 4)
+    x = b.conv_bn_act(x, c[5], 128, 1)                         # head pw
+    x = b.gap(x)
+    out = b.linear(x, 128, D.CLS_CLASSES)
+    return b, [out], "classification"
+
+
+def micronet_v1():
+    """MicroNet-V1: plain depthwise-separable chain, no residuals. ReLU6."""
+    b = Builder([3, D.IMG, D.IMG])
+
+    def dw_sep(x, in_ch, out_ch, stride):
+        x = b.conv_bn_act(x, in_ch, in_ch, 3, stride=stride, groups=in_ch)
+        return b.conv_bn_act(x, in_ch, out_ch, 1)
+
+    x = b.conv_bn_act(0, 3, 16, 3, stride=2)                   # 16x16
+    x = dw_sep(x, 16, 32, 1)
+    x = dw_sep(x, 32, 32, 1)
+    x = dw_sep(x, 32, 64, 2)                                   # 8x8
+    x = dw_sep(x, 64, 64, 1)
+    x = dw_sep(x, 64, 128, 2)                                  # 4x4
+    x = b.gap(x)
+    out = b.linear(x, 128, D.CLS_CLASSES)
+    return b, [out], "classification"
+
+
+def microresnet18():
+    """MicroResNet-18 (CIFAR layout): 3 stages of 2 basic blocks. ReLU."""
+    b = Builder([3, D.IMG, D.IMG])
+    x = b.conv_bn_act(0, 3, 16, 3, act="relu")                 # 32x32
+    x = b.basic_block(x, 16, 16, 1)
+    x = b.basic_block(x, 16, 16, 1)
+    x = b.basic_block(x, 16, 32, 2)                            # 16x16
+    x = b.basic_block(x, 32, 32, 1)
+    x = b.basic_block(x, 32, 64, 2)                            # 8x8
+    x = b.basic_block(x, 64, 64, 1)
+    x = b.gap(x)
+    out = b.linear(x, 64, D.CLS_CLASSES)
+    return b, [out], "classification"
+
+
+def _v2_backbone(b):
+    """Shared MicroNet-V2 backbone ending at 8x8 (stride 4) features."""
+    x = b.conv_bn_act(0, 3, 16, 3, stride=2)                   # 16x16
+    x = b.inverted_residual(x, 16, 16, 1, 4)
+    x = b.inverted_residual(x, 16, 24, 2, 4)                   # 8x8
+    x = b.inverted_residual(x, 24, 24, 1, 4)
+    x = b.inverted_residual(x, 24, 40, 1, 4)                   # stays 8x8
+    x = b.inverted_residual(x, 40, 40, 1, 4)
+    return x, 40
+
+
+def microdeeplab():
+    """DeepLab-lite: V2 backbone + dilated-free ASPP-lite head + upsample.
+
+    Output: per-pixel logits (N, SEG_CLASSES, 32, 32).
+    """
+    b = Builder([3, D.IMG, D.IMG])
+    x, ch = _v2_backbone(b)
+    x = b.conv_bn_act(x, ch, 64, 3)                            # context 3x3
+    x = b.conv_bn_act(x, 64, 64, 1)                            # pw mix
+    x = b.conv(x, 64, D.SEG_CLASSES, 1, bias=True)             # classifier
+    out = b.upsample(x, 4)                                     # 8x8 -> 32x32
+    return b, [out], "segmentation"
+
+
+def microssd():
+    """SSD-lite: V2 backbone + stride-8 grid head.
+
+    One output tensor (N, DET_CLASSES+1+4, 4, 4): per-cell class logits
+    (incl. background at index 0) and box regression (cx, cy, w, h) in
+    cell-relative units.
+    """
+    b = Builder([3, D.IMG, D.IMG])
+    x, ch = _v2_backbone(b)
+    x = b.inverted_residual(x, ch, 64, 2, 4)                   # 4x4
+    x = b.conv_bn_act(x, 64, 64, 1)
+    out = b.conv(x, 64, D.DET_CLASSES + 1 + 4, 1, bias=True)
+    return b, [out], "detection"
+
+
+ARCHS = {
+    "micronet_v2": micronet_v2,
+    "micronet_v1": micronet_v1,
+    "microresnet18": microresnet18,
+    "microdeeplab": microdeeplab,
+    "microssd": microssd,
+}
+
+
+def build(name: str):
+    """Return (nodes, outputs, task, param_shapes, input_shape)."""
+    b, outs, task = ARCHS[name]()
+    return b.nodes, outs, task, b.shapes, b.input_shape
+
+
+# ---------------------------------------------------------------------------
+# Structural queries shared with the Rust side (rust/src/dfq/equalize.rs
+# implements the same discovery; python needs it for the ill-conditioning
+# corruption in compile/corrupt.py).
+# ---------------------------------------------------------------------------
+
+def consumers(nodes, nid):
+    return [n for n in nodes if nid in n["inputs"]]
+
+
+def cle_pairs(nodes):
+    """Find CLE-eligible (conv_a, conv_b) node-id pairs.
+
+    A pair is eligible when conv_a's output reaches conv_b through a
+    single-consumer chain of bn/act nodes only (paper §4.1.2: "connected
+    without input or output splits in between").
+    """
+    pairs = []
+    for n in nodes:
+        if n["op"] != "conv":
+            continue
+        cur = n
+        ok = True
+        while True:
+            cons = consumers(nodes, cur["id"])
+            if len(cons) != 1:
+                ok = False
+                break
+            nxt = cons[0]
+            if nxt["op"] in ("bn", "act"):
+                cur = nxt
+                continue
+            if nxt["op"] == "conv":
+                pairs.append((n["id"], nxt["id"]))
+            ok = False
+            break
+        _ = ok
+    return pairs

@@ -1,0 +1,178 @@
+"""Build-time training of the micro model zoo (single-core CPU budget).
+
+Runs once under ``make artifacts``. Hand-rolled Adam (no optax in the
+image); losses per task:
+
+* classification — softmax cross-entropy,
+* segmentation   — per-pixel cross-entropy,
+* detection      — per-cell cross-entropy (background = class 0) +
+                   L1 box regression on positive cells (SSD-lite style).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import layers, specs
+
+GRID = 4          # detection grid (stride 8 over 32px)
+CELL = D.IMG // GRID
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in grads}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in grads}
+    mhat = {k: m[k] / (1 - b1 ** t) for k in m}
+    vhat = {k: v[k] / (1 - b2 ** t) for k in v}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps)
+           for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+
+
+def det_targets(boxes: np.ndarray):
+    """Precompute SSD-lite targets from (N, MAX_OBJ, 5) box rows.
+
+    Returns (cls_grid (N,G,G) i32, box_grid (N,G,G,4) f32, pos (N,G,G) f32).
+    Class 0 is background; boxes are (cx, cy, w, h) in cell units.
+    """
+    n = boxes.shape[0]
+    cls = np.zeros((n, GRID, GRID), np.int32)
+    reg = np.zeros((n, GRID, GRID, 4), np.float32)
+    pos = np.zeros((n, GRID, GRID), np.float32)
+    for j in range(boxes.shape[1]):
+        b = boxes[:, j]
+        valid = b[:, 0] >= 0
+        cx = (b[:, 1] + b[:, 3]) / 2
+        cy = (b[:, 2] + b[:, 4]) / 2
+        gx = np.clip((cx // CELL).astype(np.int32), 0, GRID - 1)
+        gy = np.clip((cy // CELL).astype(np.int32), 0, GRID - 1)
+        idx = np.where(valid)[0]
+        cls[idx, gy[idx], gx[idx]] = b[idx, 0].astype(np.int32) + 1
+        reg[idx, gy[idx], gx[idx], 0] = cx[idx] / CELL - gx[idx]
+        reg[idx, gy[idx], gx[idx], 1] = cy[idx] / CELL - gy[idx]
+        reg[idx, gy[idx], gx[idx], 2] = (b[idx, 3] - b[idx, 1]) / CELL
+        reg[idx, gy[idx], gx[idx], 3] = (b[idx, 4] - b[idx, 2]) / CELL
+        pos[idx, gy[idx], gx[idx]] = 1.0
+    return cls, reg, pos
+
+
+def make_loss(nodes, outputs, task):
+    def loss_fn(params, batch, train=True):
+        x = batch["x"]
+        outs, _, bn_upd = layers.forward(nodes, outputs, params, x, train)
+        y = outs[0]
+        if task == "classification":
+            loss = xent(y, batch["y"])
+        elif task == "segmentation":
+            logits = y.transpose(0, 2, 3, 1).reshape(-1, D.SEG_CLASSES)
+            loss = xent(logits, batch["y"].reshape(-1))
+        elif task == "detection":
+            nc = D.DET_CLASSES + 1
+            y = y.transpose(0, 2, 3, 1)           # (N, G, G, nc+4)
+            cls_logits = y[..., :nc].reshape(-1, nc)
+            labels = batch["cls"].reshape(-1)
+            logp = jax.nn.log_softmax(cls_logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[..., None],
+                                       axis=-1)[..., 0]
+            # background dominates 13/16 cells; upweight object cells
+            wts = 1.0 + 4.0 * batch["pos"].reshape(-1)
+            loss = jnp.sum(nll * wts) / jnp.sum(wts)
+            l1 = jnp.abs(y[..., nc:] - batch["reg"])
+            denom = jnp.maximum(jnp.sum(batch["pos"]), 1.0)
+            loss = loss + 5.0 * jnp.sum(
+                l1 * batch["pos"][..., None]) / denom
+        else:
+            raise ValueError(task)
+        return loss, bn_upd
+    return loss_fn
+
+
+def accuracy(nodes, outputs, task, params, x, y, bs=256):
+    """Quick FP32 monitoring metric on the training side."""
+    hits, total = 0.0, 0
+    for i in range(0, x.shape[0], bs):
+        outs, _, _ = layers.forward(
+            nodes, outputs, params, jnp.asarray(x[i:i + bs]), False)
+        o = np.asarray(outs[0])
+        yy = y[i:i + bs]
+        if task == "classification":
+            hits += (o.argmax(-1) == yy).sum()
+            total += yy.shape[0]
+        elif task == "segmentation":
+            hits += (o.argmax(1) == yy).sum()
+            total += yy.size
+        elif task == "detection":
+            nc = D.DET_CLASSES + 1
+            pred = o[:, :nc].transpose(0, 2, 3, 1).argmax(-1)
+            hits += (pred == yy).sum()
+            total += yy.size
+    return hits / total
+
+
+def train(arch: str, seed: int = 0, steps: int = 600, bs: int = 96,
+          lr: float = 3e-3, log_every: int = 200, n_train: int = 6144):
+    """Train one architecture; returns (params, spec tuple, datasets)."""
+    nodes, outputs, task, shapes, input_shape = specs.build(arch)
+    rng = jax.random.PRNGKey(seed)
+    params = layers.init_params(rng, shapes, nodes)
+
+    if task == "classification":
+        x, y = D.make_classification(n_train, seed=seed + 1)
+        batches = {"x": x, "y": y}
+    elif task == "segmentation":
+        x, y = D.make_segmentation(n_train, seed=seed + 1)
+        batches = {"x": x, "y": y}
+    else:
+        x, b = D.make_detection(n_train, seed=seed + 1)
+        cls, reg, pos = det_targets(b)
+        batches = {"x": x, "cls": cls, "reg": reg, "pos": pos}
+
+    loss_fn = make_loss(nodes, outputs, task)
+
+    @jax.jit
+    def step(params, opt, batch, lr_t):
+        (loss, bn_upd), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        # BN running stats are not differentiated; apply their EMA update.
+        new_params, opt = adam_update(params, grads, opt, lr_t)
+        for k, v in bn_upd.items():
+            new_params[k] = v
+        return new_params, opt, loss
+
+    opt = adam_init(params)
+    n = x.shape[0]
+    order = np.random.default_rng(seed + 2).permutation(n)
+    t0 = time.time()
+    for s in range(steps):
+        lo = (s * bs) % (n - bs + 1)
+        idx = order[lo:lo + bs]
+        batch = {k: jnp.asarray(v[idx]) for k, v in batches.items()}
+        # cosine decay to 5% of the base rate
+        lr_t = lr * (0.05 + 0.95 * 0.5 * (1 + np.cos(np.pi * s / steps)))
+        params, opt, loss = step(params, opt, batch, jnp.float32(lr_t))
+        if (s + 1) % log_every == 0 or s == 0:
+            print(f"  [{arch}] step {s+1}/{steps} "
+                  f"loss={float(loss):.4f} ({time.time()-t0:.0f}s)")
+    key = "y" if task != "detection" else "cls"
+    acc = accuracy(nodes, outputs, task, params,
+                   batches["x"][:1024], batches[key][:1024])
+    print(f"  [{arch}] train metric={acc:.4f}")
+    return params, (nodes, outputs, task, shapes, input_shape)

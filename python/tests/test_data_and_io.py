@@ -1,0 +1,123 @@
+"""Dataset generators + container round-trips + corruption invariance."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import corrupt, data as D, dfqm, layers, specs
+
+
+class TestData:
+    def test_classification_shapes_and_determinism(self):
+        x1, y1 = D.make_classification(64, seed=5)
+        x2, y2 = D.make_classification(64, seed=5)
+        assert x1.shape == (64, 3, D.IMG, D.IMG)
+        assert x1.dtype == np.float32 and y1.dtype == np.int32
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+        assert 0 <= y1.min() and y1.max() < D.CLS_CLASSES
+        assert 0.0 <= x1.min() and x1.max() <= 1.0
+
+    def test_classification_class_balanceish(self):
+        _, y = D.make_classification(2000, seed=1)
+        counts = np.bincount(y, minlength=D.CLS_CLASSES)
+        assert counts.min() > 100  # roughly uniform
+
+    def test_segmentation_masks_consistent(self):
+        x, seg = D.make_segmentation(32, seed=2)
+        assert seg.shape == (32, D.IMG, D.IMG)
+        assert seg.max() < D.SEG_CLASSES
+        # at least one foreground pixel per image
+        assert all((seg[i] > 0).any() for i in range(32))
+
+    def test_detection_boxes_valid(self):
+        x, b = D.make_detection(64, seed=3)
+        assert b.shape == (64, D.DET_MAX_OBJ, 5)
+        valid = b[..., 0] >= 0
+        assert valid.any(axis=1).all(), "every image has >= 1 object"
+        assert (b[..., 3][valid] > b[..., 1][valid]).all()
+        assert (b[..., 4][valid] > b[..., 2][valid]).all()
+
+    def test_shape_masks_disjoint_shapes(self):
+        m1 = D.shape_mask("circle", [16], [16], [8])
+        m2 = D.shape_mask("ring", [16], [16], [8])
+        assert m1.sum() > m2.sum() > 0
+
+
+class TestContainers:
+    def test_dataset_roundtrip(self):
+        x, y = D.make_classification(8, seed=7)
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "t.dfqd")
+            dfqm.write_dataset(p, "t", "classification", {"x": x, "y": y})
+            hdr, arrs = dfqm.read(p)
+            assert hdr["task"] == "classification"
+            np.testing.assert_array_equal(arrs["x"], x)
+            np.testing.assert_array_equal(arrs["y"], y)
+
+    def test_model_roundtrip(self):
+        nodes, outputs, task, shapes, input_shape = specs.build("micronet_v1")
+        params = layers.init_params(jax.random.PRNGKey(0), shapes, nodes)
+        np_params = {k: np.asarray(v, np.float32) for k, v in params.items()}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "m.dfqm")
+            dfqm.write_model(p, "m", task, input_shape, D.CLS_CLASSES,
+                             nodes, outputs, np_params)
+            hdr, arrs = dfqm.read(p)
+            assert hdr["nodes"] == nodes
+            assert hdr["outputs"] == list(outputs)
+            for k, v in np_params.items():
+                np.testing.assert_array_equal(arrs[k], v)
+
+    def test_alignment(self):
+        # blobs are 64-byte aligned regardless of sizes
+        arrs = {"a": np.ones(3, np.float32), "b": np.ones(17, np.int32)}
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "t.dfqd")
+            dfqm.write(p, b"DFQD", {"kind": "dataset", "name": "t",
+                                    "task": "classification"}, arrs)
+            hdr, back = dfqm.read(p)
+            for k in arrs:
+                off = hdr["arrays"][k]["offset"]
+                assert off % 64 == 0
+                np.testing.assert_array_equal(back[k], arrs[k])
+
+
+class TestCorruption:
+    @pytest.mark.parametrize("arch", ["micronet_v2", "microresnet18"])
+    def test_function_preserving(self, arch):
+        nodes, outputs, task, shapes, input_shape = specs.build(arch)
+        params = layers.init_params(jax.random.PRNGKey(1), shapes, nodes)
+        params = {k: np.asarray(v) for k, v in params.items()}
+        x = np.asarray(
+            jax.random.uniform(jax.random.PRNGKey(2), (64, *input_shape)),
+            np.float32)
+        y0, _, _ = layers.forward(nodes, outputs, params,
+                                  jnp.asarray(x[:8]), False)
+        cor = corrupt.corrupt(nodes, outputs, params, x, seed=5)
+        y1, _, _ = layers.forward(nodes, outputs, cor,
+                                  jnp.asarray(x[:8]), False)
+        d = float(jnp.max(jnp.abs(y0[0] - y1[0])))
+        scale = float(jnp.max(jnp.abs(y0[0]))) + 1e-6
+        assert d / scale < 5e-3, f"corruption changed the function: {d}"
+
+    def test_actually_corrupts_ranges(self):
+        nodes, outputs, task, shapes, input_shape = specs.build("micronet_v2")
+        params = layers.init_params(jax.random.PRNGKey(1), shapes, nodes)
+        params = {k: np.asarray(v) for k, v in params.items()}
+        x = np.asarray(
+            jax.random.uniform(jax.random.PRNGKey(2), (64, *input_shape)),
+            np.float32)
+        cor = corrupt.corrupt(nodes, outputs, dict(params), x, seed=5)
+        # at least one conv weight tensor sees large per-channel disparity
+        changed = 0
+        for a_id, b_id in specs.cle_pairs(nodes):
+            b = next(n for n in nodes if n["id"] == b_id)
+            w0, w1 = params[b["w"]], cor[b["w"]]
+            if not np.allclose(w0, w1):
+                changed += 1
+        assert changed >= 5

@@ -1,0 +1,110 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps tile-compatible shapes and epilogue configurations;
+every case must match ref.py within float tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fq_matmul import (fq_matmul, mxu_utilization, pick_tile,
+                                       supported, vmem_bytes, _TM_CHOICES,
+                                       _TN_CHOICES)
+from compile.kernels.ref import fake_quant, fq_matmul_ref
+
+RNG = np.random.default_rng(0)
+
+
+def run_both(m, k, n, cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    b = rng.normal(size=(n,)).astype(np.float32)
+    cfg = np.asarray(cfg, np.float32)
+    got = np.asarray(fq_matmul(jnp.array(x), jnp.array(w), jnp.array(b),
+                               jnp.array(cfg)))
+    want = np.asarray(fq_matmul_ref(x, w, b, cfg))
+    return got, want
+
+
+def plain_cfg():
+    return [-1e30, 1e30, 1.0, 0.0, 0.0, 0, 0, 0]
+
+
+class TestKernelBasic:
+    def test_plain_matmul(self):
+        got, want = run_both(64, 24, 16, plain_cfg())
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_relu6_epilogue(self):
+        got, want = run_both(32, 8, 8, [0.0, 6.0, 1.0, 0.0, 0.0, 0, 0, 0])
+        assert got.min() >= 0.0 and got.max() <= 6.0
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_int8_fakequant_epilogue(self):
+        cfg = [0.0, 6.0, 6.0 / 255, 0.0, 256.0, 0, 0, 0]
+        got, want = run_both(32, 16, 8, cfg)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        # outputs land on the quantisation grid
+        scale = cfg[2]
+        q = got / scale
+        np.testing.assert_allclose(q, np.round(q), atol=1e-3)
+
+    def test_multiple_grid_tiles(self):
+        got, want = run_both(512, 40, 128, plain_cfg())
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_untileable_rejected(self):
+        assert not supported(10, 4)
+        with pytest.raises(AssertionError):
+            run_both(10, 8, 4, plain_cfg())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.sampled_from([16, 32, 64, 128, 256]),
+    k=st.integers(1, 48),
+    ni=st.sampled_from([8, 16, 24, 40, 64, 128]),
+    bits=st.sampled_from([0, 2, 4, 8]),
+    clip6=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_property(mi, k, ni, bits, clip6, seed):
+    n_levels = float(2**bits) if bits else 0.0
+    hi = 6.0 if clip6 else 1e30
+    lo = 0.0 if clip6 else -1e30
+    scale = (hi - lo) / max(n_levels - 1, 1) if clip6 and bits else 0.05
+    cfg = [lo, hi, scale, 3.0 if bits else 0.0, n_levels, 0, 0, 0]
+    got, want = run_both(mi, k, ni, cfg, seed=seed % 1000)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestFakeQuantOracle:
+    def test_identity_when_disabled(self):
+        x = np.linspace(-3, 3, 13).astype(np.float32)
+        np.testing.assert_array_equal(np.asarray(fake_quant(x, 1.0, 0.0, 0.0)), x)
+
+    def test_ties_to_even(self):
+        assert float(fake_quant(jnp.float32(0.5), 1.0, 0.0, 16.0)) == 0.0
+        assert float(fake_quant(jnp.float32(1.5), 1.0, 0.0, 16.0)) == 2.0
+
+    def test_clamps_to_grid(self):
+        y = float(fake_quant(jnp.float32(-100.0), 0.1, 10.0, 256.0))
+        assert y == pytest.approx((0 - 10) * 0.1)
+
+
+class TestTilingModel:
+    def test_pick_tile_divides(self):
+        for d in [16, 64, 80, 96, 1024, 16384]:
+            t = pick_tile(d, _TM_CHOICES)
+            assert t and d % t == 0
+
+    def test_vmem_under_budget(self):
+        # largest zoo tiling must fit a 16 MiB VMEM with ample headroom
+        assert vmem_bytes(16384, 160, 64) < 4 * 2**20
+
+    def test_mxu_utilization_bounds(self):
+        u = mxu_utilization(1024, 64, 64)
+        assert 0.0 < u <= 1.0

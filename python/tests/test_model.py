@@ -1,0 +1,151 @@
+"""L2 model tests: spec building, folding parity, quantsim semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data as D
+from compile import layers, specs
+from compile.model import (act_sites, fold_params, fold_spec,
+                           quantsim_forward, weight_args)
+
+ARCHS = list(specs.ARCHS)
+
+
+def build_random(arch, seed=0):
+    nodes, outputs, task, shapes, input_shape = specs.build(arch)
+    params = layers.init_params(jax.random.PRNGKey(seed), shapes, nodes)
+    # non-trivial BN statistics
+    for n in nodes:
+        if n["op"] == "bn":
+            k = jax.random.fold_in(jax.random.PRNGKey(seed + 1), n["id"])
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            params[n["mean"]] = 0.3 * jax.random.normal(k1, (n["ch"],))
+            params[n["var"]] = jnp.exp(0.3 * jax.random.normal(k2, (n["ch"],)))
+            params[n["gamma"]] = 1.0 + 0.2 * jax.random.normal(k3, (n["ch"],))
+            params[n["beta"]] = 0.2 * jax.random.normal(k4, (n["ch"],))
+    return nodes, outputs, task, params, input_shape
+
+
+def fp32_qcfg(folded):
+    sites = act_sites(folded)
+    q = np.zeros((len(sites), 4), np.float32)
+    for i, s in enumerate(sites):
+        if s["node"] == "input" or s["op"] == "add":
+            q[i, 3] = 1e30
+        else:
+            q[i, 3] = 6.0 if s["kind"] == "relu6" else 1e30
+    return q
+
+
+class TestSpecs:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_builds_and_is_wellformed(self, arch):
+        nodes, outputs, task, shapes, input_shape = specs.build(arch)
+        ids = [n["id"] for n in nodes]
+        assert ids == sorted(ids) and len(set(ids)) == len(ids)
+        for n in nodes:
+            for i in n["inputs"]:
+                assert i < n["id"], "inputs must precede the node"
+        assert all(o in ids for o in outputs)
+
+    def test_cle_pairs_exist(self):
+        nodes, *_ = specs.build("micronet_v2")
+        pairs = specs.cle_pairs(nodes)
+        # 5 blocks x 2 pairs inside each: (expand,dw), (dw,project)
+        assert len(pairs) == 10
+
+    def test_v1_chain_has_many_pairs(self):
+        nodes, *_ = specs.build("micronet_v1")
+        assert len(specs.cle_pairs(nodes)) == 10  # 11 convs chained
+
+    def test_channels_multiple_of_8(self):
+        # pallas tiling requirement for every pointwise conv
+        for arch in ARCHS:
+            nodes, *_ = specs.build(arch)
+            for n in nodes:
+                if n["op"] == "conv" and n["k"] == 1 and n["groups"] == 1:
+                    if n["out_ch"] % 8 != 0:
+                        # only the tiny logit heads are exempt (jnp path)
+                        assert n["out_ch"] <= 8
+
+
+class TestFolding:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_quantsim_matches_train_forward(self, arch):
+        nodes, outputs, task, params, input_shape = build_random(arch)
+        x = jax.random.uniform(jax.random.PRNGKey(7), (2, *input_shape))
+        ref, _, _ = layers.forward(nodes, outputs, params, x, False)
+        folded, remap = fold_spec(nodes)
+        weights, _ = fold_params(nodes, params)
+        got = quantsim_forward(folded, outputs, remap,
+                               [jnp.asarray(w) for w in weights], x,
+                               jnp.asarray(fp32_qcfg(folded)))
+        for a, b in zip(ref, got):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=2e-4)
+
+    def test_fold_removes_bn_and_adds_bias(self):
+        nodes, *_ = specs.build("micronet_v2")
+        folded, _ = fold_spec(nodes)
+        assert not any(n["op"] == "bn" for n in folded)
+        for n in folded:
+            if n["op"] == "conv":
+                assert n["b"] is not None
+
+    def test_weight_args_alternate_w_b(self):
+        nodes, *_ = specs.build("micronet_v1")
+        folded, _ = fold_spec(nodes)
+        order = weight_args(folded)
+        kinds = [k for _, k in order]
+        assert kinds[::2] == ["weight"] * (len(order) // 2)
+        assert kinds[1::2] == ["bias"] * (len(order) // 2)
+
+    def test_act_sites_start_with_input(self):
+        nodes, *_ = specs.build("micronet_v2")
+        folded, _ = fold_spec(nodes)
+        sites = act_sites(folded)
+        assert sites[0]["node"] == "input"
+        n_act = sum(1 for n in folded if n["op"] in ("act", "add"))
+        assert len(sites) == 1 + n_act
+
+
+class TestQuantsimSemantics:
+    def test_act_quant_reduces_precision(self):
+        nodes, outputs, task, params, input_shape = build_random(
+            "micronet_v1", seed=3)
+        x = jax.random.uniform(jax.random.PRNGKey(9), (2, *input_shape))
+        folded, remap = fold_spec(nodes)
+        weights = [jnp.asarray(w) for w in fold_params(nodes, params)[0]]
+        q = fp32_qcfg(folded)
+        y_fp = quantsim_forward(folded, outputs, remap, weights, x,
+                                jnp.asarray(q))
+        # coarse 2-bit activations everywhere
+        q2 = q.copy()
+        q2[:, 0] = 0.5   # scale
+        q2[:, 1] = 4.0   # zp
+        q2[:, 2] = 8.0   # n_levels
+        y_q = quantsim_forward(folded, outputs, remap, weights, x,
+                               jnp.asarray(q2))
+        d = float(jnp.max(jnp.abs(y_fp[0] - y_q[0])))
+        assert d > 1e-3, "activation quantisation had no effect"
+
+    def test_detection_output_shape(self):
+        nodes, outputs, task, params, input_shape = build_random("microssd")
+        folded, remap = fold_spec(nodes)
+        weights = [jnp.asarray(w) for w in fold_params(nodes, params)[0]]
+        x = jnp.zeros((2, *input_shape))
+        (y,) = quantsim_forward(folded, outputs, remap, weights, x,
+                                jnp.asarray(fp32_qcfg(folded)))
+        assert y.shape == (2, D.DET_CLASSES + 1 + 4, 4, 4)
+
+    def test_segmentation_output_shape(self):
+        nodes, outputs, task, params, input_shape = build_random(
+            "microdeeplab")
+        folded, remap = fold_spec(nodes)
+        weights = [jnp.asarray(w) for w in fold_params(nodes, params)[0]]
+        x = jnp.zeros((2, *input_shape))
+        (y,) = quantsim_forward(folded, outputs, remap, weights, x,
+                                jnp.asarray(fp32_qcfg(folded)))
+        assert y.shape == (2, D.SEG_CLASSES, D.IMG, D.IMG)

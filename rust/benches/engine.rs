@@ -1,0 +1,114 @@
+//! Bench: execution engines — PJRT executable vs pure-Rust reference,
+//! plus the standalone Pallas fq-matmul kernel artifact and the
+//! reference GEMM/conv primitives. This is the L3/L1 §Perf instrument.
+
+use dfq::dfq::{bn_fold, quantize_data_free, BiasCorrMode, DfqConfig};
+use dfq::graph::io::Dataset;
+use dfq::graph::Model;
+use dfq::nn::{self, QuantCfg};
+use dfq::quant::QScheme;
+use dfq::runtime::{ExecMeta, Manifest, Runtime};
+use dfq::tensor::Tensor;
+use dfq::util::bench::{section, Bench};
+use dfq::util::rng::Rng;
+
+fn main() {
+    let man = match Manifest::load(dfq::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping engine bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT client");
+
+    section("reference primitives");
+    let mut rng = Rng::new(1);
+    let a: Vec<f32> = rng.normal_vec(1024 * 64, 1.0);
+    let b: Vec<f32> = rng.normal_vec(64 * 64, 1.0);
+    Bench::new("gemm 1024x64x64 (reference)")
+        .run(|| {
+            std::hint::black_box(nn::conv::matmul(&a, &b, 1024, 64, 64));
+        })
+        .with_units(2.0 * 1024.0 * 64.0 * 64.0, "flop")
+        .print();
+    let x = Tensor::new(&[8, 24, 16, 16], rng.normal_vec(8 * 24 * 256, 1.0));
+    let w = Tensor::new(&[96, 24, 1, 1], rng.normal_vec(96 * 24, 0.3));
+    Bench::new("pointwise conv 8x24x16x16 -> 96 (reference)")
+        .run(|| {
+            std::hint::black_box(nn::conv::conv2d(&x, &w, None, 1, 0, 1));
+        })
+        .print();
+    let wd = Tensor::new(&[24, 1, 3, 3], rng.normal_vec(24 * 9, 0.3));
+    Bench::new("depthwise conv 8x24x16x16 (reference)")
+        .run(|| {
+            std::hint::black_box(nn::conv::conv2d(&x, &wd, None, 1, 1, 24));
+        })
+        .print();
+
+    section("pallas fq-matmul kernel (AOT, PJRT)");
+    if let Some((hlo, m, k, n)) = man.kernel_bench.clone() {
+        let exec = rt
+            .load(
+                &man.path(&hlo),
+                ExecMeta {
+                    batch: m,
+                    input_shape: [0, 0, 0],
+                    num_weights: 0,
+                    num_sites: 0,
+                    num_outputs: 1,
+                },
+            )
+            .expect("kernel hlo");
+        let xk = Tensor::new(&[m, k], rng.normal_vec(m * k, 1.0));
+        let wk = Tensor::new(&[k, n], rng.normal_vec(k * n, 1.0));
+        let bk = Tensor::new(&[n], rng.normal_vec(n, 1.0));
+        let cfg = Tensor::new(
+            &[8],
+            vec![0.0, 6.0, 0.05, 128.0, 256.0, 0.0, 0.0, 0.0],
+        );
+        Bench::new(format!("fq_matmul {m}x{k}x{n} fused epilogue"))
+            .run(|| {
+                std::hint::black_box(
+                    exec.run_raw(&[&xk, &wk, &bk, &cfg]).expect("kernel run"),
+                );
+            })
+            .with_units(2.0 * (m * k * n) as f64, "flop")
+            .print();
+    }
+
+    section("micronet_v2 end-to-end forward");
+    let entry = man.arch("micronet_v2").unwrap();
+    let model = Model::load(man.path(&entry.model)).unwrap();
+    let prep = quantize_data_free(&model, &DfqConfig::default()).unwrap();
+    let q = prep
+        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::Analytic, None)
+        .unwrap();
+    let ds =
+        Dataset::load(man.dataset("classification", "test").unwrap()).unwrap();
+
+    for batch in [1usize, 64] {
+        let exec = rt
+            .load_model_exec(&man, "micronet_v2", batch, &q.model)
+            .unwrap();
+        let weights = exec.bind_weights(&q.model).unwrap();
+        let xb = ds.batch(0, batch);
+        Bench::new(format!("pjrt int8 quant-sim forward b{batch}"))
+            .run(|| {
+                std::hint::black_box(
+                    exec.run(&xb, &weights, &q.act_cfg).expect("pjrt run"),
+                );
+            })
+            .with_units(batch as f64, "img")
+            .print();
+    }
+    let folded = bn_fold::fold(&model).unwrap();
+    let xb = ds.batch(0, 32);
+    let cfg = QuantCfg::fp32(&folded);
+    Bench::new("reference engine fp32 forward b32")
+        .run(|| {
+            std::hint::black_box(nn::forward(&folded, &xb, &cfg).unwrap());
+        })
+        .with_units(32.0, "img")
+        .print();
+}

@@ -1,0 +1,106 @@
+//! Bench: cost of the DFQ pipeline itself — the paper's headline
+//! usability claim is "a simple API call"; this measures what that call
+//! costs per architecture, per pass (fold, CLE, absorb, quantise, BC).
+
+use dfq::dfq::{
+    absorb, bias_correct, bn_fold, equalize, quantize_data_free, relu6,
+    BiasCorrMode, DfqConfig,
+};
+use dfq::graph::Model;
+use dfq::quant::QScheme;
+use dfq::runtime::Manifest;
+use dfq::util::bench::{section, Bench};
+
+fn main() {
+    let man = match Manifest::load(dfq::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping pipeline bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    for arch in ["micronet_v2", "micronet_v1", "microresnet18"] {
+        section(&format!("DFQ pass costs — {arch}"));
+        let entry = man.arch(arch).unwrap();
+        let model = Model::load(man.path(&entry.model)).unwrap();
+
+        Bench::new("bn_fold")
+            .run(|| {
+                std::hint::black_box(bn_fold::fold(&model).unwrap());
+            })
+            .print();
+
+        let folded = bn_fold::fold(&model).unwrap();
+        Bench::new("replace_relu6 + CLE to convergence")
+            .run(|| {
+                let mut m = folded.clone();
+                relu6::replace_relu6(&mut m);
+                std::hint::black_box(
+                    equalize::equalize(&mut m, 40, 1e-4).unwrap(),
+                );
+            })
+            .print();
+
+        let mut prepared = folded.clone();
+        relu6::replace_relu6(&mut prepared);
+        equalize::equalize(&mut prepared, 40, 1e-4).unwrap();
+        Bench::new("bias absorption")
+            .run(|| {
+                let mut m = prepared.clone();
+                std::hint::black_box(
+                    absorb::absorb_high_biases(&mut m, 3.0).unwrap(),
+                );
+            })
+            .print();
+
+        Bench::new("weight quantisation (int8 asym)")
+            .run(|| {
+                let prep =
+                    quantize_data_free(&model, &DfqConfig::default()).unwrap();
+                std::hint::black_box(
+                    prep.quantize(
+                        &QScheme::int8_asymmetric(),
+                        8,
+                        BiasCorrMode::None,
+                        None,
+                    )
+                    .unwrap(),
+                );
+            })
+            .print();
+
+        Bench::new("analytic bias correction")
+            .run(|| {
+                let prep =
+                    quantize_data_free(&model, &DfqConfig::default()).unwrap();
+                let mut q = prep
+                    .quantize(
+                        &QScheme::int8_asymmetric(),
+                        8,
+                        BiasCorrMode::None,
+                        None,
+                    )
+                    .unwrap();
+                std::hint::black_box(
+                    bias_correct::analytic(&mut q.model, &prep.model).unwrap(),
+                );
+            })
+            .print();
+
+        Bench::new("full DFQ API call (prepare + quantise + BC)")
+            .run(|| {
+                let prep =
+                    quantize_data_free(&model, &DfqConfig::default()).unwrap();
+                std::hint::black_box(
+                    prep.quantize(
+                        &QScheme::int8_asymmetric(),
+                        8,
+                        BiasCorrMode::Analytic,
+                        None,
+                    )
+                    .unwrap(),
+                );
+            })
+            .print();
+    }
+}

@@ -1,0 +1,85 @@
+//! Bench: serving coordinator — throughput/latency under Poisson load,
+//! batch-size ablation, and batching-window ablation. The L3 §Perf
+//! instrument (the paper's deployment motivation: INT8 serving).
+
+use std::time::Duration;
+
+use dfq::dfq::bn_fold;
+use dfq::graph::Model;
+use dfq::nn::QuantCfg;
+use dfq::runtime::Manifest;
+use dfq::serve::{EngineExecutor, ServeConfig, Server};
+use dfq::tensor::Tensor;
+use dfq::util::bench::section;
+
+fn main() {
+    let man = match Manifest::load(dfq::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping serving bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let fast = std::env::var("DFQ_BENCH_FAST").ok().as_deref() == Some("1");
+    let requests = if fast { 32 } else { 512 };
+
+    section("PJRT INT8 serving — offered load sweep");
+    for rate in [50.0, 200.0, 1000.0] {
+        match dfq::serve::demo::run_load_quiet(
+            "micronet_v2",
+            requests,
+            rate,
+            64,
+        ) {
+            Ok(s) => println!("rate {rate:>6.0} req/s -> {}", s.report()),
+            Err(e) => eprintln!("rate {rate}: {e:#}"),
+        }
+    }
+
+    section("PJRT INT8 serving — max batch ablation");
+    for batch in [1usize, 64] {
+        match dfq::serve::demo::run_load_quiet(
+            "micronet_v2",
+            requests,
+            500.0,
+            batch,
+        ) {
+            Ok(s) => println!("batch {batch:>3} -> {}", s.report()),
+            Err(e) => eprintln!("batch {batch}: {e:#}"),
+        }
+    }
+
+    section("engine-backed server — batching window ablation");
+    let entry = man.arch("micronet_v2").unwrap();
+    let model = Model::load(man.path(&entry.model)).unwrap();
+    let folded = bn_fold::fold(&model).unwrap();
+    for delay_ms in [0u64, 2, 10] {
+        let m2 = folded.clone();
+        let server = Server::start(
+            ServeConfig {
+                max_batch: 32,
+                max_delay: Duration::from_millis(delay_ms),
+                queue_depth: 2048,
+            },
+            move || {
+                let cfg = QuantCfg::fp32(&m2);
+                Ok(Box::new(EngineExecutor {
+                    model: m2,
+                    cfg,
+                    max_batch: 32,
+                }))
+            },
+        );
+        let client = server.client();
+        let x = Tensor::full(&[1, 3, 32, 32], 0.5);
+        let mut pending = Vec::new();
+        for _ in 0..requests.min(128) {
+            pending.push(client.submit(x.clone()).unwrap());
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = server.shutdown();
+        println!("window {delay_ms:>2} ms -> {}", snap.report());
+    }
+}

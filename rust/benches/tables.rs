@@ -1,0 +1,31 @@
+//! Bench: regenerate every paper table/figure end-to-end and time it.
+//!
+//! One bench section per table (DESIGN.md §4). Accuracy rows are printed
+//! by the drivers themselves; the timings cover the full pipeline
+//! (load → DFQ passes → quantise → PJRT evaluation).
+//!
+//! `DFQ_EVAL_LIMIT` defaults to 256 here so `cargo bench` stays snappy;
+//! unset it (or raise it) for full-test-set numbers.
+
+use dfq::experiments;
+use dfq::util::bench::{section, Bench};
+
+fn main() {
+    if std::env::var_os("DFQ_EVAL_LIMIT").is_none() {
+        std::env::set_var("DFQ_EVAL_LIMIT", "256");
+    }
+    // accuracy tables are deterministic; one timed iteration each
+    std::env::set_var("DFQ_BENCH_FAST", "1");
+
+    let ids = [
+        "1", "2", "3", "4", "5", "6", "7", "8", "fig1", "fig2", "fig3",
+    ];
+    for id in ids {
+        section(&format!("experiment {id}"));
+        let r = Bench::new(format!("regenerate {id}"))
+            .run(|| {
+                experiments::run(id).expect("experiment failed");
+            });
+        r.print();
+    }
+}

@@ -1,0 +1,237 @@
+//! Quantization bias correction (paper §4.2, appendices B–D).
+//!
+//! Weight quantisation introduces a *biased* error on layer outputs:
+//! E[ỹ] = E[y] + ε·E[x] with ε = W̃ − W. Subtracting ε·E[x] from the
+//! layer bias restores the FP32 output means.
+//!
+//! * **Analytic** (level 1, data-free): E[x] comes from the clipped-normal
+//!   pushforward of the folded BatchNorm statistics (§4.2.1, App. C) via
+//!   [`crate::graph::stats::propagate`].
+//! * **Empirical** (level 2, App. D): E[x] is measured on calibration
+//!   data, correcting layers in topological order on the
+//!   weights-quantised / activations-FP32 network.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::graph::{Model, Op};
+use crate::nn::{self, QuantCfg};
+use crate::tensor::Tensor;
+
+/// Correct `quantized` (weights already fake-quantised) against the
+/// FP32 reference `orig` using data-free statistics. Both models must be
+/// the *same prepared graph* (post fold/CLE/absorption).
+pub fn analytic(quantized: &mut Model, orig: &Model) -> Result<usize> {
+    let stats = crate::graph::stats::propagate(orig)?;
+    let mut corrected = 0usize;
+    let layers: Vec<usize> =
+        quantized.layers().iter().map(|n| n.id).collect();
+    for id in layers {
+        let input = quantized.node(id).inputs[0];
+        let ex = &stats[&input].mean;
+        corrected += correct_layer(quantized, orig, id, ex)?;
+    }
+    Ok(corrected)
+}
+
+/// Subtract ε·E[x] from layer `id`'s bias. Returns 1 if a correction was
+/// applied. `ex` is per input channel (paper App. B: the expected error
+/// is spatially constant, so it folds into the bias).
+fn correct_layer(
+    quantized: &mut Model,
+    orig: &Model,
+    id: usize,
+    ex: &[f32],
+) -> Result<usize> {
+    let n = quantized.node(id);
+    match &n.op {
+        Op::Conv { w, b, out_ch, .. } => {
+            let dw = n.op.is_depthwise();
+            let (w_name, b_name, out_ch) =
+                (w.clone(), b.clone().expect("folded"), *out_ch);
+            let wq = quantized.tensor(&w_name)?;
+            let wf = orig.tensor(&w_name)?;
+            let spatial: usize = wq.shape()[2..].iter().product();
+            let i_count = wq.shape()[1];
+            let mut delta = vec![0f64; out_ch];
+            for o in 0..out_ch {
+                let q = wq.out_channel(o);
+                let f = wf.out_channel(o);
+                if dw {
+                    let eps_sum: f32 =
+                        q.iter().zip(f).map(|(a, b)| a - b).sum();
+                    delta[o] = (eps_sum * ex[o]) as f64;
+                } else {
+                    for i in 0..i_count {
+                        let mut eps_sum = 0f32;
+                        for s in 0..spatial {
+                            let k = i * spatial + s;
+                            eps_sum += q[k] - f[k];
+                        }
+                        delta[o] += (eps_sum * ex[i]) as f64;
+                    }
+                }
+            }
+            let b = quantized.tensor_mut(&b_name)?;
+            for o in 0..out_ch {
+                b.data_mut()[o] -= delta[o] as f32;
+            }
+            Ok(1)
+        }
+        Op::Linear { w, b, in_dim, out_dim } => {
+            let (w_name, b_name, in_dim, out_dim) =
+                (w.clone(), b.clone(), *in_dim, *out_dim);
+            let wq = quantized.tensor(&w_name)?;
+            let wf = orig.tensor(&w_name)?;
+            let mut delta = vec![0f64; out_dim];
+            for o in 0..out_dim {
+                for i in 0..in_dim {
+                    let k = o * in_dim + i;
+                    delta[o] += ((wq.data()[k] - wf.data()[k]) * ex[i]) as f64;
+                }
+            }
+            let b = quantized.tensor_mut(&b_name)?;
+            for o in 0..out_dim {
+                b.data_mut()[o] -= delta[o] as f32;
+            }
+            Ok(1)
+        }
+        _ => Ok(0),
+    }
+}
+
+/// Empirical bias correction (paper appendix D) on calibration images.
+///
+/// Layers are corrected in node order (all producers of a layer are
+/// corrected before it); each step measures per-channel pre-activation
+/// means of the FP32 network vs the weights-quantised network and folds
+/// the difference into the bias.
+pub fn empirical(
+    quantized: &mut Model,
+    orig: &Model,
+    calib: &Tensor,
+) -> Result<usize> {
+    let cfg_f = QuantCfg::fp32(orig);
+    let fp_means = nn::preact_channel_means(orig, calib, &cfg_f)?;
+    let layers: Vec<usize> =
+        quantized.layers().iter().map(|n| n.id).collect();
+    let mut corrected = 0usize;
+    for id in layers {
+        let cfg_q = QuantCfg::fp32(quantized);
+        let q_means = layer_preact_means(quantized, calib, &cfg_q, id)?;
+        let b_name = match &quantized.node(id).op {
+            Op::Conv { b, .. } => b.clone().expect("folded"),
+            Op::Linear { b, .. } => b.clone(),
+            _ => continue,
+        };
+        let fp = &fp_means[&id];
+        let b = quantized.tensor_mut(&b_name)?;
+        for (o, (&qm, &fm)) in q_means.iter().zip(fp).enumerate() {
+            b.data_mut()[o] -= qm - fm;
+        }
+        corrected += 1;
+    }
+    Ok(corrected)
+}
+
+fn layer_preact_means(
+    model: &Model,
+    x: &Tensor,
+    cfg: &QuantCfg,
+    id: usize,
+) -> Result<Vec<f32>> {
+    // a full instrumented forward; fine for calibration-sized batches
+    let means: HashMap<usize, Vec<f32>> =
+        nn::preact_channel_means(model, x, cfg)?;
+    Ok(means[&id].clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfq::bn_fold;
+    use crate::dfq::testutil::{random_input, two_layer_model};
+    use crate::quant::{quantize_weights, QScheme};
+
+    fn quantize_model(m: &Model, bits: u32) -> Model {
+        let mut q = m.clone();
+        let names: Vec<String> = q
+            .layers()
+            .iter()
+            .map(|n| match &n.op {
+                Op::Conv { w, .. } | Op::Linear { w, .. } => w.clone(),
+                _ => unreachable!(),
+            })
+            .collect();
+        for w in names {
+            let t = q.tensors.get_mut(&w).unwrap();
+            quantize_weights(
+                t,
+                &QScheme { bits, symmetric: false, per_channel: false },
+            );
+        }
+        q
+    }
+
+    /// The core claim (eq. 16/17): correction restores output means.
+    #[test]
+    fn empirical_restores_output_means() {
+        let m = bn_fold::fold(&two_layer_model(31, true)).unwrap();
+        let x = random_input(&m, 16, 5);
+        let cfg = QuantCfg::fp32(&m);
+        let fp = nn::preact_channel_means(&m, &x, &cfg).unwrap();
+
+        let mut q = quantize_model(&m, 4); // coarse grid -> visible bias
+        let out_id = q.layers().last().unwrap().id;
+        let before = nn::preact_channel_means(&q, &x, &cfg).unwrap();
+        let bias_before: f32 = before[&out_id]
+            .iter()
+            .zip(&fp[&out_id])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+
+        empirical(&mut q, &m, &x).unwrap();
+        let after = nn::preact_channel_means(&q, &x, &cfg).unwrap();
+        let bias_after: f32 = after[&out_id]
+            .iter()
+            .zip(&fp[&out_id])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(
+            bias_after < 0.05 * bias_before.max(1e-3),
+            "bias {bias_before} -> {bias_after}"
+        );
+    }
+
+    /// Analytic correction moves output means toward FP32 on data whose
+    /// distribution matches the Gaussian assumption.
+    #[test]
+    fn analytic_reduces_output_bias() {
+        let m = bn_fold::fold(&two_layer_model(32, true)).unwrap();
+        let x = random_input(&m, 32, 6);
+        let cfg = QuantCfg::fp32(&m);
+        let fp = nn::preact_channel_means(&m, &x, &cfg).unwrap();
+
+        let mut q = quantize_model(&m, 4);
+        let out_id = q.layers().last().unwrap().id;
+        let before = nn::preact_channel_means(&q, &x, &cfg).unwrap();
+        let bias_before: f32 = before[&out_id]
+            .iter()
+            .zip(&fp[&out_id])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+
+        analytic(&mut q, &m).unwrap();
+        let after = nn::preact_channel_means(&q, &x, &cfg).unwrap();
+        let bias_after: f32 = after[&out_id]
+            .iter()
+            .zip(&fp[&out_id])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(
+            bias_after < bias_before,
+            "analytic BC did not help: {bias_before} -> {bias_after}"
+        );
+    }
+}

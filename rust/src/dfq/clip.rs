@@ -1,0 +1,83 @@
+//! Weight-clipping baseline (paper §5.1.2).
+//!
+//! "Weight clipping solves the problem of large differences in ranges
+//! between channels by clipping large ranges to smaller ranges, but it
+//! introduces a strongly biased error" — which bias correction then
+//! repairs. Applied after BN folding on every conv/linear weight.
+
+use anyhow::Result;
+
+use crate::graph::{Model, Op};
+
+/// Clip every conv/linear weight to `[-c, c]` in place.
+/// Returns the number of clipped elements.
+pub fn clip_weights(model: &mut Model, c: f32) -> Result<usize> {
+    assert!(model.folded, "clip runs on the folded graph");
+    let names: Vec<String> = model
+        .layers()
+        .iter()
+        .map(|n| match &n.op {
+            Op::Conv { w, .. } | Op::Linear { w, .. } => w.clone(),
+            _ => unreachable!(),
+        })
+        .collect();
+    let mut clipped = 0usize;
+    for name in names {
+        let t = model.tensor_mut(&name)?;
+        for x in t.data_mut() {
+            if x.abs() > c {
+                *x = x.clamp(-c, c);
+                clipped += 1;
+            }
+        }
+    }
+    Ok(clipped)
+}
+
+/// A data-driven default clip level: the q-quantile of |w| across all
+/// layer weights (the paper's fixed 15 corresponds to roughly the
+/// 99.9th percentile of MobileNetV2's folded weights).
+pub fn quantile_clip_level(model: &Model, q: f64) -> f32 {
+    let mut all: Vec<f32> = Vec::new();
+    for n in model.layers() {
+        let w = match &n.op {
+            Op::Conv { w, .. } | Op::Linear { w, .. } => w,
+            _ => unreachable!(),
+        };
+        all.extend(model.tensor(w).unwrap().data().iter().map(|x| x.abs()));
+    }
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((all.len() - 1) as f64 * q).round() as usize;
+    all[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfq::bn_fold;
+    use crate::dfq::testutil::two_layer_model;
+
+    #[test]
+    fn clips_in_place() {
+        let mut m = bn_fold::fold(&two_layer_model(41, true)).unwrap();
+        let c = 0.05;
+        let n = clip_weights(&mut m, c).unwrap();
+        assert!(n > 0);
+        for node in m.layers() {
+            let w = match &node.op {
+                Op::Conv { w, .. } | Op::Linear { w, .. } => w,
+                _ => unreachable!(),
+            };
+            assert!(m.tensor(w).unwrap().abs_max() <= c + 1e-7);
+        }
+    }
+
+    #[test]
+    fn quantile_level_monotone() {
+        let m = bn_fold::fold(&two_layer_model(42, true)).unwrap();
+        let c50 = quantile_clip_level(&m, 0.5);
+        let c99 = quantile_clip_level(&m, 0.99);
+        assert!(c99 >= c50);
+        assert!(c50 > 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Clipped-normal distribution (paper Appendix C).
+//!
+//! Given X ~ N(μ, σ²) and a clipped-linear activation f clipping to
+//! [a, b], closed-form mean and variance of f(X). Used by the analytic
+//! bias correction (§4.2.1) and the data-free activation-range estimator.
+//!
+//! `erf` is first-party (Abramowitz & Stegun 7.1.26, |ε| ≤ 1.5e-7 —
+//! far below the f32 noise floor of the quantities involved).
+
+/// Error function, A&S 7.1.26 rational approximation.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal PDF.
+pub fn phi(x: f64) -> f64 {
+    (-(x * x) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF.
+pub fn cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Mean of clip(X, a, b) for X ~ N(mu, sigma²)  (paper eq. 38).
+///
+/// `b` may be `f64::INFINITY` (plain ReLU uses a = 0, b = ∞).
+pub fn clipped_mean(mu: f64, sigma: f64, a: f64, b: f64) -> f64 {
+    if sigma <= 0.0 {
+        return mu.clamp(a, b);
+    }
+    let alpha = (a - mu) / sigma;
+    let (beta, phi_beta, cdf_beta) = if b.is_infinite() {
+        (f64::INFINITY, 0.0, 1.0)
+    } else {
+        let bb = (b - mu) / sigma;
+        (bb, phi(bb), cdf(bb))
+    };
+    let _ = beta;
+    sigma * (phi(alpha) - phi_beta) + mu * (cdf_beta - cdf(alpha))
+        + a * cdf(alpha)
+        + if b.is_infinite() { 0.0 } else { b * (1.0 - cdf_beta) }
+}
+
+/// Variance of clip(X, a, b) for X ~ N(mu, sigma²)  (paper eq. 44).
+pub fn clipped_var(mu: f64, sigma: f64, a: f64, b: f64) -> f64 {
+    if sigma <= 0.0 {
+        return 0.0;
+    }
+    let m = clipped_mean(mu, sigma, a, b);
+    let alpha = (a - mu) / sigma;
+    let (phi_beta, cdf_beta, b_phi_beta, b_term) = if b.is_infinite() {
+        (0.0, 1.0, 0.0, 0.0)
+    } else {
+        let bb = (b - mu) / sigma;
+        (phi(bb), cdf(bb), b * phi(bb), (b - m) * (b - m) * (1.0 - cdf(bb)))
+    };
+    let z = cdf_beta - cdf(alpha);
+    let v = z * (mu * mu + sigma * sigma + m * m - 2.0 * m * mu)
+        + sigma * (a * phi(alpha) - b_phi_beta)
+        + sigma * (mu - 2.0 * m) * (phi(alpha) - phi_beta)
+        + (a - m) * (a - m) * cdf(alpha)
+        + b_term;
+    v.max(0.0)
+}
+
+/// Mean of ReLU(X) (paper eq. 19): a = 0, b = ∞.
+pub fn relu_mean(mu: f64, sigma: f64) -> f64 {
+    clipped_mean(mu, sigma, 0.0, f64::INFINITY)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn erf_reference_values() {
+        // Reference values from tables.
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(2.0) - 0.9953222650).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_mean_standard_normal() {
+        // E[ReLU(N(0,1))] = 1/sqrt(2*pi)
+        let want = 1.0 / (2.0 * std::f64::consts::PI).sqrt();
+        assert!((relu_mean(0.0, 1.0) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_sigma() {
+        assert_eq!(clipped_mean(3.0, 0.0, 0.0, 6.0), 3.0);
+        assert_eq!(clipped_mean(-1.0, 0.0, 0.0, 6.0), 0.0);
+        assert_eq!(clipped_mean(9.0, 0.0, 0.0, 6.0), 6.0);
+        assert_eq!(clipped_var(5.0, 0.0, 0.0, 6.0), 0.0);
+    }
+
+    /// Property: closed forms match Monte-Carlo for random (mu, sigma, b).
+    #[test]
+    fn matches_monte_carlo() {
+        let mut rng = Rng::new(1234);
+        for case in 0..20 {
+            let mu = rng.uniform(-3.0, 3.0) as f64;
+            let sigma = rng.uniform(0.1, 2.5) as f64;
+            let b = if case % 3 == 0 {
+                f64::INFINITY
+            } else {
+                rng.uniform(0.5, 6.0) as f64
+            };
+            let n = 400_000;
+            let mut acc = 0.0;
+            let mut acc2 = 0.0;
+            for _ in 0..n {
+                let x = mu + sigma * rng.normal() as f64;
+                let c = x.clamp(0.0, b);
+                acc += c;
+                acc2 += c * c;
+            }
+            let mc_mean = acc / n as f64;
+            let mc_var = acc2 / n as f64 - mc_mean * mc_mean;
+            let cm = clipped_mean(mu, sigma, 0.0, b);
+            let cv = clipped_var(mu, sigma, 0.0, b);
+            assert!(
+                (cm - mc_mean).abs() < 0.02,
+                "mean: case {case} mu={mu} sigma={sigma} b={b}: {cm} vs {mc_mean}"
+            );
+            assert!(
+                (cv - mc_var).abs() < 0.05 * (1.0 + mc_var),
+                "var: case {case} mu={mu} sigma={sigma} b={b}: {cv} vs {mc_var}"
+            );
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Cross-layer range equalization (paper §4.1, appendix A).
+//!
+//! For every pair of layers connected without input/output splits, the
+//! positive-scaling equivariance of (clipped-)ReLU lets us rescale
+//! channel `i` by `s_i` in layer 1 and `1/s_i` in layer 2 without
+//! changing the FP32 function. The optimum of eq. 9 is attained at
+//! `s_i = sqrt(r1_i / r2_i)` (eq. 11), which matches per-channel ranges
+//! across the pair; iterating over all pairs to convergence equalises
+//! whole chains.
+
+use anyhow::Result;
+
+use crate::graph::{Model, Op};
+
+/// A CLE-eligible pair: conv `a` feeds conv `b` through a
+/// single-consumer chain of act nodes (folded graph), possibly none.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClePair {
+    pub a: usize,
+    pub b: usize,
+    /// The act node on the chain, if any.
+    pub act: Option<usize>,
+}
+
+/// Discover CLE pairs (paper §4.1.2: "pairs of layers that are connected
+/// to each other without input or output splits in between").
+pub fn find_pairs(model: &Model) -> Vec<ClePair> {
+    assert!(model.folded, "CLE runs on the folded graph");
+    let mut pairs = Vec::new();
+    for n in &model.nodes {
+        if !matches!(n.op, Op::Conv { .. }) {
+            continue;
+        }
+        let mut cur = n.id;
+        let mut act = None;
+        loop {
+            let cons = model.consumers(cur);
+            if cons.len() != 1 {
+                break;
+            }
+            let next = cons[0];
+            match next.op {
+                Op::Act(_) => {
+                    act = Some(next.id);
+                    cur = next.id;
+                }
+                Op::Conv { .. } => {
+                    pairs.push(ClePair { a: n.id, b: next.id, act });
+                    break;
+                }
+                _ => break,
+            }
+        }
+    }
+    pairs
+}
+
+/// Per-output-channel symmetric range of a conv weight: `2·max|W_i|`.
+fn out_ranges(model: &Model, id: usize) -> Result<Vec<f32>> {
+    let w = match &model.node(id).op {
+        Op::Conv { w, .. } => model.tensor(w)?,
+        _ => unreachable!(),
+    };
+    Ok((0..w.shape()[0])
+        .map(|o| {
+            2.0 * w
+                .out_channel(o)
+                .iter()
+                .fold(0f32, |m, &x| m.max(x.abs()))
+        })
+        .collect())
+}
+
+/// Per-*input*-channel symmetric range of a conv weight.
+fn in_ranges(model: &Model, id: usize) -> Result<Vec<f32>> {
+    let n = model.node(id);
+    let (w, dw, in_ch) = match &n.op {
+        Op::Conv { w, in_ch, .. } => {
+            (model.tensor(w)?, n.op.is_depthwise(), *in_ch)
+        }
+        _ => unreachable!(),
+    };
+    if dw {
+        // depthwise: input channel i is exactly weight channel i
+        return Ok((0..in_ch)
+            .map(|i| {
+                2.0 * w
+                    .out_channel(i)
+                    .iter()
+                    .fold(0f32, |m, &x| m.max(x.abs()))
+            })
+            .collect());
+    }
+    let (o_count, i_count) = (w.shape()[0], w.shape()[1]);
+    let spatial: usize = w.shape()[2..].iter().product();
+    let mut out = vec![0f32; i_count];
+    let d = w.data();
+    for o in 0..o_count {
+        for i in 0..i_count {
+            let base = (o * i_count + i) * spatial;
+            for s in 0..spatial {
+                out[i] = out[i].max(d[base + s].abs());
+            }
+        }
+    }
+    Ok(out.into_iter().map(|x| 2.0 * x).collect())
+}
+
+/// Apply scale vector `s` to a pair: layer `a` out-channels divided by
+/// `s_i` (weights, bias, stats), layer `b` in-channels multiplied.
+fn apply_scales(model: &mut Model, pair: &ClePair, s: &[f32]) -> Result<()> {
+    // layer a
+    let (wa, ba) = match &model.node(pair.a).op {
+        Op::Conv { w, b, .. } => (w.clone(), b.clone()),
+        _ => unreachable!(),
+    };
+    {
+        let w = model.tensor_mut(&wa)?;
+        for (i, &si) in s.iter().enumerate() {
+            w.scale_out_channel(i, 1.0 / si);
+        }
+    }
+    if let Some(ba) = ba {
+        let b = model.tensor_mut(&ba)?;
+        for (i, &si) in s.iter().enumerate() {
+            b.data_mut()[i] /= si;
+        }
+    }
+    if let Some(st) = model.act_stats.get_mut(&pair.a) {
+        for (i, &si) in s.iter().enumerate() {
+            st.mean[i] /= si;
+            st.std[i] /= si;
+        }
+    }
+    // layer b
+    let nb = model.node(pair.b);
+    let dw = nb.op.is_depthwise();
+    let wb = match &nb.op {
+        Op::Conv { w, .. } => w.clone(),
+        _ => unreachable!(),
+    };
+    let w = model.tensor_mut(&wb)?;
+    for (i, &si) in s.iter().enumerate() {
+        if dw {
+            w.scale_out_channel(i, si);
+        } else {
+            w.scale_in_channel(i, si);
+        }
+    }
+    Ok(())
+}
+
+/// Equalize one pair; returns the max |log s| applied (convergence gauge).
+pub fn equalize_pair(model: &mut Model, pair: &ClePair) -> Result<f32> {
+    let r1 = out_ranges(model, pair.a)?;
+    let r2 = in_ranges(model, pair.b)?;
+    debug_assert_eq!(r1.len(), r2.len(), "pair channel mismatch");
+    let s: Vec<f32> = r1
+        .iter()
+        .zip(&r2)
+        .map(|(&a, &b)| {
+            if a <= 0.0 || b <= 0.0 {
+                1.0
+            } else {
+                (a / b).sqrt() // = (1/r2) * sqrt(r1*r2), eq. 11
+            }
+        })
+        .collect();
+    apply_scales(model, pair, &s)?;
+    Ok(s.iter().fold(0f32, |m, &x| m.max(x.ln().abs())))
+}
+
+/// Iterate equalization over all pairs until convergence (paper §4.1.2).
+/// Returns the number of sweeps performed.
+pub fn equalize(model: &mut Model, max_iters: usize, tol: f32) -> Result<usize> {
+    let pairs = find_pairs(model);
+    for it in 0..max_iters {
+        let mut worst = 0f32;
+        for p in &pairs {
+            worst = worst.max(equalize_pair(model, p)?);
+        }
+        if worst < tol {
+            return Ok(it + 1);
+        }
+    }
+    Ok(max_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfq::bn_fold;
+    use crate::dfq::testutil::{random_input, two_layer_model};
+    use crate::nn::{self, QuantCfg};
+    use crate::util::rng::Rng;
+
+    fn prepared() -> Model {
+        bn_fold::fold(&two_layer_model(11, true)).unwrap()
+    }
+
+    #[test]
+    fn finds_the_pair() {
+        let m = prepared();
+        let pairs = find_pairs(&m);
+        assert_eq!(pairs.len(), 1);
+        assert!(pairs[0].act.is_some());
+    }
+
+    #[test]
+    fn preserves_function() {
+        let mut m = prepared();
+        // corrupt per-channel scales first so there is something to fix
+        let mut rng = Rng::new(5);
+        let pair = find_pairs(&m)[0];
+        let s: Vec<f32> = (0..8).map(|_| rng.log_uniform(0.1, 10.0)).collect();
+        super::apply_scales(&mut m, &pair, &s).unwrap();
+        let x = random_input(&m, 2, 3);
+        let y0 = nn::forward(&m, &x, &QuantCfg::fp32(&m)).unwrap();
+
+        let sweeps = equalize(&mut m, 50, 1e-4).unwrap();
+        assert!(sweeps >= 1);
+        let y1 = nn::forward(&m, &x, &QuantCfg::fp32(&m)).unwrap();
+        let rel = y0[0].max_abs_diff(&y1[0]) / y0[0].abs_max().max(1e-6);
+        assert!(rel < 1e-3, "CLE changed FP32 function by {rel}");
+    }
+
+    #[test]
+    fn matches_ranges_across_pair() {
+        let mut m = prepared();
+        let pair = find_pairs(&m)[0];
+        equalize(&mut m, 50, 1e-5).unwrap();
+        let r1 = out_ranges(&m, pair.a).unwrap();
+        let r2 = in_ranges(&m, pair.b).unwrap();
+        for (a, b) in r1.iter().zip(&r2) {
+            assert!((a - b).abs() < 1e-3 * a.max(*b), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn improves_precision_objective() {
+        // eq. 9 objective must not decrease
+        let mut m = prepared();
+        let mut rng = Rng::new(8);
+        let pair = find_pairs(&m)[0];
+        let s: Vec<f32> = (0..8).map(|_| rng.log_uniform(0.05, 20.0)).collect();
+        super::apply_scales(&mut m, &pair, &s).unwrap();
+
+        let objective = |m: &Model| -> f32 {
+            let wa = match &m.node(pair.a).op {
+                Op::Conv { w, .. } => m.tensor(w).unwrap(),
+                _ => unreachable!(),
+            };
+            let wb = match &m.node(pair.b).op {
+                Op::Conv { w, .. } => m.tensor(w).unwrap(),
+                _ => unreachable!(),
+            };
+            let p1 = crate::quant::channel_precision(wa);
+            // in-channel precision for b
+            let r2 = in_ranges(m, pair.b).unwrap();
+            let total = 2.0 * wb.abs_max();
+            p1.iter()
+                .zip(&r2)
+                .map(|(p, r)| p * (r / total))
+                .sum()
+        };
+        let before = objective(&m);
+        equalize(&mut m, 50, 1e-5).unwrap();
+        let after = objective(&m);
+        assert!(after >= before - 1e-4, "objective fell: {before} -> {after}");
+    }
+}

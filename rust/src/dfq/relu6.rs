@@ -1,0 +1,45 @@
+//! ReLU6 → ReLU replacement (paper §5.1.1).
+//!
+//! Equalization rescales channels; a per-channel cut-off would be needed
+//! to keep ReLU6 exactly equivariant, so the paper replaces ReLU6 with
+//! plain ReLU first ("does not significantly degrade the model
+//! performance") and we do the same.
+
+use crate::graph::{ActKind, Model, Op};
+
+/// Replace every ReLU6 with ReLU. Returns how many were replaced.
+pub fn replace_relu6(model: &mut Model) -> usize {
+    let mut n = 0;
+    for node in &mut model.nodes {
+        if let Op::Act(kind) = &mut node.op {
+            if *kind == ActKind::Relu6 {
+                *kind = ActKind::Relu;
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfq::testutil::two_layer_model;
+
+    #[test]
+    fn replaces_all() {
+        let mut m = two_layer_model(51, true);
+        // flip the acts to relu6 first
+        for node in &mut m.nodes {
+            if let Op::Act(k) = &mut node.op {
+                *k = ActKind::Relu6;
+            }
+        }
+        assert_eq!(replace_relu6(&mut m), 2);
+        assert_eq!(replace_relu6(&mut m), 0);
+        assert!(m
+            .nodes
+            .iter()
+            .all(|n| !matches!(n.op, Op::Act(ActKind::Relu6))));
+    }
+}

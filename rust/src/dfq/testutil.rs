@@ -1,0 +1,177 @@
+//! Test fixtures: small randomly-initialised models built directly in
+//! Rust (no artifacts needed), plus a BN-aware reference forward used to
+//! validate folding. Compiled only for tests.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::graph::{ActKind, Model, Node, Op, Task};
+use crate::nn::{conv, ops};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub fn rand_t(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+    Tensor::new(shape, rng.normal_vec(shape.iter().product(), std))
+}
+
+/// conv(3->8, 3x3) + bn + relu + conv(8->8 depthwise or dense) + bn + relu.
+/// `with_bn=false` gives plain biased convs.
+pub fn two_layer_model(seed: u64, with_bn: bool) -> Model {
+    let mut rng = Rng::new(seed);
+    let mut tensors = BTreeMap::new();
+    let mut nodes = vec![Node { id: 0, inputs: vec![], op: Op::Input }];
+    let mut id = 0usize;
+
+    let mut conv = |nodes: &mut Vec<Node>,
+                    tensors: &mut BTreeMap<String, Tensor>,
+                    rng: &mut Rng,
+                    input: usize,
+                    in_ch: usize,
+                    out_ch: usize,
+                    k: usize,
+                    act: ActKind|
+     -> usize {
+        id += 1;
+        let w = format!("w{id}");
+        tensors.insert(w.clone(), rand_t(rng, &[out_ch, in_ch, k, k], 0.4));
+        let b = if with_bn {
+            None
+        } else {
+            let b = format!("b{id}");
+            tensors.insert(b.clone(), rand_t(rng, &[out_ch], 0.2));
+            Some(b)
+        };
+        nodes.push(Node {
+            id,
+            inputs: vec![input],
+            op: Op::Conv {
+                w,
+                b,
+                in_ch,
+                out_ch,
+                k,
+                stride: 1,
+                pad: k / 2,
+                groups: 1,
+            },
+        });
+        let mut last = id;
+        if with_bn {
+            id += 1;
+            for (p, std, ofs) in [
+                ("g", 0.3f32, 1.0f32),
+                ("be", 0.3, 0.1),
+                ("m", 0.3, 0.0),
+                ("v", 0.0, 0.0),
+            ] {
+                let name = format!("{p}{id}");
+                let mut t = rand_t(rng, &[out_ch], std);
+                t.map_inplace(|x| x + ofs);
+                if p == "v" {
+                    // positive variances
+                    t = rand_t(rng, &[out_ch], 0.3);
+                    t.map_inplace(|x| x.abs() + 0.5);
+                }
+                tensors.insert(name, t);
+            }
+            nodes.push(Node {
+                id,
+                inputs: vec![last],
+                op: Op::BatchNorm {
+                    ch: out_ch,
+                    gamma: format!("g{id}"),
+                    beta: format!("be{id}"),
+                    mean: format!("m{id}"),
+                    var: format!("v{id}"),
+                },
+            });
+            last = id;
+        }
+        id += 1;
+        nodes.push(Node { id, inputs: vec![last], op: Op::Act(act) });
+        id
+    };
+
+    let a1 = conv(&mut nodes, &mut tensors, &mut rng, 0, 3, 8, 3, ActKind::Relu);
+    let a2 = conv(&mut nodes, &mut tensors, &mut rng, a1, 8, 8, 1, ActKind::Relu);
+
+    Model {
+        name: "test2l".into(),
+        task: Task::Classification,
+        input_shape: [3, 8, 8],
+        num_classes: 8,
+        nodes,
+        outputs: vec![a2],
+        tensors,
+        meta: BTreeMap::new(),
+        act_stats: HashMap::new(),
+        folded: !with_bn,
+    }
+}
+
+pub fn random_input(model: &Model, batch: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let [c, h, w] = model.input_shape;
+    let data: Vec<f32> =
+        (0..batch * c * h * w).map(|_| rng.f32()).collect();
+    Tensor::new(&[batch, c, h, w], data)
+}
+
+/// Reference forward that evaluates bn nodes live (inference statistics),
+/// independent of the folding code path.
+pub fn forward_with_bn(model: &Model, x: &Tensor) -> Tensor {
+    let mut vals: HashMap<usize, Tensor> = HashMap::new();
+    vals.insert(0, x.clone());
+    for n in &model.nodes {
+        let y = match &n.op {
+            Op::Input => continue,
+            Op::Conv { w, b, stride, pad, groups, .. } => {
+                let bias = b.as_ref().map(|b| model.tensor(b).unwrap().data());
+                conv::conv2d(
+                    &vals[&n.inputs[0]],
+                    model.tensor(w).unwrap(),
+                    bias,
+                    *stride,
+                    *pad,
+                    *groups,
+                )
+            }
+            Op::BatchNorm { ch, gamma, beta, mean, var } => {
+                let g = model.tensor(gamma).unwrap().data();
+                let be = model.tensor(beta).unwrap().data();
+                let mu = model.tensor(mean).unwrap().data();
+                let va = model.tensor(var).unwrap().data();
+                let mut t = vals[&n.inputs[0]].clone();
+                let s = t.shape().to_vec();
+                let spatial = s[2] * s[3];
+                let d = t.data_mut();
+                for img in 0..s[0] {
+                    for c in 0..*ch {
+                        let inv = g[c] / (va[c] + super::bn_fold::BN_EPS).sqrt();
+                        let base = (img * ch + c) * spatial;
+                        for p in 0..spatial {
+                            d[base + p] = (d[base + p] - mu[c]) * inv + be[c];
+                        }
+                    }
+                }
+                t
+            }
+            Op::Act(kind) => {
+                let mut t = vals[&n.inputs[0]].clone();
+                ops::clip_act(&mut t, kind.clip_hi());
+                t
+            }
+            Op::Add => ops::add(&vals[&n.inputs[0]], &vals[&n.inputs[1]]),
+            Op::Gap => ops::global_avg_pool(&vals[&n.inputs[0]]),
+            Op::Linear { w, b, .. } => ops::linear(
+                &vals[&n.inputs[0]],
+                model.tensor(w).unwrap(),
+                model.tensor(b).unwrap().data(),
+            ),
+            Op::Upsample { factor } => {
+                ops::upsample_nearest(&vals[&n.inputs[0]], *factor)
+            }
+        };
+        vals.insert(n.id, y);
+    }
+    vals.remove(&model.outputs[0]).unwrap()
+}

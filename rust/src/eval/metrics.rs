@@ -1,0 +1,317 @@
+//! Task metrics: top-1 accuracy, mean IoU, detection mAP@0.5.
+//!
+//! Mirrors the paper's evaluation: ImageNet top-1 (Tables 1/2/5-8),
+//! Pascal-VOC mIoU (Table 3) and mAP (Table 4), computed over the
+//! SynthShapes substitutes.
+
+use crate::tensor::Tensor;
+
+/// Top-1 accuracy of logits (N, K) against labels (N).
+pub fn top1(logits: &Tensor, labels: &[i32]) -> f64 {
+    let (n, k) = (logits.shape()[0], logits.shape()[1]);
+    debug_assert!(labels.len() >= n);
+    let mut hits = 0usize;
+    for i in 0..n {
+        let row = &logits.data()[i * k..(i + 1) * k];
+        let pred = argmax(row);
+        if pred as i32 == labels[i] {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
+/// Mean intersection-over-union of per-pixel logits (N, K, H, W) against
+/// labels (N, H, W), averaged over classes present in the union.
+pub fn mean_iou(logits: &Tensor, labels: &[i32], num_classes: usize) -> f64 {
+    let s = logits.shape();
+    let (n, k, h, w) = (s[0], s[1], s[2], s[3]);
+    let spatial = h * w;
+    let mut inter = vec![0u64; num_classes];
+    let mut uni = vec![0u64; num_classes];
+    for i in 0..n {
+        for p in 0..spatial {
+            // argmax over channel for pixel p
+            let mut best = 0usize;
+            let mut bv = f32::NEG_INFINITY;
+            for c in 0..k {
+                let v = logits.data()[(i * k + c) * spatial + p];
+                if v > bv {
+                    bv = v;
+                    best = c;
+                }
+            }
+            let gt = labels[i * spatial + p] as usize;
+            if best == gt {
+                inter[gt] += 1;
+                uni[gt] += 1;
+            } else {
+                uni[gt] += 1;
+                uni[best] += 1;
+            }
+        }
+    }
+    let mut acc = 0f64;
+    let mut cnt = 0usize;
+    for c in 0..num_classes {
+        if uni[c] > 0 {
+            acc += inter[c] as f64 / uni[c] as f64;
+            cnt += 1;
+        }
+    }
+    if cnt == 0 { 0.0 } else { acc / cnt as f64 }
+}
+
+/// One decoded detection.
+#[derive(Debug, Clone, Copy)]
+pub struct Detection {
+    pub image: usize,
+    pub class: usize, // foreground class in [0, C)
+    pub score: f32,
+    pub bbox: [f32; 4], // x1, y1, x2, y2 (pixels)
+}
+
+/// Decode SSD-lite grid outputs (N, C+1+4, G, G) into detections.
+/// Channel 0 is background; boxes are (cx, cy, w, h) in cell units.
+pub fn decode_detections(
+    out: &Tensor,
+    cell: f32,
+    score_thresh: f32,
+) -> Vec<Detection> {
+    let s = out.shape();
+    let (n, ch, g, _) = (s[0], s[1], s[2], s[3]);
+    let nc = ch - 4; // classes incl. background
+    let cells = g * g;
+    let mut dets = Vec::new();
+    for i in 0..n {
+        for cy in 0..g {
+            for cx in 0..g {
+                let p = cy * g + cx;
+                let at = |c: usize| out.data()[(i * ch + c) * cells + p];
+                // softmax over classes
+                let mut mx = f32::NEG_INFINITY;
+                for c in 0..nc {
+                    mx = mx.max(at(c));
+                }
+                let mut denom = 0f32;
+                for c in 0..nc {
+                    denom += (at(c) - mx).exp();
+                }
+                let mut best = 0usize;
+                let mut bv = f32::NEG_INFINITY;
+                for c in 0..nc {
+                    if at(c) > bv {
+                        bv = at(c);
+                        best = c;
+                    }
+                }
+                if best == 0 {
+                    continue; // background
+                }
+                let score = (at(best) - mx).exp() / denom;
+                if score < score_thresh {
+                    continue;
+                }
+                let bcx = (cx as f32 + at(nc)) * cell;
+                let bcy = (cy as f32 + at(nc + 1)) * cell;
+                let bw = at(nc + 2) * cell;
+                let bh = at(nc + 3) * cell;
+                dets.push(Detection {
+                    image: i,
+                    class: best - 1,
+                    score,
+                    bbox: [
+                        bcx - bw / 2.0,
+                        bcy - bh / 2.0,
+                        bcx + bw / 2.0,
+                        bcy + bh / 2.0,
+                    ],
+                });
+            }
+        }
+    }
+    dets
+}
+
+pub fn iou(a: &[f32; 4], b: &[f32; 4]) -> f32 {
+    let x1 = a[0].max(b[0]);
+    let y1 = a[1].max(b[1]);
+    let x2 = a[2].min(b[2]);
+    let y2 = a[3].min(b[3]);
+    let inter = (x2 - x1).max(0.0) * (y2 - y1).max(0.0);
+    let area = |r: &[f32; 4]| (r[2] - r[0]).max(0.0) * (r[3] - r[1]).max(0.0);
+    let u = area(a) + area(b) - inter;
+    if u <= 0.0 {
+        0.0
+    } else {
+        inter / u
+    }
+}
+
+/// Ground-truth box list per image from the dataset tensor
+/// (N, MAX_OBJ, 5) with rows [cls, x1, y1, x2, y2], cls = -1 padding.
+pub fn gt_boxes(boxes: &Tensor) -> Vec<Vec<(usize, [f32; 4])>> {
+    let s = boxes.shape();
+    let (n, m) = (s[0], s[1]);
+    let mut out = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..m {
+            let r = &boxes.data()[(i * m + j) * 5..(i * m + j) * 5 + 5];
+            if r[0] < 0.0 {
+                continue;
+            }
+            out[i].push((r[0] as usize, [r[1], r[2], r[3], r[4]]));
+        }
+    }
+    out
+}
+
+/// VOC-style all-point mAP at the given IoU threshold.
+pub fn mean_ap(
+    dets: &[Detection],
+    gt: &[Vec<(usize, [f32; 4])>],
+    num_classes: usize,
+    iou_thresh: f32,
+) -> f64 {
+    let mut ap_sum = 0f64;
+    let mut classes = 0usize;
+    for cls in 0..num_classes {
+        let total_gt: usize = gt
+            .iter()
+            .map(|g| g.iter().filter(|(c, _)| *c == cls).count())
+            .sum();
+        if total_gt == 0 {
+            continue;
+        }
+        classes += 1;
+        let mut cd: Vec<&Detection> =
+            dets.iter().filter(|d| d.class == cls).collect();
+        cd.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        let mut matched: Vec<Vec<bool>> =
+            gt.iter().map(|g| vec![false; g.len()]).collect();
+        let mut tp = 0usize;
+        let mut fp = 0usize;
+        let mut curve: Vec<(f64, f64)> = Vec::new(); // (recall, precision)
+        for d in cd {
+            let g = &gt[d.image];
+            let mut best = -1isize;
+            let mut best_iou = iou_thresh;
+            for (j, (c, bb)) in g.iter().enumerate() {
+                if *c != cls || matched[d.image][j] {
+                    continue;
+                }
+                let v = iou(&d.bbox, bb);
+                if v >= best_iou {
+                    best_iou = v;
+                    best = j as isize;
+                }
+            }
+            if best >= 0 {
+                matched[d.image][best as usize] = true;
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            curve.push((
+                tp as f64 / total_gt as f64,
+                tp as f64 / (tp + fp) as f64,
+            ));
+        }
+        // all-point interpolation
+        let mut ap = 0f64;
+        let mut prev_r = 0f64;
+        let mut i = 0;
+        while i < curve.len() {
+            let r = curve[i].0;
+            // max precision at recall >= r
+            let pmax = curve[i..]
+                .iter()
+                .map(|c| c.1)
+                .fold(0f64, f64::max);
+            ap += (r - prev_r) * pmax;
+            prev_r = r;
+            // skip to next distinct recall
+            while i < curve.len() && curve[i].0 <= r {
+                i += 1;
+            }
+        }
+        ap_sum += ap;
+    }
+    if classes == 0 { 0.0 } else { ap_sum / classes as f64 }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            bi = i;
+        }
+    }
+    bi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_counts() {
+        let logits = Tensor::new(&[2, 3], vec![0., 1., 0., 1., 0., 0.]);
+        assert_eq!(top1(&logits, &[1, 0]), 1.0);
+        assert_eq!(top1(&logits, &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn miou_perfect_and_degenerate() {
+        // 1 image, 2 classes, 1x2 pixels
+        let logits =
+            Tensor::new(&[1, 2, 1, 2], vec![1., 0., 0., 1.]);
+        assert_eq!(mean_iou(&logits, &[0, 1], 2), 1.0);
+        assert!(mean_iou(&logits, &[1, 0], 2) < 0.1);
+    }
+
+    #[test]
+    fn iou_basics() {
+        let a = [0., 0., 2., 2.];
+        assert!((iou(&a, &a) - 1.0).abs() < 1e-6);
+        assert_eq!(iou(&a, &[2., 2., 4., 4.]), 0.0);
+        let half = iou(&a, &[0., 0., 2., 1.]);
+        assert!((half - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn map_perfect_detector() {
+        let gt = vec![vec![(0usize, [0f32, 0., 8., 8.])]];
+        let dets = vec![Detection {
+            image: 0,
+            class: 0,
+            score: 0.9,
+            bbox: [0., 0., 8., 8.],
+        }];
+        assert!((mean_ap(&dets, &gt, 3, 0.5) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn map_false_positive_hurts() {
+        let gt = vec![vec![(0usize, [0f32, 0., 8., 8.])]];
+        let dets = vec![
+            Detection { image: 0, class: 0, score: 0.95,
+                        bbox: [20., 20., 28., 28.] },
+            Detection { image: 0, class: 0, score: 0.9,
+                        bbox: [0., 0., 8., 8.] },
+        ];
+        let ap = mean_ap(&dets, &gt, 3, 0.5);
+        assert!(ap < 0.6, "{ap}");
+    }
+
+    #[test]
+    fn decode_ignores_background() {
+        // 1 image, 1x1 grid, 3 fg classes + bg + 4 box ch = 8 channels
+        let mut data = vec![0f32; 8];
+        data[0] = 5.0; // background wins
+        let out = Tensor::new(&[1, 8, 1, 1], data);
+        assert!(decode_detections(&out, 8.0, 0.1).is_empty());
+    }
+}

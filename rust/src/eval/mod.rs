@@ -1,0 +1,176 @@
+//! Evaluation harness: run a (quantised) model over a dataset on either
+//! backend and compute the task metric. This is what every experiment
+//! driver ([`crate::experiments`]) calls.
+
+pub mod metrics;
+
+use anyhow::{bail, Result};
+
+use crate::graph::io::Dataset;
+use crate::graph::{Model, Task};
+use crate::nn::{self, QuantCfg};
+use crate::runtime::{BoundWeights, Executable};
+use crate::tensor::Tensor;
+
+/// Which engine executes the forward passes.
+pub enum Backend<'a> {
+    /// AOT-compiled PJRT executable (the production path).
+    Pjrt { exec: &'a Executable, weights: &'a BoundWeights },
+    /// Pure-Rust reference engine.
+    Engine,
+}
+
+/// Evaluate `model` on `dataset`, returning the task metric
+/// (top-1 / mIoU / mAP@0.5 — all as a fraction in [0, 1]).
+pub fn evaluate(
+    model: &Model,
+    cfg: &QuantCfg,
+    dataset: &Dataset,
+    backend: &Backend,
+    limit: Option<usize>,
+) -> Result<f64> {
+    let n = dataset.len().min(limit.unwrap_or(usize::MAX));
+    let outputs = run_all(model, cfg, dataset, backend, n)?;
+    metric_for(model.task, &outputs, dataset, n, model.num_classes)
+}
+
+/// Forward the first `n` dataset images, concatenating primary outputs.
+pub fn run_all(
+    model: &Model,
+    cfg: &QuantCfg,
+    dataset: &Dataset,
+    backend: &Backend,
+    n: usize,
+) -> Result<Tensor> {
+    let mut chunks: Vec<Tensor> = Vec::new();
+    match backend {
+        Backend::Engine => {
+            // modest batches keep the working set cache-friendly
+            let bs = 32usize;
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + bs).min(n);
+                let x = dataset.batch(lo, hi);
+                let outs = nn::forward(model, &x, cfg)?;
+                chunks.push(outs.into_iter().next().unwrap());
+                lo = hi;
+            }
+        }
+        Backend::Pjrt { exec, weights } => {
+            let bs = exec.meta.batch;
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + bs).min(n);
+                let x = if hi - lo == bs {
+                    dataset.batch(lo, hi)
+                } else {
+                    pad_batch(&dataset.batch(lo, hi), bs)
+                };
+                let outs = exec.run(&x, weights, cfg)?;
+                let mut out = outs.into_iter().next().unwrap();
+                if hi - lo != bs {
+                    out = truncate_batch(&out, hi - lo);
+                }
+                chunks.push(out);
+                lo = hi;
+            }
+        }
+    }
+    concat_batch(&chunks)
+}
+
+fn metric_for(
+    task: Task,
+    outputs: &Tensor,
+    dataset: &Dataset,
+    n: usize,
+    num_classes: usize,
+) -> Result<f64> {
+    Ok(match task {
+        Task::Classification => metrics::top1(outputs, &dataset.labels[..n]),
+        Task::Segmentation => {
+            let spatial: usize = dataset.label_shape[1..].iter().product();
+            metrics::mean_iou(
+                outputs,
+                &dataset.labels[..n * spatial],
+                crate::eval::SEG_CLASSES,
+            )
+        }
+        Task::Detection => {
+            let boxes = dataset
+                .boxes
+                .as_ref()
+                .expect("detection dataset has boxes");
+            let gt_all = metrics::gt_boxes(boxes);
+            let gt = &gt_all[..n];
+            let dets = metrics::decode_detections(
+                outputs,
+                (dataset.x.shape()[2] / outputs.shape()[2]) as f32,
+                0.05,
+            );
+            let _ = num_classes;
+            metrics::mean_ap(&dets, gt, crate::eval::DET_CLASSES, 0.5)
+        }
+    })
+}
+
+/// Number of segmentation classes in SynthShapes-seg (bg + 3 shapes).
+pub const SEG_CLASSES: usize = 4;
+/// Foreground detection classes in SynthShapes-det.
+pub const DET_CLASSES: usize = 3;
+
+fn pad_batch(x: &Tensor, batch: usize) -> Tensor {
+    let mut shape = x.shape().to_vec();
+    let per: usize = shape[1..].iter().product();
+    let n = shape[0];
+    shape[0] = batch;
+    let mut data = vec![0f32; batch * per];
+    data[..n * per].copy_from_slice(x.data());
+    Tensor::new(&shape, data)
+}
+
+fn truncate_batch(x: &Tensor, n: usize) -> Tensor {
+    let mut shape = x.shape().to_vec();
+    let per: usize = shape[1..].iter().product();
+    shape[0] = n;
+    Tensor::new(&shape, x.data()[..n * per].to_vec())
+}
+
+fn concat_batch(chunks: &[Tensor]) -> Result<Tensor> {
+    if chunks.is_empty() {
+        bail!("no evaluation chunks");
+    }
+    let mut shape = chunks[0].shape().to_vec();
+    let n: usize = chunks.iter().map(|c| c.shape()[0]).sum();
+    shape[0] = n;
+    let mut data = Vec::with_capacity(shape.iter().product());
+    for c in chunks {
+        data.extend_from_slice(c.data());
+    }
+    Ok(Tensor::new(&shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_truncate_roundtrip() {
+        let x = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let p = pad_batch(&x, 4);
+        assert_eq!(p.shape(), &[4, 3]);
+        assert_eq!(&p.data()[..6], x.data());
+        assert_eq!(&p.data()[6..], &[0.; 6]);
+        let t = truncate_batch(&p, 2);
+        assert_eq!(t.data(), x.data());
+    }
+
+    #[test]
+    fn concat_shapes() {
+        let a = Tensor::new(&[1, 2], vec![1., 2.]);
+        let b = Tensor::new(&[2, 2], vec![3., 4., 5., 6.]);
+        let c = concat_batch(&[a, b]).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.data(), &[1., 2., 3., 4., 5., 6.]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Figure drivers: bit-width sweep (Fig. 1), per-channel weight ranges
+//! before/after equalization (Fig. 2 / Fig. 6), per-channel biased error
+//! before/after bias correction (Fig. 3). Output is CSV series (+
+//! paper-style rows printed); plots are a `plot anything` away.
+
+use anyhow::Result;
+
+use crate::dfq::{bn_fold, equalize, quantize_data_free, BiasCorrMode,
+                 DfqConfig};
+use crate::graph::Op;
+use crate::nn::{self, QuantCfg};
+use crate::quant::{quantize_weights, QScheme};
+use crate::util::table::{pct, Table};
+
+use super::{results_dir, Context};
+
+const V2: &str = "micronet_v2";
+
+/// Fig. 1 — top-1 of MicroNet-V2 vs bit width, original vs DFQ.
+/// Weights and activations quantised at the same width.
+pub fn fig1(ctx: &mut Context) -> Result<Table> {
+    let mut t = Table::new(
+        "Figure 1 — MicroNet-V2 top-1 vs bit width",
+        &["bits", "original", "DFQ"],
+    );
+    for bits in [16u32, 12, 10, 8, 6, 5, 4] {
+        let scheme = QScheme::int8_asymmetric().with_bits(bits);
+        let orig = ctx.eval_quant(
+            V2,
+            &DfqConfig::baseline(),
+            &scheme,
+            bits,
+            BiasCorrMode::None,
+        )?;
+        let dfq = ctx.eval_quant(
+            V2,
+            &DfqConfig::default(),
+            &scheme,
+            bits,
+            BiasCorrMode::Analytic,
+        )?;
+        t.row(&[bits.to_string(), pct(orig), pct(dfq)]);
+    }
+    t.save_csv(&results_dir().join("fig1.csv"))?;
+    Ok(t)
+}
+
+/// Boxplot statistics of per-output-channel weights of a tensor.
+fn channel_boxplot(
+    t: &crate::tensor::Tensor,
+) -> Vec<(f32, f32, f32, f32, f32)> {
+    (0..t.shape()[0])
+        .map(|o| {
+            let mut v: Vec<f32> = t.out_channel(o).to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let q = |p: f64| {
+                let sorted: Vec<f64> =
+                    v.iter().map(|&x| x as f64).collect();
+                crate::util::stats::percentile_sorted(&sorted, p) as f32
+            };
+            (v[0], q(25.0), q(50.0), q(75.0), v[v.len() - 1])
+        })
+        .collect()
+}
+
+/// The first depthwise-separable layer's dw conv (paper Figs. 2/6 target).
+fn first_dw_conv(model: &crate::graph::Model) -> Option<(usize, String)> {
+    model.nodes.iter().find_map(|n| {
+        if n.op.is_depthwise() {
+            match &n.op {
+                Op::Conv { w, .. } => Some((n.id, w.clone())),
+                _ => None,
+            }
+        } else {
+            None
+        }
+    })
+}
+
+fn nth_dw_conv(
+    model: &crate::graph::Model,
+    nth: usize,
+) -> Option<(usize, String)> {
+    model
+        .nodes
+        .iter()
+        .filter(|n| n.op.is_depthwise())
+        .nth(nth)
+        .and_then(|n| match &n.op {
+            Op::Conv { w, .. } => Some((n.id, w.clone())),
+            _ => None,
+        })
+}
+
+/// Figs. 2 & 6 — per-channel weight ranges of the first depthwise layer,
+/// before and after cross-layer equalization.
+pub fn fig2_fig6(ctx: &mut Context) -> Result<Vec<Table>> {
+    let model = ctx.model(V2)?;
+    let folded = bn_fold::fold(&model)?;
+    let (_, w_name) = first_dw_conv(&folded)
+        .ok_or_else(|| anyhow::anyhow!("no depthwise conv in {V2}"))?;
+
+    let mut out = Vec::new();
+    for (fig, equalized) in [("fig2", false), ("fig6", true)] {
+        let mut m = folded.clone();
+        if equalized {
+            crate::dfq::relu6::replace_relu6(&mut m);
+            equalize::equalize(&mut m, 40, 1e-4)?;
+        }
+        let w = m.tensor(&w_name)?;
+        let mut t = Table::new(
+            format!(
+                "Figure {} — per-channel ranges of the first dw layer ({})",
+                if equalized { "6" } else { "2" },
+                if equalized { "after CLE" } else { "before CLE" }
+            ),
+            &["channel", "min", "q25", "median", "q75", "max"],
+        );
+        for (c, (mn, q1, md, q3, mx)) in
+            channel_boxplot(w).into_iter().enumerate()
+        {
+            t.row(&[
+                c.to_string(),
+                format!("{mn:.4}"),
+                format!("{q1:.4}"),
+                format!("{md:.4}"),
+                format!("{q3:.4}"),
+                format!("{mx:.4}"),
+            ]);
+        }
+        t.save_csv(&results_dir().join(format!("{fig}.csv")))?;
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// Fig. 3 — per-channel biased output error of the second depthwise
+/// layer introduced by INT8 weight quantisation, before and after
+/// analytic bias correction. Errors measured on calibration data
+/// (eq. 1: E[ỹ − y] per output channel).
+pub fn fig3(ctx: &mut Context) -> Result<Table> {
+    let model = ctx.model(V2)?;
+    // measured on the *unequalized* model, where per-tensor quantisation
+    // of the corrupted weights introduces large biased errors (paper
+    // Fig. 3 uses the original MobileNetV2)
+    let prep = quantize_data_free(&model, &DfqConfig::baseline())?;
+    let (layer_id, _) = nth_dw_conv(&prep.model, 1)
+        .ok_or_else(|| anyhow::anyhow!("no second dw layer"))?;
+    let calib = ctx.calib_batch("classification")?;
+
+    let cfg = QuantCfg::fp32(&prep.model);
+    let fp = nn::preact_channel_means(&prep.model, &calib, &cfg)?;
+
+    let measure = |bc: BiasCorrMode| -> Result<Vec<f32>> {
+        let mut q = prep.model.clone();
+        let names: Vec<String> = q
+            .layers()
+            .iter()
+            .map(|n| match &n.op {
+                Op::Conv { w, .. } | Op::Linear { w, .. } => w.clone(),
+                _ => unreachable!(),
+            })
+            .collect();
+        for w in names {
+            let t = q.tensors.get_mut(&w).unwrap();
+            quantize_weights(t, &QScheme::int8_asymmetric());
+        }
+        if bc == BiasCorrMode::Analytic {
+            crate::dfq::bias_correct::analytic(&mut q, &prep.model)?;
+        }
+        let qm = nn::preact_channel_means(&q, &calib, &cfg)?;
+        Ok(qm[&layer_id]
+            .iter()
+            .zip(&fp[&layer_id])
+            .map(|(a, b)| a - b)
+            .collect())
+    };
+
+    let before = measure(BiasCorrMode::None)?;
+    let after = measure(BiasCorrMode::Analytic)?;
+    let mut t = Table::new(
+        "Figure 3 — per-channel biased error (2nd dw layer), INT8 weights",
+        &["channel", "error_before_bc", "error_after_bc"],
+    );
+    for c in 0..before.len() {
+        t.row(&[
+            c.to_string(),
+            format!("{:.6}", before[c]),
+            format!("{:.6}", after[c]),
+        ]);
+    }
+    // headline aggregate for quick reading
+    let mab = before.iter().map(|x| x.abs()).sum::<f32>() / before.len() as f32;
+    let maa = after.iter().map(|x| x.abs()).sum::<f32>() / after.len() as f32;
+    t.row(&[
+        "mean|err|".into(),
+        format!("{mab:.6}"),
+        format!("{maa:.6}"),
+    ]);
+    t.save_csv(&results_dir().join("fig3.csv"))?;
+    Ok(t)
+}

@@ -1,0 +1,235 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//!
+//! Each driver regenerates the corresponding table or figure series on
+//! the SynthShapes substitutes, printing paper-style rows and saving a
+//! CSV under `results/`. Shared by the CLI (`dfq table 1`), the examples
+//! and the bench targets.
+
+pub mod figures;
+pub mod tables;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context as _, Result};
+
+use crate::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+use crate::eval::{evaluate, Backend};
+use crate::graph::io::Dataset;
+use crate::graph::Model;
+use crate::nn::QuantCfg;
+use crate::quant::QScheme;
+use crate::runtime::{Executable, Manifest, Runtime};
+use crate::tensor::Tensor;
+use crate::util::table::Table;
+
+/// Evaluation backend preference (env `DFQ_BACKEND=engine|pjrt`).
+fn backend_pref() -> &'static str {
+    match std::env::var("DFQ_BACKEND").as_deref() {
+        Ok("engine") => "engine",
+        _ => "pjrt",
+    }
+}
+
+/// Per-run evaluation size (env `DFQ_EVAL_LIMIT`, default: full test set).
+fn eval_limit() -> Option<usize> {
+    std::env::var("DFQ_EVAL_LIMIT").ok().and_then(|s| s.parse().ok())
+}
+
+/// Shared state for experiment drivers: manifest, PJRT runtime, loaded
+/// datasets/models and compiled executables (cached per arch).
+pub struct Context {
+    pub manifest: Manifest,
+    runtime: Option<Runtime>,
+    datasets: HashMap<String, Dataset>,
+    calib: HashMap<String, Dataset>,
+    models: HashMap<String, Model>,
+    execs: HashMap<String, Executable>,
+    pub eval_batch: usize,
+}
+
+impl Context {
+    pub fn new() -> Result<Context> {
+        let manifest = Manifest::load(crate::artifacts_dir())?;
+        let runtime = if backend_pref() == "pjrt" {
+            Some(Runtime::cpu().context("creating PJRT CPU client")?)
+        } else {
+            None
+        };
+        Ok(Context {
+            manifest,
+            runtime,
+            datasets: HashMap::new(),
+            calib: HashMap::new(),
+            models: HashMap::new(),
+            execs: HashMap::new(),
+            eval_batch: 64,
+        })
+    }
+
+    /// The corrupted "pretrained original" model of an architecture.
+    pub fn model(&mut self, arch: &str) -> Result<Model> {
+        if let Some(m) = self.models.get(arch) {
+            return Ok(m.clone());
+        }
+        let entry = self.manifest.arch(arch)?;
+        let m = Model::load(self.manifest.path(&entry.model))?;
+        self.models.insert(arch.to_string(), m.clone());
+        Ok(m)
+    }
+
+    pub fn dataset(&mut self, task: &str) -> Result<&Dataset> {
+        if !self.datasets.contains_key(task) {
+            let ds = Dataset::load(self.manifest.dataset(task, "test")?)?;
+            self.datasets.insert(task.to_string(), ds);
+        }
+        Ok(&self.datasets[task])
+    }
+
+    /// Calibration batch (empirical bias correction), limited to 128
+    /// images to keep the reference engine tractable on one core.
+    pub fn calib_batch(&mut self, task: &str) -> Result<Tensor> {
+        if !self.calib.contains_key(task) {
+            let ds = Dataset::load(self.manifest.dataset(task, "calib")?)?;
+            self.calib.insert(task.to_string(), ds);
+        }
+        let ds = &self.calib[task];
+        Ok(ds.batch(0, ds.len().min(128)))
+    }
+
+    /// Evaluate a (possibly quantised) prepared model.
+    pub fn eval(
+        &mut self,
+        arch: &str,
+        model: &Model,
+        cfg: &QuantCfg,
+    ) -> Result<f64> {
+        let task = self.manifest.arch(arch)?.task.clone();
+        let limit = eval_limit();
+        if self.runtime.is_some() {
+            let key = format!("{arch}@{}", self.eval_batch);
+            if !self.execs.contains_key(&key) {
+                let exec = self.runtime.as_ref().unwrap().load_model_exec(
+                    &self.manifest,
+                    arch,
+                    self.eval_batch,
+                    model,
+                )?;
+                self.execs.insert(key.clone(), exec);
+            }
+            let exec = &self.execs[&key];
+            let weights = exec.bind_weights(model)?;
+            let ds = {
+                if !self.datasets.contains_key(&task) {
+                    let d =
+                        Dataset::load(self.manifest.dataset(&task, "test")?)?;
+                    self.datasets.insert(task.clone(), d);
+                }
+                &self.datasets[&task]
+            };
+            evaluate(
+                model,
+                cfg,
+                ds,
+                &Backend::Pjrt { exec, weights: &weights },
+                limit,
+            )
+        } else {
+            let ds = {
+                if !self.datasets.contains_key(&task) {
+                    let d =
+                        Dataset::load(self.manifest.dataset(&task, "test")?)?;
+                    self.datasets.insert(task.clone(), d);
+                }
+                &self.datasets[&task]
+            };
+            evaluate(model, cfg, ds, &Backend::Engine, limit)
+        }
+    }
+
+    /// FP32 + INTn metrics for one (arch, DfqConfig, scheme, bc) cell.
+    pub fn eval_config(
+        &mut self,
+        arch: &str,
+        dfq_cfg: &DfqConfig,
+        scheme: &QScheme,
+        act_bits: u32,
+        bc: BiasCorrMode,
+    ) -> Result<(f64, f64)> {
+        let model = self.model(arch)?;
+        let prep = quantize_data_free(&model, dfq_cfg)?;
+        let fp = self.eval(arch, &prep.model, &QuantCfg::fp32(&prep.model))?;
+        let calib = match bc {
+            BiasCorrMode::Empirical => {
+                let task = self.manifest.arch(arch)?.task.clone();
+                Some(self.calib_batch(&task)?)
+            }
+            _ => None,
+        };
+        let q = prep.quantize(scheme, act_bits, bc, calib.as_ref())?;
+        let qm = self.eval(arch, &q.model, &q.act_cfg)?;
+        Ok((fp, qm))
+    }
+
+    /// INTn metric only (when the FP32 column is shared across rows).
+    pub fn eval_quant(
+        &mut self,
+        arch: &str,
+        dfq_cfg: &DfqConfig,
+        scheme: &QScheme,
+        act_bits: u32,
+        bc: BiasCorrMode,
+    ) -> Result<f64> {
+        let model = self.model(arch)?;
+        let prep = quantize_data_free(&model, dfq_cfg)?;
+        let calib = match bc {
+            BiasCorrMode::Empirical => {
+                let task = self.manifest.arch(arch)?.task.clone();
+                Some(self.calib_batch(&task)?)
+            }
+            _ => None,
+        };
+        let q = prep.quantize(scheme, act_bits, bc, calib.as_ref())?;
+        self.eval(arch, &q.model, &q.act_cfg)
+    }
+}
+
+/// Where experiment CSVs land.
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("DFQ_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Registry: run an experiment by id ("1".."8", "fig1", "fig2", "fig3").
+pub fn run(id: &str) -> Result<Vec<Table>> {
+    let mut ctx = Context::new()?;
+    let tables = match id {
+        "1" | "table1" => vec![tables::table1(&mut ctx)?],
+        "2" | "table2" => vec![tables::table2(&mut ctx)?],
+        "3" | "table3" => vec![tables::table3(&mut ctx)?],
+        "4" | "table4" => vec![tables::table4(&mut ctx)?],
+        "5" | "table5" => vec![tables::table5(&mut ctx)?],
+        "6" | "table6" => vec![tables::table6(&mut ctx)?],
+        "7" | "table7" => vec![tables::table7(&mut ctx)?],
+        "8" | "table8" => vec![tables::table8(&mut ctx)?],
+        "fig1" => vec![figures::fig1(&mut ctx)?],
+        "fig2" | "fig6" => figures::fig2_fig6(&mut ctx)?,
+        "fig3" => vec![figures::fig3(&mut ctx)?],
+        "all" => {
+            let mut out = Vec::new();
+            for i in 1..=8 {
+                out.extend(run(&i.to_string())?);
+            }
+            out.extend(run("fig1")?);
+            out.extend(run("fig2")?);
+            out.extend(run("fig3")?);
+            return Ok(out);
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    };
+    for t in &tables {
+        t.print();
+    }
+    Ok(tables)
+}

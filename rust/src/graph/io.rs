@@ -1,0 +1,414 @@
+//! `.dfqm` model and `.dfqd` dataset container IO.
+//!
+//! Format (little-endian, see python/compile/dfqm.py — the writer):
+//! magic(4) | version u32 | hdr_len u64 | JSON header | 64-byte-aligned
+//! raw blobs at header-recorded offsets relative to the blob base.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ActKind, Model, Node, Op, Task};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+const ALIGN: usize = 64;
+
+fn pad(n: usize) -> usize {
+    (ALIGN - n % ALIGN) % ALIGN
+}
+
+/// Raw parsed container.
+pub struct Container {
+    pub magic: [u8; 4],
+    pub header: Json,
+    data: Vec<u8>,
+    blob_base: usize,
+}
+
+impl Container {
+    pub fn open(path: &Path) -> Result<Container> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if data.len() < 16 {
+            bail!("{}: truncated container", path.display());
+        }
+        let magic: [u8; 4] = data[0..4].try_into().unwrap();
+        if &magic != b"DFQM" && &magic != b"DFQD" {
+            bail!("{}: bad magic {:?}", path.display(), magic);
+        }
+        let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+        if version != 1 {
+            bail!("unsupported container version {version}");
+        }
+        let hdr_len =
+            u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+        let header = Json::parse(
+            std::str::from_utf8(&data[16..16 + hdr_len])
+                .context("header not UTF-8")?,
+        )?;
+        let blob_base = 16 + hdr_len + pad(16 + hdr_len);
+        Ok(Container { magic, header, data, blob_base })
+    }
+
+    /// Read one f32 array by table entry.
+    pub fn f32_array(&self, meta: &Json) -> Result<(Vec<usize>, Vec<f32>)> {
+        let shape = meta.req("shape")?.as_shape()?;
+        let dtype = meta.req("dtype")?.as_str()?;
+        if dtype != "f32" {
+            bail!("expected f32 array, got {dtype}");
+        }
+        let off = self.blob_base + meta.req("offset")?.as_usize()?;
+        let count: usize = shape.iter().product::<usize>().max(1);
+        let bytes = &self.data[off..off + 4 * count];
+        let mut out = Vec::with_capacity(count);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok((shape, out))
+    }
+
+    /// Read one i32 array by table entry.
+    pub fn i32_array(&self, meta: &Json) -> Result<(Vec<usize>, Vec<i32>)> {
+        let shape = meta.req("shape")?.as_shape()?;
+        let dtype = meta.req("dtype")?.as_str()?;
+        if dtype != "i32" {
+            bail!("expected i32 array, got {dtype}");
+        }
+        let off = self.blob_base + meta.req("offset")?.as_usize()?;
+        let count: usize = shape.iter().product::<usize>().max(1);
+        let bytes = &self.data[off..off + 4 * count];
+        let mut out = Vec::with_capacity(count);
+        for c in bytes.chunks_exact(4) {
+            out.push(i32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok((shape, out))
+    }
+}
+
+fn parse_node(j: &Json) -> Result<Node> {
+    let id = j.req("id")?.as_usize()?;
+    let inputs: Vec<usize> = j
+        .req("inputs")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect::<Result<_>>()?;
+    let op = match j.req("op")?.as_str()? {
+        "input" => Op::Input,
+        "conv" => Op::Conv {
+            w: j.req("w")?.as_str()?.to_string(),
+            b: match j.req("b")? {
+                Json::Null => None,
+                v => Some(v.as_str()?.to_string()),
+            },
+            in_ch: j.req("in_ch")?.as_usize()?,
+            out_ch: j.req("out_ch")?.as_usize()?,
+            k: j.req("k")?.as_usize()?,
+            stride: j.req("stride")?.as_usize()?,
+            pad: j.req("pad")?.as_usize()?,
+            groups: j.req("groups")?.as_usize()?,
+        },
+        "bn" => Op::BatchNorm {
+            ch: j.req("ch")?.as_usize()?,
+            gamma: j.req("gamma")?.as_str()?.to_string(),
+            beta: j.req("beta")?.as_str()?.to_string(),
+            mean: j.req("mean")?.as_str()?.to_string(),
+            var: j.req("var")?.as_str()?.to_string(),
+        },
+        "act" => Op::Act(ActKind::parse(j.req("kind")?.as_str()?)?),
+        "add" => Op::Add,
+        "gap" => Op::Gap,
+        "linear" => Op::Linear {
+            w: j.req("w")?.as_str()?.to_string(),
+            b: j.req("b")?.as_str()?.to_string(),
+            in_dim: j.req("in_dim")?.as_usize()?,
+            out_dim: j.req("out_dim")?.as_usize()?,
+        },
+        "upsample" => Op::Upsample { factor: j.req("factor")?.as_usize()? },
+        other => bail!("unknown op '{other}'"),
+    };
+    Ok(Node { id, inputs, op })
+}
+
+fn node_to_json(n: &Node) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("id".into(), Json::Num(n.id as f64));
+    m.insert(
+        "inputs".into(),
+        Json::Arr(n.inputs.iter().map(|&i| Json::Num(i as f64)).collect()),
+    );
+    let s = |v: &str| Json::Str(v.to_string());
+    let num = |v: usize| Json::Num(v as f64);
+    match &n.op {
+        Op::Input => {
+            m.insert("op".into(), s("input"));
+        }
+        Op::Conv { w, b, in_ch, out_ch, k, stride, pad, groups } => {
+            m.insert("op".into(), s("conv"));
+            m.insert("w".into(), s(w));
+            m.insert(
+                "b".into(),
+                b.as_ref().map(|x| s(x)).unwrap_or(Json::Null),
+            );
+            m.insert("in_ch".into(), num(*in_ch));
+            m.insert("out_ch".into(), num(*out_ch));
+            m.insert("k".into(), num(*k));
+            m.insert("stride".into(), num(*stride));
+            m.insert("pad".into(), num(*pad));
+            m.insert("groups".into(), num(*groups));
+        }
+        Op::BatchNorm { ch, gamma, beta, mean, var } => {
+            m.insert("op".into(), s("bn"));
+            m.insert("ch".into(), num(*ch));
+            m.insert("gamma".into(), s(gamma));
+            m.insert("beta".into(), s(beta));
+            m.insert("mean".into(), s(mean));
+            m.insert("var".into(), s(var));
+        }
+        Op::Act(kind) => {
+            m.insert("op".into(), s("act"));
+            m.insert("kind".into(), s(kind.as_str()));
+        }
+        Op::Add => {
+            m.insert("op".into(), s("add"));
+        }
+        Op::Gap => {
+            m.insert("op".into(), s("gap"));
+        }
+        Op::Linear { w, b, in_dim, out_dim } => {
+            m.insert("op".into(), s("linear"));
+            m.insert("w".into(), s(w));
+            m.insert("b".into(), s(b));
+            m.insert("in_dim".into(), num(*in_dim));
+            m.insert("out_dim".into(), num(*out_dim));
+        }
+        Op::Upsample { factor } => {
+            m.insert("op".into(), s("upsample"));
+            m.insert("factor".into(), num(*factor));
+        }
+    }
+    Json::Obj(m)
+}
+
+impl Model {
+    /// Load a model from a `.dfqm` container.
+    pub fn load(path: impl AsRef<Path>) -> Result<Model> {
+        let c = Container::open(path.as_ref())?;
+        if &c.magic != b"DFQM" {
+            bail!("not a model container");
+        }
+        let h = &c.header;
+        let nodes: Vec<Node> = h
+            .req("nodes")?
+            .as_arr()?
+            .iter()
+            .map(parse_node)
+            .collect::<Result<_>>()?;
+        let outputs: Vec<usize> = h
+            .req("outputs")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?;
+        let ishape = h.req("input_shape")?.as_shape()?;
+        if ishape.len() != 3 {
+            bail!("input_shape must be [C, H, W]");
+        }
+        let mut tensors = BTreeMap::new();
+        for (name, meta) in h.req("tensors")?.as_obj()? {
+            let (shape, data) = c.f32_array(meta)?;
+            tensors.insert(name.clone(), Tensor::new(&shape, data));
+        }
+        let meta = match h.get("meta") {
+            Some(Json::Obj(m)) => m.clone(),
+            _ => BTreeMap::new(),
+        };
+        // A folded model has no bn nodes; re-derive stats saved in meta.
+        let folded = !nodes.iter().any(|n| matches!(n.op, Op::BatchNorm { .. }));
+        let mut act_stats = HashMap::new();
+        if let Some(Json::Obj(st)) = meta.get("act_stats") {
+            for (k, v) in st {
+                let id: usize = k.parse().context("act_stats key")?;
+                let mean = v.req("mean")?.as_arr()?.iter()
+                    .map(|x| x.as_f64().map(|f| f as f32))
+                    .collect::<Result<Vec<_>>>()?;
+                let std = v.req("std")?.as_arr()?.iter()
+                    .map(|x| x.as_f64().map(|f| f as f32))
+                    .collect::<Result<Vec<_>>>()?;
+                act_stats.insert(id, super::ChannelStats { mean, std });
+            }
+        }
+        let model = Model {
+            name: h.req("name")?.as_str()?.to_string(),
+            task: Task::parse(h.req("task")?.as_str()?)?,
+            input_shape: [ishape[0], ishape[1], ishape[2]],
+            num_classes: h.req("num_classes")?.as_usize()?,
+            nodes,
+            outputs,
+            tensors,
+            meta,
+            act_stats,
+            folded,
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Save the model back to a `.dfqm` container (graph as-is; folded
+    /// models round-trip too — the loader re-derives `folded` from the
+    /// absence of bn nodes via [`Model::load`] + meta flag).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut header = BTreeMap::new();
+        header.insert("kind".into(), Json::Str("model".into()));
+        header.insert("name".into(), Json::Str(self.name.clone()));
+        header.insert("task".into(), Json::Str(self.task.as_str().into()));
+        header.insert(
+            "input_shape".into(),
+            Json::Arr(
+                self.input_shape
+                    .iter()
+                    .map(|&d| Json::Num(d as f64))
+                    .collect(),
+            ),
+        );
+        header.insert(
+            "num_classes".into(),
+            Json::Num(self.num_classes as f64),
+        );
+        header.insert(
+            "nodes".into(),
+            Json::Arr(self.nodes.iter().map(node_to_json).collect()),
+        );
+        header.insert(
+            "outputs".into(),
+            Json::Arr(
+                self.outputs.iter().map(|&o| Json::Num(o as f64)).collect(),
+            ),
+        );
+        let mut meta = self.meta.clone();
+        if !self.act_stats.is_empty() {
+            let mut st = BTreeMap::new();
+            for (id, cs) in &self.act_stats {
+                let mut o = BTreeMap::new();
+                o.insert(
+                    "mean".into(),
+                    Json::Arr(cs.mean.iter()
+                        .map(|&x| Json::Num(x as f64)).collect()),
+                );
+                o.insert(
+                    "std".into(),
+                    Json::Arr(cs.std.iter()
+                        .map(|&x| Json::Num(x as f64)).collect()),
+                );
+                st.insert(id.to_string(), Json::Obj(o));
+            }
+            meta.insert("act_stats".into(), Json::Obj(st));
+        }
+        if !meta.is_empty() {
+            header.insert("meta".into(), Json::Obj(meta));
+        }
+
+        let mut table = BTreeMap::new();
+        let mut blobs: Vec<&[f32]> = Vec::new();
+        let mut off = 0usize;
+        for (name, t) in &self.tensors {
+            let mut m = BTreeMap::new();
+            m.insert(
+                "shape".into(),
+                Json::Arr(
+                    t.shape().iter().map(|&d| Json::Num(d as f64)).collect(),
+                ),
+            );
+            m.insert("dtype".into(), Json::Str("f32".into()));
+            m.insert("offset".into(), Json::Num(off as f64));
+            table.insert(name.clone(), Json::Obj(m));
+            let bytes = t.len() * 4;
+            off += bytes + pad(bytes);
+            blobs.push(t.data());
+        }
+        header.insert("tensors".into(), Json::Obj(table));
+
+        let hdr = Json::Obj(header).to_string().into_bytes();
+        let mut out = Vec::new();
+        out.extend_from_slice(b"DFQM");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(hdr.len() as u64).to_le_bytes());
+        out.extend_from_slice(&hdr);
+        out.resize(out.len() + pad(16 + hdr.len()), 0);
+        for blob in blobs {
+            let start = out.len();
+            for &x in blob {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            out.resize(out.len() + pad(out.len() - start), 0);
+        }
+        std::fs::write(path.as_ref(), out)
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+}
+
+/// A loaded evaluation dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub task: Task,
+    /// Images (N, C, H, W).
+    pub x: Tensor,
+    /// Classification / segmentation labels (flattened).
+    pub labels: Vec<i32>,
+    pub label_shape: Vec<usize>,
+    /// Detection ground truth (N, MAX_OBJ, 5): [cls, x1, y1, x2, y2].
+    pub boxes: Option<Tensor>,
+}
+
+impl Dataset {
+    pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+        let c = Container::open(path.as_ref())?;
+        if &c.magic != b"DFQD" {
+            bail!("not a dataset container");
+        }
+        let h = &c.header;
+        let arrays = h.req("arrays")?.as_obj()?;
+        let (xs, xd) = c.f32_array(
+            arrays.get("x").context("dataset missing 'x'")?,
+        )?;
+        let task = Task::parse(h.req("task")?.as_str()?)?;
+        let (labels, label_shape, boxes) = if task == Task::Detection {
+            let (bs, bd) = c.f32_array(
+                arrays.get("boxes").context("missing 'boxes'")?,
+            )?;
+            (Vec::new(), Vec::new(), Some(Tensor::new(&bs, bd)))
+        } else {
+            let (ls, ld) = c.i32_array(
+                arrays.get("y").context("missing 'y'")?,
+            )?;
+            (ld, ls, None)
+        };
+        Ok(Dataset {
+            name: h.req("name")?.as_str()?.to_string(),
+            task,
+            x: Tensor::new(&xs, xd),
+            labels,
+            label_shape,
+            boxes,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.dim(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy a [lo, hi) batch of images.
+    pub fn batch(&self, lo: usize, hi: usize) -> Tensor {
+        let per: usize = self.x.shape()[1..].iter().product();
+        let mut shape = self.x.shape().to_vec();
+        shape[0] = hi - lo;
+        Tensor::new(&shape, self.x.data()[lo * per..hi * per].to_vec())
+    }
+}

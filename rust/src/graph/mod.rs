@@ -1,0 +1,308 @@
+//! Model graph IR — an SSA node list mirroring `python/compile/specs.py`.
+//!
+//! The IR is the substrate every DFQ pass operates on: nodes reference
+//! named weight tensors held in [`Model::tensors`]; node ids are stable
+//! across passes (BN folding removes nodes but never renumbers), so the
+//! AOT executable argument order derived here matches the python side by
+//! construction (validated against the artifact manifest at load time).
+
+pub mod io;
+pub mod stats;
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// The evaluation task of a model (drives dataset + metric selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Classification,
+    Segmentation,
+    Detection,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Result<Task> {
+        Ok(match s {
+            "classification" => Task::Classification,
+            "segmentation" => Task::Segmentation,
+            "detection" => Task::Detection,
+            _ => bail!("unknown task '{s}'"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Task::Classification => "classification",
+            Task::Segmentation => "segmentation",
+            Task::Detection => "detection",
+        }
+    }
+}
+
+/// Activation kinds appearing in the zoo.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActKind {
+    Relu,
+    Relu6,
+}
+
+impl ActKind {
+    pub fn parse(s: &str) -> Result<ActKind> {
+        Ok(match s {
+            "relu" => ActKind::Relu,
+            "relu6" => ActKind::Relu6,
+            _ => bail!("unknown activation '{s}'"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ActKind::Relu => "relu",
+            ActKind::Relu6 => "relu6",
+        }
+    }
+
+    /// Upper clip value (`f32::INFINITY` for plain ReLU).
+    pub fn clip_hi(&self) -> f32 {
+        match self {
+            ActKind::Relu => f32::INFINITY,
+            ActKind::Relu6 => 6.0,
+        }
+    }
+}
+
+/// Graph operations. Convolution weights are OIHW; linear weights [O, I].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Input,
+    Conv {
+        w: String,
+        b: Option<String>,
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    },
+    BatchNorm {
+        ch: usize,
+        gamma: String,
+        beta: String,
+        mean: String,
+        var: String,
+    },
+    Act(ActKind),
+    Add,
+    Gap,
+    Linear {
+        w: String,
+        b: String,
+        in_dim: usize,
+        out_dim: usize,
+    },
+    Upsample {
+        factor: usize,
+    },
+}
+
+impl Op {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Conv { .. } => "conv",
+            Op::BatchNorm { .. } => "bn",
+            Op::Act(_) => "act",
+            Op::Add => "add",
+            Op::Gap => "gap",
+            Op::Linear { .. } => "linear",
+            Op::Upsample { .. } => "upsample",
+        }
+    }
+
+    /// Is this a depthwise convolution?
+    pub fn is_depthwise(&self) -> bool {
+        matches!(self, Op::Conv { groups, in_ch, .. }
+            if *groups > 1 && groups == in_ch)
+    }
+}
+
+/// One SSA node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: usize,
+    pub inputs: Vec<usize>,
+    pub op: Op,
+}
+
+/// Per-channel Gaussian statistics of a conv's pre-activation output,
+/// carried from the folded BatchNorm parameters (mean = β, std = |γ|)
+/// and kept up to date by every DFQ pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelStats {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+/// A model: graph + named weight tensors + metadata.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub task: Task,
+    pub input_shape: [usize; 3],
+    pub num_classes: usize,
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<usize>,
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: BTreeMap<String, Json>,
+    /// conv node id -> pre-activation stats (populated by BN folding).
+    pub act_stats: HashMap<usize, ChannelStats>,
+    /// True once BatchNorm has been folded away.
+    pub folded: bool,
+}
+
+impl Model {
+    pub fn node(&self, id: usize) -> &Node {
+        self.nodes.iter().find(|n| n.id == id).expect("node id")
+    }
+
+    pub fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes.iter_mut().find(|n| n.id == id).expect("node id")
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("missing tensor '{name}'"))
+    }
+
+    pub fn tensor_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.tensors
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("missing tensor '{name}'"))
+    }
+
+    /// Nodes consuming the output of `id`, in node order.
+    pub fn consumers(&self, id: usize) -> Vec<&Node> {
+        self.nodes.iter().filter(|n| n.inputs.contains(&id)).collect()
+    }
+
+    /// All conv/linear nodes in order (the quantizable layers).
+    pub fn layers(&self) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv { .. } | Op::Linear { .. }))
+            .collect()
+    }
+
+    /// Weight-argument order of the AOT executable (DESIGN.md §3):
+    /// `[w, b]` per conv/linear in node order. Requires a folded model.
+    pub fn weight_args(&self) -> Vec<String> {
+        assert!(self.folded, "weight_args requires a folded model");
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv { w, b, .. } => {
+                    out.push(w.clone());
+                    out.push(b.clone().expect("folded conv has bias"));
+                }
+                Op::Linear { w, b, .. } => {
+                    out.push(w.clone());
+                    out.push(b.clone());
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Activation quantisation sites: index 0 = model input, then every
+    /// act/add node in node order (folded graph).
+    pub fn act_sites(&self) -> Vec<Site> {
+        assert!(self.folded, "act_sites requires a folded model");
+        let mut sites = vec![Site::Input];
+        for n in &self.nodes {
+            match n.op {
+                Op::Act(kind) => sites.push(Site::Act { node: n.id, kind }),
+                Op::Add => sites.push(Site::Add { node: n.id }),
+                _ => {}
+            }
+        }
+        sites
+    }
+
+    /// Total number of weight parameters.
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+
+    /// Basic structural validation (shapes consistent with ops).
+    pub fn validate(&self) -> Result<()> {
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv { w, b, out_ch, in_ch, k, groups, .. } => {
+                    let wt = self.tensor(w)?;
+                    let want =
+                        [*out_ch, in_ch / groups, *k, *k];
+                    if wt.shape() != want {
+                        bail!("node {}: weight {:?} != {:?}", n.id,
+                              wt.shape(), want);
+                    }
+                    if let Some(b) = b {
+                        if self.tensor(b)?.shape() != [*out_ch] {
+                            bail!("node {}: bad bias shape", n.id);
+                        }
+                    }
+                }
+                Op::Linear { w, b, in_dim, out_dim } => {
+                    if self.tensor(w)?.shape() != [*out_dim, *in_dim] {
+                        bail!("node {}: bad linear weight", n.id);
+                    }
+                    if self.tensor(b)?.shape() != [*out_dim] {
+                        bail!("node {}: bad linear bias", n.id);
+                    }
+                }
+                Op::BatchNorm { ch, gamma, beta, mean, var } => {
+                    for t in [gamma, beta, mean, var] {
+                        if self.tensor(t)?.shape() != [*ch] {
+                            bail!("node {}: bad bn param {t}", n.id);
+                        }
+                    }
+                }
+                _ => {}
+            }
+            for &i in &n.inputs {
+                if !self.nodes.iter().any(|m| m.id == i) {
+                    bail!("node {}: dangling input {i}", n.id);
+                }
+            }
+        }
+        for &o in &self.outputs {
+            if !self.nodes.iter().any(|m| m.id == o) {
+                bail!("dangling output {o}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// An activation fake-quantisation site in the executable contract.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Site {
+    Input,
+    Act { node: usize, kind: ActKind },
+    Add { node: usize },
+}
+
+impl Site {
+    pub fn node_id(&self) -> Option<usize> {
+        match self {
+            Site::Input => None,
+            Site::Act { node, .. } | Site::Add { node } => Some(*node),
+        }
+    }
+}

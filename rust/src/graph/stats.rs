@@ -1,0 +1,215 @@
+//! Data-free Gaussian statistics propagation over a folded graph.
+//!
+//! The paper derives everything data-free from BatchNorm parameters:
+//! conv pre-activations ~ N(β, γ²) per channel (§4.1.3 / §4.2.1). This
+//! module propagates those Gaussians through act / add / gap nodes to
+//! obtain, for **every tensor** in the folded graph:
+//!
+//! * the expected value E[x] per channel — consumed by the analytic bias
+//!   correction (eq. 17), and
+//! * a per-tensor activation range (β ± n·γ, n = 6; §5 experimental
+//!   setup) — consumed by the activation quantiser.
+//!
+//! Residual inputs use the paper's §5.1.2 rule: mean and variance of a
+//! sum of branches is the sum of means and variances.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::{ActKind, ChannelStats, Model, Op};
+use crate::dfq::clipped_normal::{clipped_mean, clipped_var};
+
+/// Per-channel Gaussian description of every tensor in the folded graph.
+#[derive(Debug, Clone)]
+pub struct TensorStats {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+impl TensorStats {
+    fn uniform01(ch: usize) -> TensorStats {
+        // Model input: images in [0, 1]; U(0,1) has mean .5, std 1/sqrt(12).
+        TensorStats {
+            mean: vec![0.5; ch],
+            std: vec![(1.0f32 / 12.0).sqrt(); ch],
+        }
+    }
+}
+
+/// Statistics for every node output (keyed by node id; `usize::MAX` is
+/// unused — the input node is id 0 in every spec).
+pub fn propagate(model: &Model) -> Result<HashMap<usize, TensorStats>> {
+    assert!(model.folded, "stats propagation requires a folded graph");
+    let mut out: HashMap<usize, TensorStats> = HashMap::new();
+    for n in &model.nodes {
+        let st = match &n.op {
+            Op::Input => TensorStats::uniform01(model.input_shape[0]),
+            Op::Conv { out_ch, .. } => {
+                match model.act_stats.get(&n.id) {
+                    Some(ChannelStats { mean, std }) => TensorStats {
+                        mean: mean.clone(),
+                        std: std.clone(),
+                    },
+                    // Head convs without BN: push the input Gaussian
+                    // through the affine layer (independence assumption).
+                    None => conv_pushforward(model, n.id, *out_ch, &out)?,
+                }
+            }
+            Op::Linear { out_dim, .. } => {
+                linear_pushforward(model, n.id, *out_dim, &out)?
+            }
+            Op::Act(kind) => {
+                let x = &out[&n.inputs[0]];
+                let hi = match kind {
+                    ActKind::Relu => f64::INFINITY,
+                    ActKind::Relu6 => 6.0,
+                };
+                let mut mean = Vec::with_capacity(x.mean.len());
+                let mut std = Vec::with_capacity(x.std.len());
+                for c in 0..x.mean.len() {
+                    let (mu, sg) = (x.mean[c] as f64, x.std[c] as f64);
+                    mean.push(clipped_mean(mu, sg, 0.0, hi) as f32);
+                    std.push(clipped_var(mu, sg, 0.0, hi).sqrt() as f32);
+                }
+                TensorStats { mean, std }
+            }
+            Op::Add => {
+                let a = &out[&n.inputs[0]];
+                let b = &out[&n.inputs[1]];
+                TensorStats {
+                    mean: a
+                        .mean
+                        .iter()
+                        .zip(&b.mean)
+                        .map(|(x, y)| x + y)
+                        .collect(),
+                    std: a
+                        .std
+                        .iter()
+                        .zip(&b.std)
+                        .map(|(x, y)| (x * x + y * y).sqrt())
+                        .collect(),
+                }
+            }
+            Op::Gap => {
+                // Spatial averaging keeps the mean; variance shrinks but
+                // gap outputs are not quantisation sites, so the exact
+                // factor is irrelevant — keep it conservative.
+                out[&n.inputs[0]].clone()
+            }
+            Op::Upsample { .. } => out[&n.inputs[0]].clone(),
+            Op::BatchNorm { .. } => unreachable!("folded graph"),
+        };
+        out.insert(n.id, st);
+    }
+    Ok(out)
+}
+
+/// E[y], Std[y] for a conv without BN stats: y = W x + b with x per-channel
+/// Gaussian and channels independent.
+fn conv_pushforward(
+    model: &Model,
+    id: usize,
+    out_ch: usize,
+    stats: &HashMap<usize, TensorStats>,
+) -> Result<TensorStats> {
+    let n = model.node(id);
+    let (w_name, b_name, groups, k) = match &n.op {
+        Op::Conv { w, b, groups, k, .. } => {
+            (w.clone(), b.clone(), *groups, *k)
+        }
+        _ => unreachable!(),
+    };
+    let x = stats
+        .get(&n.inputs[0])
+        .ok_or_else(|| anyhow!("missing input stats for node {id}"))?;
+    let w = model.tensor(&w_name)?;
+    let b = match &b_name {
+        Some(b) => model.tensor(b)?.data().to_vec(),
+        None => vec![0.0; out_ch],
+    };
+    let in_per_group = w.shape()[1];
+    let mut mean = vec![0f32; out_ch];
+    let mut var = vec![0f32; out_ch];
+    let spatial = k * k;
+    for o in 0..out_ch {
+        let ch = w.out_channel(o);
+        let mut m = b[o] as f64;
+        let mut v = 0f64;
+        for i in 0..in_per_group {
+            // map (o, i) to the absolute input channel for grouped convs
+            let ci = if groups == 1 {
+                i
+            } else {
+                o * in_per_group + i // depthwise: in_per_group == 1
+            };
+            let (xm, xs) = (x.mean[ci] as f64, x.std[ci] as f64);
+            for s in 0..spatial {
+                let wv = ch[i * spatial + s] as f64;
+                m += wv * xm;
+                v += wv * wv * xs * xs;
+            }
+        }
+        mean[o] = m as f32;
+        var[o] = v as f32;
+    }
+    Ok(TensorStats { mean, std: var.iter().map(|v| v.sqrt()).collect() })
+}
+
+fn linear_pushforward(
+    model: &Model,
+    id: usize,
+    out_dim: usize,
+    stats: &HashMap<usize, TensorStats>,
+) -> Result<TensorStats> {
+    let n = model.node(id);
+    let (w_name, b_name) = match &n.op {
+        Op::Linear { w, b, .. } => (w.clone(), b.clone()),
+        _ => unreachable!(),
+    };
+    let x = stats
+        .get(&n.inputs[0])
+        .ok_or_else(|| anyhow!("missing input stats for node {id}"))?;
+    let w = model.tensor(&w_name)?;
+    let b = model.tensor(&b_name)?.data();
+    let in_dim = w.shape()[1];
+    let mut mean = vec![0f32; out_dim];
+    let mut std = vec![0f32; out_dim];
+    for o in 0..out_dim {
+        let row = &w.data()[o * in_dim..(o + 1) * in_dim];
+        let mut m = b[o] as f64;
+        let mut v = 0f64;
+        for i in 0..in_dim {
+            m += row[i] as f64 * x.mean[i] as f64;
+            v += (row[i] as f64).powi(2) * (x.std[i] as f64).powi(2);
+        }
+        mean[o] = m as f32;
+        std[o] = v.sqrt() as f32;
+    }
+    Ok(TensorStats { mean, std })
+}
+
+/// Data-free activation range for a quantisation site (paper §5):
+/// per-channel β ± n·γ reduced to a tensor-wide (min, max), with the
+/// minimum clipped by the activation's lower bound.
+pub fn site_range(
+    stats: &TensorStats,
+    n_sigma: f32,
+    clip: Option<(f32, f32)>,
+) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for c in 0..stats.mean.len() {
+        lo = lo.min(stats.mean[c] - n_sigma * stats.std[c]);
+        hi = hi.max(stats.mean[c] + n_sigma * stats.std[c]);
+    }
+    if let Some((a, b)) = clip {
+        lo = lo.max(a);
+        hi = hi.min(b);
+    }
+    if hi <= lo {
+        hi = lo + 1e-6;
+    }
+    (lo, hi)
+}

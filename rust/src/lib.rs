@@ -1,0 +1,49 @@
+//! # dfq — Data-Free Quantization, reproduced as a deployable stack
+//!
+//! Rust implementation of *"Data-Free Quantization Through Weight
+//! Equalization and Bias Correction"* (Nagel et al., ICCV 2019) as a
+//! three-layer system:
+//!
+//! * **Layer 3 (this crate)** — model graph IR, the DFQ compiler passes
+//!   ([`dfq`]), a pure-Rust reference engine ([`nn`]), a PJRT-backed
+//!   runtime ([`runtime`]) executing JAX/Pallas-lowered HLO artifacts,
+//!   a serving coordinator ([`serve`]) and the full evaluation /
+//!   benchmark harness ([`eval`], [`experiments`]).
+//! * **Layer 2/1 (python, build-time only)** — JAX model zoo and the
+//!   fused fake-quant Pallas kernel, AOT-lowered to `artifacts/*.hlo.txt`
+//!   by `make artifacts`. Python never runs on the request path.
+//!
+//! The public API a downstream user touches:
+//!
+//! ```no_run
+//! use dfq::graph::Model;
+//! use dfq::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+//! use dfq::quant::QScheme;
+//!
+//! let model = Model::load("artifacts/micronet_v2.dfqm").unwrap();
+//! let prepared = quantize_data_free(&model, &DfqConfig::default()).unwrap();
+//! let q = prepared
+//!     .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::Analytic, None)
+//!     .unwrap();
+//! # let _ = q;
+//! ```
+
+pub mod dfq;
+pub mod eval;
+pub mod experiments;
+pub mod graph;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{Error, Result};
+
+/// Locate the artifacts directory: `$DFQ_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("DFQ_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,250 @@
+//! `dfq` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   table <1..8|all>      regenerate a paper table
+//!   fig <1|2|3|6>         regenerate a paper figure (CSV series)
+//!   quantize <arch> [...] run the DFQ pipeline, save the quantised model
+//!   eval <arch> [...]     evaluate a model (fp32 / int8 / dfq variants)
+//!   serve <arch> [...]    start the batching server + synthetic load
+//!   inspect <arch>        print model structure + channel-range report
+//!
+//! Hand-rolled argument parsing (no clap in the offline crate set).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context as _, Result};
+
+use dfq::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+use dfq::experiments;
+use dfq::graph::Model;
+use dfq::nn::QuantCfg;
+use dfq::quant::QScheme;
+use dfq::runtime::{Manifest, Runtime};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: dfq <command>\n\
+         \n\
+         commands:\n\
+           table <1..8|all>            regenerate paper table(s)\n\
+           fig <1|2|3|6>               regenerate paper figure CSV\n\
+           quantize <arch> [--bits N] [--bc none|analytic|empirical]\n\
+                    [--per-channel] [--symmetric] [--out FILE]\n\
+           eval <arch> [--mode fp32|baseline|dfq] [--bits N] [--limit N]\n\
+           serve <arch> [--requests N] [--rate R] [--batch N]\n\
+           inspect <arch>\n\
+         \n\
+         env: DFQ_ARTIFACTS (artifacts dir), DFQ_BACKEND=pjrt|engine,\n\
+              DFQ_EVAL_LIMIT, DFQ_RESULTS (results dir)"
+    );
+    std::process::exit(2);
+}
+
+fn flags(rest: &[String]) -> (Vec<&String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut kv = HashMap::new();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = &rest[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let boolean = matches!(name, "per-channel" | "symmetric");
+            if boolean {
+                kv.insert(name.to_string(), "true".to_string());
+            } else {
+                i += 1;
+                kv.insert(
+                    name.to_string(),
+                    rest.get(i).cloned().unwrap_or_default(),
+                );
+            }
+        } else {
+            pos.push(a);
+        }
+        i += 1;
+    }
+    (pos, kv)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else { usage() };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "table" => {
+            let id = rest.first().map(|s| s.as_str()).unwrap_or("all");
+            experiments::run(id)?;
+            Ok(())
+        }
+        "fig" => {
+            let id = rest.first().map(|s| s.as_str()).unwrap_or("1");
+            experiments::run(&format!("fig{id}"))?;
+            Ok(())
+        }
+        "quantize" => cmd_quantize(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "inspect" => cmd_inspect(rest),
+        _ => usage(),
+    }
+}
+
+fn parse_bc(s: &str) -> Result<BiasCorrMode> {
+    Ok(match s {
+        "none" => BiasCorrMode::None,
+        "analytic" => BiasCorrMode::Analytic,
+        "empirical" => BiasCorrMode::Empirical,
+        _ => bail!("unknown bias-correction mode '{s}'"),
+    })
+}
+
+fn cmd_quantize(rest: &[String]) -> Result<()> {
+    let (pos, kv) = flags(rest);
+    let arch = pos.first().context("missing <arch>")?.as_str();
+    let bits: u32 = kv.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let bc = parse_bc(kv.get("bc").map(|s| s.as_str()).unwrap_or("analytic"))?;
+    let manifest = Manifest::load(dfq::artifacts_dir())?;
+    let entry = manifest.arch(arch)?;
+    let model = Model::load(manifest.path(&entry.model))?;
+    println!(
+        "loaded {arch}: {} nodes, {} params",
+        model.nodes.len(),
+        model.param_count()
+    );
+    let prep = quantize_data_free(&model, &DfqConfig::default())?;
+    println!(
+        "DFQ prepare: {} ReLU6 replaced, {} CLE pairs ({} sweeps), \
+         {} channels absorbed",
+        prep.log.relu6_replaced,
+        prep.log.cle_pairs,
+        prep.log.cle_sweeps,
+        prep.log.absorbed_channels
+    );
+    let scheme = QScheme {
+        bits,
+        symmetric: kv.contains_key("symmetric"),
+        per_channel: kv.contains_key("per-channel"),
+    };
+    let calib = match bc {
+        BiasCorrMode::Empirical => {
+            let ds = dfq::graph::io::Dataset::load(
+                manifest.dataset(&entry.task, "calib")?,
+            )?;
+            Some(ds.batch(0, ds.len().min(128)))
+        }
+        _ => None,
+    };
+    let q = prep.quantize(&scheme, bits, bc, calib.as_ref())?;
+    let out = kv
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("{arch}_int{bits}.dfqm"));
+    q.model.save(&out)?;
+    println!("saved quantised model to {out}");
+    Ok(())
+}
+
+fn cmd_eval(rest: &[String]) -> Result<()> {
+    let (pos, kv) = flags(rest);
+    let arch = pos.first().context("missing <arch>")?.as_str();
+    let mode = kv.get("mode").map(|s| s.as_str()).unwrap_or("dfq");
+    let bits: u32 = kv.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    if let Some(l) = kv.get("limit") {
+        std::env::set_var("DFQ_EVAL_LIMIT", l);
+    }
+    let mut ctx = experiments::Context::new()?;
+    let (cfg, scheme, act_bits, bc) = match mode {
+        "fp32" => (
+            DfqConfig::baseline(),
+            QScheme::int8_asymmetric(),
+            0,
+            BiasCorrMode::None,
+        ),
+        "baseline" => (
+            DfqConfig::baseline(),
+            QScheme::int8_asymmetric().with_bits(bits),
+            bits,
+            BiasCorrMode::None,
+        ),
+        "dfq" => (
+            DfqConfig::default(),
+            QScheme::int8_asymmetric().with_bits(bits),
+            bits,
+            BiasCorrMode::Analytic,
+        ),
+        _ => bail!("unknown eval mode '{mode}'"),
+    };
+    let metric = if mode == "fp32" {
+        let model = ctx.model(arch)?;
+        let prep = quantize_data_free(&model, &cfg)?;
+        ctx.eval(arch, &prep.model, &QuantCfg::fp32(&prep.model))?
+    } else {
+        ctx.eval_quant(arch, &cfg, &scheme, act_bits, bc)?
+    };
+    println!("{arch} [{mode}, {bits}-bit]: {:.2}%", 100.0 * metric);
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let (pos, kv) = flags(rest);
+    let arch = pos
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("micronet_v2")
+        .to_string();
+    let requests: usize =
+        kv.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let rate: f64 =
+        kv.get("rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
+    let batch: usize =
+        kv.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    dfq::serve::demo::run_load(&arch, requests, rate, batch)
+}
+
+fn cmd_inspect(rest: &[String]) -> Result<()> {
+    let (pos, _) = flags(rest);
+    let arch = pos.first().context("missing <arch>")?.as_str();
+    let manifest = Manifest::load(dfq::artifacts_dir())?;
+    let entry = manifest.arch(arch)?;
+    let model = Model::load(manifest.path(&entry.model))?;
+    println!(
+        "{arch} ({}) — {} nodes, {} tensors, {} params",
+        entry.task,
+        model.nodes.len(),
+        model.tensors.len(),
+        model.param_count()
+    );
+    let folded = dfq::dfq::bn_fold::fold(&model)?;
+    println!("after folding: {} nodes", folded.nodes.len());
+    let pairs = dfq::dfq::equalize::find_pairs(&folded);
+    println!("CLE pairs: {}", pairs.len());
+    println!("\nper-layer channel precision (eq. 8; min/mean over channels):");
+    for n in folded.layers() {
+        let w = match &n.op {
+            dfq::graph::Op::Conv { w, .. }
+            | dfq::graph::Op::Linear { w, .. } => w,
+            _ => unreachable!(),
+        };
+        let p = dfq::quant::channel_precision(folded.tensor(w)?);
+        let mean: f32 = p.iter().sum::<f32>() / p.len() as f32;
+        let min = p.iter().cloned().fold(f32::INFINITY, f32::min);
+        println!(
+            "  node {:>3} {:<22} min {:.3}  mean {:.3}",
+            n.id, w, min, mean
+        );
+    }
+    // verify the PJRT contract while we're here
+    let rt = Runtime::cpu()?;
+    let exec = rt.load_model_exec(&manifest, arch, 1, &folded)?;
+    println!(
+        "\nPJRT contract OK: {} weight args, {} sites, {} outputs",
+        exec.meta.num_weights, exec.meta.num_sites, exec.meta.num_outputs
+    );
+    Ok(())
+}

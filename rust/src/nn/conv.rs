@@ -1,0 +1,270 @@
+//! Convolutions: an im2col+GEMM fast path and an independent direct
+//! (naive loop) implementation used as its correctness oracle in tests.
+
+use crate::tensor::Tensor;
+use crate::util::parallel;
+
+/// Matrix multiply C[m,n] = A[m,k] @ B[k,n]  (row-major slices).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    {
+        let cells = parallel::as_send_cells(&mut c);
+        parallel::par_chunks(m, |lo, hi| {
+            for i in lo..hi {
+                let arow = &a[i * k..(i + 1) * k];
+                // SAFETY: rows [lo, hi) are written by this chunk only.
+                let crow = unsafe { cells.slice(i * n, n) };
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        });
+    }
+    c
+}
+
+/// conv2d over NCHW input with OIHW weights (stride/pad symmetric),
+/// supporting depthwise (`groups == in_ch`) and dense (`groups == 1`).
+/// im2col + GEMM; bias added per output channel.
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&[f32]>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Tensor {
+    let (n, c_in, h, wd) = dims4(x);
+    let (c_out, cig, kh, kw) = dims4(w);
+    debug_assert_eq!(cig * groups, c_in);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
+
+    if groups == 1 {
+        // im2col: (oh*ow, c_in*kh*kw) per image, GEMM against
+        // (c_in*kh*kw, c_out) reshaped weights.
+        let kdim = c_in * kh * kw;
+        // w is OIHW -> transpose to (kdim, c_out)
+        let mut wt = vec![0f32; kdim * c_out];
+        for o in 0..c_out {
+            let ch = w.out_channel(o);
+            for kk in 0..kdim {
+                wt[kk * c_out + o] = ch[kk];
+            }
+        }
+        let mut col = vec![0f32; oh * ow * kdim];
+        for img in 0..n {
+            im2col(x, img, kh, kw, stride, pad, oh, ow, &mut col);
+            let y = matmul(&col, &wt, oh * ow, kdim, c_out);
+            let od = out.data_mut();
+            let base = img * c_out * oh * ow;
+            for o in 0..c_out {
+                let bias = b.map(|bb| bb[o]).unwrap_or(0.0);
+                for p in 0..oh * ow {
+                    od[base + o * oh * ow + p] = y[p * c_out + o] + bias;
+                }
+            }
+        }
+    } else {
+        // depthwise: direct shifted accumulation (k*k fused multiply-adds)
+        debug_assert_eq!(cig, 1, "only depthwise grouping supported");
+        let od = out.data_mut();
+        let xd = x.data();
+        let wdat = w.data();
+        for img in 0..n {
+            for c in 0..c_in {
+                let xoff = (img * c_in + c) * h * wd;
+                let ooff = (img * c_out + c) * oh * ow;
+                let wch = &wdat[c * kh * kw..(c + 1) * kh * kw];
+                let bias = b.map(|bb| bb[c]).unwrap_or(0.0);
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = bias;
+                        let iy0 = oy * stride;
+                        let ix0 = ox * stride;
+                        for dy in 0..kh {
+                            let iy = iy0 + dy;
+                            if iy < pad || iy >= h + pad {
+                                continue;
+                            }
+                            for dx in 0..kw {
+                                let ix = ix0 + dx;
+                                if ix < pad || ix >= wd + pad {
+                                    continue;
+                                }
+                                acc += xd[xoff + (iy - pad) * wd + (ix - pad)]
+                                    * wch[dy * kw + dx];
+                            }
+                        }
+                        od[ooff + oy * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract im2col patches for one image into `col` laid out as
+/// (oh*ow, c_in*kh*kw) row-major.
+#[allow(clippy::too_many_arguments)]
+fn im2col(
+    x: &Tensor,
+    img: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    col: &mut [f32],
+) {
+    let (_, c_in, h, wd) = dims4(x);
+    let xd = x.data();
+    let kdim = c_in * kh * kw;
+    col.fill(0.0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * kdim;
+            for c in 0..c_in {
+                let xoff = (img * c_in + c) * h * wd;
+                for dy in 0..kh {
+                    let iy = oy * stride + dy;
+                    if iy < pad || iy >= h + pad {
+                        continue;
+                    }
+                    let src = xoff + (iy - pad) * wd;
+                    let dst = row + (c * kh + dy) * kw;
+                    for dx in 0..kw {
+                        let ix = ox * stride + dx;
+                        if ix < pad || ix >= wd + pad {
+                            continue;
+                        }
+                        col[dst + dx] = xd[src + (ix - pad)];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Independent naive conv (triple-checked oracle for property tests).
+pub fn conv2d_direct(
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&[f32]>,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Tensor {
+    let (n, c_in, h, wd) = dims4(x);
+    let (c_out, cig, kh, kw) = dims4(w);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let opg = c_out / groups; // out channels per group
+    let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
+    let od = out.data_mut();
+    let xd = x.data();
+    for img in 0..n {
+        for o in 0..c_out {
+            let g = o / opg;
+            let bias = b.map(|bb| bb[o]).unwrap_or(0.0);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = bias as f64;
+                    for i in 0..cig {
+                        let ci = g * cig + i;
+                        for dy in 0..kh {
+                            for dx in 0..kw {
+                                let iy = (oy * stride + dy) as isize
+                                    - pad as isize;
+                                let ix = (ox * stride + dx) as isize
+                                    - pad as isize;
+                                if iy < 0
+                                    || ix < 0
+                                    || iy >= h as isize
+                                    || ix >= wd as isize
+                                {
+                                    continue;
+                                }
+                                let xv = xd[(img * c_in + ci) * h * wd
+                                    + iy as usize * wd
+                                    + ix as usize];
+                                let wv = w.data()[((o * cig + i) * kh
+                                    + dy)
+                                    * kw
+                                    + dx];
+                                acc += (xv * wv) as f64;
+                            }
+                        }
+                    }
+                    od[(img * c_out + o) * oh * ow + oy * ow + ox] =
+                        acc as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn dims4(t: &Tensor) -> (usize, usize, usize, usize) {
+    let s = t.shape();
+    debug_assert_eq!(s.len(), 4);
+    (s[0], s[1], s[2], s[3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        Tensor::new(shape, rng.normal_vec(shape.iter().product(), 1.0))
+    }
+
+    #[test]
+    fn im2col_matches_direct_dense() {
+        let mut rng = Rng::new(5);
+        for (stride, pad, k) in [(1, 1, 3), (2, 1, 3), (1, 0, 1), (2, 0, 1)] {
+            let x = rand_tensor(&mut rng, &[2, 3, 8, 8]);
+            let w = rand_tensor(&mut rng, &[4, 3, k, k]);
+            let b: Vec<f32> = rng.normal_vec(4, 1.0);
+            let got = conv2d(&x, &w, Some(&b), stride, pad, 1);
+            let want = conv2d_direct(&x, &w, Some(&b), stride, pad, 1);
+            assert_eq!(got.shape(), want.shape());
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "s={stride} p={pad} k={k}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn depthwise_matches_direct() {
+        let mut rng = Rng::new(6);
+        for stride in [1, 2] {
+            let x = rand_tensor(&mut rng, &[2, 6, 8, 8]);
+            let w = rand_tensor(&mut rng, &[6, 1, 3, 3]);
+            let b: Vec<f32> = rng.normal_vec(6, 1.0);
+            let got = conv2d(&x, &w, Some(&b), stride, 1, 6);
+            let want = conv2d_direct(&x, &w, Some(&b), stride, 1, 6);
+            assert!(got.max_abs_diff(&want) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = [1., 2., 3., 4.];
+        let b = [1., 0., 0., 1.];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![1., 2., 3., 4.]);
+    }
+}

@@ -1,0 +1,183 @@
+//! Pure-Rust reference engine over the folded graph.
+//!
+//! Implements exactly the executable contract of DESIGN.md §3 (the same
+//! semantics the AOT-lowered JAX/Pallas graph executes on PJRT), so it
+//! serves as (a) the correctness oracle for the runtime, (b) the
+//! substrate for the empirical bias-correction pass (needs per-layer
+//! pre-activation means), and (c) a PJRT-free fallback engine.
+
+pub mod conv;
+pub mod ops;
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::graph::{Model, Op, Site};
+use crate::tensor::Tensor;
+
+/// Per-site activation quantisation row: `(scale, zero_point, n_levels,
+/// clip_hi)` — one row per [`Model::act_sites`] entry, `n_levels == 0`
+/// disables fake-quant at that site (FP32 eval).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SiteCfg {
+    pub scale: f32,
+    pub zero_point: f32,
+    pub n_levels: f32,
+    pub clip_hi: f32,
+}
+
+impl SiteCfg {
+    pub fn fp32(clip_hi: f32) -> SiteCfg {
+        SiteCfg { scale: 1.0, zero_point: 0.0, n_levels: 0.0, clip_hi }
+    }
+}
+
+/// Full activation-quantisation configuration for one executable call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantCfg {
+    pub rows: Vec<SiteCfg>,
+}
+
+impl QuantCfg {
+    /// FP32 passthrough: no fake-quant anywhere, clip bounds follow the
+    /// activation kinds in the graph.
+    pub fn fp32(model: &Model) -> QuantCfg {
+        let rows = model
+            .act_sites()
+            .iter()
+            .map(|s| match s {
+                Site::Input => SiteCfg::fp32(f32::INFINITY),
+                Site::Act { kind, .. } => SiteCfg::fp32(kind.clip_hi()),
+                Site::Add { .. } => SiteCfg::fp32(f32::INFINITY),
+            })
+            .collect();
+        QuantCfg { rows }
+    }
+
+    /// Flatten to the f32[S, 4] layout of the PJRT executable argument.
+    /// Infinite clip bounds map to 1e30 (matches the python lowering).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.rows.len() * 4);
+        for r in &self.rows {
+            v.push(r.scale);
+            v.push(r.zero_point);
+            v.push(r.n_levels);
+            v.push(if r.clip_hi.is_finite() { r.clip_hi } else { 1e30 });
+        }
+        v
+    }
+}
+
+/// Run the folded graph on a batch; returns the output tensors.
+pub fn forward(model: &Model, x: &Tensor, cfg: &QuantCfg) -> Result<Vec<Tensor>> {
+    let vals = forward_collect(model, x, cfg)?;
+    Ok(model.outputs.iter().map(|o| vals[o].clone()).collect())
+}
+
+/// Run the folded graph keeping every node output (instrumented mode —
+/// used by empirical bias correction and engine cross-checks).
+pub fn forward_collect(
+    model: &Model,
+    x: &Tensor,
+    cfg: &QuantCfg,
+) -> Result<HashMap<usize, Tensor>> {
+    assert!(model.folded, "engine requires a folded model");
+    let sites = model.act_sites();
+    debug_assert_eq!(sites.len(), cfg.rows.len(), "QuantCfg row mismatch");
+    let site_of = |id: usize| -> Option<usize> {
+        sites.iter().position(|s| s.node_id() == Some(id))
+    };
+
+    let mut vals: HashMap<usize, Tensor> = HashMap::new();
+    let mut x0 = x.clone();
+    let r0 = cfg.rows[0];
+    ops::fake_quant(&mut x0, r0.scale, r0.zero_point, r0.n_levels);
+    vals.insert(0, x0);
+
+    for n in &model.nodes {
+        let y = match &n.op {
+            Op::Input => continue,
+            Op::Conv { w, b, stride, pad, groups, .. } => {
+                let xin = &vals[&n.inputs[0]];
+                let wt = model.tensor(w)?;
+                let bias = match b {
+                    Some(b) => Some(model.tensor(b)?.data()),
+                    None => None,
+                };
+                conv::conv2d(xin, wt, bias, *stride, *pad, *groups)
+            }
+            Op::Act(_) => {
+                let row = cfg.rows[site_of(n.id).expect("act site")];
+                let mut t = vals[&n.inputs[0]].clone();
+                ops::clip_act(&mut t, row.clip_hi);
+                ops::fake_quant(&mut t, row.scale, row.zero_point, row.n_levels);
+                t
+            }
+            Op::Add => {
+                let row = cfg.rows[site_of(n.id).expect("add site")];
+                let mut t =
+                    ops::add(&vals[&n.inputs[0]], &vals[&n.inputs[1]]);
+                ops::fake_quant(&mut t, row.scale, row.zero_point, row.n_levels);
+                t
+            }
+            Op::Gap => ops::global_avg_pool(&vals[&n.inputs[0]]),
+            Op::Linear { w, b, .. } => {
+                let wt = model.tensor(w)?;
+                let bias = model.tensor(b)?.data();
+                ops::linear(&vals[&n.inputs[0]], wt, bias)
+            }
+            Op::Upsample { factor } => {
+                ops::upsample_nearest(&vals[&n.inputs[0]], *factor)
+            }
+            Op::BatchNorm { .. } => {
+                unreachable!("folded model has no bn nodes")
+            }
+        };
+        vals.insert(n.id, y);
+    }
+    Ok(vals)
+}
+
+/// Per-layer *pre-activation* channel means over a batch: conv/linear
+/// node id -> per-out-channel mean. The instrumentation the empirical
+/// bias-correction procedure (paper appendix D) consumes.
+pub fn preact_channel_means(
+    model: &Model,
+    x: &Tensor,
+    cfg: &QuantCfg,
+) -> Result<HashMap<usize, Vec<f32>>> {
+    let vals = forward_collect(model, x, cfg)?;
+    let mut out = HashMap::new();
+    for n in &model.nodes {
+        match &n.op {
+            Op::Conv { out_ch, .. } => {
+                let t = &vals[&n.id];
+                let s = t.shape();
+                out.insert(
+                    n.id,
+                    crate::util::stats::channel_means(
+                        t.data(),
+                        s[0],
+                        *out_ch,
+                        s[2] * s[3],
+                    ),
+                );
+            }
+            Op::Linear { out_dim, .. } => {
+                let t = &vals[&n.id];
+                out.insert(
+                    n.id,
+                    crate::util::stats::channel_means(
+                        t.data(),
+                        t.shape()[0],
+                        *out_dim,
+                        1,
+                    ),
+                );
+            }
+            _ => {}
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,157 @@
+//! Elementwise / pooling ops + the fake-quantisation primitive.
+//!
+//! `fake_quant` must agree bit-for-bit with the Pallas kernel's epilogue
+//! (python/compile/kernels/ref.py): divide by scale, round ties-to-even,
+//! clamp to [0, n_levels-1], undo the affine map.
+
+use crate::tensor::Tensor;
+
+/// Quantize-dequantize a value on an affine grid. `n_levels <= 0` is the
+/// identity (used to disable activation quantisation per site).
+#[inline]
+pub fn fake_quant_scalar(x: f32, scale: f32, zp: f32, n_levels: f32) -> f32 {
+    if n_levels <= 0.0 {
+        return x;
+    }
+    let q = (x / scale).round_ties_even() + zp;
+    let q = q.clamp(0.0, (n_levels - 1.0).max(1.0));
+    (q - zp) * scale
+}
+
+/// In-place fake-quant over a tensor.
+pub fn fake_quant(t: &mut Tensor, scale: f32, zp: f32, n_levels: f32) {
+    if n_levels <= 0.0 {
+        return;
+    }
+    for x in t.data_mut() {
+        *x = fake_quant_scalar(*x, scale, zp, n_levels);
+    }
+}
+
+/// Clipped-linear activation: clamp(x, 0, hi). `hi = inf` is plain ReLU.
+pub fn clip_act(t: &mut Tensor, hi: f32) {
+    for x in t.data_mut() {
+        *x = x.clamp(0.0, hi);
+    }
+}
+
+/// Elementwise sum (same shapes).
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    Tensor::new(
+        a.shape(),
+        a.data().iter().zip(b.data()).map(|(x, y)| x + y).collect(),
+    )
+}
+
+/// Global average pool (N, C, H, W) -> (N, C).
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let s = x.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let spatial = h * w;
+    let mut out = Tensor::zeros(&[n, c]);
+    let od = out.data_mut();
+    let xd = x.data();
+    for i in 0..n {
+        for ch in 0..c {
+            let base = (i * c + ch) * spatial;
+            let mut acc = 0f64;
+            for p in 0..spatial {
+                acc += xd[base + p] as f64;
+            }
+            od[i * c + ch] = (acc / spatial as f64) as f32;
+        }
+    }
+    out
+}
+
+/// Nearest-neighbour upsample by an integer factor (N, C, H, W).
+pub fn upsample_nearest(x: &Tensor, f: usize) -> Tensor {
+    let s = x.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let (oh, ow) = (h * f, w * f);
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    let od = out.data_mut();
+    let xd = x.data();
+    for i in 0..n * c {
+        let xoff = i * h * w;
+        let ooff = i * oh * ow;
+        for oy in 0..oh {
+            let iy = oy / f;
+            for ox in 0..ow {
+                od[ooff + oy * ow + ox] = xd[xoff + iy * w + ox / f];
+            }
+        }
+    }
+    out
+}
+
+/// Linear layer y[n, o] = x[n, i] @ w[o, i]^T + b[o].
+pub fn linear(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
+    let (n, in_dim) = (x.shape()[0], x.shape()[1]);
+    let out_dim = w.shape()[0];
+    debug_assert_eq!(w.shape()[1], in_dim);
+    let mut out = Tensor::zeros(&[n, out_dim]);
+    let od = out.data_mut();
+    for i in 0..n {
+        let xrow = &x.data()[i * in_dim..(i + 1) * in_dim];
+        for o in 0..out_dim {
+            let wrow = &w.data()[o * in_dim..(o + 1) * in_dim];
+            let mut acc = b[o] as f64;
+            for k in 0..in_dim {
+                acc += (xrow[k] * wrow[k]) as f64;
+            }
+            od[i * out_dim + o] = acc as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_quant_grid() {
+        // INT8 asymmetric grid [0, 255], scale .1, zp 10
+        let y = fake_quant_scalar(0.5, 0.1, 10.0, 256.0);
+        assert!((y - 0.5).abs() < 1e-6);
+        // clamps below zero-point floor
+        let y = fake_quant_scalar(-5.0, 0.1, 10.0, 256.0);
+        assert!((y - (-1.0)).abs() < 1e-6); // q clamps to 0 -> (0-10)*.1
+        // identity when disabled
+        assert_eq!(fake_quant_scalar(0.1234, 0.1, 0.0, 0.0), 0.1234);
+    }
+
+    #[test]
+    fn fake_quant_ties_even() {
+        // x/s = 0.5 rounds to 0 (ties-to-even), 1.5 rounds to 2
+        assert_eq!(fake_quant_scalar(0.5, 1.0, 0.0, 16.0), 0.0);
+        assert_eq!(fake_quant_scalar(1.5, 1.0, 0.0, 16.0), 2.0);
+    }
+
+    #[test]
+    fn pool_and_upsample() {
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(global_avg_pool(&x).data(), &[2.5]);
+        let u = upsample_nearest(&x, 2);
+        assert_eq!(u.shape(), &[1, 1, 4, 4]);
+        assert_eq!(u.data()[0..4], [1., 1., 2., 2.]);
+        assert_eq!(u.data()[12..16], [3., 3., 4., 4.]);
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let x = Tensor::new(&[1, 3], vec![1., 2., 3.]);
+        let w = Tensor::new(&[2, 3], vec![1., 0., 0., 0., 1., 1.]);
+        let y = linear(&x, &w, &[10.0, 20.0]);
+        assert_eq!(y.data(), &[11.0, 25.0]);
+    }
+
+    #[test]
+    fn clip_act_relu6() {
+        let mut t = Tensor::from_vec(vec![-1.0, 3.0, 9.0]);
+        clip_act(&mut t, 6.0);
+        assert_eq!(t.data(), &[0.0, 3.0, 6.0]);
+    }
+}

@@ -1,0 +1,188 @@
+//! Fixed-point quantisation core: schemes, grid parameters, fake-quant.
+//!
+//! Follows the paper's §5 setup: asymmetric per-tensor quantisation by
+//! default, ranges = min/max of the weight tensor; symmetric and
+//! per-channel variants for the appendix-E comparisons. The integer grid
+//! is expressed as `q ∈ [0, n_levels-1]` with a float zero-point so the
+//! same `(scale, zp, n)` triple drives the Rust engine, the PJRT
+//! executable argument, and the Pallas kernel epilogue.
+
+pub mod ranges;
+
+use crate::tensor::Tensor;
+
+/// A quantisation scheme for weights or activations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QScheme {
+    pub bits: u32,
+    pub symmetric: bool,
+    pub per_channel: bool,
+}
+
+impl QScheme {
+    pub fn int8_asymmetric() -> QScheme {
+        QScheme { bits: 8, symmetric: false, per_channel: false }
+    }
+
+    pub fn int8_symmetric() -> QScheme {
+        QScheme { bits: 8, symmetric: true, per_channel: false }
+    }
+
+    pub fn per_channel(bits: u32) -> QScheme {
+        QScheme { bits, symmetric: false, per_channel: true }
+    }
+
+    pub fn with_bits(self, bits: u32) -> QScheme {
+        QScheme { bits, ..self }
+    }
+
+    pub fn n_levels(&self) -> f32 {
+        (1u64 << self.bits) as f32
+    }
+}
+
+/// Affine grid parameters (see [`crate::nn::ops::fake_quant_scalar`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: f32,
+    pub n_levels: f32,
+}
+
+impl QParams {
+    /// Identity (no quantisation).
+    pub fn identity() -> QParams {
+        QParams { scale: 1.0, zero_point: 0.0, n_levels: 0.0 }
+    }
+}
+
+/// Grid parameters covering `[lo, hi]`.
+///
+/// * asymmetric: the grid spans [min(lo,0), max(hi,0)] (zero must be
+///   exactly representable — standard for zero-padded convolutions).
+/// * symmetric: the grid is centred, scale set by max(|lo|, |hi|).
+pub fn params_for_range(lo: f32, hi: f32, bits: u32, symmetric: bool) -> QParams {
+    let n = (1u64 << bits) as f32;
+    if symmetric {
+        let a = lo.abs().max(hi.abs()).max(1e-12);
+        let scale = a / (n / 2.0 - 1.0);
+        QParams { scale, zero_point: n / 2.0, n_levels: n }
+    } else {
+        let lo = lo.min(0.0);
+        let hi = hi.max(0.0).max(lo + 1e-12);
+        let scale = (hi - lo) / (n - 1.0);
+        let zero_point = (-lo / scale).round();
+        QParams { scale, zero_point, n_levels: n }
+    }
+}
+
+/// Fake-quantise a whole tensor with one grid (per-tensor).
+pub fn fake_quant_tensor(t: &mut Tensor, p: &QParams) {
+    crate::nn::ops::fake_quant(t, p.scale, p.zero_point, p.n_levels);
+}
+
+/// Quantise a weight tensor in place per `scheme`; returns the grid(s)
+/// used (one per tensor, or one per output channel).
+pub fn quantize_weights(t: &mut Tensor, scheme: &QScheme) -> Vec<QParams> {
+    if scheme.per_channel {
+        let ranges = t.channel_ranges();
+        let mut out = Vec::with_capacity(ranges.len());
+        for (o, (lo, hi)) in ranges.into_iter().enumerate() {
+            let p = params_for_range(lo, hi, scheme.bits, scheme.symmetric);
+            let ch = t.out_channel_mut(o);
+            for x in ch {
+                *x = crate::nn::ops::fake_quant_scalar(
+                    *x, p.scale, p.zero_point, p.n_levels,
+                );
+            }
+            out.push(p);
+        }
+        out
+    } else {
+        let p = params_for_range(t.min(), t.max(), scheme.bits, scheme.symmetric);
+        fake_quant_tensor(t, &p);
+        vec![p]
+    }
+}
+
+/// Worst-case quantisation SNR proxy: the per-channel "precision" of
+/// eq. 8 in the paper — channel range over tensor range.
+pub fn channel_precision(t: &Tensor) -> Vec<f32> {
+    let total = 2.0 * t.abs_max();
+    if total == 0.0 {
+        return vec![0.0; t.shape()[0]];
+    }
+    t.channel_ranges()
+        .iter()
+        .map(|(lo, hi)| (2.0 * lo.abs().max(hi.abs())) / total)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asymmetric_grid_contains_zero() {
+        let p = params_for_range(0.5, 2.0, 8, false);
+        // lo is pulled to 0; zero maps exactly to zp
+        assert_eq!(p.zero_point, 0.0);
+        let p = params_for_range(-1.0, 1.0, 8, false);
+        let zero_back = (p.zero_point - p.zero_point) * p.scale;
+        assert_eq!(zero_back, 0.0);
+        assert!((p.scale - 2.0 / 255.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn symmetric_grid() {
+        let p = params_for_range(-3.0, 1.0, 8, true);
+        assert_eq!(p.zero_point, 128.0);
+        assert!((p.scale - 3.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let mut t = Tensor::from_vec(
+            (0..100).map(|i| (i as f32) / 25.0 - 2.0).collect(),
+        );
+        let orig = t.clone();
+        let ps = quantize_weights(&mut t, &QScheme::int8_asymmetric());
+        assert_eq!(ps.len(), 1);
+        // max error <= scale/2
+        assert!(t.max_abs_diff(&orig) <= ps[0].scale / 2.0 + 1e-7);
+    }
+
+    #[test]
+    fn per_channel_tighter_than_per_tensor() {
+        // channel 0 tiny, channel 1 huge: per-channel must quantise
+        // channel 0 much more precisely.
+        let data: Vec<f32> = (0..8)
+            .map(|i| if i < 4 { 0.01 * i as f32 } else { 10.0 * i as f32 })
+            .collect();
+        let t = Tensor::new(&[2, 4], data);
+        let mut pt = t.clone();
+        let mut pc = t.clone();
+        quantize_weights(&mut pt, &QScheme::int8_asymmetric());
+        quantize_weights(&mut pc, &QScheme::per_channel(8));
+        let err_pt: f32 = (0..4).map(|i| (pt.data()[i] - t.data()[i]).abs()).sum();
+        let err_pc: f32 = (0..4).map(|i| (pc.data()[i] - t.data()[i]).abs()).sum();
+        assert!(err_pc < err_pt / 10.0, "{err_pc} vs {err_pt}");
+    }
+
+    #[test]
+    fn low_bit_grids() {
+        for bits in [2, 4, 6, 8, 12, 16] {
+            let p = params_for_range(-1.0, 1.0, bits, false);
+            assert_eq!(p.n_levels, (1u64 << bits) as f32);
+            assert!(p.scale > 0.0);
+        }
+    }
+
+    #[test]
+    fn precision_metric() {
+        let t = Tensor::new(&[2, 2], vec![0.1, -0.1, 1.0, -1.0]);
+        let p = channel_precision(&t);
+        assert!((p[0] - 0.1).abs() < 1e-6);
+        assert!((p[1] - 1.0).abs() < 1e-6);
+    }
+}

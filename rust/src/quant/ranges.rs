@@ -1,0 +1,120 @@
+//! Data-free activation quantisation ranges (paper §5 experimental
+//! setup): per-channel β ± n·γ from the propagated BatchNorm Gaussians,
+//! reduced per tensor, min clipped at 0 after ReLU. One [`SiteCfg`] row
+//! per activation site of the executable contract.
+
+use anyhow::Result;
+
+use crate::graph::stats::propagate;
+use crate::graph::{Model, Site};
+use crate::nn::{QuantCfg, SiteCfg};
+
+use super::params_for_range;
+
+/// Number of standard deviations for activation ranges (paper: n = 6,
+/// "a wide range of n can be used without significant difference").
+pub const DEFAULT_N_SIGMA: f32 = 6.0;
+
+/// Build the activation quantisation config for a prepared model.
+///
+/// `bits == 0` returns the FP32 passthrough (clip bounds only) — the
+/// same executable then runs un-quantised activations.
+pub fn activation_qcfg(
+    model: &Model,
+    bits: u32,
+    symmetric: bool,
+    n_sigma: f32,
+) -> Result<QuantCfg> {
+    if bits == 0 {
+        return Ok(QuantCfg::fp32(model));
+    }
+    let stats = propagate(model)?;
+    let mut rows = Vec::new();
+    for site in model.act_sites() {
+        let row = match site {
+            Site::Input => {
+                // images are normalised to [0, 1]
+                let p = params_for_range(0.0, 1.0, bits, symmetric);
+                SiteCfg {
+                    scale: p.scale,
+                    zero_point: p.zero_point,
+                    n_levels: p.n_levels,
+                    clip_hi: f32::INFINITY,
+                }
+            }
+            Site::Act { node, kind } => {
+                // range of the *pre-activation* Gaussian, min clipped to
+                // 0 (ReLU), max clipped by the activation bound.
+                let input = model.node(node).inputs[0];
+                let st = &stats[&input];
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for c in 0..st.mean.len() {
+                    lo = lo.min(st.mean[c] - n_sigma * st.std[c]);
+                    hi = hi.max(st.mean[c] + n_sigma * st.std[c]);
+                }
+                lo = lo.max(0.0);
+                hi = hi.min(kind.clip_hi()).max(lo + 1e-6);
+                let p = params_for_range(lo, hi, bits, symmetric);
+                SiteCfg {
+                    scale: p.scale,
+                    zero_point: p.zero_point,
+                    n_levels: p.n_levels,
+                    clip_hi: kind.clip_hi(),
+                }
+            }
+            Site::Add { node } => {
+                let st = &stats[&node];
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for c in 0..st.mean.len() {
+                    lo = lo.min(st.mean[c] - n_sigma * st.std[c]);
+                    hi = hi.max(st.mean[c] + n_sigma * st.std[c]);
+                }
+                let p = params_for_range(lo, hi.max(lo + 1e-6), bits, symmetric);
+                SiteCfg {
+                    scale: p.scale,
+                    zero_point: p.zero_point,
+                    n_levels: p.n_levels,
+                    clip_hi: f32::INFINITY,
+                }
+            }
+        };
+        rows.push(row);
+    }
+    Ok(QuantCfg { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfq::bn_fold;
+    use crate::dfq::testutil::two_layer_model;
+
+    #[test]
+    fn builds_rows_per_site() {
+        let m = bn_fold::fold(&two_layer_model(61, true)).unwrap();
+        let cfg = activation_qcfg(&m, 8, false, 6.0).unwrap();
+        assert_eq!(cfg.rows.len(), m.act_sites().len());
+        for r in &cfg.rows {
+            assert!(r.scale > 0.0);
+            assert_eq!(r.n_levels, 256.0);
+        }
+    }
+
+    #[test]
+    fn bits_zero_is_fp32() {
+        let m = bn_fold::fold(&two_layer_model(62, true)).unwrap();
+        let cfg = activation_qcfg(&m, 0, false, 6.0).unwrap();
+        assert!(cfg.rows.iter().all(|r| r.n_levels == 0.0));
+    }
+
+    #[test]
+    fn flat_layout_is_s_by_4() {
+        let m = bn_fold::fold(&two_layer_model(63, true)).unwrap();
+        let cfg = activation_qcfg(&m, 8, false, 6.0).unwrap();
+        let flat = cfg.to_flat();
+        assert_eq!(flat.len(), cfg.rows.len() * 4);
+        assert!(flat.iter().all(|x| x.is_finite()));
+    }
+}

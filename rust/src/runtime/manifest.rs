@@ -1,0 +1,122 @@
+//! `artifacts/manifest.json` — the contract between the python build
+//! path and the Rust runtime. Written by `python/compile/aot.py`; the
+//! loader validates the Rust-side derived executable argument order
+//! against it so python/Rust graph folding can never drift silently.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One architecture entry.
+#[derive(Debug, Clone)]
+pub struct ArchEntry {
+    pub task: String,
+    /// Corrupted ("pretrained original") model container.
+    pub model: String,
+    /// Clean (pre-corruption) model container.
+    pub model_clean: String,
+    /// batch size -> HLO text file.
+    pub hlo: BTreeMap<usize, String>,
+    /// Executable weight-argument order: (tensor name, kind, shape).
+    pub weight_args: Vec<(String, String, Vec<usize>)>,
+    /// Number of activation quantisation sites (incl. the input site).
+    pub num_sites: usize,
+    pub num_outputs: usize,
+}
+
+/// The parsed artifact index.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub archs: BTreeMap<String, ArchEntry>,
+    /// task -> split -> dataset file.
+    pub datasets: BTreeMap<String, BTreeMap<String, String>>,
+    pub kernel_bench: Option<(String, usize, usize, usize)>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)?;
+        let mut archs = BTreeMap::new();
+        for (name, e) in j.req("archs")?.as_obj()? {
+            let mut hlo = BTreeMap::new();
+            for (b, p) in e.req("hlo")?.as_obj()? {
+                hlo.insert(b.parse::<usize>()?, p.as_str()?.to_string());
+            }
+            let weight_args = e
+                .req("weight_args")?
+                .as_arr()?
+                .iter()
+                .map(|w| -> Result<_> {
+                    let w = w.as_arr()?;
+                    Ok((
+                        w[0].as_str()?.to_string(),
+                        w[1].as_str()?.to_string(),
+                        w[2].as_shape()?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            archs.insert(
+                name.clone(),
+                ArchEntry {
+                    task: e.req("task")?.as_str()?.to_string(),
+                    model: e.req("model")?.as_str()?.to_string(),
+                    model_clean: e.req("model_clean")?.as_str()?.to_string(),
+                    hlo,
+                    weight_args,
+                    num_sites: e.req("sites")?.as_arr()?.len(),
+                    num_outputs: e.req("num_outputs")?.as_usize()?,
+                },
+            );
+        }
+        let mut datasets = BTreeMap::new();
+        for (task, splits) in j.req("datasets")?.as_obj()? {
+            let mut m = BTreeMap::new();
+            for (split, p) in splits.as_obj()? {
+                m.insert(split.clone(), p.as_str()?.to_string());
+            }
+            datasets.insert(task.clone(), m);
+        }
+        let kernel_bench = match j.get("kernel_bench") {
+            Some(k) => Some((
+                k.req("hlo")?.as_str()?.to_string(),
+                k.req("m")?.as_usize()?,
+                k.req("k")?.as_usize()?,
+                k.req("n")?.as_usize()?,
+            )),
+            None => None,
+        };
+        Ok(Manifest { dir, archs, datasets, kernel_bench })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchEntry> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown architecture '{name}'"))
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Dataset file path for (task, split).
+    pub fn dataset(&self, task: &str, split: &str) -> Result<PathBuf> {
+        let f = self
+            .datasets
+            .get(task)
+            .and_then(|m| m.get(split))
+            .ok_or_else(|| anyhow!("no dataset for {task}/{split}"))?;
+        Ok(self.dir.join(f))
+    }
+}

@@ -1,0 +1,76 @@
+//! Dynamic batching policy.
+//!
+//! Classic serving trade-off (vLLM-style): wait up to `max_delay` after
+//! the first queued request to fill a batch of `max_batch`, but never
+//! hold a full batch. Single-threaded collector over an mpsc channel.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// A batching decision loop over any request type.
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl Batcher {
+    /// Block for the next batch. Returns `None` when the channel closed
+    /// and no requests remain.
+    pub fn next_batch<T>(&self, rx: &Receiver<T>) -> Option<Vec<T>> {
+        let first = rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.max_delay;
+        while batch.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher { max_batch: 3, max_delay: Duration::from_millis(1) };
+        assert_eq!(b.next_batch(&rx).unwrap(), vec![0, 1, 2]);
+        assert_eq!(b.next_batch(&rx).unwrap(), vec![3, 4]);
+    }
+
+    #[test]
+    fn closes_cleanly() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        let b = Batcher { max_batch: 4, max_delay: Duration::from_millis(1) };
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn waits_for_stragglers() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let tx2 = tx.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            tx2.send(2).unwrap();
+        });
+        let b =
+            Batcher { max_batch: 2, max_delay: Duration::from_millis(200) };
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch, vec![1, 2]);
+    }
+}

@@ -1,0 +1,99 @@
+//! Serving demo / load generator: Poisson arrivals against the batching
+//! server backed by the INT8 DFQ model on PJRT. Used by `dfq serve`, the
+//! `serve_quantized` example and the serving bench.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+use crate::graph::io::Dataset;
+use crate::graph::Model;
+use crate::quant::QScheme;
+use crate::runtime::{Manifest, Runtime};
+use crate::serve::{PjrtExecutor, ServeConfig, Server, Snapshot};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Start a server for `arch`'s INT8-DFQ model on PJRT (built inside the
+/// worker thread), fire `requests` Poisson arrivals at `rate` req/s, and
+/// report latency/throughput.
+pub fn run_load(
+    arch: &str,
+    requests: usize,
+    rate: f64,
+    batch: usize,
+) -> Result<()> {
+    let snapshot = run_load_quiet(arch, requests, rate, batch)?;
+    println!("serve[{arch}] {}", snapshot.report());
+    Ok(())
+}
+
+/// Same as [`run_load`] but returns the metrics snapshot (bench use).
+pub fn run_load_quiet(
+    arch: &str,
+    requests: usize,
+    rate: f64,
+    batch: usize,
+) -> Result<Snapshot> {
+    let manifest = Manifest::load(crate::artifacts_dir())?;
+    let entry = manifest.arch(arch)?.clone();
+    let arch_name = arch.to_string();
+    eprintln!("[serve] loading dataset...");
+
+    // requests are real test images, cycled
+    let ds = Dataset::load(manifest.dataset(&entry.task, "test")?)?;
+    let images: Vec<Tensor> =
+        (0..64.min(ds.len())).map(|i| ds.batch(i, i + 1)).collect();
+
+    let server = Server::start(
+        ServeConfig {
+            max_batch: batch,
+            max_delay: Duration::from_millis(3),
+            queue_depth: 4096,
+        },
+        move || {
+            // constructed on the worker thread: PJRT handles are !Send
+            eprintln!("[serve] worker: loading model...");
+            let manifest = Manifest::load(crate::artifacts_dir())?;
+            let model =
+                Model::load(manifest.path(&manifest.arch(&arch_name)?.model))?;
+            eprintln!("[serve] worker: running DFQ...");
+            let prep = quantize_data_free(&model, &DfqConfig::default())?;
+            let q = prep.quantize(
+                &QScheme::int8_asymmetric(),
+                8,
+                BiasCorrMode::Analytic,
+                None,
+            )?;
+            eprintln!("[serve] worker: creating PJRT client...");
+            let rt = Runtime::cpu()?;
+            eprintln!("[serve] worker: compiling executable (batch {batch})...");
+            let exec =
+                rt.load_model_exec(&manifest, &arch_name, batch, &q.model)?;
+            let weights = exec.bind_weights(&q.model)?;
+            eprintln!("[serve] worker: ready");
+            Ok(Box::new(PjrtExecutor { exec, weights, cfg: q.act_cfg })
+                as Box<dyn crate::serve::BatchExecutor>)
+        },
+    );
+
+    let client = server.client();
+    // warm-up: the first request pays executor construction + PJRT
+    // compilation; exclude it from the measured load
+    client.infer(images[0].clone())?;
+    server.reset_metrics();
+    let mut rng = Rng::new(4242);
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        pending.push(client.submit(images[i % images.len()].clone())?);
+        let gap = rng.exp(rate);
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
+        }
+    }
+    for rx in pending {
+        rx.recv()??;
+    }
+    Ok(server.shutdown())
+}

@@ -1,0 +1,116 @@
+//! Serving metrics: request latency, batch-size distribution, throughput.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    latencies: Vec<f64>,
+    batch_sizes: Vec<f64>,
+    completed: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub completed: u64,
+    pub latency: Option<Summary>,
+    pub batch_size: Option<Summary>,
+    /// completed requests / wall seconds between first and last completion
+    pub throughput: f64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, batch: usize, latencies: &[f64]) {
+        let mut m = self.inner.lock().unwrap();
+        let now = Instant::now();
+        m.started.get_or_insert(now);
+        m.finished = Some(now);
+        m.completed += latencies.len() as u64;
+        m.batch_sizes.push(batch as f64);
+        m.latencies.extend_from_slice(latencies);
+    }
+
+    /// Drop all recorded samples (e.g. after a warm-up request).
+    pub fn reset(&self) {
+        let mut m = self.inner.lock().unwrap();
+        *m = Inner::default();
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        let wall = match (m.started, m.finished) {
+            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        Snapshot {
+            completed: m.completed,
+            latency: if m.latencies.is_empty() {
+                None
+            } else {
+                Some(Summary::of(&m.latencies))
+            },
+            batch_size: if m.batch_sizes.is_empty() {
+                None
+            } else {
+                Some(Summary::of(&m.batch_sizes))
+            },
+            throughput: if wall > 0.0 {
+                m.completed as f64 / wall
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn report(&self) -> String {
+        let lat = self
+            .latency
+            .as_ref()
+            .map(|l| {
+                format!(
+                    "latency p50 {} p95 {}",
+                    crate::util::bench::fmt_secs(l.p50),
+                    crate::util::bench::fmt_secs(l.p95)
+                )
+            })
+            .unwrap_or_else(|| "no requests".into());
+        let bs = self
+            .batch_size
+            .as_ref()
+            .map(|b| format!("mean batch {:.1}", b.mean))
+            .unwrap_or_default();
+        format!(
+            "{} reqs  {:.1} req/s  {lat}  {bs}",
+            self.completed, self.throughput
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::default();
+        m.record_batch(4, &[0.01, 0.02, 0.03, 0.04]);
+        m.record_batch(2, &[0.01, 0.01]);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 6);
+        assert_eq!(s.batch_size.as_ref().unwrap().n, 2);
+        assert!(s.latency.unwrap().mean > 0.0);
+        assert!(s.report().contains("reqs"));
+    }
+}

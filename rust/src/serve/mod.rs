@@ -1,0 +1,430 @@
+//! Serving coordinator — the L3 deployment surface.
+//!
+//! A request router over model variants, each backed by a worker thread
+//! that dynamically batches requests (see [`batcher`]) and executes them
+//! on a [`BatchExecutor`] — either the PJRT executable (production) or
+//! the pure-Rust engine (tests / PJRT-free hosts). Executors are
+//! constructed *inside* their worker thread via a factory closure, so
+//! non-`Send` PJRT handles never cross threads.
+
+pub mod batcher;
+pub mod demo;
+pub mod metrics;
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::Model;
+use crate::nn::{self, QuantCfg};
+use crate::tensor::Tensor;
+
+pub use metrics::{Metrics, Snapshot};
+
+/// Anything that can run a padded batch of images.
+pub trait BatchExecutor {
+    /// Largest batch the executor accepts.
+    fn max_batch(&self) -> usize;
+    /// Run (n, C, H, W) with n <= max_batch; returns the primary output
+    /// with leading dimension n.
+    fn run_batch(&mut self, x: &Tensor) -> Result<Tensor>;
+}
+
+/// Reference-engine executor (Send; usable anywhere).
+pub struct EngineExecutor {
+    pub model: Model,
+    pub cfg: QuantCfg,
+    pub max_batch: usize,
+}
+
+impl BatchExecutor for EngineExecutor {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn run_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+        Ok(nn::forward(&self.model, x, &self.cfg)?
+            .into_iter()
+            .next()
+            .unwrap())
+    }
+}
+
+/// PJRT-backed executor holding the compiled executable + bound weights.
+/// Construct it inside the worker thread (see [`Server::start`]).
+pub struct PjrtExecutor {
+    pub exec: crate::runtime::Executable,
+    pub weights: crate::runtime::BoundWeights,
+    pub cfg: QuantCfg,
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn max_batch(&self) -> usize {
+        self.exec.meta.batch
+    }
+
+    fn run_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+        let b = self.exec.meta.batch;
+        let n = x.shape()[0];
+        let input = if n == b { x.clone() } else { pad(x, b) };
+        let out = self
+            .exec
+            .run(&input, &self.weights, &self.cfg)?
+            .into_iter()
+            .next()
+            .unwrap();
+        Ok(if n == b { out } else { truncate(&out, n) })
+    }
+}
+
+struct Request {
+    x: Tensor, // (1, C, H, W)
+    resp: Sender<Result<Tensor>>,
+    enqueued: Instant,
+}
+
+/// Queue message: a job, or an explicit stop. The stop sentinel (rather
+/// than sender-disconnect) ends the worker even while `Client` clones
+/// are still alive -- dropping only the server's sender would leave the
+/// worker parked in `recv` forever.
+enum Msg {
+    Job(Request),
+    Stop,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// One model-variant server: a worker thread + request queue.
+pub struct Server {
+    tx: SyncSender<Msg>,
+    metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the worker. `factory` builds the executor on the worker
+    /// thread (PJRT handles are not `Send`).
+    pub fn start<F>(cfg: ServeConfig, factory: F) -> Server
+    where
+        F: FnOnce() -> Result<Box<dyn BatchExecutor>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let mut exec = match factory() {
+                Ok(e) => e,
+                Err(e) => {
+                    // fail every request with the construction error
+                    drain_with_error(rx, e);
+                    return;
+                }
+            };
+            worker_loop(rx, cfg, exec.as_mut(), &m2);
+        });
+        Server { tx, metrics, worker: Some(worker) }
+    }
+
+    /// A cheap cloneable submission handle.
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Clear recorded metrics (use after warm-up traffic).
+    pub fn reset_metrics(&self) {
+        self.metrics.reset();
+    }
+
+    /// Stop the worker (queued jobs are still served) and join it.
+    /// Live `Client` handles error out afterwards.
+    pub fn shutdown(mut self) -> Snapshot {
+        let _ = self.tx.send(Msg::Stop);
+        drop(self.tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+fn drain_with_error(rx: Receiver<Msg>, e: anyhow::Error) {
+    let msg = format!("executor construction failed: {e:#}");
+    while let Ok(m) = rx.recv() {
+        match m {
+            Msg::Job(req) => {
+                let _ = req.resp.send(Err(anyhow!("{msg}")));
+            }
+            Msg::Stop => break,
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Msg>,
+    cfg: ServeConfig,
+    exec: &mut dyn BatchExecutor,
+    metrics: &Metrics,
+) {
+    let policy = batcher::Batcher {
+        max_batch: cfg.max_batch.min(exec.max_batch()),
+        max_delay: cfg.max_delay,
+    };
+    while let Some(msgs) = policy.next_batch(&rx) {
+        let mut stop = false;
+        let mut batch = Vec::with_capacity(msgs.len());
+        for m in msgs {
+            match m {
+                Msg::Job(req) => batch.push(req),
+                Msg::Stop => stop = true,
+            }
+        }
+        if batch.is_empty() {
+            if stop {
+                break;
+            }
+            continue;
+        }
+        let n = batch.len();
+        let x = stack(&batch);
+        let result = exec.run_batch(&x);
+        let done = Instant::now();
+        match result {
+            Ok(out) => {
+                let per: usize = out.shape()[1..].iter().product();
+                let mut shape: Vec<usize> = out.shape().to_vec();
+                shape[0] = 1;
+                // record *before* replying so a client that resets
+                // metrics right after its response cannot race the
+                // bookkeeping of its own batch
+                let lats: Vec<f64> = batch
+                    .iter()
+                    .map(|r| (done - r.enqueued).as_secs_f64())
+                    .collect();
+                metrics.record_batch(n, &lats);
+                for (i, req) in batch.into_iter().enumerate() {
+                    let one = Tensor::new(
+                        &shape,
+                        out.data()[i * per..(i + 1) * per].to_vec(),
+                    );
+                    let _ = req.resp.send(Ok(one));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    let _ = req.resp.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+        if stop {
+            break;
+        }
+    }
+}
+
+fn stack(reqs: &[Request]) -> Tensor {
+    let mut shape = reqs[0].x.shape().to_vec();
+    shape[0] = reqs.len();
+    let mut data = Vec::with_capacity(shape.iter().product());
+    for r in reqs {
+        data.extend_from_slice(r.x.data());
+    }
+    Tensor::new(&shape, data)
+}
+
+fn pad(x: &Tensor, batch: usize) -> Tensor {
+    let mut shape = x.shape().to_vec();
+    let per: usize = shape[1..].iter().product();
+    let n = shape[0];
+    shape[0] = batch;
+    let mut data = vec![0f32; batch * per];
+    data[..n * per].copy_from_slice(x.data());
+    Tensor::new(&shape, data)
+}
+
+fn truncate(x: &Tensor, n: usize) -> Tensor {
+    let mut shape = x.shape().to_vec();
+    let per: usize = shape[1..].iter().product();
+    shape[0] = n;
+    Tensor::new(&shape, x.data()[..n * per].to_vec())
+}
+
+/// Submission handle for one server.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Msg>,
+}
+
+impl Client {
+    /// Submit one image (1, C, H, W); returns a receiver for the result.
+    pub fn submit(&self, x: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Job(Request { x, resp: rtx, enqueued: Instant::now() }))
+            .map_err(|_| anyhow!("server is shut down"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and block for the answer.
+    pub fn infer(&self, x: Tensor) -> Result<Tensor> {
+        self.submit(x)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+    }
+}
+
+/// Request router across named model variants.
+#[derive(Default)]
+pub struct Router {
+    servers: HashMap<String, Server>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn add(&mut self, name: impl Into<String>, server: Server) {
+        self.servers.insert(name.into(), server);
+    }
+
+    pub fn client(&self, name: &str) -> Result<Client> {
+        Ok(self
+            .servers
+            .get(name)
+            .ok_or_else(|| anyhow!("no model variant '{name}'"))?
+            .client())
+    }
+
+    pub fn variants(&self) -> Vec<&str> {
+        self.servers.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn metrics(&self, name: &str) -> Result<Snapshot> {
+        Ok(self
+            .servers
+            .get(name)
+            .ok_or_else(|| anyhow!("no model variant '{name}'"))?
+            .metrics())
+    }
+
+    pub fn shutdown(self) -> Vec<(String, Snapshot)> {
+        self.servers
+            .into_iter()
+            .map(|(k, s)| (k.clone(), s.shutdown()))
+            .collect()
+    }
+}
+
+#[allow(dead_code)]
+fn _assert_traits() {
+    fn is_send<T: Send>() {}
+    is_send::<EngineExecutor>();
+    is_send::<Client>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfq::{bn_fold, testutil};
+
+    fn engine_server(max_batch: usize, delay_ms: u64) -> Server {
+        let model =
+            bn_fold::fold(&testutil::two_layer_model(71, true)).unwrap();
+        let cfg = QuantCfg::fp32(&model);
+        Server::start(
+            ServeConfig {
+                max_batch,
+                max_delay: Duration::from_millis(delay_ms),
+                queue_depth: 128,
+            },
+            move || {
+                Ok(Box::new(EngineExecutor { model, cfg, max_batch: 64 }))
+            },
+        )
+    }
+
+    #[test]
+    fn serves_single_requests() {
+        let server = engine_server(8, 1);
+        let client = server.client();
+        let x = Tensor::full(&[1, 3, 8, 8], 0.5);
+        let y = client.infer(x).unwrap();
+        assert_eq!(y.shape()[0], 1);
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let server = engine_server(16, 20);
+        let mut rxs = Vec::new();
+        let client = server.client();
+        for i in 0..12 {
+            let x = Tensor::full(&[1, 3, 8, 8], i as f32 / 12.0);
+            rxs.push(client.submit(x).unwrap());
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 12);
+        // with a 20ms window everything lands in few batches
+        assert!(snap.batch_size.unwrap().mean > 1.5);
+    }
+
+    #[test]
+    fn router_routes_and_errors() {
+        let mut router = Router::new();
+        router.add("fp32", engine_server(4, 1));
+        assert!(router.client("fp32").is_ok());
+        assert!(router.client("missing").is_err());
+        let x = Tensor::full(&[1, 3, 8, 8], 0.1);
+        let y = router.client("fp32").unwrap().infer(x).unwrap();
+        assert_eq!(y.shape()[0], 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn batch_outputs_match_individual() {
+        // determinism: the same image served alone or in a batch gives
+        // identical outputs
+        let server = engine_server(8, 30);
+        let client = server.client();
+        let x = Tensor::full(&[1, 3, 8, 8], 0.25);
+        let solo = client.infer(x.clone()).unwrap();
+        let mut rxs = Vec::new();
+        for _ in 0..6 {
+            rxs.push(client.submit(x.clone()).unwrap());
+        }
+        for rx in rxs {
+            let y = rx.recv().unwrap().unwrap();
+            assert!(y.max_abs_diff(&solo) < 1e-6);
+        }
+        server.shutdown();
+    }
+}

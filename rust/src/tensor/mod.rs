@@ -1,0 +1,221 @@
+//! Dense f32 tensors (row-major, NCHW convention for feature maps).
+//!
+//! Deliberately minimal: the DFQ passes need per-channel views, basic
+//! reductions and elementwise maps; the heavy compute lives either in the
+//! AOT-compiled PJRT executables or in [`crate::nn`].
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// Reshape (must preserve element count).
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {:?} changes element count", self.shape, shape);
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    // -- elementwise / reductions -------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&x| x as f64).sum::<f64>()
+            / self.data.len() as f64) as f32
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    // -- channel views (weights are OIHW; feature maps NCHW) ------------------
+
+    /// Elements of output-channel `o` of an OIHW weight (or O-major 2-D
+    /// weight): contiguous slice of length `len / shape[0]`.
+    pub fn out_channel(&self, o: usize) -> &[f32] {
+        let per = self.data.len() / self.shape[0];
+        &self.data[o * per..(o + 1) * per]
+    }
+
+    pub fn out_channel_mut(&mut self, o: usize) -> &mut [f32] {
+        let per = self.data.len() / self.shape[0];
+        &mut self.data[o * per..(o + 1) * per]
+    }
+
+    /// Per-output-channel (min, max) over an O-major weight tensor.
+    pub fn channel_ranges(&self) -> Vec<(f32, f32)> {
+        (0..self.shape[0])
+            .map(|o| {
+                let ch = self.out_channel(o);
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for &x in ch {
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+                (lo, hi)
+            })
+            .collect()
+    }
+
+    /// Scale all weights of input-channel `i` (dim 1 of OIHW / dim 1 of
+    /// [O, I] linear weights) by `s`.
+    pub fn scale_in_channel(&mut self, i: usize, s: f32) {
+        let o_count = self.shape[0];
+        let i_count = self.shape[1];
+        let spatial: usize = self.shape[2..].iter().product();
+        for o in 0..o_count {
+            let base = (o * i_count + i) * spatial;
+            for x in &mut self.data[base..base + spatial] {
+                *x *= s;
+            }
+        }
+    }
+
+    /// Scale all weights of output-channel `o` by `s`.
+    pub fn scale_out_channel(&mut self, o: usize, s: f32) {
+        for x in self.out_channel_mut(o) {
+            *x *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.dim(1), 3);
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(r.shape(), &[3, 2]);
+        assert!(t.reshape(&[4]).is_err());
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(vec![-3.0, 1.0, 2.0]);
+        assert_eq!(t.min(), -3.0);
+        assert_eq!(t.max(), 2.0);
+        assert_eq!(t.abs_max(), 3.0);
+        assert!((t.mean() - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn channel_ops() {
+        // OIHW = [2, 2, 1, 1]
+        let mut w = Tensor::new(&[2, 2, 1, 1], vec![1., 2., 3., 4.]);
+        assert_eq!(w.out_channel(1), &[3., 4.]);
+        assert_eq!(w.channel_ranges(), vec![(1., 2.), (3., 4.)]);
+        w.scale_out_channel(0, 2.0);
+        assert_eq!(w.out_channel(0), &[2., 4.]);
+        w.scale_in_channel(1, 10.0);
+        assert_eq!(w.data(), &[2., 40., 3., 40.]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::from_vec(vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![1.5, 1.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

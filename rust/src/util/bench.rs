@@ -1,0 +1,145 @@
+//! First-party micro/macro-bench harness (criterion is not in the
+//! offline crate set). Used by every target in `rust/benches/`.
+//!
+//! Protocol per benchmark: warm-up runs, then timed iterations until both
+//! a minimum iteration count and a minimum wall budget are met; reports
+//! mean/p50/p95 and derived throughput. Honors two env vars:
+//! `DFQ_BENCH_FAST=1` (single iteration — used by `cargo test` smoke) and
+//! `DFQ_BENCH_SECS` (wall budget per bench).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+pub struct Bench {
+    name: String,
+    min_iters: usize,
+    budget: Duration,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub secs: Summary,
+    /// Optional units processed per iteration (for throughput lines).
+    pub units: Option<(f64, &'static str)>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        let fast = std::env::var("DFQ_BENCH_FAST").ok().as_deref() == Some("1");
+        let secs: f64 = std::env::var("DFQ_BENCH_SECS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2.0);
+        Bench {
+            name: name.into(),
+            min_iters: if fast { 1 } else { 10 },
+            budget: Duration::from_secs_f64(if fast { 0.0 } else { secs }),
+        }
+    }
+
+    pub fn with_min_iters(mut self, n: usize) -> Self {
+        // fast mode (min_iters == 1) always wins
+        if self.min_iters > 1 {
+            self.min_iters = n.max(1);
+        }
+        self
+    }
+
+    /// Run `f` repeatedly; returns timing summary.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        // warm-up (compilation, caches, page faults)
+        let warmups = self.min_iters.min(3);
+        for _ in 0..warmups {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+            if samples.len() >= self.min_iters && start.elapsed() >= self.budget
+            {
+                break;
+            }
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        BenchResult {
+            name: self.name.clone(),
+            secs: Summary::of(&samples),
+            units: None,
+        }
+    }
+}
+
+impl BenchResult {
+    pub fn with_units(mut self, per_iter: f64, label: &'static str) -> Self {
+        self.units = Some((per_iter, label));
+        self
+    }
+
+    pub fn report(&self) -> String {
+        let s = &self.secs;
+        let mut line = format!(
+            "{:<44} {:>9} iters  mean {:>10}  p50 {:>10}  p95 {:>10}",
+            self.name,
+            s.n,
+            fmt_secs(s.mean),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+        );
+        if let Some((units, label)) = self.units {
+            line.push_str(&format!("  {:>12.1} {label}/s", units / s.mean));
+        }
+        line
+    }
+
+    pub fn print(&self) -> &Self {
+        println!("{}", self.report());
+        self
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Print a section header for a bench binary.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("DFQ_BENCH_FAST", "1");
+        let r = Bench::new("noop").run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.secs.n >= 1);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert!(fmt_secs(2e-9).contains("ns"));
+        assert!(fmt_secs(2e-6).contains("µs"));
+        assert!(fmt_secs(2e-3).contains("ms"));
+        assert!(fmt_secs(2.0).contains(" s"));
+    }
+}

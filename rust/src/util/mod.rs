@@ -1,0 +1,10 @@
+//! Substrate utilities built in-repo (the image has no network access to
+//! crates.io beyond `xla`/`anyhow`, so JSON, RNG, statistics, a thread
+//! pool and the bench harness are all first-party — see DESIGN.md §3).
+
+pub mod bench;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod stats;
+pub mod table;

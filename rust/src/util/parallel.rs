@@ -1,0 +1,108 @@
+//! Scoped data-parallel helpers over `std::thread` (no rayon offline).
+//!
+//! On this testbed `available_parallelism() == 1`, so these degrade to a
+//! sequential loop with zero thread overhead; on multi-core hosts they
+//! chunk work across scoped threads.
+
+use std::num::NonZeroUsize;
+
+/// Number of worker threads to use.
+pub fn workers() -> usize {
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Apply `f(start, end)` over disjoint chunks of `0..n` in parallel.
+pub fn par_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let w = workers().min(n.max(1));
+    if w <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(w);
+    std::thread::scope(|s| {
+        for t in 0..w {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a `Vec<T>`.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = as_send_cells(&mut out);
+        par_chunks(n, |lo, hi| {
+            for i in lo..hi {
+                // SAFETY: each index is written by exactly one chunk.
+                unsafe { *slots.get(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Shared mutable access where disjoint-index writes are guaranteed by
+/// the caller (par_chunks hands out disjoint ranges).
+pub struct SendCells<T>(*mut T);
+unsafe impl<T> Sync for SendCells<T> {}
+impl<T> SendCells<T> {
+    /// # Safety
+    /// Caller must ensure no two threads touch the same index.
+    pub unsafe fn get(&self, i: usize) -> &mut T {
+        unsafe { &mut *self.0.add(i) }
+    }
+
+    /// # Safety
+    /// Caller must ensure no two threads touch overlapping ranges.
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        unsafe { std::slice::from_raw_parts_mut(self.0.add(start), len) }
+    }
+}
+
+pub fn as_send_cells<T>(v: &mut [T]) -> SendCells<T> {
+    SendCells(v.as_mut_ptr())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let got = par_map(1000, |i| i * i);
+        let want: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_chunks_covers_all() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits = AtomicUsize::new(0);
+        par_chunks(317, |lo, hi| {
+            hits.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 317);
+    }
+
+    #[test]
+    fn empty_range() {
+        par_chunks(0, |lo, hi| assert_eq!(lo, hi, "no work expected"));
+        let v: Vec<u8> = par_map(0, |_| 1u8);
+        assert!(v.is_empty());
+    }
+}

@@ -1,0 +1,111 @@
+//! Deterministic PRNG (SplitMix64) — substrate for property tests, the
+//! serving workload generator and synthetic tensors. First-party because
+//! the offline crate set has no `rand`.
+
+/// SplitMix64: tiny, fast, passes BigCrush for our purposes; fully
+/// deterministic across platforms.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9e3779b97f4a7c15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Log-uniform in [lo, hi); both must be positive.
+    pub fn log_uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        debug_assert!(lo > 0.0 && hi >= lo);
+        (self.uniform(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Standard normal (Box–Muller).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos())
+            as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Fill a vec with iid normals scaled by `std`.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+
+    /// Exponentially distributed with rate `lambda` (inter-arrival times).
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.f64()).ln() / lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.uniform(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn log_uniform_range() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let x = r.log_uniform(0.1, 10.0);
+            assert!((0.1..10.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Small statistics helpers shared by the bench harness and experiments.
+
+/// Summary of a sample of timings or errors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p50: percentile_sorted(&s, 50.0),
+            p95: percentile_sorted(&s, 95.0),
+            max: s[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Per-channel mean over a (N, C, ...) layout given flat data.
+pub fn channel_means(data: &[f32], n: usize, c: usize, spatial: usize) -> Vec<f32> {
+    let mut out = vec![0f64; c];
+    let stride = c * spatial;
+    for i in 0..n {
+        for ch in 0..c {
+            let base = i * stride + ch * spatial;
+            let mut acc = 0f64;
+            for s in 0..spatial {
+                acc += data[base + s] as f64;
+            }
+            out[ch] += acc;
+        }
+    }
+    let denom = (n * spatial) as f64;
+    out.into_iter().map(|x| (x / denom) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s = [0.0, 10.0];
+        assert!((percentile_sorted(&s, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 10.0);
+    }
+
+    #[test]
+    fn channel_means_layout() {
+        // N=2, C=2, spatial=2
+        let data = [1., 1., 2., 2., 3., 3., 4., 4.];
+        let m = channel_means(&data, 2, 2, 2);
+        assert_eq!(m, vec![2.0, 3.0]);
+    }
+}

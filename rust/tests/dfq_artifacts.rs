@@ -1,0 +1,170 @@
+//! Integration over the real artifacts: DFQ-level invariants on the
+//! trained, corrupted models (skips when `make artifacts` hasn't run).
+
+use dfq::dfq::{bn_fold, equalize, quantize_data_free, BiasCorrMode,
+               DfqConfig};
+use dfq::eval::{evaluate, Backend};
+use dfq::graph::io::Dataset;
+use dfq::graph::Model;
+use dfq::nn::QuantCfg;
+use dfq::quant::QScheme;
+use dfq::runtime::Manifest;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(dfq::artifacts_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping artifact tests: {e:#}");
+            None
+        }
+    }
+}
+
+/// The ill-conditioning corruption is FP32-function-preserving:
+/// corrupted and clean models agree on the engine.
+#[test]
+fn corruption_preserves_fp32_function() {
+    let Some(man) = manifest() else { return };
+    let entry = man.arch("micronet_v2").unwrap();
+    let corrupted =
+        bn_fold::fold(&Model::load(man.path(&entry.model)).unwrap()).unwrap();
+    let clean = bn_fold::fold(
+        &Model::load(man.path(&entry.model_clean)).unwrap(),
+    )
+    .unwrap();
+    let ds = Dataset::load(man.dataset("classification", "test").unwrap())
+        .unwrap();
+    let x = ds.batch(0, 16);
+    let yc = dfq::nn::forward(&corrupted, &x, &QuantCfg::fp32(&corrupted))
+        .unwrap();
+    let yl =
+        dfq::nn::forward(&clean, &x, &QuantCfg::fp32(&clean)).unwrap();
+    let rel = yc[0].max_abs_diff(&yl[0]) / yl[0].abs_max().max(1e-6);
+    assert!(rel < 5e-2, "corruption changed FP32 function by {rel}");
+}
+
+/// The corrupted models actually exhibit the Fig. 2 pathology: at least
+/// one layer has >= 20x per-channel range disparity.
+#[test]
+fn corrupted_models_have_range_disparity() {
+    let Some(man) = manifest() else { return };
+    for arch in ["micronet_v2", "micronet_v1", "microresnet18"] {
+        let entry = man.arch(arch).unwrap();
+        let folded =
+            bn_fold::fold(&Model::load(man.path(&entry.model)).unwrap())
+                .unwrap();
+        let mut worst = 1f32;
+        for n in folded.layers() {
+            let w = match &n.op {
+                dfq::graph::Op::Conv { w, .. }
+                | dfq::graph::Op::Linear { w, .. } => w,
+                _ => unreachable!(),
+            };
+            let p = dfq::quant::channel_precision(folded.tensor(w).unwrap());
+            let (mut lo, mut hi) = (f32::INFINITY, 0f32);
+            for &x in &p {
+                if x > 0.0 {
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+            }
+            worst = worst.max(hi / lo.max(1e-9));
+        }
+        assert!(worst > 20.0, "{arch}: disparity only {worst}");
+    }
+}
+
+/// CLE removes the disparity on the real corrupted model (Fig. 6).
+#[test]
+fn cle_equalizes_real_model() {
+    let Some(man) = manifest() else { return };
+    let entry = man.arch("micronet_v2").unwrap();
+    let mut m =
+        bn_fold::fold(&Model::load(man.path(&entry.model)).unwrap()).unwrap();
+    dfq::dfq::relu6::replace_relu6(&mut m);
+    equalize::equalize(&mut m, 40, 1e-4).unwrap();
+    // every *internal* layer's worst channel precision is now sane
+    for n in m.layers() {
+        let w = match &n.op {
+            dfq::graph::Op::Conv { w, .. } => w,
+            _ => continue, // classifier head not part of any CLE pair
+        };
+        let p = dfq::quant::channel_precision(m.tensor(w).unwrap());
+        let min = p
+            .iter()
+            .cloned()
+            .filter(|&x| x > 1e-6)
+            .fold(f32::INFINITY, f32::min);
+        assert!(
+            min > 0.005,
+            "layer {} still starved after CLE: {min}",
+            n.id
+        );
+    }
+}
+
+/// DFQ INT8 recovers within 2% of FP32 on the engine backend
+/// (small eval slice keeps this tractable on one core).
+#[test]
+fn dfq_recovers_on_engine_backend() {
+    let Some(man) = manifest() else { return };
+    let entry = man.arch("micronet_v2").unwrap();
+    let model = Model::load(man.path(&entry.model)).unwrap();
+    let ds = Dataset::load(man.dataset("classification", "test").unwrap())
+        .unwrap();
+
+    let prep_base = quantize_data_free(&model, &DfqConfig::baseline()).unwrap();
+    let fp32 = evaluate(
+        &prep_base.model,
+        &QuantCfg::fp32(&prep_base.model),
+        &ds,
+        &Backend::Engine,
+        Some(128),
+    )
+    .unwrap();
+
+    let naive = prep_base
+        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+        .unwrap();
+    let acc_naive = evaluate(
+        &naive.model, &naive.act_cfg, &ds, &Backend::Engine, Some(128),
+    )
+    .unwrap();
+
+    let prep = quantize_data_free(&model, &DfqConfig::default()).unwrap();
+    let q = prep
+        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::Analytic, None)
+        .unwrap();
+    let acc_dfq =
+        evaluate(&q.model, &q.act_cfg, &ds, &Backend::Engine, Some(128))
+            .unwrap();
+
+    assert!(fp32 > 0.9, "fp32 {fp32}");
+    assert!(acc_naive < 0.5, "naive INT8 should collapse, got {acc_naive}");
+    assert!(
+        acc_dfq > fp32 - 0.02,
+        "DFQ INT8 {acc_dfq} not within 2% of FP32 {fp32}"
+    );
+}
+
+/// Quantised-model round-trip: save + reload + re-evaluate identically.
+#[test]
+fn quantized_model_roundtrips() {
+    let Some(man) = manifest() else { return };
+    let entry = man.arch("micronet_v1").unwrap();
+    let model = Model::load(man.path(&entry.model)).unwrap();
+    let prep = quantize_data_free(&model, &DfqConfig::default()).unwrap();
+    let q = prep
+        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::Analytic, None)
+        .unwrap();
+    let path = std::env::temp_dir().join("dfq_roundtrip_v1.dfqm");
+    q.model.save(&path).unwrap();
+    let back = Model::load(&path).unwrap();
+    let ds = Dataset::load(man.dataset("classification", "test").unwrap())
+        .unwrap();
+    let x = ds.batch(0, 8);
+    let y0 = dfq::nn::forward(&q.model, &x, &q.act_cfg).unwrap();
+    let y1 = dfq::nn::forward(&back, &x, &q.act_cfg).unwrap();
+    assert_eq!(y0[0].max_abs_diff(&y1[0]), 0.0);
+    std::fs::remove_file(&path).ok();
+}

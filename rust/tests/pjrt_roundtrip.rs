@@ -1,0 +1,118 @@
+//! Integration: the python-AOT → Rust-load contract, end to end.
+//!
+//! Loads real artifacts (requires `make artifacts`), folds the model in
+//! Rust, binds the weights to the PJRT executable, and cross-checks the
+//! outputs against the pure-Rust reference engine — FP32 and INT8.
+//! Skips (with a message) when artifacts are absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use dfq::dfq::{bn_fold, quantize_data_free, BiasCorrMode, DfqConfig};
+use dfq::eval::{evaluate, run_all, Backend};
+use dfq::graph::io::Dataset;
+use dfq::graph::Model;
+use dfq::nn::QuantCfg;
+use dfq::quant::QScheme;
+use dfq::runtime::{Manifest, Runtime};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(dfq::artifacts_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping PJRT integration test: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_engine_fp32_and_int8() {
+    let Some(man) = manifest() else { return };
+    let arch = "micronet_v2";
+    let entry = man.arch(arch).unwrap();
+    let model = Model::load(man.path(&entry.model)).unwrap();
+    let folded = bn_fold::fold(&model).unwrap();
+    let ds = Dataset::load(man.dataset("classification", "test").unwrap())
+        .unwrap();
+
+    let rt = Runtime::cpu().unwrap();
+    let exec = rt.load_model_exec(&man, arch, 1, &folded).unwrap();
+
+    // FP32 parity
+    let cfg = QuantCfg::fp32(&folded);
+    let weights = exec.bind_weights(&folded).unwrap();
+    let n = 4;
+    let y_pjrt = run_all(
+        &folded,
+        &cfg,
+        &ds,
+        &Backend::Pjrt { exec: &exec, weights: &weights },
+        n,
+    )
+    .unwrap();
+    let y_eng =
+        run_all(&folded, &cfg, &ds, &Backend::Engine, n).unwrap();
+    let diff = y_pjrt.max_abs_diff(&y_eng);
+    let scale = y_eng.abs_max().max(1e-6);
+    assert!(
+        diff / scale < 1e-3,
+        "fp32 mismatch: {diff} (scale {scale})"
+    );
+
+    // INT8 DFQ parity
+    let prep = quantize_data_free(&model, &DfqConfig::default()).unwrap();
+    let q = prep
+        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::Analytic, None)
+        .unwrap();
+    let exec8 = rt.load_model_exec(&man, arch, 1, &q.model).unwrap();
+    let w8 = exec8.bind_weights(&q.model).unwrap();
+    let yq_pjrt = run_all(
+        &q.model,
+        &q.act_cfg,
+        &ds,
+        &Backend::Pjrt { exec: &exec8, weights: &w8 },
+        n,
+    )
+    .unwrap();
+    let yq_eng =
+        run_all(&q.model, &q.act_cfg, &ds, &Backend::Engine, n).unwrap();
+    let dq = yq_pjrt.max_abs_diff(&yq_eng);
+    let sq = yq_eng.abs_max().max(1e-6);
+    assert!(dq / sq < 1e-2, "int8 mismatch: {dq} (scale {sq})");
+}
+
+#[test]
+fn batch64_evaluation_runs() {
+    let Some(man) = manifest() else { return };
+    let arch = "micronet_v2";
+    let entry = man.arch(arch).unwrap();
+    let model = Model::load(man.path(&entry.model)).unwrap();
+    let folded = bn_fold::fold(&model).unwrap();
+    let ds = Dataset::load(man.dataset("classification", "test").unwrap())
+        .unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exec = rt.load_model_exec(&man, arch, 64, &folded).unwrap();
+    let weights = exec.bind_weights(&folded).unwrap();
+    let acc = evaluate(
+        &folded,
+        &QuantCfg::fp32(&folded),
+        &ds,
+        &Backend::Pjrt { exec: &exec, weights: &weights },
+        Some(128),
+    )
+    .unwrap();
+    // the trained corrupted model must be far above chance (0.1)
+    assert!(acc > 0.5, "FP32 accuracy suspiciously low: {acc}");
+}
+
+#[test]
+fn every_arch_contract_validates() {
+    let Some(man) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    for (arch, entry) in &man.archs {
+        let model = Model::load(man.path(&entry.model)).unwrap();
+        let folded = bn_fold::fold(&model).unwrap();
+        // contract check happens inside load_model_exec
+        let exec = rt.load_model_exec(&man, arch, 1, &folded).unwrap();
+        assert_eq!(exec.meta.num_outputs, entry.num_outputs);
+    }
+}

@@ -1,0 +1,226 @@
+//! Property-based tests (first-party harness over seeded RNG — no
+//! proptest in the offline crate set): randomized models / inputs /
+//! schemes, each case checking a paper invariant.
+
+use dfq::dfq::{
+    absorb, bn_fold, equalize, quantize_data_free, relu6, BiasCorrMode,
+    DfqConfig,
+};
+use dfq::graph::{Model, Op};
+use dfq::nn::{self, ops, QuantCfg};
+use dfq::quant::{params_for_range, quantize_weights, QScheme};
+use dfq::tensor::Tensor;
+use dfq::util::rng::Rng;
+
+use dfq::dfq::testutil;
+
+fn random_two_layer(seed: u64) -> Model {
+    testutil::two_layer_model(seed, true)
+}
+
+fn random_input(m: &Model, batch: usize, seed: u64) -> Tensor {
+    testutil::random_input(m, batch, seed)
+}
+
+/// CLE invariance: for 32 random (model, corruption, input) triples the
+/// FP32 function is unchanged by equalization (eq. 5-7).
+#[test]
+fn prop_cle_preserves_fp32_function() {
+    for case in 0..32u64 {
+        let mut m = bn_fold::fold(&random_two_layer(1000 + case)).unwrap();
+        let pairs = equalize::find_pairs(&m);
+        assert!(!pairs.is_empty());
+        let x = random_input(&m, 2, case);
+        let y0 = nn::forward(&m, &x, &QuantCfg::fp32(&m)).unwrap();
+        equalize::equalize(&mut m, 30, 1e-4).unwrap();
+        let y1 = nn::forward(&m, &x, &QuantCfg::fp32(&m)).unwrap();
+        let rel = y0[0].max_abs_diff(&y1[0]) / y0[0].abs_max().max(1e-6);
+        assert!(rel < 2e-3, "case {case}: CLE broke FP32 by {rel}");
+    }
+}
+
+/// Equalization converges: a second full run applies ~unit scales.
+#[test]
+fn prop_cle_converges() {
+    for case in 0..8u64 {
+        let mut m = bn_fold::fold(&random_two_layer(2000 + case)).unwrap();
+        equalize::equalize(&mut m, 50, 1e-6).unwrap();
+        let sweeps = equalize::equalize(&mut m, 50, 1e-4).unwrap();
+        assert!(sweeps <= 2, "case {case}: not converged ({sweeps} sweeps)");
+    }
+}
+
+/// Fake-quant idempotence: fq(fq(x)) == fq(x) on random grids.
+#[test]
+fn prop_fake_quant_idempotent() {
+    let mut rng = Rng::new(7);
+    for _ in 0..500 {
+        let bits = 2 + rng.below(7) as u32;
+        let lo = rng.uniform(-4.0, 0.0);
+        let hi = rng.uniform(0.1, 4.0);
+        let p = params_for_range(lo, hi, bits, rng.f32() < 0.5);
+        let x = rng.uniform(-6.0, 6.0);
+        let once = ops::fake_quant_scalar(x, p.scale, p.zero_point, p.n_levels);
+        let twice =
+            ops::fake_quant_scalar(once, p.scale, p.zero_point, p.n_levels);
+        assert_eq!(once, twice, "not idempotent at x={x} p={p:?}");
+    }
+}
+
+/// Quantisation error bound: |fq(w) - w| <= scale/2 inside the range.
+#[test]
+fn prop_weight_quant_error_bounded() {
+    let mut rng = Rng::new(17);
+    for case in 0..50 {
+        let n = 8 + rng.below(64);
+        let data: Vec<f32> = (0..n * 4).map(|_| rng.normal() * 2.0).collect();
+        let t = Tensor::new(&[n, 4], data);
+        for scheme in [
+            QScheme::int8_asymmetric(),
+            QScheme::int8_symmetric(),
+            QScheme::per_channel(8),
+        ] {
+            let mut q = t.clone();
+            let ps = quantize_weights(&mut q, &scheme);
+            let bound = ps
+                .iter()
+                .map(|p| p.scale)
+                .fold(0f32, f32::max)
+                / 2.0
+                + 1e-6;
+            assert!(
+                q.max_abs_diff(&t) <= bound,
+                "case {case} {scheme:?}: err {} > {bound}",
+                q.max_abs_diff(&t)
+            );
+        }
+    }
+}
+
+/// Per-channel quantisation never does worse (L2) than per-tensor.
+#[test]
+fn prop_per_channel_dominates_per_tensor() {
+    let mut rng = Rng::new(23);
+    for case in 0..30 {
+        let n = 4 + rng.below(16);
+        let mut data = Vec::new();
+        for c in 0..n {
+            let scale = rng.log_uniform(0.01, 10.0);
+            for _ in 0..9 {
+                data.push(rng.normal() * scale);
+            }
+            let _ = c;
+        }
+        let t = Tensor::new(&[n, 9], data);
+        let l2 = |scheme: &QScheme| -> f64 {
+            let mut q = t.clone();
+            quantize_weights(&mut q, scheme);
+            q.data()
+                .iter()
+                .zip(t.data())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum()
+        };
+        let pt = l2(&QScheme::int8_asymmetric());
+        let pc = l2(&QScheme::per_channel(8));
+        assert!(pc <= pt * 1.001, "case {case}: per-channel {pc} > {pt}");
+    }
+}
+
+/// Bias absorption + analytic BC compose with CLE without breaking the
+/// pipeline on random models (smoke over the full API).
+#[test]
+fn prop_full_pipeline_smoke() {
+    for case in 0..12u64 {
+        let m = random_two_layer(3000 + case);
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        let q = prep
+            .quantize(
+                &QScheme::int8_asymmetric(),
+                8,
+                BiasCorrMode::Analytic,
+                None,
+            )
+            .unwrap();
+        let x = random_input(&prep.model, 2, case);
+        let yq = nn::forward(&q.model, &x, &q.act_cfg).unwrap();
+        assert!(yq[0].data().iter().all(|v| v.is_finite()));
+    }
+}
+
+/// Model save/load round-trip preserves graph, tensors and stats.
+#[test]
+fn prop_model_io_roundtrip() {
+    for case in 0..6u64 {
+        let mut m = bn_fold::fold(&random_two_layer(4000 + case)).unwrap();
+        relu6::replace_relu6(&mut m);
+        absorb::absorb_high_biases(&mut m, 3.0).unwrap();
+        let dir = std::env::temp_dir().join(format!("dfq_prop_{case}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.dfqm");
+        m.save(&path).unwrap();
+        let back = Model::load(&path).unwrap();
+        assert_eq!(back.nodes.len(), m.nodes.len());
+        assert!(back.folded);
+        for (name, t) in &m.tensors {
+            assert_eq!(back.tensor(name).unwrap(), t, "tensor {name}");
+        }
+        for (id, st) in &m.act_stats {
+            let b = &back.act_stats[id];
+            for (a, c) in st.mean.iter().zip(&b.mean) {
+                assert!((a - c).abs() < 1e-5);
+            }
+        }
+        // function identical after round-trip
+        let x = random_input(&m, 2, case);
+        let y0 = nn::forward(&m, &x, &QuantCfg::fp32(&m)).unwrap();
+        let y1 = nn::forward(&back, &x, &QuantCfg::fp32(&back)).unwrap();
+        assert_eq!(y0[0].max_abs_diff(&y1[0]), 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// im2col conv == direct conv on random shapes (two independent
+/// implementations cross-checked).
+#[test]
+fn prop_conv_implementations_agree() {
+    let mut rng = Rng::new(31);
+    for case in 0..20 {
+        let (n, c, h) = (1 + rng.below(3), 1 + rng.below(6), 5 + rng.below(8));
+        let o = 1 + rng.below(8);
+        let k = [1, 3][rng.below(2)];
+        let stride = 1 + rng.below(2);
+        let pad = k / 2;
+        let x = Tensor::new(
+            &[n, c, h, h],
+            rng.normal_vec(n * c * h * h, 1.0),
+        );
+        let w = Tensor::new(&[o, c, k, k], rng.normal_vec(o * c * k * k, 0.5));
+        let b: Vec<f32> = rng.normal_vec(o, 0.5);
+        let a = nn::conv::conv2d(&x, &w, Some(&b), stride, pad, 1);
+        let d = nn::conv::conv2d_direct(&x, &w, Some(&b), stride, pad, 1);
+        assert!(
+            a.max_abs_diff(&d) < 1e-3,
+            "case {case}: conv mismatch {}",
+            a.max_abs_diff(&d)
+        );
+    }
+}
+
+/// Graph validation rejects malformed models.
+#[test]
+fn prop_validation_catches_corruption() {
+    let m = bn_fold::fold(&random_two_layer(5000)).unwrap();
+    // dangling input
+    let mut bad = m.clone();
+    bad.node_mut(bad.outputs[0]).inputs[0] = 999;
+    assert!(bad.validate().is_err());
+    // wrong weight shape
+    let mut bad = m.clone();
+    let wname = match &bad.layers()[0].op {
+        Op::Conv { w, .. } => w.clone(),
+        _ => unreachable!(),
+    };
+    bad.tensors.insert(wname, Tensor::zeros(&[1, 1, 1, 1]));
+    assert!(bad.validate().is_err());
+}
