@@ -13,15 +13,8 @@ use dfq::util::bench::{section, Bench};
 use dfq::util::rng::Rng;
 
 fn main() {
-    let man = match Manifest::load(dfq::artifacts_dir()) {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("skipping engine bench (no artifacts): {e:#}");
-            return;
-        }
-    };
-    let rt = Runtime::cpu().expect("PJRT client");
-
+    // The reference primitives need no artifacts: always bench them (the
+    // int8 counterparts live in benches/qengine.rs, same JSON format).
     section("reference primitives");
     let mut rng = Rng::new(1);
     let a: Vec<f32> = rng.normal_vec(1024 * 64, 1.0);
@@ -31,20 +24,38 @@ fn main() {
             std::hint::black_box(nn::conv::matmul(&a, &b, 1024, 64, 64));
         })
         .with_units(2.0 * 1024.0 * 64.0 * 64.0, "flop")
-        .print();
+        .print()
+        .print_json();
     let x = Tensor::new(&[8, 24, 16, 16], rng.normal_vec(8 * 24 * 256, 1.0));
     let w = Tensor::new(&[96, 24, 1, 1], rng.normal_vec(96 * 24, 0.3));
     Bench::new("pointwise conv 8x24x16x16 -> 96 (reference)")
         .run(|| {
             std::hint::black_box(nn::conv::conv2d(&x, &w, None, 1, 0, 1));
         })
-        .print();
+        .print()
+        .print_json();
     let wd = Tensor::new(&[24, 1, 3, 3], rng.normal_vec(24 * 9, 0.3));
     Bench::new("depthwise conv 8x24x16x16 (reference)")
         .run(|| {
             std::hint::black_box(nn::conv::conv2d(&x, &wd, None, 1, 1, 24));
         })
-        .print();
+        .print()
+        .print_json();
+
+    let man = match Manifest::load(dfq::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping PJRT engine benches (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping PJRT engine benches: {e:#}");
+            return;
+        }
+    };
 
     section("pallas fq-matmul kernel (AOT, PJRT)");
     if let Some((hlo, m, k, n)) = man.kernel_bench.clone() {

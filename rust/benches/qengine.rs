@@ -1,0 +1,150 @@
+//! Bench: true-int8 execution vs the f32 reference engine — raw GEMM
+//! (u8×i8→i32 vs f32) and whole conv layers (im2col + GEMM + requant
+//! epilogue vs im2col + f32 GEMM) across MobileNet-ish shapes.
+//!
+//! Prints the human report lines *and* the shared one-line JSON records
+//! (see `BenchResult::json`, same format as `benches/engine.rs`), so the
+//! driver can diff int8 vs f32 throughput mechanically.
+
+use dfq::nn::conv;
+use dfq::nn::qengine::{self, QActTensor, QConv};
+use dfq::nn::SiteCfg;
+use dfq::quant::{params_for_range, quantize_weights_retaining, QScheme};
+use dfq::tensor::Tensor;
+use dfq::util::bench::{section, Bench};
+use dfq::util::rng::Rng;
+
+fn rand_t(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+    Tensor::new(shape, rng.normal_vec(shape.iter().product(), std))
+}
+
+/// Quantised conv fixture: packed int8 layer + matching f32 operands.
+struct Fixture {
+    name: String,
+    x_f32: Tensor,
+    w_f32: Tensor,
+    bias: Vec<f32>,
+    xq: QActTensor,
+    qc: QConv,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    flops: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fixture(
+    rng: &mut Rng,
+    name: &str,
+    n: usize,
+    c_in: usize,
+    c_out: usize,
+    hw: usize,
+    k: usize,
+    stride: usize,
+    groups: usize,
+) -> Fixture {
+    let pad = k / 2;
+    let mut w = rand_t(rng, &[c_out, c_in / groups, k, k], 0.3);
+    let (_, codes) =
+        quantize_weights_retaining(&mut w, &QScheme::int8_asymmetric())
+            .unwrap();
+    let bias: Vec<f32> = rng.normal_vec(c_out, 0.1);
+
+    // ReLU-looking input: non-negative, on a zp=0 grid like a real
+    // inter-layer feature map
+    let mut x = rand_t(rng, &[n, c_in, hw, hw], 1.0);
+    x.map_inplace(|v| v.max(0.0));
+    let in_qp = params_for_range(0.0, x.max().max(0.1), 8, false);
+    let xq = QActTensor::quantize(&x, &in_qp);
+    let x_f32 = xq.dequantize();
+
+    let y = conv::conv2d(&x_f32, &w, Some(&bias), stride, pad, groups);
+    let p = params_for_range(0.0, y.max().max(0.1), 8, false);
+    let row = SiteCfg {
+        scale: p.scale,
+        zero_point: p.zero_point,
+        n_levels: p.n_levels,
+        clip_hi: f32::INFINITY,
+    };
+    let qc = QConv::pack(&codes, &bias, stride, pad, groups, &in_qp,
+                         Some(&row))
+        .unwrap();
+
+    let oh = (hw + 2 * pad - k) / stride + 1;
+    let flops =
+        2.0 * (n * c_out * oh * oh * (c_in / groups) * k * k) as f64;
+    Fixture {
+        name: name.to_string(),
+        x_f32,
+        w_f32: w,
+        bias,
+        xq,
+        qc,
+        stride,
+        pad,
+        groups,
+        flops,
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    section("raw GEMM — f32 vs u8×i8→i32");
+    for (m, k, n) in [(3136usize, 64usize, 64usize), (784, 128, 128)] {
+        let flops = 2.0 * (m * k * n) as f64;
+        let a: Vec<f32> = rng.normal_vec(m * k, 1.0);
+        let b: Vec<f32> = rng.normal_vec(k * n, 1.0);
+        Bench::new(format!("f32 gemm {m}x{k}x{n}"))
+            .run(|| {
+                std::hint::black_box(conv::matmul(&a, &b, m, k, n));
+            })
+            .with_units(flops, "flop")
+            .print()
+            .print_json();
+        let aq: Vec<u8> =
+            (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let bq: Vec<i8> =
+            (0..k * n).map(|_| rng.below(256) as u8 as i8).collect();
+        Bench::new(format!("int8 gemm {m}x{k}x{n}"))
+            .run(|| {
+                std::hint::black_box(qengine::qgemm(&aq, &bq, m, k, n));
+            })
+            .with_units(flops, "flop")
+            .print()
+            .print_json();
+    }
+
+    section("conv layers (MobileNet-ish) — fake-quant f32 vs fused int8");
+    let fixtures = [
+        fixture(&mut rng, "pointwise 32->64 @28", 1, 32, 64, 28, 1, 1, 1),
+        fixture(&mut rng, "pointwise 64->128 @14", 1, 64, 128, 14, 1, 1, 1),
+        fixture(&mut rng, "dense 3x3 32->64 @14", 1, 32, 64, 14, 3, 1, 1),
+        fixture(&mut rng, "dense 3x3 s2 32->64 @28", 1, 32, 64, 28, 3, 2, 1),
+        fixture(&mut rng, "depthwise 3x3 64 @28", 1, 64, 64, 28, 3, 1, 64),
+    ];
+    for f in &fixtures {
+        Bench::new(format!("f32  conv {}", f.name))
+            .run(|| {
+                std::hint::black_box(conv::conv2d(
+                    &f.x_f32,
+                    &f.w_f32,
+                    Some(&f.bias),
+                    f.stride,
+                    f.pad,
+                    f.groups,
+                ));
+            })
+            .with_units(f.flops, "flop")
+            .print()
+            .print_json();
+        Bench::new(format!("int8 conv {}", f.name))
+            .run(|| {
+                std::hint::black_box(f.qc.run_q(&f.xq).unwrap());
+            })
+            .with_units(f.flops, "flop")
+            .print()
+            .print_json();
+    }
+}

@@ -21,8 +21,9 @@ pub mod testutil;
 use anyhow::Result;
 
 use crate::graph::{Model, Op};
-use crate::nn::QuantCfg;
+use crate::nn::{qengine, QuantCfg};
 use crate::quant::{self, QParams, QScheme};
+use crate::tensor::QTensor;
 
 /// Bias-correction mode (paper §4.2 / appendix D).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -127,15 +128,39 @@ pub fn quantize_data_free(model: &Model, cfg: &DfqConfig) -> Result<Prepared> {
     Ok(Prepared { model: m, reference, log })
 }
 
-/// Everything needed to run the quantised model on either engine.
+/// Everything needed to run the quantised model on any engine.
 #[derive(Debug, Clone)]
 pub struct QuantizedModel {
     /// Weights fake-quantised (+ bias-corrected) model.
     pub model: Model,
     /// Per-layer weight grids (one or out_ch entries per layer).
     pub weight_params: Vec<(usize, Vec<QParams>)>,
+    /// Retained integer weight codes per layer (node id → signed-storage
+    /// [`QTensor`]): the grids the fake-quant image was computed from,
+    /// kept so the int8 engine never re-derives them. Empty when the
+    /// scheme is wider than 8 bits.
+    pub int_weights: Vec<(usize, QTensor)>,
     /// Activation quantisation rows for the executable / engine.
     pub act_cfg: QuantCfg,
+}
+
+impl QuantizedModel {
+    /// Pack the retained integer grids into a true-int8 executor
+    /// ([`qengine::QModel`]): per-layer i8 weights, i32 biases pre-folded
+    /// with the input zero-points, fixed-point requant multipliers, and
+    /// fused clamped-ReLU epilogues. Requires an 8-bit-or-narrower
+    /// weight scheme and quantised activations (`act_bits` in 1..=8).
+    pub fn pack_int8(&self) -> Result<qengine::QModel> {
+        if self.int_weights.len() < self.model.layers().len() {
+            anyhow::bail!(
+                "pack_int8 needs retained integer weights for all {} \
+                 layers, have {} (quantise with bits <= 8)",
+                self.model.layers().len(),
+                self.int_weights.len()
+            );
+        }
+        qengine::pack(&self.model, &self.int_weights, &self.act_cfg)
+    }
 }
 
 impl Prepared {
@@ -151,6 +176,7 @@ impl Prepared {
     ) -> Result<QuantizedModel> {
         let mut q = self.model.clone();
         let mut weight_params = Vec::new();
+        let mut int_weights = Vec::new();
         let layer_ids: Vec<usize> = q.layers().iter().map(|n| n.id).collect();
         for id in layer_ids {
             let w = match &q.node(id).op {
@@ -158,7 +184,16 @@ impl Prepared {
                 _ => unreachable!(),
             };
             let t = q.tensors.get_mut(&w).expect("weight tensor");
-            weight_params.push((id, quant::quantize_weights(t, scheme)));
+            if scheme.bits <= 8 {
+                // retain the integer grid the fake-quant image comes
+                // from — the int8 engine executes these codes directly
+                let (ps, codes) =
+                    quant::quantize_weights_retaining(t, scheme)?;
+                weight_params.push((id, ps));
+                int_weights.push((id, codes));
+            } else {
+                weight_params.push((id, quant::quantize_weights(t, scheme)));
+            }
         }
         match bc {
             BiasCorrMode::None => {}
@@ -179,7 +214,7 @@ impl Prepared {
             scheme.symmetric,
             quant::ranges::DEFAULT_N_SIGMA,
         )?;
-        Ok(QuantizedModel { model: q, weight_params, act_cfg })
+        Ok(QuantizedModel { model: q, weight_params, int_weights, act_cfg })
     }
 
     /// Bias-correct the *unquantised* prepared model against its

@@ -27,6 +27,44 @@
 //!     .unwrap();
 //! # let _ = q;
 //! ```
+//!
+//! ## True int8 execution
+//!
+//! Beyond the fake-quant *simulation* the engines above run, the crate
+//! executes DFQ output on real integer grids:
+//!
+//! * [`tensor::QTensor`] holds u8/i8 grid codes with per-tensor or
+//!   per-channel [`quant::QParams`]; [`dfq::Prepared::quantize`] retains
+//!   the integer weight grids it computes
+//!   ([`dfq::QuantizedModel::int_weights`]).
+//! * [`dfq::QuantizedModel::pack_int8`] lowers the model to an
+//!   [`nn::qengine::QModel`]: integer im2col + u8×i8→i32 GEMM convs with
+//!   i32 biases pre-folded with the input zero-points
+//!   (`Σ(qa-za)(qw-zw) = Σ qa·qw - zw·rowsum - za·colsum + K·za·zw`),
+//!   a depthwise direct path, and fixed-point requantisation
+//!   (`M = s_in·s_w/s_out` as an i64 multiplier + shift) with the site's
+//!   clamped-ReLU/ReLU6 fused into the integer clamp. Parity with the
+//!   fake-quant oracle is one quantisation step per element.
+//! * [`serve::QuantExecutor`] plugs the packed model into the serving
+//!   router as a `BatchExecutor`, so one [`serve::Router`] hosts
+//!   f32-oracle and int8 variants side by side:
+//!
+//! ```no_run
+//! # use dfq::graph::Model;
+//! # use dfq::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+//! # use dfq::quant::QScheme;
+//! use dfq::serve::{QuantExecutor, ServeConfig, Server};
+//!
+//! # let model = Model::load("artifacts/micronet_v2.dfqm").unwrap();
+//! # let prepared = quantize_data_free(&model, &DfqConfig::default()).unwrap();
+//! let q = prepared
+//!     .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::Analytic, None)
+//!     .unwrap();
+//! let server = Server::start(ServeConfig::default(), move || {
+//!     Ok(Box::new(QuantExecutor::from_quantized(&q, 64)?))
+//! });
+//! # drop(server);
+//! ```
 
 pub mod dfq;
 pub mod eval;

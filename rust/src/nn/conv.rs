@@ -61,7 +61,21 @@ pub fn conv2d(
         }
         let mut col = vec![0f32; oh * ow * kdim];
         for img in 0..n {
-            im2col(x, img, kh, kw, stride, pad, oh, ow, &mut col);
+            im2col_into(
+                x.data(),
+                c_in,
+                h,
+                wd,
+                img,
+                kh,
+                kw,
+                stride,
+                pad,
+                oh,
+                ow,
+                0.0,
+                &mut col,
+            );
             let y = matmul(&col, &wt, oh * ow, kdim, c_out);
             let od = out.data_mut();
             let base = img * c_out * oh * ow;
@@ -113,10 +127,16 @@ pub fn conv2d(
 }
 
 /// Extract im2col patches for one image into `col` laid out as
-/// (oh*ow, c_in*kh*kw) row-major.
+/// (oh*ow, c_in*kh*kw) row-major. Generic over the element type so the
+/// f32 engine and the integer engine ([`super::qengine`]) share the
+/// layout code; `fill` is the padding value (0.0 for f32, the input
+/// zero-point for u8 grids, where it *represents* 0).
 #[allow(clippy::too_many_arguments)]
-fn im2col(
-    x: &Tensor,
+pub(crate) fn im2col_into<T: Copy>(
+    xd: &[T],
+    c_in: usize,
+    h: usize,
+    wd: usize,
     img: usize,
     kh: usize,
     kw: usize,
@@ -124,12 +144,11 @@ fn im2col(
     pad: usize,
     oh: usize,
     ow: usize,
-    col: &mut [f32],
+    fill: T,
+    col: &mut [T],
 ) {
-    let (_, c_in, h, wd) = dims4(x);
-    let xd = x.data();
     let kdim = c_in * kh * kw;
-    col.fill(0.0);
+    col.fill(fill);
     for oy in 0..oh {
         for ox in 0..ow {
             let row = (oy * ow + ox) * kdim;

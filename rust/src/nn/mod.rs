@@ -8,6 +8,7 @@
 
 pub mod conv;
 pub mod ops;
+pub mod qengine;
 
 use std::collections::HashMap;
 

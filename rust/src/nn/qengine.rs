@@ -1,0 +1,1055 @@
+//! True int8 execution: integer im2col + u8×i8→i32 GEMM with fixed-point
+//! requantisation, and a packed whole-graph executor.
+//!
+//! The f32 engine ([`super::forward`]) *simulates* quantisation: it
+//! computes every conv in f32 over fake-quantised values. This module
+//! executes the same function on the integer grids themselves:
+//!
+//! * activations are u8 codes on their site grid `(s_in, zp_in)`,
+//! * weights are i8 offset codes (`q - 128`) from the retained
+//!   [`QTensor`] grids of [`crate::dfq::QuantizedModel`],
+//! * a conv is `acc[p,o] = Σ_k a[p,k]·w[k,o]` in i32 (the GEMM reuses the
+//!   [`crate::util::parallel`] row-chunking of the f32 path, and the
+//!   im2col layout code is shared via [`super::conv::im2col_into`] with
+//!   the input zero-point as padding value — `zp_in` *represents* 0),
+//! * zero-point cross terms are folded per the gemmlowp identity
+//!   `Σ(qa-za)(qw-zw) = Σ qa·qw - zw·rowsum(qa) - za·colsum(qw) + K·za·zw`
+//!   (colsum/K terms are baked into an i32 bias at pack time; the rowsum
+//!   term costs one pass per im2col row),
+//! * requantisation to the next site grid multiplies by
+//!   `M = s_in·s_w/s_out` as an i64 fixed-point multiplier + shift, with
+//!   the clamped-ReLU/ReLU6 of the site fused into the integer clamp
+//!   `q ∈ [max(0, zp_out), zp_out + round(clip_hi/s_out)]` — matching the
+//!   f32 oracle's `clip_act` + `fake_quant` semantics to within one
+//!   quantisation step per element.
+//!
+//! Ops with no integer kernel (GAP, the linear head, residual adds) fall
+//! back to exact f32 over dequantised on-grid values, which is
+//! bit-identical to what the oracle computes at those nodes.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{Model, Op};
+use crate::quant::QParams;
+use crate::tensor::{QTensor, Tensor};
+use crate::util::parallel;
+
+use super::conv::im2col_into;
+use super::{ops, QuantCfg, SiteCfg};
+
+// -- quantised activation tensors -------------------------------------------
+
+/// A feature map held as u8 grid codes with one per-tensor grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QActTensor {
+    pub shape: Vec<usize>,
+    pub codes: Vec<u8>,
+    pub qp: QParams,
+}
+
+fn assert_act_grid(qp: &QParams) {
+    assert!(
+        (2.0..=256.0).contains(&qp.n_levels),
+        "activation grid needs 2..=256 levels, got {}",
+        qp.n_levels
+    );
+    assert!(
+        qp.zero_point.fract() == 0.0
+            && qp.zero_point >= 0.0
+            && qp.zero_point <= qp.n_levels - 1.0,
+        "activation zero point {} not an integer on the grid",
+        qp.zero_point
+    );
+}
+
+impl QActTensor {
+    /// Quantise an f32 tensor onto `qp` (same rounding as `fake_quant`,
+    /// via the shared [`crate::tensor::qtensor::code_of`]).
+    pub fn quantize(t: &Tensor, qp: &QParams) -> QActTensor {
+        assert_act_grid(qp);
+        let codes = t
+            .data()
+            .iter()
+            .map(|&x| crate::tensor::qtensor::code_of(x, qp))
+            .collect();
+        QActTensor { shape: t.shape().to_vec(), codes, qp: *qp }
+    }
+
+    /// Exact f32 image of the codes.
+    pub fn dequantize(&self) -> Tensor {
+        let zp = self.qp.zero_point;
+        let s = self.qp.scale;
+        Tensor::new(
+            &self.shape,
+            self.codes.iter().map(|&q| (q as f32 - zp) * s).collect(),
+        )
+    }
+}
+
+// -- integer GEMM primitives ------------------------------------------------
+
+/// C[m,n] = A[m,k] · B[k,n] with u8 activations × i8 weights → i32
+/// accumulators. Same saxpy-style loop and row-parallel chunking as the
+/// f32 [`super::conv::matmul`]; the `q == 0` skip exploits ReLU sparsity
+/// (post-ReLU grids have `zp == 0`, so code 0 is exactly value 0).
+pub fn qgemm(a: &[u8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    {
+        let cells = parallel::as_send_cells(&mut c);
+        parallel::par_chunks(m, |lo, hi| {
+            for i in lo..hi {
+                let arow = &a[i * k..(i + 1) * k];
+                // SAFETY: rows [lo, hi) are written by this chunk only.
+                let crow = unsafe { cells.slice(i * n, n) };
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0 {
+                        continue;
+                    }
+                    let av = av as i32;
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j] as i32;
+                    }
+                }
+            }
+        });
+    }
+    c
+}
+
+/// Per-row sums of a u8 matrix (the gemmlowp rowsum correction input).
+pub fn rowsums_u8(a: &[u8], m: usize, k: usize) -> Vec<i32> {
+    (0..m)
+        .map(|i| a[i * k..(i + 1) * k].iter().map(|&v| v as i32).sum())
+        .collect()
+}
+
+// -- fixed-point requantisation ---------------------------------------------
+
+/// A positive real multiplier `M` as `m · 2^-shift` with `m ∈ [2^30,
+/// 2^31)`; degenerate magnitudes fall back to f64 rounding.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mult {
+    Fixed { m: i32, shift: u32 },
+    Float(f64),
+}
+
+/// Decompose `x > 0` into the i64 fixed-point form.
+pub fn mult_for(x: f64) -> Mult {
+    if !x.is_finite() || x <= 0.0 {
+        return Mult::Float(x.max(0.0));
+    }
+    let mut v = x;
+    let mut e = 0i32;
+    while v < 0.5 {
+        v *= 2.0;
+        e -= 1;
+    }
+    while v >= 1.0 {
+        v /= 2.0;
+        e += 1;
+    }
+    let mut m = (v * (1u64 << 31) as f64).round() as i64;
+    let mut shift = 31 - e;
+    if m == 1i64 << 31 {
+        m >>= 1;
+        shift -= 1;
+    }
+    if !(1..=62).contains(&shift) {
+        return Mult::Float(x);
+    }
+    Mult::Fixed { m: m as i32, shift: shift as u32 }
+}
+
+/// `round(t · M)` (round half away from zero for the fixed-point form —
+/// within the engine's one-step tolerance of the oracle's ties-to-even).
+#[inline]
+pub fn apply_mult(t: i64, m: &Mult) -> i64 {
+    match *m {
+        Mult::Fixed { m, shift } => {
+            let prod = t as i128 * m as i128;
+            let half = 1i128 << (shift - 1);
+            let r = if prod >= 0 {
+                (prod + half) >> shift
+            } else {
+                -((-prod + half) >> shift)
+            };
+            r as i64
+        }
+        Mult::Float(f) => (t as f64 * f).round() as i64,
+    }
+}
+
+// -- packed convolution layers ----------------------------------------------
+
+/// Fused requant epilogue: integer bias (zero-point corrections + the
+/// f32 bias folded onto the accumulator grid), per-channel multipliers,
+/// and the clamp implementing both the output grid and the activation's
+/// clipped-ReLU bounds.
+#[derive(Debug, Clone)]
+struct Epilogue {
+    /// `round(b/(s_in·s_w)) - zp_in·colsum + K·zp_in·zp_w` per channel.
+    bias_q: Vec<i64>,
+    /// `s_in·s_w[o]/s_out` per channel.
+    mult: Vec<Mult>,
+    zp_out: i32,
+    q_lo: i32,
+    q_hi: i32,
+    out_qp: QParams,
+}
+
+/// One conv layer packed for integer execution: offset i8 weight codes,
+/// per-channel grids, zero-point correction constants, and (when fused
+/// with an activation site) the requant [`Epilogue`].
+#[derive(Debug, Clone)]
+pub struct QConv {
+    c_out: usize,
+    cig: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    /// groups == 1: transposed (kdim, c_out) for the GEMM;
+    /// depthwise: O-major (c, kh·kw).
+    w: Vec<i8>,
+    /// Signed-storage weight zero point (`zp_w - 128`) per out channel.
+    zp_w: Vec<i32>,
+    s_w: Vec<f32>,
+    /// `-zp_in·colsum[o] + K·zp_in·zp_w[o]` per out channel.
+    zp_corr: Vec<i64>,
+    bias_f: Vec<f32>,
+    in_qp: QParams,
+    epi: Option<Epilogue>,
+}
+
+impl QConv {
+    /// Pack one conv layer. `w` must hold signed (i8) codes with OIHW
+    /// shape; `in_qp` is the grid of the layer's input feature map.
+    /// `fused` carries the activation site row this conv feeds (when it
+    /// is the site's only producer): the epilogue then requantises to
+    /// that grid with the site's clip bounds fused (ReLU at `zp_out`,
+    /// ReLU6 via `clip_hi`). Without `fused`, [`QConv::run_f32`] must be
+    /// used (integer accumulate, f32 output).
+    pub fn pack(
+        w: &QTensor,
+        bias: &[f32],
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        in_qp: &QParams,
+        fused: Option<&SiteCfg>,
+    ) -> Result<QConv> {
+        let shape = w.shape();
+        if shape.len() != 4 {
+            bail!("QConv wants OIHW weights, got {:?}", shape);
+        }
+        let (c_out, cig, kh, kw) = (shape[0], shape[1], shape[2], shape[3]);
+        if groups != 1 && (cig != 1 || groups != c_out) {
+            bail!("QConv supports dense or depthwise grouping only");
+        }
+        if bias.len() != c_out {
+            bail!("bias len {} != out channels {}", bias.len(), c_out);
+        }
+        assert_act_grid(in_qp);
+        let codes = w
+            .codes_i8()
+            .ok_or_else(|| anyhow!("QConv wants signed (i8) weight codes"))?;
+        let per = cig * kh * kw;
+        let zp_in = in_qp.zero_point as i64;
+
+        // Per-channel grids (per-tensor grids broadcast).
+        let mut zp_w = Vec::with_capacity(c_out);
+        let mut s_w = Vec::with_capacity(c_out);
+        for o in 0..c_out {
+            let p = w.param_for_channel(o);
+            zp_w.push(p.zero_point as i32 - 128);
+            s_w.push(p.scale);
+        }
+
+        // colsum + the constant zero-point correction terms.
+        let mut zp_corr = Vec::with_capacity(c_out);
+        for o in 0..c_out {
+            let colsum: i64 = codes[o * per..(o + 1) * per]
+                .iter()
+                .map(|&v| v as i64)
+                .sum();
+            zp_corr.push(
+                -zp_in * colsum + per as i64 * zp_in * zp_w[o] as i64,
+            );
+        }
+
+        // Weight layout for the kernels.
+        let w_packed = if groups == 1 {
+            // transpose OIHW -> (kdim, c_out) once, at pack time
+            let mut wt = vec![0i8; per * c_out];
+            for o in 0..c_out {
+                for kk in 0..per {
+                    wt[kk * c_out + o] = codes[o * per + kk];
+                }
+            }
+            wt
+        } else {
+            codes.to_vec()
+        };
+
+        let epi = match fused {
+            None => None,
+            Some(row) => {
+                if !(2.0..=256.0).contains(&row.n_levels) {
+                    bail!(
+                        "fused epilogue needs a quantised site \
+                         (2..=256 levels), got {}",
+                        row.n_levels
+                    );
+                }
+                let out_qp = QParams {
+                    scale: row.scale,
+                    zero_point: row.zero_point,
+                    n_levels: row.n_levels,
+                };
+                assert_act_grid(&out_qp);
+                let zp_out = out_qp.zero_point as i32;
+                let n_hi = out_qp.n_levels as i32 - 1;
+                let q_lo = zp_out.clamp(0, n_hi); // clamp(x, 0, ..) of the act
+                let q_hi = if row.clip_hi.is_finite() {
+                    (zp_out + (row.clip_hi / row.scale).round() as i32)
+                        .clamp(q_lo, n_hi)
+                } else {
+                    n_hi
+                };
+                let mut bias_q = Vec::with_capacity(c_out);
+                let mut mult = Vec::with_capacity(c_out);
+                for o in 0..c_out {
+                    let acc_scale = in_qp.scale as f64 * s_w[o] as f64;
+                    bias_q.push(
+                        (bias[o] as f64 / acc_scale).round() as i64
+                            + zp_corr[o],
+                    );
+                    mult.push(mult_for(acc_scale / row.scale as f64));
+                }
+                Some(Epilogue { bias_q, mult, zp_out, q_lo, q_hi, out_qp })
+            }
+        };
+
+        Ok(QConv {
+            c_out,
+            cig,
+            kh,
+            kw,
+            stride,
+            pad,
+            groups,
+            w: w_packed,
+            zp_w,
+            s_w,
+            zp_corr,
+            bias_f: bias.to_vec(),
+            in_qp: *in_qp,
+            epi,
+        })
+    }
+
+    pub fn out_channels(&self) -> usize {
+        self.c_out
+    }
+
+    pub fn is_fused(&self) -> bool {
+        self.epi.is_some()
+    }
+
+    fn check_input(&self, x: &QActTensor) -> Result<(usize, usize, usize)> {
+        if x.qp != self.in_qp {
+            bail!(
+                "input grid mismatch: layer packed for {:?}, got {:?}",
+                self.in_qp,
+                x.qp
+            );
+        }
+        if x.shape.len() != 4 || x.shape[1] != self.cig * self.groups {
+            bail!(
+                "input shape {:?} incompatible with conv ({} channels)",
+                x.shape,
+                self.cig * self.groups
+            );
+        }
+        Ok((x.shape[0], x.shape[2], x.shape[3]))
+    }
+
+    /// Integer accumulators for one image, plus the im2col row sums
+    /// (dense) — the shared front half of both run paths.
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_dense(
+        &self,
+        x: &QActTensor,
+        img: usize,
+        h: usize,
+        wd: usize,
+        oh: usize,
+        ow: usize,
+        col: &mut [u8],
+    ) -> (Vec<i32>, Vec<i32>) {
+        let c_in = self.cig;
+        let kdim = c_in * self.kh * self.kw;
+        im2col_into(
+            &x.codes,
+            c_in,
+            h,
+            wd,
+            img,
+            self.kh,
+            self.kw,
+            self.stride,
+            self.pad,
+            oh,
+            ow,
+            self.in_qp.zero_point as u8,
+            col,
+        );
+        let rows = rowsums_u8(col, oh * ow, kdim);
+        let acc = qgemm(col, &self.w, oh * ow, kdim, self.c_out);
+        (acc, rows)
+    }
+
+    /// Fused path: u8 in → u8 out on the activation site grid.
+    pub fn run_q(&self, x: &QActTensor) -> Result<QActTensor> {
+        let epi = self
+            .epi
+            .as_ref()
+            .ok_or_else(|| anyhow!("QConv not packed with a fused epilogue"))?;
+        let (n, h, wd) = self.check_input(x)?;
+        let oh = (h + 2 * self.pad - self.kh) / self.stride + 1;
+        let ow = (wd + 2 * self.pad - self.kw) / self.stride + 1;
+        let ohw = oh * ow;
+        let mut out = vec![0u8; n * self.c_out * ohw];
+
+        if self.groups == 1 {
+            let kdim = self.cig * self.kh * self.kw;
+            let mut col = vec![0u8; ohw * kdim];
+            for img in 0..n {
+                let (acc, rows) =
+                    self.accumulate_dense(x, img, h, wd, oh, ow, &mut col);
+                let base = img * self.c_out * ohw;
+                for o in 0..self.c_out {
+                    let zpw = self.zp_w[o] as i64;
+                    let bq = epi.bias_q[o];
+                    let m = &epi.mult[o];
+                    let dst = &mut out[base + o * ohw..base + (o + 1) * ohw];
+                    for (p, d) in dst.iter_mut().enumerate() {
+                        let t = acc[p * self.c_out + o] as i64
+                            - zpw * rows[p] as i64
+                            + bq;
+                        let q = (apply_mult(t, m) + epi.zp_out as i64)
+                            .clamp(epi.q_lo as i64, epi.q_hi as i64);
+                        *d = q as u8;
+                    }
+                }
+            }
+        } else {
+            let requant = |c: usize, t: i64| {
+                let q = (apply_mult(t + epi.bias_q[c], &epi.mult[c])
+                    + epi.zp_out as i64)
+                    .clamp(epi.q_lo as i64, epi.q_hi as i64);
+                q as u8
+            };
+            self.depthwise(x, n, h, wd, oh, ow, requant, &mut out);
+        }
+        Ok(QActTensor {
+            shape: vec![n, self.c_out, oh, ow],
+            codes: out,
+            qp: epi.out_qp,
+        })
+    }
+
+    /// Unfused path: u8 in → exact f32 pre-activation output (integer
+    /// accumulate, float epilogue). Matches the f32 oracle's conv output
+    /// on the same fake-quantised operands up to f32 rounding.
+    pub fn run_f32(&self, x: &QActTensor) -> Result<Tensor> {
+        let (n, h, wd) = self.check_input(x)?;
+        let oh = (h + 2 * self.pad - self.kh) / self.stride + 1;
+        let ow = (wd + 2 * self.pad - self.kw) / self.stride + 1;
+        let ohw = oh * ow;
+        let mut out = Tensor::zeros(&[n, self.c_out, oh, ow]);
+        let od = out.data_mut();
+
+        if self.groups == 1 {
+            let kdim = self.cig * self.kh * self.kw;
+            let mut col = vec![0u8; ohw * kdim];
+            for img in 0..n {
+                let (acc, rows) =
+                    self.accumulate_dense(x, img, h, wd, oh, ow, &mut col);
+                let base = img * self.c_out * ohw;
+                for o in 0..self.c_out {
+                    let zpw = self.zp_w[o] as i64;
+                    let corr = self.zp_corr[o];
+                    let scale = self.in_qp.scale as f64 * self.s_w[o] as f64;
+                    let bias = self.bias_f[o];
+                    let dst =
+                        &mut od[base + o * ohw..base + (o + 1) * ohw];
+                    for (p, d) in dst.iter_mut().enumerate() {
+                        let t = acc[p * self.c_out + o] as i64
+                            - zpw * rows[p] as i64
+                            + corr;
+                        *d = (t as f64 * scale) as f32 + bias;
+                    }
+                }
+            }
+        } else {
+            self.depthwise_f32(x, n, h, wd, oh, ow, od);
+        }
+        Ok(out)
+    }
+
+    /// Depthwise integer core with a per-element epilogue producing u8.
+    /// `t` handed to the epilogue is the raw rowsum-corrected i64
+    /// accumulator; the closure adds its own per-channel constants
+    /// (`bias_q` already folds the static zero-point correction).
+    #[allow(clippy::too_many_arguments)]
+    fn depthwise<F>(
+        &self,
+        x: &QActTensor,
+        n: usize,
+        h: usize,
+        wd: usize,
+        oh: usize,
+        ow: usize,
+        epilogue: F,
+        out: &mut [u8],
+    ) where
+        F: Fn(usize, i64) -> u8,
+    {
+        let c = self.c_out;
+        let khw = self.kh * self.kw;
+        let zp_in = self.in_qp.zero_point as i32;
+        for img in 0..n {
+            for ch in 0..c {
+                let xoff = (img * c + ch) * h * wd;
+                let ooff = (img * c + ch) * oh * ow;
+                let wch = &self.w[ch * khw..(ch + 1) * khw];
+                let zpw = self.zp_w[ch] as i64;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let (acc, sx) = self.dw_patch(
+                            &x.codes, xoff, h, wd, oy, ox, wch, zp_in,
+                        );
+                        let t = acc - zpw * sx as i64;
+                        out[ooff + oy * ow + ox] = epilogue(ch, t);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Depthwise integer core with the f32 epilogue.
+    #[allow(clippy::too_many_arguments)]
+    fn depthwise_f32(
+        &self,
+        x: &QActTensor,
+        n: usize,
+        h: usize,
+        wd: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [f32],
+    ) {
+        let c = self.c_out;
+        let khw = self.kh * self.kw;
+        let zp_in = self.in_qp.zero_point as i32;
+        for img in 0..n {
+            for ch in 0..c {
+                let xoff = (img * c + ch) * h * wd;
+                let ooff = (img * c + ch) * oh * ow;
+                let wch = &self.w[ch * khw..(ch + 1) * khw];
+                let zpw = self.zp_w[ch] as i64;
+                let scale = self.in_qp.scale as f64 * self.s_w[ch] as f64;
+                let bias = self.bias_f[ch];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let (acc, sx) = self.dw_patch(
+                            &x.codes, xoff, h, wd, oy, ox, wch, zp_in,
+                        );
+                        let t = acc - zpw * sx as i64 + self.zp_corr[ch];
+                        out[ooff + oy * ow + ox] =
+                            (t as f64 * scale) as f32 + bias;
+                    }
+                }
+            }
+        }
+    }
+
+    /// One depthwise kernel window: (Σ q·w, Σ q) with out-of-bounds
+    /// positions read as `zp_in` (they represent exact zeros).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn dw_patch(
+        &self,
+        codes: &[u8],
+        xoff: usize,
+        h: usize,
+        wd: usize,
+        oy: usize,
+        ox: usize,
+        wch: &[i8],
+        zp_in: i32,
+    ) -> (i64, i32) {
+        let mut acc = 0i64;
+        let mut sx = 0i32;
+        let iy0 = oy * self.stride;
+        let ix0 = ox * self.stride;
+        for dy in 0..self.kh {
+            let iy = iy0 + dy;
+            for dx in 0..self.kw {
+                let ix = ix0 + dx;
+                let q = if iy < self.pad
+                    || iy >= h + self.pad
+                    || ix < self.pad
+                    || ix >= wd + self.pad
+                {
+                    zp_in
+                } else {
+                    codes[xoff + (iy - self.pad) * wd + (ix - self.pad)]
+                        as i32
+                };
+                acc += (q * wch[dy * self.kw + dx] as i32) as i64;
+                sx += q;
+            }
+        }
+        (acc, sx)
+    }
+}
+
+// -- packed whole-graph executor --------------------------------------------
+
+/// Runtime value: a quantised feature map or an exact f32 tensor.
+enum Val {
+    Q(QActTensor),
+    F(Tensor),
+}
+
+impl Val {
+    fn to_f32(&self) -> Tensor {
+        match self {
+            Val::Q(q) => q.dequantize(),
+            Val::F(t) => t.clone(),
+        }
+    }
+
+    fn as_q(&self) -> Result<&QActTensor> {
+        match self {
+            Val::Q(q) => Ok(q),
+            Val::F(_) => bail!("expected a quantised value"),
+        }
+    }
+}
+
+enum Step {
+    /// Quantise the model input onto the site-0 grid.
+    QuantInput { node: usize, qp: QParams },
+    /// Integer conv fused with its single consuming activation site;
+    /// the result is stored under the *act* node id.
+    ConvQ { input: usize, act_node: usize, conv: Box<QConv> },
+    /// Integer conv, f32 output (no single fused act consumer).
+    ConvF { node: usize, input: usize, conv: Box<QConv> },
+    /// Pure f32 conv fallback (the layer's input has no quantised grid);
+    /// runs over the fake-quantised weights, exactly like the oracle.
+    ConvFp32 {
+        node: usize,
+        input: usize,
+        w: Tensor,
+        b: Vec<f32>,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    },
+    /// Standalone activation site: clip + quantise onto its grid.
+    ActQ { node: usize, input: usize, row: SiteCfg },
+    /// Residual add, requantised onto the add site grid.
+    AddQ { node: usize, a: usize, b: usize, row: SiteCfg },
+    Gap { node: usize, input: usize },
+    LinearF { node: usize, input: usize, w: Tensor, b: Vec<f32> },
+    Upsample { node: usize, input: usize, factor: usize },
+}
+
+/// A model packed for integer execution: f32 in (images), f32 out
+/// (dequantised primary outputs), everything between on integer grids
+/// wherever the graph allows.
+pub struct QModel {
+    steps: Vec<Step>,
+    outputs: Vec<usize>,
+    /// Conv/linear layers executing on the integer path.
+    pub int_layers: usize,
+    /// Layers falling back to exact f32 (no quantised input grid).
+    pub f32_layers: usize,
+}
+
+fn row_qp(row: &SiteCfg) -> QParams {
+    QParams {
+        scale: row.scale,
+        zero_point: row.zero_point,
+        n_levels: row.n_levels,
+    }
+}
+
+/// Pack a quantised model (fake-quant weights + retained integer codes +
+/// activation site grids) into a [`QModel`]. Requires every activation
+/// site quantised to ≤ 8 bits and retained codes for every conv layer.
+pub fn pack(
+    model: &Model,
+    int_weights: &[(usize, QTensor)],
+    cfg: &QuantCfg,
+) -> Result<QModel> {
+    if !model.folded {
+        bail!("pack requires a folded model");
+    }
+    let sites = model.act_sites();
+    if sites.len() != cfg.rows.len() {
+        bail!("QuantCfg rows {} != sites {}", cfg.rows.len(), sites.len());
+    }
+    for (i, r) in cfg.rows.iter().enumerate() {
+        if !(2.0..=256.0).contains(&r.n_levels) {
+            bail!(
+                "int8 path requires every activation site quantised to \
+                 2..=256 levels; site {i} has n_levels = {} \
+                 (quantise with act_bits in 1..=8)",
+                r.n_levels
+            );
+        }
+    }
+    let site_of = |id: usize| -> Option<usize> {
+        sites.iter().position(|s| s.node_id() == Some(id))
+    };
+    let weights_of = |id: usize| -> Option<&QTensor> {
+        int_weights.iter().find(|(wid, _)| *wid == id).map(|(_, t)| t)
+    };
+
+    let mut steps = Vec::new();
+    // node id -> Some(grid) when its value is quantised, None when f32
+    let mut grids: HashMap<usize, Option<QParams>> = HashMap::new();
+    let mut fused_acts: HashSet<usize> = HashSet::new();
+    let mut int_layers = 0usize;
+    let mut f32_layers = 0usize;
+
+    for n in &model.nodes {
+        match &n.op {
+            Op::Input => {
+                let qp = row_qp(&cfg.rows[0]);
+                steps.push(Step::QuantInput { node: n.id, qp });
+                grids.insert(n.id, Some(qp));
+            }
+            Op::Conv { w, b, stride, pad, groups, out_ch, .. } => {
+                let input = n.inputs[0];
+                let bias: Vec<f32> = match b {
+                    Some(b) => model.tensor(b)?.data().to_vec(),
+                    None => vec![0.0; *out_ch],
+                };
+                let in_grid = grids
+                    .get(&input)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("conv {} before input", n.id))?;
+                match in_grid {
+                    Some(in_qp) => {
+                        let wq = weights_of(n.id).ok_or_else(|| {
+                            anyhow!(
+                                "no retained int8 weight codes for conv \
+                                 node {} (quantise with bits <= 8)",
+                                n.id
+                            )
+                        })?;
+                        // fuse when the conv's only consumer is an act
+                        // and the conv's pre-activation value is not
+                        // itself a model output (fusion stores the
+                        // result under the act node id only)
+                        let cons = model.consumers(n.id);
+                        let fuse = match cons.as_slice() {
+                            [c] if matches!(c.op, Op::Act(_))
+                                && !model.outputs.contains(&n.id) =>
+                            {
+                                Some(c.id)
+                            }
+                            _ => None,
+                        };
+                        match fuse {
+                            Some(act_id) => {
+                                let row = cfg.rows[site_of(act_id)
+                                    .expect("act node is a site")];
+                                let conv = QConv::pack(
+                                    wq, &bias, *stride, *pad, *groups,
+                                    &in_qp, Some(&row),
+                                )?;
+                                steps.push(Step::ConvQ {
+                                    input,
+                                    act_node: act_id,
+                                    conv: Box::new(conv),
+                                });
+                                grids.insert(act_id, Some(row_qp(&row)));
+                                grids.insert(n.id, None);
+                                fused_acts.insert(act_id);
+                            }
+                            None => {
+                                let conv = QConv::pack(
+                                    wq, &bias, *stride, *pad, *groups,
+                                    &in_qp, None,
+                                )?;
+                                steps.push(Step::ConvF {
+                                    node: n.id,
+                                    input,
+                                    conv: Box::new(conv),
+                                });
+                                grids.insert(n.id, None);
+                            }
+                        }
+                        int_layers += 1;
+                    }
+                    None => {
+                        // f32 input (e.g. post-GAP): exact f32 fallback
+                        // over the fake-quantised weights.
+                        let wt = model.tensor(w)?.clone();
+                        steps.push(Step::ConvFp32 {
+                            node: n.id,
+                            input,
+                            w: wt,
+                            b: bias,
+                            stride: *stride,
+                            pad: *pad,
+                            groups: *groups,
+                        });
+                        grids.insert(n.id, None);
+                        f32_layers += 1;
+                    }
+                }
+            }
+            Op::Act(_) => {
+                if fused_acts.contains(&n.id) {
+                    continue;
+                }
+                let row = cfg.rows[site_of(n.id).expect("act site")];
+                steps.push(Step::ActQ { node: n.id, input: n.inputs[0], row });
+                grids.insert(n.id, Some(row_qp(&row)));
+            }
+            Op::Add => {
+                let row = cfg.rows[site_of(n.id).expect("add site")];
+                steps.push(Step::AddQ {
+                    node: n.id,
+                    a: n.inputs[0],
+                    b: n.inputs[1],
+                    row,
+                });
+                grids.insert(n.id, Some(row_qp(&row)));
+            }
+            Op::Gap => {
+                steps.push(Step::Gap { node: n.id, input: n.inputs[0] });
+                grids.insert(n.id, None);
+            }
+            Op::Linear { w, b, .. } => {
+                steps.push(Step::LinearF {
+                    node: n.id,
+                    input: n.inputs[0],
+                    w: model.tensor(w)?.clone(),
+                    b: model.tensor(b)?.data().to_vec(),
+                });
+                grids.insert(n.id, None);
+                f32_layers += 1;
+            }
+            Op::Upsample { factor } => {
+                steps.push(Step::Upsample {
+                    node: n.id,
+                    input: n.inputs[0],
+                    factor: *factor,
+                });
+                let g = grids
+                    .get(&n.inputs[0])
+                    .cloned()
+                    .ok_or_else(|| anyhow!("upsample {} dangling", n.id))?;
+                grids.insert(n.id, g);
+            }
+            Op::BatchNorm { .. } => {
+                bail!("pack requires a folded model (found bn node {})", n.id)
+            }
+        }
+    }
+
+    Ok(QModel { steps, outputs: model.outputs.clone(), int_layers, f32_layers })
+}
+
+impl QModel {
+    /// Forward one batch: quantise the input, execute the packed steps,
+    /// dequantise every model output to f32.
+    pub fn run_all(&self, x: &Tensor) -> Result<Vec<Tensor>> {
+        let mut vals: HashMap<usize, Val> = HashMap::new();
+        for step in &self.steps {
+            let (id, y) = match step {
+                Step::QuantInput { node, qp } => {
+                    (*node, Val::Q(QActTensor::quantize(x, qp)))
+                }
+                Step::ConvQ { input, act_node, conv } => {
+                    let y = conv.run_q(vals[input].as_q()?)?;
+                    (*act_node, Val::Q(y))
+                }
+                Step::ConvF { node, input, conv } => {
+                    let y = conv.run_f32(vals[input].as_q()?)?;
+                    (*node, Val::F(y))
+                }
+                Step::ConvFp32 { node, input, w, b, stride, pad, groups } => {
+                    let xin = vals[input].to_f32();
+                    let y = super::conv::conv2d(
+                        &xin,
+                        w,
+                        Some(b),
+                        *stride,
+                        *pad,
+                        *groups,
+                    );
+                    (*node, Val::F(y))
+                }
+                Step::ActQ { node, input, row } => {
+                    let mut t = vals[input].to_f32();
+                    ops::clip_act(&mut t, row.clip_hi);
+                    (*node, Val::Q(QActTensor::quantize(&t, &row_qp(row))))
+                }
+                Step::AddQ { node, a, b, row } => {
+                    let t = ops::add(&vals[a].to_f32(), &vals[b].to_f32());
+                    (*node, Val::Q(QActTensor::quantize(&t, &row_qp(row))))
+                }
+                Step::Gap { node, input } => {
+                    let t = ops::global_avg_pool(&vals[input].to_f32());
+                    (*node, Val::F(t))
+                }
+                Step::LinearF { node, input, w, b } => {
+                    let t = ops::linear(&vals[input].to_f32(), w, b);
+                    (*node, Val::F(t))
+                }
+                Step::Upsample { node, input, factor } => {
+                    let v = match &vals[input] {
+                        Val::Q(q) => Val::Q(upsample_codes(q, *factor)),
+                        Val::F(t) => {
+                            Val::F(ops::upsample_nearest(t, *factor))
+                        }
+                    };
+                    (*node, v)
+                }
+            };
+            vals.insert(id, y);
+        }
+        self.outputs
+            .iter()
+            .map(|o| {
+                vals.get(o)
+                    .map(Val::to_f32)
+                    .ok_or_else(|| anyhow!("missing output node {o}"))
+            })
+            .collect()
+    }
+
+    /// Forward one batch, returning the primary output.
+    pub fn run(&self, x: &Tensor) -> Result<Tensor> {
+        self.run_all(x)?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("model has no outputs"))
+    }
+
+    /// One-line execution-plan summary (for logs and `inspect`).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} int8 layer(s), {} f32 fallback layer(s), {} step(s)",
+            self.int_layers,
+            self.f32_layers,
+            self.steps.len()
+        )
+    }
+}
+
+/// Nearest-neighbour upsample on u8 codes (grid-preserving).
+fn upsample_codes(x: &QActTensor, f: usize) -> QActTensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h * f, w * f);
+    let mut out = vec![0u8; n * c * oh * ow];
+    for i in 0..n * c {
+        let xoff = i * h * w;
+        let ooff = i * oh * ow;
+        for oy in 0..oh {
+            let iy = oy / f;
+            for ox in 0..ow {
+                out[ooff + oy * ow + ox] = x.codes[xoff + iy * w + ox / f];
+            }
+        }
+    }
+    QActTensor { shape: vec![n, c, oh, ow], codes: out, qp: x.qp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mult_roundtrips_magnitudes() {
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let m = rng.log_uniform(1e-6, 1e3) as f64;
+            let fm = mult_for(m);
+            for _ in 0..20 {
+                let t = (rng.uniform(-1e6, 1e6)) as i64;
+                let got = apply_mult(t, &fm);
+                let want = (t as f64 * m).round() as i64;
+                assert!(
+                    (got - want).abs() <= 1,
+                    "M={m} t={t}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mult_degenerate_falls_back() {
+        assert!(matches!(mult_for(0.0), Mult::Float(_)));
+        assert!(matches!(mult_for(f64::INFINITY), Mult::Float(_)));
+        assert_eq!(apply_mult(100, &Mult::Float(0.5)), 50);
+    }
+
+    #[test]
+    fn qgemm_matches_naive() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (7, 13, 5);
+        let a: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let b: Vec<i8> =
+            (0..k * n).map(|_| rng.below(256) as i8).collect();
+        let got = qgemm(&a, &b, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k)
+                    .map(|kk| a[i * k + kk] as i32 * b[kk * n + j] as i32)
+                    .sum();
+                assert_eq!(got[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn rowsums_match() {
+        let a: Vec<u8> = vec![1, 2, 3, 250, 251, 252];
+        assert_eq!(rowsums_u8(&a, 2, 3), vec![6, 753]);
+    }
+
+    #[test]
+    fn qact_quantize_dequantize_roundtrip() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::new(&[2, 3, 4, 4], rng.normal_vec(96, 1.0));
+        let qp = crate::quant::params_for_range(t.min(), t.max(), 8, false);
+        let q = QActTensor::quantize(&t, &qp);
+        assert!(q.dequantize().max_abs_diff(&t) <= qp.scale / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn upsample_codes_matches_f32() {
+        let mut rng = Rng::new(6);
+        let t = Tensor::new(&[1, 2, 3, 3], rng.normal_vec(18, 1.0));
+        let qp = crate::quant::params_for_range(-3.0, 3.0, 8, false);
+        let q = QActTensor::quantize(&t, &qp);
+        let up = upsample_codes(&q, 2);
+        let want = ops::upsample_nearest(&q.dequantize(), 2);
+        assert_eq!(up.dequantize(), want);
+    }
+}

@@ -9,7 +9,21 @@
 
 pub mod ranges;
 
-use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+use crate::tensor::{QTensor, Tensor};
+
+/// Bit-widths the fixed-point grid supports. `1u64 << bits` is only
+/// meaningful below 32 (beyond that the `n - 1` arithmetic drowns in f32
+/// rounding and the grid silently degenerates), and a 0-bit grid has no
+/// levels at all — both are programming errors, rejected loudly.
+pub fn check_bits(bits: u32) {
+    assert!(
+        (1..32).contains(&bits),
+        "quantisation bit-width must be in 1..=31, got {bits} \
+         (bits == 0 has no levels; bits >= 32 overflows the grid)"
+    );
+}
 
 /// A quantisation scheme for weights or activations.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -37,6 +51,7 @@ impl QScheme {
     }
 
     pub fn n_levels(&self) -> f32 {
+        check_bits(self.bits);
         (1u64 << self.bits) as f32
     }
 }
@@ -62,6 +77,7 @@ impl QParams {
 ///   exactly representable — standard for zero-padded convolutions).
 /// * symmetric: the grid is centred, scale set by max(|lo|, |hi|).
 pub fn params_for_range(lo: f32, hi: f32, bits: u32, symmetric: bool) -> QParams {
+    check_bits(bits);
     let n = (1u64 << bits) as f32;
     if symmetric {
         let a = lo.abs().max(hi.abs()).max(1e-12);
@@ -81,28 +97,65 @@ pub fn fake_quant_tensor(t: &mut Tensor, p: &QParams) {
     crate::nn::ops::fake_quant(t, p.scale, p.zero_point, p.n_levels);
 }
 
+/// Grid(s) for a weight tensor under `scheme`: one per tensor, or one
+/// per output channel. The single source of the range→grid rule shared
+/// by [`quantize_weights`] and [`quantize_weights_retaining`] (the
+/// fake-quant model and the retained integer codes must always come
+/// from identical grids).
+pub fn params_for_scheme(t: &Tensor, scheme: &QScheme) -> Vec<QParams> {
+    if scheme.per_channel {
+        t.channel_ranges()
+            .into_iter()
+            .map(|(lo, hi)| {
+                params_for_range(lo, hi, scheme.bits, scheme.symmetric)
+            })
+            .collect()
+    } else {
+        vec![params_for_range(t.min(), t.max(), scheme.bits, scheme.symmetric)]
+    }
+}
+
 /// Quantise a weight tensor in place per `scheme`; returns the grid(s)
 /// used (one per tensor, or one per output channel).
 pub fn quantize_weights(t: &mut Tensor, scheme: &QScheme) -> Vec<QParams> {
+    let params = params_for_scheme(t, scheme);
     if scheme.per_channel {
-        let ranges = t.channel_ranges();
-        let mut out = Vec::with_capacity(ranges.len());
-        for (o, (lo, hi)) in ranges.into_iter().enumerate() {
-            let p = params_for_range(lo, hi, scheme.bits, scheme.symmetric);
-            let ch = t.out_channel_mut(o);
-            for x in ch {
+        for (o, p) in params.iter().enumerate() {
+            for x in t.out_channel_mut(o) {
                 *x = crate::nn::ops::fake_quant_scalar(
                     *x, p.scale, p.zero_point, p.n_levels,
                 );
             }
-            out.push(p);
         }
-        out
     } else {
-        let p = params_for_range(t.min(), t.max(), scheme.bits, scheme.symmetric);
-        fake_quant_tensor(t, &p);
-        vec![p]
+        fake_quant_tensor(t, &params[0]);
     }
+    params
+}
+
+/// Like [`quantize_weights`], but *retains the integer grid codes* the
+/// fake-quant image is computed from: fake-quantises `t` in place and
+/// returns the grid(s) plus a signed-storage [`QTensor`] holding the
+/// codes, so the integer engine never re-derives them. The written-back
+/// f32 values are bit-identical to [`quantize_weights`]'s.
+///
+/// Requires `bits <= 8` (i8 storage); use [`quantize_weights`] for the
+/// wide-grid appendix sweeps.
+pub fn quantize_weights_retaining(
+    t: &mut Tensor,
+    scheme: &QScheme,
+) -> Result<(Vec<QParams>, QTensor)> {
+    check_bits(scheme.bits);
+    if scheme.bits > 8 {
+        bail!(
+            "quantize_weights_retaining packs i8 codes; bits = {} > 8",
+            scheme.bits
+        );
+    }
+    let params = params_for_scheme(t, scheme);
+    let codes = QTensor::quantize(t, &params, true)?;
+    *t = codes.dequantize();
+    Ok((params, codes))
 }
 
 /// Worst-case quantisation SNR proxy: the per-channel "precision" of
@@ -176,6 +229,52 @@ mod tests {
             assert_eq!(p.n_levels, (1u64 << bits) as f32);
             assert!(p.scale > 0.0);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "bit-width must be in 1..=31")]
+    fn zero_bits_rejected() {
+        params_for_range(-1.0, 1.0, 0, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "bit-width must be in 1..=31")]
+    fn huge_bits_rejected() {
+        params_for_range(-1.0, 1.0, 32, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "bit-width must be in 1..=31")]
+    fn n_levels_guards_bits() {
+        let _ = QScheme::int8_asymmetric().with_bits(0).n_levels();
+    }
+
+    #[test]
+    fn retaining_matches_in_place_quantisation() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        for scheme in [
+            QScheme::int8_asymmetric(),
+            QScheme::int8_symmetric(),
+            QScheme::per_channel(8),
+            QScheme::int8_asymmetric().with_bits(4),
+        ] {
+            let t = Tensor::new(&[4, 3, 3, 3], rng.normal_vec(108, 0.7));
+            let mut a = t.clone();
+            let mut b = t.clone();
+            let pa = quantize_weights(&mut a, &scheme);
+            let (pb, codes) =
+                quantize_weights_retaining(&mut b, &scheme).unwrap();
+            assert_eq!(pa, pb);
+            assert_eq!(a, b, "retaining path diverged for {scheme:?}");
+            assert_eq!(codes.dequantize(), a);
+        }
+    }
+
+    #[test]
+    fn retaining_rejects_wide_grids() {
+        let mut t = Tensor::from_vec(vec![0.0, 1.0]);
+        let wide = QScheme::int8_asymmetric().with_bits(16);
+        assert!(quantize_weights_retaining(&mut t, &wide).is_err());
     }
 
     #[test]

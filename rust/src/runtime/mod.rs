@@ -8,99 +8,19 @@
 //! (architecture, batch size); weights are passed as runtime arguments —
 //! already fake-quantised by the DFQ pipeline — so a single executable
 //! serves FP32 eval and every quantised configuration.
+//!
+//! The `xla` bindings are not part of the offline crate set, so the real
+//! implementation is gated behind the `pjrt` cargo feature (which
+//! additionally requires adding the `xla = "0.5"` dependency by hand).
+//! The default build exports API-compatible stubs whose constructors
+//! return a descriptive error: every artifact-dependent caller already
+//! skips gracefully when `Manifest::load` or `Runtime::cpu` fails, and
+//! the pure-Rust engines ([`crate::nn`] and [`crate::nn::qengine`])
+//! carry the full test/serve load without PJRT.
 
 pub mod manifest;
 
-use std::path::Path;
-
-use anyhow::{bail, Context, Result};
-
-use crate::graph::Model;
-use crate::nn::QuantCfg;
-use crate::tensor::Tensor;
-
 pub use manifest::{ArchEntry, Manifest};
-
-/// Shared PJRT client (CPU).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()? })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO text artifact.
-    pub fn load(&self, hlo_path: &Path, meta: ExecMeta) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-UTF-8 artifact path")?,
-        )
-        .with_context(|| format!("parsing {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", hlo_path.display()))?;
-        Ok(Executable { exe, meta })
-    }
-
-    /// Load the quant-sim executable of `arch` at `batch` from the
-    /// manifest, validating the weight-argument contract against `model`.
-    pub fn load_model_exec(
-        &self,
-        manifest: &Manifest,
-        arch: &str,
-        batch: usize,
-        model: &Model,
-    ) -> Result<Executable> {
-        let entry = manifest.arch(arch)?;
-        let hlo = entry.hlo.get(&batch).ok_or_else(|| {
-            anyhow::anyhow!("no batch-{batch} HLO for {arch}")
-        })?;
-        // contract validation: Rust-side folded order == python manifest
-        let rust_order = model.weight_args();
-        if rust_order.len() != entry.weight_args.len() {
-            bail!(
-                "{arch}: weight arg count mismatch rust={} manifest={}",
-                rust_order.len(),
-                entry.weight_args.len()
-            );
-        }
-        for (r, (name, _, shape)) in rust_order.iter().zip(&entry.weight_args)
-        {
-            if r != name {
-                bail!("{arch}: weight order mismatch: rust {r} vs {name}");
-            }
-            let t = model.tensor(name)?;
-            if t.shape() != &shape[..] {
-                bail!(
-                    "{arch}: {name} shape {:?} vs manifest {:?}",
-                    t.shape(),
-                    shape
-                );
-            }
-        }
-        let sites = model.act_sites().len();
-        if sites != entry.num_sites {
-            bail!("{arch}: site count mismatch {sites} vs {}", entry.num_sites);
-        }
-        self.load(
-            &manifest.path(hlo),
-            ExecMeta {
-                batch,
-                input_shape: model.input_shape,
-                num_weights: rust_order.len(),
-                num_sites: sites,
-                num_outputs: entry.num_outputs,
-            },
-        )
-    }
-}
 
 /// Executable metadata (argument contract).
 #[derive(Debug, Clone, Copy)]
@@ -112,108 +32,297 @@ pub struct ExecMeta {
     pub num_outputs: usize,
 }
 
-/// A compiled quant-sim executable.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub meta: ExecMeta,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::path::Path;
 
-fn literal_from(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
-}
+    use anyhow::{bail, Context, Result};
 
-impl Executable {
-    /// Build the weight-literal set for a model once; reuse across calls.
-    pub fn bind_weights(&self, model: &Model) -> Result<BoundWeights> {
-        let mut lits = Vec::with_capacity(self.meta.num_weights);
-        for name in model.weight_args() {
-            lits.push(literal_from(model.tensor(&name)?)?);
-        }
-        Ok(BoundWeights { lits })
+    use super::{ExecMeta, Manifest};
+    use crate::graph::Model;
+    use crate::nn::QuantCfg;
+    use crate::tensor::Tensor;
+
+    /// Shared PJRT client (CPU).
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Execute with arbitrary tensor arguments (no contract checks) —
-    /// used for standalone kernel artifacts and microbenches.
-    pub fn run_raw(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let lits = args
-            .iter()
-            .map(|t| literal_from(t))
-            .collect::<Result<Vec<_>>>()?;
-        let refs: Vec<&xla::Literal> = lits.iter().collect();
-        let bufs = self.exe.execute::<&xla::Literal>(&refs)?;
-        let result = bufs[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        let mut tensors = Vec::with_capacity(outs.len());
-        for lit in outs {
-            let shape = lit.array_shape()?;
-            let dims: Vec<usize> =
-                shape.dims().iter().map(|&d| d as usize).collect();
-            tensors.push(Tensor::new(&dims, lit.to_vec()?));
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Ok(Runtime { client: xla::PjRtClient::cpu()? })
         }
-        Ok(tensors)
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one HLO text artifact.
+        pub fn load(&self, hlo_path: &Path, meta: ExecMeta) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-UTF-8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", hlo_path.display()))?;
+            Ok(Executable { exe, meta })
+        }
+
+        /// Load the quant-sim executable of `arch` at `batch` from the
+        /// manifest, validating the weight-argument contract against `model`.
+        pub fn load_model_exec(
+            &self,
+            manifest: &Manifest,
+            arch: &str,
+            batch: usize,
+            model: &Model,
+        ) -> Result<Executable> {
+            let entry = manifest.arch(arch)?;
+            let hlo = entry.hlo.get(&batch).ok_or_else(|| {
+                anyhow::anyhow!("no batch-{batch} HLO for {arch}")
+            })?;
+            // contract validation: Rust-side folded order == python manifest
+            let rust_order = model.weight_args();
+            if rust_order.len() != entry.weight_args.len() {
+                bail!(
+                    "{arch}: weight arg count mismatch rust={} manifest={}",
+                    rust_order.len(),
+                    entry.weight_args.len()
+                );
+            }
+            for (r, (name, _, shape)) in
+                rust_order.iter().zip(&entry.weight_args)
+            {
+                if r != name {
+                    bail!("{arch}: weight order mismatch: rust {r} vs {name}");
+                }
+                let t = model.tensor(name)?;
+                if t.shape() != &shape[..] {
+                    bail!(
+                        "{arch}: {name} shape {:?} vs manifest {:?}",
+                        t.shape(),
+                        shape
+                    );
+                }
+            }
+            let sites = model.act_sites().len();
+            if sites != entry.num_sites {
+                bail!(
+                    "{arch}: site count mismatch {sites} vs {}",
+                    entry.num_sites
+                );
+            }
+            self.load(
+                &manifest.path(hlo),
+                ExecMeta {
+                    batch,
+                    input_shape: model.input_shape,
+                    num_weights: rust_order.len(),
+                    num_sites: sites,
+                    num_outputs: entry.num_outputs,
+                },
+            )
+        }
     }
 
-    /// Execute on one batch. `x` must be (batch, C, H, W); `cfg` rows
-    /// must match the executable's site count.
-    pub fn run(
-        &self,
-        x: &Tensor,
-        weights: &BoundWeights,
-        cfg: &QuantCfg,
-    ) -> Result<Vec<Tensor>> {
-        if x.shape()[0] != self.meta.batch {
-            bail!(
-                "batch mismatch: got {}, executable expects {}",
-                x.shape()[0],
-                self.meta.batch
-            );
-        }
-        if cfg.rows.len() != self.meta.num_sites {
-            bail!(
-                "QuantCfg rows {} != sites {}",
-                cfg.rows.len(),
-                self.meta.num_sites
-            );
-        }
-        let x_lit = literal_from(x)?;
-        let qcfg = Tensor::new(&[self.meta.num_sites, 4], cfg.to_flat());
-        let q_lit = literal_from(&qcfg)?;
+    /// A compiled quant-sim executable.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub meta: ExecMeta,
+    }
 
-        let mut borrowed: Vec<&xla::Literal> =
-            Vec::with_capacity(2 + weights.lits.len());
-        borrowed.push(&x_lit);
-        for l in &weights.lits {
-            borrowed.push(l);
-        }
-        borrowed.push(&q_lit);
+    fn literal_from(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+    }
 
-        let bufs = self.exe.execute::<&xla::Literal>(&borrowed)?;
-        let result = bufs[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        let mut tensors = Vec::with_capacity(outs.len());
-        for lit in outs {
-            let shape = lit.array_shape()?;
-            let dims: Vec<usize> =
-                shape.dims().iter().map(|&d| d as usize).collect();
-            let data: Vec<f32> = lit.to_vec()?;
-            tensors.push(Tensor::new(&dims, data));
+    impl Executable {
+        /// Build the weight-literal set for a model once; reuse across calls.
+        pub fn bind_weights(&self, model: &Model) -> Result<BoundWeights> {
+            let mut lits = Vec::with_capacity(self.meta.num_weights);
+            for name in model.weight_args() {
+                lits.push(literal_from(model.tensor(&name)?)?);
+            }
+            Ok(BoundWeights { lits })
         }
-        Ok(tensors)
+
+        /// Execute with arbitrary tensor arguments (no contract checks) —
+        /// used for standalone kernel artifacts and microbenches.
+        pub fn run_raw(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+            let lits = args
+                .iter()
+                .map(|t| literal_from(t))
+                .collect::<Result<Vec<_>>>()?;
+            let refs: Vec<&xla::Literal> = lits.iter().collect();
+            let bufs = self.exe.execute::<&xla::Literal>(&refs)?;
+            let result = bufs[0][0].to_literal_sync()?;
+            let outs = result.to_tuple()?;
+            let mut tensors = Vec::with_capacity(outs.len());
+            for lit in outs {
+                let shape = lit.array_shape()?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                tensors.push(Tensor::new(&dims, lit.to_vec()?));
+            }
+            Ok(tensors)
+        }
+
+        /// Execute on one batch. `x` must be (batch, C, H, W); `cfg` rows
+        /// must match the executable's site count.
+        pub fn run(
+            &self,
+            x: &Tensor,
+            weights: &BoundWeights,
+            cfg: &QuantCfg,
+        ) -> Result<Vec<Tensor>> {
+            if x.shape()[0] != self.meta.batch {
+                bail!(
+                    "batch mismatch: got {}, executable expects {}",
+                    x.shape()[0],
+                    self.meta.batch
+                );
+            }
+            if cfg.rows.len() != self.meta.num_sites {
+                bail!(
+                    "QuantCfg rows {} != sites {}",
+                    cfg.rows.len(),
+                    self.meta.num_sites
+                );
+            }
+            let x_lit = literal_from(x)?;
+            let qcfg = Tensor::new(&[self.meta.num_sites, 4], cfg.to_flat());
+            let q_lit = literal_from(&qcfg)?;
+
+            let mut borrowed: Vec<&xla::Literal> =
+                Vec::with_capacity(2 + weights.lits.len());
+            borrowed.push(&x_lit);
+            for l in &weights.lits {
+                borrowed.push(l);
+            }
+            borrowed.push(&q_lit);
+
+            let bufs = self.exe.execute::<&xla::Literal>(&borrowed)?;
+            let result = bufs[0][0].to_literal_sync()?;
+            let outs = result.to_tuple()?;
+            let mut tensors = Vec::with_capacity(outs.len());
+            for lit in outs {
+                let shape = lit.array_shape()?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                let data: Vec<f32> = lit.to_vec()?;
+                tensors.push(Tensor::new(&dims, data));
+            }
+            Ok(tensors)
+        }
+    }
+
+    /// Weight literals bound to an executable's argument order.
+    pub struct BoundWeights {
+        lits: Vec<xla::Literal>,
+    }
+
+    impl BoundWeights {
+        pub fn len(&self) -> usize {
+            self.lits.len()
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.lits.is_empty()
+        }
     }
 }
 
-/// Weight literals bound to an executable's argument order.
-pub struct BoundWeights {
-    lits: Vec<xla::Literal>,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{BoundWeights, Executable, Runtime};
 
-impl BoundWeights {
-    pub fn len(&self) -> usize {
-        self.lits.len()
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::{ExecMeta, Manifest};
+    use crate::graph::Model;
+    use crate::nn::QuantCfg;
+    use crate::tensor::Tensor;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+         (use the pure-Rust engine / qengine backends)";
+
+    /// Stub PJRT client; construction always fails with a clear message.
+    pub struct Runtime {
+        _private: (),
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.lits.is_empty()
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load(
+            &self,
+            _hlo_path: &Path,
+            _meta: ExecMeta,
+        ) -> Result<Executable> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn load_model_exec(
+            &self,
+            _manifest: &Manifest,
+            _arch: &str,
+            _batch: usize,
+            _model: &Model,
+        ) -> Result<Executable> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    /// Stub executable (never constructible; methods satisfy callers).
+    pub struct Executable {
+        pub meta: ExecMeta,
+    }
+
+    impl Executable {
+        pub fn bind_weights(&self, _model: &Model) -> Result<BoundWeights> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn run_raw(&self, _args: &[&Tensor]) -> Result<Vec<Tensor>> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn run(
+            &self,
+            _x: &Tensor,
+            _weights: &BoundWeights,
+            _cfg: &QuantCfg,
+        ) -> Result<Vec<Tensor>> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    /// Stub weight bindings.
+    pub struct BoundWeights {}
+
+    impl BoundWeights {
+        pub fn len(&self) -> usize {
+            0
+        }
+
+        pub fn is_empty(&self) -> bool {
+            true
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{BoundWeights, Executable, Runtime};

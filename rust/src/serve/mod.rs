@@ -47,10 +47,43 @@ impl BatchExecutor for EngineExecutor {
     }
 
     fn run_batch(&mut self, x: &Tensor) -> Result<Tensor> {
-        Ok(nn::forward(&self.model, x, &self.cfg)?
+        nn::forward(&self.model, x, &self.cfg)?
             .into_iter()
             .next()
-            .unwrap())
+            .ok_or_else(|| anyhow!("model produced no outputs"))
+    }
+}
+
+/// True-int8 executor over the packed integer engine
+/// ([`crate::nn::qengine`]): quantises each incoming batch onto the
+/// input grid, runs u8×i8 GEMM convs with fused requant epilogues, and
+/// dequantises the primary output. Send like [`EngineExecutor`], so the
+/// router can host an f32-oracle variant and an int8 variant side by
+/// side (see [`Router`]).
+pub struct QuantExecutor {
+    pub qmodel: crate::nn::qengine::QModel,
+    pub max_batch: usize,
+}
+
+impl QuantExecutor {
+    /// Build from a DFQ-quantised model (weights quantised at ≤ 8 bits,
+    /// activations quantised — see
+    /// [`crate::dfq::QuantizedModel::pack_int8`]).
+    pub fn from_quantized(
+        q: &crate::dfq::QuantizedModel,
+        max_batch: usize,
+    ) -> Result<QuantExecutor> {
+        Ok(QuantExecutor { qmodel: q.pack_int8()?, max_batch })
+    }
+}
+
+impl BatchExecutor for QuantExecutor {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn run_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+        self.qmodel.run(x)
     }
 }
 
@@ -76,7 +109,7 @@ impl BatchExecutor for PjrtExecutor {
             .run(&input, &self.weights, &self.cfg)?
             .into_iter()
             .next()
-            .unwrap();
+            .ok_or_else(|| anyhow!("executable produced no outputs"))?;
         Ok(if n == b { out } else { truncate(&out, n) })
     }
 }
@@ -344,6 +377,7 @@ impl Router {
 fn _assert_traits() {
     fn is_send<T: Send>() {}
     is_send::<EngineExecutor>();
+    is_send::<QuantExecutor>();
     is_send::<Client>();
 }
 
@@ -406,6 +440,55 @@ mod tests {
         let x = Tensor::full(&[1, 3, 8, 8], 0.1);
         let y = router.client("fp32").unwrap().infer(x).unwrap();
         assert_eq!(y.shape()[0], 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn int8_variant_serves_and_matches_oracle() {
+        use crate::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+        use crate::quant::QScheme;
+
+        let m = testutil::two_layer_model(73, true);
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        let q = prep
+            .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+            .unwrap();
+        // per-layer requant rounding is bounded by one step on the final
+        // activation grid (tight parity is asserted per layer in
+        // tests/qengine_parity.rs); leave headroom for a rare upstream
+        // rounding-boundary flip propagating through layer 2
+        let tol = q.act_cfg.rows.last().unwrap().scale * 4.001;
+
+        let mut router = Router::new();
+        let (oracle_model, oracle_cfg) = (q.model.clone(), q.act_cfg.clone());
+        router.add(
+            "fp32-oracle",
+            Server::start(ServeConfig::default(), move || {
+                Ok(Box::new(EngineExecutor {
+                    model: oracle_model,
+                    cfg: oracle_cfg,
+                    max_batch: 16,
+                }))
+            }),
+        );
+        let q2 = q.clone();
+        router.add(
+            "int8",
+            Server::start(ServeConfig::default(), move || {
+                Ok(Box::new(QuantExecutor::from_quantized(&q2, 16)?))
+            }),
+        );
+
+        let x = testutil::random_input(&m, 1, 9);
+        let y_oracle = router.client("fp32-oracle").unwrap().infer(x.clone())
+            .unwrap();
+        let y_int8 = router.client("int8").unwrap().infer(x).unwrap();
+        assert_eq!(y_oracle.shape(), y_int8.shape());
+        assert!(
+            y_int8.max_abs_diff(&y_oracle) <= tol,
+            "int8 variant off by {} (> {tol})",
+            y_int8.max_abs_diff(&y_oracle)
+        );
         router.shutdown();
     }
 

@@ -2,7 +2,12 @@
 //!
 //! Deliberately minimal: the DFQ passes need per-channel views, basic
 //! reductions and elementwise maps; the heavy compute lives either in the
-//! AOT-compiled PJRT executables or in [`crate::nn`].
+//! AOT-compiled PJRT executables or in [`crate::nn`]. Integer tensors
+//! (the true int8 execution path) live in [`qtensor`].
+
+pub mod qtensor;
+
+pub use qtensor::{QData, QTensor};
 
 use anyhow::{bail, Result};
 

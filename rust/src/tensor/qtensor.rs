@@ -1,0 +1,279 @@
+//! Quantized tensors: u8/i8 integer grids + affine parameters.
+//!
+//! A [`QTensor`] stores the *actual integer codes* of a quantised tensor
+//! rather than their dequantised f32 images — the representation the
+//! integer engine ([`crate::nn::qengine`]) executes on. Codes live on the
+//! unsigned grid `q ∈ [0, n_levels-1]` of [`QParams`]; the signed storage
+//! variant keeps `q - 128` in `i8` (the layout the u8×i8→i32 GEMM wants
+//! for weights) and is transparent to `dequantize`.
+
+use anyhow::{bail, Result};
+
+use crate::quant::QParams;
+
+use super::Tensor;
+
+/// Integer payload of a [`QTensor`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum QData {
+    /// Unsigned grid codes `q` (activations).
+    U8(Vec<u8>),
+    /// Offset grid codes `q - 128` (weights for the u8×i8 GEMM).
+    I8(Vec<i8>),
+}
+
+impl QData {
+    pub fn len(&self) -> usize {
+        match self {
+            QData::U8(v) => v.len(),
+            QData::I8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A quantised dense tensor: integer codes + one grid per tensor or per
+/// output channel (dim 0, matching [`Tensor::out_channel`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    shape: Vec<usize>,
+    data: QData,
+    /// One entry (per-tensor) or `shape[0]` entries (per-channel).
+    params: Vec<QParams>,
+}
+
+fn check_params(shape: &[usize], params: &[QParams]) -> Result<()> {
+    let per_channel_len = shape.first().copied().unwrap_or(1);
+    if params.len() != 1 && params.len() != per_channel_len {
+        bail!(
+            "QTensor wants 1 or {} grids for shape {:?}, got {}",
+            per_channel_len,
+            shape,
+            params.len()
+        );
+    }
+    for p in params {
+        if !(2.0..=256.0).contains(&p.n_levels) {
+            bail!(
+                "QTensor requires 2..=256 levels (8-bit storage), got {}",
+                p.n_levels
+            );
+        }
+        if !(p.scale > 0.0) || !p.scale.is_finite() {
+            bail!("QTensor requires a positive finite scale, got {}", p.scale);
+        }
+        if p.zero_point.fract() != 0.0
+            || p.zero_point < 0.0
+            || p.zero_point > p.n_levels - 1.0
+        {
+            bail!(
+                "QTensor zero point {} not an integer on [0, {}]",
+                p.zero_point,
+                p.n_levels - 1.0
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Grid code of one value — bit-identical rounding/clamping to
+/// [`crate::nn::ops::fake_quant_scalar`]. The single in-crate source of
+/// the f32→code map (also used by the qengine's activation quantiser).
+#[inline]
+pub(crate) fn code_of(x: f32, p: &QParams) -> u8 {
+    let q = (x / p.scale).round_ties_even() + p.zero_point;
+    q.clamp(0.0, p.n_levels - 1.0) as u8
+}
+
+impl QTensor {
+    /// Pack an f32 tensor onto the given grid(s). `params` holds one grid
+    /// (per-tensor) or `shape[0]` grids (per-channel along dim 0).
+    /// `signed` selects i8 offset storage (`q - 128`).
+    pub fn quantize(
+        t: &Tensor,
+        params: &[QParams],
+        signed: bool,
+    ) -> Result<QTensor> {
+        check_params(t.shape(), params)?;
+        let n = t.len();
+        let per = if params.len() == 1 {
+            n
+        } else {
+            n / params.len().max(1)
+        };
+        let grid =
+            |i: usize| &params[if params.len() == 1 { 0 } else { i / per }];
+        let data = if signed {
+            QData::I8(
+                t.data()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &x)| (code_of(x, grid(i)) as i16 - 128) as i8)
+                    .collect(),
+            )
+        } else {
+            QData::U8(
+                t.data()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &x)| code_of(x, grid(i)))
+                    .collect(),
+            )
+        };
+        Ok(QTensor { shape: t.shape().to_vec(), data, params: params.to_vec() })
+    }
+
+    /// Wrap pre-computed unsigned codes (e.g. from an activation kernel).
+    pub fn from_codes_u8(
+        shape: &[usize],
+        codes: Vec<u8>,
+        params: Vec<QParams>,
+    ) -> Result<QTensor> {
+        if shape.iter().product::<usize>() != codes.len() {
+            bail!("shape {:?} vs {} codes", shape, codes.len());
+        }
+        check_params(shape, &params)?;
+        Ok(QTensor { shape: shape.to_vec(), data: QData::U8(codes), params })
+    }
+
+    /// Unpack to f32 — the exact fake-quantised image of the source
+    /// tensor (same rounding as [`crate::nn::ops::fake_quant`]).
+    pub fn dequantize(&self) -> Tensor {
+        let n = self.data.len();
+        let per = if self.params.len() == 1 {
+            n
+        } else {
+            n / self.params.len().max(1)
+        };
+        let grid = |i: usize| {
+            &self.params[if self.params.len() == 1 { 0 } else { i / per }]
+        };
+        let data: Vec<f32> = match &self.data {
+            QData::U8(v) => v
+                .iter()
+                .enumerate()
+                .map(|(i, &q)| {
+                    let p = grid(i);
+                    (q as f32 - p.zero_point) * p.scale
+                })
+                .collect(),
+            QData::I8(v) => v
+                .iter()
+                .enumerate()
+                .map(|(i, &q)| {
+                    let p = grid(i);
+                    ((q as i16 + 128) as f32 - p.zero_point) * p.scale
+                })
+                .collect(),
+        };
+        Tensor::new(&self.shape, data)
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn params(&self) -> &[QParams] {
+        &self.params
+    }
+
+    pub fn per_channel(&self) -> bool {
+        self.params.len() > 1
+    }
+
+    /// Grid of output-channel `o` (per-tensor grids broadcast).
+    pub fn param_for_channel(&self, o: usize) -> &QParams {
+        if self.params.len() == 1 {
+            &self.params[0]
+        } else {
+            &self.params[o]
+        }
+    }
+
+    pub fn codes_u8(&self) -> Option<&[u8]> {
+        match &self.data {
+            QData::U8(v) => Some(v),
+            QData::I8(_) => None,
+        }
+    }
+
+    pub fn codes_i8(&self) -> Option<&[i8]> {
+        match &self.data {
+            QData::I8(v) => Some(v),
+            QData::U8(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ops::fake_quant_scalar;
+    use crate::quant::{params_for_range, quantize_weights, QScheme};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded_per_tensor() {
+        let mut rng = Rng::new(11);
+        let t = Tensor::new(&[4, 8], rng.normal_vec(32, 1.5));
+        let p = params_for_range(t.min(), t.max(), 8, false);
+        for signed in [false, true] {
+            let q = QTensor::quantize(&t, &[p], signed).unwrap();
+            let back = q.dequantize();
+            assert!(back.max_abs_diff(&t) <= p.scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn matches_fake_quant_bit_exactly() {
+        let mut rng = Rng::new(12);
+        let t = Tensor::new(&[3, 5], rng.normal_vec(15, 2.0));
+        let p = params_for_range(t.min(), t.max(), 6, false);
+        let q = QTensor::quantize(&t, &[p], true).unwrap();
+        let back = q.dequantize();
+        for (i, &x) in t.data().iter().enumerate() {
+            let want = fake_quant_scalar(x, p.scale, p.zero_point, p.n_levels);
+            assert_eq!(back.data()[i], want, "element {i}");
+        }
+    }
+
+    #[test]
+    fn per_channel_roundtrip() {
+        let mut rng = Rng::new(13);
+        let mut t = Tensor::new(&[4, 6], rng.normal_vec(24, 1.0));
+        // wildly different channel scales
+        for o in 0..4 {
+            t.scale_out_channel(o, 10f32.powi(o as i32 - 2));
+        }
+        let mut fq = t.clone();
+        let ps = quantize_weights(&mut fq, &QScheme::per_channel(8));
+        let q = QTensor::quantize(&t, &ps, true).unwrap();
+        assert!(q.per_channel());
+        assert_eq!(q.dequantize(), fq);
+    }
+
+    #[test]
+    fn rejects_bad_grids() {
+        let t = Tensor::from_vec(vec![1.0, 2.0]);
+        let bad_levels =
+            QParams { scale: 0.1, zero_point: 0.0, n_levels: 1024.0 };
+        assert!(QTensor::quantize(&t, &[bad_levels], false).is_err());
+        let bad_zp = QParams { scale: 0.1, zero_point: 3.5, n_levels: 256.0 };
+        assert!(QTensor::quantize(&t, &[bad_zp], false).is_err());
+        let p = QParams { scale: 0.1, zero_point: 0.0, n_levels: 256.0 };
+        assert!(QTensor::quantize(&t, &[p, p, p], false).is_err());
+    }
+}

@@ -102,6 +102,33 @@ impl BenchResult {
         println!("{}", self.report());
         self
     }
+
+    /// One-line machine-readable record (the bench JSON format shared by
+    /// `benches/engine.rs` and `benches/qengine.rs`; throughput is in
+    /// `units`/s when units were attached).
+    pub fn json(&self) -> String {
+        let s = &self.secs;
+        let mut line = format!(
+            "{{\"name\":{:?},\"iters\":{},\"mean_s\":{:e},\"p50_s\":{:e},\
+             \"p95_s\":{:e}",
+            self.name, s.n, s.mean, s.p50, s.p95
+        );
+        if let Some((units, label)) = self.units {
+            line.push_str(&format!(
+                ",\"units\":{:?},\"throughput\":{:e}",
+                label,
+                units / s.mean
+            ));
+        }
+        line.push('}');
+        line
+    }
+
+    /// Print the JSON record (stdout, one line).
+    pub fn print_json(&self) -> &Self {
+        println!("{}", self.json());
+        self
+    }
 }
 
 pub fn fmt_secs(s: f64) -> String {
@@ -133,6 +160,21 @@ mod tests {
         });
         assert!(r.secs.n >= 1);
         assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn json_record_shape() {
+        std::env::set_var("DFQ_BENCH_FAST", "1");
+        let r = Bench::new("jtest")
+            .run(|| {
+                std::hint::black_box(1 + 1);
+            })
+            .with_units(100.0, "flop");
+        let j = r.json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        for key in ["\"name\"", "\"mean_s\"", "\"throughput\""] {
+            assert!(j.contains(key), "{j} missing {key}");
+        }
     }
 
     #[test]
