@@ -100,7 +100,13 @@ fn main() -> dfq::Result<()> {
     t.print();
 
     println!("\nserving the DFQ-INT8 classifier (dynamic batcher, PJRT):");
-    dfq::serve::demo::run_load("micronet_v2", 256, 400.0, 64)?;
+    dfq::serve::demo::run_load(
+        "micronet_v2",
+        256,
+        400.0,
+        64,
+        dfq::serve::demo::ServeBackend::from_env(),
+    )?;
     println!("\ne2e pipeline complete.");
     Ok(())
 }

@@ -68,7 +68,13 @@ fn main() -> dfq::Result<()> {
         ("heavy load (2000 req/s)", 512, 2000.0),
     ] {
         print!("{label}: ");
-        match dfq::serve::demo::run_load("micronet_v2", requests, rate, 64) {
+        match dfq::serve::demo::run_load(
+            "micronet_v2",
+            requests,
+            rate,
+            64,
+            dfq::serve::demo::ServeBackend::from_env(),
+        ) {
             Ok(()) => {}
             Err(e) => {
                 println!("skipped ({e})");

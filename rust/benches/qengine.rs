@@ -1,14 +1,18 @@
 //! Bench: true-int8 execution vs the f32 reference engine — raw GEMM
-//! (u8×i8→i32 vs f32) and whole conv layers (im2col + GEMM + requant
-//! epilogue vs im2col + f32 GEMM) across MobileNet-ish shapes.
+//! (u8×i8→i32 vs f32), whole conv layers (im2col + GEMM + requant
+//! epilogue vs im2col + f32 GEMM) across MobileNet-ish shapes, and the
+//! end-to-end planned executor vs the fake-quant engine on a residual
+//! block model at batch 1/8/32.
 //!
 //! Prints the human report lines *and* the shared one-line JSON records
 //! (see `BenchResult::json`, same format as `benches/engine.rs`), so the
-//! driver can diff int8 vs f32 throughput mechanically.
+//! driver can diff int8 vs f32 throughput mechanically. `--quick` (the
+//! CI smoke mode) forces single-iteration runs via `DFQ_BENCH_FAST`.
 
+use dfq::dfq::{quantize_data_free, testutil, BiasCorrMode, DfqConfig};
 use dfq::nn::conv;
-use dfq::nn::qengine::{self, QActTensor, QConv};
-use dfq::nn::SiteCfg;
+use dfq::nn::qengine::{self, EpiSpec, QActTensor, QConv};
+use dfq::nn::{self, SiteCfg};
 use dfq::quant::{params_for_range, quantize_weights_retaining, QScheme};
 use dfq::tensor::Tensor;
 use dfq::util::bench::{section, Bench};
@@ -67,9 +71,16 @@ fn fixture(
         n_levels: p.n_levels,
         clip_hi: f32::INFINITY,
     };
-    let qc = QConv::pack(&codes, &bias, stride, pad, groups, &in_qp,
-                         Some(&row))
-        .unwrap();
+    let qc = QConv::pack(
+        &codes,
+        &bias,
+        stride,
+        pad,
+        groups,
+        &in_qp,
+        EpiSpec::Act(&row),
+    )
+    .unwrap();
 
     let oh = (hw + 2 * pad - k) / stride + 1;
     let flops =
@@ -89,6 +100,11 @@ fn fixture(
 }
 
 fn main() {
+    // `--quick` = CI smoke mode: one iteration per bench, records still
+    // emitted in the shared JSON format
+    if std::env::args().any(|a| a == "--quick") {
+        std::env::set_var("DFQ_BENCH_FAST", "1");
+    }
     let mut rng = Rng::new(7);
 
     section("raw GEMM — f32 vs u8×i8→i32");
@@ -144,6 +160,44 @@ fn main() {
                 std::hint::black_box(f.qc.run_q(&f.xq).unwrap());
             })
             .with_units(f.flops, "flop")
+            .print()
+            .print_json();
+    }
+
+    section("end-to-end model — fake-quant f32 engine vs int8 plan");
+    // residual-block model: dense + depthwise + requantise-add + GAP +
+    // linear head, planned with zero f32 fallback ops
+    let m = testutil::residual_block_model(77);
+    let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+    let q = prep
+        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+        .unwrap();
+    let qm = q.pack_int8().unwrap();
+    println!("plan: {}", qm.summary());
+    for batch in [1usize, 8, 32] {
+        let x = testutil::random_input(&m, batch, 1234 + batch as u64);
+        let imgs = batch as f64;
+        Bench::new(format!("f32  e2e resblock batch {batch}"))
+            .run(|| {
+                std::hint::black_box(
+                    nn::forward(&q.model, &x, &q.act_cfg).unwrap(),
+                );
+            })
+            .with_units(imgs, "img")
+            .print()
+            .print_json();
+        Bench::new(format!("int8 e2e resblock batch {batch}"))
+            .run(|| {
+                std::hint::black_box(qm.run_all(&x).unwrap());
+            })
+            .with_units(imgs, "img")
+            .print()
+            .print_json();
+        Bench::new(format!("int8 e2e resblock batch {batch} (serial)"))
+            .run(|| {
+                std::hint::black_box(qm.run_batch(&x).unwrap());
+            })
+            .with_units(imgs, "img")
             .print()
             .print_json();
     }

@@ -23,26 +23,35 @@ fn main() {
     let fast = std::env::var("DFQ_BENCH_FAST").ok().as_deref() == Some("1");
     let requests = if fast { 32 } else { 512 };
 
-    section("PJRT INT8 serving — offered load sweep");
+    let backend = dfq::serve::demo::ServeBackend::from_env();
+    section(&format!(
+        "INT8 serving [{}] — offered load sweep",
+        backend.as_str()
+    ));
     for rate in [50.0, 200.0, 1000.0] {
         match dfq::serve::demo::run_load_quiet(
             "micronet_v2",
             requests,
             rate,
             64,
+            backend,
         ) {
             Ok(s) => println!("rate {rate:>6.0} req/s -> {}", s.report()),
             Err(e) => eprintln!("rate {rate}: {e:#}"),
         }
     }
 
-    section("PJRT INT8 serving — max batch ablation");
+    section(&format!(
+        "INT8 serving [{}] — max batch ablation",
+        backend.as_str()
+    ));
     for batch in [1usize, 64] {
         match dfq::serve::demo::run_load_quiet(
             "micronet_v2",
             requests,
             500.0,
             batch,
+            backend,
         ) {
             Ok(s) => println!("batch {batch:>3} -> {}", s.report()),
             Err(e) => eprintln!("batch {batch}: {e:#}"),

@@ -142,15 +142,32 @@ pub struct QuantizedModel {
     pub int_weights: Vec<(usize, QTensor)>,
     /// Activation quantisation rows for the executable / engine.
     pub act_cfg: QuantCfg,
+    /// Data-free *pre-activation* grids per conv node (β ± n·γ, no ReLU
+    /// clip): the integer planner requantises residual-branch convs onto
+    /// these so adds/GAP/head stay on the integer path. Empty when the
+    /// scheme or activations are wider than 8 bits.
+    pub preact_params: Vec<(usize, QParams)>,
 }
 
 impl QuantizedModel {
-    /// Pack the retained integer grids into a true-int8 executor
-    /// ([`qengine::QModel`]): per-layer i8 weights, i32 biases pre-folded
-    /// with the input zero-points, fixed-point requant multipliers, and
-    /// fused clamped-ReLU epilogues. Requires an 8-bit-or-narrower
-    /// weight scheme and quantised activations (`act_bits` in 1..=8).
+    /// Compile the retained integer grids into a true-int8 execution
+    /// plan ([`qengine::QModel`]): per-layer i8 weights, i64 biases
+    /// pre-folded with the input zero-points, fixed-point requant
+    /// multipliers, fused clamped-ReLU epilogues, requantise-add /
+    /// integer-GAP / int8-head lowering, and dense value slots.
+    /// Requires an 8-bit-or-narrower weight scheme and quantised
+    /// activations (`act_bits` in 1..=8).
     pub fn pack_int8(&self) -> Result<qengine::QModel> {
+        self.pack_int8_opts(qengine::PlanOpts::default())
+    }
+
+    /// Like [`QuantizedModel::pack_int8`] with explicit planner options
+    /// — `PlanOpts { int8_only: true }` errors (rather than silently
+    /// executing f32) when any fallback op survives planning.
+    pub fn pack_int8_opts(
+        &self,
+        opts: qengine::PlanOpts,
+    ) -> Result<qengine::QModel> {
         if self.int_weights.len() < self.model.layers().len() {
             anyhow::bail!(
                 "pack_int8 needs retained integer weights for all {} \
@@ -159,7 +176,8 @@ impl QuantizedModel {
                 self.int_weights.len()
             );
         }
-        qengine::pack(&self.model, &self.int_weights, &self.act_cfg)
+        let aux = qengine::AuxGrids { preact: self.preact_params.clone() };
+        qengine::plan(&self.model, &self.int_weights, &self.act_cfg, &aux, opts)
     }
 }
 
@@ -208,13 +226,38 @@ impl Prepared {
                 bias_correct::empirical(&mut q, &self.reference, calib)?;
             }
         }
-        let act_cfg = quant::ranges::activation_qcfg(
-            &self.model,
-            act_bits,
-            scheme.symmetric,
-            quant::ranges::DEFAULT_N_SIGMA,
-        )?;
-        Ok(QuantizedModel { model: q, weight_params, int_weights, act_cfg })
+        // one stats propagation feeds both the activation-site rows and
+        // the pre-activation grids (the latter only when the int8 path
+        // itself is available: bits <= 8 and quantised activations)
+        let n_sigma = quant::ranges::DEFAULT_N_SIGMA;
+        let (act_cfg, preact_params) = if act_bits == 0 {
+            (
+                quant::ranges::activation_qcfg(
+                    &self.model, 0, scheme.symmetric, n_sigma,
+                )?,
+                Vec::new(),
+            )
+        } else {
+            let stats = crate::graph::stats::propagate(&self.model)?;
+            let act_cfg = quant::ranges::activation_qcfg_with(
+                &self.model, &stats, act_bits, scheme.symmetric, n_sigma,
+            )?;
+            let preact = if scheme.bits <= 8 && act_bits <= 8 {
+                quant::ranges::preact_qparams_with(
+                    &self.model, &stats, act_bits, scheme.symmetric, n_sigma,
+                )
+            } else {
+                Vec::new()
+            };
+            (act_cfg, preact)
+        };
+        Ok(QuantizedModel {
+            model: q,
+            weight_params,
+            int_weights,
+            act_cfg,
+            preact_params,
+        })
     }
 
     /// Bias-correct the *unquantised* prepared model against its

@@ -108,6 +108,140 @@ pub fn two_layer_model(seed: u64, with_bn: bool) -> Model {
     }
 }
 
+/// MobileNet-v2-style residual block + head:
+///
+/// ```text
+/// input → conv3x3(3→8) → bn → relu ─┬→ dw3x3(8) → bn → relu
+///                                   │      → pw1x1(8→8) → bn ─┐
+///                                   └───────────── add ←──────┘
+///                                                   ↓
+///                                                  gap → linear(8→10)
+/// ```
+///
+/// Exercises every integer op of the qengine plan: fused dense +
+/// depthwise convs, a pointwise conv requantised onto its
+/// pre-activation grid, requantise-add, integer GAP and the int8
+/// linear head.
+pub fn residual_block_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let mut tensors = BTreeMap::new();
+    let mut nodes = vec![Node { id: 0, inputs: vec![], op: Op::Input }];
+    let mut id = 0usize;
+    let c = 8usize;
+
+    let mut conv_bn = |nodes: &mut Vec<Node>,
+                       tensors: &mut BTreeMap<String, Tensor>,
+                       rng: &mut Rng,
+                       input: usize,
+                       in_ch: usize,
+                       out_ch: usize,
+                       k: usize,
+                       groups: usize,
+                       act: Option<ActKind>|
+     -> usize {
+        id += 1;
+        let w = format!("w{id}");
+        tensors.insert(
+            w.clone(),
+            rand_t(rng, &[out_ch, in_ch / groups, k, k], 0.4),
+        );
+        nodes.push(Node {
+            id,
+            inputs: vec![input],
+            op: Op::Conv {
+                w,
+                b: None,
+                in_ch,
+                out_ch,
+                k,
+                stride: 1,
+                pad: k / 2,
+                groups,
+            },
+        });
+        // bn params: gamma ~ N(1, .3), beta ~ N(.1, .3), mean ~ N(0, .3),
+        // var = |N(0, .3)| + .5
+        id += 1;
+        for (p, std, ofs) in [
+            ("g", 0.3f32, 1.0f32),
+            ("be", 0.3, 0.1),
+            ("m", 0.3, 0.0),
+            ("v", 0.0, 0.0),
+        ] {
+            let name = format!("{p}{id}");
+            let mut t = rand_t(rng, &[out_ch], std);
+            t.map_inplace(|x| x + ofs);
+            if p == "v" {
+                t = rand_t(rng, &[out_ch], 0.3);
+                t.map_inplace(|x| x.abs() + 0.5);
+            }
+            tensors.insert(name, t);
+        }
+        nodes.push(Node {
+            id,
+            inputs: vec![id - 1],
+            op: Op::BatchNorm {
+                ch: out_ch,
+                gamma: format!("g{id}"),
+                beta: format!("be{id}"),
+                mean: format!("m{id}"),
+                var: format!("v{id}"),
+            },
+        });
+        if let Some(kind) = act {
+            id += 1;
+            nodes.push(Node {
+                id,
+                inputs: vec![id - 1],
+                op: Op::Act(kind),
+            });
+        }
+        id
+    };
+
+    let a1 = conv_bn(
+        &mut nodes, &mut tensors, &mut rng, 0, 3, c, 3, 1,
+        Some(ActKind::Relu),
+    );
+    let a2 = conv_bn(
+        &mut nodes, &mut tensors, &mut rng, a1, c, c, 3, c,
+        Some(ActKind::Relu),
+    );
+    // pointwise with bn but no activation: its output feeds the add
+    let p3 = conv_bn(&mut nodes, &mut tensors, &mut rng, a2, c, c, 1, 1, None);
+
+    id += 1;
+    let add_id = id;
+    nodes.push(Node { id: add_id, inputs: vec![a1, p3], op: Op::Add });
+    id += 1;
+    let gap_id = id;
+    nodes.push(Node { id: gap_id, inputs: vec![add_id], op: Op::Gap });
+    id += 1;
+    let lin_id = id;
+    let wl = format!("wl{lin_id}");
+    tensors.insert(wl.clone(), rand_t(&mut rng, &[10, c], 0.4));
+    let bl = format!("bl{lin_id}");
+    tensors.insert(bl.clone(), rand_t(&mut rng, &[10], 0.2));
+    nodes.push(Node {
+        id: lin_id,
+        inputs: vec![gap_id],
+        op: Op::Linear { w: wl, b: bl, in_dim: c, out_dim: 10 },
+    });
+
+    Model {
+        name: "test_resblock".into(),
+        task: Task::Classification,
+        input_shape: [3, 8, 8],
+        num_classes: 10,
+        nodes,
+        outputs: vec![lin_id],
+        tensors,
+        meta: BTreeMap::new(),
+        act_stats: HashMap::new(),
+        folded: false,
+    }
+}
+
 pub fn random_input(model: &Model, batch: usize, seed: u64) -> Tensor {
     let mut rng = Rng::new(seed);
     let [c, h, w] = model.input_shape;

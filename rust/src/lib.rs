@@ -37,14 +37,20 @@
 //!   per-channel [`quant::QParams`]; [`dfq::Prepared::quantize`] retains
 //!   the integer weight grids it computes
 //!   ([`dfq::QuantizedModel::int_weights`]).
-//! * [`dfq::QuantizedModel::pack_int8`] lowers the model to an
-//!   [`nn::qengine::QModel`]: integer im2col + u8×i8→i32 GEMM convs with
-//!   i32 biases pre-folded with the input zero-points
+//! * [`dfq::QuantizedModel::pack_int8`] *compiles* the model into an
+//!   [`nn::qengine::QModel`] execution plan: every node resolved to a
+//!   typed integer op with precomputed fixed-point multipliers and dense
+//!   value slots — integer im2col + u8×i8→i32 GEMM convs with i64 biases
+//!   pre-folded with the input zero-points
 //!   (`Σ(qa-za)(qw-zw) = Σ qa·qw - zw·rowsum - za·colsum + K·za·zw`),
-//!   a depthwise direct path, and fixed-point requantisation
-//!   (`M = s_in·s_w/s_out` as an i64 multiplier + shift) with the site's
-//!   clamped-ReLU/ReLU6 fused into the integer clamp. Parity with the
-//!   fake-quant oracle is one quantisation step per element.
+//!   a channel-parallel depthwise direct path, requantise-add for
+//!   residual connections, integer global average pooling, an int8
+//!   linear head, and fused clamped-ReLU/ReLU6 epilogues
+//!   (`M = s_in·s_w/s_out` as an i64 multiplier + shift). A
+//!   MobileNet-style graph plans with zero f32 fallback ops
+//!   ([`nn::qengine::PlanOpts::int8_only`] makes that a hard guarantee);
+//!   `run_all` is batch-parallel over images. Parity with the fake-quant
+//!   oracle is one quantisation step per element per op.
 //! * [`serve::QuantExecutor`] plugs the packed model into the serving
 //!   router as a `BatchExecutor`, so one [`serve::Router`] hosts
 //!   f32-oracle and int8 variants side by side:

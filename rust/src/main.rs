@@ -40,9 +40,11 @@ fn usage() -> ! {
                     [--per-channel] [--symmetric] [--out FILE]\n\
            eval <arch> [--mode fp32|baseline|dfq] [--bits N] [--limit N]\n\
            serve <arch> [--requests N] [--rate R] [--batch N]\n\
+                 [--backend pjrt|engine|qengine]\n\
            inspect <arch>\n\
          \n\
-         env: DFQ_ARTIFACTS (artifacts dir), DFQ_BACKEND=pjrt|engine,\n\
+         env: DFQ_ARTIFACTS (artifacts dir),\n\
+              DFQ_BACKEND: serve=pjrt|engine|qengine, eval=pjrt|engine,\n\
               DFQ_EVAL_LIMIT, DFQ_RESULTS (results dir)"
     );
     std::process::exit(2);
@@ -204,7 +206,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         kv.get("rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
     let batch: usize =
         kv.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(64);
-    dfq::serve::demo::run_load(&arch, requests, rate, batch)
+    // explicit flag wins; otherwise DFQ_BACKEND (default pjrt)
+    let backend = match kv.get("backend") {
+        Some(s) => dfq::serve::demo::ServeBackend::parse(s)?,
+        None => dfq::serve::demo::ServeBackend::from_env(),
+    };
+    dfq::serve::demo::run_load(&arch, requests, rate, batch, backend)
 }
 
 fn cmd_inspect(rest: &[String]) -> Result<()> {

@@ -1,0 +1,776 @@
+//! Integer compute kernels: the u8×i8→i32 GEMM, fixed-point
+//! requantisation multipliers, the shared scratch arena, and the packed
+//! convolution layer ([`QConv`]) with its fused epilogues.
+//!
+//! Everything here is *mechanism*; policy (which kernel runs where, on
+//! which grid) lives in the plan compiler ([`super::plan`]).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::nn::conv::im2col_into;
+use crate::nn::SiteCfg;
+use crate::quant::QParams;
+use crate::tensor::{QTensor, Tensor};
+use crate::util::parallel;
+
+use super::{assert_act_grid, QActTensor};
+
+// -- scratch arena -----------------------------------------------------------
+
+/// Reusable per-run scratch buffers: im2col patches, GEMM accumulators
+/// and row sums. The plan executor allocates one `Scratch` per
+/// `run_batch` call and recycles it across every layer (buffers grow to
+/// the largest layer once, then stop allocating).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    pub(crate) col: Vec<u8>,
+    pub(crate) acc: Vec<i32>,
+    pub(crate) rows: Vec<i32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+// -- integer GEMM primitives ------------------------------------------------
+
+/// C[m,n] = A[m,k] · B[k,n] with u8 activations × i8 weights → i32
+/// accumulators, written into the caller's buffer. Same saxpy-style loop
+/// and row-parallel chunking as the f32 [`crate::nn::conv::matmul`]; the
+/// `q == 0` skip exploits ReLU sparsity (post-ReLU grids have `zp == 0`,
+/// so code 0 is exactly value 0).
+pub fn qgemm_into(a: &[u8], b: &[i8], m: usize, k: usize, n: usize, c: &mut [i32]) {
+    assert!(c.len() == m * n, "qgemm_into: bad output buffer");
+    c.fill(0);
+    let cells = parallel::as_send_cells(c);
+    parallel::par_chunks(m, |lo, hi| {
+        for i in lo..hi {
+            let arow = &a[i * k..(i + 1) * k];
+            // SAFETY: rows [lo, hi) are written by this chunk only.
+            let crow = unsafe { cells.slice(i * n, n) };
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0 {
+                    continue;
+                }
+                let av = av as i32;
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j] as i32;
+                }
+            }
+        }
+    });
+}
+
+/// Allocating wrapper around [`qgemm_into`].
+pub fn qgemm(a: &[u8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    qgemm_into(a, b, m, k, n, &mut c);
+    c
+}
+
+/// Per-row sums of a u8 matrix (the gemmlowp rowsum correction input),
+/// written into the caller's buffer.
+pub fn rowsums_u8_into(a: &[u8], m: usize, k: usize, out: &mut [i32]) {
+    assert!(out.len() == m, "rowsums_u8_into: bad output buffer");
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = a[i * k..(i + 1) * k].iter().map(|&v| v as i32).sum();
+    }
+}
+
+/// Allocating wrapper around [`rowsums_u8_into`].
+pub fn rowsums_u8(a: &[u8], m: usize, k: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m];
+    rowsums_u8_into(a, m, k, &mut out);
+    out
+}
+
+// -- fixed-point requantisation ---------------------------------------------
+
+/// A positive real multiplier `M` as `m · 2^-shift` with `m ∈ [2^30,
+/// 2^31)`; degenerate magnitudes fall back to f64 rounding.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mult {
+    Fixed { m: i32, shift: u32 },
+    Float(f64),
+}
+
+/// Decompose `x > 0` into the i64 fixed-point form.
+pub fn mult_for(x: f64) -> Mult {
+    if !x.is_finite() || x <= 0.0 {
+        return Mult::Float(x.max(0.0));
+    }
+    let mut v = x;
+    let mut e = 0i32;
+    while v < 0.5 {
+        v *= 2.0;
+        e -= 1;
+    }
+    while v >= 1.0 {
+        v /= 2.0;
+        e += 1;
+    }
+    let mut m = (v * (1u64 << 31) as f64).round() as i64;
+    let mut shift = 31 - e;
+    if m == 1i64 << 31 {
+        m >>= 1;
+        shift -= 1;
+    }
+    if !(1..=62).contains(&shift) {
+        return Mult::Float(x);
+    }
+    Mult::Fixed { m: m as i32, shift: shift as u32 }
+}
+
+/// `round(t · M)` (round half away from zero for the fixed-point form —
+/// within the engine's one-step tolerance of the oracle's ties-to-even).
+#[inline]
+pub fn apply_mult(t: i64, m: &Mult) -> i64 {
+    match *m {
+        Mult::Fixed { m, shift } => {
+            let prod = t as i128 * m as i128;
+            let half = 1i128 << (shift - 1);
+            let r = if prod >= 0 {
+                (prod + half) >> shift
+            } else {
+                -((-prod + half) >> shift)
+            };
+            r as i64
+        }
+        Mult::Float(f) => (t as f64 * f).round() as i64,
+    }
+}
+
+/// Integer clamp bounds implementing a site's clipped-ReLU on its output
+/// grid: `q_lo = clamp(zp, 0, n-1)` (value 0 after the ReLU floor),
+/// `q_hi` from the site's `clip_hi` (ReLU6) or the grid ceiling.
+pub(crate) fn act_clamp(row: &SiteCfg, out_qp: &QParams) -> (i32, i32) {
+    let zp_out = out_qp.zero_point as i32;
+    let n_hi = out_qp.n_levels as i32 - 1;
+    let q_lo = zp_out.clamp(0, n_hi);
+    let q_hi = if row.clip_hi.is_finite() {
+        (zp_out + (row.clip_hi / row.scale).round() as i32).clamp(q_lo, n_hi)
+    } else {
+        n_hi
+    };
+    (q_lo, q_hi)
+}
+
+// -- packed convolution layers ----------------------------------------------
+
+/// How a packed conv finishes.
+#[derive(Debug, Clone, Copy)]
+pub enum EpiSpec<'a> {
+    /// No integer epilogue: i32 accumulate, exact f32 output
+    /// ([`QConv::run_f32`]) — for convs whose value must stay f32
+    /// (model outputs).
+    F32,
+    /// Fused activation site: requantise onto the site grid with the
+    /// clamped-ReLU/ReLU6 bounds folded into the integer clamp.
+    Act(&'a SiteCfg),
+    /// Plain requantisation onto a grid with *no* activation (clamp is
+    /// the grid's own `[0, n-1]`): residual-branch convs land on their
+    /// pre-activation grid before the integer add.
+    Grid(QParams),
+}
+
+/// Per-output-channel weight-grid folding shared by the GEMM packers
+/// ([`QConv::pack`], `QLinear::pack`).
+pub(crate) struct FoldedWeights {
+    /// i8 codes laid out for the kernel: (K, O) when transposed (dense
+    /// GEMM / linear head), O-major otherwise (depthwise direct).
+    pub w: Vec<i8>,
+    /// Signed-storage weight zero point (`zp_w - 128`) per out channel.
+    pub zp_w: Vec<i32>,
+    pub s_w: Vec<f32>,
+    /// `-zp_in·colsum[o] + K·zp_in·zp_w[o]` per out channel (the static
+    /// half of the gemmlowp zero-point identity).
+    pub zp_corr: Vec<i64>,
+}
+
+/// Fold a retained weight tensor for integer execution: signed-storage
+/// zero points, per-channel scales (per-tensor grids broadcast), the
+/// static gemmlowp correction constants, and the kernel layout. `per`
+/// is the reduction length per output channel (`cig·kh·kw` / `in_dim`).
+pub(crate) fn fold_weight_grids(
+    w: &QTensor,
+    c_out: usize,
+    per: usize,
+    in_qp: &QParams,
+    transpose: bool,
+) -> Result<FoldedWeights> {
+    let codes = w.codes_i8().ok_or_else(|| {
+        anyhow!(
+            "integer packing wants signed (i8) weight codes, got {}",
+            w.storage()
+        )
+    })?;
+    let zp_in = in_qp.zero_point as i64;
+    let mut zp_w = Vec::with_capacity(c_out);
+    let mut s_w = Vec::with_capacity(c_out);
+    let mut zp_corr = Vec::with_capacity(c_out);
+    for o in 0..c_out {
+        let p = w.param_for_channel(o);
+        let z = p.zero_point as i32 - 128;
+        zp_w.push(z);
+        s_w.push(p.scale);
+        let colsum: i64 = codes[o * per..(o + 1) * per]
+            .iter()
+            .map(|&v| v as i64)
+            .sum();
+        zp_corr.push(-zp_in * colsum + per as i64 * zp_in * z as i64);
+    }
+    let w_packed = if transpose {
+        let mut wt = vec![0i8; per * c_out];
+        for o in 0..c_out {
+            for kk in 0..per {
+                wt[kk * c_out + o] = codes[o * per + kk];
+            }
+        }
+        wt
+    } else {
+        codes.to_vec()
+    };
+    Ok(FoldedWeights { w: w_packed, zp_w, s_w, zp_corr })
+}
+
+/// Fused requant epilogue: integer bias (zero-point corrections + the
+/// f32 bias folded onto the accumulator grid), per-channel multipliers,
+/// and the clamp implementing both the output grid and (when fused with
+/// an activation) the clipped-ReLU bounds.
+#[derive(Debug, Clone)]
+struct Epilogue {
+    /// `round(b/(s_in·s_w)) - zp_in·colsum + K·zp_in·zp_w` per channel.
+    bias_q: Vec<i64>,
+    /// `s_in·s_w[o]/s_out` per channel.
+    mult: Vec<Mult>,
+    zp_out: i32,
+    q_lo: i32,
+    q_hi: i32,
+    out_qp: QParams,
+}
+
+fn make_epilogue(
+    bias: &[f32],
+    s_w: &[f32],
+    zp_corr: &[i64],
+    in_qp: &QParams,
+    out_qp: QParams,
+    q_lo: i32,
+    q_hi: i32,
+) -> Epilogue {
+    let c_out = bias.len();
+    let mut bias_q = Vec::with_capacity(c_out);
+    let mut mult = Vec::with_capacity(c_out);
+    for o in 0..c_out {
+        let acc_scale = in_qp.scale as f64 * s_w[o] as f64;
+        bias_q.push((bias[o] as f64 / acc_scale).round() as i64 + zp_corr[o]);
+        mult.push(mult_for(acc_scale / out_qp.scale as f64));
+    }
+    Epilogue {
+        bias_q,
+        mult,
+        zp_out: out_qp.zero_point as i32,
+        q_lo,
+        q_hi,
+        out_qp,
+    }
+}
+
+/// One conv layer packed for integer execution: offset i8 weight codes,
+/// per-channel grids, zero-point correction constants, and (when
+/// requantising) the fused [`Epilogue`].
+#[derive(Debug, Clone)]
+pub struct QConv {
+    c_out: usize,
+    cig: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    /// groups == 1: transposed (kdim, c_out) for the GEMM;
+    /// depthwise: O-major (c, kh·kw).
+    w: Vec<i8>,
+    /// Signed-storage weight zero point (`zp_w - 128`) per out channel.
+    zp_w: Vec<i32>,
+    s_w: Vec<f32>,
+    /// `-zp_in·colsum[o] + K·zp_in·zp_w[o]` per out channel.
+    zp_corr: Vec<i64>,
+    bias_f: Vec<f32>,
+    in_qp: QParams,
+    epi: Option<Epilogue>,
+}
+
+impl QConv {
+    /// Pack one conv layer. `w` must hold signed (i8) codes with OIHW
+    /// shape; `in_qp` is the grid of the layer's input feature map.
+    /// `epi` selects the epilogue: [`EpiSpec::Act`] fuses the consuming
+    /// activation site (requant + clamped-ReLU bounds), [`EpiSpec::Grid`]
+    /// requantises onto a plain grid (residual branches), and
+    /// [`EpiSpec::F32`] keeps the exact f32 output ([`QConv::run_f32`]).
+    pub fn pack(
+        w: &QTensor,
+        bias: &[f32],
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        in_qp: &QParams,
+        epi: EpiSpec,
+    ) -> Result<QConv> {
+        let shape = w.shape();
+        if shape.len() != 4 {
+            bail!("QConv wants OIHW weights, got {:?}", shape);
+        }
+        let (c_out, cig, kh, kw) = (shape[0], shape[1], shape[2], shape[3]);
+        if groups != 1 && (cig != 1 || groups != c_out) {
+            bail!("QConv supports dense or depthwise grouping only");
+        }
+        if bias.len() != c_out {
+            bail!("bias len {} != out channels {}", bias.len(), c_out);
+        }
+        assert_act_grid(in_qp);
+        let per = cig * kh * kw;
+        // dense GEMM wants (kdim, c_out); depthwise stays O-major
+        let fw = fold_weight_grids(w, c_out, per, in_qp, groups == 1)?;
+
+        let epi = match epi {
+            EpiSpec::F32 => None,
+            EpiSpec::Act(row) => {
+                if !(2.0..=256.0).contains(&row.n_levels) {
+                    bail!(
+                        "fused epilogue needs a quantised site \
+                         (2..=256 levels), got {}",
+                        row.n_levels
+                    );
+                }
+                let out_qp = QParams {
+                    scale: row.scale,
+                    zero_point: row.zero_point,
+                    n_levels: row.n_levels,
+                };
+                assert_act_grid(&out_qp);
+                let (q_lo, q_hi) = act_clamp(row, &out_qp);
+                Some(make_epilogue(
+                    bias, &fw.s_w, &fw.zp_corr, in_qp, out_qp, q_lo, q_hi,
+                ))
+            }
+            EpiSpec::Grid(out_qp) => {
+                assert_act_grid(&out_qp);
+                let n_hi = out_qp.n_levels as i32 - 1;
+                Some(make_epilogue(
+                    bias, &fw.s_w, &fw.zp_corr, in_qp, out_qp, 0, n_hi,
+                ))
+            }
+        };
+
+        Ok(QConv {
+            c_out,
+            cig,
+            kh,
+            kw,
+            stride,
+            pad,
+            groups,
+            w: fw.w,
+            zp_w: fw.zp_w,
+            s_w: fw.s_w,
+            zp_corr: fw.zp_corr,
+            bias_f: bias.to_vec(),
+            in_qp: *in_qp,
+            epi,
+        })
+    }
+
+    pub fn out_channels(&self) -> usize {
+        self.c_out
+    }
+
+    /// Does this layer requantise (u8 out) rather than emit exact f32?
+    pub fn is_fused(&self) -> bool {
+        self.epi.is_some()
+    }
+
+    pub fn is_depthwise(&self) -> bool {
+        self.groups > 1
+    }
+
+    /// Output grid when the layer requantises.
+    pub fn out_params(&self) -> Option<QParams> {
+        self.epi.as_ref().map(|e| e.out_qp)
+    }
+
+    fn check_input(&self, x: &QActTensor) -> Result<(usize, usize, usize)> {
+        if x.qp != self.in_qp {
+            bail!(
+                "input grid mismatch: layer packed for {:?}, got {:?}",
+                self.in_qp,
+                x.qp
+            );
+        }
+        if x.shape.len() != 4 || x.shape[1] != self.cig * self.groups {
+            bail!(
+                "input shape {:?} incompatible with conv ({} channels)",
+                x.shape,
+                self.cig * self.groups
+            );
+        }
+        Ok((x.shape[0], x.shape[2], x.shape[3]))
+    }
+
+    /// Integer accumulators + im2col row sums for one image into the
+    /// scratch arena (dense path) — the shared front half of both run
+    /// paths.
+    fn accumulate_dense(
+        &self,
+        x: &QActTensor,
+        img: usize,
+        h: usize,
+        wd: usize,
+        oh: usize,
+        ow: usize,
+        scratch: &mut Scratch,
+    ) {
+        let kdim = self.cig * self.kh * self.kw;
+        let ohw = oh * ow;
+        im2col_into(
+            &x.codes,
+            self.cig,
+            h,
+            wd,
+            img,
+            self.kh,
+            self.kw,
+            self.stride,
+            self.pad,
+            oh,
+            ow,
+            self.in_qp.zero_point as u8,
+            &mut scratch.col[..ohw * kdim],
+        );
+        rowsums_u8_into(
+            &scratch.col[..ohw * kdim],
+            ohw,
+            kdim,
+            &mut scratch.rows[..ohw],
+        );
+        qgemm_into(
+            &scratch.col[..ohw * kdim],
+            &self.w,
+            ohw,
+            kdim,
+            self.c_out,
+            &mut scratch.acc[..ohw * self.c_out],
+        );
+    }
+
+    fn reserve(&self, scratch: &mut Scratch, oh: usize, ow: usize) {
+        let kdim = self.cig * self.kh * self.kw;
+        let ohw = oh * ow;
+        if scratch.col.len() < ohw * kdim {
+            scratch.col.resize(ohw * kdim, 0);
+        }
+        if scratch.acc.len() < ohw * self.c_out {
+            scratch.acc.resize(ohw * self.c_out, 0);
+        }
+        if scratch.rows.len() < ohw {
+            scratch.rows.resize(ohw, 0);
+        }
+    }
+
+    /// Fused path: u8 in → u8 out on the packed output grid
+    /// (convenience wrapper allocating its own scratch).
+    pub fn run_q(&self, x: &QActTensor) -> Result<QActTensor> {
+        self.run_q_with(x, &mut Scratch::new())
+    }
+
+    /// Fused path over a caller-provided scratch arena.
+    pub fn run_q_with(
+        &self,
+        x: &QActTensor,
+        scratch: &mut Scratch,
+    ) -> Result<QActTensor> {
+        let epi = self
+            .epi
+            .as_ref()
+            .ok_or_else(|| anyhow!("QConv not packed with a fused epilogue"))?;
+        let (n, h, wd) = self.check_input(x)?;
+        let oh = (h + 2 * self.pad - self.kh) / self.stride + 1;
+        let ow = (wd + 2 * self.pad - self.kw) / self.stride + 1;
+        let ohw = oh * ow;
+        let mut out = vec![0u8; n * self.c_out * ohw];
+
+        if self.groups == 1 {
+            self.reserve(scratch, oh, ow);
+            for img in 0..n {
+                self.accumulate_dense(x, img, h, wd, oh, ow, scratch);
+                let base = img * self.c_out * ohw;
+                for o in 0..self.c_out {
+                    let zpw = self.zp_w[o] as i64;
+                    let bq = epi.bias_q[o];
+                    let m = &epi.mult[o];
+                    let dst = &mut out[base + o * ohw..base + (o + 1) * ohw];
+                    for (p, d) in dst.iter_mut().enumerate() {
+                        let t = scratch.acc[p * self.c_out + o] as i64
+                            - zpw * scratch.rows[p] as i64
+                            + bq;
+                        let q = (apply_mult(t, m) + epi.zp_out as i64)
+                            .clamp(epi.q_lo as i64, epi.q_hi as i64);
+                        *d = q as u8;
+                    }
+                }
+            }
+        } else {
+            let requant = |c: usize, t: i64| {
+                let q = (apply_mult(t + epi.bias_q[c], &epi.mult[c])
+                    + epi.zp_out as i64)
+                    .clamp(epi.q_lo as i64, epi.q_hi as i64);
+                q as u8
+            };
+            self.depthwise(x, n, h, wd, oh, ow, requant, &mut out);
+        }
+        Ok(QActTensor {
+            shape: vec![n, self.c_out, oh, ow],
+            codes: out,
+            qp: epi.out_qp,
+        })
+    }
+
+    /// Unfused path: u8 in → exact f32 pre-activation output (integer
+    /// accumulate, float epilogue). Matches the f32 oracle's conv output
+    /// on the same fake-quantised operands up to f32 rounding
+    /// (convenience wrapper allocating its own scratch).
+    pub fn run_f32(&self, x: &QActTensor) -> Result<Tensor> {
+        self.run_f32_with(x, &mut Scratch::new())
+    }
+
+    /// Unfused path over a caller-provided scratch arena.
+    pub fn run_f32_with(
+        &self,
+        x: &QActTensor,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let (n, h, wd) = self.check_input(x)?;
+        let oh = (h + 2 * self.pad - self.kh) / self.stride + 1;
+        let ow = (wd + 2 * self.pad - self.kw) / self.stride + 1;
+        let ohw = oh * ow;
+        let mut out = Tensor::zeros(&[n, self.c_out, oh, ow]);
+        let od = out.data_mut();
+
+        if self.groups == 1 {
+            self.reserve(scratch, oh, ow);
+            for img in 0..n {
+                self.accumulate_dense(x, img, h, wd, oh, ow, scratch);
+                let base = img * self.c_out * ohw;
+                for o in 0..self.c_out {
+                    let zpw = self.zp_w[o] as i64;
+                    let corr = self.zp_corr[o];
+                    let scale = self.in_qp.scale as f64 * self.s_w[o] as f64;
+                    let bias = self.bias_f[o];
+                    let dst =
+                        &mut od[base + o * ohw..base + (o + 1) * ohw];
+                    for (p, d) in dst.iter_mut().enumerate() {
+                        let t = scratch.acc[p * self.c_out + o] as i64
+                            - zpw * scratch.rows[p] as i64
+                            + corr;
+                        *d = (t as f64 * scale) as f32 + bias;
+                    }
+                }
+            }
+        } else {
+            let scales: Vec<f64> = (0..self.c_out)
+                .map(|c| self.in_qp.scale as f64 * self.s_w[c] as f64)
+                .collect();
+            let f32_epi = |c: usize, t: i64| {
+                ((t + self.zp_corr[c]) as f64 * scales[c]) as f32
+                    + self.bias_f[c]
+            };
+            self.depthwise(x, n, h, wd, oh, ow, f32_epi, od);
+        }
+        Ok(out)
+    }
+
+    /// Depthwise direct core, parallel over (image, channel) blocks and
+    /// generic over the per-element epilogue (u8 requant on the fused
+    /// path, exact f32 on the unfused path). `t` handed to the epilogue
+    /// is the raw rowsum-corrected i64 accumulator; the closure adds its
+    /// own per-channel constants.
+    #[allow(clippy::too_many_arguments)]
+    fn depthwise<T, F>(
+        &self,
+        x: &QActTensor,
+        n: usize,
+        h: usize,
+        wd: usize,
+        oh: usize,
+        ow: usize,
+        epilogue: F,
+        out: &mut [T],
+    ) where
+        F: Fn(usize, i64) -> T + Sync,
+    {
+        let c = self.c_out;
+        let khw = self.kh * self.kw;
+        let zp_in = self.in_qp.zero_point as i32;
+        let ohw = oh * ow;
+        let cells = parallel::as_send_cells(out);
+        parallel::par_chunks(n * c, |lo, hi| {
+            for i in lo..hi {
+                let ch = i % c;
+                let xoff = i * h * wd;
+                // SAFETY: block i is written by this chunk only.
+                let dst = unsafe { cells.slice(i * ohw, ohw) };
+                let wch = &self.w[ch * khw..(ch + 1) * khw];
+                let zpw = self.zp_w[ch] as i64;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let (acc, sx) = self.dw_patch(
+                            &x.codes, xoff, h, wd, oy, ox, wch, zp_in,
+                        );
+                        let t = acc - zpw * sx as i64;
+                        dst[oy * ow + ox] = epilogue(ch, t);
+                    }
+                }
+            }
+        });
+    }
+
+    /// One depthwise kernel window: (Σ q·w, Σ q) with out-of-bounds
+    /// positions read as `zp_in` (they represent exact zeros).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn dw_patch(
+        &self,
+        codes: &[u8],
+        xoff: usize,
+        h: usize,
+        wd: usize,
+        oy: usize,
+        ox: usize,
+        wch: &[i8],
+        zp_in: i32,
+    ) -> (i64, i32) {
+        let mut acc = 0i64;
+        let mut sx = 0i32;
+        let iy0 = oy * self.stride;
+        let ix0 = ox * self.stride;
+        for dy in 0..self.kh {
+            let iy = iy0 + dy;
+            for dx in 0..self.kw {
+                let ix = ix0 + dx;
+                let q = if iy < self.pad
+                    || iy >= h + self.pad
+                    || ix < self.pad
+                    || ix >= wd + self.pad
+                {
+                    zp_in
+                } else {
+                    codes[xoff + (iy - self.pad) * wd + (ix - self.pad)]
+                        as i32
+                };
+                acc += (q * wch[dy * self.kw + dx] as i32) as i64;
+                sx += q;
+            }
+        }
+        (acc, sx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mult_roundtrips_magnitudes() {
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let m = rng.log_uniform(1e-6, 1e3) as f64;
+            let fm = mult_for(m);
+            for _ in 0..20 {
+                let t = (rng.uniform(-1e6, 1e6)) as i64;
+                let got = apply_mult(t, &fm);
+                let want = (t as f64 * m).round() as i64;
+                assert!(
+                    (got - want).abs() <= 1,
+                    "M={m} t={t}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mult_degenerate_falls_back() {
+        assert!(matches!(mult_for(0.0), Mult::Float(_)));
+        assert!(matches!(mult_for(f64::INFINITY), Mult::Float(_)));
+        assert_eq!(apply_mult(100, &Mult::Float(0.5)), 50);
+    }
+
+    #[test]
+    fn qgemm_matches_naive() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (7, 13, 5);
+        let a: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let b: Vec<i8> =
+            (0..k * n).map(|_| rng.below(256) as i8).collect();
+        let got = qgemm(&a, &b, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k)
+                    .map(|kk| a[i * k + kk] as i32 * b[kk * n + j] as i32)
+                    .sum();
+                assert_eq!(got[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn rowsums_match() {
+        let a: Vec<u8> = vec![1, 2, 3, 250, 251, 252];
+        assert_eq!(rowsums_u8(&a, 2, 3), vec![6, 753]);
+    }
+
+    #[test]
+    fn scratch_reuse_is_transparent() {
+        // the same layer run with a fresh scratch and an oversized
+        // recycled scratch must agree exactly
+        let mut rng = Rng::new(9);
+        let t = crate::tensor::Tensor::new(
+            &[4, 1, 3, 3],
+            rng.normal_vec(36, 0.5),
+        );
+        let (_, codes) = crate::quant::quantize_weights_retaining(
+            &mut t.clone(),
+            &crate::quant::QScheme::int8_asymmetric(),
+        )
+        .unwrap();
+        let x = crate::tensor::Tensor::new(&[1, 1, 6, 6], rng.normal_vec(36, 1.0));
+        let in_qp = crate::quant::params_for_range(x.min(), x.max(), 8, false);
+        let xq = QActTensor::quantize(&x, &in_qp);
+        let row = SiteCfg {
+            scale: 0.05,
+            zero_point: 0.0,
+            n_levels: 256.0,
+            clip_hi: f32::INFINITY,
+        };
+        let qc = QConv::pack(
+            &codes,
+            &[0.0; 4],
+            1,
+            1,
+            1,
+            &in_qp,
+            EpiSpec::Act(&row),
+        )
+        .unwrap();
+        let fresh = qc.run_q(&xq).unwrap();
+        let mut big = Scratch::new();
+        big.col.resize(10_000, 7);
+        big.acc.resize(10_000, -3);
+        big.rows.resize(10_000, 11);
+        let recycled = qc.run_q_with(&xq, &mut big).unwrap();
+        assert_eq!(fresh, recycled);
+    }
+}

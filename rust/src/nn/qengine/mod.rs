@@ -1,0 +1,130 @@
+//! True int8 execution: a *planned* integer op pipeline over the
+//! retained quantisation grids.
+//!
+//! The f32 engine ([`crate::nn::forward`]) *simulates* quantisation: it
+//! computes every op in f32 over fake-quantised values. This module
+//! executes the same function on the integer grids themselves, in three
+//! layers:
+//!
+//! * [`kernels`] — mechanism: u8×i8→i32 GEMM (with the
+//!   [`crate::util::parallel`] row chunking of the f32 path), integer
+//!   im2col shared with the f32 engine via
+//!   [`crate::nn::conv::im2col_into`] (the input zero-point is the
+//!   padding value — `zp_in` *represents* 0), gemmlowp zero-point
+//!   folding (`Σ(qa-za)(qw-zw) = Σ qa·qw - zw·rowsum - za·colsum +
+//!   K·za·zw`, the static half pre-folded into i64 biases at pack time),
+//!   fixed-point requantisation (`M = s_in·s_w/s_out` as an i64
+//!   multiplier + shift) with fused clamped-ReLU/ReLU6 epilogues, a
+//!   channel-parallel depthwise direct path, and the [`kernels::Scratch`]
+//!   buffer arena every plan run recycles across layers.
+//! * [`ops`] — the remaining integer ops: requantise-add for residual
+//!   connections (both inputs rescaled onto the add-site grid with Q20
+//!   fixed-point multipliers and a single shared rounding), integer
+//!   global average pooling (i64 accumulate + one rounded division on
+//!   the input grid), the int8 linear head (same GEMM, per-output
+//!   zero-point folding, exact f32 logits), standalone activation
+//!   requantisation, and grid-preserving upsampling.
+//! * [`plan`] — policy: [`plan::plan`] compiles the folded graph into a
+//!   [`QModel`] — every node resolved to a typed `QOp` with
+//!   precomputed multipliers, dense value slots and
+//!   free-after-last-use bookkeeping — so the run loop never asks "does
+//!   this layer have a grid?". `run_all` is batch-parallel over images.
+//!
+//! ## Integer coverage matrix
+//!
+//! | graph op     | integer lowering                 | fallback (f32 input) |
+//! |--------------|----------------------------------|----------------------|
+//! | input        | quantise onto site-0 grid        | —                    |
+//! | conv (dense) | GEMM + fused requant / f32 out   | fake-quant f32 conv  |
+//! | conv (dw)    | direct + fused requant / f32 out | fake-quant f32 conv  |
+//! | act          | fused into conv, or requantizer  | clip + quantise      |
+//! | add          | requantise-add                   | f32 add + quantise   |
+//! | gap          | integer mean on input grid       | f32 mean             |
+//! | linear       | GEMM + f32 logits                | f32 linear           |
+//! | upsample     | code copy (grid-preserving)      | f32 copy             |
+//!
+//! A MobileNet-style graph (convs + depthwise + residual adds + GAP +
+//! linear head) therefore plans with **zero** fallback ops; fallbacks
+//! only appear when a value genuinely has no quantised grid (e.g. a conv
+//! that is itself a model output feeding further layers), are reported
+//! by [`QModel::summarize`], and can be rejected outright with
+//! [`PlanOpts::int8_only`]. Parity with the fake-quant oracle is one
+//! quantisation step per element per op (`tests/qengine_parity.rs`).
+
+pub mod kernels;
+pub mod ops;
+pub mod plan;
+
+pub use kernels::{
+    apply_mult, mult_for, qgemm, qgemm_into, rowsums_u8, rowsums_u8_into,
+    EpiSpec, Mult, QConv, Scratch,
+};
+pub use ops::{gap_int, upsample_codes, QAddInt, QLinear, Requantizer};
+pub use plan::{plan, AuxGrids, PlanOpts, QModel};
+
+use crate::quant::QParams;
+use crate::tensor::Tensor;
+
+// -- quantised activation tensors -------------------------------------------
+
+/// A feature map held as u8 grid codes with one per-tensor grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QActTensor {
+    pub shape: Vec<usize>,
+    pub codes: Vec<u8>,
+    pub qp: QParams,
+}
+
+pub(crate) fn assert_act_grid(qp: &QParams) {
+    assert!(
+        (2.0..=256.0).contains(&qp.n_levels),
+        "activation grid needs 2..=256 levels, got {}",
+        qp.n_levels
+    );
+    assert!(
+        qp.zero_point.fract() == 0.0
+            && qp.zero_point >= 0.0
+            && qp.zero_point <= qp.n_levels - 1.0,
+        "activation zero point {} not an integer on the grid",
+        qp.zero_point
+    );
+}
+
+impl QActTensor {
+    /// Quantise an f32 tensor onto `qp` (same rounding as `fake_quant`,
+    /// via the shared [`crate::tensor::qtensor::code_of`]).
+    pub fn quantize(t: &Tensor, qp: &QParams) -> QActTensor {
+        assert_act_grid(qp);
+        let codes = t
+            .data()
+            .iter()
+            .map(|&x| crate::tensor::qtensor::code_of(x, qp))
+            .collect();
+        QActTensor { shape: t.shape().to_vec(), codes, qp: *qp }
+    }
+
+    /// Exact f32 image of the codes.
+    pub fn dequantize(&self) -> Tensor {
+        let zp = self.qp.zero_point;
+        let s = self.qp.scale;
+        Tensor::new(
+            &self.shape,
+            self.codes.iter().map(|&q| (q as f32 - zp) * s).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qact_quantize_dequantize_roundtrip() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::new(&[2, 3, 4, 4], rng.normal_vec(96, 1.0));
+        let qp = crate::quant::params_for_range(t.min(), t.max(), 8, false);
+        let q = QActTensor::quantize(&t, &qp);
+        assert!(q.dequantize().max_abs_diff(&t) <= qp.scale / 2.0 + 1e-6);
+    }
+}

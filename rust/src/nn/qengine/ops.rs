@@ -1,0 +1,395 @@
+//! Integer op kernels beyond convolution: requantise-add for residual
+//! connections, integer global average pooling, the int8 linear head,
+//! standalone activation requantisation, and grid-preserving layout ops.
+//!
+//! Together with the conv kernels these cover every op of a
+//! MobileNet-style graph, so a packed plan can run end-to-end with zero
+//! f32 fallback layers. Each op matches the fake-quant f32 oracle within
+//! one quantisation step per element (single integer rounding per op;
+//! round-half-away vs the oracle's ties-to-even only moves exact ties).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::nn::SiteCfg;
+use crate::quant::QParams;
+use crate::tensor::{QTensor, Tensor};
+
+use super::kernels::{
+    act_clamp, apply_mult, fold_weight_grids, mult_for, qgemm_into,
+    rowsums_u8_into, Mult, Scratch,
+};
+use super::{assert_act_grid, QActTensor};
+
+/// `round(t / 2^shift)`, half away from zero.
+#[inline]
+fn round_shift(t: i64, shift: u32) -> i64 {
+    let half = 1i64 << (shift - 1);
+    if t >= 0 {
+        (t + half) >> shift
+    } else {
+        -((-t + half) >> shift)
+    }
+}
+
+/// `round(t / d)`, half away from zero (`d > 0`).
+#[inline]
+fn div_round(t: i64, d: i64) -> i64 {
+    let r = (2 * t.abs() + d) / (2 * d);
+    if t >= 0 {
+        r
+    } else {
+        -r
+    }
+}
+
+// -- requantise-add ----------------------------------------------------------
+
+/// Fractional bits of the requantise-add multipliers. Q20 keeps
+/// `255 · 2^20 · (s_in/s_out)` far inside i64 while bounding the
+/// multiplier quantisation error at `2^-21` per code unit — negligible
+/// next to the single half-step rounding.
+pub const ADD_FRAC_BITS: u32 = 20;
+
+/// A residual add packed for integer execution: both inputs rescale onto
+/// the add-site output grid with Q20 fixed-point multipliers and one
+/// shared rounding, `q = zp_o + round((m_a·(q_a-z_a) + m_b·(q_b-z_b)) /
+/// 2^20)` — the gemmlowp/TFLite two-input requantise-add.
+#[derive(Debug, Clone)]
+pub struct QAddInt {
+    /// `round(s_a/s_o · 2^20)`, `round(s_b/s_o · 2^20)`.
+    ma: i64,
+    mb: i64,
+    a_qp: QParams,
+    b_qp: QParams,
+    out_qp: QParams,
+}
+
+impl QAddInt {
+    pub fn pack(a: &QParams, b: &QParams, out: &QParams) -> Result<QAddInt> {
+        assert_act_grid(a);
+        assert_act_grid(b);
+        assert_act_grid(out);
+        let unit = (1i64 << ADD_FRAC_BITS) as f64;
+        let ma = (a.scale as f64 / out.scale as f64 * unit).round() as i64;
+        let mb = (b.scale as f64 / out.scale as f64 * unit).round() as i64;
+        if ma <= 0 || mb <= 0 {
+            bail!("degenerate requantise-add multipliers ({ma}, {mb})");
+        }
+        Ok(QAddInt { ma, mb, a_qp: *a, b_qp: *b, out_qp: *out })
+    }
+
+    pub fn out_params(&self) -> QParams {
+        self.out_qp
+    }
+
+    pub fn run(&self, a: &QActTensor, b: &QActTensor) -> Result<QActTensor> {
+        if a.shape != b.shape {
+            bail!("add shape mismatch: {:?} vs {:?}", a.shape, b.shape);
+        }
+        if a.qp != self.a_qp || b.qp != self.b_qp {
+            bail!(
+                "add input grids mismatch: packed for ({:?}, {:?}), got \
+                 ({:?}, {:?})",
+                self.a_qp,
+                self.b_qp,
+                a.qp,
+                b.qp
+            );
+        }
+        let za = self.a_qp.zero_point as i64;
+        let zb = self.b_qp.zero_point as i64;
+        let zo = self.out_qp.zero_point as i64;
+        let n_hi = self.out_qp.n_levels as i64 - 1;
+        let codes = a
+            .codes
+            .iter()
+            .zip(&b.codes)
+            .map(|(&qa, &qb)| {
+                let t = self.ma * (qa as i64 - za)
+                    + self.mb * (qb as i64 - zb);
+                (round_shift(t, ADD_FRAC_BITS) + zo).clamp(0, n_hi) as u8
+            })
+            .collect();
+        Ok(QActTensor { shape: a.shape.clone(), codes, qp: self.out_qp })
+    }
+}
+
+// -- integer global average pool --------------------------------------------
+
+/// Integer global average pool (N, C, H, W) → (N, C): i64 accumulate of
+/// the codes and a single rounded division back onto the *input* grid
+/// (the mean of on-grid values always lies inside the grid's range, so
+/// no new grid is needed). Within half a step of the exact f32 mean.
+pub fn gap_int(x: &QActTensor) -> Result<QActTensor> {
+    if x.shape.len() != 4 {
+        bail!("gap_int wants NCHW input, got {:?}", x.shape);
+    }
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let hw = h * w;
+    if hw == 0 {
+        bail!("gap_int over empty spatial dims");
+    }
+    let z = x.qp.zero_point as i64;
+    let n_hi = x.qp.n_levels as i64 - 1;
+    let mut codes = Vec::with_capacity(n * c);
+    for i in 0..n * c {
+        let base = i * hw;
+        let sum: i64 =
+            x.codes[base..base + hw].iter().map(|&q| q as i64).sum();
+        let q = z + div_round(sum - hw as i64 * z, hw as i64);
+        codes.push(q.clamp(0, n_hi) as u8);
+    }
+    Ok(QActTensor { shape: vec![n, c], codes, qp: x.qp })
+}
+
+// -- int8 linear head --------------------------------------------------------
+
+/// The linear head packed for integer execution: the same u8×i8→i32 GEMM
+/// as the conv path with per-output-channel zero-point folding
+/// (`-z_in·colsum[o] + I·z_in·zp_w[o]`), finished by an exact f32
+/// epilogue — logits are model outputs, so they dequantise rather than
+/// requantise.
+#[derive(Debug, Clone)]
+pub struct QLinear {
+    in_dim: usize,
+    out_dim: usize,
+    /// Transposed (in_dim, out_dim) i8 codes for the GEMM.
+    wt: Vec<i8>,
+    /// Signed-storage weight zero point (`zp_w - 128`) per output.
+    zp_w: Vec<i32>,
+    s_w: Vec<f32>,
+    /// `-z_in·colsum[o] + I·z_in·zp_w[o]` per output.
+    zp_corr: Vec<i64>,
+    bias: Vec<f32>,
+    in_qp: QParams,
+}
+
+impl QLinear {
+    /// Pack a linear layer from its retained `[O, I]` i8 weight codes.
+    pub fn pack(w: &QTensor, bias: &[f32], in_qp: &QParams) -> Result<QLinear> {
+        let shape = w.shape();
+        if shape.len() != 2 {
+            bail!("QLinear wants [O, I] weights, got {:?}", shape);
+        }
+        let (out_dim, in_dim) = (shape[0], shape[1]);
+        if bias.len() != out_dim {
+            bail!("bias len {} != out dim {}", bias.len(), out_dim);
+        }
+        assert_act_grid(in_qp);
+        // same folding + (I, O) transpose as the dense conv packer
+        let fw = fold_weight_grids(w, out_dim, in_dim, in_qp, true)?;
+        Ok(QLinear {
+            in_dim,
+            out_dim,
+            wt: fw.w,
+            zp_w: fw.zp_w,
+            s_w: fw.s_w,
+            zp_corr: fw.zp_corr,
+            bias: bias.to_vec(),
+            in_qp: *in_qp,
+        })
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// u8 codes in → f32 logits out. Accepts (N, I) or any shape whose
+    /// trailing dims flatten to I (e.g. a (N, C, 1, 1) feature map).
+    pub fn run(
+        &self,
+        x: &QActTensor,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let n = *x
+            .shape
+            .first()
+            .ok_or_else(|| anyhow!("QLinear input needs a batch dim"))?;
+        let per: usize = x.shape[1..].iter().product();
+        if per != self.in_dim {
+            bail!(
+                "input shape {:?} incompatible with linear ({} inputs)",
+                x.shape,
+                self.in_dim
+            );
+        }
+        if x.qp != self.in_qp {
+            bail!(
+                "input grid mismatch: layer packed for {:?}, got {:?}",
+                self.in_qp,
+                x.qp
+            );
+        }
+        if scratch.acc.len() < n * self.out_dim {
+            scratch.acc.resize(n * self.out_dim, 0);
+        }
+        if scratch.rows.len() < n {
+            scratch.rows.resize(n, 0);
+        }
+        qgemm_into(
+            &x.codes,
+            &self.wt,
+            n,
+            self.in_dim,
+            self.out_dim,
+            &mut scratch.acc[..n * self.out_dim],
+        );
+        rowsums_u8_into(&x.codes, n, self.in_dim, &mut scratch.rows[..n]);
+        let s_in = self.in_qp.scale as f64;
+        let mut out = Tensor::zeros(&[n, self.out_dim]);
+        let od = out.data_mut();
+        for i in 0..n {
+            for o in 0..self.out_dim {
+                let t = scratch.acc[i * self.out_dim + o] as i64
+                    - self.zp_w[o] as i64 * scratch.rows[i] as i64
+                    + self.zp_corr[o];
+                od[i * self.out_dim + o] = (t as f64
+                    * (s_in * self.s_w[o] as f64)
+                    + self.bias[o] as f64)
+                    as f32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+// -- standalone activation requantisation -----------------------------------
+
+/// A standalone activation site over a quantised input: one fixed-point
+/// multiplier from the input grid onto the site grid with the site's
+/// clamped-ReLU bounds folded into the integer clamp — no f32 round
+/// trip. Used when an act node is not fused into its producing conv
+/// (e.g. a ReLU following a residual add).
+#[derive(Debug, Clone)]
+pub struct Requantizer {
+    m: Mult,
+    q_lo: i32,
+    q_hi: i32,
+    in_qp: QParams,
+    out_qp: QParams,
+}
+
+impl Requantizer {
+    pub fn pack(in_qp: &QParams, row: &SiteCfg) -> Result<Requantizer> {
+        if !(2.0..=256.0).contains(&row.n_levels) {
+            bail!(
+                "requantizer needs a quantised site (2..=256 levels), \
+                 got {}",
+                row.n_levels
+            );
+        }
+        let out_qp = QParams {
+            scale: row.scale,
+            zero_point: row.zero_point,
+            n_levels: row.n_levels,
+        };
+        assert_act_grid(in_qp);
+        assert_act_grid(&out_qp);
+        let (q_lo, q_hi) = act_clamp(row, &out_qp);
+        Ok(Requantizer {
+            m: mult_for(in_qp.scale as f64 / row.scale as f64),
+            q_lo,
+            q_hi,
+            in_qp: *in_qp,
+            out_qp,
+        })
+    }
+
+    pub fn out_params(&self) -> QParams {
+        self.out_qp
+    }
+
+    pub fn run(&self, x: &QActTensor) -> Result<QActTensor> {
+        if x.qp != self.in_qp {
+            bail!(
+                "input grid mismatch: requantizer packed for {:?}, got {:?}",
+                self.in_qp,
+                x.qp
+            );
+        }
+        let z_in = self.in_qp.zero_point as i64;
+        let zp_out = self.out_qp.zero_point as i64;
+        let codes = x
+            .codes
+            .iter()
+            .map(|&q| {
+                (apply_mult(q as i64 - z_in, &self.m) + zp_out)
+                    .clamp(self.q_lo as i64, self.q_hi as i64)
+                    as u8
+            })
+            .collect();
+        Ok(QActTensor { shape: x.shape.clone(), codes, qp: self.out_qp })
+    }
+}
+
+// -- layout ops --------------------------------------------------------------
+
+/// Nearest-neighbour upsample on u8 codes (grid-preserving).
+pub fn upsample_codes(x: &QActTensor, f: usize) -> QActTensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h * f, w * f);
+    let mut out = vec![0u8; n * c * oh * ow];
+    for i in 0..n * c {
+        let xoff = i * h * w;
+        let ooff = i * oh * ow;
+        for oy in 0..oh {
+            let iy = oy / f;
+            for ox in 0..ow {
+                out[ooff + oy * ow + ox] = x.codes[xoff + iy * w + ox / f];
+            }
+        }
+    }
+    QActTensor { shape: vec![n, c, oh, ow], codes: out, qp: x.qp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ops as fops;
+    use crate::quant::params_for_range;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_helpers_match_f64() {
+        for t in [-1001i64, -500, -3, 0, 3, 499, 1000, 123457] {
+            let want = (t as f64 / 1024.0).abs().round() as i64
+                * if t < 0 { -1 } else { 1 };
+            assert_eq!(round_shift(t, 10), want, "t={t}");
+            for d in [1i64, 3, 7, 49] {
+                let w = (t as f64 / d as f64).abs().round() as i64
+                    * if t < 0 { -1 } else { 1 };
+                assert_eq!(div_round(t, d), w, "t={t} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn upsample_codes_matches_f32() {
+        let mut rng = Rng::new(6);
+        let t = Tensor::new(&[1, 2, 3, 3], rng.normal_vec(18, 1.0));
+        let qp = params_for_range(-3.0, 3.0, 8, false);
+        let q = QActTensor::quantize(&t, &qp);
+        let up = upsample_codes(&q, 2);
+        let want = fops::upsample_nearest(&q.dequantize(), 2);
+        assert_eq!(up.dequantize(), want);
+    }
+
+    #[test]
+    fn gap_int_stays_on_grid() {
+        let mut rng = Rng::new(7);
+        let t = Tensor::new(&[2, 3, 4, 4], rng.normal_vec(96, 1.0));
+        let qp = params_for_range(t.min(), t.max(), 8, false);
+        let q = QActTensor::quantize(&t, &qp);
+        let g = gap_int(&q).unwrap();
+        assert_eq!(g.shape, vec![2, 3]);
+        assert_eq!(g.qp, qp);
+        let want = fops::global_avg_pool(&q.dequantize());
+        let diff = g.dequantize().max_abs_diff(&want);
+        assert!(
+            diff <= qp.scale / 2.0 + 1e-5,
+            "gap off grid mean by {diff} (> half step {})",
+            qp.scale / 2.0
+        );
+    }
+}

@@ -1,0 +1,745 @@
+//! Plan compilation and execution: resolve a quantised model into a
+//! typed integer op pipeline *once*, then run it with no per-step
+//! "does this layer have a grid?" branching.
+//!
+//! [`plan`] walks the folded graph and lowers every node to a [`QOp`]
+//! with precomputed requantisation multipliers, dense value slots
+//! (no hashmap on the hot path) and free-after-last-use bookkeeping, so
+//! peak live memory is the widest cut of the graph rather than the sum
+//! of all feature maps. Ops that cannot run on the integer path (an
+//! input with no quantised grid) are lowered to explicit f32 fallback
+//! ops — visible in [`QModel::summarize`], counted by
+//! [`QModel::fallback_ops`], and rejected outright under
+//! [`PlanOpts::int8_only`].
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::{Model, Op};
+use crate::nn::ops as fops;
+use crate::nn::{QuantCfg, SiteCfg};
+use crate::quant::QParams;
+use crate::tensor::{QTensor, Tensor};
+use crate::util::parallel;
+
+use super::kernels::{EpiSpec, QConv, Scratch};
+use super::ops::{gap_int, upsample_codes, QAddInt, QLinear, Requantizer};
+use super::QActTensor;
+
+/// Planner policy knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanOpts {
+    /// Refuse any plan containing an f32 fallback op instead of silently
+    /// executing it in f32.
+    pub int8_only: bool,
+}
+
+/// Extra grids the planner may use beyond the activation-site rows:
+/// per-conv *pre-activation* grids (data-free β ± n·γ, see
+/// [`crate::quant::ranges::preact_qparams`]) let residual-branch convs
+/// requantise onto an explicit grid instead of falling back to f32.
+#[derive(Debug, Clone, Default)]
+pub struct AuxGrids {
+    /// conv node id → pre-activation grid.
+    pub preact: Vec<(usize, QParams)>,
+}
+
+impl AuxGrids {
+    pub fn empty() -> AuxGrids {
+        AuxGrids::default()
+    }
+
+    fn preact_of(&self, id: usize) -> Option<QParams> {
+        self.preact.iter().find(|(n, _)| *n == id).map(|(_, p)| *p)
+    }
+}
+
+/// One resolved operation of the execution plan.
+pub(crate) enum QOp {
+    /// Quantise the model input onto the site-0 grid.
+    QuantIn { qp: QParams },
+    /// Integer conv; the packed epilogue decides the output kind
+    /// (requantised u8 when fused, exact f32 otherwise).
+    Conv(Box<QConv>),
+    /// Pure f32 conv fallback (the layer's input has no quantised grid);
+    /// runs over the fake-quantised weights, exactly like the oracle.
+    ConvFp32 {
+        w: Tensor,
+        b: Vec<f32>,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    },
+    /// Integer requantise-add on the add-site grid.
+    Add(QAddInt),
+    /// f32 add fallback (≥ 1 f32 input), quantised onto the site grid.
+    AddF { row: SiteCfg },
+    /// Standalone activation: integer requant with fused clip bounds.
+    Act(Requantizer),
+    /// f32 activation fallback: clip + quantise from f32.
+    ActF { row: SiteCfg },
+    /// Integer global average pool (stays on the input grid).
+    Gap { qp: QParams },
+    /// f32 GAP fallback.
+    GapF,
+    /// Int8 linear head (integer GEMM, exact f32 logits).
+    Linear(QLinear),
+    /// f32 linear fallback (f32 input).
+    LinearF { w: Tensor, b: Vec<f32> },
+    /// Nearest-neighbour upsample (grid-preserving; works on either
+    /// value kind, counted as neither integer nor fallback).
+    Upsample { factor: usize, grid: Option<QParams> },
+}
+
+impl QOp {
+    /// (display label, runs on the integer path, output grid).
+    fn describe(&self) -> (String, bool, Option<QParams>) {
+        match self {
+            QOp::QuantIn { qp } => {
+                ("quantize-input [int8]".into(), true, Some(*qp))
+            }
+            QOp::Conv(c) => {
+                let base = if c.is_depthwise() { "conv-dw" } else { "conv" };
+                match c.out_params() {
+                    Some(qp) => {
+                        (format!("{base} [int8]"), true, Some(qp))
+                    }
+                    None => (format!("{base} [int8->f32]"), true, None),
+                }
+            }
+            QOp::ConvFp32 { .. } => {
+                ("conv [f32 FALLBACK]".into(), false, None)
+            }
+            QOp::Add(a) => {
+                ("add-requant [int8]".into(), true, Some(a.out_params()))
+            }
+            QOp::AddF { row } => {
+                ("add [f32 FALLBACK]".into(), false, Some(row_qp(row)))
+            }
+            QOp::Act(r) => {
+                ("act-requant [int8]".into(), true, Some(r.out_params()))
+            }
+            QOp::ActF { row } => {
+                ("act [f32 FALLBACK]".into(), false, Some(row_qp(row)))
+            }
+            QOp::Gap { qp } => ("gap [int8]".into(), true, Some(*qp)),
+            QOp::GapF => ("gap [f32 FALLBACK]".into(), false, None),
+            QOp::Linear(_) => ("linear [int8->f32]".into(), true, None),
+            QOp::LinearF { .. } => {
+                ("linear [f32 FALLBACK]".into(), false, None)
+            }
+            QOp::Upsample { grid, .. } => ("upsample".into(), true, *grid),
+        }
+    }
+}
+
+/// One scheduled op: which slots it reads/writes and which slots die
+/// after it runs.
+pub(crate) struct PlannedOp {
+    /// Graph node whose value this op produces.
+    pub node: usize,
+    pub ins: Vec<usize>,
+    pub out: usize,
+    pub op: QOp,
+    /// Slots whose last consumer is this op (released after it runs).
+    pub free_after: Vec<usize>,
+}
+
+/// Runtime value: a quantised feature map or an exact f32 tensor.
+enum Val {
+    Q(QActTensor),
+    F(Tensor),
+}
+
+impl Val {
+    fn to_f32(&self) -> Tensor {
+        match self {
+            Val::Q(q) => q.dequantize(),
+            Val::F(t) => t.clone(),
+        }
+    }
+
+    fn as_q(&self) -> Result<&QActTensor> {
+        match self {
+            Val::Q(q) => Ok(q),
+            Val::F(_) => bail!("expected a quantised value"),
+        }
+    }
+}
+
+/// A model compiled for integer execution: f32 in (images), f32 out
+/// (dequantised primary outputs), everything between on integer grids
+/// wherever the graph allows.
+pub struct QModel {
+    ops: Vec<PlannedOp>,
+    slots: usize,
+    /// Output slot / node id pairs, in model output order.
+    outputs: Vec<(usize, usize)>,
+    /// Conv/linear layers executing on the integer path.
+    pub int_layers: usize,
+    /// Conv/linear layers falling back to f32.
+    pub f32_layers: usize,
+    fallbacks: usize,
+}
+
+fn row_qp(row: &SiteCfg) -> QParams {
+    QParams {
+        scale: row.scale,
+        zero_point: row.zero_point,
+        n_levels: row.n_levels,
+    }
+}
+
+/// Compile a quantised model (fake-quant weights + retained integer
+/// codes + activation site grids + optional aux grids) into a [`QModel`]
+/// execution plan. Requires every activation site quantised to ≤ 8 bits
+/// and retained codes for every conv/linear layer on the integer path.
+pub fn plan(
+    model: &Model,
+    int_weights: &[(usize, QTensor)],
+    cfg: &QuantCfg,
+    aux: &AuxGrids,
+    opts: PlanOpts,
+) -> Result<QModel> {
+    if !model.folded {
+        bail!("plan requires a folded model");
+    }
+    let sites = model.act_sites();
+    if sites.len() != cfg.rows.len() {
+        bail!("QuantCfg rows {} != sites {}", cfg.rows.len(), sites.len());
+    }
+    for (i, r) in cfg.rows.iter().enumerate() {
+        if !(2.0..=256.0).contains(&r.n_levels) {
+            bail!(
+                "int8 path requires every activation site quantised to \
+                 2..=256 levels; site {i} has n_levels = {} \
+                 (quantise with act_bits in 1..=8)",
+                r.n_levels
+            );
+        }
+    }
+    let site_of = |id: usize| -> Option<usize> {
+        sites.iter().position(|s| s.node_id() == Some(id))
+    };
+    let weights_of = |id: usize| -> Option<&QTensor> {
+        int_weights.iter().find(|(wid, _)| *wid == id).map(|(_, t)| t)
+    };
+
+    let mut ops: Vec<PlannedOp> = Vec::new();
+    // node id -> dense value slot
+    let mut slot_of: HashMap<usize, usize> = HashMap::new();
+    let mut slots = 0usize;
+    let mut intern = |slot_of: &mut HashMap<usize, usize>, id: usize| {
+        *slot_of.entry(id).or_insert_with(|| {
+            let s = slots;
+            slots += 1;
+            s
+        })
+    };
+    // node id -> Some(grid) when its value is quantised, None when f32
+    let mut grids: HashMap<usize, Option<QParams>> = HashMap::new();
+    let mut fused_acts: HashSet<usize> = HashSet::new();
+    let mut int_layers = 0usize;
+    let mut f32_layers = 0usize;
+
+    for n in &model.nodes {
+        let input_slot = |slot_of: &HashMap<usize, usize>,
+                          id: usize|
+         -> Result<usize> {
+            slot_of
+                .get(&id)
+                .copied()
+                .ok_or_else(|| anyhow!("node {} used before production", id))
+        };
+        match &n.op {
+            Op::Input => {
+                let qp = row_qp(&cfg.rows[0]);
+                let out = intern(&mut slot_of, n.id);
+                ops.push(PlannedOp {
+                    node: n.id,
+                    ins: vec![],
+                    out,
+                    op: QOp::QuantIn { qp },
+                    free_after: vec![],
+                });
+                grids.insert(n.id, Some(qp));
+            }
+            Op::Conv { w, b, stride, pad, groups, out_ch, .. } => {
+                let input = n.inputs[0];
+                let in_slot = input_slot(&slot_of, input)?;
+                let bias: Vec<f32> = match b {
+                    Some(b) => model.tensor(b)?.data().to_vec(),
+                    None => vec![0.0; *out_ch],
+                };
+                let in_grid = grids
+                    .get(&input)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("conv {} before input", n.id))?;
+                match in_grid {
+                    Some(in_qp) => {
+                        let wq = weights_of(n.id).ok_or_else(|| {
+                            anyhow!(
+                                "no retained int8 weight codes for conv \
+                                 node {} (quantise with bits <= 8)",
+                                n.id
+                            )
+                        })?;
+                        let cons = model.consumers(n.id);
+                        let is_out = model.outputs.contains(&n.id);
+                        // fuse when the conv's only consumer is an act
+                        // and the conv's pre-activation value is not
+                        // itself a model output (fusion stores the
+                        // result under the act node id only)
+                        let fuse = match cons.as_slice() {
+                            [c] if matches!(c.op, Op::Act(_)) && !is_out => {
+                                Some(c.id)
+                            }
+                            _ => None,
+                        };
+                        if let Some(act_id) = fuse {
+                            let row = cfg.rows[site_of(act_id)
+                                .expect("act node is a site")];
+                            let conv = QConv::pack(
+                                wq,
+                                &bias,
+                                *stride,
+                                *pad,
+                                *groups,
+                                &in_qp,
+                                EpiSpec::Act(&row),
+                            )?;
+                            let out = intern(&mut slot_of, act_id);
+                            ops.push(PlannedOp {
+                                node: act_id,
+                                ins: vec![in_slot],
+                                out,
+                                op: QOp::Conv(Box::new(conv)),
+                                free_after: vec![],
+                            });
+                            grids.insert(act_id, Some(row_qp(&row)));
+                            grids.insert(n.id, None);
+                            fused_acts.insert(act_id);
+                        } else {
+                            // not act-fused: requantise onto the conv's
+                            // pre-activation grid when one is available
+                            // and a downstream op wants a quantised
+                            // value; model outputs stay exact f32
+                            let epi = if !is_out && !cons.is_empty() {
+                                match aux.preact_of(n.id) {
+                                    Some(qp) => EpiSpec::Grid(qp),
+                                    None => EpiSpec::F32,
+                                }
+                            } else {
+                                EpiSpec::F32
+                            };
+                            let grid = match &epi {
+                                EpiSpec::Grid(qp) => Some(*qp),
+                                _ => None,
+                            };
+                            let conv = QConv::pack(
+                                wq,
+                                &bias,
+                                *stride,
+                                *pad,
+                                *groups,
+                                &in_qp,
+                                epi,
+                            )?;
+                            let out = intern(&mut slot_of, n.id);
+                            ops.push(PlannedOp {
+                                node: n.id,
+                                ins: vec![in_slot],
+                                out,
+                                op: QOp::Conv(Box::new(conv)),
+                                free_after: vec![],
+                            });
+                            grids.insert(n.id, grid);
+                        }
+                        int_layers += 1;
+                    }
+                    None => {
+                        // f32 input (e.g. a branch an upstream fallback
+                        // already dequantised): exact f32 fallback over
+                        // the fake-quantised weights.
+                        let wt = model.tensor(w)?.clone();
+                        let out = intern(&mut slot_of, n.id);
+                        ops.push(PlannedOp {
+                            node: n.id,
+                            ins: vec![in_slot],
+                            out,
+                            op: QOp::ConvFp32 {
+                                w: wt,
+                                b: bias,
+                                stride: *stride,
+                                pad: *pad,
+                                groups: *groups,
+                            },
+                            free_after: vec![],
+                        });
+                        grids.insert(n.id, None);
+                        f32_layers += 1;
+                    }
+                }
+            }
+            Op::Act(_) => {
+                if fused_acts.contains(&n.id) {
+                    continue;
+                }
+                let row = cfg.rows[site_of(n.id).expect("act site")];
+                let in_slot = input_slot(&slot_of, n.inputs[0])?;
+                let in_grid = grids
+                    .get(&n.inputs[0])
+                    .cloned()
+                    .ok_or_else(|| anyhow!("act {} dangling", n.id))?;
+                let op = match in_grid {
+                    Some(in_qp) => QOp::Act(Requantizer::pack(&in_qp, &row)?),
+                    None => QOp::ActF { row },
+                };
+                let out = intern(&mut slot_of, n.id);
+                ops.push(PlannedOp {
+                    node: n.id,
+                    ins: vec![in_slot],
+                    out,
+                    op,
+                    free_after: vec![],
+                });
+                grids.insert(n.id, Some(row_qp(&row)));
+            }
+            Op::Add => {
+                let row = cfg.rows[site_of(n.id).expect("add site")];
+                let (a, b) = (n.inputs[0], n.inputs[1]);
+                let sa = input_slot(&slot_of, a)?;
+                let sb = input_slot(&slot_of, b)?;
+                let ga = grids
+                    .get(&a)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("add {} dangling", n.id))?;
+                let gb = grids
+                    .get(&b)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("add {} dangling", n.id))?;
+                let op = match (ga, gb) {
+                    (Some(qa), Some(qb)) => {
+                        QOp::Add(QAddInt::pack(&qa, &qb, &row_qp(&row))?)
+                    }
+                    _ => QOp::AddF { row },
+                };
+                let out = intern(&mut slot_of, n.id);
+                ops.push(PlannedOp {
+                    node: n.id,
+                    ins: vec![sa, sb],
+                    out,
+                    op,
+                    free_after: vec![],
+                });
+                grids.insert(n.id, Some(row_qp(&row)));
+            }
+            Op::Gap => {
+                let in_slot = input_slot(&slot_of, n.inputs[0])?;
+                let in_grid = grids
+                    .get(&n.inputs[0])
+                    .cloned()
+                    .ok_or_else(|| anyhow!("gap {} dangling", n.id))?;
+                let (op, grid) = match in_grid {
+                    Some(qp) => (QOp::Gap { qp }, Some(qp)),
+                    None => (QOp::GapF, None),
+                };
+                let out = intern(&mut slot_of, n.id);
+                ops.push(PlannedOp {
+                    node: n.id,
+                    ins: vec![in_slot],
+                    out,
+                    op,
+                    free_after: vec![],
+                });
+                grids.insert(n.id, grid);
+            }
+            Op::Linear { w, b, .. } => {
+                let in_slot = input_slot(&slot_of, n.inputs[0])?;
+                let bias = model.tensor(b)?.data().to_vec();
+                let in_grid = grids
+                    .get(&n.inputs[0])
+                    .cloned()
+                    .ok_or_else(|| anyhow!("linear {} dangling", n.id))?;
+                let op = match in_grid {
+                    Some(in_qp) => {
+                        let wq = weights_of(n.id).ok_or_else(|| {
+                            anyhow!(
+                                "no retained int8 weight codes for linear \
+                                 node {} (quantise with bits <= 8)",
+                                n.id
+                            )
+                        })?;
+                        int_layers += 1;
+                        QOp::Linear(QLinear::pack(wq, &bias, &in_qp)?)
+                    }
+                    None => {
+                        f32_layers += 1;
+                        QOp::LinearF { w: model.tensor(w)?.clone(), b: bias }
+                    }
+                };
+                let out = intern(&mut slot_of, n.id);
+                ops.push(PlannedOp {
+                    node: n.id,
+                    ins: vec![in_slot],
+                    out,
+                    op,
+                    free_after: vec![],
+                });
+                grids.insert(n.id, None);
+            }
+            Op::Upsample { factor } => {
+                let in_slot = input_slot(&slot_of, n.inputs[0])?;
+                let g = grids
+                    .get(&n.inputs[0])
+                    .cloned()
+                    .ok_or_else(|| anyhow!("upsample {} dangling", n.id))?;
+                let out = intern(&mut slot_of, n.id);
+                ops.push(PlannedOp {
+                    node: n.id,
+                    ins: vec![in_slot],
+                    out,
+                    op: QOp::Upsample { factor: *factor, grid: g },
+                    free_after: vec![],
+                });
+                grids.insert(n.id, g);
+            }
+            Op::BatchNorm { .. } => {
+                bail!("plan requires a folded model (found bn node {})", n.id)
+            }
+        }
+    }
+
+    // Output slots (fused conv results live under the act node id).
+    let outputs: Vec<(usize, usize)> = model
+        .outputs
+        .iter()
+        .map(|o| {
+            slot_of
+                .get(o)
+                .copied()
+                .map(|s| (s, *o))
+                .ok_or_else(|| anyhow!("missing output node {o}"))
+        })
+        .collect::<Result<_>>()?;
+
+    // Free-after-last-use: a slot dies after its last consuming op
+    // (model outputs are always kept).
+    let keep: HashSet<usize> = outputs.iter().map(|&(s, _)| s).collect();
+    let mut last_use: HashMap<usize, usize> = HashMap::new();
+    for (i, p) in ops.iter().enumerate() {
+        for &s in &p.ins {
+            last_use.insert(s, i);
+        }
+    }
+    for (slot, i) in last_use {
+        if !keep.contains(&slot) {
+            ops[i].free_after.push(slot);
+        }
+    }
+
+    let fallbacks = ops
+        .iter()
+        .filter(|p| !p.op.describe().1)
+        .count();
+    if opts.int8_only && fallbacks > 0 {
+        let list: Vec<String> = ops
+            .iter()
+            .filter(|p| !p.op.describe().1)
+            .map(|p| format!("node {} {}", p.node, p.op.describe().0))
+            .collect();
+        bail!(
+            "int8_only plan has {fallbacks} f32 fallback op(s): {}",
+            list.join(", ")
+        );
+    }
+
+    Ok(QModel { ops, slots, outputs, int_layers, f32_layers, fallbacks })
+}
+
+impl QModel {
+    /// Forward one batch: quantise the input, execute the plan over the
+    /// slot arena, dequantise every model output to f32. Batches with
+    /// more than one image are split per image and run in parallel
+    /// ([`crate::util::parallel`]) — per-image results are
+    /// bitwise-identical to [`QModel::run_batch`] because every kernel
+    /// is image-independent.
+    pub fn run_all(&self, x: &Tensor) -> Result<Vec<Tensor>> {
+        let n = x.shape().first().copied().unwrap_or(0);
+        if n <= 1 || parallel::workers() <= 1 {
+            return self.run_batch(x);
+        }
+        let per: usize = x.shape()[1..].iter().product();
+        let mut shape1 = x.shape().to_vec();
+        shape1[0] = 1;
+        let runs: Vec<Option<Result<Vec<Tensor>, String>>> =
+            parallel::par_map(n, |i| {
+                let xi = Tensor::new(
+                    &shape1,
+                    x.data()[i * per..(i + 1) * per].to_vec(),
+                );
+                // one level of parallelism only: the per-image kernels
+                // run serially inside this arm instead of spawning
+                // workers² threads
+                Some(
+                    parallel::with_nested_serial(|| self.run_batch(&xi))
+                        .map_err(|e| format!("{e:#}")),
+                )
+            });
+        let mut per_image: Vec<Vec<Tensor>> = Vec::with_capacity(n);
+        for r in runs {
+            per_image.push(
+                r.expect("par_map fills every slot")
+                    .map_err(|e| anyhow!("{e}"))?,
+            );
+        }
+        let k = per_image[0].len();
+        let mut res = Vec::with_capacity(k);
+        for j in 0..k {
+            let mut shape = per_image[0][j].shape().to_vec();
+            shape[0] = n;
+            let mut data = Vec::with_capacity(shape.iter().product());
+            for img in &per_image {
+                data.extend_from_slice(img[j].data());
+            }
+            res.push(Tensor::new(&shape, data));
+        }
+        Ok(res)
+    }
+
+    /// Reference serial path: the whole batch flows through the plan in
+    /// one pass (also the n ≤ 1 fast path of [`QModel::run_all`]).
+    pub fn run_batch(&self, x: &Tensor) -> Result<Vec<Tensor>> {
+        let mut arena: Vec<Option<Val>> = Vec::with_capacity(self.slots);
+        arena.resize_with(self.slots, || None);
+        let mut scratch = Scratch::new();
+        for p in &self.ops {
+            let y = exec(p, x, &arena, &mut scratch)?;
+            arena[p.out] = Some(y);
+            for &s in &p.free_after {
+                arena[s] = None;
+            }
+        }
+        self.outputs
+            .iter()
+            .map(|&(s, node)| {
+                arena[s]
+                    .as_ref()
+                    .map(Val::to_f32)
+                    .ok_or_else(|| anyhow!("missing output node {node}"))
+            })
+            .collect()
+    }
+
+    /// Forward one batch, returning the primary output.
+    pub fn run(&self, x: &Tensor) -> Result<Tensor> {
+        self.run_all(x)?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("model has no outputs"))
+    }
+
+    /// Number of f32 fallback ops surviving planning (0 on a fully
+    /// integer plan).
+    pub fn fallback_ops(&self) -> usize {
+        self.fallbacks
+    }
+
+    /// Number of planned ops.
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// One-line execution-plan summary (for logs).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} int8 layer(s), {} f32 fallback layer(s), {} fallback \
+             op(s), {} op(s), {} value slot(s)",
+            self.int_layers,
+            self.f32_layers,
+            self.fallbacks,
+            self.ops.len(),
+            self.slots
+        )
+    }
+
+    /// Op-level plan report: one line per op with its kind, execution
+    /// path and output grid (for logs, debugging, and the plan tests).
+    pub fn summarize(&self) -> String {
+        let mut s = format!("execution plan: {}\n", self.summary());
+        for (i, p) in self.ops.iter().enumerate() {
+            let (label, _, grid) = p.op.describe();
+            let grid = match grid {
+                Some(qp) => format!(
+                    "grid(s={:.6}, zp={}, n={})",
+                    qp.scale, qp.zero_point, qp.n_levels
+                ),
+                None => "f32".to_string(),
+            };
+            s.push_str(&format!(
+                "  [{i:>3}] node {:>3}  {label:<22} -> {grid}\n",
+                p.node
+            ));
+        }
+        s
+    }
+}
+
+fn exec(
+    p: &PlannedOp,
+    x: &Tensor,
+    arena: &[Option<Val>],
+    scratch: &mut Scratch,
+) -> Result<Val> {
+    let val = |i: usize| -> Result<&Val> {
+        arena[p.ins[i]].as_ref().ok_or_else(|| {
+            anyhow!("plan slot {} consumed before production", p.ins[i])
+        })
+    };
+    Ok(match &p.op {
+        QOp::QuantIn { qp } => Val::Q(QActTensor::quantize(x, qp)),
+        QOp::Conv(c) => {
+            let xin = val(0)?.as_q()?;
+            if c.is_fused() {
+                Val::Q(c.run_q_with(xin, scratch)?)
+            } else {
+                Val::F(c.run_f32_with(xin, scratch)?)
+            }
+        }
+        QOp::ConvFp32 { w, b, stride, pad, groups } => {
+            let xin = val(0)?.to_f32();
+            Val::F(crate::nn::conv::conv2d(
+                &xin,
+                w,
+                Some(b),
+                *stride,
+                *pad,
+                *groups,
+            ))
+        }
+        QOp::Add(add) => {
+            Val::Q(add.run(val(0)?.as_q()?, val(1)?.as_q()?)?)
+        }
+        QOp::AddF { row } => {
+            let t = fops::add(&val(0)?.to_f32(), &val(1)?.to_f32());
+            Val::Q(QActTensor::quantize(&t, &row_qp(row)))
+        }
+        QOp::Act(rq) => Val::Q(rq.run(val(0)?.as_q()?)?),
+        QOp::ActF { row } => {
+            let mut t = val(0)?.to_f32();
+            fops::clip_act(&mut t, row.clip_hi);
+            Val::Q(QActTensor::quantize(&t, &row_qp(row)))
+        }
+        QOp::Gap { .. } => Val::Q(gap_int(val(0)?.as_q()?)?),
+        QOp::GapF => Val::F(fops::global_avg_pool(&val(0)?.to_f32())),
+        QOp::Linear(l) => Val::F(l.run(val(0)?.as_q()?, scratch)?),
+        QOp::LinearF { w, b } => {
+            Val::F(fops::linear(&val(0)?.to_f32(), w, b))
+        }
+        QOp::Upsample { factor, .. } => match val(0)? {
+            Val::Q(q) => Val::Q(upsample_codes(q, *factor)),
+            Val::F(t) => Val::F(fops::upsample_nearest(t, *factor)),
+        },
+    })
+}

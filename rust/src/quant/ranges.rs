@@ -5,11 +5,13 @@
 
 use anyhow::Result;
 
-use crate::graph::stats::propagate;
-use crate::graph::{Model, Site};
+use std::collections::HashMap;
+
+use crate::graph::stats::{propagate, site_range, TensorStats};
+use crate::graph::{Model, Op, Site};
 use crate::nn::{QuantCfg, SiteCfg};
 
-use super::params_for_range;
+use super::{params_for_range, QParams};
 
 /// Number of standard deviations for activation ranges (paper: n = 6,
 /// "a wide range of n can be used without significant difference").
@@ -29,6 +31,22 @@ pub fn activation_qcfg(
         return Ok(QuantCfg::fp32(model));
     }
     let stats = propagate(model)?;
+    activation_qcfg_with(model, &stats, bits, symmetric, n_sigma)
+}
+
+/// [`activation_qcfg`] over precomputed node statistics — callers that
+/// build several grid families (site rows + pre-activation grids)
+/// propagate once and share the map.
+pub fn activation_qcfg_with(
+    model: &Model,
+    stats: &HashMap<usize, TensorStats>,
+    bits: u32,
+    symmetric: bool,
+    n_sigma: f32,
+) -> Result<QuantCfg> {
+    if bits == 0 {
+        return Ok(QuantCfg::fp32(model));
+    }
     let mut rows = Vec::new();
     for site in model.act_sites() {
         let row = match site {
@@ -85,6 +103,47 @@ pub fn activation_qcfg(
     Ok(QuantCfg { rows })
 }
 
+/// Data-free *pre-activation* grids, one per conv node: per-channel
+/// β ± n·γ reduced per tensor, with **no** ReLU clipping (residual
+/// branches carry signed pre-activation values). The integer engine
+/// requantises un-fused conv outputs — residual branches feeding adds —
+/// onto these grids instead of falling back to f32 (see
+/// `nn::qengine::AuxGrids`). `bits == 0` yields no grids (FP32 eval).
+pub fn preact_qparams(
+    model: &Model,
+    bits: u32,
+    symmetric: bool,
+    n_sigma: f32,
+) -> Result<Vec<(usize, QParams)>> {
+    if bits == 0 {
+        return Ok(Vec::new());
+    }
+    let stats = propagate(model)?;
+    Ok(preact_qparams_with(model, &stats, bits, symmetric, n_sigma))
+}
+
+/// [`preact_qparams`] over precomputed node statistics.
+pub fn preact_qparams_with(
+    model: &Model,
+    stats: &HashMap<usize, TensorStats>,
+    bits: u32,
+    symmetric: bool,
+    n_sigma: f32,
+) -> Vec<(usize, QParams)> {
+    if bits == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for n in &model.nodes {
+        if !matches!(n.op, Op::Conv { .. }) {
+            continue;
+        }
+        let (lo, hi) = site_range(&stats[&n.id], n_sigma, None);
+        out.push((n.id, params_for_range(lo, hi, bits, symmetric)));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +166,23 @@ mod tests {
         let m = bn_fold::fold(&two_layer_model(62, true)).unwrap();
         let cfg = activation_qcfg(&m, 0, false, 6.0).unwrap();
         assert!(cfg.rows.iter().all(|r| r.n_levels == 0.0));
+    }
+
+    #[test]
+    fn preact_grids_cover_every_conv() {
+        let m = bn_fold::fold(&two_layer_model(64, true)).unwrap();
+        let grids = preact_qparams(&m, 8, false, 6.0).unwrap();
+        let convs = m
+            .layers()
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv { .. }))
+            .count();
+        assert_eq!(grids.len(), convs);
+        for (_, p) in &grids {
+            assert!(p.scale > 0.0 && p.zero_point.fract() == 0.0);
+            assert_eq!(p.n_levels, 256.0);
+        }
+        assert!(preact_qparams(&m, 0, false, 6.0).unwrap().is_empty());
     }
 
     #[test]

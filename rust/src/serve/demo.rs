@@ -1,31 +1,81 @@
 //! Serving demo / load generator: Poisson arrivals against the batching
-//! server backed by the INT8 DFQ model on PJRT. Used by `dfq serve`, the
-//! `serve_quantized` example and the serving bench.
+//! server backed by the INT8 DFQ model on a selectable backend — PJRT
+//! (production), the fake-quant f32 engine, or the true-int8
+//! [`QuantExecutor`] plan. Used by `dfq serve`, the `serve_quantized`
+//! example and the serving bench.
 
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
 use crate::graph::io::Dataset;
 use crate::graph::Model;
 use crate::quant::QScheme;
 use crate::runtime::{Manifest, Runtime};
-use crate::serve::{PjrtExecutor, ServeConfig, Server, Snapshot};
+use crate::serve::{
+    BatchExecutor, EngineExecutor, PjrtExecutor, QuantExecutor, ServeConfig,
+    Server, Snapshot,
+};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-/// Start a server for `arch`'s INT8-DFQ model on PJRT (built inside the
-/// worker thread), fire `requests` Poisson arrivals at `rate` req/s, and
-/// report latency/throughput.
+/// Which executor backs the serve worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServeBackend {
+    /// AOT-compiled PJRT executable (production path).
+    #[default]
+    Pjrt,
+    /// Pure-Rust fake-quant f32 engine (PJRT-free hosts / oracle).
+    Engine,
+    /// True-int8 planned executor ([`crate::nn::qengine`]).
+    Qengine,
+}
+
+impl ServeBackend {
+    pub fn parse(s: &str) -> Result<ServeBackend> {
+        Ok(match s {
+            "pjrt" => ServeBackend::Pjrt,
+            "engine" => ServeBackend::Engine,
+            "qengine" | "int8" => ServeBackend::Qengine,
+            _ => bail!("unknown serve backend '{s}' (pjrt|engine|qengine)"),
+        })
+    }
+
+    /// Backend from the `DFQ_BACKEND` env var; absent means PJRT, an
+    /// unrecognised value falls back to PJRT *with a warning* (a typo
+    /// must not silently benchmark the wrong engine).
+    pub fn from_env() -> ServeBackend {
+        match std::env::var("DFQ_BACKEND") {
+            Ok(s) => ServeBackend::parse(&s).unwrap_or_else(|e| {
+                eprintln!("[serve] {e:#}; defaulting to pjrt");
+                ServeBackend::Pjrt
+            }),
+            Err(_) => ServeBackend::Pjrt,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ServeBackend::Pjrt => "pjrt",
+            ServeBackend::Engine => "engine",
+            ServeBackend::Qengine => "qengine",
+        }
+    }
+}
+
+/// Start a server for `arch`'s INT8-DFQ model on `backend` (built inside
+/// the worker thread), fire `requests` Poisson arrivals at `rate` req/s,
+/// and report latency/throughput.
 pub fn run_load(
     arch: &str,
     requests: usize,
     rate: f64,
     batch: usize,
+    backend: ServeBackend,
 ) -> Result<()> {
-    let snapshot = run_load_quiet(arch, requests, rate, batch)?;
-    println!("serve[{arch}] {}", snapshot.report());
+    let snapshot = run_load_quiet(arch, requests, rate, batch, backend)?;
+    println!("serve[{arch}/{}] {}", backend.as_str(), snapshot.report());
     Ok(())
 }
 
@@ -35,6 +85,7 @@ pub fn run_load_quiet(
     requests: usize,
     rate: f64,
     batch: usize,
+    backend: ServeBackend,
 ) -> Result<Snapshot> {
     let manifest = Manifest::load(crate::artifacts_dir())?;
     let entry = manifest.arch(arch)?.clone();
@@ -66,21 +117,47 @@ pub fn run_load_quiet(
                 BiasCorrMode::Analytic,
                 None,
             )?;
-            eprintln!("[serve] worker: creating PJRT client...");
-            let rt = Runtime::cpu()?;
-            eprintln!("[serve] worker: compiling executable (batch {batch})...");
-            let exec =
-                rt.load_model_exec(&manifest, &arch_name, batch, &q.model)?;
-            let weights = exec.bind_weights(&q.model)?;
-            eprintln!("[serve] worker: ready");
-            Ok(Box::new(PjrtExecutor { exec, weights, cfg: q.act_cfg })
-                as Box<dyn crate::serve::BatchExecutor>)
+            match backend {
+                ServeBackend::Pjrt => {
+                    eprintln!("[serve] worker: creating PJRT client...");
+                    let rt = Runtime::cpu()?;
+                    eprintln!(
+                        "[serve] worker: compiling executable (batch {batch})..."
+                    );
+                    let exec = rt.load_model_exec(
+                        &manifest, &arch_name, batch, &q.model,
+                    )?;
+                    let weights = exec.bind_weights(&q.model)?;
+                    eprintln!("[serve] worker: ready");
+                    Ok(Box::new(PjrtExecutor {
+                        exec,
+                        weights,
+                        cfg: q.act_cfg,
+                    }) as Box<dyn BatchExecutor>)
+                }
+                ServeBackend::Engine => {
+                    eprintln!("[serve] worker: ready (fake-quant engine)");
+                    Ok(Box::new(EngineExecutor {
+                        model: q.model,
+                        cfg: q.act_cfg,
+                        max_batch: batch,
+                    }) as Box<dyn BatchExecutor>)
+                }
+                ServeBackend::Qengine => {
+                    let ex = QuantExecutor::from_quantized(&q, batch)?;
+                    eprintln!(
+                        "[serve] worker: int8 plan ready — {}",
+                        ex.qmodel.summary()
+                    );
+                    Ok(Box::new(ex) as Box<dyn BatchExecutor>)
+                }
+            }
         },
     );
 
     let client = server.client();
-    // warm-up: the first request pays executor construction + PJRT
-    // compilation; exclude it from the measured load
+    // warm-up: the first request pays executor construction (and PJRT
+    // compilation on that backend); exclude it from the measured load
     client.infer(images[0].clone())?;
     server.reset_metrics();
     let mut rng = Rng::new(4242);

@@ -75,6 +75,18 @@ impl QuantExecutor {
     ) -> Result<QuantExecutor> {
         Ok(QuantExecutor { qmodel: q.pack_int8()?, max_batch })
     }
+
+    /// Like [`QuantExecutor::from_quantized`] but refuses any plan that
+    /// still contains an f32 fallback op (`PlanOpts { int8_only: true }`)
+    /// — deployments promising pure 8-bit inference get an error, not a
+    /// silent partial fallback.
+    pub fn from_quantized_strict(
+        q: &crate::dfq::QuantizedModel,
+        max_batch: usize,
+    ) -> Result<QuantExecutor> {
+        let opts = crate::nn::qengine::PlanOpts { int8_only: true };
+        Ok(QuantExecutor { qmodel: q.pack_int8_opts(opts)?, max_batch })
+    }
 }
 
 impl BatchExecutor for QuantExecutor {

@@ -203,6 +203,15 @@ impl QTensor {
         }
     }
 
+    /// Storage kind of the codes — "u8" (unsigned grid) or "i8" (offset
+    /// grid). Surfaced by engine pack errors and plan summaries.
+    pub fn storage(&self) -> &'static str {
+        match &self.data {
+            QData::U8(_) => "u8",
+            QData::I8(_) => "i8",
+        }
+    }
+
     pub fn codes_u8(&self) -> Option<&[u8]> {
         match &self.data {
             QData::U8(v) => Some(v),

@@ -4,6 +4,7 @@
 //! sequential loop with zero thread overhead; on multi-core hosts they
 //! chunk work across scoped threads.
 
+use std::cell::Cell;
 use std::num::NonZeroUsize;
 
 /// Number of worker threads to use.
@@ -13,12 +14,34 @@ pub fn workers() -> usize {
         .unwrap_or(1)
 }
 
+thread_local! {
+    /// When set, the data-parallel helpers degrade to serial on this
+    /// thread — outer fan-outs flip it so nested kernels don't spawn
+    /// workers² threads.
+    static NESTED_SERIAL: Cell<bool> = Cell::new(false);
+}
+
+/// Run `f` with [`par_chunks`]/[`par_map`] degraded to serial *on this
+/// thread*: an outer parallel fan-out (e.g. batch-parallel model
+/// execution) wraps each arm in this so inner kernels don't multiply
+/// the thread count. Note the flag is thread-local — set it inside the
+/// worker closure, not around the outer `par_map` call.
+pub fn with_nested_serial<T>(f: impl FnOnce() -> T) -> T {
+    NESTED_SERIAL.with(|s| {
+        let prev = s.replace(true);
+        let out = f();
+        s.set(prev);
+        out
+    })
+}
+
 /// Apply `f(start, end)` over disjoint chunks of `0..n` in parallel.
 pub fn par_chunks<F>(n: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let w = workers().min(n.max(1));
+    let w = if NESTED_SERIAL.with(Cell::get) { 1 } else { workers() }
+        .min(n.max(1));
     if w <= 1 || n == 0 {
         f(0, n);
         return;
@@ -97,6 +120,15 @@ mod tests {
             hits.fetch_add(hi - lo, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 317);
+    }
+
+    #[test]
+    fn nested_serial_matches_parallel() {
+        let par = par_map(257, |i| i * 3);
+        let ser = with_nested_serial(|| par_map(257, |i| i * 3));
+        assert_eq!(par, ser);
+        // the flag is scoped: parallelism is restored afterwards
+        assert_eq!(par_map(5, |i| i), vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

@@ -6,9 +6,14 @@
 use dfq::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
 use dfq::dfq::testutil;
 use dfq::nn::ops::{clip_act, fake_quant, fake_quant_scalar};
-use dfq::nn::qengine::{QActTensor, QConv};
-use dfq::nn::{self, conv, SiteCfg};
-use dfq::quant::{params_for_range, quantize_weights_retaining, QScheme};
+use dfq::nn::qengine::{
+    gap_int, plan, AuxGrids, EpiSpec, PlanOpts, QActTensor, QAddInt, QConv,
+    QLinear, Scratch,
+};
+use dfq::nn::{self, conv, ops as fops, SiteCfg};
+use dfq::quant::{
+    params_for_range, quantize_weights_retaining, QParams, QScheme,
+};
 use dfq::tensor::{QTensor, Tensor};
 use dfq::util::rng::Rng;
 
@@ -119,9 +124,16 @@ fn random_layer(
         n_levels: p.n_levels,
         clip_hi,
     };
-    let qc =
-        QConv::pack(&codes, &b, stride, pad, groups, &in_qp, Some(&row))
-            .unwrap();
+    let qc = QConv::pack(
+        &codes,
+        &b,
+        stride,
+        pad,
+        groups,
+        &in_qp,
+        EpiSpec::Act(&row),
+    )
+    .unwrap();
     (qc, xq, w, b, row)
 }
 
@@ -190,7 +202,9 @@ fn prop_int8_unfused_conv_matches_f32() {
         let in_qp = params_for_range(x.min(), x.max(), 8, false);
         let xq = QActTensor::quantize(&x, &in_qp);
 
-        let qc = QConv::pack(&codes, &b, 1, 1, groups, &in_qp, None).unwrap();
+        let qc =
+            QConv::pack(&codes, &b, 1, 1, groups, &in_qp, EpiSpec::F32)
+                .unwrap();
         let y_int = qc.run_f32(&xq).unwrap();
         let y_f32 =
             conv::conv2d(&xq.dequantize(), &w, Some(&b), 1, 1, groups);
@@ -247,6 +261,262 @@ fn prop_full_model_int8_parity() {
             );
         }
     }
+}
+
+/// Random activation grid covering `[lo, hi]`.
+fn rand_grid(rng: &mut Rng, lo: f32, hi: f32) -> QParams {
+    let a = rng.uniform(lo, (lo + hi) / 2.0);
+    let b = rng.uniform(a + 0.05, hi);
+    params_for_range(a, b, 8, false)
+}
+
+/// Random codes on a grid, wrapped as a feature map.
+fn rand_codes(rng: &mut Rng, shape: &[usize], qp: QParams) -> QActTensor {
+    let n: usize = shape.iter().product();
+    let hi = qp.n_levels as usize;
+    let codes = (0..n).map(|_| rng.below(hi) as u8).collect();
+    QActTensor { shape: shape.to_vec(), codes, qp }
+}
+
+/// Requantise-add matches the oracle (f32 add of the dequantised inputs,
+/// fake-quantised onto the output grid) within ONE step of the output
+/// grid, across random input/output grids.
+#[test]
+fn prop_requantize_add_matches_oracle() {
+    let mut rng = Rng::new(301);
+    for case in 0..64u64 {
+        let qa = rand_grid(&mut rng, -4.0, 4.0);
+        let qb = rand_grid(&mut rng, -2.0, 6.0);
+        let qo = rand_grid(&mut rng, -6.0, 10.0);
+        let a = rand_codes(&mut rng, &[2, 3, 4, 4], qa);
+        let b = rand_codes(&mut rng, &[2, 3, 4, 4], qb);
+        let add = QAddInt::pack(&qa, &qb, &qo).unwrap();
+        let got = add.run(&a, &b).unwrap();
+        assert_eq!(got.qp, qo);
+
+        let mut want = fops::add(&a.dequantize(), &b.dequantize());
+        fake_quant(&mut want, qo.scale, qo.zero_point, qo.n_levels);
+        let diff = got.dequantize().max_abs_diff(&want);
+        assert!(
+            diff <= qo.scale * 1.001,
+            "case {case}: requantise-add off by {diff} (> one step {})",
+            qo.scale
+        );
+    }
+}
+
+/// Integer GAP matches the oracle (f32 mean of the dequantised values)
+/// within ONE step of the input grid — and stays on that grid.
+#[test]
+fn prop_integer_gap_matches_oracle() {
+    let mut rng = Rng::new(302);
+    for case in 0..32u64 {
+        let qp = rand_grid(&mut rng, -3.0, 5.0);
+        let h = 1 + rng.below(7);
+        let w = 1 + rng.below(7);
+        let x = rand_codes(&mut rng, &[2, 4, h, w], qp);
+        let got = gap_int(&x).unwrap();
+        assert_eq!(got.shape, vec![2, 4]);
+        assert_eq!(got.qp, qp);
+        let want = fops::global_avg_pool(&x.dequantize());
+        let diff = got.dequantize().max_abs_diff(&want);
+        assert!(
+            diff <= qp.scale * 0.5 + 1e-5,
+            "case {case} ({h}x{w}): gap off by {diff} (> half step {})",
+            qp.scale * 0.5
+        );
+    }
+}
+
+/// The int8 linear head (integer GEMM + exact f32 epilogue) matches the
+/// oracle linear over identical on-grid operands to float precision —
+/// far inside the one-step-per-op budget.
+#[test]
+fn prop_int8_linear_head_matches_oracle() {
+    let mut rng = Rng::new(303);
+    for case in 0..16u64 {
+        let per_channel = case % 2 == 0;
+        let scheme = if per_channel {
+            QScheme::per_channel(8)
+        } else {
+            QScheme::int8_asymmetric()
+        };
+        let (out_dim, in_dim) = (1 + rng.below(10), 1 + rng.below(24));
+        let mut w = rand_t(&mut rng, &[out_dim, in_dim], 0.4);
+        let (_, codes) = quantize_weights_retaining(&mut w, &scheme).unwrap();
+        let b: Vec<f32> = rng.normal_vec(out_dim, 0.2);
+        let x = rand_t(&mut rng, &[3, in_dim], 1.0);
+        let in_qp = params_for_range(x.min(), x.max(), 8, false);
+        let xq = QActTensor::quantize(&x, &in_qp);
+
+        let ql = QLinear::pack(&codes, &b, &in_qp).unwrap();
+        let got = ql.run(&xq, &mut Scratch::new()).unwrap();
+        let want = fops::linear(&xq.dequantize(), &w, &b);
+        assert_eq!(got.shape(), want.shape());
+        let rel = got.max_abs_diff(&want) / want.abs_max().max(1e-6);
+        assert!(
+            rel < 1e-4,
+            "case {case} (pc={per_channel} {out_dim}x{in_dim}): rel {rel}"
+        );
+    }
+}
+
+/// Standalone activation requantisation (e.g. a ReLU after a residual
+/// add) matches clip + fake-quant within one step of the site grid.
+#[test]
+fn prop_requantizer_matches_clip_fake_quant() {
+    use dfq::nn::qengine::Requantizer;
+    let mut rng = Rng::new(304);
+    for case in 0..32u64 {
+        let in_qp = rand_grid(&mut rng, -4.0, 6.0);
+        let clip_hi = if case % 2 == 0 { 6.0 } else { f32::INFINITY };
+        let p = params_for_range(0.0, rng.uniform(0.5, 8.0), 8, false);
+        let row = SiteCfg {
+            scale: p.scale,
+            zero_point: p.zero_point,
+            n_levels: p.n_levels,
+            clip_hi,
+        };
+        let x = rand_codes(&mut rng, &[1, 2, 5, 5], in_qp);
+        let rq = Requantizer::pack(&in_qp, &row).unwrap();
+        let got = rq.run(&x).unwrap();
+        let mut want = x.dequantize();
+        clip_act(&mut want, row.clip_hi);
+        fake_quant(&mut want, row.scale, row.zero_point, row.n_levels);
+        let diff = got.dequantize().max_abs_diff(&want);
+        assert!(
+            diff <= row.scale * 1.001,
+            "case {case}: requantizer off by {diff} (> one step {})",
+            row.scale
+        );
+    }
+}
+
+/// End-to-end: the MobileNet-style residual-block model (dense conv +
+/// depthwise + residual add + GAP + linear head) plans with ZERO f32
+/// fallback ops and matches the fake-quant oracle within the propagated
+/// per-op step budget.
+#[test]
+fn residual_block_plans_fully_integer_and_matches_oracle() {
+    for seed in [401u64, 402, 403] {
+        let m = testutil::residual_block_model(seed);
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        let q = prep
+            .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+            .unwrap();
+        let qm = q.pack_int8().unwrap();
+
+        // the acceptance bar: nothing dequantises mid-network
+        assert_eq!(qm.f32_layers, 0, "seed {seed}: {}", qm.summary());
+        assert_eq!(qm.fallback_ops(), 0, "seed {seed}: {}", qm.summary());
+        assert_eq!(qm.int_layers, 4, "seed {seed}: {}", qm.summary());
+        // strict planning accepts the same model
+        q.pack_int8_opts(PlanOpts { int8_only: true }).unwrap();
+        let report = qm.summarize();
+        for needle in
+            ["add-requant [int8]", "gap [int8]", "linear [int8->f32]"]
+        {
+            assert!(report.contains(needle), "missing '{needle}' in\n{report}");
+        }
+        assert!(!report.contains("FALLBACK"), "{report}");
+
+        let x = testutil::random_input(&m, 2, seed);
+        let y_or = nn::forward(&q.model, &x, &q.act_cfg).unwrap();
+        let y_int = qm.run(&x).unwrap();
+        assert_eq!(y_int.shape(), y_or[0].shape());
+
+        // Propagated error budget: each integer op is within one step of
+        // the oracle on identical inputs; upstream code diffs amplify
+        // through a layer by at most its max row L1 norm.
+        let layers = q.model.layers();
+        let l1_of = |i: usize| -> f32 {
+            let w = match &layers[i].op {
+                dfq::graph::Op::Conv { w, .. }
+                | dfq::graph::Op::Linear { w, .. } => {
+                    q.model.tensor(w).unwrap()
+                }
+                _ => unreachable!(),
+            };
+            (0..w.shape()[0])
+                .map(|o| w.out_channel(o).iter().map(|v| v.abs()).sum())
+                .fold(0f32, f32::max)
+        };
+        let (amp_dw, amp_pw, amp_head) = (l1_of(1), l1_of(2), l1_of(3));
+        let s1 = q.act_cfg.rows[1].scale; // first ReLU site
+        let s2 = q.act_cfg.rows[2].scale; // second ReLU site
+        let s_add = q.act_cfg.rows[3].scale; // add site
+        let s_pre = q
+            .preact_params
+            .iter()
+            .find(|(id, _)| *id == layers[2].id)
+            .map(|(_, p)| p.scale)
+            .expect("pointwise conv has a pre-activation grid");
+        let e_a1 = s1;
+        let e_a2 = e_a1 * amp_dw + s2;
+        let e_p3 = e_a2 * amp_pw + s_pre;
+        let e_add = e_a1 + e_p3 + s_add;
+        let e_gap = e_add + 0.5 * s_add;
+        let tol = 1.5 * (e_gap * amp_head) + 1e-3;
+        let diff = y_int.max_abs_diff(&y_or[0]);
+        assert!(
+            diff <= tol,
+            "seed {seed}: end-to-end diff {diff} > budget {tol} \
+             (amps {amp_dw}/{amp_pw}/{amp_head})"
+        );
+    }
+}
+
+/// Batch-parallel `run_all` is bitwise-identical to the serial
+/// whole-batch path (every kernel is image-independent).
+#[test]
+fn batch_parallel_run_all_is_bitwise_identical() {
+    let m = testutil::residual_block_model(410);
+    let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+    let q = prep
+        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+        .unwrap();
+    let qm = q.pack_int8().unwrap();
+    let x = testutil::random_input(&m, 5, 411);
+    let par = qm.run_all(&x).unwrap();
+    let ser = qm.run_batch(&x).unwrap();
+    assert_eq!(par.len(), ser.len());
+    for (a, b) in par.iter().zip(&ser) {
+        assert_eq!(a.shape(), b.shape());
+        assert_eq!(a.data(), b.data(), "parallel path diverged bitwise");
+    }
+}
+
+/// Without aux pre-activation grids the residual branch must fall back —
+/// visible in the plan report, counted, and fatal under `int8_only`.
+#[test]
+fn int8_only_rejects_surviving_fallbacks() {
+    let m = testutil::residual_block_model(420);
+    let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+    let q = prep
+        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+        .unwrap();
+    // planning WITHOUT the pre-activation grids: the pointwise conv
+    // cannot requantise, so the residual add falls back to f32
+    let loose = plan(
+        &q.model,
+        &q.int_weights,
+        &q.act_cfg,
+        &AuxGrids::empty(),
+        PlanOpts::default(),
+    )
+    .unwrap();
+    assert!(loose.fallback_ops() >= 1, "{}", loose.summary());
+    assert!(loose.summarize().contains("FALLBACK"), "{}", loose.summarize());
+    let err = plan(
+        &q.model,
+        &q.int_weights,
+        &q.act_cfg,
+        &AuxGrids::empty(),
+        PlanOpts { int8_only: true },
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fallback"), "got: {msg}");
 }
 
 /// pack_int8 refuses un-packable configurations with clear errors.
