@@ -1,22 +1,117 @@
 //! Bench: serving coordinator — throughput/latency under Poisson load,
-//! batch-size ablation, and batching-window ablation. The L3 §Perf
-//! instrument (the paper's deployment motivation: INT8 serving).
+//! batch-size ablation, batching-window ablation, and the compiled-
+//! artifact boot comparison (full DFQ recompile vs `.dfqm` load). The
+//! L3 §Perf instrument (the paper's deployment motivation: INT8
+//! serving). `--quick` runs only the manifest-free artifact sections
+//! (the CI smoke step).
 
 use std::time::Duration;
 
-use dfq::dfq::bn_fold;
+use dfq::dfq::{
+    bn_fold, quantize_data_free, testutil, BiasCorrMode, DfqConfig,
+};
 use dfq::graph::Model;
+use dfq::nn::qengine::{PlanOpts, QModel};
 use dfq::nn::QuantCfg;
+use dfq::quant::QScheme;
 use dfq::runtime::Manifest;
 use dfq::serve::{EngineExecutor, ServeConfig, Server};
 use dfq::tensor::Tensor;
-use dfq::util::bench::section;
+use dfq::util::bench::{section, Bench};
+
+/// Boot-time instrument: what a serving host pays to become ready —
+/// replaying the whole DFQ pipeline + planner versus decoding a
+/// compiled `.dfqm` artifact. Manifest-free (testutil models), so it
+/// runs everywhere including CI; emits the shared BenchResult JSON
+/// records next to the human lines.
+fn artifact_boot_bench() {
+    section("compiled artifact — boot: full DFQ recompile vs .dfqm load");
+    let model = testutil::residual_block_model(77);
+    let quantize = || {
+        let prep =
+            quantize_data_free(&model, &DfqConfig::default()).unwrap();
+        prep.quantize(
+            &QScheme::int8_asymmetric(),
+            8,
+            BiasCorrMode::Analytic,
+            None,
+        )
+        .unwrap()
+    };
+    let q = quantize();
+    let dir = std::env::temp_dir()
+        .join(format!("dfq-serving-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resblock.dfqm");
+    let info = q.save_artifact(&path, PlanOpts { int8_only: true }).unwrap();
+    println!("artifact: {}", info.summary());
+
+    let recompile = Bench::new("boot/full-dfq-recompile").run(|| {
+        let q = quantize();
+        let qm = q.pack_int8_opts(PlanOpts { int8_only: true }).unwrap();
+        std::hint::black_box(qm.num_ops());
+    });
+    recompile.print().print_json();
+    let load = Bench::new("boot/artifact-load").run(|| {
+        let qm = QModel::from_artifact(&path).unwrap();
+        std::hint::black_box(qm.num_ops());
+    });
+    load.print().print_json();
+    println!(
+        "boot speedup (recompile mean / load mean): {:.1}x",
+        recompile.secs.mean / load.secs.mean
+    );
+
+    // smoke: the reloaded plan must serve bit-for-bit what the
+    // in-memory pipeline serves
+    let x = testutil::random_input(&model, 1, 5);
+    let want = q.pack_int8().unwrap().run(&x).unwrap();
+    let got = QModel::from_artifact(&path).unwrap().run(&x).unwrap();
+    assert_eq!(want.data(), got.data(), "artifact round-trip drifted");
+    println!("compile -> write -> reload -> run bitwise check: OK");
+
+    // registry smoke: two artifacts served from one process
+    let q2 = {
+        let m2 = testutil::two_layer_model(78, true);
+        let prep = quantize_data_free(&m2, &DfqConfig::default()).unwrap();
+        prep.quantize(
+            &QScheme::int8_asymmetric(),
+            8,
+            BiasCorrMode::Analytic,
+            None,
+        )
+        .unwrap()
+    };
+    q2.save_artifact(dir.join("twolayer.dfqm"), PlanOpts { int8_only: true })
+        .unwrap();
+    // this doubles as the CI smoke gate — a registry failure must fail
+    // the bench run, not scroll past on stderr
+    let snaps = dfq::serve::demo::run_registry_load(
+        dir.to_str().unwrap(),
+        64,
+        500.0,
+        16,
+    )
+    .unwrap_or_else(|e| panic!("registry load failed: {e:#}"));
+    for (name, snap) in snaps {
+        println!("registry[{name}] {}", snap.report());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    if quick {
+        std::env::set_var("DFQ_BENCH_FAST", "1");
+    }
+    artifact_boot_bench();
+    if quick {
+        return;
+    }
     let man = match Manifest::load(dfq::artifacts_dir()) {
         Ok(m) => m,
         Err(e) => {
-            eprintln!("skipping serving bench (no artifacts): {e:#}");
+            eprintln!("skipping manifest-backed serving benches: {e:#}");
             return;
         }
     };

@@ -1,0 +1,616 @@
+//! The `.dfqm` compiled-artifact container: a versioned little-endian
+//! section file (magic + header + BOM-style table of named
+//! `{offset, size, crc32}` entries), plus the byte-cursor codecs the
+//! writer/reader build on.
+//!
+//! ## Layout
+//!
+//! ```text
+//! offset 0   magic          b"DFQP"           (4 bytes)
+//!        4   version        u32 LE            (currently 1)
+//!        8   n_sections     u32 LE
+//!       12   reserved       u32 LE            (0)
+//!       16   section table  n_sections × 40-byte entries:
+//!              name    [u8; 16]  NUL-padded ASCII
+//!              offset  u64 LE    absolute, 64-byte aligned
+//!              size    u64 LE    payload bytes (pre-padding)
+//!              crc32   u32 LE    IEEE CRC-32 of the payload
+//!              pad     u32 LE    (0)
+//!       ...  section payloads, each 64-byte aligned
+//! ```
+//!
+//! Every failure mode is a typed [`ArtifactError`] (never a panic):
+//! corrupt downloads, truncated copies and version skew all surface as
+//! distinct, matchable variants.
+
+use std::fmt;
+use std::path::Path;
+
+/// Magic of a compiled-plan artifact ("Data-Free Quantized Plan") —
+/// distinct from the `b"DFQM"` *source model* container magic so the two
+/// `.dfqm` kinds can never be confused at load time.
+pub const MAGIC: [u8; 4] = *b"DFQP";
+
+/// Current container format version.
+pub const VERSION: u32 = 1;
+
+/// Payload alignment (matches the source-model container).
+const ALIGN: usize = 64;
+
+/// Fixed header bytes before the section table.
+const HEADER_LEN: usize = 16;
+
+/// One section-table entry's encoded size.
+const ENTRY_LEN: usize = 40;
+
+const NAME_LEN: usize = 16;
+
+fn pad_to(n: usize) -> usize {
+    (ALIGN - n % ALIGN) % ALIGN
+}
+
+// -- typed errors ------------------------------------------------------------
+
+/// Everything that can go wrong opening or decoding an artifact. Implements
+/// `std::error::Error`, so `?` converts it into the crate-wide
+/// `anyhow::Error`; keep the typed form (e.g. via
+/// [`crate::artifact::Artifact::open_typed`]) to match on variants.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// Filesystem-level failure (path + OS message).
+    Io { path: String, msg: String },
+    /// The first four bytes are not [`MAGIC`] (e.g. a *source* `.dfqm`
+    /// model container, or not a dfq file at all).
+    BadMagic { found: [u8; 4] },
+    /// A newer (or corrupt) format version this build cannot read.
+    UnsupportedVersion { found: u32 },
+    /// The file ends before the named structure does.
+    Truncated { what: String },
+    /// A section's stored CRC-32 does not match its payload.
+    CrcMismatch { section: String, stored: u32, computed: u32 },
+    /// A required section is absent from the table.
+    MissingSection { name: String },
+    /// Structurally invalid content inside an intact container.
+    Malformed { what: String },
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Io { path, msg } => {
+                write!(f, "artifact io error at {path}: {msg}")
+            }
+            ArtifactError::BadMagic { found } => write!(
+                f,
+                "bad artifact magic {:?} (expected {:?} — a compiled \
+                 artifact, not a source model container)",
+                String::from_utf8_lossy(found),
+                String::from_utf8_lossy(&MAGIC),
+            ),
+            ArtifactError::UnsupportedVersion { found } => write!(
+                f,
+                "unsupported artifact version {found} (this build reads \
+                 version {VERSION})"
+            ),
+            ArtifactError::Truncated { what } => {
+                write!(f, "truncated artifact: {what}")
+            }
+            ArtifactError::CrcMismatch { section, stored, computed } => {
+                write!(
+                    f,
+                    "crc mismatch in section '{section}': stored \
+                     {stored:#010x}, computed {computed:#010x}"
+                )
+            }
+            ArtifactError::MissingSection { name } => {
+                write!(f, "missing artifact section '{name}'")
+            }
+            ArtifactError::Malformed { what } => {
+                write!(f, "malformed artifact: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// Artifact-local result alias (typed error).
+pub type AResult<T> = std::result::Result<T, ArtifactError>;
+
+fn truncated(what: impl Into<String>) -> ArtifactError {
+    ArtifactError::Truncated { what: what.into() }
+}
+
+pub(crate) fn malformed(what: impl Into<String>) -> ArtifactError {
+    ArtifactError::Malformed { what: what.into() }
+}
+
+// -- crc32 -------------------------------------------------------------------
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+/// IEEE CRC-32 (the zlib/`crc32` polynomial, reflected).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// -- container writer --------------------------------------------------------
+
+/// Accumulates named sections and emits the final container image.
+pub struct ContainerWriter {
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl ContainerWriter {
+    pub fn new() -> ContainerWriter {
+        ContainerWriter { sections: Vec::new() }
+    }
+
+    /// Append one named section (names must be unique, ≤ 16 ASCII bytes).
+    pub fn push(&mut self, name: &str, payload: Vec<u8>) {
+        assert!(
+            name.len() <= NAME_LEN && name.is_ascii(),
+            "section name '{name}' must be ≤ {NAME_LEN} ASCII bytes"
+        );
+        assert!(
+            self.sections.iter().all(|(n, _)| n != name),
+            "duplicate section '{name}'"
+        );
+        self.sections.push((name.to_string(), payload));
+    }
+
+    /// Serialise header + table + aligned payloads.
+    pub fn finish(self) -> Vec<u8> {
+        let n = self.sections.len();
+        let table_end = HEADER_LEN + n * ENTRY_LEN;
+        let mut offset = table_end + pad_to(table_end);
+        let mut entries = Vec::with_capacity(n);
+        for (name, payload) in &self.sections {
+            entries.push((name.clone(), offset, payload.len(), crc32(payload)));
+            offset += payload.len() + pad_to(payload.len());
+        }
+        let mut out = Vec::with_capacity(offset);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes());
+        for (name, off, size, crc) in &entries {
+            let mut nb = [0u8; NAME_LEN];
+            nb[..name.len()].copy_from_slice(name.as_bytes());
+            out.extend_from_slice(&nb);
+            out.extend_from_slice(&(*off as u64).to_le_bytes());
+            out.extend_from_slice(&(*size as u64).to_le_bytes());
+            out.extend_from_slice(&crc.to_le_bytes());
+            out.extend_from_slice(&0u32.to_le_bytes());
+        }
+        out.resize(out.len() + pad_to(out.len()), 0);
+        for (i, (_, payload)) in self.sections.iter().enumerate() {
+            debug_assert_eq!(out.len(), entries[i].1, "section offset drift");
+            out.extend_from_slice(payload);
+            if i + 1 < n {
+                out.resize(out.len() + pad_to(payload.len()), 0);
+            }
+        }
+        out
+    }
+}
+
+impl Default for ContainerWriter {
+    fn default() -> Self {
+        ContainerWriter::new()
+    }
+}
+
+// -- container reader --------------------------------------------------------
+
+struct Entry {
+    name: String,
+    offset: usize,
+    size: usize,
+    crc: u32,
+}
+
+/// A parsed container: the section table plus the raw bytes. Section
+/// payloads are CRC-checked on access.
+pub struct ContainerReader {
+    data: Vec<u8>,
+    entries: Vec<Entry>,
+}
+
+impl ContainerReader {
+    pub fn open(path: &Path) -> AResult<ContainerReader> {
+        let data = std::fs::read(path).map_err(|e| ArtifactError::Io {
+            path: path.display().to_string(),
+            msg: e.to_string(),
+        })?;
+        ContainerReader::parse(data)
+    }
+
+    pub fn parse(data: Vec<u8>) -> AResult<ContainerReader> {
+        if data.len() < HEADER_LEN {
+            return Err(truncated("file shorter than the 16-byte header"));
+        }
+        let magic: [u8; 4] = data[0..4].try_into().unwrap();
+        if magic != MAGIC {
+            return Err(ArtifactError::BadMagic { found: magic });
+        }
+        let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(ArtifactError::UnsupportedVersion { found: version });
+        }
+        let n = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+        if n > 1024 {
+            return Err(malformed(format!("implausible section count {n}")));
+        }
+        let table_end = HEADER_LEN + n * ENTRY_LEN;
+        if data.len() < table_end {
+            return Err(truncated(format!(
+                "section table needs {table_end} bytes, file has {}",
+                data.len()
+            )));
+        }
+        let mut entries = Vec::with_capacity(n);
+        for i in 0..n {
+            let base = HEADER_LEN + i * ENTRY_LEN;
+            let raw_name = &data[base..base + NAME_LEN];
+            let name_end =
+                raw_name.iter().position(|&b| b == 0).unwrap_or(NAME_LEN);
+            let name = std::str::from_utf8(&raw_name[..name_end])
+                .map_err(|_| {
+                    malformed(format!("section {i} name is not UTF-8"))
+                })?
+                .to_string();
+            let offset = u64::from_le_bytes(
+                data[base + 16..base + 24].try_into().unwrap(),
+            ) as usize;
+            let size = u64::from_le_bytes(
+                data[base + 24..base + 32].try_into().unwrap(),
+            ) as usize;
+            let crc = u32::from_le_bytes(
+                data[base + 32..base + 36].try_into().unwrap(),
+            );
+            match offset.checked_add(size) {
+                Some(end) if end <= data.len() => {}
+                _ => {
+                    return Err(truncated(format!(
+                        "section '{name}' claims [{offset}, \
+                         {offset}+{size}) but file has {} bytes",
+                        data.len()
+                    )))
+                }
+            }
+            entries.push(Entry { name, offset, size, crc });
+        }
+        Ok(ContainerReader { data, entries })
+    }
+
+    pub fn section_names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Total container size in bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn section_size(&self, name: &str) -> Option<usize> {
+        self.entries.iter().find(|e| e.name == name).map(|e| e.size)
+    }
+
+    /// Borrow one section's payload, verifying its CRC-32.
+    pub fn section(&self, name: &str) -> AResult<&[u8]> {
+        let e = self
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| ArtifactError::MissingSection {
+                name: name.to_string(),
+            })?;
+        let payload = &self.data[e.offset..e.offset + e.size];
+        let computed = crc32(payload);
+        if computed != e.crc {
+            return Err(ArtifactError::CrcMismatch {
+                section: name.to_string(),
+                stored: e.crc,
+                computed,
+            });
+        }
+        Ok(payload)
+    }
+}
+
+// -- byte cursors ------------------------------------------------------------
+
+/// Little-endian append-only encoder (infallible).
+#[derive(Default)]
+pub struct ByteWriter {
+    pub buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn i8_slice(&mut self, v: &[i8]) {
+        // i8 → u8 is a bit-level reinterpretation
+        self.buf.extend(v.iter().map(|&x| x as u8));
+    }
+
+    pub fn i32_slice(&mut self, v: &[i32]) {
+        for &x in v {
+            self.i32(x);
+        }
+    }
+
+    pub fn i64_slice(&mut self, v: &[i64]) {
+        for &x in v {
+            self.i64(x);
+        }
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        for &x in v {
+            self.f32(x);
+        }
+    }
+}
+
+/// Little-endian cursor over one section; every read is bounds-checked
+/// and fails with a typed [`ArtifactError::Truncated`] naming the
+/// section.
+pub struct ByteReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    section: &'a str,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(data: &'a [u8], section: &'a str) -> ByteReader<'a> {
+        ByteReader { data, pos: 0, section }
+    }
+
+    fn take(&mut self, n: usize) -> AResult<&'a [u8]> {
+        if self.data.len() - self.pos < n {
+            return Err(truncated(format!(
+                "section '{}' ends at byte {} (wanted {n} more at offset {})",
+                self.section,
+                self.data.len(),
+                self.pos
+            )));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> AResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> AResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> AResult<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> AResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> AResult<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> AResult<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> AResult<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> AResult<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| {
+            malformed(format!(
+                "section '{}': value {v} exceeds usize",
+                self.section
+            ))
+        })
+    }
+
+    pub fn i8_vec(&mut self, n: usize) -> AResult<Vec<i8>> {
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn i32_vec(&mut self, n: usize) -> AResult<Vec<i32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| {
+            malformed(format!("section '{}': i32 count overflow", self.section))
+        })?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn i64_vec(&mut self, n: usize) -> AResult<Vec<i64>> {
+        let bytes = self.take(n.checked_mul(8).ok_or_else(|| {
+            malformed(format!("section '{}': i64 count overflow", self.section))
+        })?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> AResult<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| {
+            malformed(format!("section '{}': f32 count overflow", self.section))
+        })?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    /// Assert the cursor consumed the whole section (decode integrity).
+    pub fn expect_end(&self) -> AResult<()> {
+        if self.remaining() != 0 {
+            return Err(malformed(format!(
+                "section '{}' has {} undecoded trailing bytes",
+                self.section,
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_reference_value() {
+        // zlib.crc32(b"123456789") == 0xcbf43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn container_roundtrip() {
+        let mut w = ContainerWriter::new();
+        w.push("alpha", vec![1, 2, 3]);
+        w.push("beta", (0..200u8).collect());
+        let bytes = w.finish();
+        let r = ContainerReader::parse(bytes).unwrap();
+        assert_eq!(r.section_names(), vec!["alpha", "beta"]);
+        assert_eq!(r.section("alpha").unwrap(), &[1, 2, 3]);
+        assert_eq!(r.section("beta").unwrap().len(), 200);
+        assert!(matches!(
+            r.section("gamma"),
+            Err(ArtifactError::MissingSection { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_containers_are_typed_errors() {
+        let mut w = ContainerWriter::new();
+        w.push("s", vec![9; 100]);
+        let good = w.finish();
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0..4].copy_from_slice(b"NOPE");
+        assert!(matches!(
+            ContainerReader::parse(bad),
+            Err(ArtifactError::BadMagic { .. })
+        ));
+
+        // future version
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(
+            ContainerReader::parse(bad),
+            Err(ArtifactError::UnsupportedVersion { found: 99 })
+        ));
+
+        // truncated payload
+        let mut bad = good.clone();
+        bad.truncate(good.len() - 50);
+        assert!(matches!(
+            ContainerReader::parse(bad),
+            Err(ArtifactError::Truncated { .. })
+        ));
+
+        // flipped payload byte -> crc mismatch on access
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        let r = ContainerReader::parse(bad).unwrap();
+        assert!(matches!(
+            r.section("s"),
+            Err(ArtifactError::CrcMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn byte_cursor_roundtrip_and_truncation() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.i64(-5);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.i8_slice(&[-1, 0, 1]);
+        let buf = w.buf;
+        let mut r = ByteReader::new(&buf, "t");
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.i64().unwrap(), -5);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert_eq!(r.i8_vec(3).unwrap(), vec![-1, 0, 1]);
+        r.expect_end().unwrap();
+        assert!(matches!(r.u8(), Err(ArtifactError::Truncated { .. })));
+    }
+}

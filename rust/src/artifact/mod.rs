@@ -1,0 +1,182 @@
+//! Compiled-model artifacts: run the DFQ pipeline **once**, ship the
+//! resulting integer execution plan as a load-and-go binary.
+//!
+//! The rest of the crate boots a model by replaying the whole paper
+//! pipeline — BN fold → CLE → bias absorption → quantise → plan — on
+//! every process start. This subsystem snapshots the *end product* of
+//! that work (the planned [`QModel`](crate::nn::qengine::QModel)) into a
+//! versioned little-endian container so a serving host pays none of it:
+//!
+//! * [`writer::write_artifact`] / [`crate::dfq::QuantizedModel::save_artifact`]
+//!   — compile + serialise (`dfq compile` on the CLI),
+//! * [`reader::Artifact`] /
+//!   [`QModel::from_artifact`](crate::nn::qengine::QModel::from_artifact)
+//!   — decode back into a ready-to-run plan with **zero float math**
+//!   (every multiplier, folded bias and weight code is restored
+//!   bit-for-bit, so outputs are bitwise-identical to the in-memory
+//!   plan),
+//! * [`crate::serve::registry`] — hosts many such artifacts in one
+//!   process (`dfq serve --models dir/`).
+//!
+//! ## Container layout
+//!
+//! A magic header + BOM-style table of named `{offset, size, crc32}`
+//! entries (see [`format`]), with one section per payload kind:
+//!
+//! | section        | content                                            |
+//! |----------------|----------------------------------------------------|
+//! | `meta`         | JSON: model name, input shape, classes, plan summary |
+//! | `plan`         | op stream: wiring (slots/ins/outs), op tags, small scalars, activation grids |
+//! | `wgrid.i8`     | i8 weight codes, kernel layout (transposed / O-major) |
+//! | `qparams`      | per-channel weight grids: `(s_w, zp_w, bias_f)`    |
+//! | `bias.i64`     | folded i64 biases: `zp_corr`, then `bias_q` per fused conv |
+//! | `mult.fix`     | fixed-point requant multipliers (`m·2^-shift` or f64) |
+//! | `fallback.f32` | f32 fallback weights (omitted on fully-integer plans) |
+//!
+//! Per-conv *pre-activation* grids travel as the `Grid`-epilogue output
+//! grids of their convs inside `plan` — the form the executor actually
+//! consumes. Streams are append-only in op order; the reader replays
+//! them with sequential cursors and re-validates every structural
+//! invariant, so corrupt files surface as typed [`ArtifactError`]s
+//! (bad magic, truncation, CRC mismatch, malformed content) rather than
+//! panics.
+
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+pub use format::{crc32, ArtifactError};
+pub use reader::{inspect, Artifact};
+pub use writer::{encode_qmodel, write_artifact};
+
+// Section names (≤ 16 ASCII bytes each; see `format`).
+pub(crate) const SEC_META: &str = "meta";
+pub(crate) const SEC_PLAN: &str = "plan";
+pub(crate) const SEC_WGRID: &str = "wgrid.i8";
+pub(crate) const SEC_QPARAMS: &str = "qparams";
+pub(crate) const SEC_BIAS: &str = "bias.i64";
+pub(crate) const SEC_MULT: &str = "mult.fix";
+pub(crate) const SEC_FALLBACK: &str = "fallback.f32";
+
+// Op tags of the `plan` stream (one per `QOp` variant).
+pub(crate) const OP_QUANT_IN: u8 = 0;
+pub(crate) const OP_CONV: u8 = 1;
+pub(crate) const OP_CONV_F32: u8 = 2;
+pub(crate) const OP_ADD_INT: u8 = 3;
+pub(crate) const OP_ADDF: u8 = 4;
+pub(crate) const OP_ACT_REQUANT: u8 = 5;
+pub(crate) const OP_ACTF: u8 = 6;
+pub(crate) const OP_GAP: u8 = 7;
+pub(crate) const OP_GAPF: u8 = 8;
+pub(crate) const OP_LINEAR: u8 = 9;
+pub(crate) const OP_LINEARF: u8 = 10;
+pub(crate) const OP_UPSAMPLE: u8 = 11;
+
+/// Serving-relevant metadata of a compiled artifact (the `meta` section
+/// plus the on-disk size).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    /// Source model name.
+    pub name: String,
+    /// Expected input `[C, H, W]`.
+    pub input_shape: [usize; 3],
+    pub num_classes: usize,
+    /// Planned op count.
+    pub ops: usize,
+    /// Dense value slots of the plan.
+    pub slots: usize,
+    /// Conv/linear layers on the integer path.
+    pub int_layers: usize,
+    /// Conv/linear layers executing in f32.
+    pub f32_layers: usize,
+    /// f32 fallback ops surviving planning (0 on a pure-int8 plan).
+    pub fallback_ops: usize,
+    /// Container size in bytes (0 until written / after open).
+    pub bytes: usize,
+}
+
+impl ArtifactInfo {
+    /// One-line human summary (CLI / registry logs).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}x{}x{} -> {} classes] {} op(s), {} int8 / {} f32 \
+             layer(s), {} fallback op(s), {} bytes",
+            self.name,
+            self.input_shape[0],
+            self.input_shape[1],
+            self.input_shape[2],
+            self.num_classes,
+            self.ops,
+            self.int_layers,
+            self.f32_layers,
+            self.fallback_ops,
+            self.bytes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfq::{quantize_data_free, testutil, BiasCorrMode, DfqConfig};
+    use crate::nn::qengine::{PlanOpts, QModel};
+    use crate::quant::QScheme;
+
+    fn quantized(seed: u64) -> crate::dfq::QuantizedModel {
+        let m = testutil::residual_block_model(seed);
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        prep.quantize(
+            &QScheme::int8_asymmetric(),
+            8,
+            BiasCorrMode::None,
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn encode_decode_is_bitwise_stable() {
+        let q = quantized(41);
+        let qm = q
+            .pack_int8_opts(PlanOpts { int8_only: true })
+            .unwrap();
+        let info = writer::info_for(&q, &qm);
+        let bytes = encode_qmodel(&qm, &info);
+        // deterministic encoder: same plan -> same bytes
+        assert_eq!(bytes, encode_qmodel(&qm, &info));
+        let art = Artifact::from_bytes(bytes).unwrap();
+        assert_eq!(art.info().name, q.model.name);
+        assert_eq!(art.info().fallback_ops, 0);
+        let qm2 = art.into_qmodel();
+        assert_eq!(qm2.num_ops(), qm.num_ops());
+        assert_eq!(qm2.summarize(), qm.summarize());
+        let x = testutil::random_input(&q.model, 2, 7);
+        let y0 = qm.run_all(&x).unwrap();
+        let y1 = qm2.run_all(&x).unwrap();
+        assert_eq!(y0.len(), y1.len());
+        for (a, b) in y0.iter().zip(&y1) {
+            assert_eq!(a.shape(), b.shape());
+            assert_eq!(a.data(), b.data(), "decoded plan drifted bitwise");
+        }
+    }
+
+    #[test]
+    fn from_artifact_reads_what_save_wrote() {
+        let q = quantized(42);
+        let dir = std::env::temp_dir().join(format!(
+            "dfq-artifact-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resblock.dfqm");
+        let info = write_artifact(&q, PlanOpts::default(), &path).unwrap();
+        assert!(info.bytes > 0);
+        assert_eq!(inspect(&path).unwrap(), info);
+        let qm = QModel::from_artifact(&path).unwrap();
+        let x = testutil::random_input(&q.model, 1, 3);
+        let want = q.pack_int8().unwrap().run(&x).unwrap();
+        let got = qm.run(&x).unwrap();
+        assert_eq!(want.data(), got.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,630 @@
+//! Load-side of the artifact subsystem: decode a `.dfqm` compiled
+//! artifact back into a ready-to-run [`QModel`].
+//!
+//! Decoding is a *bit-level copy*: every field of every packed op (i8
+//! weight codes, i64 folded biases, fixed-point multipliers, f32 grid
+//! scales) is restored from its little-endian image — no float
+//! arithmetic, no re-planning, no python manifest. A reloaded plan is
+//! therefore bitwise-identical in behaviour to the in-memory plan it was
+//! compiled from. All structural invariants the packers normally enforce
+//! are re-validated here so a corrupt or adversarial file surfaces as a
+//! typed [`ArtifactError`] instead of a panic deep inside a kernel.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::nn::qengine::kernels::{Epilogue, QConv};
+use crate::nn::qengine::ops::{QAddInt, QLinear, Requantizer};
+use crate::nn::qengine::plan::{PlannedOp, QModel, QOp};
+use crate::nn::qengine::Mult;
+use crate::nn::SiteCfg;
+use crate::quant::QParams;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::format::{malformed, AResult, ByteReader, ContainerReader};
+use super::{
+    ArtifactError, ArtifactInfo, OP_ACTF, OP_ACT_REQUANT, OP_ADDF,
+    OP_ADD_INT, OP_CONV, OP_CONV_F32, OP_GAP, OP_GAPF, OP_LINEAR,
+    OP_LINEARF, OP_QUANT_IN, OP_UPSAMPLE, SEC_BIAS, SEC_FALLBACK, SEC_META,
+    SEC_MULT, SEC_PLAN, SEC_QPARAMS, SEC_WGRID,
+};
+
+/// Upper bound on plan dimensions a well-formed artifact can claim
+/// (defends slot-arena allocation against corrupt counts).
+const MAX_PLAN_DIM: usize = 1 << 20;
+
+/// A fully decoded compiled artifact: serving metadata + the plan.
+pub struct Artifact {
+    info: ArtifactInfo,
+    qmodel: QModel,
+}
+
+impl Artifact {
+    /// Open and fully decode, with typed errors for every corruption
+    /// mode (bad magic, version skew, truncation, CRC mismatch,
+    /// malformed content).
+    pub fn open_typed(path: &Path) -> AResult<Artifact> {
+        let c = ContainerReader::open(path)?;
+        Artifact::decode(&c)
+    }
+
+    /// [`Artifact::open_typed`] with the error erased into the crate's
+    /// `anyhow::Result` (the typed value still formats the full story).
+    pub fn open(path: impl AsRef<Path>) -> Result<Artifact> {
+        Ok(Artifact::open_typed(path.as_ref())?)
+    }
+
+    /// Decode an in-memory container image (tests / benches).
+    pub fn from_bytes(bytes: Vec<u8>) -> AResult<Artifact> {
+        let c = ContainerReader::parse(bytes)?;
+        Artifact::decode(&c)
+    }
+
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    pub fn qmodel(&self) -> &QModel {
+        &self.qmodel
+    }
+
+    pub fn into_qmodel(self) -> QModel {
+        self.qmodel
+    }
+
+    pub fn into_parts(self) -> (ArtifactInfo, QModel) {
+        (self.info, self.qmodel)
+    }
+
+    fn decode(c: &ContainerReader) -> AResult<Artifact> {
+        let mut info = decode_meta(c)?;
+        info.bytes = c.total_bytes();
+        let qmodel = decode_plan(c)?;
+        // meta is advisory; the plan stream is authoritative — but the
+        // two must agree or the file was stitched together
+        if info.ops != qmodel.num_ops()
+            || info.fallback_ops != qmodel.fallback_ops()
+        {
+            return Err(malformed(format!(
+                "meta/plan disagree: meta says {} op(s) ({} fallback), \
+                 plan decodes {} ({})",
+                info.ops,
+                info.fallback_ops,
+                qmodel.num_ops(),
+                qmodel.fallback_ops()
+            )));
+        }
+        Ok(Artifact { info, qmodel })
+    }
+}
+
+impl QModel {
+    /// Rebuild a ready-to-run execution plan from a `.dfqm` compiled
+    /// artifact — the zero-float-math boot path: no DFQ pipeline, no
+    /// planner, no python manifest.
+    pub fn from_artifact(path: impl AsRef<Path>) -> Result<QModel> {
+        Ok(Artifact::open_typed(path.as_ref())?.into_qmodel())
+    }
+}
+
+/// Read only the `meta` section of an artifact (cheap listing /
+/// registry scans — skips plan decode entirely).
+pub fn inspect(path: impl AsRef<Path>) -> AResult<ArtifactInfo> {
+    let c = ContainerReader::open(path.as_ref())?;
+    let mut info = decode_meta(&c)?;
+    info.bytes = c.total_bytes();
+    Ok(info)
+}
+
+fn jerr(e: anyhow::Error) -> ArtifactError {
+    malformed(format!("meta json: {e:#}"))
+}
+
+fn decode_meta(c: &ContainerReader) -> AResult<ArtifactInfo> {
+    let bytes = c.section(SEC_META)?;
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| malformed("meta section is not UTF-8"))?;
+    let j = Json::parse(text).map_err(jerr)?;
+    let format = j.req("format").and_then(Json::as_str).map_err(jerr)?;
+    if format != "dfq-compiled-artifact" {
+        return Err(malformed(format!("unknown meta format '{format}'")));
+    }
+    let shape =
+        j.req("input_shape").and_then(Json::as_shape).map_err(jerr)?;
+    if shape.len() != 3 {
+        return Err(malformed("input_shape must be [C, H, W]"));
+    }
+    let plan = j.req("plan").map_err(jerr)?;
+    let num = |key: &str| -> AResult<usize> {
+        plan.req(key).and_then(Json::as_usize).map_err(jerr)
+    };
+    Ok(ArtifactInfo {
+        name: j
+            .req("name")
+            .and_then(Json::as_str)
+            .map_err(jerr)?
+            .to_string(),
+        input_shape: [shape[0], shape[1], shape[2]],
+        num_classes: j
+            .req("num_classes")
+            .and_then(Json::as_usize)
+            .map_err(jerr)?,
+        ops: num("ops")?,
+        slots: num("slots")?,
+        int_layers: num("int_layers")?,
+        f32_layers: num("f32_layers")?,
+        fallback_ops: num("fallback_ops")?,
+        bytes: 0,
+    })
+}
+
+// -- field validators --------------------------------------------------------
+
+/// Mirror of the engine's `assert_act_grid` as a typed error: the grids
+/// an artifact feeds into kernels must satisfy the same invariants the
+/// packers assert, or execution would panic.
+fn check_act_qparams(qp: &QParams, what: &str) -> AResult<()> {
+    if !(2.0..=256.0).contains(&qp.n_levels) {
+        return Err(malformed(format!(
+            "{what}: activation grid needs 2..=256 levels, got {}",
+            qp.n_levels
+        )));
+    }
+    if qp.zero_point.fract() != 0.0
+        || qp.zero_point < 0.0
+        || qp.zero_point > qp.n_levels - 1.0
+    {
+        return Err(malformed(format!(
+            "{what}: zero point {} not an integer on the grid",
+            qp.zero_point
+        )));
+    }
+    if !(qp.scale > 0.0) || !qp.scale.is_finite() {
+        return Err(malformed(format!(
+            "{what}: scale {} not positive finite",
+            qp.scale
+        )));
+    }
+    Ok(())
+}
+
+fn check_site(row: &SiteCfg, what: &str) -> AResult<()> {
+    let qp = QParams {
+        scale: row.scale,
+        zero_point: row.zero_point,
+        n_levels: row.n_levels,
+    };
+    check_act_qparams(&qp, what)
+}
+
+fn check_mult(m: &Mult, what: &str) -> AResult<()> {
+    match m {
+        Mult::Fixed { shift, .. } => {
+            if !(1..=62).contains(shift) {
+                return Err(malformed(format!(
+                    "{what}: fixed-point shift {shift} outside 1..=62"
+                )));
+            }
+            Ok(())
+        }
+        Mult::Float(f) => {
+            if f.is_nan() {
+                return Err(malformed(format!("{what}: NaN multiplier")));
+            }
+            Ok(())
+        }
+    }
+}
+
+fn checked_len(a: usize, b: usize, what: &str) -> AResult<usize> {
+    a.checked_mul(b)
+        .filter(|&n| n <= (1 << 31))
+        .ok_or_else(|| malformed(format!("{what}: implausible size {a}×{b}")))
+}
+
+// -- plan decode -------------------------------------------------------------
+
+/// Sequential cursors over the typed section streams.
+struct Cursors<'a> {
+    plan: ByteReader<'a>,
+    wgrid: ByteReader<'a>,
+    qparams: ByteReader<'a>,
+    bias: ByteReader<'a>,
+    mult: ByteReader<'a>,
+    fallback: Option<ByteReader<'a>>,
+}
+
+fn get_qparams(r: &mut ByteReader) -> AResult<QParams> {
+    Ok(QParams {
+        scale: r.f32()?,
+        zero_point: r.f32()?,
+        n_levels: r.f32()?,
+    })
+}
+
+fn get_site(r: &mut ByteReader) -> AResult<SiteCfg> {
+    Ok(SiteCfg {
+        scale: r.f32()?,
+        zero_point: r.f32()?,
+        n_levels: r.f32()?,
+        clip_hi: r.f32()?,
+    })
+}
+
+fn get_mult(r: &mut ByteReader, what: &str) -> AResult<Mult> {
+    let m = match r.u8()? {
+        0 => Mult::Fixed { m: r.i32()?, shift: r.u32()? },
+        1 => Mult::Float(r.f64()?),
+        t => return Err(malformed(format!("{what}: bad mult tag {t}"))),
+    };
+    check_mult(&m, what)?;
+    Ok(m)
+}
+
+fn fallback_cursor<'a, 'c>(
+    cur: &'c mut Cursors<'a>,
+) -> AResult<&'c mut ByteReader<'a>> {
+    cur.fallback.as_mut().ok_or_else(|| ArtifactError::MissingSection {
+        name: SEC_FALLBACK.to_string(),
+    })
+}
+
+fn get_conv(cur: &mut Cursors, node: usize) -> AResult<QConv> {
+    let what = format!("conv op (node {node})");
+    let c_out = cur.plan.u32()? as usize;
+    let cig = cur.plan.u32()? as usize;
+    let kh = cur.plan.u32()? as usize;
+    let kw = cur.plan.u32()? as usize;
+    let stride = cur.plan.u32()? as usize;
+    let pad = cur.plan.u32()? as usize;
+    let groups = cur.plan.u32()? as usize;
+    if c_out == 0 || cig == 0 || kh == 0 || kw == 0 || stride == 0 {
+        return Err(malformed(format!("{what}: zero dimension")));
+    }
+    if groups != 1 && (cig != 1 || groups != c_out) {
+        return Err(malformed(format!(
+            "{what}: unsupported grouping (groups {groups}, cig {cig}, \
+             c_out {c_out})"
+        )));
+    }
+    let in_qp = get_qparams(&mut cur.plan)?;
+    check_act_qparams(&in_qp, &what)?;
+    let has_epi = match cur.plan.u8()? {
+        0 => false,
+        1 => true,
+        t => {
+            return Err(malformed(format!("{what}: bad epilogue tag {t}")))
+        }
+    };
+    let per = checked_len(cig, kh * kw, &what)?;
+    let w_len = checked_len(c_out, per, &what)?;
+    let w = cur.wgrid.i8_vec(w_len)?;
+    let mut s_w = Vec::with_capacity(c_out);
+    let mut zp_w = Vec::with_capacity(c_out);
+    let mut bias_f = Vec::with_capacity(c_out);
+    for _ in 0..c_out {
+        s_w.push(cur.qparams.f32()?);
+        zp_w.push(cur.qparams.i32()?);
+        bias_f.push(cur.qparams.f32()?);
+    }
+    let zp_corr = cur.bias.i64_vec(c_out)?;
+    let epi = if has_epi {
+        let out_qp = get_qparams(&mut cur.plan)?;
+        check_act_qparams(&out_qp, &what)?;
+        let zp_out = cur.plan.i32()?;
+        let q_lo = cur.plan.i32()?;
+        let q_hi = cur.plan.i32()?;
+        let bias_q = cur.bias.i64_vec(c_out)?;
+        let mut mult = Vec::with_capacity(c_out);
+        for _ in 0..c_out {
+            mult.push(get_mult(&mut cur.mult, &what)?);
+        }
+        Some(Epilogue { bias_q, mult, zp_out, q_lo, q_hi, out_qp })
+    } else {
+        None
+    };
+    Ok(QConv {
+        c_out,
+        cig,
+        kh,
+        kw,
+        stride,
+        pad,
+        groups,
+        w,
+        zp_w,
+        s_w,
+        zp_corr,
+        bias_f,
+        in_qp,
+        epi,
+    })
+}
+
+fn get_linear(cur: &mut Cursors, node: usize) -> AResult<QLinear> {
+    let what = format!("linear op (node {node})");
+    let in_dim = cur.plan.u32()? as usize;
+    let out_dim = cur.plan.u32()? as usize;
+    if in_dim == 0 || out_dim == 0 {
+        return Err(malformed(format!("{what}: zero dimension")));
+    }
+    let in_qp = get_qparams(&mut cur.plan)?;
+    check_act_qparams(&in_qp, &what)?;
+    let wt = cur.wgrid.i8_vec(checked_len(in_dim, out_dim, &what)?)?;
+    let mut s_w = Vec::with_capacity(out_dim);
+    let mut zp_w = Vec::with_capacity(out_dim);
+    let mut bias = Vec::with_capacity(out_dim);
+    for _ in 0..out_dim {
+        s_w.push(cur.qparams.f32()?);
+        zp_w.push(cur.qparams.i32()?);
+        bias.push(cur.qparams.f32()?);
+    }
+    let zp_corr = cur.bias.i64_vec(out_dim)?;
+    Ok(QLinear { in_dim, out_dim, wt, zp_w, s_w, zp_corr, bias, in_qp })
+}
+
+fn get_op(cur: &mut Cursors, node: usize) -> AResult<QOp> {
+    Ok(match cur.plan.u8()? {
+        OP_QUANT_IN => {
+            let qp = get_qparams(&mut cur.plan)?;
+            check_act_qparams(&qp, "input quantiser")?;
+            QOp::QuantIn { qp }
+        }
+        OP_CONV => QOp::Conv(Box::new(get_conv(cur, node)?)),
+        OP_CONV_F32 => {
+            let what = format!("conv-f32 op (node {node})");
+            let stride = cur.plan.u32()? as usize;
+            let pad = cur.plan.u32()? as usize;
+            let groups = cur.plan.u32()? as usize;
+            let ndim = cur.plan.u32()? as usize;
+            if ndim != 4 {
+                return Err(malformed(format!(
+                    "{what}: weights need 4 dims, got {ndim}"
+                )));
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            let mut count = 1usize;
+            for _ in 0..ndim {
+                let d = cur.plan.usize()?;
+                if d == 0 {
+                    return Err(malformed(format!(
+                        "{what}: zero weight dimension"
+                    )));
+                }
+                count = checked_len(count, d, &what)?;
+                shape.push(d);
+            }
+            let b_len = cur.plan.u32()? as usize;
+            let fb = fallback_cursor(cur)?;
+            let data = fb.f32_vec(count)?;
+            let b = fb.f32_vec(b_len)?;
+            QOp::ConvFp32 {
+                w: Tensor::new(&shape, data),
+                b,
+                stride,
+                pad,
+                groups,
+            }
+        }
+        OP_ADD_INT => {
+            let what = format!("add op (node {node})");
+            let ma = cur.plan.i64()?;
+            let mb = cur.plan.i64()?;
+            if ma <= 0 || mb <= 0 {
+                return Err(malformed(format!(
+                    "{what}: non-positive multipliers ({ma}, {mb})"
+                )));
+            }
+            let a_qp = get_qparams(&mut cur.plan)?;
+            let b_qp = get_qparams(&mut cur.plan)?;
+            let out_qp = get_qparams(&mut cur.plan)?;
+            check_act_qparams(&a_qp, &what)?;
+            check_act_qparams(&b_qp, &what)?;
+            check_act_qparams(&out_qp, &what)?;
+            QOp::Add(QAddInt { ma, mb, a_qp, b_qp, out_qp })
+        }
+        OP_ADDF => {
+            let row = get_site(&mut cur.plan)?;
+            check_site(&row, &format!("add-f32 op (node {node})"))?;
+            QOp::AddF { row }
+        }
+        OP_ACT_REQUANT => {
+            let what = format!("act op (node {node})");
+            let q_lo = cur.plan.i32()?;
+            let q_hi = cur.plan.i32()?;
+            let in_qp = get_qparams(&mut cur.plan)?;
+            let out_qp = get_qparams(&mut cur.plan)?;
+            check_act_qparams(&in_qp, &what)?;
+            check_act_qparams(&out_qp, &what)?;
+            let m = get_mult(&mut cur.mult, &what)?;
+            QOp::Act(Requantizer { m, q_lo, q_hi, in_qp, out_qp })
+        }
+        OP_ACTF => {
+            let row = get_site(&mut cur.plan)?;
+            check_site(&row, &format!("act-f32 op (node {node})"))?;
+            QOp::ActF { row }
+        }
+        OP_GAP => {
+            let qp = get_qparams(&mut cur.plan)?;
+            check_act_qparams(&qp, &format!("gap op (node {node})"))?;
+            QOp::Gap { qp }
+        }
+        OP_GAPF => QOp::GapF,
+        OP_LINEAR => QOp::Linear(get_linear(cur, node)?),
+        OP_LINEARF => {
+            let what = format!("linear-f32 op (node {node})");
+            let out_dim = cur.plan.u32()? as usize;
+            let in_dim = cur.plan.u32()? as usize;
+            let b_len = cur.plan.u32()? as usize;
+            let count = checked_len(out_dim, in_dim, &what)?;
+            let fb = fallback_cursor(cur)?;
+            let data = fb.f32_vec(count)?;
+            let b = fb.f32_vec(b_len)?;
+            QOp::LinearF { w: Tensor::new(&[out_dim, in_dim], data), b }
+        }
+        OP_UPSAMPLE => {
+            let factor = cur.plan.u32()? as usize;
+            if factor == 0 {
+                return Err(malformed(format!(
+                    "upsample op (node {node}): zero factor"
+                )));
+            }
+            let grid = match cur.plan.u8()? {
+                0 => None,
+                1 => {
+                    let qp = get_qparams(&mut cur.plan)?;
+                    check_act_qparams(
+                        &qp,
+                        &format!("upsample op (node {node})"),
+                    )?;
+                    Some(qp)
+                }
+                t => {
+                    return Err(malformed(format!(
+                        "upsample op (node {node}): bad grid tag {t}"
+                    )))
+                }
+            };
+            QOp::Upsample { factor, grid }
+        }
+        t => return Err(malformed(format!("unknown op tag {t}"))),
+    })
+}
+
+fn decode_plan(c: &ContainerReader) -> AResult<QModel> {
+    let plan_bytes = c.section(SEC_PLAN)?;
+    let wgrid_bytes = c.section(SEC_WGRID)?;
+    let qparams_bytes = c.section(SEC_QPARAMS)?;
+    let bias_bytes = c.section(SEC_BIAS)?;
+    let mult_bytes = c.section(SEC_MULT)?;
+    let fallback_bytes = match c.section_size(SEC_FALLBACK) {
+        Some(_) => Some(c.section(SEC_FALLBACK)?),
+        None => None,
+    };
+    let mut cur = Cursors {
+        plan: ByteReader::new(plan_bytes, SEC_PLAN),
+        wgrid: ByteReader::new(wgrid_bytes, SEC_WGRID),
+        qparams: ByteReader::new(qparams_bytes, SEC_QPARAMS),
+        bias: ByteReader::new(bias_bytes, SEC_BIAS),
+        mult: ByteReader::new(mult_bytes, SEC_MULT),
+        fallback: fallback_bytes
+            .map(|b| ByteReader::new(b, SEC_FALLBACK)),
+    };
+
+    let slots = cur.plan.u32()? as usize;
+    if slots == 0 || slots > MAX_PLAN_DIM {
+        return Err(malformed(format!("implausible slot count {slots}")));
+    }
+    let n_outputs = cur.plan.u32()? as usize;
+    if n_outputs == 0 || n_outputs > slots {
+        return Err(malformed(format!(
+            "implausible output count {n_outputs} (slots {slots})"
+        )));
+    }
+    let mut outputs = Vec::with_capacity(n_outputs);
+    for _ in 0..n_outputs {
+        let slot = cur.plan.u32()? as usize;
+        let node = cur.plan.u32()? as usize;
+        if slot >= slots {
+            return Err(malformed(format!(
+                "output slot {slot} out of range (slots {slots})"
+            )));
+        }
+        outputs.push((slot, node));
+    }
+    let int_layers = cur.plan.u32()? as usize;
+    let f32_layers = cur.plan.u32()? as usize;
+    let fallbacks = cur.plan.u32()? as usize;
+    let n_ops = cur.plan.u32()? as usize;
+    if n_ops == 0 || n_ops > MAX_PLAN_DIM {
+        return Err(malformed(format!("implausible op count {n_ops}")));
+    }
+
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        let node = cur.plan.u32()? as usize;
+        let out = cur.plan.u32()? as usize;
+        let n_ins = cur.plan.u32()? as usize;
+        if n_ins > 8 {
+            return Err(malformed(format!(
+                "op at node {node}: implausible input count {n_ins}"
+            )));
+        }
+        let mut ins = Vec::with_capacity(n_ins);
+        for _ in 0..n_ins {
+            ins.push(cur.plan.u32()? as usize);
+        }
+        let n_free = cur.plan.u32()? as usize;
+        if n_free > slots {
+            return Err(malformed(format!(
+                "op at node {node}: implausible free list ({n_free})"
+            )));
+        }
+        let mut free_after = Vec::with_capacity(n_free);
+        for _ in 0..n_free {
+            free_after.push(cur.plan.u32()? as usize);
+        }
+        for &s in ins.iter().chain(free_after.iter()).chain([out].iter()) {
+            if s >= slots {
+                return Err(malformed(format!(
+                    "op at node {node}: slot {s} out of range \
+                     (slots {slots})"
+                )));
+            }
+        }
+        let op = get_op(&mut cur, node)?;
+        // arity guard: the executor indexes `ins` positionally, so a
+        // too-short list must be rejected here, not panic at run time
+        let min_ins = match &op {
+            QOp::QuantIn { .. } => 0,
+            QOp::Add(_) | QOp::AddF { .. } => 2,
+            _ => 1,
+        };
+        if ins.len() < min_ins {
+            return Err(malformed(format!(
+                "op at node {node}: needs {min_ins} input(s), has {}",
+                ins.len()
+            )));
+        }
+        ops.push(PlannedOp { node, ins, out, op, free_after });
+    }
+
+    // every stream must be fully consumed — leftover bytes mean the
+    // writer and reader disagree about the format
+    cur.plan.expect_end()?;
+    cur.wgrid.expect_end()?;
+    cur.qparams.expect_end()?;
+    cur.bias.expect_end()?;
+    cur.mult.expect_end()?;
+    if let Some(fb) = &cur.fallback {
+        fb.expect_end()?;
+    }
+
+    // the stored summary counters must match what the ops themselves say
+    let counted_fallbacks =
+        ops.iter().filter(|p| !p.op.describe().1).count();
+    let counted_int = ops
+        .iter()
+        .filter(|p| matches!(p.op, QOp::Conv(_) | QOp::Linear(_)))
+        .count();
+    let counted_f32 = ops
+        .iter()
+        .filter(|p| {
+            matches!(p.op, QOp::ConvFp32 { .. } | QOp::LinearF { .. })
+        })
+        .count();
+    if counted_fallbacks != fallbacks
+        || counted_int != int_layers
+        || counted_f32 != f32_layers
+    {
+        return Err(malformed(format!(
+            "summary counters disagree with ops: stored \
+             ({int_layers} int, {f32_layers} f32, {fallbacks} fallback), \
+             counted ({counted_int}, {counted_f32}, {counted_fallbacks})"
+        )));
+    }
+
+    Ok(QModel { ops, slots, outputs, int_layers, f32_layers, fallbacks })
+}

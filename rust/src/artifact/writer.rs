@@ -1,0 +1,320 @@
+//! Compile-side of the artifact subsystem: serialise a planned
+//! [`QModel`] into the `.dfqm` section container.
+//!
+//! The writer walks the plan's ops once, scattering each op's payload
+//! across the typed section streams (see [`super`] for the layout):
+//! small scalars and wiring into `plan`, i8 weight codes into
+//! `wgrid.i8`, per-channel grids into `qparams`, folded i64 biases into
+//! `bias.i64`, fixed-point requant multipliers into `mult.fix`, and f32
+//! fallback tensors into `fallback.f32` (written only when fallback ops
+//! exist). Streams are strictly append-only in op order, so the reader
+//! replays them with plain sequential cursors — no per-op index needed.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context as _, Result};
+
+use crate::dfq::QuantizedModel;
+use crate::nn::qengine::kernels::QConv;
+use crate::nn::qengine::ops::QLinear;
+use crate::nn::qengine::plan::{PlannedOp, QModel, QOp};
+use crate::nn::qengine::{Mult, PlanOpts};
+use crate::nn::SiteCfg;
+use crate::quant::QParams;
+use crate::util::json::Json;
+
+use super::format::{ByteWriter, ContainerWriter};
+use super::{
+    ArtifactInfo, OP_ACTF, OP_ACT_REQUANT, OP_ADDF, OP_ADD_INT, OP_CONV,
+    OP_CONV_F32, OP_GAP, OP_GAPF, OP_LINEAR, OP_LINEARF, OP_QUANT_IN,
+    OP_UPSAMPLE, SEC_BIAS, SEC_FALLBACK, SEC_META, SEC_MULT, SEC_PLAN,
+    SEC_QPARAMS, SEC_WGRID,
+};
+
+/// The section streams an encode pass appends to.
+struct Streams {
+    plan: ByteWriter,
+    wgrid: ByteWriter,
+    qparams: ByteWriter,
+    bias: ByteWriter,
+    mult: ByteWriter,
+    fallback: ByteWriter,
+}
+
+fn put_qparams(w: &mut ByteWriter, qp: &QParams) {
+    w.f32(qp.scale);
+    w.f32(qp.zero_point);
+    w.f32(qp.n_levels);
+}
+
+fn put_site(w: &mut ByteWriter, row: &SiteCfg) {
+    w.f32(row.scale);
+    w.f32(row.zero_point);
+    w.f32(row.n_levels);
+    w.f32(row.clip_hi);
+}
+
+fn put_mult(w: &mut ByteWriter, m: &Mult) {
+    match *m {
+        Mult::Fixed { m, shift } => {
+            w.u8(0);
+            w.i32(m);
+            w.u32(shift);
+        }
+        Mult::Float(f) => {
+            w.u8(1);
+            w.f64(f);
+        }
+    }
+}
+
+fn put_conv(s: &mut Streams, c: &QConv) {
+    let w = &mut s.plan;
+    w.u32(c.c_out as u32);
+    w.u32(c.cig as u32);
+    w.u32(c.kh as u32);
+    w.u32(c.kw as u32);
+    w.u32(c.stride as u32);
+    w.u32(c.pad as u32);
+    w.u32(c.groups as u32);
+    put_qparams(w, &c.in_qp);
+    match &c.epi {
+        Some(e) => {
+            w.u8(1);
+            put_qparams(w, &e.out_qp);
+            w.i32(e.zp_out);
+            w.i32(e.q_lo);
+            w.i32(e.q_hi);
+        }
+        None => w.u8(0),
+    }
+    s.wgrid.i8_slice(&c.w);
+    for o in 0..c.c_out {
+        s.qparams.f32(c.s_w[o]);
+        s.qparams.i32(c.zp_w[o]);
+        s.qparams.f32(c.bias_f[o]);
+    }
+    s.bias.i64_slice(&c.zp_corr);
+    if let Some(e) = &c.epi {
+        s.bias.i64_slice(&e.bias_q);
+        for m in &e.mult {
+            put_mult(&mut s.mult, m);
+        }
+    }
+}
+
+fn put_linear(s: &mut Streams, l: &QLinear) {
+    let w = &mut s.plan;
+    w.u32(l.in_dim as u32);
+    w.u32(l.out_dim as u32);
+    put_qparams(w, &l.in_qp);
+    s.wgrid.i8_slice(&l.wt);
+    for o in 0..l.out_dim {
+        s.qparams.f32(l.s_w[o]);
+        s.qparams.i32(l.zp_w[o]);
+        s.qparams.f32(l.bias[o]);
+    }
+    s.bias.i64_slice(&l.zp_corr);
+}
+
+fn put_op(s: &mut Streams, p: &PlannedOp) {
+    let w = &mut s.plan;
+    w.u32(p.node as u32);
+    w.u32(p.out as u32);
+    w.u32(p.ins.len() as u32);
+    for &i in &p.ins {
+        w.u32(i as u32);
+    }
+    w.u32(p.free_after.len() as u32);
+    for &f in &p.free_after {
+        w.u32(f as u32);
+    }
+    match &p.op {
+        QOp::QuantIn { qp } => {
+            w.u8(OP_QUANT_IN);
+            put_qparams(w, qp);
+        }
+        QOp::Conv(c) => {
+            w.u8(OP_CONV);
+            put_conv(s, c);
+        }
+        QOp::ConvFp32 { w: wt, b, stride, pad, groups } => {
+            w.u8(OP_CONV_F32);
+            w.u32(*stride as u32);
+            w.u32(*pad as u32);
+            w.u32(*groups as u32);
+            w.u32(wt.shape().len() as u32);
+            for &d in wt.shape() {
+                w.u64(d as u64);
+            }
+            w.u32(b.len() as u32);
+            s.fallback.f32_slice(wt.data());
+            s.fallback.f32_slice(b);
+        }
+        QOp::Add(a) => {
+            w.u8(OP_ADD_INT);
+            w.i64(a.ma);
+            w.i64(a.mb);
+            put_qparams(w, &a.a_qp);
+            put_qparams(w, &a.b_qp);
+            put_qparams(w, &a.out_qp);
+        }
+        QOp::AddF { row } => {
+            w.u8(OP_ADDF);
+            put_site(w, row);
+        }
+        QOp::Act(r) => {
+            w.u8(OP_ACT_REQUANT);
+            w.i32(r.q_lo);
+            w.i32(r.q_hi);
+            put_qparams(w, &r.in_qp);
+            put_qparams(w, &r.out_qp);
+            put_mult(&mut s.mult, &r.m);
+        }
+        QOp::ActF { row } => {
+            w.u8(OP_ACTF);
+            put_site(w, row);
+        }
+        QOp::Gap { qp } => {
+            w.u8(OP_GAP);
+            put_qparams(w, qp);
+        }
+        QOp::GapF => w.u8(OP_GAPF),
+        QOp::Linear(l) => {
+            w.u8(OP_LINEAR);
+            put_linear(s, l);
+        }
+        QOp::LinearF { w: wt, b } => {
+            w.u8(OP_LINEARF);
+            w.u32(wt.shape()[0] as u32);
+            w.u32(wt.shape()[1] as u32);
+            w.u32(b.len() as u32);
+            s.fallback.f32_slice(wt.data());
+            s.fallback.f32_slice(b);
+        }
+        QOp::Upsample { factor, grid } => {
+            w.u8(OP_UPSAMPLE);
+            w.u32(*factor as u32);
+            match grid {
+                Some(qp) => {
+                    w.u8(1);
+                    put_qparams(w, qp);
+                }
+                None => w.u8(0),
+            }
+        }
+    }
+}
+
+fn meta_json(info: &ArtifactInfo) -> String {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "format".to_string(),
+        Json::Str("dfq-compiled-artifact".into()),
+    );
+    m.insert("name".to_string(), Json::Str(info.name.clone()));
+    m.insert(
+        "input_shape".to_string(),
+        Json::Arr(
+            info.input_shape.iter().map(|&d| Json::Num(d as f64)).collect(),
+        ),
+    );
+    m.insert(
+        "num_classes".to_string(),
+        Json::Num(info.num_classes as f64),
+    );
+    let mut plan = BTreeMap::new();
+    plan.insert("ops".to_string(), Json::Num(info.ops as f64));
+    plan.insert("slots".to_string(), Json::Num(info.slots as f64));
+    plan.insert(
+        "int_layers".to_string(),
+        Json::Num(info.int_layers as f64),
+    );
+    plan.insert(
+        "f32_layers".to_string(),
+        Json::Num(info.f32_layers as f64),
+    );
+    plan.insert(
+        "fallback_ops".to_string(),
+        Json::Num(info.fallback_ops as f64),
+    );
+    m.insert("plan".to_string(), Json::Obj(plan));
+    Json::Obj(m).to_string()
+}
+
+/// Serialise one planned model (+ its serving metadata) into the full
+/// container image. Pure function of its inputs — no float math, no
+/// clock, no environment — so identical plans produce identical bytes.
+pub fn encode_qmodel(qm: &QModel, info: &ArtifactInfo) -> Vec<u8> {
+    let mut s = Streams {
+        plan: ByteWriter::new(),
+        wgrid: ByteWriter::new(),
+        qparams: ByteWriter::new(),
+        bias: ByteWriter::new(),
+        mult: ByteWriter::new(),
+        fallback: ByteWriter::new(),
+    };
+    s.plan.u32(qm.slots as u32);
+    s.plan.u32(qm.outputs.len() as u32);
+    for &(slot, node) in &qm.outputs {
+        s.plan.u32(slot as u32);
+        s.plan.u32(node as u32);
+    }
+    s.plan.u32(qm.int_layers as u32);
+    s.plan.u32(qm.f32_layers as u32);
+    s.plan.u32(qm.fallbacks as u32);
+    s.plan.u32(qm.ops.len() as u32);
+    for p in &qm.ops {
+        put_op(&mut s, p);
+    }
+
+    let mut c = ContainerWriter::new();
+    c.push(SEC_META, meta_json(info).into_bytes());
+    c.push(SEC_PLAN, s.plan.buf);
+    c.push(SEC_WGRID, s.wgrid.buf);
+    c.push(SEC_QPARAMS, s.qparams.buf);
+    c.push(SEC_BIAS, s.bias.buf);
+    c.push(SEC_MULT, s.mult.buf);
+    // fallback weights are optional: omit the section entirely on a
+    // fully-integer plan (the common case) — readers only ask for it
+    // when they decode a fallback op
+    if !s.fallback.buf.is_empty() {
+        c.push(SEC_FALLBACK, s.fallback.buf);
+    }
+    c.finish()
+}
+
+/// Metadata for a model about to be compiled (pulled off the quantised
+/// model's graph).
+pub(crate) fn info_for(q: &QuantizedModel, qm: &QModel) -> ArtifactInfo {
+    ArtifactInfo {
+        name: q.model.name.clone(),
+        input_shape: q.model.input_shape,
+        num_classes: q.model.num_classes,
+        ops: qm.num_ops(),
+        slots: qm.slots,
+        int_layers: qm.int_layers,
+        f32_layers: qm.f32_layers,
+        fallback_ops: qm.fallback_ops(),
+        bytes: 0,
+    }
+}
+
+/// Compile `q` into an execution plan (per `opts`) and write it to
+/// `path` as a `.dfqm` compiled artifact. Returns the artifact metadata
+/// (including the byte size written).
+pub fn write_artifact(
+    q: &QuantizedModel,
+    opts: PlanOpts,
+    path: impl AsRef<Path>,
+) -> Result<ArtifactInfo> {
+    let qm = q.pack_int8_opts(opts)?;
+    let mut info = info_for(q, &qm);
+    let bytes = encode_qmodel(&qm, &info);
+    info.bytes = bytes.len();
+    std::fs::write(path.as_ref(), bytes).with_context(|| {
+        format!("writing artifact {}", path.as_ref().display())
+    })?;
+    Ok(info)
+}

@@ -179,6 +179,19 @@ impl QuantizedModel {
         let aux = qengine::AuxGrids { preact: self.preact_params.clone() };
         qengine::plan(&self.model, &self.int_weights, &self.act_cfg, &aux, opts)
     }
+
+    /// Compile this model into an execution plan (per `opts`) and write
+    /// it to `path` as a `.dfqm` *compiled artifact* — the one-time
+    /// export side of the load-and-go deployment path
+    /// ([`crate::nn::qengine::QModel::from_artifact`] /
+    /// [`crate::serve::Registry`]). Returns the artifact metadata.
+    pub fn save_artifact(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        opts: qengine::PlanOpts,
+    ) -> Result<crate::artifact::ArtifactInfo> {
+        crate::artifact::write_artifact(self, opts, path)
+    }
 }
 
 impl Prepared {

@@ -71,7 +71,49 @@
 //! });
 //! # drop(server);
 //! ```
+//!
+//! ## Compiled artifacts and multi-model serving
+//!
+//! The whole pipeline above runs *once* at compile time: [`artifact`]
+//! snapshots the planned integer model into a versioned `.dfqm`
+//! container (magic + CRC-checked section table holding the i8 weight
+//! grids, per-channel grids, folded i64 biases and fixed-point
+//! multipliers), and
+//! [`nn::qengine::QModel::from_artifact`] reloads it with zero float
+//! math — outputs are bitwise-identical to the in-memory plan. On top,
+//! [`serve::Registry`] lazy-loads a directory of artifacts and hosts
+//! one batching router per model:
+//!
+//! ```no_run
+//! # use dfq::graph::Model;
+//! # use dfq::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+//! # use dfq::quant::QScheme;
+//! use dfq::nn::qengine::PlanOpts;
+//! use dfq::serve::{Registry, ServeConfig};
+//!
+//! # let model = Model::load("artifacts/micronet_v2.dfqm").unwrap();
+//! # let prepared = quantize_data_free(&model, &DfqConfig::default()).unwrap();
+//! # let q = prepared
+//! #     .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::Analytic, None)
+//! #     .unwrap();
+//! // compile once (CLI: `dfq compile micronet_v2 -o models/micronet.dfqm`)
+//! q.save_artifact("models/micronet.dfqm", PlanOpts { int8_only: true })
+//!     .unwrap();
+//! // serve many (CLI: `dfq serve --models models/`)
+//! let mut reg = Registry::new(ServeConfig::default());
+//! reg.scan_dir("models").unwrap();
+//! let client = reg.client("micronet", "int8").unwrap();
+//! # drop(client);
+//! ```
+//!
+//! Module map: [`graph`] (IR + containers) → [`dfq`] (the paper's
+//! passes) → [`quant`]/[`tensor`] (grids and integer codes) → [`nn`]
+//! (f32 oracle + the [`nn::qengine`] integer planner/kernels) →
+//! [`artifact`] (compiled-plan serialisation) → [`serve`]
+//! (batching servers, router, multi-model registry) → [`runtime`]
+//! (PJRT), with [`eval`]/[`experiments`] reproducing the paper's tables.
 
+pub mod artifact;
 pub mod dfq;
 pub mod eval;
 pub mod experiments;

@@ -4,9 +4,11 @@
 //!   table <1..8|all>      regenerate a paper table
 //!   fig <1|2|3|6>         regenerate a paper figure (CSV series)
 //!   quantize <arch> [...] run the DFQ pipeline, save the quantised model
+//!   compile <arch> [...]  run DFQ once, write a compiled .dfqm artifact
 //!   eval <arch> [...]     evaluate a model (fp32 / int8 / dfq variants)
 //!   serve <arch> [...]    start the batching server + synthetic load
-//!   inspect <arch>        print model structure + channel-range report
+//!   serve --models DIR    multi-model registry serving over artifacts
+//!   inspect <arch|.dfqm>  model structure / compiled-artifact report
 //!
 //! Hand-rolled argument parsing (no clap in the offline crate set).
 
@@ -14,7 +16,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context as _, Result};
 
-use dfq::dfq::{quantize_data_free, BiasCorrMode, DfqConfig};
+use dfq::dfq::{quantize_data_free, BiasCorrMode, DfqConfig, QuantizedModel};
 use dfq::experiments;
 use dfq::graph::Model;
 use dfq::nn::QuantCfg;
@@ -38,10 +40,15 @@ fn usage() -> ! {
            fig <1|2|3|6>               regenerate paper figure CSV\n\
            quantize <arch> [--bits N] [--bc none|analytic|empirical]\n\
                     [--per-channel] [--symmetric] [--out FILE]\n\
+           compile <arch> [--bits N] [--bc none|analytic|empirical]\n\
+                   [--per-channel] [--symmetric] [--allow-fallback]\n\
+                   [-o|--out FILE]     write a compiled .dfqm artifact\n\
            eval <arch> [--mode fp32|baseline|dfq] [--bits N] [--limit N]\n\
            serve <arch> [--requests N] [--rate R] [--batch N]\n\
                  [--backend pjrt|engine|qengine]\n\
-           inspect <arch>\n\
+           serve --models DIR [--requests N] [--rate R] [--batch N]\n\
+                 multi-model registry over compiled artifacts\n\
+           inspect <arch|artifact.dfqm>\n\
          \n\
          env: DFQ_ARTIFACTS (artifacts dir),\n\
               DFQ_BACKEND: serve=pjrt|engine|qengine, eval=pjrt|engine,\n\
@@ -56,8 +63,18 @@ fn flags(rest: &[String]) -> (Vec<&String>, HashMap<String, String>) {
     let mut i = 0;
     while i < rest.len() {
         let a = &rest[i];
-        if let Some(name) = a.strip_prefix("--") {
-            let boolean = matches!(name, "per-channel" | "symmetric");
+        if a == "-o" {
+            // short alias for --out
+            i += 1;
+            kv.insert(
+                "out".to_string(),
+                rest.get(i).cloned().unwrap_or_default(),
+            );
+        } else if let Some(name) = a.strip_prefix("--") {
+            let boolean = matches!(
+                name,
+                "per-channel" | "symmetric" | "allow-fallback"
+            );
             if boolean {
                 kv.insert(name.to_string(), "true".to_string());
             } else {
@@ -90,6 +107,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         "quantize" => cmd_quantize(rest),
+        "compile" => cmd_compile(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "inspect" => cmd_inspect(rest),
@@ -106,9 +124,13 @@ fn parse_bc(s: &str) -> Result<BiasCorrMode> {
     })
 }
 
-fn cmd_quantize(rest: &[String]) -> Result<()> {
-    let (pos, kv) = flags(rest);
-    let arch = pos.first().context("missing <arch>")?.as_str();
+/// Shared front half of `quantize` and `compile`: manifest + model
+/// load, DFQ prepare (with log line), scheme/calibration from flags,
+/// quantise. Returns the quantised model and the weight bit-width.
+fn quantize_from_flags(
+    arch: &str,
+    kv: &HashMap<String, String>,
+) -> Result<(QuantizedModel, u32)> {
     let bits: u32 = kv.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(8);
     let bc = parse_bc(kv.get("bc").map(|s| s.as_str()).unwrap_or("analytic"))?;
     let manifest = Manifest::load(dfq::artifacts_dir())?;
@@ -143,12 +165,41 @@ fn cmd_quantize(rest: &[String]) -> Result<()> {
         _ => None,
     };
     let q = prep.quantize(&scheme, bits, bc, calib.as_ref())?;
+    Ok((q, bits))
+}
+
+fn cmd_quantize(rest: &[String]) -> Result<()> {
+    let (pos, kv) = flags(rest);
+    let arch = pos.first().context("missing <arch>")?.as_str();
+    let (q, bits) = quantize_from_flags(arch, &kv)?;
     let out = kv
         .get("out")
         .cloned()
         .unwrap_or_else(|| format!("{arch}_int{bits}.dfqm"));
     q.model.save(&out)?;
     println!("saved quantised model to {out}");
+    Ok(())
+}
+
+/// `dfq compile <arch>`: run the full DFQ pipeline once and snapshot the
+/// resulting integer execution plan as a `.dfqm` compiled artifact
+/// (served later via `dfq serve --models` with zero pipeline cost).
+fn cmd_compile(rest: &[String]) -> Result<()> {
+    let (pos, kv) = flags(rest);
+    let arch = pos.first().context("missing <arch>")?.as_str();
+    let (q, bits) = quantize_from_flags(arch, &kv)?;
+    // compiled artifacts promise pure-int8 serving by default; an f32
+    // fallback op is an error unless explicitly allowed
+    let opts = dfq::nn::qengine::PlanOpts {
+        int8_only: !kv.contains_key("allow-fallback"),
+    };
+    let out = kv
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("{arch}_int{bits}_plan.dfqm"));
+    let info = q.save_artifact(&out, opts)?;
+    println!("compiled {}", info.summary());
+    println!("saved artifact to {out}");
     Ok(())
 }
 
@@ -195,17 +246,27 @@ fn cmd_eval(rest: &[String]) -> Result<()> {
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let (pos, kv) = flags(rest);
-    let arch = pos
-        .first()
-        .map(|s| s.as_str())
-        .unwrap_or("micronet_v2")
-        .to_string();
     let requests: usize =
         kv.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(256);
     let rate: f64 =
         kv.get("rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
     let batch: usize =
         kv.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    // multi-tenant mode: a directory of compiled artifacts served
+    // through the registry (no manifest, no DFQ pipeline at boot)
+    if let Some(dir) = kv.get("models") {
+        let snaps =
+            dfq::serve::demo::run_registry_load(dir, requests, rate, batch)?;
+        for (name, snap) in snaps {
+            println!("serve[{name}] {}", snap.report());
+        }
+        return Ok(());
+    }
+    let arch = pos
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("micronet_v2")
+        .to_string();
     // explicit flag wins; otherwise DFQ_BACKEND (default pjrt)
     let backend = match kv.get("backend") {
         Some(s) => dfq::serve::demo::ServeBackend::parse(s)?,
@@ -216,7 +277,15 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 
 fn cmd_inspect(rest: &[String]) -> Result<()> {
     let (pos, _) = flags(rest);
-    let arch = pos.first().context("missing <arch>")?.as_str();
+    let arch = pos.first().context("missing <arch|artifact.dfqm>")?.as_str();
+    // a path to a compiled artifact gets the artifact report (a source
+    // model container fails with the typed BadMagic explanation)
+    if arch.ends_with(".dfqm") && std::path::Path::new(arch).is_file() {
+        let info = dfq::artifact::inspect(arch)?;
+        println!("compiled artifact {arch}");
+        println!("  {}", info.summary());
+        return Ok(());
+    }
     let manifest = Manifest::load(dfq::artifacts_dir())?;
     let entry = manifest.arch(arch)?;
     let model = Model::load(manifest.path(&entry.model))?;

@@ -37,10 +37,14 @@ impl Scratch {
 // -- integer GEMM primitives ------------------------------------------------
 
 /// C[m,n] = A[m,k] · B[k,n] with u8 activations × i8 weights → i32
-/// accumulators, written into the caller's buffer. Same saxpy-style loop
-/// and row-parallel chunking as the f32 [`crate::nn::conv::matmul`]; the
-/// `q == 0` skip exploits ReLU sparsity (post-ReLU grids have `zp == 0`,
-/// so code 0 is exactly value 0).
+/// accumulators, written into the caller's buffer. Row-parallel chunking
+/// as in the f32 [`crate::nn::conv::matmul`]; the inner kernel is a
+/// 4-wide k-unroll ([`qgemm_row_unrolled`]) that keeps each output
+/// element in a register across the four partial products. The all-zero
+/// block skip exploits ReLU sparsity (post-ReLU grids have `zp == 0`, so
+/// code 0 is exactly value 0). Results are bitwise-identical to the
+/// scalar saxpy loop: i32 wrapping addition is associative and
+/// commutative, so regrouping the k-sum cannot change any output.
 pub fn qgemm_into(a: &[u8], b: &[i8], m: usize, k: usize, n: usize, c: &mut [i32]) {
     assert!(c.len() == m * n, "qgemm_into: bad output buffer");
     c.fill(0);
@@ -50,18 +54,80 @@ pub fn qgemm_into(a: &[u8], b: &[i8], m: usize, k: usize, n: usize, c: &mut [i32
             let arow = &a[i * k..(i + 1) * k];
             // SAFETY: rows [lo, hi) are written by this chunk only.
             let crow = unsafe { cells.slice(i * n, n) };
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0 {
-                    continue;
-                }
-                let av = av as i32;
-                let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j] as i32;
-                }
-            }
+            qgemm_row_unrolled(arow, b, k, n, crow);
         }
     });
+}
+
+/// One GEMM row, k unrolled by 4: every iteration loads four activation
+/// codes, skips fully-zero blocks, and accumulates the four partial
+/// products into a register before the single store back to `crow[j]`.
+/// The scalar tail handles `k % 4` trailing elements with the per-element
+/// zero skip of the original loop.
+#[inline]
+fn qgemm_row_unrolled(arow: &[u8], b: &[i8], k: usize, n: usize, crow: &mut [i32]) {
+    let mut kk = 0usize;
+    while kk + 4 <= k {
+        let a0 = arow[kk] as i32;
+        let a1 = arow[kk + 1] as i32;
+        let a2 = arow[kk + 2] as i32;
+        let a3 = arow[kk + 3] as i32;
+        if (a0 | a1 | a2 | a3) == 0 {
+            kk += 4;
+            continue;
+        }
+        let b0 = &b[kk * n..(kk + 1) * n];
+        let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+        let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+        let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+        for j in 0..n {
+            let mut t = crow[j];
+            t += a0 * b0[j] as i32;
+            t += a1 * b1[j] as i32;
+            t += a2 * b2[j] as i32;
+            t += a3 * b3[j] as i32;
+            crow[j] = t;
+        }
+        kk += 4;
+    }
+    for kt in kk..k {
+        let av = arow[kt] as i32;
+        if av == 0 {
+            continue;
+        }
+        let brow = &b[kt * n..(kt + 1) * n];
+        for j in 0..n {
+            crow[j] += av * brow[j] as i32;
+        }
+    }
+}
+
+/// Reference scalar GEMM row loop (the pre-unroll kernel), kept for the
+/// bitwise-equivalence tests and the kernel benches.
+pub fn qgemm_into_scalar(
+    a: &[u8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [i32],
+) {
+    assert!(c.len() == m * n, "qgemm_into_scalar: bad output buffer");
+    c.fill(0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j] as i32;
+            }
+        }
+    }
 }
 
 /// Allocating wrapper around [`qgemm_into`].
@@ -239,17 +305,19 @@ pub(crate) fn fold_weight_grids(
 /// Fused requant epilogue: integer bias (zero-point corrections + the
 /// f32 bias folded onto the accumulator grid), per-channel multipliers,
 /// and the clamp implementing both the output grid and (when fused with
-/// an activation) the clipped-ReLU bounds.
+/// an activation) the clipped-ReLU bounds. Fields are crate-visible so
+/// the artifact codec ([`crate::artifact`]) can ship and rebuild packed
+/// layers bit-for-bit without re-deriving anything from f32.
 #[derive(Debug, Clone)]
-struct Epilogue {
+pub(crate) struct Epilogue {
     /// `round(b/(s_in·s_w)) - zp_in·colsum + K·zp_in·zp_w` per channel.
-    bias_q: Vec<i64>,
+    pub(crate) bias_q: Vec<i64>,
     /// `s_in·s_w[o]/s_out` per channel.
-    mult: Vec<Mult>,
-    zp_out: i32,
-    q_lo: i32,
-    q_hi: i32,
-    out_qp: QParams,
+    pub(crate) mult: Vec<Mult>,
+    pub(crate) zp_out: i32,
+    pub(crate) q_lo: i32,
+    pub(crate) q_hi: i32,
+    pub(crate) out_qp: QParams,
 }
 
 fn make_epilogue(
@@ -284,24 +352,24 @@ fn make_epilogue(
 /// requantising) the fused [`Epilogue`].
 #[derive(Debug, Clone)]
 pub struct QConv {
-    c_out: usize,
-    cig: usize,
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    pad: usize,
-    groups: usize,
+    pub(crate) c_out: usize,
+    pub(crate) cig: usize,
+    pub(crate) kh: usize,
+    pub(crate) kw: usize,
+    pub(crate) stride: usize,
+    pub(crate) pad: usize,
+    pub(crate) groups: usize,
     /// groups == 1: transposed (kdim, c_out) for the GEMM;
     /// depthwise: O-major (c, kh·kw).
-    w: Vec<i8>,
+    pub(crate) w: Vec<i8>,
     /// Signed-storage weight zero point (`zp_w - 128`) per out channel.
-    zp_w: Vec<i32>,
-    s_w: Vec<f32>,
+    pub(crate) zp_w: Vec<i32>,
+    pub(crate) s_w: Vec<f32>,
     /// `-zp_in·colsum[o] + K·zp_in·zp_w[o]` per out channel.
-    zp_corr: Vec<i64>,
-    bias_f: Vec<f32>,
-    in_qp: QParams,
-    epi: Option<Epilogue>,
+    pub(crate) zp_corr: Vec<i64>,
+    pub(crate) bias_f: Vec<f32>,
+    pub(crate) in_qp: QParams,
+    pub(crate) epi: Option<Epilogue>,
 }
 
 impl QConv {
@@ -723,6 +791,30 @@ mod tests {
                     .sum();
                 assert_eq!(got[i * n + j], want);
             }
+        }
+    }
+
+    #[test]
+    fn qgemm_unrolled_bitwise_matches_scalar() {
+        // the 4-wide k-unroll must agree with the scalar loop bit for bit
+        // on every shape class: k % 4 == 0..3, all-zero blocks, extremes
+        let mut rng = Rng::new(21);
+        for (m, k, n) in
+            [(1, 1, 1), (3, 4, 5), (5, 7, 3), (2, 9, 8), (4, 18, 11)]
+        {
+            let mut a: Vec<u8> =
+                (0..m * k).map(|_| rng.below(256) as u8).collect();
+            // plant zero runs so whole unroll blocks get skipped
+            for v in a.iter_mut().step_by(3) {
+                *v = 0;
+            }
+            let b: Vec<i8> =
+                (0..k * n).map(|_| rng.below(256) as i8).collect();
+            let mut fast = vec![0i32; m * n];
+            let mut slow = vec![0i32; m * n];
+            qgemm_into(&a, &b, m, k, n, &mut fast);
+            qgemm_into_scalar(&a, &b, m, k, n, &mut slow);
+            assert_eq!(fast, slow, "shape ({m},{k},{n})");
         }
     }
 

@@ -6,8 +6,10 @@
 //! executes the same function on the integer grids themselves, in three
 //! layers:
 //!
-//! * [`kernels`] — mechanism: u8×i8→i32 GEMM (with the
-//!   [`crate::util::parallel`] row chunking of the f32 path), integer
+//! * [`kernels`] — mechanism: u8×i8→i32 GEMM (row-parallel via
+//!   [`crate::util::parallel`]; the inner kernel is a 4-wide k-unroll
+//!   with register accumulators, bitwise-identical to the scalar loop
+//!   kept as [`kernels::qgemm_into_scalar`]), integer
 //!   im2col shared with the f32 engine via
 //!   [`crate::nn::conv::im2col_into`] (the input zero-point is the
 //!   padding value — `zp_in` *represents* 0), gemmlowp zero-point
@@ -28,7 +30,12 @@
 //!   [`QModel`] — every node resolved to a typed `QOp` with
 //!   precomputed multipliers, dense value slots and
 //!   free-after-last-use bookkeeping — so the run loop never asks "does
-//!   this layer have a grid?". `run_all` is batch-parallel over images.
+//!   this layer have a grid?". `run_all` is batch-parallel over images,
+//!   drawing [`Scratch`] arenas from a per-run pool (at most one grown
+//!   arena per worker, recycled across images). A plan also round-trips
+//!   through the `.dfqm` compiled-artifact container
+//!   ([`crate::artifact`], [`QModel::from_artifact`]) with
+//!   bitwise-identical outputs.
 //!
 //! ## Integer coverage matrix
 //!
@@ -56,8 +63,8 @@ pub mod ops;
 pub mod plan;
 
 pub use kernels::{
-    apply_mult, mult_for, qgemm, qgemm_into, rowsums_u8, rowsums_u8_into,
-    EpiSpec, Mult, QConv, Scratch,
+    apply_mult, mult_for, qgemm, qgemm_into, qgemm_into_scalar, rowsums_u8,
+    rowsums_u8_into, EpiSpec, Mult, QConv, Scratch,
 };
 pub use ops::{gap_int, upsample_codes, QAddInt, QLinear, Requantizer};
 pub use plan::{plan, AuxGrids, PlanOpts, QModel};

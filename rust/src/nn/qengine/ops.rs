@@ -57,11 +57,11 @@ pub const ADD_FRAC_BITS: u32 = 20;
 #[derive(Debug, Clone)]
 pub struct QAddInt {
     /// `round(s_a/s_o · 2^20)`, `round(s_b/s_o · 2^20)`.
-    ma: i64,
-    mb: i64,
-    a_qp: QParams,
-    b_qp: QParams,
-    out_qp: QParams,
+    pub(crate) ma: i64,
+    pub(crate) mb: i64,
+    pub(crate) a_qp: QParams,
+    pub(crate) b_qp: QParams,
+    pub(crate) out_qp: QParams,
 }
 
 impl QAddInt {
@@ -151,17 +151,17 @@ pub fn gap_int(x: &QActTensor) -> Result<QActTensor> {
 /// requantise.
 #[derive(Debug, Clone)]
 pub struct QLinear {
-    in_dim: usize,
-    out_dim: usize,
+    pub(crate) in_dim: usize,
+    pub(crate) out_dim: usize,
     /// Transposed (in_dim, out_dim) i8 codes for the GEMM.
-    wt: Vec<i8>,
+    pub(crate) wt: Vec<i8>,
     /// Signed-storage weight zero point (`zp_w - 128`) per output.
-    zp_w: Vec<i32>,
-    s_w: Vec<f32>,
+    pub(crate) zp_w: Vec<i32>,
+    pub(crate) s_w: Vec<f32>,
     /// `-z_in·colsum[o] + I·z_in·zp_w[o]` per output.
-    zp_corr: Vec<i64>,
-    bias: Vec<f32>,
-    in_qp: QParams,
+    pub(crate) zp_corr: Vec<i64>,
+    pub(crate) bias: Vec<f32>,
+    pub(crate) in_qp: QParams,
 }
 
 impl QLinear {
@@ -262,11 +262,11 @@ impl QLinear {
 /// (e.g. a ReLU following a residual add).
 #[derive(Debug, Clone)]
 pub struct Requantizer {
-    m: Mult,
-    q_lo: i32,
-    q_hi: i32,
-    in_qp: QParams,
-    out_qp: QParams,
+    pub(crate) m: Mult,
+    pub(crate) q_lo: i32,
+    pub(crate) q_hi: i32,
+    pub(crate) in_qp: QParams,
+    pub(crate) out_qp: QParams,
 }
 
 impl Requantizer {

@@ -94,7 +94,7 @@ pub(crate) enum QOp {
 
 impl QOp {
     /// (display label, runs on the integer path, output grid).
-    fn describe(&self) -> (String, bool, Option<QParams>) {
+    pub(crate) fn describe(&self) -> (String, bool, Option<QParams>) {
         match self {
             QOp::QuantIn { qp } => {
                 ("quantize-input [int8]".into(), true, Some(*qp))
@@ -172,15 +172,15 @@ impl Val {
 /// (dequantised primary outputs), everything between on integer grids
 /// wherever the graph allows.
 pub struct QModel {
-    ops: Vec<PlannedOp>,
-    slots: usize,
+    pub(crate) ops: Vec<PlannedOp>,
+    pub(crate) slots: usize,
     /// Output slot / node id pairs, in model output order.
-    outputs: Vec<(usize, usize)>,
+    pub(crate) outputs: Vec<(usize, usize)>,
     /// Conv/linear layers executing on the integer path.
     pub int_layers: usize,
     /// Conv/linear layers falling back to f32.
     pub f32_layers: usize,
-    fallbacks: usize,
+    pub(crate) fallbacks: usize,
 }
 
 fn row_qp(row: &SiteCfg) -> QParams {
@@ -564,7 +564,10 @@ impl QModel {
     /// more than one image are split per image and run in parallel
     /// ([`crate::util::parallel`]) — per-image results are
     /// bitwise-identical to [`QModel::run_batch`] because every kernel
-    /// is image-independent.
+    /// is image-independent. Scratch arenas are drawn from a shared
+    /// per-run pool, so at most `workers` arenas are ever grown (instead
+    /// of one allocation set per image) and each is recycled across the
+    /// images its worker processes.
     pub fn run_all(&self, x: &Tensor) -> Result<Vec<Tensor>> {
         let n = x.shape().first().copied().unwrap_or(0);
         if n <= 1 || parallel::workers() <= 1 {
@@ -573,19 +576,28 @@ impl QModel {
         let per: usize = x.shape()[1..].iter().product();
         let mut shape1 = x.shape().to_vec();
         shape1[0] = 1;
+        // per-worker scratch pool: an arm checks an arena out, runs its
+        // image, and returns it grown — reuse is transparent because
+        // every kernel writes before it reads its scratch region
+        let pool: std::sync::Mutex<Vec<Scratch>> =
+            std::sync::Mutex::new(Vec::new());
         let runs: Vec<Option<Result<Vec<Tensor>, String>>> =
             parallel::par_map(n, |i| {
                 let xi = Tensor::new(
                     &shape1,
                     x.data()[i * per..(i + 1) * per].to_vec(),
                 );
+                let mut scratch =
+                    pool.lock().unwrap().pop().unwrap_or_default();
                 // one level of parallelism only: the per-image kernels
                 // run serially inside this arm instead of spawning
                 // workers² threads
-                Some(
-                    parallel::with_nested_serial(|| self.run_batch(&xi))
-                        .map_err(|e| format!("{e:#}")),
-                )
+                let out = parallel::with_nested_serial(|| {
+                    self.run_batch_with(&xi, &mut scratch)
+                })
+                .map_err(|e| format!("{e:#}"));
+                pool.lock().unwrap().push(scratch);
+                Some(out)
             });
         let mut per_image: Vec<Vec<Tensor>> = Vec::with_capacity(n);
         for r in runs {
@@ -611,11 +623,20 @@ impl QModel {
     /// Reference serial path: the whole batch flows through the plan in
     /// one pass (also the n ≤ 1 fast path of [`QModel::run_all`]).
     pub fn run_batch(&self, x: &Tensor) -> Result<Vec<Tensor>> {
+        self.run_batch_with(x, &mut Scratch::new())
+    }
+
+    /// [`QModel::run_batch`] over a caller-provided scratch arena (the
+    /// batch-parallel path hands each worker a pooled arena).
+    pub fn run_batch_with(
+        &self,
+        x: &Tensor,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<Tensor>> {
         let mut arena: Vec<Option<Val>> = Vec::with_capacity(self.slots);
         arena.resize_with(self.slots, || None);
-        let mut scratch = Scratch::new();
         for p in &self.ops {
-            let y = exec(p, x, &arena, &mut scratch)?;
+            let y = exec(p, x, &arena, scratch)?;
             arena[p.out] = Some(y);
             for &s in &p.free_after {
                 arena[s] = None;

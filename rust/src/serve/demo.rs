@@ -14,8 +14,8 @@ use crate::graph::Model;
 use crate::quant::QScheme;
 use crate::runtime::{Manifest, Runtime};
 use crate::serve::{
-    BatchExecutor, EngineExecutor, PjrtExecutor, QuantExecutor, ServeConfig,
-    Server, Snapshot,
+    registry, BatchExecutor, EngineExecutor, PjrtExecutor, QuantExecutor,
+    Registry, ServeConfig, Server, Snapshot,
 };
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -173,4 +173,57 @@ pub fn run_load_quiet(
         rx.recv()??;
     }
     Ok(server.shutdown())
+}
+
+/// Multi-tenant load over a directory of compiled `.dfqm` artifacts:
+/// scan + load every model into a [`Registry`] (no python manifest, no
+/// DFQ re-run — the plans boot straight off the artifact bytes), fire
+/// `requests` Poisson arrivals round-robin across models on the int8
+/// variant, and return per-`model/variant` metrics. Used by
+/// `dfq serve --models dir/` and the serving bench.
+pub fn run_registry_load(
+    dir: &str,
+    requests: usize,
+    rate: f64,
+    batch: usize,
+) -> Result<Vec<(String, Snapshot)>> {
+    let mut reg = Registry::new(ServeConfig {
+        max_batch: batch,
+        max_delay: Duration::from_millis(3),
+        queue_depth: 4096,
+    });
+    let names = reg.scan_dir(dir)?;
+    if names.is_empty() {
+        bail!("no compiled .dfqm artifacts found in {dir}");
+    }
+    // load every model up front (lazy loading is for request-path use;
+    // a load generator wants the boot cost out of the measured window)
+    let mut inputs = Vec::with_capacity(names.len());
+    let mut clients = Vec::with_capacity(names.len());
+    let mut rng = Rng::new(4242);
+    for name in &names {
+        let info = reg.info(name)?;
+        eprintln!("[serve] {name}: {} ({})", info.plan, info.source);
+        let [c, h, w] = info.input_shape;
+        let data: Vec<f32> = (0..c * h * w).map(|_| rng.f32()).collect();
+        inputs.push(Tensor::new(&[1, c, h, w], data));
+        clients.push(reg.client(name, registry::VARIANT_INT8)?);
+    }
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let k = i % names.len();
+        pending.push(clients[k].submit(inputs[k].clone())?);
+        let gap = rng.exp(rate);
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
+        }
+    }
+    for rx in pending {
+        rx.recv()??;
+    }
+    Ok(reg
+        .shutdown()
+        .into_iter()
+        .map(|(model, variant, snap)| (format!("{model}/{variant}"), snap))
+        .collect())
 }

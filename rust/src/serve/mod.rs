@@ -5,11 +5,14 @@
 //! on a [`BatchExecutor`] — either the PJRT executable (production) or
 //! the pure-Rust engine (tests / PJRT-free hosts). Executors are
 //! constructed *inside* their worker thread via a factory closure, so
-//! non-`Send` PJRT handles never cross threads.
+//! non-`Send` PJRT handles never cross threads. For hosting many models
+//! at once from compiled `.dfqm` artifacts, see [`registry`] (the
+//! `dfq serve --models dir/` surface) and `src/serve/README.md`.
 
 pub mod batcher;
 pub mod demo;
 pub mod metrics;
+pub mod registry;
 
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
@@ -24,6 +27,7 @@ use crate::nn::{self, QuantCfg};
 use crate::tensor::Tensor;
 
 pub use metrics::{Metrics, Snapshot};
+pub use registry::{ModelInfo, Registry};
 
 /// Anything that can run a padded batch of images.
 pub trait BatchExecutor {
@@ -86,6 +90,19 @@ impl QuantExecutor {
     ) -> Result<QuantExecutor> {
         let opts = crate::nn::qengine::PlanOpts { int8_only: true };
         Ok(QuantExecutor { qmodel: q.pack_int8_opts(opts)?, max_batch })
+    }
+
+    /// Boot straight from a `.dfqm` compiled artifact — decodes the
+    /// stored plan ([`crate::artifact`]) instead of re-running the DFQ
+    /// pipeline; no manifest, no float math.
+    pub fn from_artifact(
+        path: impl AsRef<std::path::Path>,
+        max_batch: usize,
+    ) -> Result<QuantExecutor> {
+        Ok(QuantExecutor {
+            qmodel: crate::nn::qengine::QModel::from_artifact(path)?,
+            max_batch,
+        })
     }
 }
 

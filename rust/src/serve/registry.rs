@@ -1,0 +1,405 @@
+//! Multi-model serving registry: name → `.dfqm` compiled artifact (or
+//! in-memory quantised model), lazily loaded into one batching
+//! [`Router`] per model.
+//!
+//! The registry is the second deployment surface the artifact subsystem
+//! enables: a host process points at a directory of compiled artifacts
+//! (`dfq serve --models dir/`), and each model boots on first use by
+//! *decoding* its plan ([`crate::artifact`]) instead of re-running the
+//! DFQ pipeline — no python manifest, no float math, and as many models
+//! per process as memory allows. Every model keeps its own worker
+//! thread(s), queue and [`Metrics`](super::Metrics), so tenants are
+//! isolated and snapshots are per (model, variant).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::artifact::Artifact;
+use crate::dfq::QuantizedModel;
+
+use super::{
+    Client, EngineExecutor, QuantExecutor, Router, ServeConfig, Server,
+    Snapshot,
+};
+
+/// The variant every registry model exposes (true-int8 plan).
+pub const VARIANT_INT8: &str = "int8";
+/// The fake-quant f32 oracle variant (in-memory models only).
+pub const VARIANT_F32: &str = "f32";
+
+/// Where a registered model comes from.
+enum Source {
+    /// A `.dfqm` compiled artifact on disk (lazily decoded).
+    File(PathBuf),
+    /// An in-memory quantised model (hosts the f32 oracle variant too).
+    Memory(Box<QuantizedModel>),
+}
+
+/// Serving metadata of a loaded model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Expected input `[C, H, W]`.
+    pub input_shape: [usize; 3],
+    pub num_classes: usize,
+    /// Variant names hosted by this model's router.
+    pub variants: Vec<String>,
+    /// `"artifact"` or `"memory"`.
+    pub source: &'static str,
+    /// Execution-plan summary of the int8 variant.
+    pub plan: String,
+}
+
+struct Hosted {
+    router: Router,
+    info: ModelInfo,
+}
+
+struct Entry {
+    source: Source,
+    hosted: Option<Hosted>,
+}
+
+/// Named multi-model registry over lazily-loaded serving routers.
+pub struct Registry {
+    cfg: ServeConfig,
+    entries: BTreeMap<String, Entry>,
+}
+
+impl Registry {
+    /// `cfg` applies to every server the registry starts.
+    pub fn new(cfg: ServeConfig) -> Registry {
+        Registry { cfg, entries: BTreeMap::new() }
+    }
+
+    /// Register a compiled artifact by path (not loaded until first
+    /// use). Fails on duplicate names.
+    pub fn register_file(
+        &mut self,
+        name: impl Into<String>,
+        path: impl Into<PathBuf>,
+    ) -> Result<()> {
+        self.insert(name.into(), Source::File(path.into()))
+    }
+
+    /// Register an in-memory quantised model (hosts `f32` + `int8`
+    /// variants, like the single-model CLI serve path).
+    pub fn register_quantized(
+        &mut self,
+        name: impl Into<String>,
+        q: QuantizedModel,
+    ) -> Result<()> {
+        self.insert(name.into(), Source::Memory(Box::new(q)))
+    }
+
+    fn insert(&mut self, name: String, source: Source) -> Result<()> {
+        if name.is_empty() {
+            bail!("registry model name must be non-empty");
+        }
+        if self.entries.contains_key(&name) {
+            bail!("model '{name}' already registered");
+        }
+        self.entries.insert(name, Entry { source, hosted: None });
+        Ok(())
+    }
+
+    /// Register every compiled artifact in `dir` (files with a `.dfqm`
+    /// extension *and* the compiled-artifact magic; source-model
+    /// containers sharing the extension are skipped). Names are file
+    /// stems. Returns the registered names in directory order.
+    pub fn scan_dir(&mut self, dir: impl AsRef<Path>) -> Result<Vec<String>> {
+        let dir = dir.as_ref();
+        let mut names = Vec::new();
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| anyhow!("reading {}: {e}", dir.display()))?
+            .filter_map(|r| r.ok().map(|d| d.path()))
+            .filter(|p| {
+                p.extension().and_then(|e| e.to_str()) == Some("dfqm")
+            })
+            .collect();
+        paths.sort();
+        for path in paths {
+            if !has_artifact_magic(&path) {
+                continue; // a source-model .dfqm (magic DFQM), not a plan
+            }
+            let Some(stem) =
+                path.file_stem().and_then(|s| s.to_str()).map(String::from)
+            else {
+                continue;
+            };
+            self.register_file(stem.clone(), &path)?;
+            names.push(stem);
+        }
+        Ok(names)
+    }
+
+    /// All registered model names.
+    pub fn models(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// Names of models whose routers are live.
+    pub fn loaded(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.hosted.is_some())
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Submission handle for one (model, variant); loads the model on
+    /// first use. `variant` is [`VARIANT_INT8`] for every model,
+    /// [`VARIANT_F32`] additionally for in-memory registrations.
+    pub fn client(&mut self, model: &str, variant: &str) -> Result<Client> {
+        self.ensure_loaded(model)?.router.client(variant)
+    }
+
+    /// Serving metadata; loads the model on first use.
+    pub fn info(&mut self, model: &str) -> Result<ModelInfo> {
+        Ok(self.ensure_loaded(model)?.info.clone())
+    }
+
+    /// Metrics snapshot for one (model, variant). Errors when the model
+    /// was never loaded (no traffic means no router to ask).
+    pub fn metrics(&self, model: &str, variant: &str) -> Result<Snapshot> {
+        let e = self
+            .entries
+            .get(model)
+            .ok_or_else(|| anyhow!("no model '{model}' registered"))?;
+        match &e.hosted {
+            Some(h) => h.router.metrics(variant),
+            None => bail!("model '{model}' not loaded"),
+        }
+    }
+
+    /// Stop every live router; returns `(model, variant, snapshot)` per
+    /// hosted server.
+    pub fn shutdown(self) -> Vec<(String, String, Snapshot)> {
+        let mut out = Vec::new();
+        for (name, e) in self.entries {
+            if let Some(h) = e.hosted {
+                for (variant, snap) in h.router.shutdown() {
+                    out.push((name.clone(), variant, snap));
+                }
+            }
+        }
+        out
+    }
+
+    fn ensure_loaded(&mut self, model: &str) -> Result<&Hosted> {
+        let cfg = self.cfg;
+        let e = self
+            .entries
+            .get_mut(model)
+            .ok_or_else(|| anyhow!("no model '{model}' registered"))?;
+        if e.hosted.is_none() {
+            e.hosted = Some(load_entry(cfg, model, &e.source)?);
+        }
+        Ok(e.hosted.as_ref().expect("just loaded"))
+    }
+}
+
+fn has_artifact_magic(path: &Path) -> bool {
+    use std::io::Read as _;
+    let Ok(mut f) = std::fs::File::open(path) else { return false };
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic).is_ok()
+        && magic == crate::artifact::format::MAGIC
+}
+
+fn load_entry(cfg: ServeConfig, name: &str, source: &Source) -> Result<Hosted> {
+    let max_batch = cfg.max_batch;
+    match source {
+        Source::File(path) => {
+            let (ainfo, qmodel) = Artifact::open(path)?.into_parts();
+            let plan = qmodel.summary();
+            let mut router = Router::new();
+            router.add(
+                VARIANT_INT8,
+                Server::start(cfg, move || {
+                    Ok(Box::new(QuantExecutor { qmodel, max_batch }))
+                }),
+            );
+            Ok(Hosted {
+                router,
+                info: ModelInfo {
+                    name: name.to_string(),
+                    input_shape: ainfo.input_shape,
+                    num_classes: ainfo.num_classes,
+                    variants: vec![VARIANT_INT8.to_string()],
+                    source: "artifact",
+                    plan,
+                },
+            })
+        }
+        Source::Memory(q) => {
+            // build the plan eagerly so load errors surface here (and
+            // the summary is reportable), then hand it to the worker
+            let qmodel = q.pack_int8()?;
+            let plan = qmodel.summary();
+            let mut router = Router::new();
+            let (model, act_cfg) = (q.model.clone(), q.act_cfg.clone());
+            router.add(
+                VARIANT_F32,
+                Server::start(cfg, move || {
+                    Ok(Box::new(EngineExecutor {
+                        model,
+                        cfg: act_cfg,
+                        max_batch,
+                    }))
+                }),
+            );
+            router.add(
+                VARIANT_INT8,
+                Server::start(cfg, move || {
+                    Ok(Box::new(QuantExecutor { qmodel, max_batch }))
+                }),
+            );
+            Ok(Hosted {
+                router,
+                info: ModelInfo {
+                    name: name.to_string(),
+                    input_shape: q.model.input_shape,
+                    num_classes: q.model.num_classes,
+                    variants: vec![
+                        VARIANT_F32.to_string(),
+                        VARIANT_INT8.to_string(),
+                    ],
+                    source: "memory",
+                    plan,
+                },
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfq::{quantize_data_free, testutil, BiasCorrMode, DfqConfig};
+    use crate::nn::qengine::PlanOpts;
+    use crate::quant::QScheme;
+    use crate::tensor::Tensor;
+
+    fn quantized(seed: u64) -> QuantizedModel {
+        let m = testutil::residual_block_model(seed);
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        prep.quantize(
+            &QScheme::int8_asymmetric(),
+            8,
+            BiasCorrMode::None,
+            None,
+        )
+        .unwrap()
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("dfq-registry-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn registry_lazy_loads_and_serves_two_models() {
+        let dir = temp_dir("two");
+        let qa = quantized(61);
+        let qb = quantized(62);
+        qa.save_artifact(dir.join("model_a.dfqm"), PlanOpts::default())
+            .unwrap();
+        qb.save_artifact(dir.join("model_b.dfqm"), PlanOpts::default())
+            .unwrap();
+
+        let mut reg = Registry::new(ServeConfig::default());
+        let names = reg.scan_dir(&dir).unwrap();
+        assert_eq!(names, vec!["model_a", "model_b"]);
+        assert!(reg.loaded().is_empty(), "scan must not load anything");
+
+        // interleave concurrent submissions to both models
+        let xa = testutil::random_input(&qa.model, 1, 5);
+        let xb = testutil::random_input(&qb.model, 1, 6);
+        let ca = reg.client("model_a", VARIANT_INT8).unwrap();
+        let cb = reg.client("model_b", VARIANT_INT8).unwrap();
+        assert_eq!(reg.loaded().len(), 2);
+        let pending: Vec<_> = (0..4)
+            .flat_map(|_| {
+                vec![
+                    ("a", ca.submit(xa.clone()).unwrap()),
+                    ("b", cb.submit(xb.clone()).unwrap()),
+                ]
+            })
+            .collect();
+
+        let want_a = qa.pack_int8().unwrap().run(&xa).unwrap();
+        let want_b = qb.pack_int8().unwrap().run(&xb).unwrap();
+        for (tag, rx) in pending {
+            let y = rx.recv().unwrap().unwrap();
+            let want = if tag == "a" { &want_a } else { &want_b };
+            assert_eq!(
+                y.data(),
+                want.data(),
+                "registry output drifted from the in-memory plan ({tag})"
+            );
+        }
+        let snaps = reg.shutdown();
+        assert_eq!(snaps.len(), 2);
+        for (_, _, s) in &snaps {
+            assert_eq!(s.completed, 4);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn memory_models_host_both_variants() {
+        let q = quantized(63);
+        let x = testutil::random_input(&q.model, 1, 9);
+        let mut reg = Registry::new(ServeConfig::default());
+        reg.register_quantized("res", q).unwrap();
+        let info = reg.info("res").unwrap();
+        assert_eq!(info.variants, vec!["f32", "int8"]);
+        assert_eq!(info.source, "memory");
+        let y_f32 =
+            reg.client("res", VARIANT_F32).unwrap().infer(x.clone()).unwrap();
+        let y_int8 =
+            reg.client("res", VARIANT_INT8).unwrap().infer(x).unwrap();
+        assert_eq!(y_f32.shape(), y_int8.shape());
+        assert!(reg.metrics("res", VARIANT_INT8).unwrap().completed == 1);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn scan_skips_source_model_containers() {
+        let dir = temp_dir("skip");
+        let q = quantized(64);
+        // a *source* model container shares the extension but not the magic
+        q.model.save(dir.join("source_model.dfqm")).unwrap();
+        q.save_artifact(dir.join("compiled.dfqm"), PlanOpts::default())
+            .unwrap();
+        let mut reg = Registry::new(ServeConfig::default());
+        assert_eq!(reg.scan_dir(&dir).unwrap(), vec!["compiled"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_names_and_variants_error() {
+        let mut reg = Registry::new(ServeConfig::default());
+        assert!(reg.client("ghost", VARIANT_INT8).is_err());
+        assert!(reg.metrics("ghost", VARIANT_INT8).is_err());
+        let q = quantized(65);
+        reg.register_quantized("m", q).unwrap();
+        assert!(reg.register_quantized("m", quantized(66)).is_err());
+        assert!(reg.client("m", "no-such-variant").is_err());
+        // bad file registrations fail at load, not registration
+        reg.register_file("broken", "/definitely/missing.dfqm").unwrap();
+        assert!(reg.client("broken", VARIANT_INT8).is_err());
+        let x = Tensor::full(&[1, 3, 8, 8], 0.5);
+        assert!(reg
+            .client("m", VARIANT_INT8)
+            .unwrap()
+            .infer(x)
+            .is_ok());
+        reg.shutdown();
+    }
+}

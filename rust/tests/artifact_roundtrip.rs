@@ -1,0 +1,214 @@
+//! Artifact round-trip properties: compile → write → read → plan must be
+//! bitwise-identical to the in-memory pipeline across models and
+//! quantisation schemes; corrupt files must surface as typed
+//! [`ArtifactError`]s, never panics; and the registry must serve several
+//! reloaded models concurrently with unchanged outputs.
+
+use std::path::PathBuf;
+
+use dfq::artifact::{Artifact, ArtifactError};
+use dfq::dfq::{quantize_data_free, testutil, BiasCorrMode, DfqConfig};
+use dfq::nn::qengine::{PlanOpts, QModel};
+use dfq::quant::QScheme;
+use dfq::serve::{registry, Registry, ServeConfig};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("dfq-roundtrip-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn quantize(
+    model: &dfq::graph::Model,
+    scheme: &QScheme,
+    act_bits: u32,
+) -> dfq::dfq::QuantizedModel {
+    let prep = quantize_data_free(model, &DfqConfig::default()).unwrap();
+    prep.quantize(scheme, act_bits, BiasCorrMode::Analytic, None).unwrap()
+}
+
+/// Property: for every (model, scheme, bit-width) combination, the plan
+/// reloaded from a written artifact produces bit-for-bit the logits of
+/// the in-memory plan — on a multi-image batch, so the batch-parallel
+/// path (with its pooled scratch arenas) is exercised too.
+#[test]
+fn roundtrip_is_bitwise_identical_across_schemes() {
+    let dir = temp_dir("schemes");
+    let schemes = [
+        ("asym", QScheme::int8_asymmetric()),
+        ("sym", QScheme::int8_symmetric()),
+        ("perchan", QScheme::per_channel(8)),
+        ("w6", QScheme::int8_asymmetric().with_bits(6)),
+    ];
+    let mut cases = 0;
+    for seed in [101u64, 102] {
+        let models = [
+            ("two_layer", testutil::two_layer_model(seed, true)),
+            ("resblock", testutil::residual_block_model(seed)),
+        ];
+        for (mname, model) in models {
+            for (sname, scheme) in &schemes {
+                let q = quantize(&model, scheme, 8);
+                let qm_mem = q
+                    .pack_int8_opts(PlanOpts { int8_only: true })
+                    .unwrap_or_else(|e| {
+                        panic!("{mname}/{sname}: fallback in plan: {e:#}")
+                    });
+                let path =
+                    dir.join(format!("{mname}_{sname}_{seed}.dfqm"));
+                let info = q
+                    .save_artifact(&path, PlanOpts { int8_only: true })
+                    .unwrap();
+                assert_eq!(info.fallback_ops, 0, "{mname}/{sname}");
+                let qm_disk = QModel::from_artifact(&path).unwrap();
+                assert_eq!(qm_disk.num_ops(), qm_mem.num_ops());
+
+                let x = testutil::random_input(&model, 3, seed + 7);
+                let y_mem = qm_mem.run_all(&x).unwrap();
+                let y_disk = qm_disk.run_all(&x).unwrap();
+                assert_eq!(y_mem.len(), y_disk.len());
+                for (a, b) in y_mem.iter().zip(&y_disk) {
+                    assert_eq!(a.shape(), b.shape());
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "{mname}/{sname} seed {seed}: reloaded plan \
+                         drifted bitwise"
+                    );
+                }
+                cases += 1;
+            }
+        }
+    }
+    assert_eq!(cases, 16);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance path: compile two models to `.dfqm`, reload through the
+/// registry, serve both concurrently in one process, and compare every
+/// response bit-for-bit against the in-memory pipeline.
+#[test]
+fn registry_serves_two_reloaded_models_bitwise_identically() {
+    let dir = temp_dir("registry");
+    let ma = testutil::residual_block_model(201);
+    let mb = testutil::two_layer_model(202, true);
+    let qa = quantize(&ma, &QScheme::int8_asymmetric(), 8);
+    let qb = quantize(&mb, &QScheme::per_channel(8), 8);
+    qa.save_artifact(dir.join("alpha.dfqm"), PlanOpts { int8_only: true })
+        .unwrap();
+    qb.save_artifact(dir.join("beta.dfqm"), PlanOpts { int8_only: true })
+        .unwrap();
+
+    let mut reg = Registry::new(ServeConfig::default());
+    assert_eq!(reg.scan_dir(&dir).unwrap(), vec!["alpha", "beta"]);
+    let ca = reg.client("alpha", registry::VARIANT_INT8).unwrap();
+    let cb = reg.client("beta", registry::VARIANT_INT8).unwrap();
+    assert_eq!(reg.loaded().len(), 2, "both models live in one process");
+
+    let xa = testutil::random_input(&ma, 1, 11);
+    let xb = testutil::random_input(&mb, 1, 12);
+    // submit to both models before receiving anything: both routers are
+    // in flight at once
+    let pending: Vec<_> = (0..6)
+        .map(|i| {
+            if i % 2 == 0 {
+                ("alpha", ca.submit(xa.clone()).unwrap())
+            } else {
+                ("beta", cb.submit(xb.clone()).unwrap())
+            }
+        })
+        .collect();
+    let want_a = qa.pack_int8().unwrap().run(&xa).unwrap();
+    let want_b = qb.pack_int8().unwrap().run(&xb).unwrap();
+    for (tag, rx) in pending {
+        let y = rx.recv().unwrap().unwrap();
+        let want = if tag == "alpha" { &want_a } else { &want_b };
+        assert_eq!(y.data(), want.data(), "{tag} served output drifted");
+    }
+    for (model, completed) in [("alpha", 3), ("beta", 3)] {
+        let snap = reg.metrics(model, registry::VARIANT_INT8).unwrap();
+        assert_eq!(snap.completed, completed);
+    }
+    reg.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Corruption matrix: every damaged file yields the matching typed
+/// error — and in particular never a panic.
+#[test]
+fn corrupt_artifacts_yield_typed_errors() {
+    let dir = temp_dir("corrupt");
+    let model = testutil::residual_block_model(301);
+    let q = quantize(&model, &QScheme::int8_asymmetric(), 8);
+    let path = dir.join("good.dfqm");
+    q.save_artifact(&path, PlanOpts::default()).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    let write = |tag: &str, bytes: &[u8]| -> PathBuf {
+        let p = dir.join(format!("{tag}.dfqm"));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    };
+
+    // bad magic
+    let mut bad = good.clone();
+    bad[0..4].copy_from_slice(b"XXXX");
+    assert!(matches!(
+        Artifact::open_typed(&write("magic", &bad)),
+        Err(ArtifactError::BadMagic { .. })
+    ));
+
+    // a *source model* container is not a compiled artifact
+    let src = dir.join("source.dfqm");
+    q.model.save(&src).unwrap();
+    assert!(matches!(
+        Artifact::open_typed(&src),
+        Err(ArtifactError::BadMagic { found }) if &found == b"DFQM"
+    ));
+
+    // version skew
+    let mut bad = good.clone();
+    bad[4..8].copy_from_slice(&7u32.to_le_bytes());
+    assert!(matches!(
+        Artifact::open_typed(&write("version", &bad)),
+        Err(ArtifactError::UnsupportedVersion { found: 7 })
+    ));
+
+    // truncation at several depths: header, section table, payloads
+    for keep in [8, 40, good.len() / 2, good.len() - 9] {
+        let p = write(&format!("trunc{keep}"), &good[..keep]);
+        let err = Artifact::open_typed(&p).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                ArtifactError::Truncated { .. }
+                    | ArtifactError::CrcMismatch { .. }
+            ),
+            "truncation to {keep} bytes gave {err}"
+        );
+    }
+
+    // flipped payload byte -> CRC mismatch (flip inside the last section)
+    let mut bad = good.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x55;
+    assert!(matches!(
+        Artifact::open_typed(&write("crc", &bad)),
+        Err(ArtifactError::CrcMismatch { .. })
+    ));
+
+    // missing file -> typed io error
+    assert!(matches!(
+        Artifact::open_typed(&dir.join("nonexistent.dfqm")),
+        Err(ArtifactError::Io { .. })
+    ));
+
+    // the registry propagates load failures as errors, not panics
+    let mut reg = Registry::new(ServeConfig::default());
+    reg.register_file("bad", dir.join("magic.dfqm")).unwrap();
+    assert!(reg.client("bad", registry::VARIANT_INT8).is_err());
+    reg.shutdown();
+
+    std::fs::remove_dir_all(&dir).ok();
+}
