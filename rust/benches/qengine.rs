@@ -165,40 +165,48 @@ fn main() {
     }
 
     section("end-to-end model — fake-quant f32 engine vs int8 plan");
-    // residual-block model: dense + depthwise + requantise-add + GAP +
-    // linear head, planned with zero f32 fallback ops
-    let m = testutil::residual_block_model(77);
-    let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
-    let q = prep
-        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
-        .unwrap();
-    let qm = q.pack_int8().unwrap();
-    println!("plan: {}", qm.summary());
-    for batch in [1usize, 8, 32] {
-        let x = testutil::random_input(&m, batch, 1234 + batch as u64);
-        let imgs = batch as f64;
-        Bench::new(format!("f32  e2e resblock batch {batch}"))
-            .run(|| {
-                std::hint::black_box(
-                    nn::forward(&q.model, &x, &q.act_cfg).unwrap(),
-                );
-            })
-            .with_units(imgs, "img")
-            .print()
-            .print_json();
-        Bench::new(format!("int8 e2e resblock batch {batch}"))
-            .run(|| {
-                std::hint::black_box(qm.run_all(&x).unwrap());
-            })
-            .with_units(imgs, "img")
-            .print()
-            .print_json();
-        Bench::new(format!("int8 e2e resblock batch {batch} (serial)"))
-            .run(|| {
-                std::hint::black_box(qm.run_batch(&x).unwrap());
-            })
-            .with_units(imgs, "img")
-            .print()
-            .print_json();
+    // two model shapes: the residual block (dense + depthwise +
+    // requantise-add + GAP + head) and the inception-style block
+    // (max-pool stem + avg-pool branch + requantise-concat), both
+    // planned with zero f32 fallback ops
+    let models = [
+        ("resblock", testutil::residual_block_model(77)),
+        ("inception", testutil::inception_block_model(78)),
+    ];
+    for (name, m) in models {
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        let q = prep
+            .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+            .unwrap();
+        let qm = q.pack_int8().unwrap();
+        println!("plan[{name}]: {}", qm.summary());
+        assert_eq!(qm.fallback_ops(), 0, "{name} must stay fully integer");
+        for batch in [1usize, 8, 32] {
+            let x = testutil::random_input(&m, batch, 1234 + batch as u64);
+            let imgs = batch as f64;
+            Bench::new(format!("f32  e2e {name} batch {batch}"))
+                .run(|| {
+                    std::hint::black_box(
+                        nn::forward(&q.model, &x, &q.act_cfg).unwrap(),
+                    );
+                })
+                .with_units(imgs, "img")
+                .print()
+                .print_json();
+            Bench::new(format!("int8 e2e {name} batch {batch}"))
+                .run(|| {
+                    std::hint::black_box(qm.run_all(&x).unwrap());
+                })
+                .with_units(imgs, "img")
+                .print()
+                .print_json();
+            Bench::new(format!("int8 e2e {name} batch {batch} (serial)"))
+                .run(|| {
+                    std::hint::black_box(qm.run_batch(&x).unwrap());
+                })
+                .with_units(imgs, "img")
+                .print()
+                .print_json();
+        }
     }
 }

@@ -7,7 +7,7 @@
 //!
 //! ```text
 //! offset 0   magic          b"DFQP"           (4 bytes)
-//!        4   version        u32 LE            (currently 1)
+//!        4   version        u32 LE            (currently 2; 1 still reads)
 //!        8   n_sections     u32 LE
 //!       12   reserved       u32 LE            (0)
 //!       16   section table  n_sections × 40-byte entries:
@@ -31,8 +31,13 @@ use std::path::Path;
 /// `.dfqm` kinds can never be confused at load time.
 pub const MAGIC: [u8; 4] = *b"DFQP";
 
-/// Current container format version.
-pub const VERSION: u32 = 1;
+/// Current container format version. Version 2 added the concat/pool2d
+/// op tags (12–15) to the plan stream; version-1 files are a strict
+/// subset and still load.
+pub const VERSION: u32 = 2;
+
+/// Oldest format version this build still reads.
+pub const MIN_VERSION: u32 = 1;
 
 /// Payload alignment (matches the source-model container).
 const ALIGN: usize = 64;
@@ -90,7 +95,7 @@ impl fmt::Display for ArtifactError {
             ArtifactError::UnsupportedVersion { found } => write!(
                 f,
                 "unsupported artifact version {found} (this build reads \
-                 version {VERSION})"
+                 versions {MIN_VERSION}..={VERSION})"
             ),
             ArtifactError::Truncated { what } => {
                 write!(f, "truncated artifact: {what}")
@@ -255,7 +260,7 @@ impl ContainerReader {
             return Err(ArtifactError::BadMagic { found: magic });
         }
         let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             return Err(ArtifactError::UnsupportedVersion { found: version });
         }
         let n = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;

@@ -71,6 +71,14 @@ pub(crate) const OP_GAPF: u8 = 8;
 pub(crate) const OP_LINEAR: u8 = 9;
 pub(crate) const OP_LINEARF: u8 = 10;
 pub(crate) const OP_UPSAMPLE: u8 = 11;
+pub(crate) const OP_CONCAT_INT: u8 = 12;
+pub(crate) const OP_CONCATF: u8 = 13;
+pub(crate) const OP_POOL_INT: u8 = 14;
+pub(crate) const OP_POOLF: u8 = 15;
+
+// Pool-kind tags inside pool op payloads.
+pub(crate) const POOL_MAX: u8 = 0;
+pub(crate) const POOL_AVG: u8 = 1;
 
 /// Serving-relevant metadata of a compiled artifact (the `meta` section
 /// plus the on-disk size).

@@ -14,8 +14,11 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::graph::{PoolKind, MAX_CONCAT_INPUTS, MAX_POOL_DIM};
 use crate::nn::qengine::kernels::{Epilogue, QConv};
-use crate::nn::qengine::ops::{QAddInt, QLinear, Requantizer};
+use crate::nn::qengine::ops::{
+    QAddInt, QConcatInt, QLinear, QPoolInt, Requantizer, MAX_REQUANT_MULT,
+};
 use crate::nn::qengine::plan::{PlannedOp, QModel, QOp};
 use crate::nn::qengine::Mult;
 use crate::nn::SiteCfg;
@@ -26,8 +29,9 @@ use crate::util::json::Json;
 use super::format::{malformed, AResult, ByteReader, ContainerReader};
 use super::{
     ArtifactError, ArtifactInfo, OP_ACTF, OP_ACT_REQUANT, OP_ADDF,
-    OP_ADD_INT, OP_CONV, OP_CONV_F32, OP_GAP, OP_GAPF, OP_LINEAR,
-    OP_LINEARF, OP_QUANT_IN, OP_UPSAMPLE, SEC_BIAS, SEC_FALLBACK, SEC_META,
+    OP_ADD_INT, OP_CONCATF, OP_CONCAT_INT, OP_CONV, OP_CONV_F32, OP_GAP,
+    OP_GAPF, OP_LINEAR, OP_LINEARF, OP_POOLF, OP_POOL_INT, OP_QUANT_IN,
+    OP_UPSAMPLE, POOL_AVG, POOL_MAX, SEC_BIAS, SEC_FALLBACK, SEC_META,
     SEC_MULT, SEC_PLAN, SEC_QPARAMS, SEC_WGRID,
 };
 
@@ -263,6 +267,59 @@ fn get_mult(r: &mut ByteReader, what: &str) -> AResult<Mult> {
     Ok(m)
 }
 
+/// The packer invariant on Q20 requantise multipliers
+/// ([`crate::nn::qengine::ops`]'s `MAX_REQUANT_MULT`): positive and far
+/// from the i64 overflow edge of `m · (q − z)`.
+fn check_requant_mult(m: i64, what: &str) -> AResult<()> {
+    if m <= 0 {
+        return Err(malformed(format!(
+            "{what}: non-positive multiplier {m}"
+        )));
+    }
+    if m > MAX_REQUANT_MULT {
+        return Err(malformed(format!(
+            "{what}: implausible multiplier {m}"
+        )));
+    }
+    Ok(())
+}
+
+fn get_pool_kind(r: &mut ByteReader, what: &str) -> AResult<PoolKind> {
+    match r.u8()? {
+        POOL_MAX => Ok(PoolKind::Max),
+        POOL_AVG => Ok(PoolKind::Avg),
+        t => Err(malformed(format!("{what}: bad pool kind tag {t}"))),
+    }
+}
+
+/// Decode and validate a pool window: the same invariants
+/// `QPoolInt::pack` asserts (no zero dims, no all-padding windows, and
+/// the packer's plausibility cap — an unbounded `k` from a corrupt file
+/// would underflow `h + 2·pad − k` at run time, which is a panic, not a
+/// typed error).
+fn get_pool_window(
+    r: &mut ByteReader,
+    what: &str,
+) -> AResult<(usize, usize, usize)> {
+    let k = r.u32()? as usize;
+    let stride = r.u32()? as usize;
+    let pad = r.u32()? as usize;
+    if k == 0 || stride == 0 {
+        return Err(malformed(format!("{what}: zero window/stride")));
+    }
+    if k > MAX_POOL_DIM || stride > MAX_POOL_DIM {
+        return Err(malformed(format!(
+            "{what}: implausible pool window (k {k}, stride {stride})"
+        )));
+    }
+    if pad >= k {
+        return Err(malformed(format!(
+            "{what}: pad {pad} >= window {k} (empty windows)"
+        )));
+    }
+    Ok((k, stride, pad))
+}
+
 fn fallback_cursor<'a, 'c>(
     cur: &'c mut Cursors<'a>,
 ) -> AResult<&'c mut ByteReader<'a>> {
@@ -412,11 +469,8 @@ fn get_op(cur: &mut Cursors, node: usize) -> AResult<QOp> {
             let what = format!("add op (node {node})");
             let ma = cur.plan.i64()?;
             let mb = cur.plan.i64()?;
-            if ma <= 0 || mb <= 0 {
-                return Err(malformed(format!(
-                    "{what}: non-positive multipliers ({ma}, {mb})"
-                )));
-            }
+            check_requant_mult(ma, &what)?;
+            check_requant_mult(mb, &what)?;
             let a_qp = get_qparams(&mut cur.plan)?;
             let b_qp = get_qparams(&mut cur.plan)?;
             let out_qp = get_qparams(&mut cur.plan)?;
@@ -429,6 +483,47 @@ fn get_op(cur: &mut Cursors, node: usize) -> AResult<QOp> {
             let row = get_site(&mut cur.plan)?;
             check_site(&row, &format!("add-f32 op (node {node})"))?;
             QOp::AddF { row }
+        }
+        OP_CONCAT_INT => {
+            let what = format!("concat op (node {node})");
+            let n_in = cur.plan.u32()? as usize;
+            if !(2..=MAX_CONCAT_INPUTS).contains(&n_in) {
+                return Err(malformed(format!(
+                    "{what}: implausible input count {n_in}"
+                )));
+            }
+            let mut ms = Vec::with_capacity(n_in);
+            let mut in_qps = Vec::with_capacity(n_in);
+            for i in 0..n_in {
+                let m = cur.plan.i64()?;
+                check_requant_mult(m, &format!("{what}, input {i}"))?;
+                let qp = get_qparams(&mut cur.plan)?;
+                check_act_qparams(&qp, &what)?;
+                ms.push(m);
+                in_qps.push(qp);
+            }
+            let out_qp = get_qparams(&mut cur.plan)?;
+            check_act_qparams(&out_qp, &what)?;
+            QOp::Concat(QConcatInt { ms, in_qps, out_qp })
+        }
+        OP_CONCATF => {
+            let row = get_site(&mut cur.plan)?;
+            check_site(&row, &format!("concat-f32 op (node {node})"))?;
+            QOp::ConcatF { row }
+        }
+        OP_POOL_INT => {
+            let what = format!("pool op (node {node})");
+            let kind = get_pool_kind(&mut cur.plan, &what)?;
+            let (k, stride, pad) = get_pool_window(&mut cur.plan, &what)?;
+            let qp = get_qparams(&mut cur.plan)?;
+            check_act_qparams(&qp, &what)?;
+            QOp::Pool(QPoolInt { kind, k, stride, pad, qp })
+        }
+        OP_POOLF => {
+            let what = format!("pool-f32 op (node {node})");
+            let kind = get_pool_kind(&mut cur.plan, &what)?;
+            let (k, stride, pad) = get_pool_window(&mut cur.plan, &what)?;
+            QOp::PoolF { kind, k, stride, pad }
         }
         OP_ACT_REQUANT => {
             let what = format!("act op (node {node})");
@@ -547,7 +642,9 @@ fn decode_plan(c: &ContainerReader) -> AResult<QModel> {
         let node = cur.plan.u32()? as usize;
         let out = cur.plan.u32()? as usize;
         let n_ins = cur.plan.u32()? as usize;
-        if n_ins > 8 {
+        // concat fans in one slot per branch — the widest legal arity
+        // (exact per-tag bounds are enforced after the op decodes)
+        if n_ins > MAX_CONCAT_INPUTS {
             return Err(malformed(format!(
                 "op at node {node}: implausible input count {n_ins}"
             )));
@@ -575,16 +672,22 @@ fn decode_plan(c: &ContainerReader) -> AResult<QModel> {
             }
         }
         let op = get_op(&mut cur, node)?;
-        // arity guard: the executor indexes `ins` positionally, so a
-        // too-short list must be rejected here, not panic at run time
-        let min_ins = match &op {
-            QOp::QuantIn { .. } => 0,
-            QOp::Add(_) | QOp::AddF { .. } => 2,
-            _ => 1,
+        // per-tag arity guard: the executor indexes `ins` positionally,
+        // so a too-short list must be rejected here, not panic at run
+        // time — and extra slots mean a malformed plan. Only concat
+        // legitimately fans in more than two inputs (exactly one slot
+        // per multiplier on the integer form).
+        let (min_ins, max_ins) = match &op {
+            QOp::QuantIn { .. } => (0, 0),
+            QOp::Add(_) | QOp::AddF { .. } => (2, 2),
+            QOp::Concat(c) => (c.ms.len(), c.ms.len()),
+            QOp::ConcatF { .. } => (2, MAX_CONCAT_INPUTS),
+            _ => (1, 1),
         };
-        if ins.len() < min_ins {
+        if ins.len() < min_ins || ins.len() > max_ins {
             return Err(malformed(format!(
-                "op at node {node}: needs {min_ins} input(s), has {}",
+                "op at node {node}: {} input slot(s), expected \
+                 {min_ins}..={max_ins}",
                 ins.len()
             )));
         }

@@ -24,12 +24,15 @@ use crate::nn::SiteCfg;
 use crate::quant::QParams;
 use crate::util::json::Json;
 
+use crate::graph::PoolKind;
+
 use super::format::{ByteWriter, ContainerWriter};
 use super::{
-    ArtifactInfo, OP_ACTF, OP_ACT_REQUANT, OP_ADDF, OP_ADD_INT, OP_CONV,
-    OP_CONV_F32, OP_GAP, OP_GAPF, OP_LINEAR, OP_LINEARF, OP_QUANT_IN,
-    OP_UPSAMPLE, SEC_BIAS, SEC_FALLBACK, SEC_META, SEC_MULT, SEC_PLAN,
-    SEC_QPARAMS, SEC_WGRID,
+    ArtifactInfo, OP_ACTF, OP_ACT_REQUANT, OP_ADDF, OP_ADD_INT,
+    OP_CONCATF, OP_CONCAT_INT, OP_CONV, OP_CONV_F32, OP_GAP, OP_GAPF,
+    OP_LINEAR, OP_LINEARF, OP_POOLF, OP_POOL_INT, OP_QUANT_IN,
+    OP_UPSAMPLE, POOL_AVG, POOL_MAX, SEC_BIAS, SEC_FALLBACK, SEC_META,
+    SEC_MULT, SEC_PLAN, SEC_QPARAMS, SEC_WGRID,
 };
 
 /// The section streams an encode pass appends to.
@@ -53,6 +56,13 @@ fn put_site(w: &mut ByteWriter, row: &SiteCfg) {
     w.f32(row.zero_point);
     w.f32(row.n_levels);
     w.f32(row.clip_hi);
+}
+
+fn put_pool_kind(w: &mut ByteWriter, kind: PoolKind) {
+    w.u8(match kind {
+        PoolKind::Max => POOL_MAX,
+        PoolKind::Avg => POOL_AVG,
+    });
 }
 
 fn put_mult(w: &mut ByteWriter, m: &Mult) {
@@ -163,6 +173,34 @@ fn put_op(s: &mut Streams, p: &PlannedOp) {
         QOp::AddF { row } => {
             w.u8(OP_ADDF);
             put_site(w, row);
+        }
+        QOp::Concat(c) => {
+            w.u8(OP_CONCAT_INT);
+            w.u32(c.ms.len() as u32);
+            for (m, qp) in c.ms.iter().zip(&c.in_qps) {
+                w.i64(*m);
+                put_qparams(w, qp);
+            }
+            put_qparams(w, &c.out_qp);
+        }
+        QOp::ConcatF { row } => {
+            w.u8(OP_CONCATF);
+            put_site(w, row);
+        }
+        QOp::Pool(pl) => {
+            w.u8(OP_POOL_INT);
+            put_pool_kind(w, pl.kind);
+            w.u32(pl.k as u32);
+            w.u32(pl.stride as u32);
+            w.u32(pl.pad as u32);
+            put_qparams(w, &pl.qp);
+        }
+        QOp::PoolF { kind, k, stride, pad } => {
+            w.u8(OP_POOLF);
+            put_pool_kind(w, *kind);
+            w.u32(*k as u32);
+            w.u32(*stride as u32);
+            w.u32(*pad as u32);
         }
         QOp::Act(r) => {
             w.u8(OP_ACT_REQUANT);

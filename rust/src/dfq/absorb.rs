@@ -16,9 +16,20 @@ use super::equalize::{find_pairs, ClePair};
 /// Absorb high biases across every ReLU-connected CLE pair.
 /// Returns the number of channels absorbed.
 pub fn absorb_high_biases(model: &mut Model, n_sigma: f32) -> Result<usize> {
+    Ok(absorb_high_biases_traced(model, n_sigma)?.0)
+}
+
+/// [`absorb_high_biases`] also reporting the absorbed-bias *mass* — the
+/// sum of the per-channel shifts `c` moved into downstream biases (the
+/// pass-diagnostics gauge for how much activation range absorption won).
+pub fn absorb_high_biases_traced(
+    model: &mut Model,
+    n_sigma: f32,
+) -> Result<(usize, f64)> {
     assert!(model.folded);
     let pairs = find_pairs(model);
     let mut absorbed = 0usize;
+    let mut mass = 0f64;
     for p in &pairs {
         // only plain ReLU satisfies the shift identity; ReLU6's upper
         // clip breaks it (the paper replaces ReLU6 beforehand).
@@ -29,14 +40,20 @@ pub fn absorb_high_biases(model: &mut Model, n_sigma: f32) -> Result<usize> {
             },
             None => continue,
         }
-        absorbed += absorb_pair(model, p, n_sigma)?;
+        let (n, m) = absorb_pair(model, p, n_sigma)?;
+        absorbed += n;
+        mass += m;
     }
-    Ok(absorbed)
+    Ok((absorbed, mass))
 }
 
-fn absorb_pair(model: &mut Model, p: &ClePair, n_sigma: f32) -> Result<usize> {
+fn absorb_pair(
+    model: &mut Model,
+    p: &ClePair,
+    n_sigma: f32,
+) -> Result<(usize, f64)> {
     let Some(st) = model.act_stats.get(&p.a) else {
-        return Ok(0); // no BN statistics -> nothing data-free to absorb
+        return Ok((0, 0.0)); // no BN statistics -> nothing data-free to absorb
     };
     let c: Vec<f32> = st
         .mean
@@ -45,7 +62,7 @@ fn absorb_pair(model: &mut Model, p: &ClePair, n_sigma: f32) -> Result<usize> {
         .map(|(m, s)| (m - n_sigma * s).max(0.0))
         .collect();
     if c.iter().all(|&x| x == 0.0) {
-        return Ok(0);
+        return Ok((0, 0.0));
     }
 
     // b1 -= c ; stats.mean -= c
@@ -95,7 +112,10 @@ fn absorb_pair(model: &mut Model, p: &ClePair, n_sigma: f32) -> Result<usize> {
             b2.data_mut()[o] += acc as f32;
         }
     }
-    Ok(c.iter().filter(|&&x| x > 0.0).count())
+    Ok((
+        c.iter().filter(|&&x| x > 0.0).count(),
+        c.iter().map(|&x| x as f64).sum(),
+    ))
 }
 
 #[cfg(test)]

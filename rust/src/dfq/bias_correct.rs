@@ -23,16 +23,29 @@ use crate::tensor::Tensor;
 /// FP32 reference `orig` using data-free statistics. Both models must be
 /// the *same prepared graph* (post fold/CLE/absorption).
 pub fn analytic(quantized: &mut Model, orig: &Model) -> Result<usize> {
+    Ok(analytic_traced(quantized, orig)?.0)
+}
+
+/// [`analytic`] also reporting the correction *magnitude* — the summed
+/// |Δb| folded into biases across all layers (the pass-diagnostics gauge
+/// for how much biased error quantisation introduced).
+pub fn analytic_traced(
+    quantized: &mut Model,
+    orig: &Model,
+) -> Result<(usize, f64)> {
     let stats = crate::graph::stats::propagate(orig)?;
     let mut corrected = 0usize;
+    let mut magnitude = 0f64;
     let layers: Vec<usize> =
         quantized.layers().iter().map(|n| n.id).collect();
     for id in layers {
         let input = quantized.node(id).inputs[0];
         let ex = &stats[&input].mean;
-        corrected += correct_layer(quantized, orig, id, ex)?;
+        let (n, m) = correct_layer(quantized, orig, id, ex)?;
+        corrected += n;
+        magnitude += m;
     }
-    Ok(corrected)
+    Ok((corrected, magnitude))
 }
 
 /// Subtract ε·E[x] from layer `id`'s bias. Returns 1 if a correction was
@@ -43,7 +56,7 @@ fn correct_layer(
     orig: &Model,
     id: usize,
     ex: &[f32],
-) -> Result<usize> {
+) -> Result<(usize, f64)> {
     let n = quantized.node(id);
     match &n.op {
         Op::Conv { w, b, out_ch, .. } => {
@@ -77,7 +90,7 @@ fn correct_layer(
             for o in 0..out_ch {
                 b.data_mut()[o] -= delta[o] as f32;
             }
-            Ok(1)
+            Ok((1, delta.iter().map(|d| d.abs()).sum()))
         }
         Op::Linear { w, b, in_dim, out_dim } => {
             let (w_name, b_name, in_dim, out_dim) =
@@ -95,9 +108,9 @@ fn correct_layer(
             for o in 0..out_dim {
                 b.data_mut()[o] -= delta[o] as f32;
             }
-            Ok(1)
+            Ok((1, delta.iter().map(|d| d.abs()).sum()))
         }
-        _ => Ok(0),
+        _ => Ok((0, 0.0)),
     }
 }
 
@@ -112,11 +125,21 @@ pub fn empirical(
     orig: &Model,
     calib: &Tensor,
 ) -> Result<usize> {
+    Ok(empirical_traced(quantized, orig, calib)?.0)
+}
+
+/// [`empirical`] also reporting the summed |Δb| correction magnitude.
+pub fn empirical_traced(
+    quantized: &mut Model,
+    orig: &Model,
+    calib: &Tensor,
+) -> Result<(usize, f64)> {
     let cfg_f = QuantCfg::fp32(orig);
     let fp_means = nn::preact_channel_means(orig, calib, &cfg_f)?;
     let layers: Vec<usize> =
         quantized.layers().iter().map(|n| n.id).collect();
     let mut corrected = 0usize;
+    let mut magnitude = 0f64;
     for id in layers {
         let cfg_q = QuantCfg::fp32(quantized);
         let q_means = layer_preact_means(quantized, calib, &cfg_q, id)?;
@@ -129,10 +152,11 @@ pub fn empirical(
         let b = quantized.tensor_mut(&b_name)?;
         for (o, (&qm, &fm)) in q_means.iter().zip(fp).enumerate() {
             b.data_mut()[o] -= qm - fm;
+            magnitude += (qm - fm).abs() as f64;
         }
         corrected += 1;
     }
-    Ok(corrected)
+    Ok((corrected, magnitude))
 }
 
 fn layer_preact_means(

@@ -15,10 +15,18 @@ pub const BN_EPS: f32 = 1e-5;
 /// Fold all BatchNorm nodes into their producing convolutions.
 /// Returns a new, folded model; the input is left untouched.
 pub fn fold(model: &Model) -> Result<Model> {
-    if model.folded {
-        return Ok(model.clone());
-    }
     let mut m = model.clone();
+    fold_in_place(&mut m)?;
+    Ok(m)
+}
+
+/// [`fold`] operating on the model in place — the pass-manager entry
+/// point, avoiding a second deep copy of the tensor table when the
+/// caller already owns a working clone. No-op on a folded model.
+pub fn fold_in_place(m: &mut Model) -> Result<()> {
+    if m.folded {
+        return Ok(());
+    }
     let bn_nodes: Vec<usize> = m
         .nodes
         .iter()
@@ -128,7 +136,7 @@ pub fn fold(model: &Model) -> Result<Model> {
     }
     m.folded = true;
     m.validate()?;
-    Ok(m)
+    Ok(())
 }
 
 #[cfg(test)]

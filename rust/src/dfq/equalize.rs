@@ -159,7 +159,11 @@ pub fn equalize_pair(model: &mut Model, pair: &ClePair) -> Result<f32> {
         .iter()
         .zip(&r2)
         .map(|(&a, &b)| {
-            if a <= 0.0 || b <= 0.0 {
+            // dead channels (zero-range filters) and non-finite ranges
+            // would give s = 0 / ∞ / NaN from r1·r2 = 0 — pin them to
+            // the identity scale instead of corrupting the pair
+            // (is_finite first: it also rejects NaN ranges).
+            if !a.is_finite() || !b.is_finite() || a <= 0.0 || b <= 0.0 {
                 1.0
             } else {
                 (a / b).sqrt() // = (1/r2) * sqrt(r1*r2), eq. 11
@@ -173,17 +177,31 @@ pub fn equalize_pair(model: &mut Model, pair: &ClePair) -> Result<f32> {
 /// Iterate equalization over all pairs until convergence (paper §4.1.2).
 /// Returns the number of sweeps performed.
 pub fn equalize(model: &mut Model, max_iters: usize, tol: f32) -> Result<usize> {
+    Ok(equalize_traced(model, max_iters, tol)?.len())
+}
+
+/// [`equalize`] keeping the convergence trace: one entry per sweep, the
+/// worst |log s| applied across all pairs in that sweep (the gauge the
+/// stop rule tests). `trace.len()` is the sweep count; the last entry is
+/// `< tol` iff the iteration converged before `max_iters`.
+pub fn equalize_traced(
+    model: &mut Model,
+    max_iters: usize,
+    tol: f32,
+) -> Result<Vec<f32>> {
     let pairs = find_pairs(model);
-    for it in 0..max_iters {
+    let mut trace = Vec::new();
+    for _ in 0..max_iters {
         let mut worst = 0f32;
         for p in &pairs {
             worst = worst.max(equalize_pair(model, p)?);
         }
+        trace.push(worst);
         if worst < tol {
-            return Ok(it + 1);
+            break;
         }
     }
-    Ok(max_iters)
+    Ok(trace)
 }
 
 #[cfg(test)]
@@ -234,6 +252,57 @@ mod tests {
         for (a, b) in r1.iter().zip(&r2) {
             assert!((a - b).abs() < 1e-3 * a.max(*b), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn dead_channel_gets_identity_scale() {
+        // an all-zero output filter has r1 = 0; eq. 11 would give
+        // s = sqrt(0 / r2) = 0 and 1/s = inf — the guard must pin s = 1
+        // and leave every weight finite
+        let mut m = prepared();
+        let pair = find_pairs(&m)[0];
+        let (wa, wb) = match (&m.node(pair.a).op, &m.node(pair.b).op) {
+            (Op::Conv { w: a, .. }, Op::Conv { w: b, .. }) => {
+                (a.clone(), b.clone())
+            }
+            _ => unreachable!(),
+        };
+        {
+            let w = m.tensor_mut(&wa).unwrap();
+            for x in w.out_channel_mut(0) {
+                *x = 0.0;
+            }
+        }
+        let before_b = m.tensor(&wb).unwrap().clone();
+        let worst = equalize_pair(&mut m, &pair).unwrap();
+        assert!(worst.is_finite(), "non-finite convergence gauge");
+        let w_a = m.tensor(&wa).unwrap();
+        assert!(
+            w_a.out_channel(0).iter().all(|&x| x == 0.0),
+            "dead channel must stay dead"
+        );
+        assert!(
+            w_a.data().iter().all(|x| x.is_finite()),
+            "layer a weights went non-finite"
+        );
+        let w_b = m.tensor(&wb).unwrap();
+        assert!(w_b.data().iter().all(|x| x.is_finite()));
+        // s == 1 for the dead channel: b's matching in-channel untouched
+        let i_count = w_b.shape()[1];
+        let spatial: usize = w_b.shape()[2..].iter().product();
+        for o in 0..w_b.shape()[0] {
+            let base = o * i_count * spatial;
+            for s in 0..spatial {
+                assert_eq!(
+                    w_b.data()[base + s],
+                    before_b.data()[base + s],
+                    "in-channel 0 of layer b was rescaled"
+                );
+            }
+        }
+        // a full equalize run over the damaged model still converges
+        let sweeps = equalize(&mut m, 50, 1e-4).unwrap();
+        assert!(sweeps >= 1);
     }
 
     #[test]

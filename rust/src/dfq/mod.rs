@@ -3,10 +3,15 @@
 //! high-bias absorption → weight quantisation → bias correction →
 //! data-free activation ranges.
 //!
-//! Each stage is an independent pass over [`crate::graph::Model`] (its
-//! own module below); [`quantize_data_free`] composes them per a
-//! [`DfqConfig`], and [`Prepared::quantize`] produces the deployable
-//! quantised model + activation config for the PJRT executable.
+//! Each stage is a registered [`pass::Pass`] over
+//! [`crate::graph::Model`] (the rewrite itself lives in its own module
+//! below); [`pass::PassManager`] composes them per a [`DfqConfig`] and
+//! records per-pass diagnostics (weight-range spread, the CLE
+//! convergence trace, absorbed-bias mass, bias-correction magnitude)
+//! into a [`pass::PipelineReport`] — printed by `dfq report <arch>`.
+//! [`quantize_data_free`] runs the FP32-preserving pipeline, and
+//! [`Prepared::quantize`] the quantisation-side one, producing the
+//! deployable quantised model + activation config for the engines.
 
 pub mod absorb;
 pub mod bias_correct;
@@ -14,16 +19,19 @@ pub mod bn_fold;
 pub mod clip;
 pub mod clipped_normal;
 pub mod equalize;
+pub mod pass;
 pub mod relu6;
 /// Test fixtures (also used by the integration/property test targets).
 pub mod testutil;
 
 use anyhow::Result;
 
-use crate::graph::{Model, Op};
+use crate::graph::Model;
 use crate::nn::{qengine, QuantCfg};
 use crate::quant::{self, QParams, QScheme};
 use crate::tensor::QTensor;
+
+pub use pass::{Pass, PassCx, PassManager, PassReport, PipelineReport};
 
 /// Bias-correction mode (paper §4.2 / appendix D).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -108,24 +116,46 @@ pub struct PrepareLog {
 
 /// Run the FP32-side DFQ stages (everything before quantisation).
 pub fn quantize_data_free(model: &Model, cfg: &DfqConfig) -> Result<Prepared> {
-    let mut m = bn_fold::fold(model)?;
-    let mut log = PrepareLog::default();
-    if cfg.replace_relu6 {
-        log.relu6_replaced = relu6::replace_relu6(&mut m);
-    }
-    if cfg.equalize {
-        log.cle_pairs = equalize::find_pairs(&m).len();
-        log.cle_sweeps = equalize::equalize(&mut m, cfg.eq_iters, cfg.eq_tol)?;
-    }
-    if cfg.absorb_bias {
-        log.absorbed_channels =
-            absorb::absorb_high_biases(&mut m, cfg.absorb_sigma)?;
-    }
+    Ok(quantize_data_free_report(model, cfg)?.0)
+}
+
+/// [`quantize_data_free`] through the instrumented [`PassManager`],
+/// also returning the per-pass [`PipelineReport`] (weight-range spread,
+/// CLE convergence trace, absorbed-bias mass). The produced model is
+/// bit-for-bit the one [`quantize_data_free`] always produced — each
+/// pass invokes the same rewrite in the same order.
+pub fn quantize_data_free_report(
+    model: &Model,
+    cfg: &DfqConfig,
+) -> Result<(Prepared, PipelineReport)> {
+    let mut m = model.clone();
+    let mut cx = PassCx::default();
+    let mut report =
+        PassManager::fp32_pipeline(cfg).run(&mut m, &mut cx)?;
+    // the unclipped reference is snapshotted between absorption and
+    // clipping: bias correction measures ε against the pre-clip function
     let reference = m.clone();
-    if let Some(c) = cfg.weight_clip {
-        log.clipped_weights = clip::clip_weights(&mut m, c)?;
+    report.extend(PassManager::clip_pipeline(cfg).run(&mut m, &mut cx)?);
+    let log = PrepareLog::from_report(&report);
+    Ok((Prepared { model: m, reference, log }, report))
+}
+
+impl PrepareLog {
+    /// Back-compat summary derived from the structured pass reports.
+    fn from_report(report: &PipelineReport) -> PrepareLog {
+        let changed =
+            |name: &str| report.get(name).map(|p| p.changed).unwrap_or(0);
+        PrepareLog {
+            relu6_replaced: changed("relu6"),
+            cle_pairs: report
+                .get("equalize")
+                .and_then(|p| p.metric("pairs"))
+                .unwrap_or(0.0) as usize,
+            cle_sweeps: changed("equalize"),
+            absorbed_channels: changed("absorb"),
+            clipped_weights: changed("clip"),
+        }
     }
-    Ok(Prepared { model: m, reference, log })
 }
 
 /// Everything needed to run the quantised model on any engine.
@@ -205,40 +235,30 @@ impl Prepared {
         bc: BiasCorrMode,
         calib: Option<&crate::tensor::Tensor>,
     ) -> Result<QuantizedModel> {
+        Ok(self.quantize_report(scheme, act_bits, bc, calib)?.0)
+    }
+
+    /// [`Prepared::quantize`] through the instrumented quantisation-side
+    /// pass pipeline (`quantize` → `bias_correct`), also returning the
+    /// per-pass [`PipelineReport`] (retained int layers, |Δb|
+    /// correction magnitude). Output is bit-for-bit identical to
+    /// [`Prepared::quantize`].
+    pub fn quantize_report(
+        &self,
+        scheme: &QScheme,
+        act_bits: u32,
+        bc: BiasCorrMode,
+        calib: Option<&crate::tensor::Tensor>,
+    ) -> Result<(QuantizedModel, PipelineReport)> {
         let mut q = self.model.clone();
-        let mut weight_params = Vec::new();
-        let mut int_weights = Vec::new();
-        let layer_ids: Vec<usize> = q.layers().iter().map(|n| n.id).collect();
-        for id in layer_ids {
-            let w = match &q.node(id).op {
-                Op::Conv { w, .. } | Op::Linear { w, .. } => w.clone(),
-                _ => unreachable!(),
-            };
-            let t = q.tensors.get_mut(&w).expect("weight tensor");
-            if scheme.bits <= 8 {
-                // retain the integer grid the fake-quant image comes
-                // from — the int8 engine executes these codes directly
-                let (ps, codes) =
-                    quant::quantize_weights_retaining(t, scheme)?;
-                weight_params.push((id, ps));
-                int_weights.push((id, codes));
-            } else {
-                weight_params.push((id, quant::quantize_weights(t, scheme)));
-            }
-        }
-        match bc {
-            BiasCorrMode::None => {}
-            BiasCorrMode::Analytic => {
-                bias_correct::analytic(&mut q, &self.reference)?;
-            }
-            BiasCorrMode::Empirical => {
-                let calib = calib
-                    .ok_or_else(|| anyhow::anyhow!(
-                        "empirical bias correction requires calibration data"
-                    ))?;
-                bias_correct::empirical(&mut q, &self.reference, calib)?;
-            }
-        }
+        let mut cx = PassCx {
+            reference: Some(&self.reference),
+            calib,
+            ..PassCx::default()
+        };
+        let report =
+            PassManager::quantize_pipeline(scheme, bc).run(&mut q, &mut cx)?;
+        let PassCx { weight_params, int_weights, .. } = cx;
         // one stats propagation feeds both the activation-site rows and
         // the pre-activation grids (the latter only when the int8 path
         // itself is available: bits <= 8 and quantised activations)
@@ -264,13 +284,16 @@ impl Prepared {
             };
             (act_cfg, preact)
         };
-        Ok(QuantizedModel {
-            model: q,
-            weight_params,
-            int_weights,
-            act_cfg,
-            preact_params,
-        })
+        Ok((
+            QuantizedModel {
+                model: q,
+                weight_params,
+                int_weights,
+                act_cfg,
+                preact_params,
+            },
+            report,
+        ))
     }
 
     /// Bias-correct the *unquantised* prepared model against its
@@ -302,6 +325,7 @@ impl Prepared {
 mod tests {
     use super::*;
     use crate::dfq::testutil::{random_input, two_layer_model};
+    use crate::graph::Op;
     use crate::nn;
 
     #[test]

@@ -1,0 +1,514 @@
+//! Compiler-style pass manager for the DFQ pipeline.
+//!
+//! The paper's Fig. 4 pipeline (BN fold → ReLU6 replace → cross-layer
+//! equalization → bias absorption → quantise → bias correction) used to
+//! be a hard-coded call sequence inside `quantize_data_free`. This module
+//! restructures it as composable graph rewrites: each stage is a [`Pass`]
+//! with a name and a `run(&mut Model, &mut PassCx)` entry point; a
+//! [`PassManager`] composes the registered passes from a
+//! [`DfqConfig`]/scheme and records per-pass diagnostics into a
+//! structured [`PipelineReport`]:
+//!
+//! * per-channel weight-range spread before/after each rewrite (the
+//!   paper's Fig. 2 pathology in one number),
+//! * the CLE convergence trace — worst |log s| per sweep,
+//! * absorbed-bias mass, and the bias-correction |Δb| magnitude.
+//!
+//! `dfq report <arch>` prints the report as a table and as the shared
+//! one-line JSON records (`BenchResult`-style), so the driver can track
+//! pass behaviour across PRs mechanically. The composition is
+//! bit-for-bit identical to the old call sequence: every pass invokes
+//! exactly the function the monolith called, in the same order —
+//! diagnostics only *read* the model.
+
+use anyhow::{bail, Result};
+
+use crate::graph::{Model, Op};
+use crate::quant::{self, QParams, QScheme};
+use crate::tensor::{QTensor, Tensor};
+use crate::util::table::Table;
+
+use super::{
+    absorb, bias_correct, bn_fold, clip, equalize, relu6, BiasCorrMode,
+    DfqConfig,
+};
+
+// -- context & reports --------------------------------------------------------
+
+/// Shared state across one pipeline run: inputs the quantisation-side
+/// passes read (FP32 reference, calibration batch) and the side outputs
+/// the quantize pass produces (per-layer grids + retained integer
+/// codes — the planner's inputs).
+#[derive(Default)]
+pub struct PassCx<'a> {
+    /// FP32 reference model the bias-correction passes measure ε against
+    /// (required by [`BiasCorrectPass`] with a non-`None` mode).
+    pub reference: Option<&'a Model>,
+    /// Calibration batch (empirical bias correction only).
+    pub calib: Option<&'a Tensor>,
+    /// Side output of [`QuantizePass`]: per-layer weight grids.
+    pub weight_params: Vec<(usize, Vec<QParams>)>,
+    /// Side output of [`QuantizePass`]: retained integer weight codes
+    /// (empty when the scheme is wider than 8 bits).
+    pub int_weights: Vec<(usize, QTensor)>,
+}
+
+/// What one pass did: a primary change count, ordered scalar metrics,
+/// and an optional convergence trace.
+#[derive(Debug, Clone, Default)]
+pub struct PassReport {
+    pub name: &'static str,
+    /// Pass-specific primary count (nodes folded, sweeps run, channels
+    /// absorbed, elements clipped, layers corrected...).
+    pub changed: usize,
+    /// Ordered `(key, value)` diagnostics.
+    pub metrics: Vec<(&'static str, f64)>,
+    /// Per-iteration convergence gauge (CLE: max |log s| per sweep).
+    pub trace: Vec<f32>,
+}
+
+impl PassReport {
+    fn new(name: &'static str) -> PassReport {
+        PassReport { name, ..PassReport::default() }
+    }
+
+    fn push(&mut self, key: &'static str, v: f64) {
+        self.metrics.push((key, v));
+    }
+
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+}
+
+/// Ordered per-pass diagnostics of one pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    pub passes: Vec<PassReport>,
+}
+
+impl PipelineReport {
+    pub fn get(&self, name: &str) -> Option<&PassReport> {
+        self.passes.iter().find(|p| p.name == name)
+    }
+
+    pub fn extend(&mut self, other: PipelineReport) {
+        self.passes.extend(other.passes);
+    }
+
+    /// Render as an aligned ASCII table (one row per pass) followed by
+    /// the CLE convergence trace, when one was recorded.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(
+            "DFQ pass diagnostics",
+            &["pass", "changed", "diagnostics"],
+        );
+        for p in &self.passes {
+            let diag = p
+                .metrics
+                .iter()
+                .map(|(k, v)| format!("{k}={v:.4}"))
+                .collect::<Vec<_>>()
+                .join("  ");
+            t.row(&[p.name.to_string(), p.changed.to_string(), diag]);
+        }
+        let mut out = t.render();
+        for p in &self.passes {
+            if !p.trace.is_empty() {
+                out.push_str(&format!(
+                    "{} convergence (max |log s| per sweep): {}\n",
+                    p.name,
+                    p.trace
+                        .iter()
+                        .map(|x| format!("{x:.4}"))
+                        .collect::<Vec<_>>()
+                        .join(" -> ")
+                ));
+            }
+        }
+        out
+    }
+
+    /// One machine-readable JSON record per pass (the one-line format
+    /// shared with `BenchResult::json`), for the CI / driver trajectory.
+    /// Non-finite diagnostics (a pathological model can produce them)
+    /// render as `null` — JSON has no Infinity/NaN literals and this
+    /// stream must stay parseable for the CI smoke step.
+    pub fn json_lines(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v:e}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let mut out = String::new();
+        for p in &self.passes {
+            let metrics = p
+                .metrics
+                .iter()
+                .map(|(k, v)| format!("{k:?}:{}", num(*v)))
+                .collect::<Vec<_>>()
+                .join(",");
+            let trace = p
+                .trace
+                .iter()
+                .map(|&x| num(x as f64))
+                .collect::<Vec<_>>()
+                .join(",");
+            out.push_str(&format!(
+                "{{\"pass\":{:?},\"changed\":{},\"metrics\":{{{metrics}}},\
+                 \"trace\":[{trace}]}}\n",
+                p.name, p.changed
+            ));
+        }
+        out
+    }
+}
+
+// -- diagnostics --------------------------------------------------------------
+
+/// Worst per-layer ratio `max_c r_c / min_c r_c` over conv/linear
+/// weights (`r_c = 2·max|W_c|` per output channel, dead channels
+/// skipped) — the cross-channel range pathology CLE exists to fix, as a
+/// single number: 1.0 is perfectly equalised.
+pub fn weight_range_spread(m: &Model) -> f64 {
+    let mut worst = 1.0f64;
+    for n in m.layers() {
+        let w = match &n.op {
+            Op::Conv { w, .. } | Op::Linear { w, .. } => match m.tensor(w) {
+                Ok(t) => t,
+                Err(_) => continue,
+            },
+            _ => unreachable!(),
+        };
+        let mut hi = 0f64;
+        let mut lo = f64::INFINITY;
+        for (a, b) in w.channel_ranges() {
+            let r = 2.0 * a.abs().max(b.abs()) as f64;
+            if r > 0.0 {
+                hi = hi.max(r);
+                lo = lo.min(r);
+            }
+        }
+        if lo.is_finite() && lo > 0.0 {
+            worst = worst.max(hi / lo);
+        }
+    }
+    worst
+}
+
+// -- the pass trait & manager -------------------------------------------------
+
+/// One composable DFQ rewrite: a stable name and a graph transformation
+/// that reports what it did.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, m: &mut Model, cx: &mut PassCx) -> Result<PassReport>;
+}
+
+/// An ordered pass pipeline composed from configuration.
+#[derive(Default)]
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    pub fn new() -> PassManager {
+        PassManager::default()
+    }
+
+    /// Builder-style registration.
+    pub fn register(mut self, p: impl Pass + 'static) -> PassManager {
+        self.passes.push(Box::new(p));
+        self
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    /// Run every pass in registration order, collecting reports.
+    pub fn run(&self, m: &mut Model, cx: &mut PassCx) -> Result<PipelineReport> {
+        let mut report = PipelineReport::default();
+        for p in &self.passes {
+            report.passes.push(p.run(m, cx)?);
+        }
+        Ok(report)
+    }
+
+    /// The FP32-function-preserving stages of the paper pipeline, per
+    /// config: BN fold, then (each conditional) ReLU6 replacement,
+    /// cross-layer equalization, high-bias absorption.
+    pub fn fp32_pipeline(cfg: &DfqConfig) -> PassManager {
+        let mut pm = PassManager::new().register(BnFoldPass);
+        if cfg.replace_relu6 {
+            pm = pm.register(Relu6Pass);
+        }
+        if cfg.equalize {
+            pm = pm.register(EqualizePass {
+                iters: cfg.eq_iters,
+                tol: cfg.eq_tol,
+            });
+        }
+        if cfg.absorb_bias {
+            pm = pm.register(AbsorbPass { sigma: cfg.absorb_sigma });
+        }
+        pm
+    }
+
+    /// The weight-clipping baseline stage (runs *after* the reference
+    /// snapshot — clipping changes the FP32 function).
+    pub fn clip_pipeline(cfg: &DfqConfig) -> PassManager {
+        let mut pm = PassManager::new();
+        if let Some(c) = cfg.weight_clip {
+            pm = pm.register(ClipPass { c });
+        }
+        pm
+    }
+
+    /// The quantisation-side stages: weight quantisation (retaining
+    /// integer codes on ≤ 8-bit schemes) and bias correction.
+    pub fn quantize_pipeline(scheme: &QScheme, bc: BiasCorrMode) -> PassManager {
+        PassManager::new()
+            .register(QuantizePass { scheme: *scheme })
+            .register(BiasCorrectPass { mode: bc })
+    }
+}
+
+// -- the registered passes ----------------------------------------------------
+
+/// BatchNorm folding ([`bn_fold::fold`]).
+pub struct BnFoldPass;
+
+impl Pass for BnFoldPass {
+    fn name(&self) -> &'static str {
+        "bn_fold"
+    }
+
+    fn run(&self, m: &mut Model, _cx: &mut PassCx) -> Result<PassReport> {
+        let before_nodes = m.nodes.len();
+        bn_fold::fold_in_place(m)?;
+        let mut r = PassReport::new(self.name());
+        r.changed = before_nodes - m.nodes.len();
+        r.push("spread_after", weight_range_spread(m));
+        Ok(r)
+    }
+}
+
+/// ReLU6 → ReLU replacement ([`relu6::replace_relu6`]).
+pub struct Relu6Pass;
+
+impl Pass for Relu6Pass {
+    fn name(&self) -> &'static str {
+        "relu6"
+    }
+
+    fn run(&self, m: &mut Model, _cx: &mut PassCx) -> Result<PassReport> {
+        let mut r = PassReport::new(self.name());
+        r.changed = relu6::replace_relu6(m);
+        Ok(r)
+    }
+}
+
+/// Cross-layer equalization ([`equalize::equalize_traced`]), recording
+/// the per-sweep convergence trace and the weight-range spread it fixed.
+pub struct EqualizePass {
+    pub iters: usize,
+    pub tol: f32,
+}
+
+impl Pass for EqualizePass {
+    fn name(&self) -> &'static str {
+        "equalize"
+    }
+
+    fn run(&self, m: &mut Model, _cx: &mut PassCx) -> Result<PassReport> {
+        let mut r = PassReport::new(self.name());
+        let pairs = equalize::find_pairs(m).len();
+        let spread_before = weight_range_spread(m);
+        let trace = equalize::equalize_traced(m, self.iters, self.tol)?;
+        r.changed = trace.len(); // sweeps
+        r.push("pairs", pairs as f64);
+        r.push("spread_before", spread_before);
+        r.push("spread_after", weight_range_spread(m));
+        r.trace = trace;
+        Ok(r)
+    }
+}
+
+/// High-bias absorption ([`absorb::absorb_high_biases_traced`]),
+/// recording channel count and absorbed mass.
+pub struct AbsorbPass {
+    pub sigma: f32,
+}
+
+impl Pass for AbsorbPass {
+    fn name(&self) -> &'static str {
+        "absorb"
+    }
+
+    fn run(&self, m: &mut Model, _cx: &mut PassCx) -> Result<PassReport> {
+        let mut r = PassReport::new(self.name());
+        let (channels, mass) =
+            absorb::absorb_high_biases_traced(m, self.sigma)?;
+        r.changed = channels;
+        r.push("mass", mass);
+        Ok(r)
+    }
+}
+
+/// Weight-clipping baseline ([`clip::clip_weights`]).
+pub struct ClipPass {
+    pub c: f32,
+}
+
+impl Pass for ClipPass {
+    fn name(&self) -> &'static str {
+        "clip"
+    }
+
+    fn run(&self, m: &mut Model, _cx: &mut PassCx) -> Result<PassReport> {
+        let mut r = PassReport::new(self.name());
+        r.changed = clip::clip_weights(m, self.c)?;
+        r.push("level", self.c as f64);
+        r.push("spread_after", weight_range_spread(m));
+        Ok(r)
+    }
+}
+
+/// Weight quantisation: fake-quantise every conv/linear weight in place
+/// and (on ≤ 8-bit schemes) retain the integer grid codes in the
+/// context for the int8 planner — exactly the loop `Prepared::quantize`
+/// always ran.
+pub struct QuantizePass {
+    pub scheme: QScheme,
+}
+
+impl Pass for QuantizePass {
+    fn name(&self) -> &'static str {
+        "quantize"
+    }
+
+    fn run(&self, m: &mut Model, cx: &mut PassCx) -> Result<PassReport> {
+        let mut r = PassReport::new(self.name());
+        let spread_before = weight_range_spread(m);
+        let layer_ids: Vec<usize> = m.layers().iter().map(|n| n.id).collect();
+        for id in layer_ids {
+            let w = match &m.node(id).op {
+                Op::Conv { w, .. } | Op::Linear { w, .. } => w.clone(),
+                _ => unreachable!(),
+            };
+            let t = m.tensors.get_mut(&w).expect("weight tensor");
+            if self.scheme.bits <= 8 {
+                // retain the integer grid the fake-quant image comes
+                // from — the int8 engine executes these codes directly
+                let (ps, codes) =
+                    quant::quantize_weights_retaining(t, &self.scheme)?;
+                cx.weight_params.push((id, ps));
+                cx.int_weights.push((id, codes));
+            } else {
+                cx.weight_params
+                    .push((id, quant::quantize_weights(t, &self.scheme)));
+            }
+            r.changed += 1;
+        }
+        r.push("weight_bits", self.scheme.bits as f64);
+        r.push("int_layers", cx.int_weights.len() as f64);
+        r.push("spread_before", spread_before);
+        Ok(r)
+    }
+}
+
+/// Bias correction against the FP32 reference in the context
+/// ([`bias_correct::analytic_traced`] / `empirical_traced`), recording
+/// the summed |Δb| magnitude.
+pub struct BiasCorrectPass {
+    pub mode: BiasCorrMode,
+}
+
+impl Pass for BiasCorrectPass {
+    fn name(&self) -> &'static str {
+        "bias_correct"
+    }
+
+    fn run(&self, m: &mut Model, cx: &mut PassCx) -> Result<PassReport> {
+        let mut r = PassReport::new(self.name());
+        let (layers, magnitude) = match self.mode {
+            BiasCorrMode::None => (0, 0.0),
+            BiasCorrMode::Analytic => {
+                let reference = cx.reference.ok_or_else(|| {
+                    anyhow::anyhow!("bias_correct pass needs a reference model")
+                })?;
+                bias_correct::analytic_traced(m, reference)?
+            }
+            BiasCorrMode::Empirical => {
+                let reference = cx.reference.ok_or_else(|| {
+                    anyhow::anyhow!("bias_correct pass needs a reference model")
+                })?;
+                let Some(calib) = cx.calib else {
+                    bail!("empirical bias correction requires calibration data");
+                };
+                bias_correct::empirical_traced(m, reference, calib)?
+            }
+        };
+        r.changed = layers;
+        r.push("magnitude", magnitude);
+        Ok(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfq::testutil::two_layer_model;
+
+    #[test]
+    fn fp32_pipeline_respects_config() {
+        let full = PassManager::fp32_pipeline(&DfqConfig::default());
+        assert_eq!(full.names(), vec!["bn_fold", "relu6", "equalize", "absorb"]);
+        let base = PassManager::fp32_pipeline(&DfqConfig::baseline());
+        assert_eq!(base.names(), vec!["bn_fold"]);
+        assert!(PassManager::clip_pipeline(&DfqConfig::default()).is_empty());
+        let clip = PassManager::clip_pipeline(&DfqConfig {
+            weight_clip: Some(0.1),
+            ..DfqConfig::default()
+        });
+        assert_eq!(clip.names(), vec!["clip"]);
+    }
+
+    #[test]
+    fn reports_carry_cle_trace_and_spread() {
+        let m = two_layer_model(71, true);
+        let mut model = m.clone();
+        let mut cx = PassCx::default();
+        let report = PassManager::fp32_pipeline(&DfqConfig::default())
+            .run(&mut model, &mut cx)
+            .unwrap();
+        let eq = report.get("equalize").expect("equalize ran");
+        assert!(!eq.trace.is_empty());
+        assert_eq!(eq.changed, eq.trace.len());
+        // the trace ends converged (below tol) on this tiny model
+        assert!(*eq.trace.last().unwrap() < 1e-4);
+        // both spreads recorded and sane (≥ 1 by construction); the
+        // worst-layer metric is not guaranteed monotone per run, so no
+        // ordering is asserted here
+        let before = eq.metric("spread_before").unwrap();
+        let after = eq.metric("spread_after").unwrap();
+        assert!(before.is_finite() && before >= 1.0);
+        assert!(after.is_finite() && after >= 1.0);
+        // renderings mention every pass
+        let table = report.table();
+        let json = report.json_lines();
+        for name in ["bn_fold", "relu6", "equalize", "absorb"] {
+            assert!(table.contains(name), "table missing {name}:\n{table}");
+            assert!(json.contains(name), "json missing {name}:\n{json}");
+        }
+        assert!(table.contains("convergence"));
+        assert_eq!(json.trim().lines().count(), report.passes.len());
+    }
+}

@@ -4,7 +4,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 
-use crate::graph::{ActKind, Model, Node, Op, Task};
+use crate::graph::{ActKind, Model, Node, Op, PoolKind, Task};
 use crate::nn::{conv, ops};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -242,6 +242,160 @@ pub fn residual_block_model(seed: u64) -> Model {
     }
 }
 
+/// Inception-style multi-branch block + max-pool stem:
+///
+/// ```text
+/// input → conv3x3(3→8) → bn → relu → maxpool(3, s2, p1)
+///           ┌────────────────┬───────────────────┐
+///   conv1x1(8→8)     conv1x1(8→4) → relu     avgpool(3, s1, p1)
+///     → bn → relu      → conv3x3(4→8)            → conv1x1(8→4)
+///           │           → bn → relu                → bn → relu
+///           └───────→ concat (8+8+4 = 20ch) ←──────┘
+///                          ↓
+///                    gap → linear(20→10)
+/// ```
+///
+/// Exercises the branchy-graph integer ops end to end: a max-pool stem,
+/// an avg-pool branch, a requantise-concat merge, and a CLE pair *inside*
+/// branch b (pair discovery must stop at the pool/concat boundaries).
+pub fn inception_block_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let mut tensors = BTreeMap::new();
+    let mut nodes = vec![Node { id: 0, inputs: vec![], op: Op::Input }];
+    let mut id = 0usize;
+    let c = 8usize;
+
+    // `id` is threaded by &mut (not captured) so pool/concat nodes can
+    // be appended between conv_bn calls
+    let conv_bn = |nodes: &mut Vec<Node>,
+                   tensors: &mut BTreeMap<String, Tensor>,
+                   rng: &mut Rng,
+                   id: &mut usize,
+                   input: usize,
+                   in_ch: usize,
+                   out_ch: usize,
+                   k: usize|
+     -> usize {
+        *id += 1;
+        let w = format!("w{id}");
+        tensors.insert(w.clone(), rand_t(rng, &[out_ch, in_ch, k, k], 0.4));
+        nodes.push(Node {
+            id: *id,
+            inputs: vec![input],
+            op: Op::Conv {
+                w,
+                b: None,
+                in_ch,
+                out_ch,
+                k,
+                stride: 1,
+                pad: k / 2,
+                groups: 1,
+            },
+        });
+        *id += 1;
+        for (p, std, ofs) in [
+            ("g", 0.3f32, 1.0f32),
+            ("be", 0.3, 0.1),
+            ("m", 0.3, 0.0),
+            ("v", 0.0, 0.0),
+        ] {
+            let name = format!("{p}{id}");
+            let mut t = rand_t(rng, &[out_ch], std);
+            t.map_inplace(|x| x + ofs);
+            if p == "v" {
+                t = rand_t(rng, &[out_ch], 0.3);
+                t.map_inplace(|x| x.abs() + 0.5);
+            }
+            tensors.insert(name, t);
+        }
+        nodes.push(Node {
+            id: *id,
+            inputs: vec![*id - 1],
+            op: Op::BatchNorm {
+                ch: out_ch,
+                gamma: format!("g{id}"),
+                beta: format!("be{id}"),
+                mean: format!("m{id}"),
+                var: format!("v{id}"),
+            },
+        });
+        *id += 1;
+        nodes.push(Node {
+            id: *id,
+            inputs: vec![*id - 1],
+            op: Op::Act(ActKind::Relu),
+        });
+        *id
+    };
+
+    // stem: conv + max-pool
+    let stem =
+        conv_bn(&mut nodes, &mut tensors, &mut rng, &mut id, 0, 3, c, 3);
+    id += 1;
+    let pool0 = id;
+    nodes.push(Node {
+        id: pool0,
+        inputs: vec![stem],
+        op: Op::Pool2d { kind: PoolKind::Max, k: 3, stride: 2, pad: 1 },
+    });
+
+    // branch a: 1x1 conv
+    let ba =
+        conv_bn(&mut nodes, &mut tensors, &mut rng, &mut id, pool0, c, c, 1);
+    // branch b: 1x1 squeeze -> 3x3 expand (a CLE pair inside the branch)
+    let bb1 = conv_bn(
+        &mut nodes, &mut tensors, &mut rng, &mut id, pool0, c, c / 2, 1,
+    );
+    let bb2 = conv_bn(
+        &mut nodes, &mut tensors, &mut rng, &mut id, bb1, c / 2, c, 3,
+    );
+    // branch c: avg-pool -> 1x1 conv
+    id += 1;
+    let poolc = id;
+    nodes.push(Node {
+        id: poolc,
+        inputs: vec![pool0],
+        op: Op::Pool2d { kind: PoolKind::Avg, k: 3, stride: 1, pad: 1 },
+    });
+    let bc = conv_bn(
+        &mut nodes, &mut tensors, &mut rng, &mut id, poolc, c, c / 2, 1,
+    );
+
+    // merge + head
+    id += 1;
+    let cat = id;
+    nodes.push(Node { id: cat, inputs: vec![ba, bb2, bc], op: Op::Concat });
+    let c_cat = c + c + c / 2;
+    id += 1;
+    let gap_id = id;
+    nodes.push(Node { id: gap_id, inputs: vec![cat], op: Op::Gap });
+    id += 1;
+    let lin_id = id;
+    let wl = format!("wl{lin_id}");
+    tensors.insert(wl.clone(), rand_t(&mut rng, &[10, c_cat], 0.4));
+    let bl = format!("bl{lin_id}");
+    tensors.insert(bl.clone(), rand_t(&mut rng, &[10], 0.2));
+    nodes.push(Node {
+        id: lin_id,
+        inputs: vec![gap_id],
+        op: Op::Linear { w: wl, b: bl, in_dim: c_cat, out_dim: 10 },
+    });
+
+    Model {
+        name: "test_inception".into(),
+        task: Task::Classification,
+        input_shape: [3, 8, 8],
+        num_classes: 10,
+        nodes,
+        outputs: vec![lin_id],
+        tensors,
+        meta: BTreeMap::new(),
+        act_stats: HashMap::new(),
+        folded: false,
+    }
+}
+
 pub fn random_input(model: &Model, batch: usize, seed: u64) -> Tensor {
     let mut rng = Rng::new(seed);
     let [c, h, w] = model.input_shape;
@@ -295,7 +449,20 @@ pub fn forward_with_bn(model: &Model, x: &Tensor) -> Tensor {
                 t
             }
             Op::Add => ops::add(&vals[&n.inputs[0]], &vals[&n.inputs[1]]),
+            Op::Concat => {
+                let ins: Vec<&Tensor> =
+                    n.inputs.iter().map(|i| &vals[i]).collect();
+                ops::concat_channels(&ins)
+            }
             Op::Gap => ops::global_avg_pool(&vals[&n.inputs[0]]),
+            Op::Pool2d { kind, k, stride, pad } => match kind {
+                PoolKind::Max => {
+                    ops::max_pool2d(&vals[&n.inputs[0]], *k, *stride, *pad)
+                }
+                PoolKind::Avg => {
+                    ops::avg_pool2d(&vals[&n.inputs[0]], *k, *stride, *pad)
+                }
+            },
             Op::Linear { w, b, .. } => ops::linear(
                 &vals[&n.inputs[0]],
                 model.tensor(w).unwrap(),

@@ -9,7 +9,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{ActKind, Model, Node, Op, Task};
+use super::{ActKind, Model, Node, Op, PoolKind, Task};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
@@ -119,7 +119,14 @@ fn parse_node(j: &Json) -> Result<Node> {
         },
         "act" => Op::Act(ActKind::parse(j.req("kind")?.as_str()?)?),
         "add" => Op::Add,
+        "concat" => Op::Concat,
         "gap" => Op::Gap,
+        "pool2d" => Op::Pool2d {
+            kind: PoolKind::parse(j.req("kind")?.as_str()?)?,
+            k: j.req("k")?.as_usize()?,
+            stride: j.req("stride")?.as_usize()?,
+            pad: j.req("pad")?.as_usize()?,
+        },
         "linear" => Op::Linear {
             w: j.req("w")?.as_str()?.to_string(),
             b: j.req("b")?.as_str()?.to_string(),
@@ -174,8 +181,18 @@ fn node_to_json(n: &Node) -> Json {
         Op::Add => {
             m.insert("op".into(), s("add"));
         }
+        Op::Concat => {
+            m.insert("op".into(), s("concat"));
+        }
         Op::Gap => {
             m.insert("op".into(), s("gap"));
+        }
+        Op::Pool2d { kind, k, stride, pad } => {
+            m.insert("op".into(), s("pool2d"));
+            m.insert("kind".into(), s(kind.as_str()));
+            m.insert("k".into(), num(*k));
+            m.insert("stride".into(), num(*stride));
+            m.insert("pad".into(), num(*pad));
         }
         Op::Linear { w, b, in_dim, out_dim } => {
             m.insert("op".into(), s("linear"));

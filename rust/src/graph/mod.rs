@@ -75,6 +75,39 @@ impl ActKind {
     }
 }
 
+/// Fan-in cap of a concat node: the integer engine packs one Q20
+/// multiplier per input and the artifact codec enforces the same bound,
+/// so [`Model::validate`] rejects wider merges at the source.
+pub const MAX_CONCAT_INPUTS: usize = 64;
+
+/// Plausibility cap on pool2d window size and stride (shared with the
+/// integer engine packer and the artifact reader).
+pub const MAX_POOL_DIM: usize = 1024;
+
+/// Pooling kinds of [`Op::Pool2d`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+impl PoolKind {
+    pub fn parse(s: &str) -> Result<PoolKind> {
+        Ok(match s {
+            "max" => PoolKind::Max,
+            "avg" => PoolKind::Avg,
+            _ => bail!("unknown pool kind '{s}'"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PoolKind::Max => "max",
+            PoolKind::Avg => "avg",
+        }
+    }
+}
+
 /// Graph operations. Convolution weights are OIHW; linear weights [O, I].
 #[derive(Debug, Clone, PartialEq)]
 pub enum Op {
@@ -98,7 +131,20 @@ pub enum Op {
     },
     Act(ActKind),
     Add,
+    /// Channel concatenation of ≥ 2 NCHW inputs (same N, H, W) — a
+    /// quantisation site: every input is requantised onto one shared
+    /// output grid (inception-style branch merges).
+    Concat,
     Gap,
+    /// Spatial pooling with a square window. Out-of-bounds window
+    /// positions are excluded (max ignores padding; avg divides by the
+    /// number of in-bounds taps), so both kinds stay on the input grid.
+    Pool2d {
+        kind: PoolKind,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
     Linear {
         w: String,
         b: String,
@@ -118,7 +164,9 @@ impl Op {
             Op::BatchNorm { .. } => "bn",
             Op::Act(_) => "act",
             Op::Add => "add",
+            Op::Concat => "concat",
             Op::Gap => "gap",
+            Op::Pool2d { .. } => "pool2d",
             Op::Linear { .. } => "linear",
             Op::Upsample { .. } => "upsample",
         }
@@ -221,7 +269,7 @@ impl Model {
     }
 
     /// Activation quantisation sites: index 0 = model input, then every
-    /// act/add node in node order (folded graph).
+    /// act/add/concat node in node order (folded graph).
     pub fn act_sites(&self) -> Vec<Site> {
         assert!(self.folded, "act_sites requires a folded model");
         let mut sites = vec![Site::Input];
@@ -229,6 +277,7 @@ impl Model {
             match n.op {
                 Op::Act(kind) => sites.push(Site::Act { node: n.id, kind }),
                 Op::Add => sites.push(Site::Add { node: n.id }),
+                Op::Concat => sites.push(Site::Concat { node: n.id }),
                 _ => {}
             }
         }
@@ -273,6 +322,36 @@ impl Model {
                         }
                     }
                 }
+                Op::Concat => {
+                    if !(2..=MAX_CONCAT_INPUTS).contains(&n.inputs.len()) {
+                        bail!(
+                            "node {}: concat needs 2..={MAX_CONCAT_INPUTS} \
+                             inputs, has {}",
+                            n.id,
+                            n.inputs.len()
+                        );
+                    }
+                }
+                Op::Pool2d { k, stride, pad, .. } => {
+                    if *k == 0 || *stride == 0 {
+                        bail!("node {}: pool2d with zero k/stride", n.id);
+                    }
+                    if *k > MAX_POOL_DIM || *stride > MAX_POOL_DIM {
+                        bail!(
+                            "node {}: pool2d window/stride beyond \
+                             {MAX_POOL_DIM}",
+                            n.id
+                        );
+                    }
+                    if *pad >= *k {
+                        // a window fully inside the padding would have no
+                        // valid taps (avg would divide by zero)
+                        bail!(
+                            "node {}: pool2d pad {pad} >= window {k}",
+                            n.id
+                        );
+                    }
+                }
                 _ => {}
             }
             for &i in &n.inputs {
@@ -296,13 +375,16 @@ pub enum Site {
     Input,
     Act { node: usize, kind: ActKind },
     Add { node: usize },
+    Concat { node: usize },
 }
 
 impl Site {
     pub fn node_id(&self) -> Option<usize> {
         match self {
             Site::Input => None,
-            Site::Act { node, .. } | Site::Add { node } => Some(*node),
+            Site::Act { node, .. }
+            | Site::Add { node }
+            | Site::Concat { node } => Some(*node),
         }
     }
 }

@@ -92,10 +92,29 @@ pub fn propagate(model: &Model) -> Result<HashMap<usize, TensorStats>> {
                         .collect(),
                 }
             }
+            Op::Concat => {
+                // channel concatenation: the output channel axis is the
+                // inputs' channel axes stacked in input order
+                let mut mean = Vec::new();
+                let mut std = Vec::new();
+                for &i in &n.inputs {
+                    mean.extend_from_slice(&out[&i].mean);
+                    std.extend_from_slice(&out[&i].std);
+                }
+                TensorStats { mean, std }
+            }
             Op::Gap => {
                 // Spatial averaging keeps the mean; variance shrinks but
                 // gap outputs are not quantisation sites, so the exact
                 // factor is irrelevant — keep it conservative.
+                out[&n.inputs[0]].clone()
+            }
+            Op::Pool2d { .. } => {
+                // max-pool shifts mass toward the channel maximum and
+                // avg-pool shrinks the variance; both stay inside the
+                // input's β ± n·γ envelope, and pool outputs stay on the
+                // input grid (not sites) — keep the input stats
+                // conservatively.
                 out[&n.inputs[0]].clone()
             }
             Op::Upsample { .. } => out[&n.inputs[0]].clone(),

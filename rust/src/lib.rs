@@ -107,7 +107,9 @@
 //! ```
 //!
 //! Module map: [`graph`] (IR + containers) → [`dfq`] (the paper's
-//! passes) → [`quant`]/[`tensor`] (grids and integer codes) → [`nn`]
+//! passes, composed by the [`dfq::pass::PassManager`] with per-pass
+//! diagnostics — `dfq report` prints the table) →
+//! [`quant`]/[`tensor`] (grids and integer codes) → [`nn`]
 //! (f32 oracle + the [`nn::qengine`] integer planner/kernels) →
 //! [`artifact`] (compiled-plan serialisation) → [`serve`]
 //! (batching servers, router, multi-model registry) → [`runtime`]

@@ -5,6 +5,8 @@
 //!   fig <1|2|3|6>         regenerate a paper figure (CSV series)
 //!   quantize <arch> [...] run the DFQ pipeline, save the quantised model
 //!   compile <arch> [...]  run DFQ once, write a compiled .dfqm artifact
+//!   report <arch> [...]   run the instrumented pass pipeline, print the
+//!                         per-pass diagnostics table (or JSON records)
 //!   eval <arch> [...]     evaluate a model (fp32 / int8 / dfq variants)
 //!   serve <arch> [...]    start the batching server + synthetic load
 //!   serve --models DIR    multi-model registry serving over artifacts
@@ -43,6 +45,9 @@ fn usage() -> ! {
            compile <arch> [--bits N] [--bc none|analytic|empirical]\n\
                    [--per-channel] [--symmetric] [--allow-fallback]\n\
                    [-o|--out FILE]     write a compiled .dfqm artifact\n\
+           report <arch|fixture> [--bits N] [--bc none|analytic] [--json]\n\
+                  per-pass DFQ diagnostics (spread, CLE trace, BC |db|);\n\
+                  fixtures: two_layer | resblock | inception\n\
            eval <arch> [--mode fp32|baseline|dfq] [--bits N] [--limit N]\n\
            serve <arch> [--requests N] [--rate R] [--batch N]\n\
                  [--backend pjrt|engine|qengine]\n\
@@ -73,7 +78,7 @@ fn flags(rest: &[String]) -> (Vec<&String>, HashMap<String, String>) {
         } else if let Some(name) = a.strip_prefix("--") {
             let boolean = matches!(
                 name,
-                "per-channel" | "symmetric" | "allow-fallback"
+                "per-channel" | "symmetric" | "allow-fallback" | "json"
             );
             if boolean {
                 kv.insert(name.to_string(), "true".to_string());
@@ -108,6 +113,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         "quantize" => cmd_quantize(rest),
         "compile" => cmd_compile(rest),
+        "report" => cmd_report(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "inspect" => cmd_inspect(rest),
@@ -141,7 +147,8 @@ fn quantize_from_flags(
         model.nodes.len(),
         model.param_count()
     );
-    let prep = quantize_data_free(&model, &DfqConfig::default())?;
+    let (prep, report) =
+        dfq::dfq::quantize_data_free_report(&model, &DfqConfig::default())?;
     println!(
         "DFQ prepare: {} ReLU6 replaced, {} CLE pairs ({} sweeps), \
          {} channels absorbed",
@@ -150,6 +157,7 @@ fn quantize_from_flags(
         prep.log.cle_sweeps,
         prep.log.absorbed_channels
     );
+    print!("{}", report.table());
     let scheme = QScheme {
         bits,
         symmetric: kv.contains_key("symmetric"),
@@ -200,6 +208,83 @@ fn cmd_compile(rest: &[String]) -> Result<()> {
     let info = q.save_artifact(&out, opts)?;
     println!("compiled {}", info.summary());
     println!("saved artifact to {out}");
+    Ok(())
+}
+
+/// `dfq report <arch|fixture>`: run the instrumented pass pipeline and
+/// print the per-pass diagnostics (weight-range spread before/after, the
+/// CLE convergence trace, absorbed-bias mass, bias-correction |Δb|) as a
+/// table, or as the shared one-line JSON records with `--json`. Built-in
+/// fixtures (`two_layer`, `resblock`, `inception`) need no artifacts
+/// directory, so this runs anywhere — including the CI smoke step.
+fn cmd_report(rest: &[String]) -> Result<()> {
+    let (pos, kv) = flags(rest);
+    let arch = pos.first().context("missing <arch|fixture>")?.as_str();
+    let json = kv.contains_key("json");
+    let bits: u32 = kv.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let bc = parse_bc(kv.get("bc").map(|s| s.as_str()).unwrap_or("analytic"))?;
+    if bc == BiasCorrMode::Empirical {
+        // report runs without a dataset; fail before the pipeline does
+        bail!("dfq report supports --bc none|analytic (no calibration data)");
+    }
+    let model = match arch {
+        "two_layer" => dfq::dfq::testutil::two_layer_model(1, true),
+        "resblock" => dfq::dfq::testutil::residual_block_model(1),
+        "inception" => dfq::dfq::testutil::inception_block_model(1),
+        _ => {
+            let manifest = Manifest::load(dfq::artifacts_dir())?;
+            Model::load(manifest.path(&manifest.arch(arch)?.model))?
+        }
+    };
+    if !json {
+        println!(
+            "{arch}: {} nodes, {} params",
+            model.nodes.len(),
+            model.param_count()
+        );
+    }
+    let (prep, mut report) =
+        dfq::dfq::quantize_data_free_report(&model, &DfqConfig::default())?;
+    let scheme = QScheme::int8_asymmetric().with_bits(bits);
+    let (q, qreport) = prep.quantize_report(&scheme, bits, bc, None)?;
+    report.extend(qreport);
+    // the planner verdict completes the story: did the pipeline's output
+    // reach a fully-integer execution plan? It joins the report as one
+    // more record so both renderings share the pass format.
+    let mut plan_summary = None;
+    if bits <= 8 {
+        match q.pack_int8() {
+            Ok(qm) => {
+                let mut plan = dfq::dfq::PassReport {
+                    name: "plan",
+                    changed: qm.num_ops(),
+                    ..Default::default()
+                };
+                plan.metrics.push(("int_layers", qm.int_layers as f64));
+                plan.metrics.push(("f32_layers", qm.f32_layers as f64));
+                plan.metrics
+                    .push(("fallback_ops", qm.fallback_ops() as f64));
+                report.passes.push(plan);
+                plan_summary = Some(qm.summary());
+            }
+            Err(e) => {
+                // the JSON mode feeds the CI smoke step: a fixture that
+                // stops planning is a regression, not a footnote
+                if json {
+                    return Err(e.context("int8 plan unavailable"));
+                }
+                plan_summary = Some(format!("unavailable ({e:#})"));
+            }
+        }
+    }
+    if json {
+        print!("{}", report.json_lines());
+    } else {
+        print!("{}", report.table());
+        if let Some(s) = plan_summary {
+            println!("\nplan: {s}");
+        }
+    }
     Ok(())
 }
 

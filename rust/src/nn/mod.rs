@@ -50,7 +50,9 @@ impl QuantCfg {
             .map(|s| match s {
                 Site::Input => SiteCfg::fp32(f32::INFINITY),
                 Site::Act { kind, .. } => SiteCfg::fp32(kind.clip_hi()),
-                Site::Add { .. } => SiteCfg::fp32(f32::INFINITY),
+                Site::Add { .. } | Site::Concat { .. } => {
+                    SiteCfg::fp32(f32::INFINITY)
+                }
             })
             .collect();
         QuantCfg { rows }
@@ -122,7 +124,26 @@ pub fn forward_collect(
                 ops::fake_quant(&mut t, row.scale, row.zero_point, row.n_levels);
                 t
             }
+            Op::Concat => {
+                let row = cfg.rows[site_of(n.id).expect("concat site")];
+                let ins: Vec<&Tensor> =
+                    n.inputs.iter().map(|i| &vals[i]).collect();
+                let mut t = ops::concat_channels(&ins);
+                ops::fake_quant(&mut t, row.scale, row.zero_point, row.n_levels);
+                t
+            }
             Op::Gap => ops::global_avg_pool(&vals[&n.inputs[0]]),
+            Op::Pool2d { kind, k, stride, pad } => {
+                let x = &vals[&n.inputs[0]];
+                match kind {
+                    crate::graph::PoolKind::Max => {
+                        ops::max_pool2d(x, *k, *stride, *pad)
+                    }
+                    crate::graph::PoolKind::Avg => {
+                        ops::avg_pool2d(x, *k, *stride, *pad)
+                    }
+                }
+            }
             Op::Linear { w, b, .. } => {
                 let wt = model.tensor(w)?;
                 let bias = model.tensor(b)?.data();

@@ -44,6 +44,127 @@ pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
     )
 }
 
+/// Channel concatenation of NCHW tensors (same N, H, W). Shape
+/// agreement is a hard assertion (like [`add`]): a mismatched graph
+/// must fail loudly, not interleave planes silently.
+pub fn concat_channels(xs: &[&Tensor]) -> Tensor {
+    assert!(!xs.is_empty(), "concat of zero tensors");
+    let s0 = xs[0].shape();
+    assert_eq!(s0.len(), 4, "concat wants NCHW inputs, got {s0:?}");
+    let (n, h, w) = (s0[0], s0[2], s0[3]);
+    for x in xs {
+        let s = x.shape();
+        assert!(
+            s.len() == 4 && s[0] == n && s[2] == h && s[3] == w,
+            "concat input {s:?} incompatible with {s0:?}"
+        );
+    }
+    let c_out: usize = xs.iter().map(|x| x.shape()[1]).sum();
+    let mut out = Tensor::zeros(&[n, c_out, h, w]);
+    let od = out.data_mut();
+    let hw = h * w;
+    for img in 0..n {
+        let mut off = img * c_out * hw;
+        for x in xs {
+            let c = x.shape()[1];
+            let base = img * c * hw;
+            od[off..off + c * hw]
+                .copy_from_slice(&x.data()[base..base + c * hw]);
+            off += c * hw;
+        }
+    }
+    out
+}
+
+/// Pooled output length for one spatial dim. Callers must reject
+/// windows larger than the padded input first (`h + 2·pad ≥ k`), or the
+/// subtraction underflows.
+#[inline]
+pub(crate) fn pool_out(h: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (h + 2 * pad - k) / stride + 1
+}
+
+/// Walk every pool window over `n_c` contiguous (image, channel)
+/// planes: gathers each window's in-bounds elements into a reused
+/// buffer and calls `emit(out_index, window)` per output position.
+/// Generic over the element type so the f32 oracle and the integer
+/// engine share the bounds/padding logic (the [`super::conv::im2col_into`]
+/// precedent for convs).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pool_windows<T: Copy>(
+    xd: &[T],
+    n_c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    mut emit: impl FnMut(usize, &[T]),
+) {
+    let (oh, ow) = (pool_out(h, k, stride, pad), pool_out(w, k, stride, pad));
+    let mut win = Vec::with_capacity(k * k);
+    for i in 0..n_c {
+        let xoff = i * h * w;
+        let ooff = i * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                win.clear();
+                for dy in 0..k {
+                    let iy = oy * stride + dy;
+                    if iy < pad || iy >= h + pad {
+                        continue;
+                    }
+                    for dx in 0..k {
+                        let ix = ox * stride + dx;
+                        if ix < pad || ix >= w + pad {
+                            continue;
+                        }
+                        win.push(xd[xoff + (iy - pad) * w + (ix - pad)]);
+                    }
+                }
+                debug_assert!(!win.is_empty(), "empty pool window");
+                emit(ooff + oy * ow + ox, &win);
+            }
+        }
+    }
+}
+
+/// Max pool (N, C, H, W) with a k×k window. Out-of-bounds (padding)
+/// positions are excluded from the max, so the output values are always
+/// actual input values (grid-preserving for quantised grids).
+pub fn max_pool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
+    pool2d(x, k, stride, pad, true)
+}
+
+/// Average pool (N, C, H, W) with a k×k window, averaging over the
+/// in-bounds taps only (`count_include_pad = false`).
+pub fn avg_pool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
+    pool2d(x, k, stride, pad, false)
+}
+
+fn pool2d(x: &Tensor, k: usize, stride: usize, pad: usize, max: bool) -> Tensor {
+    let s = x.shape();
+    let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+    assert!(pad < k, "pool2d pad {pad} >= window {k}");
+    assert!(
+        h + 2 * pad >= k && w + 2 * pad >= k,
+        "pool2d window {k} exceeds padded input {h}x{w} (pad {pad})"
+    );
+    let (oh, ow) = (pool_out(h, k, stride, pad), pool_out(w, k, stride, pad));
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    let od = out.data_mut();
+    // one reduction per kind, over the window's in-bounds values only
+    pool_windows(x.data(), n * c, h, w, k, stride, pad, |o, win| {
+        od[o] = if max {
+            win.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+        } else {
+            (win.iter().map(|&v| v as f64).sum::<f64>() / win.len() as f64)
+                as f32
+        };
+    });
+    out
+}
+
 /// Global average pool (N, C, H, W) -> (N, C).
 pub fn global_avg_pool(x: &Tensor) -> Tensor {
     let s = x.shape();
@@ -146,6 +267,39 @@ mod tests {
         let w = Tensor::new(&[2, 3], vec![1., 0., 0., 0., 1., 1.]);
         let y = linear(&x, &w, &[10.0, 20.0]);
         assert_eq!(y.data(), &[11.0, 25.0]);
+    }
+
+    #[test]
+    fn concat_channels_stacks_in_order() {
+        let a = Tensor::new(&[2, 1, 1, 2], vec![1., 2., 5., 6.]);
+        let b = Tensor::new(&[2, 2, 1, 2], vec![3., 4., 30., 40., 7., 8., 70., 80.]);
+        let y = concat_channels(&[&a, &b]);
+        assert_eq!(y.shape(), &[2, 3, 1, 2]);
+        assert_eq!(
+            y.data(),
+            &[1., 2., 3., 4., 30., 40., 5., 6., 7., 8., 70., 80.]
+        );
+    }
+
+    #[test]
+    fn pool2d_matches_manual() {
+        // 1x1x3x3: max/avg with k=2, s=1, p=0
+        let x = Tensor::new(
+            &[1, 1, 3, 3],
+            vec![1., 2., 3., 4., 5., 6., 7., 8., 9.],
+        );
+        let mx = max_pool2d(&x, 2, 1, 0);
+        assert_eq!(mx.shape(), &[1, 1, 2, 2]);
+        assert_eq!(mx.data(), &[5., 6., 8., 9.]);
+        let av = avg_pool2d(&x, 2, 1, 0);
+        assert_eq!(av.data(), &[3., 4., 6., 7.]);
+        // padded: corners average over the valid taps only
+        let av = avg_pool2d(&x, 3, 2, 1);
+        assert_eq!(av.shape(), &[1, 1, 2, 2]);
+        assert_eq!(av.data()[0], (1. + 2. + 4. + 5.) / 4.0);
+        // padded max ignores out-of-bounds
+        let mx = max_pool2d(&x, 3, 2, 1);
+        assert_eq!(mx.data(), &[5., 6., 8., 9.]);
     }
 
     #[test]

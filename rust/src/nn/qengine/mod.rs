@@ -46,17 +46,22 @@
 //! | conv (dw)    | direct + fused requant / f32 out | fake-quant f32 conv  |
 //! | act          | fused into conv, or requantizer  | clip + quantise      |
 //! | add          | requantise-add                   | f32 add + quantise   |
+//! | concat       | requantise-concat (Q20 per input)| f32 concat + quantise|
 //! | gap          | integer mean on input grid       | f32 mean             |
+//! | pool2d (max) | exact code max (grid-preserving) | f32 max-pool         |
+//! | pool2d (avg) | i64 accumulate + rounded mean    | f32 avg-pool         |
 //! | linear       | GEMM + f32 logits                | f32 linear           |
 //! | upsample     | code copy (grid-preserving)      | f32 copy             |
 //!
-//! A MobileNet-style graph (convs + depthwise + residual adds + GAP +
-//! linear head) therefore plans with **zero** fallback ops; fallbacks
-//! only appear when a value genuinely has no quantised grid (e.g. a conv
-//! that is itself a model output feeding further layers), are reported
-//! by [`QModel::summarize`], and can be rejected outright with
-//! [`PlanOpts::int8_only`]. Parity with the fake-quant oracle is one
-//! quantisation step per element per op (`tests/qengine_parity.rs`).
+//! MobileNet-style graphs (convs + depthwise + residual adds + GAP +
+//! linear head) **and** inception-style graphs (max-pool stems,
+//! multi-branch concat blocks, avg-pool branches) therefore plan with
+//! **zero** fallback ops; fallbacks only appear when a value genuinely
+//! has no quantised grid (e.g. a conv that is itself a model output
+//! feeding further layers), are reported by [`QModel::summarize`], and
+//! can be rejected outright with [`PlanOpts::int8_only`]. Parity with
+//! the fake-quant oracle is one quantisation step per element per op
+//! (`tests/qengine_parity.rs`); integer max-pool is exact.
 
 pub mod kernels;
 pub mod ops;
@@ -66,7 +71,10 @@ pub use kernels::{
     apply_mult, mult_for, qgemm, qgemm_into, qgemm_into_scalar, rowsums_u8,
     rowsums_u8_into, EpiSpec, Mult, QConv, Scratch,
 };
-pub use ops::{gap_int, upsample_codes, QAddInt, QLinear, Requantizer};
+pub use ops::{
+    gap_int, upsample_codes, QAddInt, QConcatInt, QLinear, QPoolInt,
+    Requantizer,
+};
 pub use plan::{plan, AuxGrids, PlanOpts, QModel};
 
 use crate::quant::QParams;

@@ -1,15 +1,20 @@
 //! Integer op kernels beyond convolution: requantise-add for residual
-//! connections, integer global average pooling, the int8 linear head,
-//! standalone activation requantisation, and grid-preserving layout ops.
+//! connections, requantise-concat for branch merges, integer global
+//! average pooling, integer max/avg spatial pooling, the int8 linear
+//! head, standalone activation requantisation, and grid-preserving
+//! layout ops.
 //!
-//! Together with the conv kernels these cover every op of a
-//! MobileNet-style graph, so a packed plan can run end-to-end with zero
-//! f32 fallback layers. Each op matches the fake-quant f32 oracle within
-//! one quantisation step per element (single integer rounding per op;
-//! round-half-away vs the oracle's ties-to-even only moves exact ties).
+//! Together with the conv kernels these cover every op of MobileNet- and
+//! inception-style graphs (branchy concat blocks, max-pool stems), so a
+//! packed plan can run end-to-end with zero f32 fallback layers. Each op
+//! matches the fake-quant f32 oracle within one quantisation step per
+//! element (single integer rounding per op; round-half-away vs the
+//! oracle's ties-to-even only moves exact ties) — max-pool is *exact*
+//! (a monotone selection never leaves the grid).
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::graph::{PoolKind, MAX_CONCAT_INPUTS, MAX_POOL_DIM};
 use crate::nn::SiteCfg;
 use crate::quant::QParams;
 use crate::tensor::{QTensor, Tensor};
@@ -50,6 +55,12 @@ fn div_round(t: i64, d: i64) -> i64 {
 /// next to the single half-step rounding.
 pub const ADD_FRAC_BITS: u32 = 20;
 
+/// Upper bound on a Q20 requantise multiplier: a scale ratio of 2^20
+/// (far beyond any sane grid pair; `255·2^40` still sits comfortably
+/// inside i64). Enforced by the packers and re-validated by the
+/// artifact reader so a corrupt multiplier can't overflow at run time.
+pub(crate) const MAX_REQUANT_MULT: i64 = 1 << 40;
+
 /// A residual add packed for integer execution: both inputs rescale onto
 /// the add-site output grid with Q20 fixed-point multipliers and one
 /// shared rounding, `q = zp_o + round((m_a·(q_a-z_a) + m_b·(q_b-z_b)) /
@@ -74,6 +85,9 @@ impl QAddInt {
         let mb = (b.scale as f64 / out.scale as f64 * unit).round() as i64;
         if ma <= 0 || mb <= 0 {
             bail!("degenerate requantise-add multipliers ({ma}, {mb})");
+        }
+        if ma > MAX_REQUANT_MULT || mb > MAX_REQUANT_MULT {
+            bail!("implausible requantise-add multipliers ({ma}, {mb})");
         }
         Ok(QAddInt { ma, mb, a_qp: *a, b_qp: *b, out_qp: *out })
     }
@@ -111,6 +125,231 @@ impl QAddInt {
             })
             .collect();
         Ok(QActTensor { shape: a.shape.clone(), codes, qp: self.out_qp })
+    }
+}
+
+// -- requantise-concat --------------------------------------------------------
+
+/// A channel concatenation packed for integer execution: every input is
+/// rescaled onto the shared concat-site output grid with a Q20
+/// fixed-point multiplier and one rounding per element,
+/// `q = zp_o + round(m_i·(q - z_i) / 2^20)` — the [`QAddInt`] requantise
+/// arithmetic applied per branch instead of summed.
+#[derive(Debug, Clone)]
+pub struct QConcatInt {
+    /// `round(s_i/s_o · 2^20)` per input.
+    pub(crate) ms: Vec<i64>,
+    pub(crate) in_qps: Vec<QParams>,
+    pub(crate) out_qp: QParams,
+}
+
+impl QConcatInt {
+    pub fn pack(ins: &[QParams], out: &QParams) -> Result<QConcatInt> {
+        if ins.len() < 2 {
+            bail!("concat needs >= 2 inputs, got {}", ins.len());
+        }
+        if ins.len() > MAX_CONCAT_INPUTS {
+            bail!(
+                "concat fan-in {} exceeds {MAX_CONCAT_INPUTS} branches",
+                ins.len()
+            );
+        }
+        assert_act_grid(out);
+        let unit = (1i64 << ADD_FRAC_BITS) as f64;
+        let mut ms = Vec::with_capacity(ins.len());
+        for qp in ins {
+            assert_act_grid(qp);
+            let m = (qp.scale as f64 / out.scale as f64 * unit).round() as i64;
+            if m <= 0 {
+                bail!("degenerate requantise-concat multiplier ({m})");
+            }
+            if m > MAX_REQUANT_MULT {
+                bail!("implausible requantise-concat multiplier ({m})");
+            }
+            ms.push(m);
+        }
+        Ok(QConcatInt { ms, in_qps: ins.to_vec(), out_qp: *out })
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.ms.len()
+    }
+
+    pub fn out_params(&self) -> QParams {
+        self.out_qp
+    }
+
+    pub fn run(&self, xs: &[&QActTensor]) -> Result<QActTensor> {
+        if xs.len() != self.ms.len() {
+            bail!(
+                "concat packed for {} inputs, got {}",
+                self.ms.len(),
+                xs.len()
+            );
+        }
+        let s0 = &xs[0].shape;
+        if s0.len() != 4 {
+            bail!("concat wants NCHW inputs, got {:?}", s0);
+        }
+        let (n, h, w) = (s0[0], s0[2], s0[3]);
+        let mut c_out = 0usize;
+        for (i, x) in xs.iter().enumerate() {
+            if x.shape.len() != 4
+                || x.shape[0] != n
+                || x.shape[2] != h
+                || x.shape[3] != w
+            {
+                bail!(
+                    "concat input {i} shape {:?} incompatible with {:?}",
+                    x.shape,
+                    s0
+                );
+            }
+            if x.qp != self.in_qps[i] {
+                bail!(
+                    "concat input {i} grid mismatch: packed for {:?}, \
+                     got {:?}",
+                    self.in_qps[i],
+                    x.qp
+                );
+            }
+            c_out += x.shape[1];
+        }
+        let zo = self.out_qp.zero_point as i64;
+        let n_hi = self.out_qp.n_levels as i64 - 1;
+        let hw = h * w;
+        let mut codes = vec![0u8; n * c_out * hw];
+        for img in 0..n {
+            let mut off = img * c_out * hw;
+            for (i, x) in xs.iter().enumerate() {
+                let c = x.shape[1];
+                let zi = self.in_qps[i].zero_point as i64;
+                let m = self.ms[i];
+                let base = img * c * hw;
+                for (dst, &q) in codes[off..off + c * hw]
+                    .iter_mut()
+                    .zip(&x.codes[base..base + c * hw])
+                {
+                    let t = m * (q as i64 - zi);
+                    *dst = (round_shift(t, ADD_FRAC_BITS) + zo)
+                        .clamp(0, n_hi) as u8;
+                }
+                off += c * hw;
+            }
+        }
+        Ok(QActTensor {
+            shape: vec![n, c_out, h, w],
+            codes,
+            qp: self.out_qp,
+        })
+    }
+}
+
+// -- integer spatial pooling --------------------------------------------------
+
+/// A spatial pool packed for integer execution — grid-preserving for
+/// both kinds: max of u8 codes (dequantisation is monotone, so
+/// `max(codes)` *is* the code of the f32 max — exact) and an
+/// i64-accumulate rounded average on the input grid (within half a
+/// step of the f32 mean). Out-of-bounds window positions are excluded,
+/// matching [`crate::nn::ops::max_pool2d`] / `avg_pool2d`.
+#[derive(Debug, Clone)]
+pub struct QPoolInt {
+    pub(crate) kind: PoolKind,
+    pub(crate) k: usize,
+    pub(crate) stride: usize,
+    pub(crate) pad: usize,
+    pub(crate) qp: QParams,
+}
+
+impl QPoolInt {
+    pub fn pack(
+        kind: PoolKind,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        qp: &QParams,
+    ) -> Result<QPoolInt> {
+        if k == 0 || stride == 0 {
+            bail!("pool with zero window/stride");
+        }
+        if k > MAX_POOL_DIM || stride > MAX_POOL_DIM {
+            bail!("implausible pool window (k {k}, stride {stride})");
+        }
+        if pad >= k {
+            bail!("pool pad {pad} >= window {k} (empty windows)");
+        }
+        assert_act_grid(qp);
+        Ok(QPoolInt { kind, k, stride, pad, qp: *qp })
+    }
+
+    pub fn out_params(&self) -> QParams {
+        self.qp
+    }
+
+    pub fn run(&self, x: &QActTensor) -> Result<QActTensor> {
+        if x.shape.len() != 4 {
+            bail!("pool wants NCHW input, got {:?}", x.shape);
+        }
+        if x.qp != self.qp {
+            bail!(
+                "pool input grid mismatch: packed for {:?}, got {:?}",
+                self.qp,
+                x.qp
+            );
+        }
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let (k, stride, pad) = (self.k, self.stride, self.pad);
+        if h + 2 * pad < k || w + 2 * pad < k {
+            // typed error, not a usize underflow inside pool_out
+            bail!(
+                "pool window {k} exceeds padded input {h}x{w} (pad {pad})"
+            );
+        }
+        let oh = crate::nn::ops::pool_out(h, k, stride, pad);
+        let ow = crate::nn::ops::pool_out(w, k, stride, pad);
+        let z = self.qp.zero_point as i64;
+        let n_hi = self.qp.n_levels as i64 - 1;
+        let mut codes = vec![0u8; n * c * oh * ow];
+        // one reduction per kind, over the shared padded window walk
+        // (`pool_windows` — the same bounds logic as the f32 oracle)
+        match self.kind {
+            PoolKind::Max => crate::nn::ops::pool_windows(
+                &x.codes,
+                n * c,
+                h,
+                w,
+                k,
+                stride,
+                pad,
+                |o, win| {
+                    // u8 max over the window: dequantisation is
+                    // monotone, so this is exactly the code of the
+                    // f32 max
+                    codes[o] = win
+                        .iter()
+                        .copied()
+                        .max()
+                        .expect("pad < k: non-empty window");
+                },
+            ),
+            PoolKind::Avg => crate::nn::ops::pool_windows(
+                &x.codes,
+                n * c,
+                h,
+                w,
+                k,
+                stride,
+                pad,
+                |o, win| {
+                    let taps = win.len() as i64;
+                    let acc: i64 = win.iter().map(|&v| v as i64).sum();
+                    codes[o] = (z + div_round(acc - taps * z, taps))
+                        .clamp(0, n_hi) as u8;
+                },
+            ),
+        }
+        Ok(QActTensor { shape: vec![n, c, oh, ow], codes, qp: self.qp })
     }
 }
 
@@ -373,6 +612,104 @@ mod tests {
         let up = upsample_codes(&q, 2);
         let want = fops::upsample_nearest(&q.dequantize(), 2);
         assert_eq!(up.dequantize(), want);
+    }
+
+    #[test]
+    fn concat_requant_matches_oracle_within_one_step() {
+        let mut rng = Rng::new(11);
+        let qa = params_for_range(0.0, 3.0, 8, false);
+        let qb = params_for_range(0.0, 5.0, 8, false);
+        let qo = params_for_range(0.0, 4.0, 8, false);
+        let a = QActTensor::quantize(
+            &Tensor::new(&[2, 3, 4, 4], rng.normal_vec(96, 1.0)),
+            &qa,
+        );
+        let b = QActTensor::quantize(
+            &Tensor::new(&[2, 2, 4, 4], rng.normal_vec(64, 1.5)),
+            &qb,
+        );
+        let cc = QConcatInt::pack(&[qa, qb], &qo).unwrap();
+        let got = cc.run(&[&a, &b]).unwrap();
+        assert_eq!(got.shape, vec![2, 5, 4, 4]);
+        assert_eq!(got.qp, qo);
+        let mut want =
+            fops::concat_channels(&[&a.dequantize(), &b.dequantize()]);
+        crate::nn::ops::fake_quant(
+            &mut want, qo.scale, qo.zero_point, qo.n_levels,
+        );
+        let diff = got.dequantize().max_abs_diff(&want);
+        assert!(
+            diff <= qo.scale * 1.001,
+            "concat off by {diff} (> one step {})",
+            qo.scale
+        );
+    }
+
+    #[test]
+    fn concat_rejects_mismatches() {
+        let qp = params_for_range(0.0, 1.0, 8, false);
+        assert!(QConcatInt::pack(&[qp], &qp).is_err(), "single input");
+        let cc = QConcatInt::pack(&[qp, qp], &qp).unwrap();
+        let a = QActTensor {
+            shape: vec![1, 2, 2, 2],
+            codes: vec![0; 8],
+            qp,
+        };
+        let b = QActTensor {
+            shape: vec![1, 2, 3, 2], // wrong H
+            codes: vec![0; 12],
+            qp,
+        };
+        assert!(cc.run(&[&a, &b]).is_err());
+        assert!(cc.run(&[&a]).is_err(), "arity mismatch");
+    }
+
+    #[test]
+    fn max_pool_int_is_exact() {
+        let mut rng = Rng::new(12);
+        for (k, stride, pad) in [(2, 2, 0), (3, 2, 1), (3, 1, 1)] {
+            let t = Tensor::new(&[2, 3, 7, 7], rng.normal_vec(294, 1.0));
+            let qp = params_for_range(t.min(), t.max(), 8, false);
+            let q = QActTensor::quantize(&t, &qp);
+            let p = QPoolInt::pack(PoolKind::Max, k, stride, pad, &qp)
+                .unwrap();
+            let got = p.run(&q).unwrap();
+            let want = fops::max_pool2d(&q.dequantize(), k, stride, pad);
+            assert_eq!(got.qp, qp);
+            assert_eq!(
+                got.dequantize(),
+                want,
+                "max-pool k={k} s={stride} p={pad} must be exact"
+            );
+        }
+    }
+
+    #[test]
+    fn avg_pool_int_within_half_step() {
+        let mut rng = Rng::new(13);
+        for (k, stride, pad) in [(2, 2, 0), (3, 2, 1), (3, 1, 1)] {
+            let t = Tensor::new(&[2, 3, 8, 8], rng.normal_vec(384, 1.0));
+            let qp = params_for_range(t.min(), t.max(), 8, false);
+            let q = QActTensor::quantize(&t, &qp);
+            let p = QPoolInt::pack(PoolKind::Avg, k, stride, pad, &qp)
+                .unwrap();
+            let got = p.run(&q).unwrap();
+            let want = fops::avg_pool2d(&q.dequantize(), k, stride, pad);
+            assert_eq!(got.shape, want.shape());
+            let diff = got.dequantize().max_abs_diff(&want);
+            assert!(
+                diff <= qp.scale / 2.0 + 1e-5,
+                "avg-pool k={k} s={stride} p={pad} off by {diff}"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_pack_rejects_degenerate_windows() {
+        let qp = params_for_range(0.0, 1.0, 8, false);
+        assert!(QPoolInt::pack(PoolKind::Max, 0, 1, 0, &qp).is_err());
+        assert!(QPoolInt::pack(PoolKind::Max, 2, 0, 0, &qp).is_err());
+        assert!(QPoolInt::pack(PoolKind::Avg, 2, 1, 2, &qp).is_err());
     }
 
     #[test]

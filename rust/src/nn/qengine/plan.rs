@@ -16,7 +16,7 @@ use std::collections::{HashMap, HashSet};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::graph::{Model, Op};
+use crate::graph::{Model, Op, PoolKind};
 use crate::nn::ops as fops;
 use crate::nn::{QuantCfg, SiteCfg};
 use crate::quant::QParams;
@@ -24,7 +24,10 @@ use crate::tensor::{QTensor, Tensor};
 use crate::util::parallel;
 
 use super::kernels::{EpiSpec, QConv, Scratch};
-use super::ops::{gap_int, upsample_codes, QAddInt, QLinear, Requantizer};
+use super::ops::{
+    gap_int, upsample_codes, QAddInt, QConcatInt, QLinear, QPoolInt,
+    Requantizer,
+};
 use super::QActTensor;
 
 /// Planner policy knobs.
@@ -75,6 +78,15 @@ pub(crate) enum QOp {
     Add(QAddInt),
     /// f32 add fallback (≥ 1 f32 input), quantised onto the site grid.
     AddF { row: SiteCfg },
+    /// Integer requantise-concat onto the concat-site grid (one Q20
+    /// multiplier per input branch).
+    Concat(QConcatInt),
+    /// f32 concat fallback (≥ 1 f32 input), quantised onto the site grid.
+    ConcatF { row: SiteCfg },
+    /// Grid-preserving integer spatial pool (exact max / rounded avg).
+    Pool(QPoolInt),
+    /// f32 pool fallback.
+    PoolF { kind: PoolKind, k: usize, stride: usize, pad: usize },
     /// Standalone activation: integer requant with fused clip bounds.
     Act(Requantizer),
     /// f32 activation fallback: clip + quantise from f32.
@@ -116,6 +128,22 @@ impl QOp {
             }
             QOp::AddF { row } => {
                 ("add [f32 FALLBACK]".into(), false, Some(row_qp(row)))
+            }
+            QOp::Concat(c) => {
+                ("concat-requant [int8]".into(), true, Some(c.out_params()))
+            }
+            QOp::ConcatF { row } => {
+                ("concat [f32 FALLBACK]".into(), false, Some(row_qp(row)))
+            }
+            QOp::Pool(p) => {
+                let label = match p.kind {
+                    PoolKind::Max => "pool-max [int8]",
+                    PoolKind::Avg => "pool-avg [int8]",
+                };
+                (label.into(), true, Some(p.out_params()))
+            }
+            QOp::PoolF { .. } => {
+                ("pool [f32 FALLBACK]".into(), false, None)
             }
             QOp::Act(r) => {
                 ("act-requant [int8]".into(), true, Some(r.out_params()))
@@ -435,6 +463,77 @@ pub fn plan(
                 });
                 grids.insert(n.id, Some(row_qp(&row)));
             }
+            Op::Concat => {
+                let row = cfg.rows[site_of(n.id).expect("concat site")];
+                let mut ins = Vec::with_capacity(n.inputs.len());
+                let mut in_grids = Vec::with_capacity(n.inputs.len());
+                for &i in &n.inputs {
+                    ins.push(input_slot(&slot_of, i)?);
+                    in_grids.push(grids.get(&i).cloned().ok_or_else(
+                        || anyhow!("concat {} dangling input {i}", n.id),
+                    )?);
+                }
+                let op = if in_grids.iter().all(|g| g.is_some()) {
+                    let qps: Vec<QParams> = in_grids
+                        .iter()
+                        .map(|g| (*g).expect("all quantised"))
+                        .collect();
+                    // unpackable integer concat (fan-in beyond the cap,
+                    // or a grid pair whose multiplier degenerates)
+                    // degrades to the f32 fallback like every other
+                    // no-grid path — counted, reported, and fatal only
+                    // under `int8_only`
+                    match QConcatInt::pack(&qps, &row_qp(&row)) {
+                        Ok(c) => QOp::Concat(c),
+                        Err(_) => QOp::ConcatF { row },
+                    }
+                } else {
+                    QOp::ConcatF { row }
+                };
+                let out = intern(&mut slot_of, n.id);
+                ops.push(PlannedOp {
+                    node: n.id,
+                    ins,
+                    out,
+                    op,
+                    free_after: vec![],
+                });
+                grids.insert(n.id, Some(row_qp(&row)));
+            }
+            Op::Pool2d { kind, k, stride, pad } => {
+                let in_slot = input_slot(&slot_of, n.inputs[0])?;
+                let in_grid = grids
+                    .get(&n.inputs[0])
+                    .cloned()
+                    .ok_or_else(|| anyhow!("pool {} dangling", n.id))?;
+                // an unpackable window (validate-bypassing graph)
+                // degrades to the counted f32 fallback, like concat
+                let fallback = || QOp::PoolF {
+                    kind: *kind,
+                    k: *k,
+                    stride: *stride,
+                    pad: *pad,
+                };
+                let (op, grid) = match in_grid {
+                    Some(qp) => {
+                        match QPoolInt::pack(*kind, *k, *stride, *pad, &qp)
+                        {
+                            Ok(p) => (QOp::Pool(p), Some(qp)),
+                            Err(_) => (fallback(), None),
+                        }
+                    }
+                    None => (fallback(), None),
+                };
+                let out = intern(&mut slot_of, n.id);
+                ops.push(PlannedOp {
+                    node: n.id,
+                    ins: vec![in_slot],
+                    out,
+                    op,
+                    free_after: vec![],
+                });
+                grids.insert(n.id, grid);
+            }
             Op::Gap => {
                 let in_slot = input_slot(&slot_of, n.inputs[0])?;
                 let in_grid = grids
@@ -745,6 +844,33 @@ fn exec(
         QOp::AddF { row } => {
             let t = fops::add(&val(0)?.to_f32(), &val(1)?.to_f32());
             Val::Q(QActTensor::quantize(&t, &row_qp(row)))
+        }
+        QOp::Concat(c) => {
+            let mut ins = Vec::with_capacity(p.ins.len());
+            for i in 0..p.ins.len() {
+                ins.push(val(i)?.as_q()?);
+            }
+            Val::Q(c.run(&ins)?)
+        }
+        QOp::ConcatF { row } => {
+            let fs: Vec<Tensor> =
+                (0..p.ins.len()).map(|i| Ok(val(i)?.to_f32()))
+                    .collect::<Result<_>>()?;
+            let refs: Vec<&Tensor> = fs.iter().collect();
+            let t = fops::concat_channels(&refs);
+            Val::Q(QActTensor::quantize(&t, &row_qp(row)))
+        }
+        QOp::Pool(pl) => Val::Q(pl.run(val(0)?.as_q()?)?),
+        QOp::PoolF { kind, k, stride, pad } => {
+            let xin = val(0)?.to_f32();
+            let s = xin.shape();
+            if s.len() != 4 || s[2] + 2 * pad < *k || s[3] + 2 * pad < *k {
+                bail!("pool window {k} exceeds input {s:?} (pad {pad})");
+            }
+            Val::F(match kind {
+                PoolKind::Max => fops::max_pool2d(&xin, *k, *stride, *pad),
+                PoolKind::Avg => fops::avg_pool2d(&xin, *k, *stride, *pad),
+            })
         }
         QOp::Act(rq) => Val::Q(rq.run(val(0)?.as_q()?)?),
         QOp::ActF { row } => {

@@ -81,7 +81,10 @@ pub fn activation_qcfg_with(
                     clip_hi: kind.clip_hi(),
                 }
             }
-            Site::Add { node } => {
+            Site::Add { node } | Site::Concat { node } => {
+                // add: β ± n·γ of the summed Gaussian; concat: the same
+                // reduction over the concatenated channel stats (the
+                // shared grid every branch requantises onto)
                 let st = &stats[&node];
                 let mut lo = f32::INFINITY;
                 let mut hi = f32::NEG_INFINITY;

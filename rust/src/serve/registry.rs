@@ -201,6 +201,12 @@ impl Registry {
     }
 }
 
+/// Header-only candidate probe: reads the fixed 4-byte magic (never the
+/// payload — a multi-gigabyte non-artifact sharing the `.dfqm`
+/// extension costs one small read to reject). Deliberately checks the
+/// magic only: a version-skewed artifact must still *register*, so its
+/// first load surfaces the typed `UnsupportedVersion` error instead of
+/// the model silently vanishing from the registry.
 fn has_artifact_magic(path: &Path) -> bool {
     use std::io::Read as _;
     let Ok(mut f) = std::fs::File::open(path) else { return false };
@@ -379,6 +385,59 @@ mod tests {
             .unwrap();
         let mut reg = Registry::new(ServeConfig::default());
         assert_eq!(reg.scan_dir(&dir).unwrap(), vec!["compiled"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Bytes this process has read through syscalls (`rchar` from
+    /// `/proc/self/io`); `None` off Linux — the caller skips the
+    /// byte-accounting assertion there.
+    fn process_read_bytes() -> Option<u64> {
+        let io = std::fs::read_to_string("/proc/self/io").ok()?;
+        io.lines()
+            .find_map(|l| l.strip_prefix("rchar: "))
+            .and_then(|v| v.trim().parse().ok())
+    }
+
+    #[test]
+    fn scan_skips_large_non_artifact_files_by_header_probe() {
+        let dir = temp_dir("big");
+        let q = quantized(67);
+        q.save_artifact(dir.join("real.dfqm"), PlanOpts::default()).unwrap();
+        // a 64 MiB sparse file with the right extension but no artifact
+        // header: the probe must reject it from its first bytes
+        {
+            let f = std::fs::File::create(dir.join("big_junk.dfqm")).unwrap();
+            f.set_len(64 << 20).unwrap();
+        }
+        // short garbage and an empty file must not panic either
+        std::fs::write(dir.join("tiny.dfqm"), b"DF").unwrap();
+        std::fs::write(dir.join("empty.dfqm"), b"").unwrap();
+        // right magic, future version -> still registers (the typed
+        // UnsupportedVersion error belongs to the load, not the scan)
+        let mut skewed = b"DFQP".to_vec();
+        skewed.extend_from_slice(&99u32.to_le_bytes());
+        skewed.extend_from_slice(&[0u8; 64]);
+        std::fs::write(dir.join("skewed.dfqm"), skewed).unwrap();
+
+        let mut reg = Registry::new(ServeConfig::default());
+        let before = process_read_bytes();
+        assert_eq!(reg.scan_dir(&dir).unwrap(), vec!["real", "skewed"]);
+        // falsifiable header-only guarantee: scanning must not read the
+        // 64 MiB payload. The budget is generous (other test threads
+        // share the counter) but far below the junk-file size.
+        if let (Some(a), Some(b)) = (before, process_read_bytes()) {
+            assert!(
+                b - a < 32 << 20,
+                "scan read {} bytes — not a header-only probe",
+                b - a
+            );
+        }
+        // the skewed artifact fails at load with a real error
+        let err = reg.client("skewed", VARIANT_INT8).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("version"),
+            "expected an UnsupportedVersion load error, got: {err:#}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

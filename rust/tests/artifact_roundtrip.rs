@@ -46,6 +46,8 @@ fn roundtrip_is_bitwise_identical_across_schemes() {
         let models = [
             ("two_layer", testutil::two_layer_model(seed, true)),
             ("resblock", testutil::residual_block_model(seed)),
+            // branchy graph: concat + max/avg-pool ops round-trip too
+            ("inception", testutil::inception_block_model(seed)),
         ];
         for (mname, model) in models {
             for (sname, scheme) in &schemes {
@@ -81,7 +83,39 @@ fn roundtrip_is_bitwise_identical_across_schemes() {
             }
         }
     }
-    assert_eq!(cases, 16);
+    assert_eq!(cases, 24);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The inception-style fixture (concat + max/avg pool codec tags) writes,
+/// reloads, and serves with bitwise-identical logits — and its plan
+/// report survives the round trip verbatim.
+#[test]
+fn inception_artifact_roundtrips_bitwise_with_new_op_tags() {
+    let dir = temp_dir("inception");
+    let model = testutil::inception_block_model(401);
+    let q = quantize(&model, &QScheme::int8_asymmetric(), 8);
+    let qm_mem = q.pack_int8_opts(PlanOpts { int8_only: true }).unwrap();
+    let path = dir.join("inception.dfqm");
+    let info = q.save_artifact(&path, PlanOpts { int8_only: true }).unwrap();
+    assert_eq!(info.fallback_ops, 0);
+    let qm_disk = QModel::from_artifact(&path).unwrap();
+    // the decoded plan is the same plan: op-for-op report equality
+    assert_eq!(qm_disk.summarize(), qm_mem.summarize());
+    for needle in
+        ["concat-requant [int8]", "pool-max [int8]", "pool-avg [int8]"]
+    {
+        assert!(
+            qm_disk.summarize().contains(needle),
+            "missing '{needle}' after reload"
+        );
+    }
+    let x = testutil::random_input(&model, 4, 402);
+    let y_mem = qm_mem.run_all(&x).unwrap();
+    let y_disk = qm_disk.run_all(&x).unwrap();
+    for (a, b) in y_mem.iter().zip(&y_disk) {
+        assert_eq!(a.data(), b.data(), "reloaded branchy plan drifted");
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
 

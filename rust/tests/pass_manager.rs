@@ -1,0 +1,226 @@
+//! Pass-manager properties: the instrumented pipeline is bit-for-bit
+//! the old hard-coded call sequence; the equalize/absorb passes are
+//! idempotent at their fixed point; pair discovery stops at concat/pool
+//! boundaries; and the pipeline report carries the promised diagnostics.
+
+use dfq::dfq::{
+    absorb, bn_fold, equalize, quantize_data_free, quantize_data_free_report,
+    relu6, testutil, BiasCorrMode, DfqConfig,
+};
+use dfq::graph::{Model, Op};
+use dfq::quant::QScheme;
+
+fn fixtures(seed: u64) -> Vec<(&'static str, Model)> {
+    vec![
+        ("two_layer", testutil::two_layer_model(seed, true)),
+        ("resblock", testutil::residual_block_model(seed)),
+        ("inception", testutil::inception_block_model(seed)),
+    ]
+}
+
+/// Acceptance: `quantize_data_free` through the pass manager produces
+/// exactly the model the pre-refactor call sequence produced — every
+/// tensor bitwise equal, on every fixture.
+#[test]
+fn pass_pipeline_is_bitwise_equal_to_legacy_sequence() {
+    let cfg = DfqConfig::default();
+    for (name, m) in fixtures(601) {
+        let prep = quantize_data_free(&m, &cfg).unwrap();
+        // the exact pre-pass-manager sequence, called directly
+        let mut legacy = bn_fold::fold(&m).unwrap();
+        relu6::replace_relu6(&mut legacy);
+        equalize::equalize(&mut legacy, cfg.eq_iters, cfg.eq_tol).unwrap();
+        absorb::absorb_high_biases(&mut legacy, cfg.absorb_sigma).unwrap();
+
+        assert_eq!(
+            prep.model.tensors.len(),
+            legacy.tensors.len(),
+            "{name}: tensor table size drifted"
+        );
+        for (tname, t) in &legacy.tensors {
+            let got = prep.model.tensor(tname).unwrap();
+            assert_eq!(
+                got.data(),
+                t.data(),
+                "{name}: tensor '{tname}' drifted from the legacy pipeline"
+            );
+        }
+        assert_eq!(prep.model.nodes, legacy.nodes, "{name}: graph drifted");
+    }
+}
+
+/// Acceptance: the quantisation-side passes produce the same
+/// `QuantizedModel` bits as replicating the old inline loop by hand.
+#[test]
+fn quantize_passes_match_legacy_quantize_loop() {
+    let cfg = DfqConfig::default();
+    for (name, m) in fixtures(602) {
+        let prep = quantize_data_free(&m, &cfg).unwrap();
+        let scheme = QScheme::int8_asymmetric();
+        let q = prep
+            .quantize(&scheme, 8, BiasCorrMode::Analytic, None)
+            .unwrap();
+        // legacy: fake-quantise every layer weight in node order, then
+        // analytic bias correction against the reference
+        let mut legacy = prep.model.clone();
+        let ids: Vec<usize> =
+            legacy.layers().iter().map(|n| n.id).collect();
+        for id in ids {
+            let w = match &legacy.node(id).op {
+                Op::Conv { w, .. } | Op::Linear { w, .. } => w.clone(),
+                _ => unreachable!(),
+            };
+            let t = legacy.tensors.get_mut(&w).unwrap();
+            dfq::quant::quantize_weights_retaining(t, &scheme).unwrap();
+        }
+        dfq::dfq::bias_correct::analytic(&mut legacy, &prep.reference)
+            .unwrap();
+        for (tname, t) in &legacy.tensors {
+            assert_eq!(
+                q.model.tensor(tname).unwrap().data(),
+                t.data(),
+                "{name}: quantised tensor '{tname}' drifted"
+            );
+        }
+        assert_eq!(
+            q.int_weights.len(),
+            q.model.layers().len(),
+            "{name}: retained codes missing"
+        );
+    }
+}
+
+/// Satellite: running the `equalize` and `absorb` passes a second time
+/// on the prepared model is a no-op within `eq_tol` — the pipeline
+/// reached its fixed point. (Weight quantisation schemes don't enter:
+/// these passes run on the FP32 side, before any grid exists.)
+#[test]
+fn equalize_and_absorb_are_idempotent_at_fixed_point() {
+    let cfg = DfqConfig::default();
+    for seed in [611u64, 612] {
+        for (name, m) in fixtures(seed) {
+            let prep = quantize_data_free(&m, &cfg).unwrap();
+            let mut again = prep.model.clone();
+
+            // equalize once more: the very first sweep must already be
+            // inside the convergence tolerance
+            let trace =
+                equalize::equalize_traced(&mut again, cfg.eq_iters, cfg.eq_tol)
+                    .unwrap();
+            assert!(
+                trace[0] <= cfg.eq_tol,
+                "{name}/{seed}: re-run CLE moved |log s| by {} (> tol {})",
+                trace[0],
+                cfg.eq_tol
+            );
+            // and the weights moved at most by the tolerance, relatively
+            for (tname, t) in &prep.model.tensors {
+                let got = again.tensor(tname).unwrap();
+                let base = t.abs_max().max(1e-6);
+                let rel = got.max_abs_diff(t) / base;
+                assert!(
+                    rel <= 2.0 * cfg.eq_tol,
+                    "{name}/{seed}: tensor '{tname}' moved {rel} on re-run"
+                );
+            }
+
+            // absorb once more: after c = max(0, β − 3γ) was moved, the
+            // shifted means leave c = 0 — zero further mass
+            let (_, mass) =
+                absorb::absorb_high_biases_traced(&mut again, cfg.absorb_sigma)
+                    .unwrap();
+            assert!(
+                mass <= 1e-5,
+                "{name}/{seed}: absorb re-run moved mass {mass}"
+            );
+        }
+    }
+}
+
+/// CLE pair discovery stops at concat and pool boundaries: the inception
+/// fixture has exactly one pair — the squeeze/expand chain inside
+/// branch b — and no discovered pair touches a branchy node.
+#[test]
+fn cle_pairs_stop_at_concat_and_pool_boundaries() {
+    let m = testutil::inception_block_model(621);
+    let folded = bn_fold::fold(&m).unwrap();
+    let pairs = equalize::find_pairs(&folded);
+    assert_eq!(pairs.len(), 1, "expected only the in-branch pair: {pairs:?}");
+    let pair = pairs[0];
+    // both ends are convs whose chain crosses neither pool nor concat:
+    // conv a feeds its act, the act feeds conv b directly
+    let act = pair.act.expect("relu-linked pair");
+    assert_eq!(folded.node(act).inputs, vec![pair.a]);
+    assert_eq!(folded.node(pair.b).inputs, vec![act]);
+    // and the stem conv (whose act feeds the max-pool) formed no pair
+    let stem_conv = folded
+        .layers()
+        .first()
+        .map(|n| n.id)
+        .expect("stem conv exists");
+    assert!(
+        pairs.iter().all(|p| p.a != stem_conv),
+        "a pair crossed the max-pool boundary"
+    );
+}
+
+/// The source-model container round-trips the new graph ops (concat +
+/// pool2d JSON codec in `graph::io`).
+#[test]
+fn source_container_roundtrips_concat_and_pool_nodes() {
+    let m = testutil::inception_block_model(641);
+    let dir = std::env::temp_dir()
+        .join(format!("dfq-passmgr-io-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("inception_src.dfqm");
+    m.save(&path).unwrap();
+    let back = Model::load(&path).unwrap();
+    assert_eq!(back.nodes, m.nodes, "graph drifted through the container");
+    assert!(back
+        .nodes
+        .iter()
+        .any(|n| matches!(n.op, Op::Concat)));
+    assert!(back
+        .nodes
+        .iter()
+        .any(|n| matches!(n.op, Op::Pool2d { .. })));
+    // and the reloaded graph still folds + quantises
+    let prep = quantize_data_free(&back, &DfqConfig::default()).unwrap();
+    assert!(prep.model.folded);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The pipeline report carries the promised diagnostics end to end:
+/// spread before/after CLE, the convergence trace, absorbed mass, and
+/// the bias-correction magnitude — in both renderings.
+#[test]
+fn pipeline_report_has_cle_trace_and_bc_magnitude() {
+    let m = testutil::inception_block_model(631);
+    let (prep, mut report) =
+        quantize_data_free_report(&m, &DfqConfig::default()).unwrap();
+    let (_, qreport) = prep
+        .quantize_report(
+            &QScheme::int8_asymmetric(),
+            8,
+            BiasCorrMode::Analytic,
+            None,
+        )
+        .unwrap();
+    report.extend(qreport);
+
+    let eq = report.get("equalize").expect("equalize pass ran");
+    assert!(!eq.trace.is_empty(), "CLE trace missing");
+    assert!(eq.metric("spread_before").unwrap() >= 1.0);
+    assert!(eq.metric("spread_after").unwrap() >= 1.0);
+    let bc = report.get("bias_correct").expect("bias_correct pass ran");
+    assert!(bc.changed > 0, "no layers corrected");
+    assert!(bc.metric("magnitude").unwrap() > 0.0, "no |db| recorded");
+    let qz = report.get("quantize").expect("quantize pass ran");
+    assert_eq!(qz.metric("int_layers").unwrap() as usize, qz.changed);
+
+    let table = report.table();
+    assert!(table.contains("equalize") && table.contains("convergence"));
+    let json = report.json_lines();
+    assert!(json.contains("\"pass\":\"bias_correct\""));
+    assert!(json.lines().count() >= 6, "one JSON record per pass");
+}

@@ -466,6 +466,102 @@ fn residual_block_plans_fully_integer_and_matches_oracle() {
     }
 }
 
+/// End-to-end acceptance for the branchy-graph ops: the inception-style
+/// fixture (max-pool stem, avg-pool branch, multi-branch concat) plans
+/// with ZERO f32 fallback ops — including under `int8_only` — and
+/// matches the fake-quant oracle within the propagated per-op budget.
+#[test]
+fn inception_block_plans_fully_integer_and_matches_oracle() {
+    for seed in [501u64, 502, 503] {
+        let m = testutil::inception_block_model(seed);
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        let q = prep
+            .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+            .unwrap();
+        // the acceptance bar: the branchy graph stays integer end to end
+        let qm = q.pack_int8_opts(PlanOpts { int8_only: true }).unwrap();
+        assert_eq!(qm.fallback_ops(), 0, "seed {seed}: {}", qm.summary());
+        assert_eq!(qm.f32_layers, 0, "seed {seed}: {}", qm.summary());
+        assert_eq!(qm.int_layers, 6, "seed {seed}: {}", qm.summary());
+        let report = qm.summarize();
+        for needle in [
+            "pool-max [int8]",
+            "pool-avg [int8]",
+            "concat-requant [int8]",
+            "gap [int8]",
+            "linear [int8->f32]",
+        ] {
+            assert!(report.contains(needle), "missing '{needle}' in\n{report}");
+        }
+        assert!(!report.contains("FALLBACK"), "{report}");
+
+        let x = testutil::random_input(&m, 2, seed);
+        let y_or = nn::forward(&q.model, &x, &q.act_cfg).unwrap();
+        let y_int = qm.run(&x).unwrap();
+        assert_eq!(y_int.shape(), y_or[0].shape());
+
+        // Propagated budget. Per op the int path is within one step of
+        // the oracle on identical inputs (max-pool is exact, avg-pool and
+        // GAP add half a step of their input grid); a conv amplifies an
+        // upstream diff by at most its max row L1 norm and adds one step
+        // of its fused site.
+        let layers = q.model.layers();
+        let l1_of = |i: usize| -> f32 {
+            let w = match &layers[i].op {
+                dfq::graph::Op::Conv { w, .. }
+                | dfq::graph::Op::Linear { w, .. } => {
+                    q.model.tensor(w).unwrap()
+                }
+                _ => unreachable!(),
+            };
+            (0..w.shape()[0])
+                .map(|o| w.out_channel(o).iter().map(|v| v.abs()).sum())
+                .fold(0f32, f32::max)
+        };
+        // layers in node order: stem, branch-a, b1, b2, branch-c, head
+        let (amp_a, amp_b1, amp_b2, amp_c, amp_head) =
+            (l1_of(1), l1_of(2), l1_of(3), l1_of(4), l1_of(5));
+        // sites in node order: input, stem act, a act, b1 act, b2 act,
+        // c act, concat
+        let s_stem = q.act_cfg.rows[1].scale;
+        let s_a = q.act_cfg.rows[2].scale;
+        let s_b1 = q.act_cfg.rows[3].scale;
+        let s_b2 = q.act_cfg.rows[4].scale;
+        let s_c = q.act_cfg.rows[5].scale;
+        let s_cat = q.act_cfg.rows[6].scale;
+        let e_stem = s_stem; // max-pool is exact: no extra error
+        let e_a = e_stem * amp_a + s_a;
+        let e_b = (e_stem * amp_b1 + s_b1) * amp_b2 + s_b2;
+        let e_c = (e_stem + 0.5 * s_stem) * amp_c + s_c; // avg-pool + ½ step
+        let e_cat = e_a.max(e_b).max(e_c) + s_cat;
+        let e_gap = e_cat + 0.5 * s_cat;
+        let tol = 1.5 * (e_gap * amp_head) + 1e-3;
+        let diff = y_int.max_abs_diff(&y_or[0]);
+        assert!(
+            diff <= tol,
+            "seed {seed}: end-to-end diff {diff} > budget {tol}"
+        );
+    }
+}
+
+/// Batch-parallel `run_all` over the branchy fixture stays bitwise equal
+/// to the serial path (concat/pool kernels are image-independent too).
+#[test]
+fn inception_batch_parallel_is_bitwise_identical() {
+    let m = testutil::inception_block_model(510);
+    let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+    let q = prep
+        .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+        .unwrap();
+    let qm = q.pack_int8().unwrap();
+    let x = testutil::random_input(&m, 5, 511);
+    let par = qm.run_all(&x).unwrap();
+    let ser = qm.run_batch(&x).unwrap();
+    for (a, b) in par.iter().zip(&ser) {
+        assert_eq!(a.data(), b.data(), "parallel path diverged bitwise");
+    }
+}
+
 /// Batch-parallel `run_all` is bitwise-identical to the serial
 /// whole-batch path (every kernel is image-independent).
 #[test]
