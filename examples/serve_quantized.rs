@@ -31,6 +31,7 @@ fn main() -> dfq::Result<()> {
         max_batch: 16,
         max_delay: Duration::from_millis(2),
         queue_depth: 256,
+        ..ServeConfig::default()
     };
     let mut router = Router::new();
     let (m2, c2) = (q.model.clone(), q.act_cfg.clone());

@@ -1,23 +1,30 @@
 //! Bench: serving coordinator — throughput/latency under Poisson load,
-//! batch-size ablation, batching-window ablation, and the compiled-
-//! artifact boot comparison (full DFQ recompile vs `.dfqm` load). The
-//! L3 §Perf instrument (the paper's deployment motivation: INT8
-//! serving). `--quick` runs only the manifest-free artifact sections
-//! (the CI smoke step).
+//! batch-size ablation, batching-window ablation, the compiled-
+//! artifact boot comparison (full DFQ recompile vs `.dfqm` load), a
+//! registry hot-swap under load (zero dropped requests), and an
+//! autoscale run steering traffic between the f32 and int8 variants.
+//! The L3 §Perf instrument (the paper's deployment motivation: INT8
+//! serving). `--quick` runs only the manifest-free sections (the CI
+//! smoke step).
 
 use std::time::Duration;
 
 use dfq::dfq::{
     bn_fold, quantize_data_free, testutil, BiasCorrMode, DfqConfig,
+    QuantizedModel,
 };
 use dfq::graph::Model;
 use dfq::nn::qengine::{PlanOpts, QModel};
 use dfq::nn::QuantCfg;
 use dfq::quant::QScheme;
 use dfq::runtime::Manifest;
-use dfq::serve::{EngineExecutor, ServeConfig, Server};
+use dfq::serve::registry::VARIANT_INT8;
+use dfq::serve::{
+    AutoscalePolicy, EngineExecutor, Registry, ServeConfig, Server,
+};
 use dfq::tensor::Tensor;
 use dfq::util::bench::{section, Bench};
+use dfq::util::rng::Rng;
 
 /// Boot-time instrument: what a serving host pays to become ready —
 /// replaying the whole DFQ pipeline + planner versus decoding a
@@ -88,9 +95,12 @@ fn artifact_boot_bench() {
     // the bench run, not scroll past on stderr
     let snaps = dfq::serve::demo::run_registry_load(
         dir.to_str().unwrap(),
-        64,
-        500.0,
-        16,
+        dfq::serve::demo::RegistryLoadOpts {
+            requests: 64,
+            rate: 500.0,
+            batch: 16,
+            ..Default::default()
+        },
     )
     .unwrap_or_else(|e| panic!("registry load failed: {e:#}"));
     for (name, snap) in snaps {
@@ -99,12 +109,139 @@ fn artifact_boot_bench() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+fn quantize_resblock(seed: u64) -> QuantizedModel {
+    let model = testutil::residual_block_model(seed);
+    let prep = quantize_data_free(&model, &DfqConfig::default()).unwrap();
+    prep.quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+        .unwrap()
+}
+
+/// Registry lifecycle instrument: hot-swap a `.dfqm` behind a live
+/// client mid-way through a Poisson run and prove zero requests fail —
+/// the pre-swap tail drains on the old server generation while new
+/// arrivals hit the replacement. The output split (old-model outputs vs
+/// new-model outputs) is the falsifiable part: both must be non-zero.
+fn registry_hot_swap_bench() {
+    section("registry — hot swap under Poisson load (zero dropped reqs)");
+    let dir = std::env::temp_dir()
+        .join(format!("dfq-serving-swap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("swap.dfqm");
+    let qa = quantize_resblock(91);
+    let qb = quantize_resblock(92); // same arch, different weights
+    qa.save_artifact(&path, PlanOpts { int8_only: true }).unwrap();
+
+    let mut reg = Registry::new(ServeConfig {
+        max_batch: 16,
+        max_delay: Duration::from_millis(1),
+        queue_depth: 4096,
+        ..ServeConfig::default()
+    });
+    assert_eq!(reg.scan_dir(&dir).unwrap(), vec!["swap"]);
+    let client = reg.live_client("swap", VARIANT_INT8).unwrap();
+
+    let x = testutil::random_input(&qa.model, 1, 5);
+    let want_a = qa.pack_int8().unwrap().run(&x).unwrap();
+    let want_b = qb.pack_int8().unwrap().run(&x).unwrap();
+    assert_ne!(want_a.data(), want_b.data(), "swap would be invisible");
+
+    let requests = 200usize;
+    let mut rng = Rng::new(4242);
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        if i == requests / 2 {
+            // overwrite the artifact and swap it in under live load
+            qb.save_artifact(&path, PlanOpts { int8_only: true }).unwrap();
+            reg.reload("swap").unwrap();
+        }
+        pending.push(client.submit(x.clone()).unwrap());
+        let gap = rng.exp(2000.0);
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
+        }
+    }
+    let (mut served_old, mut served_new, mut failed) = (0u64, 0u64, 0u64);
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(y)) if y.data() == want_a.data() => served_old += 1,
+            Ok(Ok(y)) if y.data() == want_b.data() => served_new += 1,
+            _ => failed += 1,
+        }
+    }
+    assert_eq!(failed, 0, "hot swap dropped {failed} request(s)");
+    assert!(
+        served_old > 0 && served_new > 0,
+        "expected both generations to serve (old {served_old}, new \
+         {served_new})"
+    );
+    println!(
+        "{{\"name\":\"serve/hot-swap\",\"requests\":{requests},\
+         \"failed\":{failed},\"served_old\":{served_old},\
+         \"served_new\":{served_new},\"swaps\":1}}"
+    );
+    for (model, variant, snap) in reg.shutdown() {
+        println!("registry[{model}/{variant}] {}", snap.report());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Autoscale instrument: an in-memory registration hosts the f32 oracle
+/// and the int8 plan; a mid-run burst builds queue depth on the oracle
+/// and the policy sheds to int8. The JSON record shows the router
+/// shifting traffic between the variants.
+fn autoscale_bench() {
+    section("autoscale — metrics-driven f32 <-> int8 steering");
+    let q = quantize_resblock(93);
+    let x = testutil::random_input(&q.model, 1, 7);
+    let mut reg = Registry::new(ServeConfig {
+        max_batch: 16,
+        max_delay: Duration::from_millis(1),
+        queue_depth: 4096,
+        autoscale: Some(AutoscalePolicy {
+            queue_shed: 2,
+            queue_recover: 1,
+            min_window: 4,
+            min_dwell: 2,
+            tick_every: 4,
+            ..AutoscalePolicy::default()
+        }),
+        ..ServeConfig::default()
+    });
+    reg.register_quantized("resblock", q).unwrap();
+    let client = reg.adaptive_client("resblock").unwrap();
+    let failed =
+        dfq::serve::demo::drive_adaptive(&client, &[x], 96, 400.0, 64)
+            .unwrap();
+    assert_eq!(failed, 0, "autoscale run dropped {failed} request(s)");
+    let report = client.report();
+    assert!(
+        !report.transitions.is_empty(),
+        "burst of 64 back-to-back requests never tripped the autoscaler"
+    );
+    assert!(
+        report.routed_f32 > 0 && report.routed_int8 > 0,
+        "traffic never shifted (f32 {}, int8 {})",
+        report.routed_f32,
+        report.routed_int8
+    );
+    println!("{}", report.summary_line());
+    for t in &report.transitions {
+        println!("  {}", t.describe());
+    }
+    println!("{}", report.json("serve/autoscale"));
+    for (model, variant, snap) in reg.shutdown() {
+        println!("registry[{model}/{variant}] {}", snap.report());
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     if quick {
         std::env::set_var("DFQ_BENCH_FAST", "1");
     }
     artifact_boot_bench();
+    registry_hot_swap_bench();
+    autoscale_bench();
     if quick {
         return;
     }
@@ -164,6 +301,7 @@ fn main() {
                 max_batch: 32,
                 max_delay: Duration::from_millis(delay_ms),
                 queue_depth: 2048,
+                ..ServeConfig::default()
             },
             move || {
                 let cfg = QuantCfg::fp32(&m2);

@@ -1,13 +1,13 @@
 //! Quantization bias correction (paper §4.2, appendices B–D).
 //!
 //! Weight quantisation introduces a *biased* error on layer outputs:
-//! E[ỹ] = E[y] + ε·E[x] with ε = W̃ − W. Subtracting ε·E[x] from the
-//! layer bias restores the FP32 output means.
+//! `E[ỹ] = E[y] + ε·E[x]` with `ε = W̃ − W`. Subtracting `ε·E[x]` from
+//! the layer bias restores the FP32 output means.
 //!
-//! * **Analytic** (level 1, data-free): E[x] comes from the clipped-normal
-//!   pushforward of the folded BatchNorm statistics (§4.2.1, App. C) via
-//!   [`crate::graph::stats::propagate`].
-//! * **Empirical** (level 2, App. D): E[x] is measured on calibration
+//! * **Analytic** (level 1, data-free): `E[x]` comes from the
+//!   clipped-normal pushforward of the folded BatchNorm statistics
+//!   (§4.2.1, App. C) via [`crate::graph::stats::propagate`].
+//! * **Empirical** (level 2, App. D): `E[x]` is measured on calibration
 //!   data, correcting layers in topological order on the
 //!   weights-quantised / activations-FP32 network.
 
@@ -48,7 +48,7 @@ pub fn analytic_traced(
     Ok((corrected, magnitude))
 }
 
-/// Subtract ε·E[x] from layer `id`'s bias. Returns 1 if a correction was
+/// Subtract `ε·E[x]` from layer `id`'s bias. Returns 1 if a correction was
 /// applied. `ex` is per input channel (paper App. B: the expected error
 /// is spatially constant, so it folds into the bias).
 fn correct_layer(

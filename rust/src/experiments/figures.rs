@@ -137,7 +137,7 @@ pub fn fig2_fig6(ctx: &mut Context) -> Result<Vec<Table>> {
 /// Fig. 3 — per-channel biased output error of the second depthwise
 /// layer introduced by INT8 weight quantisation, before and after
 /// analytic bias correction. Errors measured on calibration data
-/// (eq. 1: E[ỹ − y] per output channel).
+/// (eq. 1: `E[ỹ − y]` per output channel).
 pub fn fig3(ctx: &mut Context) -> Result<Table> {
     let model = ctx.model(V2)?;
     // measured on the *unequalized* model, where per-tensor quantisation

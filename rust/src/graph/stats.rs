@@ -5,7 +5,7 @@
 //! module propagates those Gaussians through act / add / gap nodes to
 //! obtain, for **every tensor** in the folded graph:
 //!
-//! * the expected value E[x] per channel — consumed by the analytic bias
+//! * the expected value `E[x]` per channel — consumed by the analytic bias
 //!   correction (eq. 17), and
 //! * a per-tensor activation range (β ± n·γ, n = 6; §5 experimental
 //!   setup) — consumed by the activation quantiser.
@@ -125,7 +125,8 @@ pub fn propagate(model: &Model) -> Result<HashMap<usize, TensorStats>> {
     Ok(out)
 }
 
-/// E[y], Std[y] for a conv without BN stats: y = W x + b with x per-channel
+/// `E[y]`, `Std[y]` for a conv without BN stats: `y = W x + b` with x
+/// per-channel
 /// Gaussian and channels independent.
 fn conv_pushforward(
     model: &Model,

@@ -112,8 +112,10 @@
 //! [`quant`]/[`tensor`] (grids and integer codes) → [`nn`]
 //! (f32 oracle + the [`nn::qengine`] integer planner/kernels) →
 //! [`artifact`] (compiled-plan serialisation) → [`serve`]
-//! (batching servers, router, multi-model registry) → [`runtime`]
-//! (PJRT), with [`eval`]/[`experiments`] reproducing the paper's tables.
+//! (batching servers, router, the [`serve::autoscale`] variant
+//! autoscaler, and the multi-model registry with hot-swap/eviction
+//! lifecycle) → [`runtime`] (PJRT), with [`eval`]/[`experiments`]
+//! reproducing the paper's tables.
 
 pub mod artifact;
 pub mod dfq;

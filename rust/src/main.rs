@@ -1,16 +1,22 @@
 //! `dfq` CLI — the L3 leader entrypoint.
 //!
-//! Subcommands:
-//!   table <1..8|all>      regenerate a paper table
-//!   fig <1|2|3|6>         regenerate a paper figure (CSV series)
-//!   quantize <arch> [...] run the DFQ pipeline, save the quantised model
-//!   compile <arch> [...]  run DFQ once, write a compiled .dfqm artifact
-//!   report <arch> [...]   run the instrumented pass pipeline, print the
-//!                         per-pass diagnostics table (or JSON records)
-//!   eval <arch> [...]     evaluate a model (fp32 / int8 / dfq variants)
-//!   serve <arch> [...]    start the batching server + synthetic load
-//!   serve --models DIR    multi-model registry serving over artifacts
-//!   inspect <arch|.dfqm>  model structure / compiled-artifact report
+//! Subcommands (see `docs/CLI.md` for the full reference):
+//!
+//! ```text
+//! table <1..8|all>      regenerate a paper table
+//! fig <1|2|3|6>         regenerate a paper figure (CSV series)
+//! quantize <arch> [...] run the DFQ pipeline, save the quantised model
+//! compile <arch> [...]  run DFQ once, write a compiled .dfqm artifact
+//! report <arch> [...]   run the instrumented pass pipeline, print the
+//!                       per-pass diagnostics table (or JSON records)
+//! eval <arch> [...]     evaluate a model (fp32 / int8 / dfq variants)
+//! serve <arch> [...]    start the batching server + synthetic load
+//!                       (--autoscale steers f32 <-> int8 adaptively)
+//! serve --models DIR    multi-model registry serving over artifacts
+//!                       (--watch hot-swaps changed files, --max-resident
+//!                       caps loaded models with LRU eviction)
+//! inspect <arch|.dfqm>  model structure / compiled-artifact report
+//! ```
 //!
 //! Hand-rolled argument parsing (no clap in the offline crate set).
 
@@ -50,9 +56,13 @@ fn usage() -> ! {
                   fixtures: two_layer | resblock | inception\n\
            eval <arch> [--mode fp32|baseline|dfq] [--bits N] [--limit N]\n\
            serve <arch> [--requests N] [--rate R] [--batch N]\n\
-                 [--backend pjrt|engine|qengine]\n\
+                 [--backend pjrt|engine|qengine] [--autoscale]\n\
+                 --autoscale: steer f32 <-> int8 from live metrics\n\
            serve --models DIR [--requests N] [--rate R] [--batch N]\n\
-                 multi-model registry over compiled artifacts\n\
+                 [--watch] [--max-resident N]\n\
+                 multi-model registry over compiled artifacts;\n\
+                 --watch hot-swaps changed .dfqm files mid-run,\n\
+                 --max-resident caps loaded models (LRU eviction)\n\
            inspect <arch|artifact.dfqm>\n\
          \n\
          env: DFQ_ARTIFACTS (artifacts dir),\n\
@@ -78,7 +88,12 @@ fn flags(rest: &[String]) -> (Vec<&String>, HashMap<String, String>) {
         } else if let Some(name) = a.strip_prefix("--") {
             let boolean = matches!(
                 name,
-                "per-channel" | "symmetric" | "allow-fallback" | "json"
+                "per-channel"
+                    | "symmetric"
+                    | "allow-fallback"
+                    | "json"
+                    | "autoscale"
+                    | "watch"
             );
             if boolean {
                 kv.insert(name.to_string(), "true".to_string());
@@ -340,8 +355,18 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     // multi-tenant mode: a directory of compiled artifacts served
     // through the registry (no manifest, no DFQ pipeline at boot)
     if let Some(dir) = kv.get("models") {
-        let snaps =
-            dfq::serve::demo::run_registry_load(dir, requests, rate, batch)?;
+        let opts = dfq::serve::demo::RegistryLoadOpts {
+            requests,
+            rate,
+            batch,
+            max_resident: kv
+                .get("max-resident")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(0),
+            watch: kv.contains_key("watch"),
+        };
+        let snaps = dfq::serve::demo::run_registry_load(dir, opts)?;
         for (name, snap) in snaps {
             println!("serve[{name}] {}", snap.report());
         }
@@ -352,6 +377,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .map(|s| s.as_str())
         .unwrap_or("micronet_v2")
         .to_string();
+    // adaptive mode: both variants behind the metrics-driven autoscaler
+    if kv.contains_key("autoscale") {
+        return dfq::serve::demo::run_adaptive_load(
+            &arch, requests, rate, batch,
+        );
+    }
     // explicit flag wins; otherwise DFQ_BACKEND (default pjrt)
     let backend = match kv.get("backend") {
         Some(s) => dfq::serve::demo::ServeBackend::parse(s)?,

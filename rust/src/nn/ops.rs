@@ -207,7 +207,7 @@ pub fn upsample_nearest(x: &Tensor, f: usize) -> Tensor {
     out
 }
 
-/// Linear layer y[n, o] = x[n, i] @ w[o, i]^T + b[o].
+/// Linear layer `y[n, o] = x[n, i] @ w[o, i]^T + b[o]`.
 pub fn linear(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
     let (n, in_dim) = (x.shape()[0], x.shape()[1]);
     let out_dim = w.shape()[0];

@@ -1,0 +1,551 @@
+//! Metrics-driven variant autoscaling: steer a model's traffic between
+//! the `f32` oracle and the true-int8 plan from live serving metrics.
+//!
+//! The paper's deployment pitch is that the int8 model is the *cheap*
+//! variant of the same network; a serving host can therefore treat the
+//! pair as a two-rung autoscaling ladder. [`Autoscaler`] is the policy:
+//! a deterministic state machine that consumes per-window observations
+//! of the **active** variant ([`Obs`]: live queue depth + windowed p95
+//! latency from [`Metrics::window_from`](super::Metrics::window_from))
+//! and decides which variant should take new traffic:
+//!
+//! ```text
+//!             queue >= queue_shed  OR  window p95 >= p95_shed
+//!        F32 ────────────────────────────────────────────────▶ Int8
+//!      (oracle)                                             (cheap)
+//!        ◀────────────────────────────────────────────────
+//!             queue <= queue_recover AND window p95 <= p95_recover
+//!                        (or the lane went fully idle)
+//! ```
+//!
+//! Flap control is two-fold: the recover thresholds are *stricter* than
+//! the shed thresholds (classic hysteresis band), and every switch arms
+//! a dwell counter of [`AutoscalePolicy::min_dwell`] ticks during which
+//! no further switch is considered.
+//!
+//! [`AdaptiveClient`] is the mechanism: a submission handle over both
+//! variants of one router that ticks the policy every
+//! [`AutoscalePolicy::tick_every`] submissions and routes each request
+//! to the currently-selected variant. Obtain one from
+//! [`Registry::adaptive_client`](super::Registry::adaptive_client)
+//! (in-memory registrations host both variants) or build one from any
+//! router's lanes; drive it from the CLI with `dfq serve <arch>
+//! --autoscale`.
+
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+use crate::util::bench::fmt_secs;
+
+use super::metrics::WindowCursor;
+use super::{Client, Metrics};
+
+/// Which variant of a model takes new traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// The fake-quant f32 oracle (reference quality).
+    F32,
+    /// The true-int8 execution plan (cheap, shed target).
+    Int8,
+}
+
+impl Target {
+    /// The registry variant name this target routes to.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Target::F32 => "f32",
+            Target::Int8 => "int8",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Target::F32 => 0,
+            Target::Int8 => 1,
+        }
+    }
+}
+
+/// Thresholds and flap control for the [`Autoscaler`]. All fields are
+/// plain data so the policy can ride inside
+/// [`ServeConfig`](super::ServeConfig).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscalePolicy {
+    /// Shed to int8 when the active window's p95 latency reaches this.
+    pub p95_shed: Duration,
+    /// Return to f32 only when the window p95 is back below this
+    /// (stricter than `p95_shed` — the hysteresis band).
+    pub p95_recover: Duration,
+    /// Shed to int8 when the live queue depth reaches this.
+    pub queue_shed: usize,
+    /// Return to f32 only when the queue is at most this deep.
+    pub queue_recover: usize,
+    /// Minimum completed requests in a window before its p95 counts as
+    /// *shed* evidence (recovery accepts any calm window — see
+    /// [`Autoscaler::tick`]).
+    pub min_window: usize,
+    /// Ticks to hold the new target after any switch (anti-flap dwell).
+    pub min_dwell: u32,
+    /// Submissions between policy ticks in [`AdaptiveClient`].
+    pub tick_every: u32,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            p95_shed: Duration::from_millis(25),
+            p95_recover: Duration::from_millis(8),
+            queue_shed: 32,
+            queue_recover: 2,
+            min_window: 8,
+            min_dwell: 4,
+            tick_every: 16,
+        }
+    }
+}
+
+/// One observation window of the **active** variant.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Obs {
+    /// Live queue depth (submitted, not yet picked up by the worker).
+    pub queue_depth: usize,
+    /// Requests completed in this window.
+    pub window_n: usize,
+    /// p95 latency over the window (`None` when the window is empty).
+    pub window_p95: Option<Duration>,
+}
+
+/// One recorded target switch (the autoscale trace).
+#[derive(Debug, Clone)]
+pub struct Transition {
+    /// Tick number at which the switch happened (1-based).
+    pub tick: u64,
+    pub from: Target,
+    pub to: Target,
+    /// Human-readable trigger, e.g. `queue 41 >= 32`.
+    pub reason: String,
+}
+
+impl Transition {
+    /// One log line, e.g. `tick 12: f32 -> int8 (queue 41 >= 32)`.
+    pub fn describe(&self) -> String {
+        format!(
+            "tick {}: {} -> {} ({})",
+            self.tick,
+            self.from.as_str(),
+            self.to.as_str(),
+            self.reason
+        )
+    }
+}
+
+/// The deterministic steering state machine. Pure policy — it never
+/// touches a queue or a thread, so every trajectory is unit-testable.
+#[derive(Debug)]
+pub struct Autoscaler {
+    policy: AutoscalePolicy,
+    target: Target,
+    dwell: u32,
+    ticks: u64,
+    transitions: Vec<Transition>,
+}
+
+impl Autoscaler {
+    /// Starts on the f32 oracle (quality-first; load sheds to int8).
+    pub fn new(policy: AutoscalePolicy) -> Autoscaler {
+        Autoscaler {
+            policy,
+            target: Target::F32,
+            dwell: 0,
+            ticks: 0,
+            transitions: Vec::new(),
+        }
+    }
+
+    /// The variant new traffic should go to.
+    pub fn target(&self) -> Target {
+        self.target
+    }
+
+    /// Every switch so far, in order.
+    pub fn transitions(&self) -> &[Transition] {
+        &self.transitions
+    }
+
+    /// Feed one observation window of the active variant; returns the
+    /// (possibly new) target. Within `min_dwell` ticks of a switch the
+    /// observation only burns dwell — no decision is made.
+    pub fn tick(&mut self, obs: &Obs) -> Target {
+        self.ticks += 1;
+        if self.dwell > 0 {
+            self.dwell -= 1;
+            return self.target;
+        }
+        let p = self.policy;
+        match self.target {
+            Target::F32 => {
+                let p95_hot = obs.window_n >= p.min_window
+                    && obs.window_p95.is_some_and(|l| l >= p.p95_shed);
+                if obs.queue_depth >= p.queue_shed {
+                    self.switch(
+                        Target::Int8,
+                        format!(
+                            "queue {} >= {}",
+                            obs.queue_depth, p.queue_shed
+                        ),
+                    );
+                } else if p95_hot {
+                    self.switch(
+                        Target::Int8,
+                        format!(
+                            "p95 {} >= {}",
+                            fmt_secs(obs.window_p95.unwrap().as_secs_f64()),
+                            fmt_secs(p.p95_shed.as_secs_f64())
+                        ),
+                    );
+                }
+            }
+            Target::Int8 => {
+                let calm_queue = obs.queue_depth <= p.queue_recover;
+                // `min_window` gates *shedding* (do not overreact to a
+                // sparse hot window); recovery is the safe direction, so
+                // any calm evidence counts — an idle lane, or a window
+                // of any size whose p95 is under the recover line.
+                // Otherwise a steady trickle (1..min_window completions
+                // per window) could pin the router on int8 forever.
+                let calm_p95 = obs.window_n == 0
+                    || obs.window_p95.is_some_and(|l| l <= p.p95_recover);
+                if calm_queue && calm_p95 {
+                    self.switch(
+                        Target::F32,
+                        format!(
+                            "recovered: queue {} <= {}, window calm",
+                            obs.queue_depth, p.queue_recover
+                        ),
+                    );
+                }
+            }
+        }
+        self.target
+    }
+
+    fn switch(&mut self, to: Target, reason: String) {
+        self.transitions.push(Transition {
+            tick: self.ticks,
+            from: self.target,
+            to,
+            reason,
+        });
+        self.target = to;
+        self.dwell = self.policy.min_dwell;
+    }
+}
+
+struct Lane {
+    client: Client,
+    metrics: Arc<Metrics>,
+    cursor: WindowCursor,
+    routed: u64,
+}
+
+struct Shared {
+    lanes: [Lane; 2], // indexed by Target::idx()
+    scaler: Autoscaler,
+    submitted: u64,
+}
+
+/// A submission handle that routes each request to the variant the
+/// [`Autoscaler`] currently selects. Cheap to clone; clones share the
+/// policy state, so concurrent submitters steer together.
+///
+/// The two lanes are bound to the server generation they were built
+/// from: if the model behind them is hot-swapped or evicted (see the
+/// registry lifecycle), submissions error and a fresh handle must be
+/// obtained — unlike
+/// [`registry::LiveClient`](super::registry::LiveClient), this handle
+/// does not follow swaps.
+#[derive(Clone)]
+pub struct AdaptiveClient {
+    shared: Arc<Mutex<Shared>>,
+}
+
+impl AdaptiveClient {
+    /// Build from the two lanes of one model: `(client, metrics)` of the
+    /// f32 oracle variant and of the int8 variant (see
+    /// [`Router::lane`](super::Router::lane)).
+    pub fn new(
+        f32_lane: (Client, Arc<Metrics>),
+        int8_lane: (Client, Arc<Metrics>),
+        policy: AutoscalePolicy,
+    ) -> AdaptiveClient {
+        let lane = |(client, metrics): (Client, Arc<Metrics>)| Lane {
+            client,
+            metrics,
+            cursor: WindowCursor::default(),
+            routed: 0,
+        };
+        AdaptiveClient {
+            shared: Arc::new(Mutex::new(Shared {
+                lanes: [lane(f32_lane), lane(int8_lane)],
+                scaler: Autoscaler::new(policy),
+                submitted: 0,
+            })),
+        }
+    }
+
+    /// The variant the next submission will route to.
+    pub fn target(&self) -> Target {
+        self.shared.lock().unwrap().scaler.target()
+    }
+
+    /// Submit one image (1, C, H, W) to the currently-selected variant;
+    /// every `tick_every`-th submission first feeds the policy a fresh
+    /// observation window of the active lane.
+    pub fn submit(&self, x: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        let client = {
+            let mut guard = self.shared.lock().unwrap();
+            let s = &mut *guard;
+            s.submitted += 1;
+            let every = s.scaler.policy.tick_every.max(1) as u64;
+            if s.submitted % every == 0 {
+                let lane = &mut s.lanes[s.scaler.target().idx()];
+                let (cursor, window) =
+                    lane.metrics.window_from(lane.cursor);
+                lane.cursor = cursor;
+                let obs = Obs {
+                    queue_depth: lane.metrics.queue_depth() as usize,
+                    window_n: window.map_or(0, |w| w.n),
+                    window_p95: window
+                        .map(|w| Duration::from_secs_f64(w.p95)),
+                };
+                s.scaler.tick(&obs);
+            }
+            let lane = &mut s.lanes[s.scaler.target().idx()];
+            lane.routed += 1;
+            lane.client.clone()
+        };
+        // the send happens outside the lock: a full queue blocks this
+        // submitter, not every clone of the adaptive client
+        client.submit(x)
+    }
+
+    /// Submit and block for the answer.
+    pub fn infer(&self, x: Tensor) -> Result<Tensor> {
+        self.submit(x)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+    }
+
+    /// Routing totals + the full transition trace so far.
+    pub fn report(&self) -> AdaptiveReport {
+        let s = self.shared.lock().unwrap();
+        AdaptiveReport {
+            routed_f32: s.lanes[Target::F32.idx()].routed,
+            routed_int8: s.lanes[Target::Int8.idx()].routed,
+            transitions: s.scaler.transitions().to_vec(),
+            target: s.scaler.target(),
+        }
+    }
+}
+
+/// What an adaptive session did: where traffic went and every switch.
+#[derive(Debug, Clone)]
+pub struct AdaptiveReport {
+    pub routed_f32: u64,
+    pub routed_int8: u64,
+    pub transitions: Vec<Transition>,
+    /// Target at report time.
+    pub target: Target,
+}
+
+impl AdaptiveReport {
+    /// One human-readable summary line.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "routed {} -> f32, {} -> int8  ({} transition(s), final {})",
+            self.routed_f32,
+            self.routed_int8,
+            self.transitions.len(),
+            self.target.as_str()
+        )
+    }
+
+    /// One machine-readable record (same line-per-record convention as
+    /// the bench JSON).
+    pub fn json(&self, name: &str) -> String {
+        format!(
+            "{{\"name\":{:?},\"routed_f32\":{},\"routed_int8\":{},\
+             \"transitions\":{},\"final\":{:?}}}",
+            name,
+            self.routed_f32,
+            self.routed_int8,
+            self.transitions.len(),
+            self.target.as_str()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AutoscalePolicy {
+        AutoscalePolicy {
+            p95_shed: Duration::from_millis(20),
+            p95_recover: Duration::from_millis(5),
+            queue_shed: 8,
+            queue_recover: 1,
+            min_window: 4,
+            min_dwell: 2,
+            tick_every: 1,
+        }
+    }
+
+    fn obs(depth: usize, n: usize, p95_ms: u64) -> Obs {
+        Obs {
+            queue_depth: depth,
+            window_n: n,
+            window_p95: if n == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(p95_ms))
+            },
+        }
+    }
+
+    #[test]
+    fn sheds_on_queue_depth() {
+        let mut a = Autoscaler::new(policy());
+        assert_eq!(a.target(), Target::F32);
+        assert_eq!(a.tick(&obs(7, 0, 0)), Target::F32); // below threshold
+        assert_eq!(a.tick(&obs(9, 0, 0)), Target::Int8);
+        let t = &a.transitions()[0];
+        assert_eq!((t.from, t.to), (Target::F32, Target::Int8));
+        assert!(t.reason.contains("queue"), "{}", t.reason);
+        assert!(t.describe().contains("f32 -> int8"));
+    }
+
+    #[test]
+    fn sheds_on_windowed_p95_but_not_on_sparse_windows() {
+        let mut a = Autoscaler::new(policy());
+        // 2 completions < min_window: a hot p95 over a sparse window is
+        // not evidence
+        assert_eq!(a.tick(&obs(0, 2, 500)), Target::F32);
+        assert_eq!(a.tick(&obs(0, 8, 30)), Target::Int8);
+        assert!(a.transitions()[0].reason.contains("p95"));
+    }
+
+    #[test]
+    fn dwell_holds_the_target_after_a_switch() {
+        let mut a = Autoscaler::new(policy());
+        a.tick(&obs(20, 0, 0)); // shed, arms dwell = 2
+        let calm = obs(0, 8, 1);
+        assert_eq!(a.tick(&calm), Target::Int8); // dwell 2 -> 1
+        assert_eq!(a.tick(&calm), Target::Int8); // dwell 1 -> 0
+        assert_eq!(a.tick(&calm), Target::F32); // now free to recover
+        assert_eq!(a.transitions().len(), 2);
+    }
+
+    #[test]
+    fn hysteresis_band_blocks_recovery() {
+        let mut a = Autoscaler::new(policy());
+        a.tick(&obs(20, 0, 0)); // shed
+        a.tick(&obs(0, 8, 1)); // burn dwell
+        a.tick(&obs(0, 8, 1));
+        // p95 10ms is below the 20ms shed line but above the 5ms recover
+        // line: inside the band nothing moves, in either direction
+        for _ in 0..10 {
+            assert_eq!(a.tick(&obs(0, 8, 10)), Target::Int8);
+        }
+        // queue still deep: no recovery either
+        assert_eq!(a.tick(&obs(3, 8, 1)), Target::Int8);
+        // genuinely calm: recover
+        assert_eq!(a.tick(&obs(0, 8, 1)), Target::F32);
+    }
+
+    #[test]
+    fn idle_lane_counts_as_recovered() {
+        let mut a = Autoscaler::new(policy());
+        a.tick(&obs(20, 0, 0)); // shed
+        a.tick(&obs(0, 0, 0)); // dwell
+        a.tick(&obs(0, 0, 0)); // dwell
+        // no traffic at all: empty window + empty queue means healthy
+        assert_eq!(a.tick(&obs(0, 0, 0)), Target::F32);
+    }
+
+    #[test]
+    fn trickle_traffic_still_recovers() {
+        let mut a = Autoscaler::new(policy());
+        a.tick(&obs(20, 0, 0)); // shed
+        a.tick(&obs(0, 2, 1)); // dwell
+        a.tick(&obs(0, 2, 1)); // dwell
+        // 2 completions per window is below min_window, but min_window
+        // only gates shedding: sparse *calm* evidence must not pin the
+        // router on int8 forever
+        assert_eq!(a.tick(&obs(0, 2, 1)), Target::F32);
+        // while a sparse window above the recover line still holds
+        let mut b = Autoscaler::new(policy());
+        b.tick(&obs(20, 0, 0));
+        b.tick(&obs(0, 2, 10));
+        b.tick(&obs(0, 2, 10));
+        assert_eq!(b.tick(&obs(0, 2, 10)), Target::Int8);
+    }
+
+    #[test]
+    fn adaptive_client_routes_and_reports() {
+        use crate::dfq::{bn_fold, testutil};
+        use crate::nn::QuantCfg;
+        use crate::serve::{
+            EngineExecutor, Router, ServeConfig, Server,
+        };
+
+        let start = |seed| {
+            let model =
+                bn_fold::fold(&testutil::two_layer_model(seed, true))
+                    .unwrap();
+            let cfg = QuantCfg::fp32(&model);
+            Server::start(ServeConfig::default(), move || {
+                Ok(Box::new(EngineExecutor {
+                    model,
+                    cfg,
+                    max_batch: 8,
+                }))
+            })
+        };
+        let mut router = Router::new();
+        router.add("f32", start(81));
+        router.add("int8", start(81));
+        // queue_shed = 0 makes the very first tick shed, and a dwell
+        // longer than the run pins the target afterwards: the routing
+        // split below is fully deterministic
+        let p = AutoscalePolicy {
+            queue_shed: 0,
+            min_dwell: 16,
+            tick_every: 1,
+            ..AutoscalePolicy::default()
+        };
+        let client = AdaptiveClient::new(
+            router.lane("f32").unwrap(),
+            router.lane("int8").unwrap(),
+            p,
+        );
+        assert_eq!(client.target(), Target::F32);
+        let x = crate::tensor::Tensor::full(&[1, 3, 8, 8], 0.5);
+        for _ in 0..4 {
+            client.infer(x.clone()).unwrap();
+        }
+        assert_eq!(client.target(), Target::Int8);
+        let rep = client.report();
+        assert_eq!(rep.routed_f32, 0, "first tick precedes first route");
+        assert_eq!(rep.routed_int8, 4);
+        assert_eq!(rep.transitions.len(), 1);
+        assert!(rep.summary_line().contains("transition"));
+        let j = rep.json("autoscale/test");
+        assert!(j.contains("\"routed_int8\":4"), "{j}");
+        router.shutdown();
+    }
+}

@@ -14,8 +14,9 @@ use crate::graph::Model;
 use crate::quant::QScheme;
 use crate::runtime::{Manifest, Runtime};
 use crate::serve::{
-    registry, BatchExecutor, EngineExecutor, PjrtExecutor, QuantExecutor,
-    Registry, ServeConfig, Server, Snapshot,
+    registry, AdaptiveClient, AutoscalePolicy, BatchExecutor,
+    EngineExecutor, PjrtExecutor, QuantExecutor, Registry, ServeConfig,
+    Server, Snapshot,
 };
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -102,6 +103,7 @@ pub fn run_load_quiet(
             max_batch: batch,
             max_delay: Duration::from_millis(3),
             queue_depth: 4096,
+            ..ServeConfig::default()
         },
         move || {
             // constructed on the worker thread: PJRT handles are !Send
@@ -175,31 +177,60 @@ pub fn run_load_quiet(
     Ok(server.shutdown())
 }
 
+/// Options for [`run_registry_load`] (`dfq serve --models dir/`).
+#[derive(Debug, Clone, Copy)]
+pub struct RegistryLoadOpts {
+    pub requests: usize,
+    /// Poisson arrival rate, req/s.
+    pub rate: f64,
+    pub batch: usize,
+    /// Resident-model cap (0 = unbounded): exceeding it evicts the
+    /// least-recently-used model, which lazily re-loads on next use.
+    pub max_resident: usize,
+    /// Poll the artifact files during the run and hot-swap any model
+    /// whose `.dfqm` changed on disk (`dfq serve --models dir/ --watch`).
+    pub watch: bool,
+}
+
+impl Default for RegistryLoadOpts {
+    fn default() -> Self {
+        RegistryLoadOpts {
+            requests: 256,
+            rate: 200.0,
+            batch: 64,
+            max_resident: 0,
+            watch: false,
+        }
+    }
+}
+
 /// Multi-tenant load over a directory of compiled `.dfqm` artifacts:
 /// scan + load every model into a [`Registry`] (no python manifest, no
 /// DFQ re-run — the plans boot straight off the artifact bytes), fire
-/// `requests` Poisson arrivals round-robin across models on the int8
-/// variant, and return per-`model/variant` metrics. Used by
+/// Poisson arrivals round-robin across models on the int8 variant, and
+/// return per-`model/variant` metrics (one entry per server generation
+/// when hot swaps or evictions happened). Used by
 /// `dfq serve --models dir/` and the serving bench.
 pub fn run_registry_load(
     dir: &str,
-    requests: usize,
-    rate: f64,
-    batch: usize,
+    opts: RegistryLoadOpts,
 ) -> Result<Vec<(String, Snapshot)>> {
+    let RegistryLoadOpts { requests, rate, batch, max_resident, watch } =
+        opts;
     let mut reg = Registry::new(ServeConfig {
         max_batch: batch,
         max_delay: Duration::from_millis(3),
         queue_depth: 4096,
+        max_resident,
+        ..ServeConfig::default()
     });
     let names = reg.scan_dir(dir)?;
     if names.is_empty() {
         bail!("no compiled .dfqm artifacts found in {dir}");
     }
-    // load every model up front (lazy loading is for request-path use;
-    // a load generator wants the boot cost out of the measured window)
+    // probe every model once for its input shape (under a resident cap
+    // this also exercises evict → lazy re-load before the measured load)
     let mut inputs = Vec::with_capacity(names.len());
-    let mut clients = Vec::with_capacity(names.len());
     let mut rng = Rng::new(4242);
     for name in &names {
         let info = reg.info(name)?;
@@ -207,12 +238,25 @@ pub fn run_registry_load(
         let [c, h, w] = info.input_shape;
         let data: Vec<f32> = (0..c * h * w).map(|_| rng.f32()).collect();
         inputs.push(Tensor::new(&[1, c, h, w], data));
-        clients.push(reg.client(name, registry::VARIANT_INT8)?);
     }
     let mut pending = Vec::with_capacity(requests);
     for i in 0..requests {
+        if watch && i > 0 && i % 64 == 0 {
+            for (name, r) in reg.poll_files() {
+                match r {
+                    Ok(()) => eprintln!("[serve] hot-swapped '{name}'"),
+                    Err(e) => eprintln!(
+                        "[serve] swap of '{name}' failed (old model keeps \
+                         serving): {e:#}"
+                    ),
+                }
+            }
+        }
         let k = i % names.len();
-        pending.push(clients[k].submit(inputs[k].clone())?);
+        // route through the registry each time: under a resident cap
+        // this is what re-loads evicted models lazily
+        let client = reg.live_client(&names[k], registry::VARIANT_INT8)?;
+        pending.push(client.submit(inputs[k].clone())?);
         let gap = rng.exp(rate);
         if gap > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
@@ -226,4 +270,90 @@ pub fn run_registry_load(
         .into_iter()
         .map(|(model, variant, snap)| (format!("{model}/{variant}"), snap))
         .collect())
+}
+
+/// Drive Poisson arrivals through an [`AdaptiveClient`], with a burst
+/// of `burst` back-to-back submissions injected at the halfway point to
+/// build queue depth (the shed trigger). Waits for every response;
+/// returns how many requests failed (0 on a healthy run).
+pub fn drive_adaptive(
+    client: &AdaptiveClient,
+    inputs: &[Tensor],
+    requests: usize,
+    rate: f64,
+    burst: usize,
+) -> Result<u64> {
+    let mut rng = Rng::new(4242);
+    let mut pending = Vec::with_capacity(requests + burst);
+    for i in 0..requests {
+        pending.push(client.submit(inputs[i % inputs.len()].clone())?);
+        if i == requests / 2 {
+            for j in 0..burst {
+                pending
+                    .push(client.submit(inputs[j % inputs.len()].clone())?);
+            }
+        }
+        let gap = rng.exp(rate);
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
+        }
+    }
+    let mut failed = 0u64;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => {}
+            _ => failed += 1,
+        }
+    }
+    Ok(failed)
+}
+
+/// `dfq serve <arch> --autoscale`: host the f32 oracle and the int8
+/// plan of one DFQ-quantised model behind an [`AdaptiveClient`] and
+/// fire Poisson load (plus a mid-run burst) so the autoscaler steers
+/// between them; prints the routing split, the transition trace and a
+/// JSON record.
+pub fn run_adaptive_load(
+    arch: &str,
+    requests: usize,
+    rate: f64,
+    batch: usize,
+) -> Result<()> {
+    let manifest = Manifest::load(crate::artifacts_dir())?;
+    let entry = manifest.arch(arch)?.clone();
+    let ds = Dataset::load(manifest.dataset(&entry.task, "test")?)?;
+    let images: Vec<Tensor> =
+        (0..64.min(ds.len())).map(|i| ds.batch(i, i + 1)).collect();
+    let model = Model::load(manifest.path(&entry.model))?;
+    let prep = quantize_data_free(&model, &DfqConfig::default())?;
+    let q = prep.quantize(
+        &QScheme::int8_asymmetric(),
+        8,
+        BiasCorrMode::Analytic,
+        None,
+    )?;
+    let mut reg = Registry::new(ServeConfig {
+        max_batch: batch,
+        max_delay: Duration::from_millis(3),
+        queue_depth: 4096,
+        autoscale: Some(AutoscalePolicy::default()),
+        ..ServeConfig::default()
+    });
+    reg.register_quantized(arch, q)?;
+    let client = reg.adaptive_client(arch)?;
+    let burst = requests.min(128);
+    let failed = drive_adaptive(&client, &images, requests, rate, burst)?;
+    let report = client.report();
+    println!("autoscale[{arch}] {}", report.summary_line());
+    for t in &report.transitions {
+        println!("  {}", t.describe());
+    }
+    println!("{}", report.json(&format!("serve/{arch}/autoscale")));
+    for (model, variant, snap) in reg.shutdown() {
+        println!("serve[{model}/{variant}] {}", snap.report());
+    }
+    if failed > 0 {
+        bail!("{failed} request(s) failed under adaptive routing");
+    }
+    Ok(())
 }

@@ -1,9 +1,26 @@
-//! Serving metrics: request latency, batch-size distribution, throughput.
+//! Serving metrics: request latency, batch-size distribution, throughput,
+//! and a live queue-depth gauge.
+//!
+//! Every server keeps one [`Metrics`]; the registry reports them per
+//! `(model, variant)`. Two consumption styles:
+//!
+//! * [`Metrics::snapshot`] — cumulative, for end-of-run reporting;
+//! * [`Metrics::window_from`] — incremental windows over the recorded
+//!   latencies, consumed by the serve-layer autoscaler
+//!   ([`super::autoscale`]) to make steering decisions on *recent*
+//!   behaviour rather than the whole history.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::stats::Summary;
+
+/// Retained samples per series. An always-on server must not grow
+/// without bound, so once a series exceeds this the oldest half is
+/// discarded: counters (`completed`, throughput) stay exact, summaries
+/// cover the retained tail. At ~8 B/sample this bounds each series to
+/// ~128 KiB.
+const MAX_SAMPLES: usize = 16_384;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -14,9 +31,28 @@ pub struct Metrics {
 struct Inner {
     latencies: Vec<f64>,
     batch_sizes: Vec<f64>,
+    /// Latency samples discarded from the front of `latencies` —
+    /// [`WindowCursor`]s index the *absolute* sample stream, so trims
+    /// never shift a consumer's window.
+    trimmed: usize,
     completed: u64,
+    /// Requests submitted but not yet pulled off the queue by the worker.
+    depth: u64,
+    /// Bumped by [`Metrics::reset`] so stale [`WindowCursor`]s are
+    /// detected exactly rather than by index comparison.
+    epoch: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
+}
+
+/// Opaque position in the recorded-latency stream, used to consume
+/// disjoint windows via [`Metrics::window_from`]. `Default` starts at
+/// the beginning; a cursor from before a [`Metrics::reset`] is detected
+/// by epoch and restarts cleanly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WindowCursor {
+    epoch: u64,
+    idx: usize,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -27,6 +63,8 @@ pub struct Snapshot {
     pub batch_size: Option<Summary>,
     /// completed requests / wall seconds between first and last completion
     pub throughput: f64,
+    /// Requests waiting in the queue at snapshot time.
+    pub queue_depth: u64,
 }
 
 impl Metrics {
@@ -38,14 +76,60 @@ impl Metrics {
         m.completed += latencies.len() as u64;
         m.batch_sizes.push(batch as f64);
         m.latencies.extend_from_slice(latencies);
+        if m.latencies.len() > MAX_SAMPLES {
+            let drop = m.latencies.len() - MAX_SAMPLES / 2;
+            m.latencies.drain(..drop);
+            m.trimmed += drop;
+        }
+        if m.batch_sizes.len() > MAX_SAMPLES {
+            let drop = m.batch_sizes.len() - MAX_SAMPLES / 2;
+            m.batch_sizes.drain(..drop);
+        }
     }
 
-    /// Drop all recorded samples (e.g. after a warm-up request).
+    /// One request entered the queue (called by `Client::submit`).
+    pub fn enqueued(&self) {
+        self.inner.lock().unwrap().depth += 1;
+    }
+
+    /// `n` requests left the queue (called by the worker when it pulls a
+    /// batch). Saturating: a concurrent [`Metrics::reset`] must never
+    /// underflow the gauge.
+    pub fn dequeued(&self, n: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.depth = m.depth.saturating_sub(n);
+    }
+
+    /// Live queue depth (requests submitted but not yet picked up).
+    pub fn queue_depth(&self) -> u64 {
+        self.inner.lock().unwrap().depth
+    }
+
+    /// Drop all recorded samples (e.g. after a warm-up request). The
+    /// queue-depth gauge survives — requests in flight are still in
+    /// flight after a reset — and the window epoch advances so stale
+    /// [`WindowCursor`]s restart instead of slicing a wrong window.
     pub fn reset(&self) {
         let mut m = self.inner.lock().unwrap();
+        let (depth, epoch) = (m.depth, m.epoch);
         *m = Inner::default();
+        m.depth = depth;
+        m.epoch = epoch + 1;
     }
 
+    /// Cumulative snapshot of everything recorded so far.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use dfq::serve::Metrics;
+    ///
+    /// let m = Metrics::default();
+    /// m.record_batch(2, &[0.004, 0.006]);
+    /// let snap = m.snapshot();
+    /// assert_eq!(snap.completed, 2);
+    /// assert!(snap.latency.unwrap().p95 >= 0.004);
+    /// ```
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let wall = match (m.started, m.finished) {
@@ -69,7 +153,34 @@ impl Metrics {
             } else {
                 0.0
             },
+            queue_depth: m.depth,
         }
+    }
+
+    /// Summary of the latencies recorded after `cursor`, plus the new
+    /// cursor. Feed the returned cursor back in to consume disjoint
+    /// windows; a cursor minted before a [`Metrics::reset`] is from an
+    /// older epoch and restarts from the beginning of the new samples.
+    /// A consumer that falls more than `MAX_SAMPLES`' worth behind
+    /// sees the retained tail (the trimmed prefix is gone).
+    pub fn window_from(
+        &self,
+        cursor: WindowCursor,
+    ) -> (WindowCursor, Option<Summary>) {
+        let m = self.inner.lock().unwrap();
+        let abs_len = m.trimmed + m.latencies.len();
+        let start_abs = if cursor.epoch == m.epoch {
+            cursor.idx.min(abs_len)
+        } else {
+            m.trimmed
+        };
+        let rel = start_abs.saturating_sub(m.trimmed);
+        let summary = if rel < m.latencies.len() {
+            Some(Summary::of(&m.latencies[rel..]))
+        } else {
+            None
+        };
+        (WindowCursor { epoch: m.epoch, idx: abs_len }, summary)
     }
 }
 
@@ -112,5 +223,80 @@ mod tests {
         assert_eq!(s.batch_size.as_ref().unwrap().n, 2);
         assert!(s.latency.unwrap().mean > 0.0);
         assert!(s.report().contains("reqs"));
+    }
+
+    #[test]
+    fn sample_history_is_bounded_and_cursors_survive_trimming() {
+        let m = Metrics::default();
+        let chunk = vec![0.001f64; 2048];
+        let (mut cur, _) = m.window_from(WindowCursor::default());
+        for _ in 0..12 {
+            m.record_batch(chunk.len(), &chunk);
+            let (c, w) = m.window_from(cur);
+            assert_eq!(
+                w.unwrap().n,
+                chunk.len(),
+                "a kept-up consumer's window must not be affected by trims"
+            );
+            cur = c;
+        }
+        // counters stay exact; the retained series is bounded
+        let snap = m.snapshot();
+        assert_eq!(snap.completed, 12 * 2048);
+        assert!(snap.latency.unwrap().n <= 16_384);
+        assert!(snap.batch_size.unwrap().n <= 16_384);
+        // a consumer that fell behind the trim sees the retained tail
+        let (_, w) = m.window_from(WindowCursor::default());
+        let n = w.unwrap().n;
+        assert!(n <= 16_384 && n > 0, "stale-consumer window n = {n}");
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_and_saturates() {
+        let m = Metrics::default();
+        assert_eq!(m.queue_depth(), 0);
+        m.enqueued();
+        m.enqueued();
+        m.enqueued();
+        assert_eq!(m.queue_depth(), 3);
+        m.dequeued(2);
+        assert_eq!(m.queue_depth(), 1);
+        m.dequeued(10); // saturating, never underflows
+        assert_eq!(m.queue_depth(), 0);
+        // reset keeps the gauge (in-flight work is still in flight)
+        m.enqueued();
+        m.record_batch(1, &[0.01]);
+        m.reset();
+        assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.snapshot().completed, 0);
+    }
+
+    #[test]
+    fn windows_are_disjoint_and_reset_safe() {
+        let m = Metrics::default();
+        let (c0, w0) = m.window_from(WindowCursor::default());
+        assert!(w0.is_none());
+        m.record_batch(2, &[0.01, 0.03]);
+        let (c1, w1) = m.window_from(c0);
+        let w1 = w1.unwrap();
+        assert_eq!(w1.n, 2);
+        assert!((w1.mean - 0.02).abs() < 1e-12);
+        // no new samples -> empty window
+        let (c2, w2) = m.window_from(c1);
+        assert!(w2.is_none());
+        // only the new tail shows up
+        m.record_batch(1, &[0.07]);
+        let (c3, w3) = m.window_from(c2);
+        assert_eq!(w3.unwrap().n, 1);
+        // a stale cursor after reset restarts from the first post-reset
+        // sample — even when the new stream is already *longer* than the
+        // old cursor position (epoch detection, not index comparison)
+        m.reset();
+        m.record_batch(4, &[0.05, 0.05, 0.05, 0.05]);
+        let (c4, w4) = m.window_from(c3);
+        assert_eq!(w4.unwrap().n, 4, "post-reset samples were skipped");
+        // and the refreshed cursor consumes disjointly again
+        let (_, w5) = m.window_from(c4);
+        assert!(w5.is_none());
     }
 }

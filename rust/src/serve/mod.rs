@@ -8,7 +8,19 @@
 //! non-`Send` PJRT handles never cross threads. For hosting many models
 //! at once from compiled `.dfqm` artifacts, see [`registry`] (the
 //! `dfq serve --models dir/` surface) and `src/serve/README.md`.
+//!
+//! Two adaptive layers sit on top:
+//!
+//! * [`autoscale`] — a metrics-driven policy that steers one model's
+//!   traffic between its `f32` oracle and `int8` variants (shed to int8
+//!   when p95 latency or queue depth crosses a threshold, recover with
+//!   hysteresis; `dfq serve <arch> --autoscale`);
+//! * registry lifecycle — hot reload of a changed `.dfqm` behind a
+//!   [`registry::LiveClient`] without dropping in-flight requests, and
+//!   LRU eviction of idle models under
+//!   [`ServeConfig::max_resident`] with lazy re-load.
 
+pub mod autoscale;
 pub mod batcher;
 pub mod demo;
 pub mod metrics;
@@ -26,8 +38,11 @@ use crate::graph::Model;
 use crate::nn::{self, QuantCfg};
 use crate::tensor::Tensor;
 
-pub use metrics::{Metrics, Snapshot};
-pub use registry::{ModelInfo, Registry};
+pub use autoscale::{
+    AdaptiveClient, AdaptiveReport, AutoscalePolicy, Autoscaler,
+};
+pub use metrics::{Metrics, Snapshot, WindowCursor};
+pub use registry::{LiveClient, ModelInfo, Registry};
 
 /// Anything that can run a padded batch of images.
 pub trait BatchExecutor {
@@ -164,6 +179,14 @@ pub struct ServeConfig {
     pub max_batch: usize,
     pub max_delay: Duration,
     pub queue_depth: usize,
+    /// Steering policy for [`Registry::adaptive_client`] /
+    /// [`AdaptiveClient`]; `None` falls back to the default
+    /// [`AutoscalePolicy`].
+    pub autoscale: Option<AutoscalePolicy>,
+    /// Registry resident-model cap: loading a model beyond this evicts
+    /// the least-recently-used resident one (gracefully — its queue
+    /// drains first). `0` means unbounded.
+    pub max_resident: usize,
 }
 
 impl Default for ServeConfig {
@@ -172,6 +195,8 @@ impl Default for ServeConfig {
             max_batch: 64,
             max_delay: Duration::from_millis(2),
             queue_depth: 1024,
+            autoscale: None,
+            max_resident: 0,
         }
     }
 }
@@ -198,7 +223,7 @@ impl Server {
                 Ok(e) => e,
                 Err(e) => {
                     // fail every request with the construction error
-                    drain_with_error(rx, e);
+                    drain_with_error(rx, e, &m2);
                     return;
                 }
             };
@@ -209,11 +234,16 @@ impl Server {
 
     /// A cheap cloneable submission handle.
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone() }
+        Client { tx: self.tx.clone(), metrics: self.metrics.clone() }
     }
 
     pub fn metrics(&self) -> Snapshot {
         self.metrics.snapshot()
+    }
+
+    /// Shared handle to this server's live metrics (autoscaler input).
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
     }
 
     /// Clear recorded metrics (use after warm-up traffic).
@@ -233,14 +263,23 @@ impl Server {
     }
 }
 
-fn drain_with_error(rx: Receiver<Msg>, e: anyhow::Error) {
+fn drain_with_error(rx: Receiver<Msg>, e: anyhow::Error, metrics: &Metrics) {
     let msg = format!("executor construction failed: {e:#}");
+    let fail = |req: Request| {
+        metrics.dequeued(1);
+        let _ = req.resp.send(Err(anyhow!("{msg}")));
+    };
     while let Ok(m) = rx.recv() {
         match m {
-            Msg::Job(req) => {
-                let _ = req.resp.send(Err(anyhow!("{msg}")));
-            }
+            Msg::Job(req) => fail(req),
             Msg::Stop => break,
+        }
+    }
+    // jobs can race in behind the Stop sentinel; answer what is already
+    // buffered instead of letting it vanish with the channel
+    while let Ok(m) = rx.try_recv() {
+        if let Msg::Job(req) = m {
+            fail(req);
         }
     }
 }
@@ -264,46 +303,93 @@ fn worker_loop(
                 Msg::Stop => stop = true,
             }
         }
-        if batch.is_empty() {
-            if stop {
-                break;
-            }
-            continue;
-        }
-        let n = batch.len();
-        let x = stack(&batch);
-        let result = exec.run_batch(&x);
-        let done = Instant::now();
-        match result {
-            Ok(out) => {
-                let per: usize = out.shape()[1..].iter().product();
-                let mut shape: Vec<usize> = out.shape().to_vec();
-                shape[0] = 1;
-                // record *before* replying so a client that resets
-                // metrics right after its response cannot race the
-                // bookkeeping of its own batch
-                let lats: Vec<f64> = batch
-                    .iter()
-                    .map(|r| (done - r.enqueued).as_secs_f64())
-                    .collect();
-                metrics.record_batch(n, &lats);
-                for (i, req) in batch.into_iter().enumerate() {
-                    let one = Tensor::new(
-                        &shape,
-                        out.data()[i * per..(i + 1) * per].to_vec(),
-                    );
-                    let _ = req.resp.send(Ok(one));
-                }
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for req in batch {
-                    let _ = req.resp.send(Err(anyhow!("{msg}")));
-                }
-            }
+        if !batch.is_empty() {
+            // the batch has left the queue: the depth gauge drops
+            // *before* execution so the autoscaler sees waiting work,
+            // not in-flight work
+            metrics.dequeued(batch.len() as u64);
+            serve_batch(batch, exec, metrics);
         }
         if stop {
+            // a submission racing a shutdown/hot-swap can land behind
+            // the Stop sentinel while the channel is still open. Serve
+            // what is already buffered so it drains rather than
+            // vanishing. The race is then fully covered client-side: a
+            // send after the channel closes fails at `submit` (the
+            // registry's `LiveClient` retries it on the replacement
+            // generation), and a send that slips into the buffer in the
+            // instant before close dies with its response channel —
+            // which the caller observes as a recv error, and
+            // `LiveClient::infer` resubmits (an unanswered request was
+            // never executed).
+            drain_backlog(&rx, policy.max_batch, exec, metrics);
             break;
+        }
+    }
+}
+
+/// Serve every job already sitting in the queue, in batches, without
+/// blocking for more. Used on the shutdown path after the Stop
+/// sentinel.
+fn drain_backlog(
+    rx: &Receiver<Msg>,
+    max_batch: usize,
+    exec: &mut dyn BatchExecutor,
+    metrics: &Metrics,
+) {
+    loop {
+        let mut batch = Vec::new();
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Job(req)) => batch.push(req),
+                Ok(Msg::Stop) => {}
+                Err(_) => break,
+            }
+        }
+        if batch.is_empty() {
+            break;
+        }
+        metrics.dequeued(batch.len() as u64);
+        serve_batch(batch, exec, metrics);
+    }
+}
+
+/// Execute one assembled batch and reply to every request in it.
+fn serve_batch(
+    batch: Vec<Request>,
+    exec: &mut dyn BatchExecutor,
+    metrics: &Metrics,
+) {
+    let n = batch.len();
+    let x = stack(&batch);
+    let result = exec.run_batch(&x);
+    let done = Instant::now();
+    match result {
+        Ok(out) => {
+            let per: usize = out.shape()[1..].iter().product();
+            let mut shape: Vec<usize> = out.shape().to_vec();
+            shape[0] = 1;
+            // record *before* replying so a client that resets
+            // metrics right after its response cannot race the
+            // bookkeeping of its own batch
+            let lats: Vec<f64> = batch
+                .iter()
+                .map(|r| (done - r.enqueued).as_secs_f64())
+                .collect();
+            metrics.record_batch(n, &lats);
+            for (i, req) in batch.into_iter().enumerate() {
+                let one = Tensor::new(
+                    &shape,
+                    out.data()[i * per..(i + 1) * per].to_vec(),
+                );
+                let _ = req.resp.send(Ok(one));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in batch {
+                let _ = req.resp.send(Err(anyhow!("{msg}")));
+            }
         }
     }
 }
@@ -339,16 +425,39 @@ fn truncate(x: &Tensor, n: usize) -> Tensor {
 #[derive(Clone)]
 pub struct Client {
     tx: SyncSender<Msg>,
+    /// Same handle the server records into — submissions bump the live
+    /// queue-depth gauge so the autoscaler sees backlog as it forms.
+    metrics: Arc<Metrics>,
 }
 
 impl Client {
     /// Submit one image (1, C, H, W); returns a receiver for the result.
     pub fn submit(&self, x: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        self.try_submit(x).map_err(|_| anyhow!("server is shut down"))
+    }
+
+    /// Like [`Client::submit`] but hands the tensor back when this
+    /// server is gone, so a caller holding a newer route (the registry's
+    /// hot-swap [`LiveClient`]) can retry without cloning the input.
+    pub(crate) fn try_submit(
+        &self,
+        x: Tensor,
+    ) -> std::result::Result<Receiver<Result<Tensor>>, Tensor> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
+        self.metrics.enqueued();
+        match self
+            .tx
             .send(Msg::Job(Request { x, resp: rtx, enqueued: Instant::now() }))
-            .map_err(|_| anyhow!("server is shut down"))?;
-        Ok(rrx)
+        {
+            Ok(()) => Ok(rrx),
+            Err(mpsc::SendError(Msg::Job(req))) => {
+                self.metrics.dequeued(1);
+                Err(req.x)
+            }
+            Err(mpsc::SendError(Msg::Stop)) => {
+                unreachable!("submit only sends jobs")
+            }
+        }
     }
 
     /// Submit and block for the answer.
@@ -394,6 +503,16 @@ impl Router {
             .metrics())
     }
 
+    /// One variant's `(client, live metrics)` pair — the lane shape the
+    /// [`AdaptiveClient`] steers between.
+    pub fn lane(&self, name: &str) -> Result<(Client, Arc<Metrics>)> {
+        let s = self
+            .servers
+            .get(name)
+            .ok_or_else(|| anyhow!("no model variant '{name}'"))?;
+        Ok((s.client(), s.metrics_handle()))
+    }
+
     pub fn shutdown(self) -> Vec<(String, Snapshot)> {
         self.servers
             .into_iter()
@@ -424,6 +543,7 @@ mod tests {
                 max_batch,
                 max_delay: Duration::from_millis(delay_ms),
                 queue_depth: 128,
+                ..ServeConfig::default()
             },
             move || {
                 Ok(Box::new(EngineExecutor { model, cfg, max_batch: 64 }))

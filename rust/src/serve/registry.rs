@@ -10,15 +10,40 @@
 //! per process as memory allows. Every model keeps its own worker
 //! thread(s), queue and [`Metrics`](super::Metrics), so tenants are
 //! isolated and snapshots are per (model, variant).
+//!
+//! ## Lifecycle
+//!
+//! Registered models move through `registered → resident → evicted →
+//! resident → …`:
+//!
+//! * **Hot swap** — [`Registry::reload`] re-reads a model's source and
+//!   swaps the router behind every [`LiveClient`] *before* draining the
+//!   old server, so no in-flight request is dropped;
+//!   [`Registry::poll_files`] does the same automatically for every
+//!   resident artifact whose file changed on disk. A failed swap
+//!   (corrupt or version-skewed replacement) surfaces the typed
+//!   [`ArtifactError`](crate::artifact::ArtifactError) and leaves the
+//!   old model serving.
+//! * **Eviction** — [`Registry::evict`] (or the
+//!   [`ServeConfig::max_resident`](super::ServeConfig::max_resident)
+//!   cap, which evicts least-recently-used models automatically) drains
+//!   a resident model and frees its plan; the next request re-loads it
+//!   lazily. Snapshots of retired server generations are kept and
+//!   returned by [`Registry::shutdown`].
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, RwLock};
+use std::time::SystemTime;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::artifact::Artifact;
 use crate::dfq::QuantizedModel;
+use crate::tensor::Tensor;
 
+use super::autoscale::AdaptiveClient;
 use super::{
     Client, EngineExecutor, QuantExecutor, Router, ServeConfig, Server,
     Snapshot,
@@ -57,21 +82,98 @@ struct Hosted {
     info: ModelInfo,
 }
 
+/// `(len, mtime)` of a source file at load time — enough to notice a
+/// rewritten artifact without hashing payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct FileStamp {
+    len: u64,
+    mtime: Option<SystemTime>,
+}
+
+fn stamp_of(source: &Source) -> Option<FileStamp> {
+    match source {
+        Source::File(path) => std::fs::metadata(path).ok().map(|m| {
+            FileStamp { len: m.len(), mtime: m.modified().ok() }
+        }),
+        Source::Memory(_) => None,
+    }
+}
+
 struct Entry {
     source: Source,
     hosted: Option<Hosted>,
+    /// Hot-swap-safe client slots handed out as [`LiveClient`]s; reload
+    /// re-points them at the new server generation.
+    live: HashMap<String, Arc<RwLock<Client>>>,
+    /// Source-file stamp at load time (file sources only).
+    stamp: Option<FileStamp>,
+    /// Touch counter value of the last access (LRU eviction order).
+    last_used: u64,
+    /// Snapshots of server generations retired by evict/reload.
+    retired: Vec<(String, Snapshot)>,
+}
+
+/// A hot-swap-safe submission handle: requests go to whatever server
+/// generation currently backs the `(model, variant)` slot, so a
+/// [`Registry::reload`] under live traffic loses nothing — the old
+/// generation drains its queue while new submissions flow to the new
+/// one. Cheap to clone. After an *eviction* the slot points at a
+/// drained server until the model is touched through the registry
+/// again (lazy re-load), so keep using [`Registry::live_client`] on the
+/// request path when eviction is enabled.
+#[derive(Clone)]
+pub struct LiveClient {
+    slot: Arc<RwLock<Client>>,
+}
+
+impl LiveClient {
+    /// Submit one image (1, C, H, W); returns a receiver for the result.
+    pub fn submit(&self, x: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        // clone the current-generation client so the slot lock is not
+        // held while a full queue blocks the send
+        let client = self.slot.read().unwrap().clone();
+        match client.try_submit(x) {
+            Ok(rx) => Ok(rx),
+            Err(x) => {
+                // lost a race with a hot swap: the generation we cloned
+                // drained before the send landed. The slot already holds
+                // the replacement — retry once against it.
+                let client = self.slot.read().unwrap().clone();
+                client.submit(x)
+            }
+        }
+    }
+
+    /// Submit and block for the answer. A response channel that dies
+    /// without a payload means the request was never executed (workers
+    /// always answer before exiting), so when that race with a hot swap
+    /// happens the request is resubmitted once against the swapped-in
+    /// generation.
+    pub fn infer(&self, x: Tensor) -> Result<Tensor> {
+        match self.submit(x.clone())?.recv() {
+            Ok(result) => result,
+            Err(_) => self
+                .submit(x)?
+                .recv()
+                .map_err(|_| anyhow!("server dropped the request"))?,
+        }
+    }
 }
 
 /// Named multi-model registry over lazily-loaded serving routers.
 pub struct Registry {
     cfg: ServeConfig,
     entries: BTreeMap<String, Entry>,
+    /// Monotonic touch counter backing the LRU eviction order.
+    clock: u64,
 }
 
 impl Registry {
-    /// `cfg` applies to every server the registry starts.
+    /// `cfg` applies to every server the registry starts;
+    /// [`ServeConfig::max_resident`](super::ServeConfig::max_resident)
+    /// bounds how many models stay loaded at once.
     pub fn new(cfg: ServeConfig) -> Registry {
-        Registry { cfg, entries: BTreeMap::new() }
+        Registry { cfg, entries: BTreeMap::new(), clock: 0 }
     }
 
     /// Register a compiled artifact by path (not loaded until first
@@ -101,14 +203,41 @@ impl Registry {
         if self.entries.contains_key(&name) {
             bail!("model '{name}' already registered");
         }
-        self.entries.insert(name, Entry { source, hosted: None });
+        self.entries.insert(
+            name,
+            Entry {
+                source,
+                hosted: None,
+                live: HashMap::new(),
+                stamp: None,
+                last_used: 0,
+                retired: Vec::new(),
+            },
+        );
         Ok(())
     }
 
     /// Register every compiled artifact in `dir` (files with a `.dfqm`
     /// extension *and* the compiled-artifact magic; source-model
     /// containers sharing the extension are skipped). Names are file
-    /// stems. Returns the registered names in directory order.
+    /// stems. Returns the registered names in **sorted order**
+    /// regardless of directory enumeration order, so multi-tenant load
+    /// runs over a directory are reproducible.
+    ///
+    /// # Example
+    ///
+    /// ```no_run
+    /// use dfq::serve::{registry::VARIANT_INT8, Registry, ServeConfig};
+    ///
+    /// let mut reg = Registry::new(ServeConfig::default());
+    /// // registers every compiled model; nothing is loaded yet
+    /// let names = reg.scan_dir("models/").unwrap();
+    /// for name in &names {
+    ///     // first touch decodes the artifact and boots the router
+    ///     let client = reg.client(name, VARIANT_INT8).unwrap();
+    ///     # let _ = client;
+    /// }
+    /// ```
     pub fn scan_dir(&mut self, dir: impl AsRef<Path>) -> Result<Vec<String>> {
         let dir = dir.as_ref();
         let mut names = Vec::new();
@@ -152,8 +281,79 @@ impl Registry {
     /// Submission handle for one (model, variant); loads the model on
     /// first use. `variant` is [`VARIANT_INT8`] for every model,
     /// [`VARIANT_F32`] additionally for in-memory registrations.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use dfq::dfq::{quantize_data_free, testutil, BiasCorrMode, DfqConfig};
+    /// use dfq::quant::QScheme;
+    /// use dfq::serve::{registry::VARIANT_INT8, Registry, ServeConfig};
+    ///
+    /// let m = testutil::two_layer_model(7, true);
+    /// let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+    /// let q = prep
+    ///     .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+    ///     .unwrap();
+    /// let mut reg = Registry::new(ServeConfig::default());
+    /// reg.register_quantized("two_layer", q).unwrap();
+    /// let client = reg.client("two_layer", VARIANT_INT8).unwrap();
+    /// let y = client.infer(testutil::random_input(&m, 1, 1)).unwrap();
+    /// assert_eq!(y.shape()[0], 1);
+    /// reg.shutdown();
+    /// ```
     pub fn client(&mut self, model: &str, variant: &str) -> Result<Client> {
         self.ensure_loaded(model)?.router.client(variant)
+    }
+
+    /// Like [`Registry::client`] but hot-swap-safe: the returned handle
+    /// keeps working across [`Registry::reload`] /
+    /// [`Registry::poll_files`] swaps of this model.
+    pub fn live_client(
+        &mut self,
+        model: &str,
+        variant: &str,
+    ) -> Result<LiveClient> {
+        self.ensure_loaded(model)?;
+        let e = self.entries.get_mut(model).expect("just loaded");
+        if let Some(slot) = e.live.get(variant) {
+            return Ok(LiveClient { slot: slot.clone() });
+        }
+        let client = e
+            .hosted
+            .as_ref()
+            .expect("just loaded")
+            .router
+            .client(variant)?;
+        let slot = Arc::new(RwLock::new(client));
+        e.live.insert(variant.to_string(), slot.clone());
+        Ok(LiveClient { slot })
+    }
+
+    /// A steering handle over this model's `f32` + `int8` variants (see
+    /// [`crate::serve::autoscale`]): requests route to whichever variant
+    /// the autoscaler currently selects, using
+    /// [`ServeConfig::autoscale`](super::ServeConfig::autoscale) (or the
+    /// default policy). Only in-memory registrations host the f32
+    /// oracle, so artifact-backed models are rejected here.
+    ///
+    /// Unlike [`LiveClient`], the returned handle is bound to the
+    /// *current* server generation: a [`Registry::reload`] or eviction
+    /// (explicit or via the
+    /// [`ServeConfig::max_resident`](super::ServeConfig::max_resident)
+    /// cap) of this model invalidates it — obtain a fresh one
+    /// afterwards. Keep autoscaled models out of the eviction cap's
+    /// reach (or off caps entirely) when holding one long-term.
+    pub fn adaptive_client(&mut self, model: &str) -> Result<AdaptiveClient> {
+        let policy = self.cfg.autoscale.unwrap_or_default();
+        let h = self.ensure_loaded(model)?;
+        let f32_lane = h.router.lane(VARIANT_F32).map_err(|e| {
+            e.context(format!(
+                "model '{model}' hosts no f32 oracle variant \
+                 (autoscaling needs an in-memory registration)"
+            ))
+        })?;
+        let int8_lane = h.router.lane(VARIANT_INT8)?;
+        Ok(AdaptiveClient::new(f32_lane, int8_lane, policy))
     }
 
     /// Serving metadata; loads the model on first use.
@@ -174,11 +374,101 @@ impl Registry {
         }
     }
 
+    /// Drain a resident model's servers and free its plan; the next
+    /// request through the registry re-loads it lazily. Queued requests
+    /// are still answered (the shutdown drains before joining). Returns
+    /// `false` when the model was not resident. The per-generation
+    /// snapshots are retained and returned by [`Registry::shutdown`].
+    pub fn evict(&mut self, model: &str) -> Result<bool> {
+        let e = self
+            .entries
+            .get_mut(model)
+            .ok_or_else(|| anyhow!("no model '{model}' registered"))?;
+        match e.hosted.take() {
+            None => Ok(false),
+            Some(h) => {
+                for (variant, snap) in h.router.shutdown() {
+                    e.retired.push((variant, snap));
+                }
+                Ok(true)
+            }
+        }
+    }
+
+    /// Hot-swap one model: re-read its source (the `.dfqm` file for
+    /// artifact registrations, a fresh plan for in-memory ones) and
+    /// swap the router behind every [`LiveClient`] *before* draining
+    /// the old generation — in-flight and queued requests complete on
+    /// the old server while new submissions hit the new one, so nothing
+    /// is dropped. On failure (missing / corrupt / version-skewed file)
+    /// the typed [`ArtifactError`](crate::artifact::ArtifactError) is
+    /// returned and the old generation keeps serving untouched.
+    pub fn reload(&mut self, model: &str) -> Result<()> {
+        if !self.entries.contains_key(model) {
+            bail!("no model '{model}' registered");
+        }
+        // reloading a non-resident model is just a load: same resident
+        // cap, same LRU touch
+        if self.entries[model].hosted.is_none() {
+            self.ensure_loaded(model)?;
+            return Ok(());
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let cfg = self.cfg;
+        let e = self.entries.get_mut(model).expect("checked above");
+        let hosted = load_and_repoint(cfg, model, e)?;
+        if let Some(old) = e.hosted.replace(hosted) {
+            for (variant, snap) in old.router.shutdown() {
+                e.retired.push((variant, snap));
+            }
+        }
+        // the swapped-in generation is the freshest thing in the
+        // registry — it must not be the next LRU victim
+        e.last_used = clock;
+        Ok(())
+    }
+
+    /// Reload every *resident* artifact-backed model whose file changed
+    /// on disk since it was loaded (by length + mtime). Returns one
+    /// `(name, result)` per attempted swap — a failed swap keeps the
+    /// old generation serving and is retried on the next poll (the
+    /// stamp only advances on success, so a half-written file heals
+    /// itself once the writer finishes). A *deleted* file is not a new
+    /// version: the resident plan keeps serving and no swap is
+    /// attempted until a file is back at the path.
+    pub fn poll_files(&mut self) -> Vec<(String, Result<()>)> {
+        let stale: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| {
+                e.hosted.is_some()
+                    && matches!(e.source, Source::File(_))
+                    && match stamp_of(&e.source) {
+                        Some(now) => Some(now) != e.stamp,
+                        None => false, // file gone: keep serving
+                    }
+            })
+            .map(|(name, _)| name.clone())
+            .collect();
+        stale
+            .into_iter()
+            .map(|name| {
+                let r = self.reload(&name);
+                (name, r)
+            })
+            .collect()
+    }
+
     /// Stop every live router; returns `(model, variant, snapshot)` per
-    /// hosted server.
+    /// server generation — including generations retired earlier by
+    /// evict/reload, so multi-generation totals add up.
     pub fn shutdown(self) -> Vec<(String, String, Snapshot)> {
         let mut out = Vec::new();
         for (name, e) in self.entries {
+            for (variant, snap) in e.retired {
+                out.push((name.clone(), variant, snap));
+            }
             if let Some(h) = e.hosted {
                 for (variant, snap) in h.router.shutdown() {
                     out.push((name.clone(), variant, snap));
@@ -189,15 +479,55 @@ impl Registry {
     }
 
     fn ensure_loaded(&mut self, model: &str) -> Result<&Hosted> {
-        let cfg = self.cfg;
-        let e = self
-            .entries
-            .get_mut(model)
-            .ok_or_else(|| anyhow!("no model '{model}' registered"))?;
-        if e.hosted.is_none() {
-            e.hosted = Some(load_entry(cfg, model, &e.source)?);
+        if !self.entries.contains_key(model) {
+            bail!("no model '{model}' registered");
         }
+        self.clock += 1;
+        let clock = self.clock;
+        if self.entries[model].hosted.is_none() {
+            // make room first so the resident cap holds *during* the
+            // load, then decode/plan
+            self.enforce_cap(model);
+            let cfg = self.cfg;
+            let e = self.entries.get_mut(model).expect("checked above");
+            let hosted = load_and_repoint(cfg, model, e)?;
+            e.hosted = Some(hosted);
+        }
+        let e = self.entries.get_mut(model).expect("checked above");
+        e.last_used = clock;
         Ok(e.hosted.as_ref().expect("just loaded"))
+    }
+
+    /// Evict least-recently-used resident models (never `keep`) until a
+    /// slot is free under [`ServeConfig::max_resident`]. Soft cap: when
+    /// only `keep` remains resident nothing more can go.
+    fn enforce_cap(&mut self, keep: &str) {
+        let cap = self.cfg.max_resident;
+        if cap == 0 {
+            return;
+        }
+        while self
+            .entries
+            .values()
+            .filter(|e| e.hosted.is_some())
+            .count()
+            >= cap
+        {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(name, e)| {
+                    e.hosted.is_some() && name.as_str() != keep
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(name, _)| name.clone());
+            match victim {
+                Some(name) => {
+                    let _ = self.evict(&name);
+                }
+                None => break,
+            }
+        }
     }
 }
 
@@ -213,6 +543,27 @@ fn has_artifact_magic(path: &Path) -> bool {
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic).is_ok()
         && magic == crate::artifact::format::MAGIC
+}
+
+/// Shared tail of lazy (re-)load and hot swap: read the entry's source,
+/// build the new generation, and re-point every live slot at it. The
+/// file stamp is taken *before* the read so a write racing the load
+/// re-triggers the next poll instead of being missed; it only advances
+/// when the load succeeds.
+fn load_and_repoint(
+    cfg: ServeConfig,
+    name: &str,
+    e: &mut Entry,
+) -> Result<Hosted> {
+    let stamp = stamp_of(&e.source);
+    let hosted = load_entry(cfg, name, &e.source)?;
+    for (variant, slot) in &e.live {
+        if let Ok(client) = hosted.router.client(variant) {
+            *slot.write().unwrap() = client;
+        }
+    }
+    e.stamp = stamp;
+    Ok(hosted)
 }
 
 fn load_entry(cfg: ServeConfig, name: &str, source: &Source) -> Result<Hosted> {

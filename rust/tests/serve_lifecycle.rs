@@ -1,0 +1,214 @@
+//! Registry lifecycle integration tests: eviction + lazy re-load, the
+//! resident-model cap, hot swap under a live client (including failed
+//! swaps over corrupt replacements), file watching, and deterministic
+//! scan order. Companion to `tests/artifact_roundtrip.rs` (format
+//! correctness) — this file covers the *serving* lifecycle on top.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use dfq::dfq::{
+    quantize_data_free, testutil, BiasCorrMode, DfqConfig, QuantizedModel,
+};
+use dfq::nn::qengine::PlanOpts;
+use dfq::quant::QScheme;
+use dfq::serve::registry::VARIANT_INT8;
+use dfq::serve::{Registry, ServeConfig};
+use dfq::tensor::Tensor;
+
+fn quantized(seed: u64) -> QuantizedModel {
+    let m = testutil::two_layer_model(seed, true);
+    let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+    prep.quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+        .unwrap()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("dfq-lifecycle-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn evict_then_request_reloads_lazily() {
+    let dir = temp_dir("evict");
+    let q = quantized(11);
+    q.save_artifact(dir.join("m.dfqm"), PlanOpts::default()).unwrap();
+    let x = testutil::random_input(&q.model, 1, 3);
+
+    let mut reg = Registry::new(ServeConfig::default());
+    assert_eq!(reg.scan_dir(&dir).unwrap(), vec!["m"]);
+    let y1 = reg.client("m", VARIANT_INT8).unwrap().infer(x.clone()).unwrap();
+    assert_eq!(reg.loaded(), vec!["m"]);
+
+    assert!(reg.evict("m").unwrap());
+    assert!(reg.loaded().is_empty(), "evicted model still resident");
+    assert!(!reg.evict("m").unwrap(), "double evict must be a no-op");
+    assert!(
+        reg.metrics("m", VARIANT_INT8).is_err(),
+        "an evicted model has no live metrics"
+    );
+
+    // the next request re-loads lazily and serves identical outputs
+    let y2 = reg.client("m", VARIANT_INT8).unwrap().infer(x).unwrap();
+    assert_eq!(y1.data(), y2.data(), "re-loaded plan drifted");
+    assert_eq!(reg.loaded(), vec!["m"]);
+
+    // both server generations are accounted for at shutdown
+    let snaps = reg.shutdown();
+    assert_eq!(snaps.len(), 2, "retired generation lost");
+    let total: u64 = snaps.iter().map(|(_, _, s)| s.completed).sum();
+    assert_eq!(total, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resident_cap_evicts_least_recently_used() {
+    let dir = temp_dir("cap");
+    for (name, seed) in [("a", 21), ("b", 22), ("c", 23)] {
+        quantized(seed)
+            .save_artifact(dir.join(format!("{name}.dfqm")), PlanOpts::default())
+            .unwrap();
+    }
+    let mut reg = Registry::new(ServeConfig {
+        max_resident: 2,
+        ..ServeConfig::default()
+    });
+    assert_eq!(reg.scan_dir(&dir).unwrap(), vec!["a", "b", "c"]);
+
+    reg.client("a", VARIANT_INT8).unwrap();
+    reg.client("b", VARIANT_INT8).unwrap();
+    assert_eq!(reg.loaded(), vec!["a", "b"]);
+
+    // loading c evicts a (least recently used)
+    reg.client("c", VARIANT_INT8).unwrap();
+    assert_eq!(reg.loaded(), vec!["b", "c"]);
+
+    // recency decides the victim: touch b so c becomes LRU, then load a
+    reg.client("b", VARIANT_INT8).unwrap();
+    reg.client("a", VARIANT_INT8).unwrap(); // evicts c
+    assert_eq!(reg.loaded(), vec!["a", "b"]);
+
+    // an evicted model still serves on demand (lazy re-load), at the
+    // cost of evicting the then-LRU one
+    let x = Tensor::full(&[1, 3, 8, 8], 0.25);
+    let y = reg.client("c", VARIANT_INT8).unwrap().infer(x).unwrap();
+    assert_eq!(y.shape()[0], 1);
+    assert_eq!(reg.loaded(), vec!["a", "c"]);
+
+    // reloading a non-resident model is just a load: it obeys the cap
+    // (evicting the LRU) instead of sneaking past it
+    reg.reload("b").unwrap();
+    assert_eq!(reg.loaded(), vec!["b", "c"]);
+
+    // a resident reload counts as a touch: after refreshing c, loading
+    // a evicts b — not the freshly-swapped c
+    reg.reload("c").unwrap();
+    reg.client("a", VARIANT_INT8).unwrap();
+    assert_eq!(reg.loaded(), vec!["a", "c"]);
+    reg.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hot_swap_with_corrupt_replacement_keeps_old_model_serving() {
+    let dir = temp_dir("corrupt");
+    let path = dir.join("m.dfqm");
+    let qa = quantized(31);
+    let qb = quantized(32);
+    qa.save_artifact(&path, PlanOpts::default()).unwrap();
+    let x = testutil::random_input(&qa.model, 1, 9);
+    let want_a = qa.pack_int8().unwrap().run(&x).unwrap();
+    let want_b = qb.pack_int8().unwrap().run(&x).unwrap();
+
+    let mut reg = Registry::new(ServeConfig::default());
+    reg.register_file("m", &path).unwrap();
+    let live = reg.live_client("m", VARIANT_INT8).unwrap();
+    assert_eq!(live.infer(x.clone()).unwrap().data(), want_a.data());
+
+    // replace the artifact with a truncated copy: the swap must fail
+    // with the typed artifact error and the old generation keeps serving
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let err = reg.reload("m").unwrap_err();
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(
+        msg.contains("truncated") || msg.contains("crc"),
+        "expected a typed ArtifactError in the chain, got: {msg}"
+    );
+    assert_eq!(
+        live.infer(x.clone()).unwrap().data(),
+        want_a.data(),
+        "old model stopped serving after a failed swap"
+    );
+
+    // a healthy replacement swaps in through the *same* live client
+    qb.save_artifact(&path, PlanOpts::default()).unwrap();
+    reg.reload("m").unwrap();
+    assert_eq!(
+        live.infer(x).unwrap().data(),
+        want_b.data(),
+        "live client still routed to the old generation"
+    );
+    reg.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn poll_files_detects_changed_artifacts() {
+    let dir = temp_dir("watch");
+    let path = dir.join("m.dfqm");
+    let qa = quantized(41);
+    let qb = quantized(42);
+    qa.save_artifact(&path, PlanOpts::default()).unwrap();
+    let x = testutil::random_input(&qa.model, 1, 4);
+    let want_b = qb.pack_int8().unwrap().run(&x).unwrap();
+
+    let mut reg = Registry::new(ServeConfig::default());
+    reg.register_file("m", &path).unwrap();
+    let live = reg.live_client("m", VARIANT_INT8).unwrap();
+    live.infer(x.clone()).unwrap();
+
+    // nothing changed: no swap attempted
+    assert!(reg.poll_files().is_empty());
+
+    // give the filesystem a distinguishable mtime, then rewrite
+    std::thread::sleep(Duration::from_millis(50));
+    qb.save_artifact(&path, PlanOpts::default()).unwrap();
+    let events = reg.poll_files();
+    assert_eq!(events.len(), 1, "changed file not detected");
+    assert_eq!(events[0].0, "m");
+    assert!(events[0].1.is_ok(), "swap failed: {:?}", events[0].1);
+    assert_eq!(live.infer(x).unwrap().data(), want_b.data());
+
+    // stamp advanced: a second poll is quiet
+    assert!(reg.poll_files().is_empty());
+
+    // a deleted file is not a new version: no swap attempt, the
+    // resident plan keeps serving
+    std::fs::remove_file(&path).unwrap();
+    assert!(reg.poll_files().is_empty(), "deleted file retried forever");
+    let y = live.infer(testutil::random_input(&qa.model, 1, 4)).unwrap();
+    assert_eq!(y.shape()[0], 1);
+    reg.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scan_dir_returns_sorted_names() {
+    let dir = temp_dir("sorted");
+    // create in deliberately non-sorted order
+    for (name, seed) in [("zeta", 51), ("alpha", 52), ("mid", 53)] {
+        quantized(seed)
+            .save_artifact(dir.join(format!("{name}.dfqm")), PlanOpts::default())
+            .unwrap();
+    }
+    let mut reg = Registry::new(ServeConfig::default());
+    assert_eq!(
+        reg.scan_dir(&dir).unwrap(),
+        vec!["alpha", "mid", "zeta"],
+        "scan order must be sorted for reproducible multi-tenant runs"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
