@@ -1,21 +1,27 @@
 //! Bench: true-int8 execution vs the f32 reference engine — raw GEMM
-//! (u8×i8→i32 vs f32), whole conv layers (im2col + GEMM + requant
-//! epilogue vs im2col + f32 GEMM) across MobileNet-ish shapes, and the
-//! end-to-end planned executor vs the fake-quant engine on a residual
-//! block model at batch 1/8/32.
+//! (f32 vs u8×i8→i32, per dispatch kernel), whole conv layers (im2col +
+//! GEMM + requant epilogue vs im2col + f32 GEMM) across MobileNet-ish
+//! shapes, and the end-to-end planned executor vs the fake-quant engine
+//! on a residual block model at batch 1/8/32.
 //!
 //! Prints the human report lines *and* the shared one-line JSON records
 //! (see `BenchResult::json`, same format as `benches/engine.rs`), so the
-//! driver can diff int8 vs f32 throughput mechanically. `--quick` (the
-//! CI smoke mode) forces single-iteration runs via `DFQ_BENCH_FAST`.
+//! driver can diff int8 vs f32 throughput mechanically. Every record is
+//! also persisted to `BENCH_qengine.json` at the repo root (JSON lines),
+//! together with derived `int8-vs-f32` throughput-ratio records at batch
+//! 1/8/32 and the active dispatch kernel, so successive runs on the same
+//! host are diffable without scraping stdout. `--quick` (the CI smoke
+//! mode) forces single-iteration runs via `DFQ_BENCH_FAST`.
 
 use dfq::dfq::{quantize_data_free, testutil, BiasCorrMode, DfqConfig};
 use dfq::nn::conv;
-use dfq::nn::qengine::{self, EpiSpec, QActTensor, QConv};
+use dfq::nn::qengine::{
+    self, qgemm_into_kind, EpiSpec, QActTensor, QConv,
+};
 use dfq::nn::{self, SiteCfg};
 use dfq::quant::{params_for_range, quantize_weights_retaining, QScheme};
 use dfq::tensor::Tensor;
-use dfq::util::bench::{section, Bench};
+use dfq::util::bench::{section, Bench, BenchResult};
 use dfq::util::rng::Rng;
 
 fn rand_t(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
@@ -99,6 +105,12 @@ fn fixture(
     }
 }
 
+/// Print a result (report + JSON line) and keep its record.
+fn emit(records: &mut Vec<String>, r: &BenchResult) {
+    r.print().print_json();
+    records.push(r.json());
+}
+
 fn main() {
     // `--quick` = CI smoke mode: one iteration per bench, records still
     // emitted in the shared JSON format
@@ -106,30 +118,49 @@ fn main() {
         std::env::set_var("DFQ_BENCH_FAST", "1");
     }
     let mut rng = Rng::new(7);
+    let mut records: Vec<String> = Vec::new();
 
-    section("raw GEMM — f32 vs u8×i8→i32");
+    // which microkernel this host dispatches to (DFQ_FORCE_SCALAR pins
+    // it to the scalar reference) — first record so a bench file is
+    // self-describing
+    let kernel = qengine::active_kind();
+    println!("dispatch kernel: {}", kernel.name());
+    records.push(format!(
+        "{{\"name\":\"dispatch kernel\",\"kind\":{:?}}}",
+        kernel.name()
+    ));
+
+    section("raw GEMM — f32 vs u8×i8→i32 per dispatch kernel");
     for (m, k, n) in [(3136usize, 64usize, 64usize), (784, 128, 128)] {
         let flops = 2.0 * (m * k * n) as f64;
         let a: Vec<f32> = rng.normal_vec(m * k, 1.0);
         let b: Vec<f32> = rng.normal_vec(k * n, 1.0);
-        Bench::new(format!("f32 gemm {m}x{k}x{n}"))
+        let r = Bench::new(format!("f32 gemm {m}x{k}x{n}"))
             .run(|| {
                 std::hint::black_box(conv::matmul(&a, &b, m, k, n));
             })
-            .with_units(flops, "flop")
-            .print()
-            .print_json();
+            .with_units(flops, "flop");
+        emit(&mut records, &r);
         let aq: Vec<u8> =
             (0..m * k).map(|_| rng.below(256) as u8).collect();
         let bq: Vec<i8> =
             (0..k * n).map(|_| rng.below(256) as u8 as i8).collect();
-        Bench::new(format!("int8 gemm {m}x{k}x{n}"))
+        // every compiled-in kernel this host can run, scalar first: the
+        // scalar row is the PR-5 k-unroll baseline the SIMD rows must
+        // beat (bitwise-equal outputs — see tests/qengine_parity.rs)
+        let mut c = vec![0i32; m * n];
+        for kind in qengine::available_kinds() {
+            let r = Bench::new(format!(
+                "int8 gemm {m}x{k}x{n} [{}]",
+                kind.name()
+            ))
             .run(|| {
-                std::hint::black_box(qengine::qgemm(&aq, &bq, m, k, n));
+                qgemm_into_kind(kind, &aq, &bq, m, k, n, &mut c);
+                std::hint::black_box(&c);
             })
-            .with_units(flops, "flop")
-            .print()
-            .print_json();
+            .with_units(flops, "flop");
+            emit(&mut records, &r);
+        }
     }
 
     section("conv layers (MobileNet-ish) — fake-quant f32 vs fused int8");
@@ -141,7 +172,7 @@ fn main() {
         fixture(&mut rng, "depthwise 3x3 64 @28", 1, 64, 64, 28, 3, 1, 64),
     ];
     for f in &fixtures {
-        Bench::new(format!("f32  conv {}", f.name))
+        let r = Bench::new(format!("f32  conv {}", f.name))
             .run(|| {
                 std::hint::black_box(conv::conv2d(
                     &f.x_f32,
@@ -152,16 +183,14 @@ fn main() {
                     f.groups,
                 ));
             })
-            .with_units(f.flops, "flop")
-            .print()
-            .print_json();
-        Bench::new(format!("int8 conv {}", f.name))
+            .with_units(f.flops, "flop");
+        emit(&mut records, &r);
+        let r = Bench::new(format!("int8 conv {}", f.name))
             .run(|| {
                 std::hint::black_box(f.qc.run_q(&f.xq).unwrap());
             })
-            .with_units(f.flops, "flop")
-            .print()
-            .print_json();
+            .with_units(f.flops, "flop");
+        emit(&mut records, &r);
     }
 
     section("end-to-end model — fake-quant f32 engine vs int8 plan");
@@ -184,29 +213,45 @@ fn main() {
         for batch in [1usize, 8, 32] {
             let x = testutil::random_input(&m, batch, 1234 + batch as u64);
             let imgs = batch as f64;
-            Bench::new(format!("f32  e2e {name} batch {batch}"))
+            let r_f32 = Bench::new(format!("f32  e2e {name} batch {batch}"))
                 .run(|| {
                     std::hint::black_box(
                         nn::forward(&q.model, &x, &q.act_cfg).unwrap(),
                     );
                 })
-                .with_units(imgs, "img")
-                .print()
-                .print_json();
-            Bench::new(format!("int8 e2e {name} batch {batch}"))
+                .with_units(imgs, "img");
+            emit(&mut records, &r_f32);
+            let r_int = Bench::new(format!("int8 e2e {name} batch {batch}"))
                 .run(|| {
                     std::hint::black_box(qm.run_all(&x).unwrap());
                 })
-                .with_units(imgs, "img")
-                .print()
-                .print_json();
-            Bench::new(format!("int8 e2e {name} batch {batch} (serial)"))
+                .with_units(imgs, "img");
+            emit(&mut records, &r_int);
+            let r = Bench::new(format!("int8 e2e {name} batch {batch} (serial)"))
                 .run(|| {
                     std::hint::black_box(qm.run_batch(&x).unwrap());
                 })
-                .with_units(imgs, "img")
-                .print()
-                .print_json();
+                .with_units(imgs, "img");
+            emit(&mut records, &r);
+            // the headline success metric: int8 speedup over the f32
+            // engine (>1 means int8 is faster), one record per batch
+            let ratio = r_f32.secs.mean / r_int.secs.mean;
+            let line = format!(
+                "{{\"name\":\"int8-vs-f32 e2e {name} batch {batch}\",\
+                 \"kind\":{:?},\"ratio\":{ratio:e}}}",
+                kernel.name()
+            );
+            println!("{line}");
+            records.push(line);
         }
+    }
+
+    // persist every record for mechanical diffing across runs/hosts
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_qengine.json");
+    let mut body = records.join("\n");
+    body.push('\n');
+    match std::fs::write(path, body) {
+        Ok(()) => println!("\nwrote {} records to {path}", records.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 }

@@ -50,12 +50,12 @@ fn artifact_boot_bench() {
         .join(format!("dfq-serving-bench-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("resblock.dfqm");
-    let info = q.save_artifact(&path, PlanOpts { int8_only: true }).unwrap();
+    let info = q.save_artifact(&path, PlanOpts { int8_only: true, ..Default::default() }).unwrap();
     println!("artifact: {}", info.summary());
 
     let recompile = Bench::new("boot/full-dfq-recompile").run(|| {
         let q = quantize();
-        let qm = q.pack_int8_opts(PlanOpts { int8_only: true }).unwrap();
+        let qm = q.pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() }).unwrap();
         std::hint::black_box(qm.num_ops());
     });
     recompile.print().print_json();
@@ -89,7 +89,7 @@ fn artifact_boot_bench() {
         )
         .unwrap()
     };
-    q2.save_artifact(dir.join("twolayer.dfqm"), PlanOpts { int8_only: true })
+    q2.save_artifact(dir.join("twolayer.dfqm"), PlanOpts { int8_only: true, ..Default::default() })
         .unwrap();
     // this doubles as the CI smoke gate — a registry failure must fail
     // the bench run, not scroll past on stderr
@@ -129,7 +129,7 @@ fn registry_hot_swap_bench() {
     let path = dir.join("swap.dfqm");
     let qa = quantize_resblock(91);
     let qb = quantize_resblock(92); // same arch, different weights
-    qa.save_artifact(&path, PlanOpts { int8_only: true }).unwrap();
+    qa.save_artifact(&path, PlanOpts { int8_only: true, ..Default::default() }).unwrap();
 
     let mut reg = Registry::new(ServeConfig {
         max_batch: 16,
@@ -151,7 +151,7 @@ fn registry_hot_swap_bench() {
     for i in 0..requests {
         if i == requests / 2 {
             // overwrite the artifact and swap it in under live load
-            qb.save_artifact(&path, PlanOpts { int8_only: true }).unwrap();
+            qb.save_artifact(&path, PlanOpts { int8_only: true, ..Default::default() }).unwrap();
             reg.reload("swap").unwrap();
         }
         pending.push(client.submit(x.clone()).unwrap());

@@ -146,7 +146,7 @@ mod tests {
     fn encode_decode_is_bitwise_stable() {
         let q = quantized(41);
         let qm = q
-            .pack_int8_opts(PlanOpts { int8_only: true })
+            .pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() })
             .unwrap();
         let info = writer::info_for(&q, &qm);
         let bytes = encode_qmodel(&qm, &info);

@@ -15,6 +15,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::graph::{PoolKind, MAX_CONCAT_INPUTS, MAX_POOL_DIM};
+use crate::nn::qengine::gemm::{self, KernelKind, PackedB};
 use crate::nn::qengine::kernels::{Epilogue, QConv};
 use crate::nn::qengine::ops::{
     QAddInt, QConcatInt, QLinear, QPoolInt, Requantizer, MAX_REQUANT_MULT,
@@ -382,7 +383,9 @@ fn get_conv(cur: &mut Cursors, node: usize) -> AResult<QConv> {
     } else {
         None
     };
-    Ok(QConv {
+    // Kernel kind and packed panels are derived state, never serialized:
+    // re-detect and re-pack for the host we are deserialising on.
+    let mut conv = QConv {
         c_out,
         cig,
         kh,
@@ -397,7 +400,11 @@ fn get_conv(cur: &mut Cursors, node: usize) -> AResult<QConv> {
         bias_f,
         in_qp,
         epi,
-    })
+        kernel: KernelKind::Scalar,
+        packed: PackedB::empty(),
+    };
+    conv.set_kernel(gemm::active_kind());
+    Ok(conv)
 }
 
 fn get_linear(cur: &mut Cursors, node: usize) -> AResult<QLinear> {
@@ -419,7 +426,20 @@ fn get_linear(cur: &mut Cursors, node: usize) -> AResult<QLinear> {
         bias.push(cur.qparams.f32()?);
     }
     let zp_corr = cur.bias.i64_vec(out_dim)?;
-    Ok(QLinear { in_dim, out_dim, wt, zp_w, s_w, zp_corr, bias, in_qp })
+    let mut lin = QLinear {
+        in_dim,
+        out_dim,
+        wt,
+        zp_w,
+        s_w,
+        zp_corr,
+        bias,
+        in_qp,
+        kernel: KernelKind::Scalar,
+        packed: PackedB::empty(),
+    };
+    lin.set_kernel(gemm::active_kind());
+    Ok(lin)
 }
 
 fn get_op(cur: &mut Cursors, node: usize) -> AResult<QOp> {

@@ -97,8 +97,11 @@
 //! #     .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::Analytic, None)
 //! #     .unwrap();
 //! // compile once (CLI: `dfq compile micronet_v2 -o models/micronet.dfqm`)
-//! q.save_artifact("models/micronet.dfqm", PlanOpts { int8_only: true })
-//!     .unwrap();
+//! q.save_artifact(
+//!     "models/micronet.dfqm",
+//!     PlanOpts { int8_only: true, ..Default::default() },
+//! )
+//! .unwrap();
 //! // serve many (CLI: `dfq serve --models models/`)
 //! let mut reg = Registry::new(ServeConfig::default());
 //! reg.scan_dir("models").unwrap();

@@ -215,6 +215,7 @@ fn cmd_compile(rest: &[String]) -> Result<()> {
     // fallback op is an error unless explicitly allowed
     let opts = dfq::nn::qengine::PlanOpts {
         int8_only: !kv.contains_key("allow-fallback"),
+        ..Default::default()
     };
     let out = kv
         .get("out")

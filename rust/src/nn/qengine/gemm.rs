@@ -1,0 +1,1025 @@
+//! The int8 GEMM microkernel layer: one-time runtime kernel dispatch,
+//! packed weight panels, explicit SIMD inner kernels (`std::arch`), and
+//! the vectorised requantise/depthwise helpers the packed layers share.
+//!
+//! # Dispatch table
+//!
+//! | kind     | target            | selected when                        |
+//! |----------|-------------------|--------------------------------------|
+//! | `Scalar` | any               | fallback; `DFQ_FORCE_SCALAR=1`; or `PlanOpts::force_scalar` |
+//! | `Avx2`   | `x86_64`          | `is_x86_feature_detected!("avx2")`   |
+//! | `Neon`   | `aarch64`         | always (NEON is mandatory on A64)    |
+//!
+//! Detection runs once per process ([`active_kind`], `OnceLock`); plans
+//! record their kind at pack time so a single process can host both a
+//! forced-scalar plan and a native plan side by side. The scalar path is
+//! the row-parallel 4-wide k-unroll from PR 3 and `qgemm_into_scalar`
+//! below stays the bitwise-equality oracle for every other path.
+//!
+//! # Tiling and packing layout
+//!
+//! The register tile is `MR × NR = 4 × 16`: four GEMM rows against one
+//! 16-column weight panel, accumulated entirely in registers (2×ymm or
+//! 4×int32x4 per row). K is not blocked — with a 4×16 tile the
+//! accumulators never spill, and qengine K dimensions (`cig·kh·kw`) fit
+//! L1/L2 alongside one panel. Loops run panel-outer / row-block-inner so
+//! a panel stays cache-resident across all M.
+//!
+//! Weight panels are packed once at plan-build time ([`PackedB`]):
+//!
+//! * **AVX2** packs `i8 → i16` pairs: for each 16-column panel, k-pairs
+//!   are interleaved as `[b(k,j), b(k+1,j)]` per column — 32 i16 = one
+//!   64-byte cache line per k-pair. The kernel widens activations the
+//!   same way (`a(k) | a(k+1) << 16` broadcast) and uses
+//!   `_mm256_madd_epi16`. We deliberately do NOT use the classic
+//!   `maddubs` u8×i8 kernel: `_mm256_maddubs_epi16` saturates its i16
+//!   pair-sum (max `255·127·2 = 64770 > i16::MAX`), which would break
+//!   bitwise equality with the scalar oracle. `madd_epi16` on widened
+//!   operands is exact: `|a0·b0 + a1·b1| ≤ 2·255·128 = 65280 < 2^31`,
+//!   and i32 wrapping addition is associative/commutative, so regrouping
+//!   the k-sum cannot change any output. K-odd tails and N-tail columns
+//!   are zero-padded in the panel — zero products are exact.
+//! * **NEON** packs k-major `[kk][16 × i8]` rows; the kernel widens with
+//!   `vmovl_s8`/`vdup_n_s16` and accumulates via `vmlal_s16`
+//!   (i16×i16→i32 multiply-accumulate, exact for these ranges).
+//!
+//! Per-row zero skips (ReLU sparsity) are carried over from the scalar
+//! kernel: skipping an all-zero activation pair adds zero to every lane,
+//! which is bitwise-neutral.
+
+use std::sync::OnceLock;
+
+use crate::util::align::AVec;
+use crate::util::parallel::{self, SendCells};
+
+use super::kernels::{apply_mult, pow2_shift, round_shift, Mult, ShiftMult};
+
+// -- runtime dispatch --------------------------------------------------------
+
+/// A compiled-in inner-kernel flavour. All variants exist on every
+/// target so plans and tests can name them portably; only the kinds in
+/// [`available_kinds`] may actually run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Row-parallel scalar 4-wide k-unroll (the reference dispatch
+    /// target; also what `DFQ_FORCE_SCALAR=1` pins).
+    Scalar,
+    /// x86_64 AVX2 `madd_epi16` microkernel on pair-packed i16 panels.
+    Avx2,
+    /// aarch64 NEON `vmlal_s16` microkernel on k-major i8 panels.
+    Neon,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+}
+
+fn env_force_scalar() -> bool {
+    matches!(std::env::var("DFQ_FORCE_SCALAR"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+fn detect() -> KernelKind {
+    if env_force_scalar() {
+        return KernelKind::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return KernelKind::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return KernelKind::Neon;
+        }
+    }
+    KernelKind::Scalar
+}
+
+/// The kernel kind new plans pack for, detected once per process.
+/// `DFQ_FORCE_SCALAR=1` (read at first use) pins this to
+/// [`KernelKind::Scalar`]; per-plan forcing without env games goes
+/// through `PlanOpts::force_scalar`.
+pub fn active_kind() -> KernelKind {
+    static KIND: OnceLock<KernelKind> = OnceLock::new();
+    *KIND.get_or_init(detect)
+}
+
+/// Every kind this binary can actually run on this host (scalar first).
+/// The dispatch property tests sweep this list against the scalar
+/// oracle.
+pub fn available_kinds() -> Vec<KernelKind> {
+    let mut kinds = vec![KernelKind::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            kinds.push(KernelKind::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            kinds.push(KernelKind::Neon);
+        }
+    }
+    kinds
+}
+
+/// Whether `kind` is compiled in *and* runnable on this host.
+pub fn kind_supported(kind: KernelKind) -> bool {
+    available_kinds().contains(&kind)
+}
+
+// -- packed weight panels ----------------------------------------------------
+
+/// Panel width (output channels per panel) shared by every SIMD kernel.
+pub(crate) const NR: usize = 16;
+/// Register-tile height (GEMM rows per inner-kernel call).
+pub(crate) const MR: usize = 4;
+
+/// A weight matrix re-laid-out for one SIMD kernel kind. Derived state:
+/// rebuilt from the canonical row-major `w` after plan build or artifact
+/// decode, never serialized. `Scalar` plans keep it empty.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    pub(crate) kind: KernelKind,
+    /// AVX2 pair-interleaved panels (64-byte aligned).
+    i16s: AVec<i16>,
+    /// NEON k-major panels (64-byte aligned).
+    i8s: AVec<i8>,
+    k: usize,
+    n: usize,
+    /// K rounded up to even (AVX2 pair layout).
+    kp: usize,
+}
+
+impl Default for PackedB {
+    fn default() -> PackedB {
+        PackedB::empty()
+    }
+}
+
+impl PackedB {
+    /// A panel-less placeholder (scalar plans, depthwise convs).
+    pub fn empty() -> PackedB {
+        PackedB {
+            kind: KernelKind::Scalar,
+            i16s: AVec::new(),
+            i8s: AVec::new(),
+            k: 0,
+            n: 0,
+            kp: 0,
+        }
+    }
+
+    /// Pack row-major `b[k × n]` into `kind`'s panel layout.
+    pub fn pack(kind: KernelKind, b: &[i8], k: usize, n: usize) -> PackedB {
+        assert!(b.len() == k * n, "PackedB::pack: bad weight buffer");
+        assert!(kind_supported(kind), "PackedB::pack: {kind:?} unavailable");
+        let mut pb = PackedB::empty();
+        pb.kind = kind;
+        pb.k = k;
+        pb.n = n;
+        pb.kp = k + (k & 1);
+        let panels = n.div_ceil(NR);
+        match kind {
+            KernelKind::Scalar => {}
+            KernelKind::Avx2 => {
+                // layout: [panel][k-pair][j·2 + (kk&1)], zero-padded on
+                // both the odd-k row and the n-tail columns
+                pb.i16s.resize(panels * pb.kp * NR, 0);
+                for pn in 0..panels {
+                    let base = pn * pb.kp * NR;
+                    for kk in 0..k {
+                        let row = base + (kk / 2) * 2 * NR + (kk & 1);
+                        for j in 0..NR {
+                            let col = pn * NR + j;
+                            if col < n {
+                                pb.i16s[row + j * 2] = b[kk * n + col] as i16;
+                            }
+                        }
+                    }
+                }
+            }
+            KernelKind::Neon => {
+                // layout: [panel][kk][16 × i8], zero-padded n-tail
+                pb.i8s.resize(panels * k * NR, 0);
+                for pn in 0..panels {
+                    let base = pn * k * NR;
+                    for kk in 0..k {
+                        for j in 0..NR {
+                            let col = pn * NR + j;
+                            if col < n {
+                                pb.i8s[base + kk * NR + j] = b[kk * n + col];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        pb
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.kind == KernelKind::Scalar
+    }
+}
+
+// -- GEMM entry points -------------------------------------------------------
+
+/// C[m,n] = A[m,k] · B[k,n] with u8 activations × i8 weights → i32
+/// accumulators, written into the caller's buffer, using the process'
+/// [`active_kind`]. SIMD kinds pack `b` on the fly — the packed layers
+/// ([`super::QConv`] / [`super::QLinear`]) pre-pack at plan build and go
+/// through [`qgemm_packed_into`] instead. Bitwise-identical to
+/// [`qgemm_into_scalar`] for every dispatch target (see module docs).
+pub fn qgemm_into(a: &[u8], b: &[i8], m: usize, k: usize, n: usize, c: &mut [i32]) {
+    qgemm_into_kind(active_kind(), a, b, m, k, n, c);
+}
+
+/// [`qgemm_into`] with an explicit kernel kind — the dispatch property
+/// tests and per-kernel benches drive every compiled-in path through
+/// this. Panics if `kind` is not runnable on this host.
+pub fn qgemm_into_kind(
+    kind: KernelKind,
+    a: &[u8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [i32],
+) {
+    assert!(c.len() == m * n, "qgemm_into: bad output buffer");
+    match kind {
+        KernelKind::Scalar => {
+            c.fill(0);
+            let cells = parallel::as_send_cells(c);
+            parallel::par_chunks(m, |lo, hi| {
+                for i in lo..hi {
+                    let arow = &a[i * k..(i + 1) * k];
+                    // SAFETY: rows [lo, hi) written by this chunk only.
+                    let crow = unsafe { cells.slice(i * n, n) };
+                    qgemm_row_unrolled(arow, b, k, n, crow);
+                }
+            });
+        }
+        _ => {
+            let pb = PackedB::pack(kind, b, k, n);
+            qgemm_packed_into(a, &pb, m, c);
+        }
+    }
+}
+
+/// Packed-panel GEMM driver: `c[m × pb.n] = a[m × pb.k] · B`, row-block
+/// parallel, panel-outer so each 16-column panel stays cache-resident
+/// across the M loop. Fully overwrites `c` (the kernels store, they do
+/// not accumulate into memory).
+pub(crate) fn qgemm_packed_into(a: &[u8], pb: &PackedB, m: usize, c: &mut [i32]) {
+    let (k, n) = (pb.k, pb.n);
+    assert!(c.len() == m * n, "qgemm_packed_into: bad output buffer");
+    assert!(a.len() >= m * k, "qgemm_packed_into: bad activation buffer");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0);
+        return;
+    }
+    let cells = parallel::as_send_cells(c);
+    parallel::par_chunks(m, |lo, hi| match pb.kind {
+        KernelKind::Scalar => {
+            unreachable!("scalar plans carry no packed panels")
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: pack() checked AVX2 availability; rows [lo, hi) of c
+        // are written by this chunk only.
+        KernelKind::Avx2 => unsafe { avx2::gemm_rows(a, pb, lo, hi, &cells) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above, for NEON.
+        KernelKind::Neon => unsafe { neon::gemm_rows(a, pb, lo, hi, &cells) },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!("kernel kind not compiled for this target"),
+    });
+}
+
+/// One GEMM row, k unrolled by 4: every iteration loads four activation
+/// codes, skips fully-zero blocks, and accumulates the four partial
+/// products into a register before the single store back to `crow[j]`.
+/// The scalar tail handles `k % 4` trailing elements with the per-element
+/// zero skip of the original loop.
+#[inline]
+fn qgemm_row_unrolled(arow: &[u8], b: &[i8], k: usize, n: usize, crow: &mut [i32]) {
+    let mut kk = 0usize;
+    while kk + 4 <= k {
+        let a0 = arow[kk] as i32;
+        let a1 = arow[kk + 1] as i32;
+        let a2 = arow[kk + 2] as i32;
+        let a3 = arow[kk + 3] as i32;
+        if (a0 | a1 | a2 | a3) == 0 {
+            kk += 4;
+            continue;
+        }
+        let b0 = &b[kk * n..(kk + 1) * n];
+        let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+        let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+        let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+        for j in 0..n {
+            let mut t = crow[j];
+            t += a0 * b0[j] as i32;
+            t += a1 * b1[j] as i32;
+            t += a2 * b2[j] as i32;
+            t += a3 * b3[j] as i32;
+            crow[j] = t;
+        }
+        kk += 4;
+    }
+    for kt in kk..k {
+        let av = arow[kt] as i32;
+        if av == 0 {
+            continue;
+        }
+        let brow = &b[kt * n..(kt + 1) * n];
+        for j in 0..n {
+            crow[j] += av * brow[j] as i32;
+        }
+    }
+}
+
+/// Reference scalar GEMM loop: the bitwise-equality oracle every
+/// dispatch target (including the unrolled scalar path) is tested
+/// against.
+pub fn qgemm_into_scalar(
+    a: &[u8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [i32],
+) {
+    assert!(c.len() == m * n, "qgemm_into_scalar: bad output buffer");
+    c.fill(0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j] as i32;
+            }
+        }
+    }
+}
+
+/// Allocating wrapper around [`qgemm_into`].
+pub fn qgemm(a: &[u8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    qgemm_into(a, b, m, k, n, &mut c);
+    c
+}
+
+/// Per-row sums of a u8 matrix (the gemmlowp rowsum correction input),
+/// written into the caller's buffer.
+pub fn rowsums_u8_into(a: &[u8], m: usize, k: usize, out: &mut [i32]) {
+    assert!(out.len() == m, "rowsums_u8_into: bad output buffer");
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = a[i * k..(i + 1) * k].iter().map(|&v| v as i32).sum();
+    }
+}
+
+/// Allocating wrapper around [`rowsums_u8_into`].
+pub fn rowsums_u8(a: &[u8], m: usize, k: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m];
+    rowsums_u8_into(a, m, k, &mut out);
+    out
+}
+
+// -- vectorised requantise ---------------------------------------------------
+
+/// Requantise a full code plane: `dst[i] = clamp(round((src[i] − z_in) ·
+/// M) + zp_out, q_lo, q_hi)`. When `M` is an exact power of two with a
+/// right shift in `1..=15` and a SIMD kind is active, a 16-lane i16
+/// shift kernel runs (`t = q − z_in ∈ [−255, 255]` fits i16; `|t| +
+/// 2^(s−1) ≤ 255 + 2^14` never overflows); otherwise a scalar loop with
+/// the same shift classification. Bitwise-identical either way: the
+/// vector idiom `sign(t) · ((|t| + half) >> s)` is exactly the scalar
+/// round-half-away-from-zero.
+pub(crate) fn requant_codes(
+    src: &[u8],
+    dst: &mut [u8],
+    m: &Mult,
+    z_in: i32,
+    zp_out: i32,
+    q_lo: i32,
+    q_hi: i32,
+) {
+    assert!(dst.len() == src.len(), "requant_codes: bad output buffer");
+    let shift = pow2_shift(m);
+    if let Some(ShiftMult::Right(s)) = shift {
+        if (1..=15).contains(&s) {
+            match active_kind() {
+                #[cfg(target_arch = "x86_64")]
+                KernelKind::Avx2 => {
+                    let head = src.len() - src.len() % 16;
+                    // SAFETY: active_kind() checked AVX2 availability.
+                    unsafe {
+                        avx2::requant_shift(
+                            &src[..head],
+                            &mut dst[..head],
+                            s,
+                            z_in,
+                            zp_out,
+                            q_lo,
+                            q_hi,
+                        );
+                    }
+                    requant_scalar(
+                        &src[head..],
+                        &mut dst[head..],
+                        m,
+                        z_in,
+                        zp_out,
+                        q_lo,
+                        q_hi,
+                    );
+                    return;
+                }
+                #[cfg(target_arch = "aarch64")]
+                KernelKind::Neon => {
+                    let head = src.len() - src.len() % 16;
+                    // SAFETY: active_kind() checked NEON availability.
+                    unsafe {
+                        neon::requant_shift(
+                            &src[..head],
+                            &mut dst[..head],
+                            s,
+                            z_in,
+                            zp_out,
+                            q_lo,
+                            q_hi,
+                        );
+                    }
+                    requant_scalar(
+                        &src[head..],
+                        &mut dst[head..],
+                        m,
+                        z_in,
+                        zp_out,
+                        q_lo,
+                        q_hi,
+                    );
+                    return;
+                }
+                _ => {}
+            }
+        }
+    }
+    requant_scalar(src, dst, m, z_in, zp_out, q_lo, q_hi);
+}
+
+fn requant_scalar(
+    src: &[u8],
+    dst: &mut [u8],
+    m: &Mult,
+    z_in: i32,
+    zp_out: i32,
+    q_lo: i32,
+    q_hi: i32,
+) {
+    match pow2_shift(m) {
+        Some(ShiftMult::Right(s)) => {
+            for (d, &q) in dst.iter_mut().zip(src) {
+                let t = (q as i32 - z_in) as i64;
+                let v = round_shift(t, s) as i32;
+                *d = (v + zp_out).clamp(q_lo, q_hi) as u8;
+            }
+        }
+        _ => {
+            for (d, &q) in dst.iter_mut().zip(src) {
+                let t = (q as i32 - z_in) as i64;
+                let v = apply_mult(t, m) as i32;
+                *d = (v + zp_out).clamp(q_lo, q_hi) as u8;
+            }
+        }
+    }
+}
+
+// -- depthwise span kernel ---------------------------------------------------
+
+/// Accumulate one depthwise window over 8 consecutive output columns
+/// (stride 1, fully in-bounds): `acc[e] += Σ_taps q·w`, `sx[e] += Σ_taps
+/// q`, for `e ∈ 0..8`, where `codes[base + dy·wd + dx + e]` addresses
+/// tap `(dy, dx)` of output column `e`. SIMD lanes accumulate in i32;
+/// the caller must guarantee `kh·kw ≤ 65_000` so every partial sum stays
+/// under `2^31` (`|Σ| ≤ taps · 255·128`), which makes the i32 lanes
+/// bitwise-equal to the scalar i64 accumulation.
+pub(crate) fn dw_span8(
+    kind: KernelKind,
+    codes: &[u8],
+    base: usize,
+    wd: usize,
+    kh: usize,
+    kw: usize,
+    wch: &[i8],
+    acc: &mut [i32; 8],
+    sx: &mut [i32; 8],
+) {
+    debug_assert!(base + (kh - 1) * wd + kw - 1 + 7 < codes.len());
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the conv guards dispatch — kind came from active_kind.
+        KernelKind::Avx2 => unsafe {
+            avx2::dw8(codes.as_ptr().add(base), wd, kh, kw, wch, acc, sx)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        KernelKind::Neon => unsafe {
+            neon::dw8(codes.as_ptr().add(base), wd, kh, kw, wch, acc, sx)
+        },
+        _ => {
+            for (dy, wrow) in wch.chunks_exact(kw).enumerate().take(kh) {
+                for (dx, &w) in wrow.iter().enumerate() {
+                    let src = base + dy * wd + dx;
+                    for e in 0..8 {
+                        let q = codes[src + e] as i32;
+                        acc[e] += q * w as i32;
+                        sx[e] += q;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// -- x86_64 AVX2 kernels -----------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{PackedB, SendCells, MR, NR};
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// AVX2 must be available; rows `[lo, hi)` of the output must be
+    /// exclusively owned by this call.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_rows(
+        a: &[u8],
+        pb: &PackedB,
+        lo: usize,
+        hi: usize,
+        cells: &SendCells<i32>,
+    ) {
+        let (k, n, kp) = (pb.k, pb.n, pb.kp);
+        let panels = pb.i16s.as_ptr();
+        for pn in 0..n.div_ceil(NR) {
+            let panel = panels.add(pn * kp * NR);
+            let j0 = pn * NR;
+            let width = NR.min(n - j0);
+            let mut i = lo;
+            while i + MR <= hi {
+                mk::<MR>(a.as_ptr().add(i * k), k, panel, cells.ptr_at(i * n + j0), n, width);
+                i += MR;
+            }
+            while i < hi {
+                mk::<1>(a.as_ptr().add(i * k), k, panel, cells.ptr_at(i * n + j0), n, width);
+                i += 1;
+            }
+        }
+    }
+
+    /// `R × 16` register tile: two i32 ymm accumulators per row, one
+    /// broadcast activation pair per k-pair, `madd_epi16` dot products.
+    /// Stores (does not accumulate) the tile into `c` with row stride
+    /// `n`; `width < NR` spills through a stack buffer.
+    ///
+    /// # Safety
+    /// AVX2; `a` addresses `R` rows of stride `k`; `panel` holds
+    /// `kp × NR` i16s; `c` addresses an `R × width` tile of stride `n`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn mk<const R: usize>(
+        a: *const u8,
+        k: usize,
+        panel: *const i16,
+        c: *mut i32,
+        n: usize,
+        width: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_si256(); 2]; R];
+        let pairs = k / 2;
+        for p in 0..pairs {
+            let b_lo = _mm256_loadu_si256(panel.add(p * 2 * NR) as *const __m256i);
+            let b_hi = _mm256_loadu_si256(panel.add(p * 2 * NR + NR) as *const __m256i);
+            for r in 0..R {
+                let a0 = *a.add(r * k + 2 * p) as u32;
+                let a1 = *a.add(r * k + 2 * p + 1) as u32;
+                let pair = (a0 | (a1 << 16)) as i32;
+                if pair == 0 {
+                    continue; // adding zero to every lane is exact
+                }
+                let av = _mm256_set1_epi32(pair);
+                acc[r][0] = _mm256_add_epi32(acc[r][0], _mm256_madd_epi16(av, b_lo));
+                acc[r][1] = _mm256_add_epi32(acc[r][1], _mm256_madd_epi16(av, b_hi));
+            }
+        }
+        if k % 2 == 1 {
+            // final odd k: the packed pair row is (b[k-1], 0)
+            let b_lo = _mm256_loadu_si256(panel.add(pairs * 2 * NR) as *const __m256i);
+            let b_hi = _mm256_loadu_si256(panel.add(pairs * 2 * NR + NR) as *const __m256i);
+            for r in 0..R {
+                let a0 = *a.add(r * k + k - 1) as u32;
+                if a0 == 0 {
+                    continue;
+                }
+                let av = _mm256_set1_epi32(a0 as i32);
+                acc[r][0] = _mm256_add_epi32(acc[r][0], _mm256_madd_epi16(av, b_lo));
+                acc[r][1] = _mm256_add_epi32(acc[r][1], _mm256_madd_epi16(av, b_hi));
+            }
+        }
+        if width == NR {
+            for r in 0..R {
+                _mm256_storeu_si256(c.add(r * n) as *mut __m256i, acc[r][0]);
+                _mm256_storeu_si256(c.add(r * n + 8) as *mut __m256i, acc[r][1]);
+            }
+        } else {
+            let mut buf = [0i32; NR];
+            for r in 0..R {
+                _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc[r][0]);
+                _mm256_storeu_si256(buf.as_mut_ptr().add(8) as *mut __m256i, acc[r][1]);
+                std::ptr::copy_nonoverlapping(buf.as_ptr(), c.add(r * n), width);
+            }
+        }
+    }
+
+    /// 16-lane power-of-two requantise: `sign(t)·((|t| + 2^(s−1)) >> s)`
+    /// on i16 lanes, then add-zp / clamp / narrow.
+    ///
+    /// # Safety
+    /// AVX2; `src.len() == dst.len()` and a multiple of 16; `1 ≤ s ≤ 15`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn requant_shift(
+        src: &[u8],
+        dst: &mut [u8],
+        s: u32,
+        z_in: i32,
+        zp_out: i32,
+        q_lo: i32,
+        q_hi: i32,
+    ) {
+        let z = _mm256_set1_epi16(z_in as i16);
+        let zp = _mm256_set1_epi16(zp_out as i16);
+        let lo = _mm256_set1_epi16(q_lo as i16);
+        let hi = _mm256_set1_epi16(q_hi as i16);
+        let half = _mm256_set1_epi16(1 << (s - 1));
+        let cnt = _mm_cvtsi32_si128(s as i32);
+        for (sc, dc) in src.chunks_exact(16).zip(dst.chunks_exact_mut(16)) {
+            let q8 = _mm_loadu_si128(sc.as_ptr() as *const __m128i);
+            let t = _mm256_sub_epi16(_mm256_cvtepu8_epi16(q8), z);
+            // |t| ≤ 255, + half ≤ 255 + 2^14: no i16 overflow; srl on a
+            // non-negative value is the arithmetic shift
+            let v = _mm256_srl_epi16(_mm256_add_epi16(_mm256_abs_epi16(t), half), cnt);
+            let r = _mm256_sign_epi16(v, t); // 0 when t == 0, as scalar
+            let q = _mm256_add_epi16(r, zp);
+            let q = _mm256_min_epi16(_mm256_max_epi16(q, lo), hi);
+            // pack 16 i16 → 16 u8 (exact: q ∈ [q_lo, q_hi] ⊆ [0, 255])
+            let p = _mm256_packus_epi16(q, q);
+            let p = _mm256_permute4x64_epi64::<0b11011000>(p);
+            _mm_storeu_si128(
+                dc.as_mut_ptr() as *mut __m128i,
+                _mm256_castsi256_si128(p),
+            );
+        }
+    }
+
+    /// 8-wide depthwise window accumulate (see [`super::dw_span8`]).
+    ///
+    /// # Safety
+    /// AVX2; `codes` addresses every tap of all 8 columns; `wch` holds
+    /// `kh·kw` weights.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dw8(
+        codes: *const u8,
+        wd: usize,
+        kh: usize,
+        kw: usize,
+        wch: &[i8],
+        acc_out: &mut [i32; 8],
+        sx_out: &mut [i32; 8],
+    ) {
+        let mut acc = _mm256_loadu_si256(acc_out.as_ptr() as *const __m256i);
+        let mut sx = _mm256_loadu_si256(sx_out.as_ptr() as *const __m256i);
+        for dy in 0..kh {
+            for dx in 0..kw {
+                let q8 = _mm_loadl_epi64(codes.add(dy * wd + dx) as *const __m128i);
+                let q = _mm256_cvtepu8_epi32(q8);
+                let w = _mm256_set1_epi32(wch[dy * kw + dx] as i32);
+                acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(q, w));
+                sx = _mm256_add_epi32(sx, q);
+            }
+        }
+        _mm256_storeu_si256(acc_out.as_mut_ptr() as *mut __m256i, acc);
+        _mm256_storeu_si256(sx_out.as_mut_ptr() as *mut __m256i, sx);
+    }
+}
+
+// -- aarch64 NEON kernels ----------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{PackedB, SendCells, MR, NR};
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// NEON must be available; rows `[lo, hi)` of the output must be
+    /// exclusively owned by this call.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_rows(
+        a: &[u8],
+        pb: &PackedB,
+        lo: usize,
+        hi: usize,
+        cells: &SendCells<i32>,
+    ) {
+        let (k, n) = (pb.k, pb.n);
+        let panels = pb.i8s.as_ptr();
+        for pn in 0..n.div_ceil(NR) {
+            let panel = panels.add(pn * k * NR);
+            let j0 = pn * NR;
+            let width = NR.min(n - j0);
+            let mut i = lo;
+            while i + MR <= hi {
+                mk::<MR>(a.as_ptr().add(i * k), k, panel, cells.ptr_at(i * n + j0), n, width);
+                i += MR;
+            }
+            while i < hi {
+                mk::<1>(a.as_ptr().add(i * k), k, panel, cells.ptr_at(i * n + j0), n, width);
+                i += 1;
+            }
+        }
+    }
+
+    /// `R × 16` register tile: four int32x4 accumulators per row,
+    /// `vmovl_s8`-widened panel rows, `vmlal_s16` against the broadcast
+    /// activation. Stores the tile into `c` with row stride `n`.
+    ///
+    /// # Safety
+    /// NEON; `a` addresses `R` rows of stride `k`; `panel` holds
+    /// `k × NR` i8s; `c` addresses an `R × width` tile of stride `n`.
+    #[target_feature(enable = "neon")]
+    unsafe fn mk<const R: usize>(
+        a: *const u8,
+        k: usize,
+        panel: *const i8,
+        c: *mut i32,
+        n: usize,
+        width: usize,
+    ) {
+        let mut acc = [[vdupq_n_s32(0); 4]; R];
+        for kk in 0..k {
+            let bv = vld1q_s8(panel.add(kk * NR));
+            let b_lo = vmovl_s8(vget_low_s8(bv));
+            let b_hi = vmovl_s8(vget_high_s8(bv));
+            for r in 0..R {
+                let av = *a.add(r * k + kk);
+                if av == 0 {
+                    continue; // adding zero to every lane is exact
+                }
+                let ad = vdup_n_s16(av as i16);
+                acc[r][0] = vmlal_s16(acc[r][0], vget_low_s16(b_lo), ad);
+                acc[r][1] = vmlal_s16(acc[r][1], vget_high_s16(b_lo), ad);
+                acc[r][2] = vmlal_s16(acc[r][2], vget_low_s16(b_hi), ad);
+                acc[r][3] = vmlal_s16(acc[r][3], vget_high_s16(b_hi), ad);
+            }
+        }
+        if width == NR {
+            for r in 0..R {
+                for (q, &v) in acc[r].iter().enumerate() {
+                    vst1q_s32(c.add(r * n + 4 * q), v);
+                }
+            }
+        } else {
+            let mut buf = [0i32; NR];
+            for r in 0..R {
+                for (q, &v) in acc[r].iter().enumerate() {
+                    vst1q_s32(buf.as_mut_ptr().add(4 * q), v);
+                }
+                std::ptr::copy_nonoverlapping(buf.as_ptr(), c.add(r * n), width);
+            }
+        }
+    }
+
+    /// 16-lane power-of-two requantise (see the AVX2 twin for the
+    /// bounds argument).
+    ///
+    /// # Safety
+    /// NEON; `src.len() == dst.len()` and a multiple of 16; `1 ≤ s ≤ 15`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn requant_shift(
+        src: &[u8],
+        dst: &mut [u8],
+        s: u32,
+        z_in: i32,
+        zp_out: i32,
+        q_lo: i32,
+        q_hi: i32,
+    ) {
+        let z = vdupq_n_s16(z_in as i16);
+        let zp = vdupq_n_s16(zp_out as i16);
+        let lo = vdupq_n_s16(q_lo as i16);
+        let hi = vdupq_n_s16(q_hi as i16);
+        let half = vdupq_n_s16(1 << (s - 1));
+        let neg_s = vdupq_n_s16(-(s as i16));
+        let zero = vdupq_n_s16(0);
+        for (sc, dc) in src.chunks_exact(16).zip(dst.chunks_exact_mut(16)) {
+            let q8 = vld1q_u8(sc.as_ptr());
+            let halves = [
+                vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(q8))),
+                vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(q8))),
+            ];
+            let mut out = [vdup_n_u8(0); 2];
+            for (o, &h) in out.iter_mut().zip(&halves) {
+                let t = vsubq_s16(h, z);
+                // non-negative, so the arithmetic right shift (vshl by
+                // a negative count) is the truncating division
+                let v = vshlq_s16(vaddq_s16(vabsq_s16(t), half), neg_s);
+                let r = vbslq_s16(vcltq_s16(t, zero), vnegq_s16(v), v);
+                let q = vaddq_s16(r, zp);
+                let q = vminq_s16(vmaxq_s16(q, lo), hi);
+                *o = vqmovun_s16(q); // exact: q ∈ [q_lo, q_hi] ⊆ [0, 255]
+            }
+            vst1q_u8(dc.as_mut_ptr(), vcombine_u8(out[0], out[1]));
+        }
+    }
+
+    /// 8-wide depthwise window accumulate (see [`super::dw_span8`]).
+    ///
+    /// # Safety
+    /// NEON; `codes` addresses every tap of all 8 columns; `wch` holds
+    /// `kh·kw` weights.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dw8(
+        codes: *const u8,
+        wd: usize,
+        kh: usize,
+        kw: usize,
+        wch: &[i8],
+        acc_out: &mut [i32; 8],
+        sx_out: &mut [i32; 8],
+    ) {
+        let mut acc = [
+            vld1q_s32(acc_out.as_ptr()),
+            vld1q_s32(acc_out.as_ptr().add(4)),
+        ];
+        let mut sx = [
+            vld1q_s32(sx_out.as_ptr()),
+            vld1q_s32(sx_out.as_ptr().add(4)),
+        ];
+        for dy in 0..kh {
+            for dx in 0..kw {
+                let q8 = vld1_u8(codes.add(dy * wd + dx));
+                let q16 = vreinterpretq_s16_u16(vmovl_u8(q8));
+                let w = vdup_n_s16(wch[dy * kw + dx] as i16);
+                acc[0] = vmlal_s16(acc[0], vget_low_s16(q16), w);
+                acc[1] = vmlal_s16(acc[1], vget_high_s16(q16), w);
+                sx[0] = vaddw_s16(sx[0], vget_low_s16(q16));
+                sx[1] = vaddw_s16(sx[1], vget_high_s16(q16));
+            }
+        }
+        vst1q_s32(acc_out.as_mut_ptr(), acc[0]);
+        vst1q_s32(acc_out.as_mut_ptr().add(4), acc[1]);
+        vst1q_s32(sx_out.as_mut_ptr(), sx[0]);
+        vst1q_s32(sx_out.as_mut_ptr().add(4), sx[1]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_case(rng: &mut Rng, m: usize, k: usize, n: usize) -> (Vec<u8>, Vec<i8>) {
+        let mut a: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        // plant zeros so the skip branches execute
+        for v in a.iter_mut().step_by(3) {
+            *v = 0;
+        }
+        let b: Vec<i8> =
+            (0..k * n).map(|_| (rng.below(256) as i64 - 128) as i8).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn detection_is_stable_and_scalar_is_available() {
+        assert_eq!(active_kind(), active_kind());
+        let kinds = available_kinds();
+        assert_eq!(kinds[0], KernelKind::Scalar);
+        assert!(kinds.contains(&active_kind()));
+    }
+
+    #[test]
+    fn every_available_kind_matches_the_scalar_oracle() {
+        let mut rng = Rng::new(9000);
+        // remainder tails on every axis: m % MR, n % NR, k odd
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (4, 16, 16),
+            (5, 17, 16),
+            (4, 16, 17),
+            (3, 2, 35),
+            (7, 31, 13),
+            (9, 33, 31),
+            (13, 64, 48),
+            (2, 1, 16),
+            (8, 18, 1),
+        ] {
+            let (a, b) = random_case(&mut rng, m, k, n);
+            let mut want = vec![0i32; m * n];
+            qgemm_into_scalar(&a, &b, m, k, n, &mut want);
+            for kind in available_kinds() {
+                let mut got = vec![-1i32; m * n];
+                qgemm_into_kind(kind, &a, &b, m, k, n, &mut got);
+                assert_eq!(got, want, "{kind:?} diverged at ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_panels_are_aligned_and_prepack_matches_otf() {
+        let mut rng = Rng::new(9001);
+        let (m, k, n) = (6usize, 19usize, 21usize);
+        let (a, b) = random_case(&mut rng, m, k, n);
+        let mut want = vec![0i32; m * n];
+        qgemm_into_scalar(&a, &b, m, k, n, &mut want);
+        for kind in available_kinds() {
+            if kind == KernelKind::Scalar {
+                continue;
+            }
+            let pb = PackedB::pack(kind, &b, k, n);
+            assert_eq!(pb.i16s.as_ptr() as usize % 64, 0);
+            assert_eq!(pb.i8s.as_ptr() as usize % 64, 0);
+            let mut got = vec![0i32; m * n];
+            qgemm_packed_into(&a, &pb, m, &mut got);
+            assert_eq!(got, want, "prepacked {kind:?} diverged");
+        }
+    }
+
+    #[test]
+    fn requant_codes_matches_scalar_for_pow2_and_generic() {
+        let mut rng = Rng::new(9002);
+        let src: Vec<u8> = (0..1000).map(|_| rng.below(256) as u8).collect();
+        let cases = [
+            Mult::Fixed { m: 1 << 30, shift: 33 }, // pow2: SIMD shift path
+            Mult::Fixed { m: 1 << 30, shift: 31 },
+            Mult::Fixed { m: (1 << 30) + 12345, shift: 33 }, // generic
+            mult_for_test(0.437),
+        ];
+        for mu in &cases {
+            for &(z_in, zp_out, q_lo, q_hi) in
+                &[(0i32, 0i32, 0i32, 255i32), (128, 3, 0, 255), (7, 128, 5, 250)]
+            {
+                let mut got = vec![0u8; src.len()];
+                requant_codes(&src, &mut got, mu, z_in, zp_out, q_lo, q_hi);
+                for (i, &q) in src.iter().enumerate() {
+                    let t = (q as i32 - z_in) as i64;
+                    let want =
+                        (apply_mult(t, mu) as i32 + zp_out).clamp(q_lo, q_hi);
+                    assert_eq!(
+                        got[i] as i32, want,
+                        "requant {mu:?} z_in={z_in} diverged at {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    fn mult_for_test(x: f64) -> Mult {
+        super::super::kernels::mult_for(x)
+    }
+
+    #[test]
+    fn dw_span8_matches_scalar_reference() {
+        let mut rng = Rng::new(9003);
+        let (h, wd, kh, kw) = (6usize, 14usize, 3usize, 3usize);
+        let codes: Vec<u8> = (0..h * wd).map(|_| rng.below(256) as u8).collect();
+        let wch: Vec<i8> =
+            (0..kh * kw).map(|_| (rng.below(256) as i64 - 128) as i8).collect();
+        let base = wd + 2; // window fully in bounds for 8 columns
+        let (mut acc_s, mut sx_s) = ([3i32; 8], [-1i32; 8]);
+        dw_span8(KernelKind::Scalar, &codes, base, wd, kh, kw, &wch, &mut acc_s, &mut sx_s);
+        for kind in available_kinds() {
+            let (mut acc, mut sx) = ([3i32; 8], [-1i32; 8]);
+            dw_span8(kind, &codes, base, wd, kh, kw, &wch, &mut acc, &mut sx);
+            assert_eq!(acc, acc_s, "{kind:?} dw acc diverged");
+            assert_eq!(sx, sx_s, "{kind:?} dw sx diverged");
+        }
+    }
+}

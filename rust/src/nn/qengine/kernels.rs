@@ -1,6 +1,7 @@
-//! Integer compute kernels: the u8×i8→i32 GEMM, fixed-point
-//! requantisation multipliers, the shared scratch arena, and the packed
-//! convolution layer ([`QConv`]) with its fused epilogues.
+//! Integer compute layers: fixed-point requantisation multipliers, the
+//! shared scratch arena, and the packed convolution layer ([`QConv`])
+//! with its fused epilogues. The GEMM microkernels themselves (packed
+//! panels, SIMD inner loops, runtime dispatch) live in [`super::gemm`].
 //!
 //! Everything here is *mechanism*; policy (which kernel runs where, on
 //! which grid) lives in the plan compiler ([`super::plan`]).
@@ -11,146 +12,37 @@ use crate::nn::conv::im2col_into;
 use crate::nn::SiteCfg;
 use crate::quant::QParams;
 use crate::tensor::{QTensor, Tensor};
+use crate::util::align::AVec;
 use crate::util::parallel;
 
+use super::gemm::{self, KernelKind, PackedB};
 use super::{assert_act_grid, QActTensor};
+
+/// Depthwise SIMD accumulates windows in i32 lanes; with `kh·kw` taps of
+/// magnitude ≤ `255·128` the partial sums stay below `2^31` for up to
+/// this many taps, keeping the lanes bitwise-equal to the scalar i64
+/// accumulation. Larger (absurd) kernels fall back to the scalar path.
+const DW_SIMD_MAX_TAPS: usize = 65_000;
 
 // -- scratch arena -----------------------------------------------------------
 
 /// Reusable per-run scratch buffers: im2col patches, GEMM accumulators
 /// and row sums. The plan executor allocates one `Scratch` per
 /// `run_batch` call and recycles it across every layer (buffers grow to
-/// the largest layer once, then stop allocating).
+/// the largest layer once, then stop allocating). Buffers are 64-byte
+/// aligned ([`AVec`]) so SIMD kernels never straddle a cache line, and
+/// stay aligned through pool reuse and growth.
 #[derive(Debug, Default)]
 pub struct Scratch {
-    pub(crate) col: Vec<u8>,
-    pub(crate) acc: Vec<i32>,
-    pub(crate) rows: Vec<i32>,
+    pub(crate) col: AVec<u8>,
+    pub(crate) acc: AVec<i32>,
+    pub(crate) rows: AVec<i32>,
 }
 
 impl Scratch {
     pub fn new() -> Scratch {
         Scratch::default()
     }
-}
-
-// -- integer GEMM primitives ------------------------------------------------
-
-/// C[m,n] = A[m,k] · B[k,n] with u8 activations × i8 weights → i32
-/// accumulators, written into the caller's buffer. Row-parallel chunking
-/// as in the f32 [`crate::nn::conv::matmul`]; the inner kernel is a
-/// 4-wide k-unroll ([`qgemm_row_unrolled`]) that keeps each output
-/// element in a register across the four partial products. The all-zero
-/// block skip exploits ReLU sparsity (post-ReLU grids have `zp == 0`, so
-/// code 0 is exactly value 0). Results are bitwise-identical to the
-/// scalar saxpy loop: i32 wrapping addition is associative and
-/// commutative, so regrouping the k-sum cannot change any output.
-pub fn qgemm_into(a: &[u8], b: &[i8], m: usize, k: usize, n: usize, c: &mut [i32]) {
-    assert!(c.len() == m * n, "qgemm_into: bad output buffer");
-    c.fill(0);
-    let cells = parallel::as_send_cells(c);
-    parallel::par_chunks(m, |lo, hi| {
-        for i in lo..hi {
-            let arow = &a[i * k..(i + 1) * k];
-            // SAFETY: rows [lo, hi) are written by this chunk only.
-            let crow = unsafe { cells.slice(i * n, n) };
-            qgemm_row_unrolled(arow, b, k, n, crow);
-        }
-    });
-}
-
-/// One GEMM row, k unrolled by 4: every iteration loads four activation
-/// codes, skips fully-zero blocks, and accumulates the four partial
-/// products into a register before the single store back to `crow[j]`.
-/// The scalar tail handles `k % 4` trailing elements with the per-element
-/// zero skip of the original loop.
-#[inline]
-fn qgemm_row_unrolled(arow: &[u8], b: &[i8], k: usize, n: usize, crow: &mut [i32]) {
-    let mut kk = 0usize;
-    while kk + 4 <= k {
-        let a0 = arow[kk] as i32;
-        let a1 = arow[kk + 1] as i32;
-        let a2 = arow[kk + 2] as i32;
-        let a3 = arow[kk + 3] as i32;
-        if (a0 | a1 | a2 | a3) == 0 {
-            kk += 4;
-            continue;
-        }
-        let b0 = &b[kk * n..(kk + 1) * n];
-        let b1 = &b[(kk + 1) * n..(kk + 2) * n];
-        let b2 = &b[(kk + 2) * n..(kk + 3) * n];
-        let b3 = &b[(kk + 3) * n..(kk + 4) * n];
-        for j in 0..n {
-            let mut t = crow[j];
-            t += a0 * b0[j] as i32;
-            t += a1 * b1[j] as i32;
-            t += a2 * b2[j] as i32;
-            t += a3 * b3[j] as i32;
-            crow[j] = t;
-        }
-        kk += 4;
-    }
-    for kt in kk..k {
-        let av = arow[kt] as i32;
-        if av == 0 {
-            continue;
-        }
-        let brow = &b[kt * n..(kt + 1) * n];
-        for j in 0..n {
-            crow[j] += av * brow[j] as i32;
-        }
-    }
-}
-
-/// Reference scalar GEMM row loop (the pre-unroll kernel), kept for the
-/// bitwise-equivalence tests and the kernel benches.
-pub fn qgemm_into_scalar(
-    a: &[u8],
-    b: &[i8],
-    m: usize,
-    k: usize,
-    n: usize,
-    c: &mut [i32],
-) {
-    assert!(c.len() == m * n, "qgemm_into_scalar: bad output buffer");
-    c.fill(0);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0 {
-                continue;
-            }
-            let av = av as i32;
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j] as i32;
-            }
-        }
-    }
-}
-
-/// Allocating wrapper around [`qgemm_into`].
-pub fn qgemm(a: &[u8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
-    let mut c = vec![0i32; m * n];
-    qgemm_into(a, b, m, k, n, &mut c);
-    c
-}
-
-/// Per-row sums of a u8 matrix (the gemmlowp rowsum correction input),
-/// written into the caller's buffer.
-pub fn rowsums_u8_into(a: &[u8], m: usize, k: usize, out: &mut [i32]) {
-    assert!(out.len() == m, "rowsums_u8_into: bad output buffer");
-    for (i, o) in out.iter_mut().enumerate() {
-        *o = a[i * k..(i + 1) * k].iter().map(|&v| v as i32).sum();
-    }
-}
-
-/// Allocating wrapper around [`rowsums_u8_into`].
-pub fn rowsums_u8(a: &[u8], m: usize, k: usize) -> Vec<i32> {
-    let mut out = vec![0i32; m];
-    rowsums_u8_into(a, m, k, &mut out);
-    out
 }
 
 // -- fixed-point requantisation ---------------------------------------------
@@ -206,6 +98,72 @@ pub fn apply_mult(t: i64, m: &Mult) -> i64 {
             r as i64
         }
         Mult::Float(f) => (t as f64 * f).round() as i64,
+    }
+}
+
+/// Round-half-away-from-zero arithmetic right shift: `round(t · 2^-s)`.
+/// `shift == 0` is the identity. Shared by the integer add/concat ops
+/// ([`super::ops`]) and the power-of-two epilogue fast path.
+#[inline]
+pub(crate) fn round_shift(t: i64, shift: u32) -> i64 {
+    if shift == 0 {
+        return t;
+    }
+    let half = 1i64 << (shift - 1);
+    if t >= 0 {
+        (t + half) >> shift
+    } else {
+        -((-t + half) >> shift)
+    }
+}
+
+/// A [`Mult`] that happens to be an exact power of two, collapsed to a
+/// shift (the observation of Oh et al. 2020: power-of-two scales turn
+/// requantisation into pure shifts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ShiftMult {
+    /// `M = 2^-s`: a pure rounding right shift (the common case — the
+    /// accumulator grid is much finer than the output grid).
+    Right(u32),
+    /// `M = 1` exactly.
+    Exact,
+    /// `M = 2^s`: an exact left shift.
+    Left(u32),
+}
+
+/// Classify a multiplier as an exact power of two. [`mult_for`]
+/// normalizes every mantissa into `[2^30, 2^31)`, so `M = 2^e` lands
+/// exactly on `m == 2^30` with `shift == 30 − e`: the classification
+/// needs no extra plan state and no wire-format change, it just pattern
+/// matches the existing `Mult`.
+#[inline]
+pub(crate) fn pow2_shift(m: &Mult) -> Option<ShiftMult> {
+    const POW2_M: i32 = 1 << 30;
+    match *m {
+        Mult::Fixed { m: POW2_M, shift } => Some(match shift {
+            31.. => ShiftMult::Right(shift - 30),
+            30 => ShiftMult::Exact,
+            _ => ShiftMult::Left(30 - shift),
+        }),
+        _ => None,
+    }
+}
+
+/// Apply a power-of-two multiplier: bitwise-identical to [`apply_mult`]
+/// on the `Mult` it was classified from, without the 64×32 product or
+/// the i128 intermediate. Proof sketch (divide the i128 identity
+/// through by the `2^30` mantissa): for `shift > 30`,
+/// `(|t|·2^30 + 2^(shift−1)) >> shift == (|t| + 2^(shift−31)) >>
+/// (shift−30)`, which is exactly [`round_shift`]`(t, shift−30)` with
+/// its half-away rounding; `shift == 30` cancels to the identity; and
+/// `shift < 30` makes the rounding term vanish, leaving the exact left
+/// shift (engine accumulators stay ≪ 2^40, so no i64 overflow).
+#[inline]
+pub(crate) fn apply_pow2(t: i64, s: &ShiftMult) -> i64 {
+    match *s {
+        ShiftMult::Right(sh) => round_shift(t, sh),
+        ShiftMult::Exact => t,
+        ShiftMult::Left(sh) => t << sh,
     }
 }
 
@@ -370,6 +328,12 @@ pub struct QConv {
     pub(crate) bias_f: Vec<f32>,
     pub(crate) in_qp: QParams,
     pub(crate) epi: Option<Epilogue>,
+    /// Inner-kernel flavour this layer dispatches to. Derived state
+    /// (like `packed`): recorded at pack/decode time, never serialized.
+    pub(crate) kernel: KernelKind,
+    /// SIMD weight panels for `kernel` (empty for scalar plans and
+    /// depthwise layers), rebuilt from the canonical `w` on demand.
+    pub(crate) packed: PackedB,
 }
 
 impl QConv {
@@ -434,7 +398,7 @@ impl QConv {
             }
         };
 
-        Ok(QConv {
+        let mut conv = QConv {
             c_out,
             cig,
             kh,
@@ -449,7 +413,11 @@ impl QConv {
             bias_f: bias.to_vec(),
             in_qp: *in_qp,
             epi,
-        })
+            kernel: KernelKind::Scalar,
+            packed: PackedB::empty(),
+        };
+        conv.set_kernel(gemm::active_kind());
+        Ok(conv)
     }
 
     pub fn out_channels(&self) -> usize {
@@ -468,6 +436,36 @@ impl QConv {
     /// Output grid when the layer requantises.
     pub fn out_params(&self) -> Option<QParams> {
         self.epi.as_ref().map(|e| e.out_qp)
+    }
+
+    /// The inner-kernel flavour this layer currently dispatches to.
+    pub fn kernel_kind(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Re-target this layer's inner kernel and rebuild the packed
+    /// panels (plan-level `force_scalar`, dispatch bisection tests).
+    pub fn set_kernel(&mut self, kind: KernelKind) {
+        if self.kernel != kind {
+            self.kernel = kind;
+            self.rebuild_packed();
+        }
+    }
+
+    /// Re-derive the packed SIMD panels from the canonical weights for
+    /// the current kernel kind. Panels are derived state — rebuilt here
+    /// after plan build or artifact decode, never serialized, so the
+    /// `.dfqm` wire format and its bitwise-output guarantee are
+    /// untouched. Depthwise layers keep no panels (direct window
+    /// kernel); scalar plans keep none either.
+    pub(crate) fn rebuild_packed(&mut self) {
+        self.packed = if self.groups == 1 && self.kernel != KernelKind::Scalar
+        {
+            let kdim = self.cig * self.kh * self.kw;
+            PackedB::pack(self.kernel, &self.w, kdim, self.c_out)
+        } else {
+            PackedB::empty()
+        };
     }
 
     fn check_input(&self, x: &QActTensor) -> Result<(usize, usize, usize)> {
@@ -518,20 +516,30 @@ impl QConv {
             self.in_qp.zero_point as u8,
             &mut scratch.col[..ohw * kdim],
         );
-        rowsums_u8_into(
+        gemm::rowsums_u8_into(
             &scratch.col[..ohw * kdim],
             ohw,
             kdim,
             &mut scratch.rows[..ohw],
         );
-        qgemm_into(
-            &scratch.col[..ohw * kdim],
-            &self.w,
-            ohw,
-            kdim,
-            self.c_out,
-            &mut scratch.acc[..ohw * self.c_out],
-        );
+        if self.packed.is_empty() {
+            gemm::qgemm_into_kind(
+                KernelKind::Scalar,
+                &scratch.col[..ohw * kdim],
+                &self.w,
+                ohw,
+                kdim,
+                self.c_out,
+                &mut scratch.acc[..ohw * self.c_out],
+            );
+        } else {
+            gemm::qgemm_packed_into(
+                &scratch.col[..ohw * kdim],
+                &self.packed,
+                ohw,
+                &mut scratch.acc[..ohw * self.c_out],
+            );
+        }
     }
 
     fn reserve(&self, scratch: &mut Scratch, oh: usize, ow: usize) {
@@ -580,22 +588,50 @@ impl QConv {
                     let bq = epi.bias_q[o];
                     let m = &epi.mult[o];
                     let dst = &mut out[base + o * ohw..base + (o + 1) * ohw];
-                    for (p, d) in dst.iter_mut().enumerate() {
-                        let t = scratch.acc[p * self.c_out + o] as i64
-                            - zpw * scratch.rows[p] as i64
-                            + bq;
-                        let q = (apply_mult(t, m) + epi.zp_out as i64)
-                            .clamp(epi.q_lo as i64, epi.q_hi as i64);
-                        *d = q as u8;
+                    // classify once per channel, outside the position
+                    // loop: power-of-two multipliers collapse the
+                    // requant to a pure rounding shift (no 64×32
+                    // product, no i128), bitwise-identical to the
+                    // general path
+                    match pow2_shift(m) {
+                        Some(sh) => {
+                            for (p, d) in dst.iter_mut().enumerate() {
+                                let t = scratch.acc[p * self.c_out + o]
+                                    as i64
+                                    - zpw * scratch.rows[p] as i64
+                                    + bq;
+                                let q = (apply_pow2(t, &sh)
+                                    + epi.zp_out as i64)
+                                    .clamp(epi.q_lo as i64, epi.q_hi as i64);
+                                *d = q as u8;
+                            }
+                        }
+                        None => {
+                            for (p, d) in dst.iter_mut().enumerate() {
+                                let t = scratch.acc[p * self.c_out + o]
+                                    as i64
+                                    - zpw * scratch.rows[p] as i64
+                                    + bq;
+                                let q = (apply_mult(t, m)
+                                    + epi.zp_out as i64)
+                                    .clamp(epi.q_lo as i64, epi.q_hi as i64);
+                                *d = q as u8;
+                            }
+                        }
                     }
                 }
             }
         } else {
+            let shifts: Vec<Option<ShiftMult>> =
+                epi.mult.iter().map(pow2_shift).collect();
             let requant = |c: usize, t: i64| {
-                let q = (apply_mult(t + epi.bias_q[c], &epi.mult[c])
-                    + epi.zp_out as i64)
-                    .clamp(epi.q_lo as i64, epi.q_hi as i64);
-                q as u8
+                let t = t + epi.bias_q[c];
+                let v = match &shifts[c] {
+                    Some(sh) => apply_pow2(t, sh),
+                    None => apply_mult(t, &epi.mult[c]),
+                };
+                (v + epi.zp_out as i64).clamp(epi.q_lo as i64, epi.q_hi as i64)
+                    as u8
             };
             self.depthwise(x, n, h, wd, oh, ow, requant, &mut out);
         }
@@ -665,6 +701,14 @@ impl QConv {
     /// path, exact f32 on the unfused path). `t` handed to the epilogue
     /// is the raw rowsum-corrected i64 accumulator; the closure adds its
     /// own per-channel constants.
+    ///
+    /// Stride-1 layers run fully-in-bounds interior columns through the
+    /// 8-wide SIMD window kernel ([`gemm::dw_span8`]); padding edges,
+    /// strided layers, and span tails take the scalar [`Self::dw_patch`].
+    /// The split is bitwise-invisible: in-bounds windows never read the
+    /// `zp_in` padding value, and the i32-lane guard
+    /// ([`DW_SIMD_MAX_TAPS`]) keeps SIMD partial sums exactly equal to
+    /// the scalar i64 accumulation.
     #[allow(clippy::too_many_arguments)]
     fn depthwise<T, F>(
         &self,
@@ -683,6 +727,9 @@ impl QConv {
         let khw = self.kh * self.kw;
         let zp_in = self.in_qp.zero_point as i32;
         let ohw = oh * ow;
+        let simd = self.kernel != KernelKind::Scalar
+            && self.stride == 1
+            && khw <= DW_SIMD_MAX_TAPS;
         let cells = parallel::as_send_cells(out);
         parallel::par_chunks(n * c, |lo, hi| {
             for i in lo..hi {
@@ -693,12 +740,57 @@ impl QConv {
                 let wch = &self.w[ch * khw..(ch + 1) * khw];
                 let zpw = self.zp_w[ch] as i64;
                 for oy in 0..oh {
-                    for ox in 0..ow {
+                    // rows whose every tap is in bounds (stride 1):
+                    // `iy = oy + dy − pad ∈ [0, h)` for all `dy`
+                    let y_in = simd
+                        && oy >= self.pad
+                        && oy + self.kh <= h + self.pad;
+                    let mut ox = 0usize;
+                    if y_in {
+                        let x_lo = self.pad.min(ow);
+                        let x_hi = (wd + self.pad + 1)
+                            .saturating_sub(self.kw)
+                            .min(ow);
+                        while ox < x_lo {
+                            let (acc, sx) = self.dw_patch(
+                                &x.codes, xoff, h, wd, oy, ox, wch, zp_in,
+                            );
+                            dst[oy * ow + ox] =
+                                epilogue(ch, acc - zpw * sx as i64);
+                            ox += 1;
+                        }
+                        while ox + 8 <= x_hi {
+                            let base = xoff
+                                + (oy - self.pad) * wd
+                                + (ox - self.pad);
+                            let mut acc8 = [0i32; 8];
+                            let mut sx8 = [0i32; 8];
+                            gemm::dw_span8(
+                                self.kernel,
+                                &x.codes,
+                                base,
+                                wd,
+                                self.kh,
+                                self.kw,
+                                wch,
+                                &mut acc8,
+                                &mut sx8,
+                            );
+                            for e in 0..8 {
+                                let t =
+                                    acc8[e] as i64 - zpw * sx8[e] as i64;
+                                dst[oy * ow + ox + e] = epilogue(ch, t);
+                            }
+                            ox += 8;
+                        }
+                    }
+                    while ox < ow {
                         let (acc, sx) = self.dw_patch(
                             &x.codes, xoff, h, wd, oy, ox, wch, zp_in,
                         );
-                        let t = acc - zpw * sx as i64;
-                        dst[oy * ow + ox] = epilogue(ch, t);
+                        dst[oy * ow + ox] =
+                            epilogue(ch, acc - zpw * sx as i64);
+                        ox += 1;
                     }
                 }
             }
@@ -777,51 +869,52 @@ mod tests {
     }
 
     #[test]
-    fn qgemm_matches_naive() {
-        let mut rng = Rng::new(4);
-        let (m, k, n) = (7, 13, 5);
-        let a: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
-        let b: Vec<i8> =
-            (0..k * n).map(|_| rng.below(256) as i8).collect();
-        let got = qgemm(&a, &b, m, k, n);
-        for i in 0..m {
-            for j in 0..n {
-                let want: i32 = (0..k)
-                    .map(|kk| a[i * k + kk] as i32 * b[kk * n + j] as i32)
-                    .sum();
-                assert_eq!(got[i * n + j], want);
+    fn pow2_multiplier_shift_path_matches_apply_mult() {
+        let mut rng = Rng::new(44);
+        for e in -16i32..=8 {
+            let m = mult_for(2f64.powi(e));
+            let sh = pow2_shift(&m)
+                .unwrap_or_else(|| panic!("2^{e} not classified: {m:?}"));
+            for _ in 0..200 {
+                let t = rng.uniform(-1e9, 1e9) as i64;
+                assert_eq!(
+                    apply_pow2(t, &sh),
+                    apply_mult(t, &m),
+                    "2^{e} diverged at t={t}"
+                );
+            }
+            // the boundary cases the rounding proof leans on
+            for t in [-3i64, -1, 0, 1, 3, 12345, -54321] {
+                assert_eq!(apply_pow2(t, &sh), apply_mult(t, &m));
             }
         }
+        // non-pow2 multipliers are never classified
+        assert!(pow2_shift(&mult_for(0.3)).is_none());
+        assert!(pow2_shift(&Mult::Float(0.5)).is_none());
+        assert!(pow2_shift(&Mult::Fixed { m: (1 << 30) + 1, shift: 35 })
+            .is_none());
     }
 
     #[test]
-    fn qgemm_unrolled_bitwise_matches_scalar() {
-        // the 4-wide k-unroll must agree with the scalar loop bit for bit
-        // on every shape class: k % 4 == 0..3, all-zero blocks, extremes
-        let mut rng = Rng::new(21);
-        for (m, k, n) in
-            [(1, 1, 1), (3, 4, 5), (5, 7, 3), (2, 9, 8), (4, 18, 11)]
-        {
-            let mut a: Vec<u8> =
-                (0..m * k).map(|_| rng.below(256) as u8).collect();
-            // plant zero runs so whole unroll blocks get skipped
-            for v in a.iter_mut().step_by(3) {
-                *v = 0;
-            }
-            let b: Vec<i8> =
-                (0..k * n).map(|_| rng.below(256) as i8).collect();
-            let mut fast = vec![0i32; m * n];
-            let mut slow = vec![0i32; m * n];
-            qgemm_into(&a, &b, m, k, n, &mut fast);
-            qgemm_into_scalar(&a, &b, m, k, n, &mut slow);
-            assert_eq!(fast, slow, "shape ({m},{k},{n})");
-        }
-    }
-
-    #[test]
-    fn rowsums_match() {
-        let a: Vec<u8> = vec![1, 2, 3, 250, 251, 252];
-        assert_eq!(rowsums_u8(&a, 2, 3), vec![6, 753]);
+    fn scratch_buffers_stay_aligned_through_reuse_and_growth() {
+        let mut s = Scratch::new();
+        s.col.resize(100, 1);
+        s.acc.resize(100, 2);
+        s.rows.resize(100, 3);
+        let check = |s: &Scratch, when: &str| {
+            assert_eq!(s.col.as_ptr() as usize % 64, 0, "col {when}");
+            assert_eq!(s.acc.as_ptr() as usize % 64, 0, "acc {when}");
+            assert_eq!(s.rows.as_ptr() as usize % 64, 0, "rows {when}");
+        };
+        check(&s, "after first fill");
+        // pool reuse: shrink for a small layer, then grow past capacity
+        s.col.resize(10, 0);
+        s.acc.resize(10, 0);
+        s.rows.resize(10, 0);
+        s.col.resize(50_000, 0);
+        s.acc.resize(50_000, 0);
+        s.rows.resize(50_000, 0);
+        check(&s, "after regrowth");
     }
 
     #[test]
@@ -864,5 +957,75 @@ mod tests {
         big.rows.resize(10_000, 11);
         let recycled = qc.run_q_with(&xq, &mut big).unwrap();
         assert_eq!(fresh, recycled);
+    }
+
+    #[test]
+    fn conv_simd_dispatch_is_bitwise_identical_to_scalar() {
+        // dense and depthwise fixtures (odd spatial sizes force span
+        // tails and padding edges), fused and f32 epilogues, native
+        // dispatch vs the forced-scalar reference
+        let mut rng = Rng::new(77);
+        for (c_out, cig, ks, groups, stride, pad) in [
+            (8usize, 3usize, 3usize, 1usize, 1usize, 1usize),
+            (17, 3, 1, 1, 1, 0),
+            (5, 2, 3, 1, 2, 1),
+            (6, 1, 3, 6, 1, 1),  // depthwise: SIMD spans + edges
+            (10, 1, 5, 10, 1, 2), // depthwise, wider window
+        ] {
+            let t = crate::tensor::Tensor::new(
+                &[c_out, cig, ks, ks],
+                rng.normal_vec(c_out * cig * ks * ks, 0.5),
+            );
+            let (_, codes) = crate::quant::quantize_weights_retaining(
+                &mut t.clone(),
+                &crate::quant::QScheme::int8_asymmetric(),
+            )
+            .unwrap();
+            let c_in = cig * groups;
+            let x = crate::tensor::Tensor::new(
+                &[2, c_in, 11, 13],
+                rng.normal_vec(2 * c_in * 11 * 13, 1.0),
+            );
+            let in_qp =
+                crate::quant::params_for_range(x.min(), x.max(), 8, false);
+            let xq = QActTensor::quantize(&x, &in_qp);
+            let row = SiteCfg {
+                scale: 0.04,
+                zero_point: 3.0,
+                n_levels: 256.0,
+                clip_hi: f32::INFINITY,
+            };
+            let bias: Vec<f32> = (0..c_out).map(|o| o as f32 * 0.1).collect();
+            for fused in [true, false] {
+                let spec = if fused {
+                    EpiSpec::Act(&row)
+                } else {
+                    EpiSpec::F32
+                };
+                let native = QConv::pack(
+                    &codes, &bias, stride, pad, groups, &in_qp, spec,
+                )
+                .unwrap();
+                let mut scalar = native.clone();
+                scalar.set_kernel(KernelKind::Scalar);
+                assert_eq!(scalar.kernel_kind(), KernelKind::Scalar);
+                if fused {
+                    let a = native.run_q(&xq).unwrap();
+                    let b = scalar.run_q(&xq).unwrap();
+                    assert_eq!(
+                        a.codes, b.codes,
+                        "fused dispatch diverged (groups={groups})"
+                    );
+                } else {
+                    let a = native.run_f32(&xq).unwrap();
+                    let b = scalar.run_f32(&xq).unwrap();
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "f32 dispatch diverged (groups={groups})"
+                    );
+                }
+            }
+        }
     }
 }

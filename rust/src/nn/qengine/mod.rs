@@ -6,19 +6,29 @@
 //! executes the same function on the integer grids themselves, in three
 //! layers:
 //!
-//! * [`kernels`] — mechanism: u8×i8→i32 GEMM (row-parallel via
-//!   [`crate::util::parallel`]; the inner kernel is a 4-wide k-unroll
-//!   with register accumulators, bitwise-identical to the scalar loop
-//!   kept as [`kernels::qgemm_into_scalar`]), integer
-//!   im2col shared with the f32 engine via
+//! * [`gemm`] — the microkernel layer: u8×i8→i32 GEMM with one-time
+//!   runtime kernel dispatch ([`gemm::active_kind`]: AVX2 on x86_64,
+//!   NEON on aarch64, scalar k-unroll otherwise or under
+//!   `DFQ_FORCE_SCALAR=1`), 64-byte-aligned packed weight panels
+//!   ([`gemm::PackedB`], built once at plan time), a 4×16 register-tile
+//!   inner kernel per SIMD target, and the vectorised
+//!   requantise/depthwise-window helpers. Every path is
+//!   bitwise-identical to the scalar oracle
+//!   [`gemm::qgemm_into_scalar`] (see the module docs for the overflow
+//!   and regrouping arguments).
+//! * [`kernels`] — mechanism: the packed conv layer over that GEMM,
+//!   integer im2col shared with the f32 engine via
 //!   [`crate::nn::conv::im2col_into`] (the input zero-point is the
 //!   padding value — `zp_in` *represents* 0), gemmlowp zero-point
 //!   folding (`Σ(qa-za)(qw-zw) = Σ qa·qw - zw·rowsum - za·colsum +
 //!   K·za·zw`, the static half pre-folded into i64 biases at pack time),
 //!   fixed-point requantisation (`M = s_in·s_w/s_out` as an i64
-//!   multiplier + shift) with fused clamped-ReLU/ReLU6 epilogues, a
-//!   channel-parallel depthwise direct path, and the [`kernels::Scratch`]
-//!   buffer arena every plan run recycles across layers.
+//!   multiplier + shift) with fused clamped-ReLU/ReLU6 epilogues and a
+//!   shift-only fast path when a channel's multiplier is an exact power
+//!   of two, a channel-parallel depthwise direct path (8-wide SIMD
+//!   interior spans, scalar padding edges), and the [`kernels::Scratch`]
+//!   buffer arena (64-byte-aligned [`crate::util::align::AVec`]
+//!   buffers) every plan run recycles across layers.
 //! * [`ops`] — the remaining integer ops: requantise-add for residual
 //!   connections (both inputs rescaled onto the add-site grid with Q20
 //!   fixed-point multipliers and a single shared rounding), integer
@@ -53,6 +63,23 @@
 //! | linear       | GEMM + f32 logits                | f32 linear           |
 //! | upsample     | code copy (grid-preserving)      | f32 copy             |
 //!
+//! ## Kernel dispatch
+//!
+//! | hot loop            | scalar            | AVX2 (x86_64)             | NEON (aarch64)          |
+//! |---------------------|-------------------|---------------------------|-------------------------|
+//! | dense GEMM          | 4-wide k-unroll   | 4×16 tile, `madd_epi16`   | 4×16 tile, `vmlal_s16`  |
+//! | depthwise interior  | direct window     | 8-wide `mullo_epi32`      | 8-wide `vmlal_s16`      |
+//! | depthwise edges     | direct window     | (scalar)                  | (scalar)                |
+//! | requantizer (pow2)  | rounding shift    | 16-lane i16 shift         | 16-lane i16 shift       |
+//! | requantizer (other) | `apply_mult`      | (scalar)                  | (scalar)                |
+//! | conv epilogue       | shift fast path / `apply_mult` | (scalar — position-major acc vs channel-major out would need a gather) | (scalar, ditto) |
+//!
+//! All SIMD cells are bitwise-identical to their scalar column —
+//! enforced by `tests/qengine_parity.rs` property tests over remainder
+//! tails, every `EpiSpec`, per-channel and per-tensor grids. Dispatch
+//! is pinned to the scalar column by `DFQ_FORCE_SCALAR=1` or
+//! [`PlanOpts::force_scalar`].
+//!
 //! MobileNet-style graphs (convs + depthwise + residual adds + GAP +
 //! linear head) **and** inception-style graphs (max-pool stems,
 //! multi-branch concat blocks, avg-pool branches) therefore plan with
@@ -63,14 +90,16 @@
 //! the fake-quant oracle is one quantisation step per element per op
 //! (`tests/qengine_parity.rs`); integer max-pool is exact.
 
+pub mod gemm;
 pub mod kernels;
 pub mod ops;
 pub mod plan;
 
-pub use kernels::{
-    apply_mult, mult_for, qgemm, qgemm_into, qgemm_into_scalar, rowsums_u8,
-    rowsums_u8_into, EpiSpec, Mult, QConv, Scratch,
+pub use gemm::{
+    active_kind, available_kinds, qgemm, qgemm_into, qgemm_into_kind,
+    qgemm_into_scalar, rowsums_u8, rowsums_u8_into, KernelKind,
 };
+pub use kernels::{apply_mult, mult_for, EpiSpec, Mult, QConv, Scratch};
 pub use ops::{
     gap_int, upsample_codes, QAddInt, QConcatInt, QLinear, QPoolInt,
     Requantizer,

@@ -19,22 +19,11 @@ use crate::nn::SiteCfg;
 use crate::quant::QParams;
 use crate::tensor::{QTensor, Tensor};
 
+use super::gemm::{self, KernelKind, PackedB};
 use super::kernels::{
-    act_clamp, apply_mult, fold_weight_grids, mult_for, qgemm_into,
-    rowsums_u8_into, Mult, Scratch,
+    act_clamp, fold_weight_grids, mult_for, round_shift, Mult, Scratch,
 };
 use super::{assert_act_grid, QActTensor};
-
-/// `round(t / 2^shift)`, half away from zero.
-#[inline]
-fn round_shift(t: i64, shift: u32) -> i64 {
-    let half = 1i64 << (shift - 1);
-    if t >= 0 {
-        (t + half) >> shift
-    } else {
-        -((-t + half) >> shift)
-    }
-}
 
 /// `round(t / d)`, half away from zero (`d > 0`).
 #[inline]
@@ -401,6 +390,11 @@ pub struct QLinear {
     pub(crate) zp_corr: Vec<i64>,
     pub(crate) bias: Vec<f32>,
     pub(crate) in_qp: QParams,
+    /// Inner-kernel flavour (derived state, like the conv's — recorded
+    /// at pack/decode time, never serialized).
+    pub(crate) kernel: KernelKind,
+    /// SIMD weight panels for `kernel` (empty for scalar plans).
+    pub(crate) packed: PackedB,
 }
 
 impl QLinear {
@@ -417,7 +411,7 @@ impl QLinear {
         assert_act_grid(in_qp);
         // same folding + (I, O) transpose as the dense conv packer
         let fw = fold_weight_grids(w, out_dim, in_dim, in_qp, true)?;
-        Ok(QLinear {
+        let mut lin = QLinear {
             in_dim,
             out_dim,
             wt: fw.w,
@@ -426,11 +420,39 @@ impl QLinear {
             zp_corr: fw.zp_corr,
             bias: bias.to_vec(),
             in_qp: *in_qp,
-        })
+            kernel: KernelKind::Scalar,
+            packed: PackedB::empty(),
+        };
+        lin.set_kernel(gemm::active_kind());
+        Ok(lin)
     }
 
     pub fn out_dim(&self) -> usize {
         self.out_dim
+    }
+
+    /// The inner-kernel flavour this layer currently dispatches to.
+    pub fn kernel_kind(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Re-target this layer's inner kernel and rebuild the packed
+    /// panels (plan-level `force_scalar`, dispatch bisection tests).
+    pub fn set_kernel(&mut self, kind: KernelKind) {
+        if self.kernel != kind {
+            self.kernel = kind;
+            self.rebuild_packed();
+        }
+    }
+
+    /// Re-derive the packed SIMD panels from the canonical transposed
+    /// weights (derived state, never serialized).
+    pub(crate) fn rebuild_packed(&mut self) {
+        self.packed = if self.kernel != KernelKind::Scalar {
+            PackedB::pack(self.kernel, &self.wt, self.in_dim, self.out_dim)
+        } else {
+            PackedB::empty()
+        };
     }
 
     /// u8 codes in → f32 logits out. Accepts (N, I) or any shape whose
@@ -465,15 +487,25 @@ impl QLinear {
         if scratch.rows.len() < n {
             scratch.rows.resize(n, 0);
         }
-        qgemm_into(
-            &x.codes,
-            &self.wt,
-            n,
-            self.in_dim,
-            self.out_dim,
-            &mut scratch.acc[..n * self.out_dim],
-        );
-        rowsums_u8_into(&x.codes, n, self.in_dim, &mut scratch.rows[..n]);
+        if self.packed.is_empty() {
+            gemm::qgemm_into_kind(
+                KernelKind::Scalar,
+                &x.codes,
+                &self.wt,
+                n,
+                self.in_dim,
+                self.out_dim,
+                &mut scratch.acc[..n * self.out_dim],
+            );
+        } else {
+            gemm::qgemm_packed_into(
+                &x.codes,
+                &self.packed,
+                n,
+                &mut scratch.acc[..n * self.out_dim],
+            );
+        }
+        gemm::rowsums_u8_into(&x.codes, n, self.in_dim, &mut scratch.rows[..n]);
         let s_in = self.in_qp.scale as f64;
         let mut out = Tensor::zeros(&[n, self.out_dim]);
         let od = out.data_mut();
@@ -546,17 +578,19 @@ impl Requantizer {
                 x.qp
             );
         }
-        let z_in = self.in_qp.zero_point as i64;
-        let zp_out = self.out_qp.zero_point as i64;
-        let codes = x
-            .codes
-            .iter()
-            .map(|&q| {
-                (apply_mult(q as i64 - z_in, &self.m) + zp_out)
-                    .clamp(self.q_lo as i64, self.q_hi as i64)
-                    as u8
-            })
-            .collect();
+        // dispatched plane requant: 16-lane SIMD shift kernel when the
+        // multiplier is an exact power of two, scalar otherwise —
+        // bitwise-identical either way (see `gemm::requant_codes`)
+        let mut codes = vec![0u8; x.codes.len()];
+        gemm::requant_codes(
+            &x.codes,
+            &mut codes,
+            &self.m,
+            self.in_qp.zero_point as i32,
+            self.out_qp.zero_point as i32,
+            self.q_lo,
+            self.q_hi,
+        );
         Ok(QActTensor { shape: x.shape.clone(), codes, qp: self.out_qp })
     }
 }

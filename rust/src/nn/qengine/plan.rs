@@ -23,6 +23,7 @@ use crate::quant::QParams;
 use crate::tensor::{QTensor, Tensor};
 use crate::util::parallel;
 
+use super::gemm::KernelKind;
 use super::kernels::{EpiSpec, QConv, Scratch};
 use super::ops::{
     gap_int, upsample_codes, QAddInt, QConcatInt, QLinear, QPoolInt,
@@ -36,6 +37,10 @@ pub struct PlanOpts {
     /// Refuse any plan containing an f32 fallback op instead of silently
     /// executing it in f32.
     pub int8_only: bool,
+    /// Pin every GEMM-backed op to the scalar reference kernel instead
+    /// of the runtime-dispatched SIMD microkernel (same effect as the
+    /// `DFQ_FORCE_SCALAR=1` environment override, but per-plan).
+    pub force_scalar: bool,
 }
 
 /// Extra grids the planner may use beyond the activation-site rows:
@@ -635,6 +640,16 @@ pub fn plan(
     for (slot, i) in last_use {
         if !keep.contains(&slot) {
             ops[i].free_after.push(slot);
+        }
+    }
+
+    if opts.force_scalar {
+        for p in &mut ops {
+            match &mut p.op {
+                QOp::Conv(c) => c.set_kernel(KernelKind::Scalar),
+                QOp::Linear(l) => l.set_kernel(KernelKind::Scalar),
+                _ => {}
+            }
         }
     }
 

@@ -96,14 +96,14 @@ impl QuantExecutor {
     }
 
     /// Like [`QuantExecutor::from_quantized`] but refuses any plan that
-    /// still contains an f32 fallback op (`PlanOpts { int8_only: true }`)
+    /// still contains an f32 fallback op (`PlanOpts { int8_only: true, ..Default::default() }`)
     /// — deployments promising pure 8-bit inference get an error, not a
     /// silent partial fallback.
     pub fn from_quantized_strict(
         q: &crate::dfq::QuantizedModel,
         max_batch: usize,
     ) -> Result<QuantExecutor> {
-        let opts = crate::nn::qengine::PlanOpts { int8_only: true };
+        let opts = crate::nn::qengine::PlanOpts { int8_only: true, ..Default::default() };
         Ok(QuantExecutor { qmodel: q.pack_int8_opts(opts)?, max_batch })
     }
 

@@ -400,9 +400,12 @@ impl Registry {
     /// swap the router behind every [`LiveClient`] *before* draining
     /// the old generation — in-flight and queued requests complete on
     /// the old server while new submissions hit the new one, so nothing
-    /// is dropped. On failure (missing / corrupt / version-skewed file)
-    /// the typed [`ArtifactError`](crate::artifact::ArtifactError) is
-    /// returned and the old generation keeps serving untouched.
+    /// is dropped. The new generation is *warmed up* (one zero batch per
+    /// variant) before any slot flips, so the first real request after a
+    /// swap never pays worker spin-up or arena-growth latency. On
+    /// failure (missing / corrupt / version-skewed file) the typed
+    /// [`ArtifactError`](crate::artifact::ArtifactError) is returned and
+    /// the old generation keeps serving untouched.
     pub fn reload(&mut self, model: &str) -> Result<()> {
         if !self.entries.contains_key(model) {
             bail!("no model '{model}' registered");
@@ -417,7 +420,10 @@ impl Registry {
         let clock = self.clock;
         let cfg = self.cfg;
         let e = self.entries.get_mut(model).expect("checked above");
-        let hosted = load_and_repoint(cfg, model, e)?;
+        // warm the new generation (one batch per variant) before the
+        // LiveClient slots flip, so the first post-swap request never
+        // pays cold-start latency
+        let hosted = load_and_repoint(cfg, model, e, true)?;
         if let Some(old) = e.hosted.replace(hosted) {
             for (variant, snap) in old.router.shutdown() {
                 e.retired.push((variant, snap));
@@ -490,7 +496,7 @@ impl Registry {
             self.enforce_cap(model);
             let cfg = self.cfg;
             let e = self.entries.get_mut(model).expect("checked above");
-            let hosted = load_and_repoint(cfg, model, e)?;
+            let hosted = load_and_repoint(cfg, model, e, false)?;
             e.hosted = Some(hosted);
         }
         let e = self.entries.get_mut(model).expect("checked above");
@@ -554,9 +560,13 @@ fn load_and_repoint(
     cfg: ServeConfig,
     name: &str,
     e: &mut Entry,
+    warm: bool,
 ) -> Result<Hosted> {
     let stamp = stamp_of(&e.source);
     let hosted = load_entry(cfg, name, &e.source)?;
+    if warm {
+        warm_up(&hosted);
+    }
     for (variant, slot) in &e.live {
         if let Ok(client) = hosted.router.client(variant) {
             *slot.write().unwrap() = client;
@@ -564,6 +574,22 @@ fn load_and_repoint(
     }
     e.stamp = stamp;
     Ok(hosted)
+}
+
+/// Pre-run one batch through every variant of a freshly built generation
+/// *before* any live slot is re-pointed at it: first-request latency
+/// (worker spin-up, scratch-arena growth, lazily-faulted weight pages)
+/// is paid here instead of by the first real request after a hot swap.
+/// Best-effort — a warm-up failure never fails the swap; the same error
+/// would surface on the first real request anyway.
+fn warm_up(hosted: &Hosted) {
+    let [c, h, w] = hosted.info.input_shape;
+    let x = Tensor::zeros(&[1, c, h, w]);
+    for variant in &hosted.info.variants {
+        if let Ok(client) = hosted.router.client(variant) {
+            let _ = client.infer(x.clone());
+        }
+    }
 }
 
 fn load_entry(cfg: ServeConfig, name: &str, source: &Source) -> Result<Hosted> {

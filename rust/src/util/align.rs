@@ -1,0 +1,204 @@
+//! `AVec<T>`: a growable buffer whose allocation is always 64-byte
+//! aligned (one x86 cache line / the widest vector register this crate
+//! targets). The qengine scratch arenas and packed GEMM panels live in
+//! these so SIMD loads never straddle a cache line and aligned
+//! load/store intrinsics stay legal regardless of how the pool was
+//! grown or reused.
+//!
+//! Deliberately tiny: `Deref`/`DerefMut` to `[T]` plus `resize`, which
+//! is the only mutation the scratch pools use. `T: Copy` keeps drop
+//! handling trivial (no element destructors to run on truncate).
+
+use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Allocation alignment in bytes. 64 covers AVX-512-width loads and is
+/// exactly one cache line on every target we dispatch for.
+pub const ALIGN: usize = 64;
+
+/// A 64-byte-aligned growable buffer of `Copy` elements.
+///
+/// An empty `AVec` owns no allocation (the pointer is dangling, as in
+/// `Vec`); alignment is guaranteed for any buffer with capacity.
+pub struct AVec<T: Copy> {
+    ptr: NonNull<T>,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: AVec owns its buffer exactly like Vec<T>; sharing/sending it
+// is as safe as sharing/sending the underlying Ts.
+unsafe impl<T: Copy + Send> Send for AVec<T> {}
+unsafe impl<T: Copy + Sync> Sync for AVec<T> {}
+
+impl<T: Copy> AVec<T> {
+    pub const fn new() -> AVec<T> {
+        AVec { ptr: NonNull::dangling(), len: 0, cap: 0 }
+    }
+
+    pub fn with_len(len: usize, fill: T) -> AVec<T> {
+        let mut v = AVec::new();
+        v.resize(len, fill);
+        v
+    }
+
+    fn layout(cap: usize) -> Layout {
+        // align_of::<T>() <= ALIGN for every T this crate stores (u8,
+        // i8, i16, i32); the stricter 64-byte bound subsumes it.
+        assert!(std::mem::align_of::<T>() <= ALIGN);
+        Layout::from_size_align(cap * std::mem::size_of::<T>(), ALIGN)
+            .expect("AVec capacity overflows Layout")
+    }
+
+    /// Resize to `len` elements, filling any newly exposed tail with
+    /// `fill`. Shrinking truncates without releasing capacity (the
+    /// scratch pools rely on that for allocation-free reuse).
+    pub fn resize(&mut self, len: usize, fill: T) {
+        if len > self.cap {
+            let new_cap = len.max(self.cap * 2).max(8);
+            let new_ptr = unsafe { alloc(Self::layout(new_cap)) } as *mut T;
+            let Some(nn) = NonNull::new(new_ptr) else {
+                handle_alloc_error(Self::layout(new_cap));
+            };
+            if self.cap > 0 {
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        self.ptr.as_ptr(),
+                        nn.as_ptr(),
+                        self.len,
+                    );
+                    dealloc(
+                        self.ptr.as_ptr() as *mut u8,
+                        Self::layout(self.cap),
+                    );
+                }
+            }
+            self.ptr = nn;
+            self.cap = new_cap;
+        }
+        if len > self.len {
+            for i in self.len..len {
+                unsafe { self.ptr.as_ptr().add(i).write(fill) };
+            }
+        }
+        self.len = len;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_ptr(&self) -> *const T {
+        self.ptr.as_ptr()
+    }
+
+    pub fn as_mut_ptr(&mut self) -> *mut T {
+        self.ptr.as_ptr()
+    }
+}
+
+impl<T: Copy> Drop for AVec<T> {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            unsafe {
+                dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap));
+            }
+        }
+    }
+}
+
+impl<T: Copy> Default for AVec<T> {
+    fn default() -> AVec<T> {
+        AVec::new()
+    }
+}
+
+impl<T: Copy> Clone for AVec<T> {
+    fn clone(&self) -> AVec<T> {
+        let mut v = AVec::new();
+        if self.len > 0 {
+            // resize allocates (aligned) then we overwrite the fill
+            v.resize(self.len, self[0]);
+            v.copy_from_slice(self);
+        }
+        v
+    }
+}
+
+impl<T: Copy> Deref for AVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> DerefMut for AVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        unsafe {
+            std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len)
+        }
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for AVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for AVec<T> {
+    fn eq(&self, other: &AVec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aligned<T: Copy>(v: &AVec<T>) -> bool {
+        v.as_ptr() as usize % ALIGN == 0
+    }
+
+    #[test]
+    fn resize_grows_fills_and_truncates() {
+        let mut v: AVec<i32> = AVec::new();
+        assert!(v.is_empty());
+        v.resize(5, 7);
+        assert_eq!(&v[..], &[7; 5]);
+        v[2] = -1;
+        // growth preserves the prefix and fills only the new tail
+        v.resize(9, 3);
+        assert_eq!(&v[..], &[7, 7, -1, 7, 7, 3, 3, 3, 3]);
+        // shrink then regrow: the [3..5) slots are re-filled, the
+        // surviving prefix is untouched
+        v.resize(3, 0);
+        v.resize(6, 9);
+        assert_eq!(&v[..], &[7, 7, -1, 9, 9, 9]);
+    }
+
+    #[test]
+    fn allocation_is_64_byte_aligned_through_growth() {
+        let mut v: AVec<u8> = AVec::new();
+        for n in [1usize, 63, 64, 65, 4096, 70_000] {
+            v.resize(n, 0xAB);
+            assert!(aligned(&v), "misaligned at len {n}");
+        }
+        let c = v.clone();
+        assert!(aligned(&c), "clone lost alignment");
+        assert_eq!(c, v);
+    }
+
+    #[test]
+    fn wide_elements_stay_aligned() {
+        let mut v: AVec<i64> = AVec::new();
+        v.resize(1000, -5);
+        assert!(aligned(&v));
+        assert_eq!(v.iter().sum::<i64>(), -5000);
+    }
+}

@@ -2,6 +2,7 @@
 //! crates.io beyond `xla`/`anyhow`, so JSON, RNG, statistics, a thread
 //! pool and the bench harness are all first-party — see DESIGN.md §3).
 
+pub mod align;
 pub mod bench;
 pub mod json;
 pub mod parallel;

@@ -95,6 +95,15 @@ impl<T> SendCells<T> {
     pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
         unsafe { std::slice::from_raw_parts_mut(self.0.add(start), len) }
     }
+
+    /// Raw element pointer (for strided SIMD tile stores where a
+    /// contiguous slice cannot express the aliasing pattern).
+    ///
+    /// # Safety
+    /// Caller must ensure no two threads write overlapping elements.
+    pub unsafe fn ptr_at(&self, i: usize) -> *mut T {
+        unsafe { self.0.add(i) }
+    }
 }
 
 pub fn as_send_cells<T>(v: &mut [T]) -> SendCells<T> {

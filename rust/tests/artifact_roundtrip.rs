@@ -53,14 +53,14 @@ fn roundtrip_is_bitwise_identical_across_schemes() {
             for (sname, scheme) in &schemes {
                 let q = quantize(&model, scheme, 8);
                 let qm_mem = q
-                    .pack_int8_opts(PlanOpts { int8_only: true })
+                    .pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() })
                     .unwrap_or_else(|e| {
                         panic!("{mname}/{sname}: fallback in plan: {e:#}")
                     });
                 let path =
                     dir.join(format!("{mname}_{sname}_{seed}.dfqm"));
                 let info = q
-                    .save_artifact(&path, PlanOpts { int8_only: true })
+                    .save_artifact(&path, PlanOpts { int8_only: true, ..Default::default() })
                     .unwrap();
                 assert_eq!(info.fallback_ops, 0, "{mname}/{sname}");
                 let qm_disk = QModel::from_artifact(&path).unwrap();
@@ -95,9 +95,9 @@ fn inception_artifact_roundtrips_bitwise_with_new_op_tags() {
     let dir = temp_dir("inception");
     let model = testutil::inception_block_model(401);
     let q = quantize(&model, &QScheme::int8_asymmetric(), 8);
-    let qm_mem = q.pack_int8_opts(PlanOpts { int8_only: true }).unwrap();
+    let qm_mem = q.pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() }).unwrap();
     let path = dir.join("inception.dfqm");
-    let info = q.save_artifact(&path, PlanOpts { int8_only: true }).unwrap();
+    let info = q.save_artifact(&path, PlanOpts { int8_only: true, ..Default::default() }).unwrap();
     assert_eq!(info.fallback_ops, 0);
     let qm_disk = QModel::from_artifact(&path).unwrap();
     // the decoded plan is the same plan: op-for-op report equality
@@ -129,9 +129,9 @@ fn registry_serves_two_reloaded_models_bitwise_identically() {
     let mb = testutil::two_layer_model(202, true);
     let qa = quantize(&ma, &QScheme::int8_asymmetric(), 8);
     let qb = quantize(&mb, &QScheme::per_channel(8), 8);
-    qa.save_artifact(dir.join("alpha.dfqm"), PlanOpts { int8_only: true })
+    qa.save_artifact(dir.join("alpha.dfqm"), PlanOpts { int8_only: true, ..Default::default() })
         .unwrap();
-    qb.save_artifact(dir.join("beta.dfqm"), PlanOpts { int8_only: true })
+    qb.save_artifact(dir.join("beta.dfqm"), PlanOpts { int8_only: true, ..Default::default() })
         .unwrap();
 
     let mut reg = Registry::new(ServeConfig::default());

@@ -411,7 +411,7 @@ fn residual_block_plans_fully_integer_and_matches_oracle() {
         assert_eq!(qm.fallback_ops(), 0, "seed {seed}: {}", qm.summary());
         assert_eq!(qm.int_layers, 4, "seed {seed}: {}", qm.summary());
         // strict planning accepts the same model
-        q.pack_int8_opts(PlanOpts { int8_only: true }).unwrap();
+        q.pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() }).unwrap();
         let report = qm.summarize();
         for needle in
             ["add-requant [int8]", "gap [int8]", "linear [int8->f32]"]
@@ -479,7 +479,7 @@ fn inception_block_plans_fully_integer_and_matches_oracle() {
             .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
             .unwrap();
         // the acceptance bar: the branchy graph stays integer end to end
-        let qm = q.pack_int8_opts(PlanOpts { int8_only: true }).unwrap();
+        let qm = q.pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() }).unwrap();
         assert_eq!(qm.fallback_ops(), 0, "seed {seed}: {}", qm.summary());
         assert_eq!(qm.f32_layers, 0, "seed {seed}: {}", qm.summary());
         assert_eq!(qm.int_layers, 6, "seed {seed}: {}", qm.summary());
@@ -608,7 +608,7 @@ fn int8_only_rejects_surviving_fallbacks() {
         &q.int_weights,
         &q.act_cfg,
         &AuxGrids::empty(),
-        PlanOpts { int8_only: true },
+        PlanOpts { int8_only: true, ..Default::default() },
     )
     .unwrap_err();
     let msg = format!("{err:#}");
@@ -637,4 +637,198 @@ fn pack_int8_rejects_bad_configs() {
         .unwrap();
     assert!(q.int_weights.is_empty());
     assert!(q.pack_int8().is_err());
+}
+
+/// Every GEMM kernel the host can run is bitwise-identical to the
+/// scalar oracle on random shapes — remainder tails on every axis
+/// (m % 4 rows, n % 16 columns, odd k depths), planted zero rows for
+/// the zero-skip path, and saturation-extreme operands (255 × −128)
+/// that would overflow an i16-saturating inner product.
+#[test]
+fn dispatch_gemm_kinds_match_scalar_oracle_on_random_shapes() {
+    use dfq::nn::qengine::{
+        available_kinds, qgemm_into_kind, qgemm_into_scalar,
+    };
+    let mut rng = Rng::new(700);
+    for case in 0..48u64 {
+        let m = 1 + rng.below(21);
+        let k = 1 + rng.below(70);
+        let n = 1 + rng.below(40);
+        let mut a: Vec<u8> =
+            (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let b: Vec<i8> =
+            (0..k * n).map(|_| rng.below(256) as u8 as i8).collect();
+        if case % 3 == 0 {
+            // worst-case magnitudes: any kernel accumulating u8·i8
+            // pair-products in fewer than 17 signed bits would saturate
+            for v in a.iter_mut().take(k) {
+                *v = 255;
+            }
+        }
+        for v in a.iter_mut() {
+            if rng.below(5) == 0 {
+                *v = 0;
+            }
+        }
+        let mut want = vec![0i32; m * n];
+        qgemm_into_scalar(&a, &b, m, k, n, &mut want);
+        for kind in available_kinds() {
+            let mut got = vec![-1i32; m * n];
+            qgemm_into_kind(kind, &a, &b, m, k, n, &mut got);
+            assert_eq!(
+                got, want,
+                "case {case}: kind {kind:?} diverged at m={m} k={k} n={n}"
+            );
+        }
+    }
+}
+
+/// Every dispatch target produces bitwise-identical conv outputs to the
+/// scalar reference across all epilogue variants (`F32`, `Act`, `Grid`),
+/// per-channel and per-tensor weight grids, dense and depthwise layers —
+/// shapes chosen to hit the GEMM remainder tails (c_out % 16,
+/// spatial % 4, odd reduction depths).
+#[test]
+fn dispatch_conv_kinds_are_bitwise_identical_across_epilogues() {
+    use dfq::nn::qengine::{available_kinds, KernelKind};
+    let mut rng = Rng::new(720);
+    // (c_in, c_out, k, stride, pad, groups)
+    let shapes = [
+        (3usize, 8usize, 3usize, 1usize, 1usize, 1usize),
+        (5, 17, 1, 1, 0, 1),  // n-tail: 17 = 16 + 1
+        (2, 5, 3, 2, 1, 1),   // strided, odd reduction depth
+        (7, 16, 3, 1, 1, 1),  // exact panel width, odd depth
+        (6, 6, 3, 1, 1, 6),   // depthwise 3×3
+        (10, 10, 5, 1, 2, 10), // depthwise 5×5
+    ];
+    for (case, &(c_in, c_out, k, stride, pad, groups)) in
+        shapes.iter().enumerate()
+    {
+        for per_channel in [false, true] {
+            let scheme = if per_channel {
+                QScheme::per_channel(8)
+            } else {
+                QScheme::int8_asymmetric()
+            };
+            let mut w = rand_t(&mut rng, &[c_out, c_in / groups, k, k], 0.4);
+            let (_, codes) =
+                quantize_weights_retaining(&mut w, &scheme).unwrap();
+            let b: Vec<f32> = rng.normal_vec(c_out, 0.2);
+            let x = rand_t(&mut rng, &[2, c_in, 9, 11], 1.0);
+            let in_qp = params_for_range(x.min(), x.max(), 8, false);
+            let xq = QActTensor::quantize(&x, &in_qp);
+            let site = SiteCfg {
+                scale: 0.04,
+                zero_point: 5.0,
+                n_levels: 256.0,
+                clip_hi: 6.0,
+            };
+            let grid = params_for_range(-1.0, 3.0, 8, false);
+            for epi_tag in 0..3 {
+                let epi = match epi_tag {
+                    0 => EpiSpec::F32,
+                    1 => EpiSpec::Act(&site),
+                    _ => EpiSpec::Grid(grid),
+                };
+                let native =
+                    QConv::pack(&codes, &b, stride, pad, groups, &in_qp, epi)
+                        .unwrap();
+                let mut scalar = native.clone();
+                scalar.set_kernel(KernelKind::Scalar);
+                for kind in available_kinds() {
+                    let mut qc = native.clone();
+                    qc.set_kernel(kind);
+                    assert_eq!(qc.kernel_kind(), kind);
+                    if epi_tag == 0 {
+                        let got = qc.run_f32(&xq).unwrap();
+                        let want = scalar.run_f32(&xq).unwrap();
+                        assert_eq!(
+                            got.data(),
+                            want.data(),
+                            "case {case} pc={per_channel} F32 epi: \
+                             kind {kind:?} diverged"
+                        );
+                    } else {
+                        let got = qc.run_q(&xq).unwrap();
+                        let want = scalar.run_q(&xq).unwrap();
+                        assert_eq!(
+                            got.codes, want.codes,
+                            "case {case} pc={per_channel} epi {epi_tag}: \
+                             kind {kind:?} diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The int8 linear head is bitwise-identical under every dispatch target
+/// (logits are f32 but computed from the same i32 accumulators, so
+/// equality is exact).
+#[test]
+fn dispatch_linear_kinds_are_bitwise_identical() {
+    use dfq::nn::qengine::{available_kinds, KernelKind};
+    let mut rng = Rng::new(730);
+    for &(in_dim, out_dim) in &[(32usize, 16usize), (19, 17), (7, 1), (65, 40)]
+    {
+        let mut w = rand_t(&mut rng, &[out_dim, in_dim], 0.4);
+        let (_, codes) =
+            quantize_weights_retaining(&mut w, &QScheme::per_channel(8))
+                .unwrap();
+        let b: Vec<f32> = rng.normal_vec(out_dim, 0.2);
+        let in_qp = params_for_range(-2.0, 2.0, 8, false);
+        let x = QActTensor {
+            shape: vec![3, in_dim],
+            codes: (0..3 * in_dim).map(|_| rng.below(256) as u8).collect(),
+            qp: in_qp,
+        };
+        let native = QLinear::pack(&codes, &b, &in_qp).unwrap();
+        let mut scalar = native.clone();
+        scalar.set_kernel(KernelKind::Scalar);
+        let want = scalar.run(&x, &mut Scratch::new()).unwrap();
+        for kind in available_kinds() {
+            let mut lin = native.clone();
+            lin.set_kernel(kind);
+            let got = lin.run(&x, &mut Scratch::new()).unwrap();
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "linear ({in_dim}->{out_dim}): kind {kind:?} diverged"
+            );
+        }
+    }
+}
+
+/// End-to-end dispatch parity: the residual and inception fixtures run
+/// bitwise-identically under a forced-scalar plan and the host's native
+/// dispatch — the SIMD microkernels change *nothing* but wall-clock.
+#[test]
+fn force_scalar_plan_is_bitwise_identical_end_to_end() {
+    for (branchy, seed) in [(false, 440u64), (true, 540)] {
+        let m = if branchy {
+            testutil::inception_block_model(seed)
+        } else {
+            testutil::residual_block_model(seed)
+        };
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        let q = prep
+            .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+            .unwrap();
+        let native = q
+            .pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() })
+            .unwrap();
+        let scalar = q
+            .pack_int8_opts(PlanOpts { int8_only: true, force_scalar: true })
+            .unwrap();
+        let x = testutil::random_input(&m, 3, seed);
+        let y_native = native.run(&x).unwrap();
+        let y_scalar = scalar.run(&x).unwrap();
+        assert_eq!(
+            y_native.data(),
+            y_scalar.data(),
+            "branchy={branchy} seed {seed}: native dispatch drifted from \
+             the scalar reference"
+        );
+    }
 }

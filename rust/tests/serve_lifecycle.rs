@@ -196,6 +196,44 @@ fn poll_files_detects_changed_artifacts() {
 }
 
 #[test]
+fn reload_warms_the_new_generation_before_the_slot_flips() {
+    let dir = temp_dir("warm");
+    let path = dir.join("m.dfqm");
+    let qa = quantized(61);
+    qa.save_artifact(&path, PlanOpts::default()).unwrap();
+
+    let mut reg = Registry::new(ServeConfig::default());
+    reg.register_file("m", &path).unwrap();
+    let live = reg.live_client("m", VARIANT_INT8).unwrap();
+
+    // a plain lazy load does NOT warm up: live_client only wires the
+    // slot, so the generation has served nothing yet
+    assert_eq!(reg.metrics("m", VARIANT_INT8).unwrap().completed, 0);
+
+    // hot swap with zero user traffic: the swapped-in generation must
+    // already have completed its warm-up batch when reload returns
+    std::thread::sleep(Duration::from_millis(50));
+    qa.save_artifact(&path, PlanOpts::default()).unwrap();
+    reg.reload("m").unwrap();
+    let warmed = reg.metrics("m", VARIANT_INT8).unwrap().completed;
+    assert!(
+        warmed >= 1,
+        "reload must pre-run a batch on the new generation, got {warmed}"
+    );
+
+    // the warmed generation serves real traffic through the same slot
+    let x = testutil::random_input(&qa.model, 1, 6);
+    let y = live.infer(x).unwrap();
+    assert_eq!(y.shape()[0], 1);
+    assert_eq!(
+        reg.metrics("m", VARIANT_INT8).unwrap().completed,
+        warmed + 1
+    );
+    reg.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn scan_dir_returns_sorted_names() {
     let dir = temp_dir("sorted");
     // create in deliberately non-sorted order
