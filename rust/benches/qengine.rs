@@ -163,6 +163,51 @@ fn main() {
         }
     }
 
+    section("deep-K GEMM — KC cache blocking (k >> KC=512)");
+    // a reduction dimension far past the KC=512 slab size, the shape
+    // the PR-7 K-blocking targets: the packed panel walks B in
+    // KC-sized slabs that stay L1/L2-resident instead of streaming the
+    // whole k extent per tile. One row per compiled-in kernel, scalar
+    // first as the baseline; outputs are checked bitwise against the
+    // scalar oracle right here (i32 wrapping adds are associative, so
+    // blocking must not change a single lane).
+    {
+        let (m, k, n) = (64usize, 4096usize, 64usize);
+        let flops = 2.0 * (m * k * n) as f64;
+        let aq: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let bq: Vec<i8> =
+            (0..k * n).map(|_| rng.below(256) as u8 as i8).collect();
+        let mut oracle = vec![0i32; m * n];
+        qgemm_into_kind(
+            qengine::KernelKind::Scalar,
+            &aq,
+            &bq,
+            m,
+            k,
+            n,
+            &mut oracle,
+        );
+        let mut c = vec![0i32; m * n];
+        for kind in qengine::available_kinds() {
+            let r = Bench::new(format!(
+                "int8 gemm deep-k {m}x{k}x{n} [{}]",
+                kind.name()
+            ))
+            .run(|| {
+                qgemm_into_kind(kind, &aq, &bq, m, k, n, &mut c);
+                std::hint::black_box(&c);
+            })
+            .with_units(flops, "flop");
+            emit(&mut records, &r);
+            assert_eq!(
+                c,
+                oracle,
+                "K-blocked {} kernel drifted from the scalar oracle",
+                kind.name()
+            );
+        }
+    }
+
     section("conv layers (MobileNet-ish) — fake-quant f32 vs fused int8");
     let fixtures = [
         fixture(&mut rng, "pointwise 32->64 @28", 1, 32, 64, 28, 1, 1, 1),

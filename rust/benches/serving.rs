@@ -1,7 +1,10 @@
 //! Bench: serving coordinator — throughput/latency under Poisson load,
 //! batch-size ablation, batching-window ablation, the compiled-
-//! artifact boot comparison (full DFQ recompile vs `.dfqm` load), a
-//! registry hot-swap under load (zero dropped requests), and an
+//! artifact boot comparison (full DFQ recompile vs copy load vs
+//! zero-copy mmap load, plus the evict/re-load cycle behind
+//! `--max-resident`; records persisted to `BENCH_serving.json` at the
+//! repo root), a registry hot-swap under load (zero dropped
+//! requests), and an
 //! autoscale run steering traffic between the f32 and int8 variants.
 //! The L3 §Perf instrument (the paper's deployment motivation: INT8
 //! serving). `--quick` runs only the manifest-free sections (the CI
@@ -27,12 +30,17 @@ use dfq::util::bench::{section, Bench};
 use dfq::util::rng::Rng;
 
 /// Boot-time instrument: what a serving host pays to become ready —
-/// replaying the whole DFQ pipeline + planner versus decoding a
-/// compiled `.dfqm` artifact. Manifest-free (testutil models), so it
+/// replaying the whole DFQ pipeline + planner, versus decoding a
+/// compiled `.dfqm` artifact into owned buffers, versus mmap-viewing
+/// it straight out of the page cache — plus the evict/re-load cycle a
+/// `--max-resident` cap induces. Manifest-free (testutil models), so it
 /// runs everywhere including CI; emits the shared BenchResult JSON
 /// records next to the human lines.
-fn artifact_boot_bench() {
-    section("compiled artifact — boot: full DFQ recompile vs .dfqm load");
+fn artifact_boot_bench() -> Vec<String> {
+    section(
+        "compiled artifact — boot: full DFQ recompile vs copy load vs \
+         mmap load",
+    );
     let model = testutil::residual_block_model(77);
     let quantize = || {
         let prep =
@@ -64,18 +72,44 @@ fn artifact_boot_bench() {
         std::hint::black_box(qm.num_ops());
     });
     load.print().print_json();
+    let mload = Bench::new("boot/artifact-load-mmap").run(|| {
+        let qm = QModel::from_artifact_mmap(&path).unwrap();
+        std::hint::black_box(qm.num_ops());
+    });
+    mload.print().print_json();
     println!(
-        "boot speedup (recompile mean / load mean): {:.1}x",
-        recompile.secs.mean / load.secs.mean
+        "boot speedup vs recompile: copy {:.1}x, mmap {:.1}x \
+         (mmap/copy {:.2}x)",
+        recompile.secs.mean / load.secs.mean,
+        recompile.secs.mean / mload.secs.mean,
+        load.secs.mean / mload.secs.mean
     );
 
-    // smoke: the reloaded plan must serve bit-for-bit what the
-    // in-memory pipeline serves
+    // smoke: both load paths must serve bit-for-bit what the in-memory
+    // pipeline serves
     let x = testutil::random_input(&model, 1, 5);
     let want = q.pack_int8().unwrap().run(&x).unwrap();
     let got = QModel::from_artifact(&path).unwrap().run(&x).unwrap();
     assert_eq!(want.data(), got.data(), "artifact round-trip drifted");
-    println!("compile -> write -> reload -> run bitwise check: OK");
+    let got = QModel::from_artifact_mmap(&path).unwrap().run(&x).unwrap();
+    assert_eq!(want.data(), got.data(), "mmap load drifted from copy");
+    println!("compile -> write -> reload -> run bitwise check: OK (both)");
+
+    // registry lifecycle latency: what `--max-resident` eviction costs
+    // when the victim comes back — drop the plan, re-load from the page
+    // cache (mmap default), spin the servers back up
+    let mut reg = Registry::new(ServeConfig {
+        max_batch: 16,
+        max_delay: Duration::from_millis(1),
+        ..ServeConfig::default()
+    });
+    assert_eq!(reg.scan_dir(&dir).unwrap(), vec!["resblock"]);
+    let cycle = Bench::new("boot/evict-reload").run(|| {
+        reg.evict("resblock").unwrap();
+        reg.reload("resblock").unwrap();
+    });
+    cycle.print().print_json();
+    reg.shutdown();
 
     // registry smoke: two artifacts served from one process
     let q2 = {
@@ -107,6 +141,7 @@ fn artifact_boot_bench() {
         println!("registry[{name}] {}", snap.report());
     }
     std::fs::remove_dir_all(&dir).ok();
+    vec![recompile.json(), load.json(), mload.json(), cycle.json()]
 }
 
 fn quantize_resblock(seed: u64) -> QuantizedModel {
@@ -239,9 +274,19 @@ fn main() {
     if quick {
         std::env::set_var("DFQ_BENCH_FAST", "1");
     }
-    artifact_boot_bench();
+    let records = artifact_boot_bench();
     registry_hot_swap_bench();
     autoscale_bench();
+    // persist the boot-comparison records (recompile / copy load / mmap
+    // load / evict+reload) for mechanical diffing across runs — same
+    // JSON-lines format as BENCH_qengine.json; CI uploads it
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
+    let mut body = records.join("\n");
+    body.push('\n');
+    match std::fs::write(path, body) {
+        Ok(()) => println!("\nwrote {} records to {path}", records.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
     if quick {
         return;
     }

@@ -1,0 +1,588 @@
+//! Self-contained section codec for `.dfqm` cold storage: greedy
+//! byte-LZ over an adaptive binary range coder, framed in independent
+//! blocks with a claudcompress-style `{raw_len, stored_len}` header per
+//! block.
+//!
+//! The i8 weight grids quantise Gaussian weights, so their byte
+//! entropy sits near 7 bits — plain bit-packing cannot shrink them,
+//! but an adaptive order-0 literal model does, and the LZ layer folds
+//! away the long zero runs and repeated wiring words of the `plan`
+//! stream. Every block is stored RAW when coding does not pay, so
+//! `compress` never expands a block by more than the 9-byte header.
+//!
+//! The decoder is corruption-hardened: every failure mode is a typed
+//! [`CodecError`] (mapped to `ArtifactError` at the container layer),
+//! never a panic — truncated payloads, match distances that reach
+//! before the block start, overruns past the declared length, unknown
+//! block kinds and total-length mismatches are all explicit errors.
+
+use std::fmt;
+
+/// Independent-block size. Blocks never reference bytes across the
+/// boundary, so a corrupt block cannot poison its neighbours.
+pub const BLOCK: usize = 1 << 17;
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = MIN_MATCH + 255;
+const HASH_BITS: u32 = 16;
+
+const KIND_RAW: u8 = 0;
+const KIND_CODED: u8 = 1;
+
+// 11-bit probabilities with shift-5 adaptation — the classic carry-less
+// range-coder operating point.
+const PROB_BITS: u32 = 11;
+const PROB_ONE: u16 = 1 << PROB_BITS;
+const PROB_INIT: u16 = PROB_ONE / 2;
+const MOVE_BITS: u32 = 5;
+const TOP: u32 = 1 << 24;
+
+/// Typed decode failures; the artifact layer wraps them per section.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The stored payload ended before the stream was complete.
+    Truncated { what: String },
+    /// The payload is structurally invalid (bad kind byte, impossible
+    /// match, length mismatch...).
+    Corrupt { what: String },
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated { what } => {
+                write!(f, "compressed payload truncated: {what}")
+            }
+            CodecError::Corrupt { what } => {
+                write!(f, "compressed payload corrupt: {what}")
+            }
+        }
+    }
+}
+
+fn truncated(what: &str) -> CodecError {
+    CodecError::Truncated { what: what.to_string() }
+}
+
+fn corrupt(what: String) -> CodecError {
+    CodecError::Corrupt { what }
+}
+
+// -- range coder -------------------------------------------------------------
+
+struct REnc {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl REnc {
+    fn new() -> REnc {
+        REnc { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+    }
+
+    fn shift_low(&mut self) {
+        if (self.low as u32) < 0xFF00_0000 || (self.low >> 32) != 0 {
+            let carry = (self.low >> 32) as u8;
+            let mut b = self.cache;
+            loop {
+                self.out.push(b.wrapping_add(carry));
+                b = 0xFF;
+                self.cache_size -= 1;
+                if self.cache_size == 0 {
+                    break;
+                }
+            }
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        // Keep only the low 32 bits: the byte shifted out is either in
+        // `cache` (flushed above) or counted in `cache_size` as a pending
+        // 0xFF, and `low >> 32` must stay a pure 0/1 carry flag.
+        self.low = (self.low << 8) & 0xFFFF_FFFF;
+    }
+
+    fn encode_bit(&mut self, p: &mut u16, bit: u32) {
+        let bound = (self.range >> PROB_BITS) * (*p as u32);
+        if bit == 0 {
+            self.range = bound;
+            *p += (PROB_ONE - *p) >> MOVE_BITS;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+            *p -= *p >> MOVE_BITS;
+        }
+        while self.range < TOP {
+            self.shift_low();
+            self.range <<= 8;
+        }
+    }
+
+    fn encode_direct(&mut self, value: u32, nbits: u32) {
+        for i in (0..nbits).rev() {
+            self.range >>= 1;
+            if (value >> i) & 1 != 0 {
+                self.low += self.range as u64;
+            }
+            while self.range < TOP {
+                self.shift_low();
+                self.range <<= 8;
+            }
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+}
+
+struct RDec<'a> {
+    code: u32,
+    range: u32,
+    input: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RDec<'a> {
+    fn new(input: &'a [u8]) -> Result<RDec<'a>, CodecError> {
+        let mut d = RDec { code: 0, range: u32::MAX, input, pos: 0 };
+        for _ in 0..5 {
+            d.code = (d.code << 8) | d.next()? as u32;
+        }
+        Ok(d)
+    }
+
+    fn next(&mut self) -> Result<u8, CodecError> {
+        let b = *self
+            .input
+            .get(self.pos)
+            .ok_or_else(|| truncated("range-coder input underrun"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn decode_bit(&mut self, p: &mut u16) -> Result<u32, CodecError> {
+        let bound = (self.range >> PROB_BITS) * (*p as u32);
+        let bit = if self.code < bound {
+            self.range = bound;
+            *p += (PROB_ONE - *p) >> MOVE_BITS;
+            0
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            *p -= *p >> MOVE_BITS;
+            1
+        };
+        while self.range < TOP {
+            self.code = (self.code << 8) | self.next()? as u32;
+            self.range <<= 8;
+        }
+        Ok(bit)
+    }
+
+    fn decode_direct(&mut self, nbits: u32) -> Result<u32, CodecError> {
+        let mut v = 0u32;
+        for _ in 0..nbits {
+            self.range >>= 1;
+            let bit = if self.code >= self.range {
+                self.code -= self.range;
+                1
+            } else {
+                0
+            };
+            v = (v << 1) | bit;
+            while self.range < TOP {
+                self.code = (self.code << 8) | self.next()? as u32;
+                self.range <<= 8;
+            }
+        }
+        Ok(v)
+    }
+}
+
+fn tree_encode(e: &mut REnc, probs: &mut [u16], nbits: u32, sym: u32) {
+    let mut m = 1u32;
+    for i in (0..nbits).rev() {
+        let bit = (sym >> i) & 1;
+        e.encode_bit(&mut probs[m as usize], bit);
+        m = (m << 1) | bit;
+    }
+}
+
+fn tree_decode(
+    d: &mut RDec,
+    probs: &mut [u16],
+    nbits: u32,
+) -> Result<u32, CodecError> {
+    let mut m = 1u32;
+    for _ in 0..nbits {
+        m = (m << 1) | d.decode_bit(&mut probs[m as usize])?;
+    }
+    Ok(m - (1 << nbits))
+}
+
+/// Per-block adaptive context: one match flag, a byte tree for
+/// literals, a byte tree for match lengths and a 5-bit tree for the
+/// distance bit-length (low bits go as direct bits).
+struct Model {
+    is_match: u16,
+    lit: Vec<u16>,
+    len: Vec<u16>,
+    dist_bits: Vec<u16>,
+}
+
+impl Model {
+    fn new() -> Model {
+        Model {
+            is_match: PROB_INIT,
+            lit: vec![PROB_INIT; 256],
+            len: vec![PROB_INIT; 256],
+            dist_bits: vec![PROB_INIT; 32],
+        }
+    }
+}
+
+// -- block LZ ----------------------------------------------------------------
+
+#[inline]
+fn hash4(b: &[u8]) -> usize {
+    let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    (v.wrapping_mul(2_654_435_761) >> (32 - HASH_BITS)) as usize
+}
+
+fn encode_block(raw: &[u8], head: &mut [u32]) -> Vec<u8> {
+    head.fill(u32::MAX);
+    let mut e = REnc::new();
+    let mut m = Model::new();
+    let n = raw.len();
+    let mut i = 0usize;
+    while i < n {
+        let mut match_len = 0usize;
+        let mut match_dist = 0usize;
+        if i + MIN_MATCH <= n {
+            let h = hash4(&raw[i..]);
+            let cand = head[h];
+            head[h] = i as u32;
+            if cand != u32::MAX {
+                let c = cand as usize;
+                let max_len = (n - i).min(MAX_MATCH);
+                let mut l = 0usize;
+                while l < max_len && raw[c + l] == raw[i + l] {
+                    l += 1;
+                }
+                if l >= MIN_MATCH {
+                    match_len = l;
+                    match_dist = i - c;
+                }
+            }
+        }
+        if match_len > 0 {
+            e.encode_bit(&mut m.is_match, 1);
+            tree_encode(&mut e, &mut m.len, 8, (match_len - MIN_MATCH) as u32);
+            let d = match_dist as u32;
+            let bl = 32 - d.leading_zeros();
+            tree_encode(&mut e, &mut m.dist_bits, 5, bl - 1);
+            if bl > 1 {
+                e.encode_direct(d & ((1u32 << (bl - 1)) - 1), bl - 1);
+            }
+            let end = i + match_len;
+            i += 1;
+            while i < end {
+                if i + MIN_MATCH <= n {
+                    head[hash4(&raw[i..])] = i as u32;
+                }
+                i += 1;
+            }
+        } else {
+            e.encode_bit(&mut m.is_match, 0);
+            tree_encode(&mut e, &mut m.lit, 8, raw[i] as u32);
+            i += 1;
+        }
+    }
+    e.finish()
+}
+
+fn decode_block(
+    stored: &[u8],
+    raw_len: usize,
+    out: &mut Vec<u8>,
+) -> Result<(), CodecError> {
+    let start = out.len();
+    let mut d = RDec::new(stored)?;
+    let mut m = Model::new();
+    while out.len() - start < raw_len {
+        if d.decode_bit(&mut m.is_match)? == 1 {
+            let len =
+                tree_decode(&mut d, &mut m.len, 8)? as usize + MIN_MATCH;
+            let bl = tree_decode(&mut d, &mut m.dist_bits, 5)? + 1;
+            let dist = if bl == 1 {
+                1usize
+            } else {
+                ((1u32 << (bl - 1)) | d.decode_direct(bl - 1)?) as usize
+            };
+            let have = out.len() - start;
+            if dist > have {
+                return Err(corrupt(format!(
+                    "match distance {dist} reaches before the block start \
+                     (only {have} bytes decoded)"
+                )));
+            }
+            if have + len > raw_len {
+                return Err(corrupt(format!(
+                    "match of {len} overruns the declared block length \
+                     {raw_len}"
+                )));
+            }
+            for _ in 0..len {
+                let b = out[out.len() - dist];
+                out.push(b);
+            }
+        } else {
+            out.push(tree_decode(&mut d, &mut m.lit, 8)? as u8);
+        }
+    }
+    Ok(())
+}
+
+// -- framing -----------------------------------------------------------------
+
+/// Compress `raw` into the framed block stream. Infallible: blocks
+/// that do not shrink are stored RAW, so the worst case is the framing
+/// overhead (8 bytes + 9 per block).
+pub fn compress(raw: &[u8]) -> Vec<u8> {
+    assert!(
+        raw.len() <= u32::MAX as usize,
+        "section too large for the codec frame"
+    );
+    let mut out = Vec::new();
+    out.extend_from_slice(&(raw.len() as u32).to_le_bytes());
+    let n_blocks = raw.len().div_ceil(BLOCK);
+    out.extend_from_slice(&(n_blocks as u32).to_le_bytes());
+    let mut head = vec![u32::MAX; 1 << HASH_BITS];
+    for b in raw.chunks(BLOCK) {
+        let coded = encode_block(b, &mut head);
+        let (kind, payload): (u8, &[u8]) = if coded.len() < b.len() {
+            (KIND_CODED, &coded)
+        } else {
+            (KIND_RAW, b)
+        };
+        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.push(kind);
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+/// Peek the decompressed length from the frame header without decoding
+/// (the `inspect` section table).
+pub fn stored_raw_len(stored: &[u8]) -> Result<usize, CodecError> {
+    if stored.len() < 4 {
+        return Err(truncated("frame header"));
+    }
+    Ok(u32::from_le_bytes([stored[0], stored[1], stored[2], stored[3]])
+        as usize)
+}
+
+/// Decompress a framed block stream produced by [`compress`].
+pub fn decompress(stored: &[u8]) -> Result<Vec<u8>, CodecError> {
+    let mut pos = 0usize;
+    let mut u32_at = |p: &mut usize, what: &str| -> Result<u32, CodecError> {
+        let b = stored
+            .get(*p..*p + 4)
+            .ok_or_else(|| truncated(what))?;
+        *p += 4;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    };
+    let total = u32_at(&mut pos, "frame header")? as usize;
+    let n_blocks = u32_at(&mut pos, "frame header")? as usize;
+    if n_blocks != total.div_ceil(BLOCK) {
+        return Err(corrupt(format!(
+            "block count {n_blocks} does not cover the declared length \
+             {total}"
+        )));
+    }
+    let mut out = Vec::with_capacity(total.min(stored.len().saturating_mul(64)));
+    for blk in 0..n_blocks {
+        let braw = u32_at(&mut pos, "block header")? as usize;
+        let bstored = u32_at(&mut pos, "block header")? as usize;
+        if braw > BLOCK || braw == 0 {
+            return Err(corrupt(format!(
+                "block {blk} declares an impossible raw length {braw}"
+            )));
+        }
+        let kind = *stored
+            .get(pos)
+            .ok_or_else(|| truncated("block kind byte"))?;
+        pos += 1;
+        let payload = stored
+            .get(pos..pos + bstored)
+            .ok_or_else(|| truncated("block payload"))?;
+        pos += bstored;
+        match kind {
+            KIND_RAW => {
+                if bstored != braw {
+                    return Err(corrupt(format!(
+                        "raw block {blk} stores {bstored} bytes but \
+                         declares {braw}"
+                    )));
+                }
+                out.extend_from_slice(payload);
+            }
+            KIND_CODED => decode_block(payload, braw, &mut out)?,
+            k => {
+                return Err(corrupt(format!(
+                    "unknown block kind {k} in block {blk}"
+                )))
+            }
+        }
+    }
+    if pos != stored.len() {
+        return Err(corrupt(format!(
+            "{} trailing bytes after the final block",
+            stored.len() - pos
+        )));
+    }
+    if out.len() != total {
+        return Err(corrupt(format!(
+            "decompressed length mismatch: frame declares {total}, \
+             decoded {}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn round_trip(raw: &[u8]) -> Vec<u8> {
+        let stored = compress(raw);
+        assert_eq!(stored_raw_len(&stored).unwrap(), raw.len());
+        let back = decompress(&stored).unwrap();
+        assert_eq!(back, raw, "round trip of {} bytes", raw.len());
+        stored
+    }
+
+    #[test]
+    fn degenerate_inputs_round_trip() {
+        round_trip(&[]);
+        round_trip(&[42]);
+        round_trip(&[0; 3]);
+        round_trip(b"abcd");
+    }
+
+    #[test]
+    fn compressible_data_shrinks() {
+        let zeros = vec![0u8; 100_000];
+        let stored = round_trip(&zeros);
+        assert!(
+            stored.len() < zeros.len() / 50,
+            "zero run stored as {} bytes",
+            stored.len()
+        );
+        let pattern: Vec<u8> =
+            (0..60_000).map(|i| ((i * 7) % 13) as u8).collect();
+        let stored = round_trip(&pattern);
+        assert!(stored.len() < pattern.len() / 4);
+    }
+
+    #[test]
+    fn gaussian_codes_shrink_via_entropy_coding() {
+        // the weight-grid shape: Gaussian codes use the full byte range
+        // but at ~7 bits of entropy — LZ alone cannot touch this, the
+        // adaptive literal model must
+        let mut rng = Rng::new(99);
+        let codes: Vec<u8> = rng
+            .normal_vec(200_000, 40.0)
+            .into_iter()
+            .map(|v| (v.round().clamp(-128.0, 127.0) as i8) as u8)
+            .collect();
+        let stored = round_trip(&codes);
+        assert!(
+            stored.len() < codes.len() * 97 / 100,
+            "Gaussian codes must shrink: {} vs {}",
+            stored.len(),
+            codes.len()
+        );
+    }
+
+    #[test]
+    fn incompressible_data_costs_only_framing() {
+        let mut rng = Rng::new(7);
+        // uniform random bytes: every block falls back to RAW storage
+        let noise: Vec<u8> =
+            (0..BLOCK + 1000).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let stored = round_trip(&noise);
+        assert!(stored.len() <= noise.len() + 8 + 2 * 9);
+    }
+
+    #[test]
+    fn multi_block_inputs_round_trip() {
+        let mut rng = Rng::new(11);
+        let mut data: Vec<u8> = rng
+            .normal_vec(2 * BLOCK + 4321, 30.0)
+            .into_iter()
+            .map(|v| v as i64 as u8)
+            .collect();
+        data.extend(std::iter::repeat(9u8).take(5000));
+        round_trip(&data);
+    }
+
+    #[test]
+    fn compression_is_deterministic() {
+        let mut rng = Rng::new(3);
+        let data: Vec<u8> =
+            rng.normal_vec(50_000, 25.0).iter().map(|&v| v as u8).collect();
+        assert_eq!(compress(&data), compress(&data));
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error() {
+        let data = vec![5u8; 10_000];
+        let stored = compress(&data);
+        for cut in [0, 3, 7, 8, 12, 16, stored.len() - 1] {
+            match decompress(&stored[..cut]) {
+                Err(CodecError::Truncated { .. })
+                | Err(CodecError::Corrupt { .. }) => {}
+                Ok(out) => panic!("cut at {cut} decoded {} bytes", out.len()),
+            }
+        }
+    }
+
+    #[test]
+    fn bit_flips_never_panic() {
+        let mut rng = Rng::new(21);
+        let data: Vec<u8> =
+            rng.normal_vec(30_000, 35.0).iter().map(|&v| v as u8).collect();
+        let stored = compress(&data);
+        for i in (0..stored.len()).step_by(stored.len() / 97 + 1) {
+            let mut bad = stored.clone();
+            bad[i] ^= 0x10;
+            // a flip must surface as a typed error or (rarely, for
+            // flips inside a literal) wrong bytes — never a panic
+            if let Ok(out) = decompress(&bad) {
+                assert_eq!(out.len(), data.len());
+            }
+        }
+    }
+
+    #[test]
+    fn declared_length_mismatch_is_corrupt() {
+        let stored = compress(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let mut bad = stored.clone();
+        bad[0] = bad[0].wrapping_add(1); // frame raw_len no longer matches
+        match decompress(&bad) {
+            Err(CodecError::Corrupt { .. })
+            | Err(CodecError::Truncated { .. }) => {}
+            Ok(_) => panic!("length mismatch must not decode"),
+        }
+    }
+}

@@ -7,24 +7,40 @@
 //!
 //! ```text
 //! offset 0   magic          b"DFQP"           (4 bytes)
-//!        4   version        u32 LE            (currently 2; 1 still reads)
+//!        4   version        u32 LE            (currently 3; 1/2 still read)
 //!        8   n_sections     u32 LE
 //!       12   reserved       u32 LE            (0)
 //!       16   section table  n_sections × 40-byte entries:
 //!              name    [u8; 16]  NUL-padded ASCII
 //!              offset  u64 LE    absolute, 64-byte aligned
-//!              size    u64 LE    payload bytes (pre-padding)
-//!              crc32   u32 LE    IEEE CRC-32 of the payload
-//!              pad     u32 LE    (0)
+//!              size    u64 LE    stored payload bytes (pre-padding)
+//!              crc32   u32 LE    IEEE CRC-32 of the *stored* payload
+//!              flags   u32 LE    bit 0 = compressed (v1/v2 wrote 0 here)
 //!       ...  section payloads, each 64-byte aligned
 //! ```
+//!
+//! Version 3 repurposed the per-entry pad word as a flags word;
+//! [`FLAG_COMPRESSED`] marks a section stored as a [`super::codec`]
+//! frame. The CRC always covers the stored bytes, so corruption is
+//! caught *before* any decompression runs; unknown flag bits are
+//! tolerated on read (forward compatibility — `dfq inspect` warns).
+//! The container can be parsed either from an owned byte buffer or
+//! straight over a shared [`Mmap`], in which case raw sections borrow
+//! from the page cache and report their absolute offset so the decoder
+//! can build zero-copy typed views.
 //!
 //! Every failure mode is a typed [`ArtifactError`] (never a panic):
 //! corrupt downloads, truncated copies and version skew all surface as
 //! distinct, matchable variants.
 
+use std::borrow::Cow;
 use std::fmt;
+use std::ops::Deref;
 use std::path::Path;
+use std::sync::Arc;
+
+use super::codec::{self, CodecError};
+use crate::util::mmap::Mmap;
 
 /// Magic of a compiled-plan artifact ("Data-Free Quantized Plan") —
 /// distinct from the `b"DFQM"` *source model* container magic so the two
@@ -32,12 +48,21 @@ use std::path::Path;
 pub const MAGIC: [u8; 4] = *b"DFQP";
 
 /// Current container format version. Version 2 added the concat/pool2d
-/// op tags (12–15) to the plan stream; version-1 files are a strict
-/// subset and still load.
-pub const VERSION: u32 = 2;
+/// op tags (12–15) to the plan stream; version 3 turned the per-entry
+/// pad word into section flags (compressed storage). Both older
+/// versions wrote zeros in that slot, so they still load unchanged.
+pub const VERSION: u32 = 3;
 
 /// Oldest format version this build still reads.
 pub const MIN_VERSION: u32 = 1;
+
+/// Section-flag bit: the stored payload is a [`super::codec`] frame and
+/// must be decompressed after its CRC check.
+pub const FLAG_COMPRESSED: u32 = 1;
+
+/// Flag bits this build understands; others are ignored on read
+/// (forward compatibility) and reported by `dfq inspect`.
+pub const KNOWN_FLAGS: u32 = FLAG_COMPRESSED;
 
 /// Payload alignment (matches the source-model container).
 const ALIGN: usize = 64;
@@ -163,7 +188,7 @@ pub fn crc32(data: &[u8]) -> u32 {
 
 /// Accumulates named sections and emits the final container image.
 pub struct ContainerWriter {
-    sections: Vec<(String, Vec<u8>)>,
+    sections: Vec<(String, Vec<u8>, u32)>,
 }
 
 impl ContainerWriter {
@@ -173,15 +198,31 @@ impl ContainerWriter {
 
     /// Append one named section (names must be unique, ≤ 16 ASCII bytes).
     pub fn push(&mut self, name: &str, payload: Vec<u8>) {
+        self.push_flagged(name, payload, 0);
+    }
+
+    /// Append one section stored as a compressed [`super::codec`] frame
+    /// — unless compression does not shrink it, in which case the raw
+    /// payload is stored (flags 0), so stored size never exceeds raw.
+    pub fn push_compressed(&mut self, name: &str, payload: Vec<u8>) {
+        let stored = codec::compress(&payload);
+        if stored.len() < payload.len() {
+            self.push_flagged(name, stored, FLAG_COMPRESSED);
+        } else {
+            self.push_flagged(name, payload, 0);
+        }
+    }
+
+    fn push_flagged(&mut self, name: &str, payload: Vec<u8>, flags: u32) {
         assert!(
             name.len() <= NAME_LEN && name.is_ascii(),
             "section name '{name}' must be ≤ {NAME_LEN} ASCII bytes"
         );
         assert!(
-            self.sections.iter().all(|(n, _)| n != name),
+            self.sections.iter().all(|(n, _, _)| n != name),
             "duplicate section '{name}'"
         );
-        self.sections.push((name.to_string(), payload));
+        self.sections.push((name.to_string(), payload, flags));
     }
 
     /// Serialise header + table + aligned payloads.
@@ -190,7 +231,7 @@ impl ContainerWriter {
         let table_end = HEADER_LEN + n * ENTRY_LEN;
         let mut offset = table_end + pad_to(table_end);
         let mut entries = Vec::with_capacity(n);
-        for (name, payload) in &self.sections {
+        for (name, payload, _) in &self.sections {
             entries.push((name.clone(), offset, payload.len(), crc32(payload)));
             offset += payload.len() + pad_to(payload.len());
         }
@@ -199,17 +240,17 @@ impl ContainerWriter {
         out.extend_from_slice(&VERSION.to_le_bytes());
         out.extend_from_slice(&(n as u32).to_le_bytes());
         out.extend_from_slice(&0u32.to_le_bytes());
-        for (name, off, size, crc) in &entries {
+        for (i, (name, off, size, crc)) in entries.iter().enumerate() {
             let mut nb = [0u8; NAME_LEN];
             nb[..name.len()].copy_from_slice(name.as_bytes());
             out.extend_from_slice(&nb);
             out.extend_from_slice(&(*off as u64).to_le_bytes());
             out.extend_from_slice(&(*size as u64).to_le_bytes());
             out.extend_from_slice(&crc.to_le_bytes());
-            out.extend_from_slice(&0u32.to_le_bytes());
+            out.extend_from_slice(&self.sections[i].2.to_le_bytes());
         }
         out.resize(out.len() + pad_to(out.len()), 0);
-        for (i, (_, payload)) in self.sections.iter().enumerate() {
+        for (i, (_, payload, _)) in self.sections.iter().enumerate() {
             debug_assert_eq!(out.len(), entries[i].1, "section offset drift");
             out.extend_from_slice(payload);
             if i + 1 < n {
@@ -233,12 +274,76 @@ struct Entry {
     offset: usize,
     size: usize,
     crc: u32,
+    flags: u32,
+}
+
+/// Where the container bytes live: an owned read, or a shared mapping
+/// whose raw sections can be served zero-copy.
+enum Backing {
+    Owned(Vec<u8>),
+    Mapped(Arc<Mmap>),
+}
+
+impl Backing {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            Backing::Owned(v) => v,
+            Backing::Mapped(m) => m,
+        }
+    }
+}
+
+/// One section's payload: CRC-checked stored bytes, decompressed when
+/// the entry carries [`FLAG_COMPRESSED`]. Raw sections borrow straight
+/// from the container and report their absolute offset so a mmap'd
+/// decode can build typed views into the backing pages.
+pub struct SectionBytes<'a> {
+    data: Cow<'a, [u8]>,
+    /// Absolute container offset of `data` when borrowed (raw
+    /// sections); `None` for decompressed (owned) payloads.
+    container_off: Option<usize>,
+}
+
+impl SectionBytes<'_> {
+    /// Absolute offset of byte 0 inside the container, when the
+    /// payload is a direct borrow of it.
+    pub fn container_off(&self) -> Option<usize> {
+        self.container_off
+    }
+}
+
+impl Deref for SectionBytes<'_> {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+/// Per-section storage facts for `dfq inspect`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SectionStat {
+    pub name: String,
+    /// Bytes stored in the container (post-compression).
+    pub stored: usize,
+    /// Decompressed payload size; `None` when the compressed frame
+    /// header is unreadable.
+    pub raw: Option<usize>,
+    pub crc: u32,
+    pub flags: u32,
+}
+
+impl SectionStat {
+    /// Flag bits this build does not understand (warn, don't fail).
+    pub fn unknown_flags(&self) -> u32 {
+        self.flags & !KNOWN_FLAGS
+    }
 }
 
 /// A parsed container: the section table plus the raw bytes. Section
-/// payloads are CRC-checked on access.
+/// payloads are CRC-checked on access (over the *stored* bytes, before
+/// any decompression).
 pub struct ContainerReader {
-    data: Vec<u8>,
+    data: Backing,
     entries: Vec<Entry>,
 }
 
@@ -251,7 +356,21 @@ impl ContainerReader {
         ContainerReader::parse(data)
     }
 
+    /// Parse over a shared read-only mapping (zero-copy raw sections).
+    pub fn parse_mmap(map: Arc<Mmap>) -> AResult<ContainerReader> {
+        ContainerReader::parse_backing(Backing::Mapped(map))
+    }
+
     pub fn parse(data: Vec<u8>) -> AResult<ContainerReader> {
+        ContainerReader::parse_backing(Backing::Owned(data))
+    }
+
+    fn parse_backing(backing: Backing) -> AResult<ContainerReader> {
+        let entries = ContainerReader::parse_entries(backing.bytes())?;
+        Ok(ContainerReader { data: backing, entries })
+    }
+
+    fn parse_entries(data: &[u8]) -> AResult<Vec<Entry>> {
         if data.len() < HEADER_LEN {
             return Err(truncated("file shorter than the 16-byte header"));
         }
@@ -294,6 +413,11 @@ impl ContainerReader {
             let crc = u32::from_le_bytes(
                 data[base + 32..base + 36].try_into().unwrap(),
             );
+            // the pad word of v1/v2 entries (always 0) is the v3 flags
+            // word — parsing it unconditionally reads all versions
+            let flags = u32::from_le_bytes(
+                data[base + 36..base + 40].try_into().unwrap(),
+            );
             match offset.checked_add(size) {
                 Some(end) if end <= data.len() => {}
                 _ => {
@@ -304,9 +428,9 @@ impl ContainerReader {
                     )))
                 }
             }
-            entries.push(Entry { name, offset, size, crc });
+            entries.push(Entry { name, offset, size, crc, flags });
         }
-        Ok(ContainerReader { data, entries })
+        Ok(entries)
     }
 
     pub fn section_names(&self) -> Vec<&str> {
@@ -315,15 +439,52 @@ impl ContainerReader {
 
     /// Total container size in bytes.
     pub fn total_bytes(&self) -> usize {
-        self.data.len()
+        self.data.bytes().len()
     }
 
+    /// Stored (on-disk) size of a section.
     pub fn section_size(&self, name: &str) -> Option<usize> {
         self.entries.iter().find(|e| e.name == name).map(|e| e.size)
     }
 
-    /// Borrow one section's payload, verifying its CRC-32.
-    pub fn section(&self, name: &str) -> AResult<&[u8]> {
+    /// The shared mapping backing this container, if it was opened via
+    /// [`ContainerReader::parse_mmap`] — the decoder clones the `Arc`
+    /// into every zero-copy tensor view it hands out.
+    pub fn backing_mmap(&self) -> Option<&Arc<Mmap>> {
+        match &self.data {
+            Backing::Owned(_) => None,
+            Backing::Mapped(m) => Some(m),
+        }
+    }
+
+    /// Per-section storage facts (sizes, crc, flags) for `dfq inspect`.
+    /// Reads only headers — no CRC checks, no decompression.
+    pub fn section_stats(&self) -> Vec<SectionStat> {
+        let data = self.data.bytes();
+        self.entries
+            .iter()
+            .map(|e| {
+                let raw = if e.flags & FLAG_COMPRESSED != 0 {
+                    codec::stored_raw_len(&data[e.offset..e.offset + e.size])
+                        .ok()
+                } else {
+                    Some(e.size)
+                };
+                SectionStat {
+                    name: e.name.clone(),
+                    stored: e.size,
+                    raw,
+                    crc: e.crc,
+                    flags: e.flags,
+                }
+            })
+            .collect()
+    }
+
+    /// One section's payload, CRC-verified over the stored bytes and
+    /// decompressed if the entry is flagged compressed. Unknown flag
+    /// bits are ignored (forward compatibility).
+    pub fn section(&self, name: &str) -> AResult<SectionBytes<'_>> {
         let e = self
             .entries
             .iter()
@@ -331,8 +492,8 @@ impl ContainerReader {
             .ok_or_else(|| ArtifactError::MissingSection {
                 name: name.to_string(),
             })?;
-        let payload = &self.data[e.offset..e.offset + e.size];
-        let computed = crc32(payload);
+        let stored = &self.data.bytes()[e.offset..e.offset + e.size];
+        let computed = crc32(stored);
         if computed != e.crc {
             return Err(ArtifactError::CrcMismatch {
                 section: name.to_string(),
@@ -340,7 +501,22 @@ impl ContainerReader {
                 computed,
             });
         }
-        Ok(payload)
+        if e.flags & FLAG_COMPRESSED != 0 {
+            let raw = codec::decompress(stored).map_err(|err| match err {
+                CodecError::Truncated { what } => truncated(format!(
+                    "section '{name}' compressed payload: {what}"
+                )),
+                CodecError::Corrupt { what } => malformed(format!(
+                    "section '{name}' compressed payload: {what}"
+                )),
+            })?;
+            Ok(SectionBytes { data: Cow::Owned(raw), container_off: None })
+        } else {
+            Ok(SectionBytes {
+                data: Cow::Borrowed(stored),
+                container_off: Some(e.offset),
+            })
+        }
     }
 }
 
@@ -513,6 +689,17 @@ impl<'a> ByteReader<'a> {
             .collect())
     }
 
+    /// Bytes consumed so far (stream-relative offset of the cursor).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Advance over `n` bytes without decoding them (zero-copy view
+    /// construction) — same typed truncation error as a read.
+    pub fn skip(&mut self, n: usize) -> AResult<()> {
+        self.take(n).map(|_| ())
+    }
+
     pub fn remaining(&self) -> usize {
         self.data.len() - self.pos
     }
@@ -549,12 +736,116 @@ mod tests {
         let bytes = w.finish();
         let r = ContainerReader::parse(bytes).unwrap();
         assert_eq!(r.section_names(), vec!["alpha", "beta"]);
-        assert_eq!(r.section("alpha").unwrap(), &[1, 2, 3]);
-        assert_eq!(r.section("beta").unwrap().len(), 200);
+        assert_eq!(&r.section("alpha").unwrap()[..], &[1, 2, 3]);
+        let beta = r.section("beta").unwrap();
+        assert_eq!(beta.len(), 200);
+        assert!(beta.container_off().is_some(), "raw sections borrow");
         assert!(matches!(
             r.section("gamma"),
             Err(ArtifactError::MissingSection { .. })
         ));
+    }
+
+    #[test]
+    fn compressed_sections_roundtrip_and_report_sizes() {
+        let raw: Vec<u8> = std::iter::repeat(7u8).take(4000).collect();
+        let mut w = ContainerWriter::new();
+        w.push_compressed("z", raw.clone());
+        w.push("r", vec![1, 2, 3]);
+        let r = ContainerReader::parse(w.finish()).unwrap();
+        let z = r.section("z").unwrap();
+        assert_eq!(&z[..], &raw[..]);
+        assert!(z.container_off().is_none(), "decompressed payloads own");
+        let stats = r.section_stats();
+        assert_eq!(stats[0].flags, FLAG_COMPRESSED);
+        assert_eq!(stats[0].raw, Some(4000));
+        assert!(stats[0].stored < 4000, "zero run must shrink");
+        assert_eq!(stats[0].unknown_flags(), 0);
+        assert_eq!(stats[1].flags, 0);
+        assert_eq!(stats[1].raw, Some(3));
+    }
+
+    #[test]
+    fn incompressible_push_compressed_stores_raw() {
+        // compression would expand 3 bytes -> stored raw with flags 0
+        let mut w = ContainerWriter::new();
+        w.push_compressed("tiny", vec![1, 2, 3]);
+        let r = ContainerReader::parse(w.finish()).unwrap();
+        assert_eq!(r.section_stats()[0].flags, 0);
+        assert_eq!(&r.section("tiny").unwrap()[..], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn unknown_flag_bits_are_tolerated() {
+        let mut w = ContainerWriter::new();
+        w.push("s", vec![5; 32]);
+        let mut bytes = w.finish();
+        // set a future flag bit in the entry's flags word
+        let flags_at = HEADER_LEN + 36;
+        bytes[flags_at..flags_at + 4].copy_from_slice(&8u32.to_le_bytes());
+        let r = ContainerReader::parse(bytes).unwrap();
+        assert_eq!(r.section("s").unwrap().len(), 32, "read must not fail");
+        assert_eq!(r.section_stats()[0].unknown_flags(), 8);
+    }
+
+    #[test]
+    fn compressed_payload_corruption_is_typed() {
+        let raw: Vec<u8> = (0..5000).map(|i| (i % 7) as u8).collect();
+        let mut w = ContainerWriter::new();
+        w.push_compressed("z", raw);
+        let good = w.finish();
+        let r = ContainerReader::parse(good.clone()).unwrap();
+        let stat = &r.section_stats()[0];
+        assert_eq!(stat.flags, FLAG_COMPRESSED);
+
+        // flip a stored byte: the CRC over stored bytes trips first
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        let r = ContainerReader::parse(bad).unwrap();
+        assert!(matches!(
+            r.section("z"),
+            Err(ArtifactError::CrcMismatch { .. })
+        ));
+
+        // declared-length mismatch inside an intact (re-CRC'd) frame:
+        // bump the frame's raw_len and restore the entry CRC
+        let mut bad = good.clone();
+        let table_base = HEADER_LEN;
+        let off = u64::from_le_bytes(
+            bad[table_base + 16..table_base + 24].try_into().unwrap(),
+        ) as usize;
+        let size = u64::from_le_bytes(
+            bad[table_base + 24..table_base + 32].try_into().unwrap(),
+        ) as usize;
+        bad[off] = bad[off].wrapping_add(1);
+        let crc = crc32(&bad[off..off + size]);
+        bad[table_base + 32..table_base + 36]
+            .copy_from_slice(&crc.to_le_bytes());
+        let r = ContainerReader::parse(bad).unwrap();
+        assert!(matches!(
+            r.section("z"),
+            Err(ArtifactError::Malformed { .. })
+                | Err(ArtifactError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn mmap_backed_parse_serves_sections() {
+        let mut w = ContainerWriter::new();
+        w.push("alpha", (0..64u8).collect());
+        let bytes = w.finish();
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("dfq_fmt_mmap_{}.dfqm", std::process::id()));
+        std::fs::write(&p, &bytes).unwrap();
+        let map = Arc::new(Mmap::map(&p).unwrap());
+        let r = ContainerReader::parse_mmap(map).unwrap();
+        assert!(r.backing_mmap().is_some());
+        let s = r.section("alpha").unwrap();
+        assert_eq!(s.len(), 64);
+        let off = s.container_off().unwrap();
+        assert_eq!(off % 64, 0, "payloads stay 64-byte aligned");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -40,14 +40,33 @@
 //! invariant, so corrupt files surface as typed [`ArtifactError`]s
 //! (bad magic, truncation, CRC mismatch, malformed content) rather than
 //! panics.
+//!
+//! Two storage refinements ride on container version 3:
+//!
+//! * **Zero-copy loads** — [`Artifact::open_mmap`] /
+//!   [`QModel::from_artifact_mmap`](crate::nn::qengine::QModel::from_artifact_mmap)
+//!   parse the container over a shared read-only memory map
+//!   ([`crate::util::mmap`]) and build the `wgrid.i8` / `bias.i64`
+//!   tensors as typed views straight into the page-cache-backed bytes,
+//!   bitwise-identical to the copy path. N processes serving the same
+//!   zoo share one physical copy of the weights, and evicting a model
+//!   frees only the cheap plan structs.
+//! * **Compressed cold storage** — `dfq compile --compress` stores the
+//!   `wgrid.i8` and `plan` sections as [`codec`] frames (per-section
+//!   [`format::FLAG_COMPRESSED`] in the BOM); they are CRC-checked over
+//!   the stored bytes and decompressed once at load. v1/v2 artifacts
+//!   (flags word always 0) read unchanged.
 
+pub mod codec;
 pub mod format;
 pub mod reader;
 pub mod writer;
 
-pub use format::{crc32, ArtifactError};
-pub use reader::{inspect, Artifact};
-pub use writer::{encode_qmodel, write_artifact};
+pub use format::{crc32, ArtifactError, SectionStat};
+pub use reader::{inspect, section_table, Artifact};
+pub use writer::{
+    encode_qmodel, encode_qmodel_opts, write_artifact, write_artifact_opts,
+};
 
 // Section names (≤ 16 ASCII bytes each; see `format`).
 pub(crate) const SEC_META: &str = "meta";

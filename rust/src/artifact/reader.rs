@@ -11,6 +11,7 @@
 //! typed [`ArtifactError`] instead of a panic deep inside a kernel.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -26,8 +27,12 @@ use crate::nn::SiteCfg;
 use crate::quant::QParams;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::mmap::{ArcSlice, Mmap};
 
-use super::format::{malformed, AResult, ByteReader, ContainerReader};
+use super::format::{
+    malformed, AResult, ByteReader, ContainerReader, SectionBytes,
+    SectionStat,
+};
 use super::{
     ArtifactError, ArtifactInfo, OP_ACTF, OP_ACT_REQUANT, OP_ADDF,
     OP_ADD_INT, OP_CONCATF, OP_CONCAT_INT, OP_CONV, OP_CONV_F32, OP_GAP,
@@ -59,6 +64,35 @@ impl Artifact {
     /// `anyhow::Result` (the typed value still formats the full story).
     pub fn open(path: impl AsRef<Path>) -> Result<Artifact> {
         Ok(Artifact::open_typed(path.as_ref())?)
+    }
+
+    /// Open via a shared read-only memory map: the raw `wgrid.i8` /
+    /// `bias.i64` sections decode as zero-copy typed views into the
+    /// page-cache-backed bytes, kept alive by an `Arc<Mmap>` inside
+    /// each tensor — bitwise-identical behaviour to [`Artifact::open`],
+    /// but boot copies nothing and N processes share one physical copy
+    /// of the weights. Compressed sections (and big-endian hosts, and
+    /// runs with `DFQ_NO_MMAP` set to a non-empty value other than `0`)
+    /// fall back to owned storage with the same semantics.
+    ///
+    /// Caveat inherent to mmap'd IO: truncating the file *while a
+    /// model serves from it* can fault; replace artifacts by rename
+    /// (the registry's `poll_files` then hot-swaps onto a fresh map).
+    pub fn open_mmap_typed(path: &Path) -> AResult<Artifact> {
+        if mmap_disabled_by_env() {
+            return Artifact::open_typed(path);
+        }
+        let map = Mmap::map(path).map_err(|e| ArtifactError::Io {
+            path: path.display().to_string(),
+            msg: e.to_string(),
+        })?;
+        let c = ContainerReader::parse_mmap(Arc::new(map))?;
+        Artifact::decode(&c)
+    }
+
+    /// [`Artifact::open_mmap_typed`] with the error erased.
+    pub fn open_mmap(path: impl AsRef<Path>) -> Result<Artifact> {
+        Ok(Artifact::open_mmap_typed(path.as_ref())?)
     }
 
     /// Decode an in-memory container image (tests / benches).
@@ -112,6 +146,21 @@ impl QModel {
     pub fn from_artifact(path: impl AsRef<Path>) -> Result<QModel> {
         Ok(Artifact::open_typed(path.as_ref())?.into_qmodel())
     }
+
+    /// [`QModel::from_artifact`] over a shared memory map: weight and
+    /// bias tensors are zero-copy views into the page cache (see
+    /// [`Artifact::open_mmap_typed`]); logits are bitwise-identical to
+    /// the copy path.
+    pub fn from_artifact_mmap(path: impl AsRef<Path>) -> Result<QModel> {
+        Ok(Artifact::open_mmap_typed(path.as_ref())?.into_qmodel())
+    }
+}
+
+/// `DFQ_NO_MMAP` (any non-empty value other than `0`) pins every
+/// "mmap" load onto the owned-read fallback — CI uses it to exercise
+/// that path on hosts where mapping works.
+pub(crate) fn mmap_disabled_by_env() -> bool {
+    matches!(std::env::var("DFQ_NO_MMAP"), Ok(v) if !v.is_empty() && v != "0")
 }
 
 /// Read only the `meta` section of an artifact (cheap listing /
@@ -123,13 +172,20 @@ pub fn inspect(path: impl AsRef<Path>) -> AResult<ArtifactInfo> {
     Ok(info)
 }
 
+/// Per-section storage facts (stored vs raw size, crc, flags) for the
+/// `dfq inspect` table. Header-only: no CRC checks, no decompression.
+pub fn section_table(path: impl AsRef<Path>) -> AResult<Vec<SectionStat>> {
+    let c = ContainerReader::open(path.as_ref())?;
+    Ok(c.section_stats())
+}
+
 fn jerr(e: anyhow::Error) -> ArtifactError {
     malformed(format!("meta json: {e:#}"))
 }
 
 fn decode_meta(c: &ContainerReader) -> AResult<ArtifactInfo> {
     let bytes = c.section(SEC_META)?;
-    let text = std::str::from_utf8(bytes)
+    let text = std::str::from_utf8(&bytes)
         .map_err(|_| malformed("meta section is not UTF-8"))?;
     let j = Json::parse(text).map_err(jerr)?;
     let format = j.req("format").and_then(Json::as_str).map_err(jerr)?;
@@ -234,11 +290,71 @@ fn checked_len(a: usize, b: usize, what: &str) -> AResult<usize> {
 /// Sequential cursors over the typed section streams.
 struct Cursors<'a> {
     plan: ByteReader<'a>,
-    wgrid: ByteReader<'a>,
+    wgrid: ViewCursor<'a>,
     qparams: ByteReader<'a>,
-    bias: ByteReader<'a>,
+    bias: ViewCursor<'a>,
     mult: ByteReader<'a>,
     fallback: Option<ByteReader<'a>>,
+}
+
+/// A section cursor that can mint zero-copy [`ArcSlice`] views when
+/// the stream borrows straight from a live mapping. Falls back to
+/// owned decoding for compressed sections, the owned-read path, and
+/// big-endian hosts (where reinterpreting little-endian file bytes
+/// in place would be wrong).
+struct ViewCursor<'a> {
+    r: ByteReader<'a>,
+    /// `(mapping, absolute container offset of stream byte 0)`.
+    src: Option<(Arc<Mmap>, usize)>,
+}
+
+impl<'a> ViewCursor<'a> {
+    fn new(
+        bytes: &'a SectionBytes<'a>,
+        name: &'a str,
+        map: Option<&Arc<Mmap>>,
+    ) -> ViewCursor<'a> {
+        let src = match (map, bytes.container_off()) {
+            (Some(m), Some(off)) if cfg!(target_endian = "little") => {
+                Some((Arc::clone(m), off))
+            }
+            _ => None,
+        };
+        ViewCursor { r: ByteReader::new(bytes, name), src }
+    }
+
+    fn i8_arc(&mut self, n: usize) -> AResult<ArcSlice<i8>> {
+        match &self.src {
+            Some((m, base)) => {
+                let off = base + self.r.pos();
+                self.r.skip(n)?;
+                ArcSlice::view(m, off, n).ok_or_else(|| {
+                    malformed("i8 view escapes the mapping".to_string())
+                })
+            }
+            None => Ok(self.r.i8_vec(n)?.into()),
+        }
+    }
+
+    fn i64_arc(&mut self, n: usize) -> AResult<ArcSlice<i64>> {
+        match &self.src {
+            Some((m, base)) => {
+                let off = base + self.r.pos();
+                let bytes = n.checked_mul(8).ok_or_else(|| {
+                    malformed("i64 count overflow".to_string())
+                })?;
+                self.r.skip(bytes)?;
+                ArcSlice::view(m, off, n).ok_or_else(|| {
+                    malformed("i64 view escapes the mapping".to_string())
+                })
+            }
+            None => Ok(self.r.i64_vec(n)?.into()),
+        }
+    }
+
+    fn expect_end(&self) -> AResult<()> {
+        self.r.expect_end()
+    }
 }
 
 fn get_qparams(r: &mut ByteReader) -> AResult<QParams> {
@@ -358,7 +474,7 @@ fn get_conv(cur: &mut Cursors, node: usize) -> AResult<QConv> {
     };
     let per = checked_len(cig, kh * kw, &what)?;
     let w_len = checked_len(c_out, per, &what)?;
-    let w = cur.wgrid.i8_vec(w_len)?;
+    let w = cur.wgrid.i8_arc(w_len)?;
     let mut s_w = Vec::with_capacity(c_out);
     let mut zp_w = Vec::with_capacity(c_out);
     let mut bias_f = Vec::with_capacity(c_out);
@@ -367,14 +483,14 @@ fn get_conv(cur: &mut Cursors, node: usize) -> AResult<QConv> {
         zp_w.push(cur.qparams.i32()?);
         bias_f.push(cur.qparams.f32()?);
     }
-    let zp_corr = cur.bias.i64_vec(c_out)?;
+    let zp_corr = cur.bias.i64_arc(c_out)?;
     let epi = if has_epi {
         let out_qp = get_qparams(&mut cur.plan)?;
         check_act_qparams(&out_qp, &what)?;
         let zp_out = cur.plan.i32()?;
         let q_lo = cur.plan.i32()?;
         let q_hi = cur.plan.i32()?;
-        let bias_q = cur.bias.i64_vec(c_out)?;
+        let bias_q = cur.bias.i64_arc(c_out)?;
         let mut mult = Vec::with_capacity(c_out);
         for _ in 0..c_out {
             mult.push(get_mult(&mut cur.mult, &what)?);
@@ -416,7 +532,7 @@ fn get_linear(cur: &mut Cursors, node: usize) -> AResult<QLinear> {
     }
     let in_qp = get_qparams(&mut cur.plan)?;
     check_act_qparams(&in_qp, &what)?;
-    let wt = cur.wgrid.i8_vec(checked_len(in_dim, out_dim, &what)?)?;
+    let wt = cur.wgrid.i8_arc(checked_len(in_dim, out_dim, &what)?)?;
     let mut s_w = Vec::with_capacity(out_dim);
     let mut zp_w = Vec::with_capacity(out_dim);
     let mut bias = Vec::with_capacity(out_dim);
@@ -425,7 +541,7 @@ fn get_linear(cur: &mut Cursors, node: usize) -> AResult<QLinear> {
         zp_w.push(cur.qparams.i32()?);
         bias.push(cur.qparams.f32()?);
     }
-    let zp_corr = cur.bias.i64_vec(out_dim)?;
+    let zp_corr = cur.bias.i64_arc(out_dim)?;
     let mut lin = QLinear {
         in_dim,
         out_dim,
@@ -618,13 +734,18 @@ fn decode_plan(c: &ContainerReader) -> AResult<QModel> {
         Some(_) => Some(c.section(SEC_FALLBACK)?),
         None => None,
     };
+    // when the container is mmap-backed, the wgrid/bias cursors mint
+    // zero-copy views (raw sections only — a decompressed payload has
+    // no stable mapped region, so it stays owned)
+    let map = c.backing_mmap();
     let mut cur = Cursors {
-        plan: ByteReader::new(plan_bytes, SEC_PLAN),
-        wgrid: ByteReader::new(wgrid_bytes, SEC_WGRID),
-        qparams: ByteReader::new(qparams_bytes, SEC_QPARAMS),
-        bias: ByteReader::new(bias_bytes, SEC_BIAS),
-        mult: ByteReader::new(mult_bytes, SEC_MULT),
+        plan: ByteReader::new(&plan_bytes, SEC_PLAN),
+        wgrid: ViewCursor::new(&wgrid_bytes, SEC_WGRID, map),
+        qparams: ByteReader::new(&qparams_bytes, SEC_QPARAMS),
+        bias: ViewCursor::new(&bias_bytes, SEC_BIAS, map),
+        mult: ByteReader::new(&mult_bytes, SEC_MULT),
         fallback: fallback_bytes
+            .as_ref()
             .map(|b| ByteReader::new(b, SEC_FALLBACK)),
     };
 

@@ -285,6 +285,19 @@ fn meta_json(info: &ArtifactInfo) -> String {
 /// container image. Pure function of its inputs — no float math, no
 /// clock, no environment — so identical plans produce identical bytes.
 pub fn encode_qmodel(qm: &QModel, info: &ArtifactInfo) -> Vec<u8> {
+    encode_qmodel_opts(qm, info, false)
+}
+
+/// [`encode_qmodel`] with section compression control. `compress`
+/// stores the bulky `wgrid.i8` and `plan` sections as [`super::codec`]
+/// frames (per-section `FLAG_COMPRESSED` in the BOM) when that actually
+/// shrinks them; the small per-channel streams stay raw so mmap'd loads
+/// can still view `bias.i64` in place. Equally deterministic.
+pub fn encode_qmodel_opts(
+    qm: &QModel,
+    info: &ArtifactInfo,
+    compress: bool,
+) -> Vec<u8> {
     let mut s = Streams {
         plan: ByteWriter::new(),
         wgrid: ByteWriter::new(),
@@ -309,8 +322,13 @@ pub fn encode_qmodel(qm: &QModel, info: &ArtifactInfo) -> Vec<u8> {
 
     let mut c = ContainerWriter::new();
     c.push(SEC_META, meta_json(info).into_bytes());
-    c.push(SEC_PLAN, s.plan.buf);
-    c.push(SEC_WGRID, s.wgrid.buf);
+    if compress {
+        c.push_compressed(SEC_PLAN, s.plan.buf);
+        c.push_compressed(SEC_WGRID, s.wgrid.buf);
+    } else {
+        c.push(SEC_PLAN, s.plan.buf);
+        c.push(SEC_WGRID, s.wgrid.buf);
+    }
     c.push(SEC_QPARAMS, s.qparams.buf);
     c.push(SEC_BIAS, s.bias.buf);
     c.push(SEC_MULT, s.mult.buf);
@@ -347,9 +365,20 @@ pub fn write_artifact(
     opts: PlanOpts,
     path: impl AsRef<Path>,
 ) -> Result<ArtifactInfo> {
+    write_artifact_opts(q, opts, false, path)
+}
+
+/// [`write_artifact`] with section compression control (`dfq compile
+/// --compress`).
+pub fn write_artifact_opts(
+    q: &QuantizedModel,
+    opts: PlanOpts,
+    compress: bool,
+    path: impl AsRef<Path>,
+) -> Result<ArtifactInfo> {
     let qm = q.pack_int8_opts(opts)?;
     let mut info = info_for(q, &qm);
-    let bytes = encode_qmodel(&qm, &info);
+    let bytes = encode_qmodel_opts(&qm, &info, compress);
     info.bytes = bytes.len();
     std::fs::write(path.as_ref(), bytes).with_context(|| {
         format!("writing artifact {}", path.as_ref().display())

@@ -222,6 +222,16 @@ impl QuantizedModel {
     ) -> Result<crate::artifact::ArtifactInfo> {
         crate::artifact::write_artifact(self, opts, path)
     }
+
+    /// [`Self::save_artifact`] with the bulky sections (`wgrid.i8`,
+    /// `plan`) compressed in the container (`dfq compile --compress`).
+    pub fn save_artifact_compressed(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        opts: qengine::PlanOpts,
+    ) -> Result<crate::artifact::ArtifactInfo> {
+        crate::artifact::write_artifact_opts(self, opts, true, path)
+    }
 }
 
 impl Prepared {

@@ -50,6 +50,7 @@ fn usage() -> ! {
                     [--per-channel] [--symmetric] [--out FILE]\n\
            compile <arch> [--bits N] [--bc none|analytic|empirical]\n\
                    [--per-channel] [--symmetric] [--allow-fallback]\n\
+                   [--compress]        store weight grid + plan compressed\n\
                    [-o|--out FILE]     write a compiled .dfqm artifact\n\
            report <arch|fixture> [--bits N] [--bc none|analytic] [--json]\n\
                   per-pass DFQ diagnostics (spread, CLE trace, BC |db|);\n\
@@ -59,15 +60,17 @@ fn usage() -> ! {
                  [--backend pjrt|engine|qengine] [--autoscale]\n\
                  --autoscale: steer f32 <-> int8 from live metrics\n\
            serve --models DIR [--requests N] [--rate R] [--batch N]\n\
-                 [--watch] [--max-resident N]\n\
+                 [--watch] [--max-resident N] [--no-mmap]\n\
                  multi-model registry over compiled artifacts;\n\
                  --watch hot-swaps changed .dfqm files mid-run,\n\
-                 --max-resident caps loaded models (LRU eviction)\n\
+                 --max-resident caps loaded models (LRU eviction),\n\
+                 --no-mmap copies artifacts instead of memory-mapping\n\
            inspect <arch|artifact.dfqm>\n\
          \n\
          env: DFQ_ARTIFACTS (artifacts dir),\n\
               DFQ_BACKEND: serve=pjrt|engine|qengine, eval=pjrt|engine,\n\
-              DFQ_EVAL_LIMIT, DFQ_RESULTS (results dir)"
+              DFQ_EVAL_LIMIT, DFQ_RESULTS (results dir),\n\
+              DFQ_NO_MMAP=1 (force copy loads everywhere)"
     );
     std::process::exit(2);
 }
@@ -94,6 +97,8 @@ fn flags(rest: &[String]) -> (Vec<&String>, HashMap<String, String>) {
                     | "json"
                     | "autoscale"
                     | "watch"
+                    | "compress"
+                    | "no-mmap"
             );
             if boolean {
                 kv.insert(name.to_string(), "true".to_string());
@@ -221,7 +226,11 @@ fn cmd_compile(rest: &[String]) -> Result<()> {
         .get("out")
         .cloned()
         .unwrap_or_else(|| format!("{arch}_int{bits}_plan.dfqm"));
-    let info = q.save_artifact(&out, opts)?;
+    let info = if kv.contains_key("compress") {
+        q.save_artifact_compressed(&out, opts)?
+    } else {
+        q.save_artifact(&out, opts)?
+    };
     println!("compiled {}", info.summary());
     println!("saved artifact to {out}");
     Ok(())
@@ -366,6 +375,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 .transpose()?
                 .unwrap_or(0),
             watch: kv.contains_key("watch"),
+            mmap: !kv.contains_key("no-mmap"),
         };
         let snaps = dfq::serve::demo::run_registry_load(dir, opts)?;
         for (name, snap) in snaps {
@@ -401,6 +411,41 @@ fn cmd_inspect(rest: &[String]) -> Result<()> {
         let info = dfq::artifact::inspect(arch)?;
         println!("compiled artifact {arch}");
         println!("  {}", info.summary());
+        // per-section storage table: raw vs stored bytes, compression
+        // ratio, CRC over the stored bytes and the BOM flag word
+        let stats = dfq::artifact::section_table(arch)?;
+        println!(
+            "\n  {:<12} {:>10} {:>10} {:>6}  {:>8}  flags",
+            "section", "raw", "stored", "ratio", "crc32"
+        );
+        for s in &stats {
+            let raw = s.raw.unwrap_or(s.stored);
+            let ratio = if raw == 0 {
+                1.0
+            } else {
+                s.stored as f64 / raw as f64
+            };
+            let mut f = String::new();
+            if s.flags & dfq::artifact::format::FLAG_COMPRESSED != 0 {
+                f.push_str("compressed");
+            }
+            if f.is_empty() {
+                f.push_str("raw");
+            }
+            println!(
+                "  {:<12} {:>10} {:>10} {:>5.2}x  {:08x}  {}",
+                s.name, raw, s.stored, ratio, s.crc, f
+            );
+            let unknown = s.unknown_flags();
+            if unknown != 0 {
+                // newer writers may define more flag bits; surface them
+                // without failing the inspect
+                println!(
+                    "  warning: {} carries unknown flag bits {unknown:#x}",
+                    s.name
+                );
+            }
+        }
         return Ok(());
     }
     let manifest = Manifest::load(dfq::artifacts_dir())?;

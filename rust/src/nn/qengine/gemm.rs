@@ -20,10 +20,15 @@
 //!
 //! The register tile is `MR × NR = 4 × 16`: four GEMM rows against one
 //! 16-column weight panel, accumulated entirely in registers (2×ymm or
-//! 4×int32x4 per row). K is not blocked — with a 4×16 tile the
-//! accumulators never spill, and qengine K dimensions (`cig·kh·kw`) fit
-//! L1/L2 alongside one panel. Loops run panel-outer / row-block-inner so
-//! a panel stays cache-resident across all M.
+//! 4×int32x4 per row). Loops run panel-outer / k-slab / row-block-inner:
+//! K is blocked in [`KC`]-deep slabs so the active panel slab (≤ 16 KiB)
+//! stays L1-resident across the whole M sweep even when `cig·kh·kw`
+//! grows past the cache (deep pointwise convs, wide linear heads). The
+//! first slab *stores* its register tile, later slabs *load-add* —
+//! i32 wrapping addition is associative/commutative, so the slab
+//! regrouping of the k-sum is bitwise-invisible, and `KC` is even so
+//! slab boundaries never split an AVX2 k-pair (only the final slab may
+//! be odd, handled exactly like the old odd-k tail).
 //!
 //! Weight panels are packed once at plan-build time ([`PackedB`]):
 //!
@@ -143,6 +148,11 @@ pub fn kind_supported(kind: KernelKind) -> bool {
 pub(crate) const NR: usize = 16;
 /// Register-tile height (GEMM rows per inner-kernel call).
 pub(crate) const MR: usize = 4;
+/// K-dimension cache-blocking depth: one panel slab is `KC × NR` codes
+/// (16 KiB of i16 pairs on AVX2, 8 KiB of i8 on NEON), sized to sit in
+/// L1 alongside the activation rows. Must stay even — AVX2 panels
+/// interleave k-pairs, and an odd slab boundary would split one.
+pub(crate) const KC: usize = 512;
 
 /// A weight matrix re-laid-out for one SIMD kernel kind. Derived state:
 /// rebuilt from the canonical row-major `w` after plan build or artifact
@@ -565,7 +575,7 @@ pub(crate) fn dw_span8(
 
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
-    use super::{PackedB, SendCells, MR, NR};
+    use super::{PackedB, SendCells, KC, MR, NR};
     use std::arch::x86_64::*;
 
     /// # Safety
@@ -585,29 +595,53 @@ mod avx2 {
             let panel = panels.add(pn * kp * NR);
             let j0 = pn * NR;
             let width = NR.min(n - j0);
-            let mut i = lo;
-            while i + MR <= hi {
-                mk::<MR>(a.as_ptr().add(i * k), k, panel, cells.ptr_at(i * n + j0), n, width);
-                i += MR;
-            }
-            while i < hi {
-                mk::<1>(a.as_ptr().add(i * k), k, panel, cells.ptr_at(i * n + j0), n, width);
-                i += 1;
+            // k-slabs: KC is even, so a slab of the pair-interleaved
+            // panel starts at element offset k0·NR and only the final
+            // slab can carry an odd tail
+            let mut k0 = 0usize;
+            while k0 < k {
+                let klen = KC.min(k - k0);
+                let pslab = panel.add(k0 * NR);
+                let arow = a.as_ptr().add(k0);
+                let mut i = lo;
+                if k0 == 0 {
+                    while i + MR <= hi {
+                        mk::<MR, false>(arow.add(i * k), k, klen, pslab, cells.ptr_at(i * n + j0), n, width);
+                        i += MR;
+                    }
+                    while i < hi {
+                        mk::<1, false>(arow.add(i * k), k, klen, pslab, cells.ptr_at(i * n + j0), n, width);
+                        i += 1;
+                    }
+                } else {
+                    while i + MR <= hi {
+                        mk::<MR, true>(arow.add(i * k), k, klen, pslab, cells.ptr_at(i * n + j0), n, width);
+                        i += MR;
+                    }
+                    while i < hi {
+                        mk::<1, true>(arow.add(i * k), k, klen, pslab, cells.ptr_at(i * n + j0), n, width);
+                        i += 1;
+                    }
+                }
+                k0 += klen;
             }
         }
     }
 
-    /// `R × 16` register tile: two i32 ymm accumulators per row, one
-    /// broadcast activation pair per k-pair, `madd_epi16` dot products.
-    /// Stores (does not accumulate) the tile into `c` with row stride
-    /// `n`; `width < NR` spills through a stack buffer.
+    /// `R × 16` register tile over one k-slab: two i32 ymm accumulators
+    /// per row, one broadcast activation pair per k-pair, `madd_epi16`
+    /// dot products. `ACC = false` stores the tile into `c` (first
+    /// slab), `ACC = true` load-adds (later slabs); `width < NR` spills
+    /// through a stack buffer.
     ///
     /// # Safety
-    /// AVX2; `a` addresses `R` rows of stride `k`; `panel` holds
-    /// `kp × NR` i16s; `c` addresses an `R × width` tile of stride `n`.
+    /// AVX2; `a` addresses `R` rows of stride `stride` and at least `k`
+    /// valid codes each; `panel` holds `k.next_multiple_of(2) × NR`
+    /// i16s; `c` addresses an `R × width` tile of stride `n`.
     #[target_feature(enable = "avx2")]
-    unsafe fn mk<const R: usize>(
+    unsafe fn mk<const R: usize, const ACC: bool>(
         a: *const u8,
+        stride: usize,
         k: usize,
         panel: *const i16,
         c: *mut i32,
@@ -620,8 +654,8 @@ mod avx2 {
             let b_lo = _mm256_loadu_si256(panel.add(p * 2 * NR) as *const __m256i);
             let b_hi = _mm256_loadu_si256(panel.add(p * 2 * NR + NR) as *const __m256i);
             for r in 0..R {
-                let a0 = *a.add(r * k + 2 * p) as u32;
-                let a1 = *a.add(r * k + 2 * p + 1) as u32;
+                let a0 = *a.add(r * stride + 2 * p) as u32;
+                let a1 = *a.add(r * stride + 2 * p + 1) as u32;
                 let pair = (a0 | (a1 << 16)) as i32;
                 if pair == 0 {
                     continue; // adding zero to every lane is exact
@@ -636,7 +670,7 @@ mod avx2 {
             let b_lo = _mm256_loadu_si256(panel.add(pairs * 2 * NR) as *const __m256i);
             let b_hi = _mm256_loadu_si256(panel.add(pairs * 2 * NR + NR) as *const __m256i);
             for r in 0..R {
-                let a0 = *a.add(r * k + k - 1) as u32;
+                let a0 = *a.add(r * stride + k - 1) as u32;
                 if a0 == 0 {
                     continue;
                 }
@@ -647,15 +681,27 @@ mod avx2 {
         }
         if width == NR {
             for r in 0..R {
-                _mm256_storeu_si256(c.add(r * n) as *mut __m256i, acc[r][0]);
-                _mm256_storeu_si256(c.add(r * n + 8) as *mut __m256i, acc[r][1]);
+                let (p0, p1) = (c.add(r * n) as *mut __m256i, c.add(r * n + 8) as *mut __m256i);
+                let (mut v0, mut v1) = (acc[r][0], acc[r][1]);
+                if ACC {
+                    v0 = _mm256_add_epi32(_mm256_loadu_si256(p0), v0);
+                    v1 = _mm256_add_epi32(_mm256_loadu_si256(p1), v1);
+                }
+                _mm256_storeu_si256(p0, v0);
+                _mm256_storeu_si256(p1, v1);
             }
         } else {
             let mut buf = [0i32; NR];
             for r in 0..R {
                 _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc[r][0]);
                 _mm256_storeu_si256(buf.as_mut_ptr().add(8) as *mut __m256i, acc[r][1]);
-                std::ptr::copy_nonoverlapping(buf.as_ptr(), c.add(r * n), width);
+                if ACC {
+                    for (j, &v) in buf.iter().enumerate().take(width) {
+                        *c.add(r * n + j) = (*c.add(r * n + j)).wrapping_add(v);
+                    }
+                } else {
+                    std::ptr::copy_nonoverlapping(buf.as_ptr(), c.add(r * n), width);
+                }
             }
         }
     }
@@ -735,7 +781,7 @@ mod avx2 {
 
 #[cfg(target_arch = "aarch64")]
 mod neon {
-    use super::{PackedB, SendCells, MR, NR};
+    use super::{PackedB, SendCells, KC, MR, NR};
     use std::arch::aarch64::*;
 
     /// # Safety
@@ -755,28 +801,50 @@ mod neon {
             let panel = panels.add(pn * k * NR);
             let j0 = pn * NR;
             let width = NR.min(n - j0);
-            let mut i = lo;
-            while i + MR <= hi {
-                mk::<MR>(a.as_ptr().add(i * k), k, panel, cells.ptr_at(i * n + j0), n, width);
-                i += MR;
-            }
-            while i < hi {
-                mk::<1>(a.as_ptr().add(i * k), k, panel, cells.ptr_at(i * n + j0), n, width);
-                i += 1;
+            // k-slabs over the k-major panel: slab offset is k0·NR
+            let mut k0 = 0usize;
+            while k0 < k {
+                let klen = KC.min(k - k0);
+                let pslab = panel.add(k0 * NR);
+                let arow = a.as_ptr().add(k0);
+                let mut i = lo;
+                if k0 == 0 {
+                    while i + MR <= hi {
+                        mk::<MR, false>(arow.add(i * k), k, klen, pslab, cells.ptr_at(i * n + j0), n, width);
+                        i += MR;
+                    }
+                    while i < hi {
+                        mk::<1, false>(arow.add(i * k), k, klen, pslab, cells.ptr_at(i * n + j0), n, width);
+                        i += 1;
+                    }
+                } else {
+                    while i + MR <= hi {
+                        mk::<MR, true>(arow.add(i * k), k, klen, pslab, cells.ptr_at(i * n + j0), n, width);
+                        i += MR;
+                    }
+                    while i < hi {
+                        mk::<1, true>(arow.add(i * k), k, klen, pslab, cells.ptr_at(i * n + j0), n, width);
+                        i += 1;
+                    }
+                }
+                k0 += klen;
             }
         }
     }
 
-    /// `R × 16` register tile: four int32x4 accumulators per row,
-    /// `vmovl_s8`-widened panel rows, `vmlal_s16` against the broadcast
-    /// activation. Stores the tile into `c` with row stride `n`.
+    /// `R × 16` register tile over one k-slab: four int32x4 accumulators
+    /// per row, `vmovl_s8`-widened panel rows, `vmlal_s16` against the
+    /// broadcast activation. `ACC = false` stores the tile into `c`
+    /// (first slab), `ACC = true` load-adds (later slabs).
     ///
     /// # Safety
-    /// NEON; `a` addresses `R` rows of stride `k`; `panel` holds
-    /// `k × NR` i8s; `c` addresses an `R × width` tile of stride `n`.
+    /// NEON; `a` addresses `R` rows of stride `stride` and at least `k`
+    /// valid codes each; `panel` holds `k × NR` i8s; `c` addresses an
+    /// `R × width` tile of stride `n`.
     #[target_feature(enable = "neon")]
-    unsafe fn mk<const R: usize>(
+    unsafe fn mk<const R: usize, const ACC: bool>(
         a: *const u8,
+        stride: usize,
         k: usize,
         panel: *const i8,
         c: *mut i32,
@@ -789,7 +857,7 @@ mod neon {
             let b_lo = vmovl_s8(vget_low_s8(bv));
             let b_hi = vmovl_s8(vget_high_s8(bv));
             for r in 0..R {
-                let av = *a.add(r * k + kk);
+                let av = *a.add(r * stride + kk);
                 if av == 0 {
                     continue; // adding zero to every lane is exact
                 }
@@ -803,7 +871,9 @@ mod neon {
         if width == NR {
             for r in 0..R {
                 for (q, &v) in acc[r].iter().enumerate() {
-                    vst1q_s32(c.add(r * n + 4 * q), v);
+                    let p = c.add(r * n + 4 * q);
+                    let v = if ACC { vaddq_s32(vld1q_s32(p), v) } else { v };
+                    vst1q_s32(p, v);
                 }
             }
         } else {
@@ -812,7 +882,13 @@ mod neon {
                 for (q, &v) in acc[r].iter().enumerate() {
                     vst1q_s32(buf.as_mut_ptr().add(4 * q), v);
                 }
-                std::ptr::copy_nonoverlapping(buf.as_ptr(), c.add(r * n), width);
+                if ACC {
+                    for (j, &v) in buf.iter().enumerate().take(width) {
+                        *c.add(r * n + j) = (*c.add(r * n + j)).wrapping_add(v);
+                    }
+                } else {
+                    std::ptr::copy_nonoverlapping(buf.as_ptr(), c.add(r * n), width);
+                }
             }
         }
     }
@@ -940,6 +1016,32 @@ mod tests {
             (13, 64, 48),
             (2, 1, 16),
             (8, 18, 1),
+            // K-blocking: k > KC with exact-multiple, odd-tail and
+            // ragged-n shapes (2 and 4 slabs)
+            (3, 2 * KC, 16),
+            (5, KC + 1, 21),
+            (6, 3 * KC + 1, 17),
+        ] {
+            let (a, b) = random_case(&mut rng, m, k, n);
+            let mut want = vec![0i32; m * n];
+            qgemm_into_scalar(&a, &b, m, k, n, &mut want);
+            for kind in available_kinds() {
+                let mut got = vec![-1i32; m * n];
+                qgemm_into_kind(kind, &a, &b, m, k, n, &mut got);
+                assert_eq!(got, want, "{kind:?} diverged at ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn k_blocked_slabs_match_the_scalar_oracle_bitwise() {
+        // deep-K shapes force the multi-slab store/load-add path; the
+        // slab regrouping of the wrapping i32 k-sum must be invisible
+        let mut rng = Rng::new(9004);
+        for &(m, k, n) in &[
+            (1usize, KC + 1, 1usize), // single row, odd final slab
+            (MR, 2 * KC, NR),         // exact tiles, exact slabs
+            (MR + 1, 2 * KC + 7, NR + 3), // every tail at once
         ] {
             let (a, b) = random_case(&mut rng, m, k, n);
             let mut want = vec![0i32; m * n];

@@ -13,6 +13,7 @@ use crate::nn::SiteCfg;
 use crate::quant::QParams;
 use crate::tensor::{QTensor, Tensor};
 use crate::util::align::AVec;
+use crate::util::mmap::ArcSlice;
 use crate::util::parallel;
 
 use super::gemm::{self, KernelKind, PackedB};
@@ -269,7 +270,9 @@ pub(crate) fn fold_weight_grids(
 #[derive(Debug, Clone)]
 pub(crate) struct Epilogue {
     /// `round(b/(s_in·s_w)) - zp_in·colsum + K·zp_in·zp_w` per channel.
-    pub(crate) bias_q: Vec<i64>,
+    /// [`ArcSlice`] so artifact decode can alias the mapped `bias.i64`
+    /// section instead of copying it.
+    pub(crate) bias_q: ArcSlice<i64>,
     /// `s_in·s_w[o]/s_out` per channel.
     pub(crate) mult: Vec<Mult>,
     pub(crate) zp_out: i32,
@@ -296,7 +299,7 @@ fn make_epilogue(
         mult.push(mult_for(acc_scale / out_qp.scale as f64));
     }
     Epilogue {
-        bias_q,
+        bias_q: bias_q.into(),
         mult,
         zp_out: out_qp.zero_point as i32,
         q_lo,
@@ -318,13 +321,15 @@ pub struct QConv {
     pub(crate) pad: usize,
     pub(crate) groups: usize,
     /// groups == 1: transposed (kdim, c_out) for the GEMM;
-    /// depthwise: O-major (c, kh·kw).
-    pub(crate) w: Vec<i8>,
+    /// depthwise: O-major (c, kh·kw). [`ArcSlice`] so artifact decode
+    /// can alias the mmap'd `wgrid.i8` section (page-cache backed)
+    /// instead of copying it; pack paths store an owned vec.
+    pub(crate) w: ArcSlice<i8>,
     /// Signed-storage weight zero point (`zp_w - 128`) per out channel.
     pub(crate) zp_w: Vec<i32>,
     pub(crate) s_w: Vec<f32>,
     /// `-zp_in·colsum[o] + K·zp_in·zp_w[o]` per out channel.
-    pub(crate) zp_corr: Vec<i64>,
+    pub(crate) zp_corr: ArcSlice<i64>,
     pub(crate) bias_f: Vec<f32>,
     pub(crate) in_qp: QParams,
     pub(crate) epi: Option<Epilogue>,
@@ -406,10 +411,10 @@ impl QConv {
             stride,
             pad,
             groups,
-            w: fw.w,
+            w: fw.w.into(),
             zp_w: fw.zp_w,
             s_w: fw.s_w,
-            zp_corr: fw.zp_corr,
+            zp_corr: fw.zp_corr.into(),
             bias_f: bias.to_vec(),
             in_qp: *in_qp,
             epi,

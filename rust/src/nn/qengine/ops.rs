@@ -18,6 +18,7 @@ use crate::graph::{PoolKind, MAX_CONCAT_INPUTS, MAX_POOL_DIM};
 use crate::nn::SiteCfg;
 use crate::quant::QParams;
 use crate::tensor::{QTensor, Tensor};
+use crate::util::mmap::ArcSlice;
 
 use super::gemm::{self, KernelKind, PackedB};
 use super::kernels::{
@@ -382,12 +383,14 @@ pub struct QLinear {
     pub(crate) in_dim: usize,
     pub(crate) out_dim: usize,
     /// Transposed (in_dim, out_dim) i8 codes for the GEMM.
-    pub(crate) wt: Vec<i8>,
+    /// [`ArcSlice`] so artifact decode can alias the mmap'd `wgrid.i8`
+    /// section; the pack path stores an owned vec.
+    pub(crate) wt: ArcSlice<i8>,
     /// Signed-storage weight zero point (`zp_w - 128`) per output.
     pub(crate) zp_w: Vec<i32>,
     pub(crate) s_w: Vec<f32>,
     /// `-z_in·colsum[o] + I·z_in·zp_w[o]` per output.
-    pub(crate) zp_corr: Vec<i64>,
+    pub(crate) zp_corr: ArcSlice<i64>,
     pub(crate) bias: Vec<f32>,
     pub(crate) in_qp: QParams,
     /// Inner-kernel flavour (derived state, like the conv's — recorded
@@ -414,10 +417,10 @@ impl QLinear {
         let mut lin = QLinear {
             in_dim,
             out_dim,
-            wt: fw.w,
+            wt: fw.w.into(),
             zp_w: fw.zp_w,
             s_w: fw.s_w,
-            zp_corr: fw.zp_corr,
+            zp_corr: fw.zp_corr.into(),
             bias: bias.to_vec(),
             in_qp: *in_qp,
             kernel: KernelKind::Scalar,

@@ -190,6 +190,10 @@ pub struct RegistryLoadOpts {
     /// Poll the artifact files during the run and hot-swap any model
     /// whose `.dfqm` changed on disk (`dfq serve --models dir/ --watch`).
     pub watch: bool,
+    /// Load artifacts via [`crate::artifact::Artifact::open_mmap`]
+    /// (zero-copy weight views over the page cache, the default);
+    /// `dfq serve --models dir/ --no-mmap` clears it.
+    pub mmap: bool,
 }
 
 impl Default for RegistryLoadOpts {
@@ -200,6 +204,7 @@ impl Default for RegistryLoadOpts {
             batch: 64,
             max_resident: 0,
             watch: false,
+            mmap: true,
         }
     }
 }
@@ -215,13 +220,14 @@ pub fn run_registry_load(
     dir: &str,
     opts: RegistryLoadOpts,
 ) -> Result<Vec<(String, Snapshot)>> {
-    let RegistryLoadOpts { requests, rate, batch, max_resident, watch } =
+    let RegistryLoadOpts { requests, rate, batch, max_resident, watch, mmap } =
         opts;
     let mut reg = Registry::new(ServeConfig {
         max_batch: batch,
         max_delay: Duration::from_millis(3),
         queue_depth: 4096,
         max_resident,
+        mmap,
         ..ServeConfig::default()
     });
     let names = reg.scan_dir(dir)?;
@@ -240,9 +246,13 @@ pub fn run_registry_load(
         inputs.push(Tensor::new(&[1, c, h, w], data));
     }
     let mut pending = Vec::with_capacity(requests);
+    // dir-stamp debounce lets the watch tick run 4x as often as the old
+    // per-file poll for less stat traffic on quiet zoos: a quiet tick is
+    // one stat per artifact *directory*, not per artifact
+    let mut watch_db = crate::serve::WatchDebounce::new();
     for i in 0..requests {
-        if watch && i > 0 && i % 64 == 0 {
-            for (name, r) in reg.poll_files() {
+        if watch && i > 0 && i % 16 == 0 {
+            for (name, r) in reg.poll_files_debounced(&mut watch_db) {
                 match r {
                     Ok(()) => eprintln!("[serve] hot-swapped '{name}'"),
                     Err(e) => eprintln!(

@@ -42,7 +42,7 @@ pub use autoscale::{
     AdaptiveClient, AdaptiveReport, AutoscalePolicy, Autoscaler,
 };
 pub use metrics::{Metrics, Snapshot, WindowCursor};
-pub use registry::{LiveClient, ModelInfo, Registry};
+pub use registry::{LiveClient, ModelInfo, Registry, WatchDebounce};
 
 /// Anything that can run a padded batch of images.
 pub trait BatchExecutor {
@@ -187,6 +187,12 @@ pub struct ServeConfig {
     /// the least-recently-used resident one (gracefully — its queue
     /// drains first). `0` means unbounded.
     pub max_resident: usize,
+    /// Registry artifact loads go through [`crate::artifact::Artifact::open_mmap`]
+    /// (zero-copy weight views over a shared read-only mapping; the
+    /// page cache backs every resident model) instead of reading the
+    /// file into memory. On by default; `dfq serve --models DIR
+    /// --no-mmap` or `DFQ_NO_MMAP=1` turn it off.
+    pub mmap: bool,
 }
 
 impl Default for ServeConfig {
@@ -197,6 +203,7 @@ impl Default for ServeConfig {
             queue_depth: 1024,
             autoscale: None,
             max_resident: 0,
+            mmap: true,
         }
     }
 }

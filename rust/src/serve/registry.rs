@@ -99,6 +99,40 @@ fn stamp_of(source: &Source) -> Option<FileStamp> {
     }
 }
 
+fn dir_stamp(dir: &Path) -> Option<FileStamp> {
+    std::fs::metadata(dir)
+        .ok()
+        .map(|m| FileStamp { len: m.len(), mtime: m.modified().ok() })
+}
+
+/// Per-watcher state for [`Registry::poll_files_debounced`]: the last
+/// observed parent-directory stamps plus the quiet-call backoff
+/// schedule. One per watch loop; fresh state means the first call always
+/// runs a full poll.
+#[derive(Debug)]
+pub struct WatchDebounce {
+    /// Last observed `(len, mtime)` per watched parent directory
+    /// (`None` stamp = directory currently unreadable).
+    dirs: HashMap<PathBuf, Option<FileStamp>>,
+    /// Consecutive debounced calls since the last full per-file poll.
+    quiet: u32,
+    /// Quiet-call count that triggers the next full poll (doubles to a
+    /// cap of 8).
+    next_full: u32,
+}
+
+impl WatchDebounce {
+    pub fn new() -> WatchDebounce {
+        WatchDebounce { dirs: HashMap::new(), quiet: 0, next_full: 1 }
+    }
+}
+
+impl Default for WatchDebounce {
+    fn default() -> WatchDebounce {
+        WatchDebounce::new()
+    }
+}
+
 struct Entry {
     source: Source,
     hosted: Option<Hosted>,
@@ -466,6 +500,64 @@ impl Registry {
             .collect()
     }
 
+    /// [`Registry::poll_files`] behind a directory-level debounce: one
+    /// `stat` per *distinct parent directory* of the resident
+    /// artifact-backed models instead of one per file. A changed
+    /// directory stamp (a replace-by-rename deploy, a new or deleted
+    /// file) triggers an immediate full poll; an unchanged one falls
+    /// back to a doubling schedule of full polls (1, 2, 4, then every
+    /// 8th quiet call) so in-place rewrites — which do *not* bump the
+    /// parent's mtime — are still caught within at most 8 debounced
+    /// calls. With a 1000-model zoo on one directory, a quiet watch
+    /// tick costs 1 stat instead of 1000.
+    pub fn poll_files_debounced(
+        &mut self,
+        db: &mut WatchDebounce,
+    ) -> Vec<(String, Result<()>)> {
+        let dirs: Vec<PathBuf> = {
+            let mut v: Vec<PathBuf> = self
+                .entries
+                .values()
+                .filter(|e| e.hosted.is_some())
+                .filter_map(|e| match &e.source {
+                    Source::File(p) => {
+                        p.parent().map(|d| d.to_path_buf())
+                    }
+                    Source::Memory(_) => None,
+                })
+                .collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        let mut stamps = HashMap::with_capacity(dirs.len());
+        let mut changed = false;
+        for dir in dirs {
+            let now = dir_stamp(&dir);
+            if db.dirs.get(&dir) != Some(&now) {
+                changed = true;
+            }
+            stamps.insert(dir, now);
+        }
+        db.dirs = stamps;
+        if changed {
+            db.quiet = 0;
+            db.next_full = 1;
+            return self.poll_files();
+        }
+        db.quiet += 1;
+        if db.quiet < db.next_full {
+            return Vec::new(); // debounced: no per-file stats this call
+        }
+        db.quiet = 0;
+        db.next_full = (db.next_full * 2).min(8);
+        let swaps = self.poll_files();
+        if !swaps.is_empty() {
+            db.next_full = 1; // in-place writer active: poll eagerly
+        }
+        swaps
+    }
+
     /// Stop every live router; returns `(model, variant, snapshot)` per
     /// server generation — including generations retired earlier by
     /// evict/reload, so multi-generation totals add up.
@@ -596,7 +688,16 @@ fn load_entry(cfg: ServeConfig, name: &str, source: &Source) -> Result<Hosted> {
     let max_batch = cfg.max_batch;
     match source {
         Source::File(path) => {
-            let (ainfo, qmodel) = Artifact::open(path)?.into_parts();
+            // mmap by default: weight tensors become typed views into
+            // the page-cache-backed mapping, so N resident models (or N
+            // serving processes on one zoo) share physical weight pages
+            // and a cold boot skips the full-file read
+            let art = if cfg.mmap {
+                Artifact::open_mmap(path)?
+            } else {
+                Artifact::open(path)?
+            };
+            let (ainfo, qmodel) = art.into_parts();
             let plan = qmodel.summary();
             let mut router = Router::new();
             router.add(
@@ -814,6 +915,99 @@ mod tests {
         assert!(
             format!("{err:#}").contains("version"),
             "expected an UnsupportedVersion load error, got: {err:#}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn debounced_poll_catches_inplace_rewrites_via_backoff() {
+        let dir = temp_dir("debounce");
+        let path = dir.join("model.dfqm");
+        quantized(68)
+            .save_artifact(&path, PlanOpts::default())
+            .unwrap();
+        let mut reg = Registry::new(ServeConfig::default());
+        reg.register_file("model", &path).unwrap();
+        reg.client("model", VARIANT_INT8).unwrap(); // make it resident
+        let mut db = WatchDebounce::new();
+        // steady state: no change means no swaps, whichever schedule
+        // branch each call lands on
+        for _ in 0..4 {
+            assert!(reg.poll_files_debounced(&mut db).is_empty());
+        }
+        // in-place rewrite: the parent dir mtime does NOT change, so
+        // only the backoff schedule of full per-file polls can see it —
+        // within at most 8 debounced calls by construction
+        quantized(69)
+            .save_artifact(&path, PlanOpts::default())
+            .unwrap();
+        let swapped = (0..8).any(|_| {
+            reg.poll_files_debounced(&mut db)
+                .iter()
+                .any(|(n, r)| n == "model" && r.is_ok())
+        });
+        assert!(
+            swapped,
+            "in-place rewrite not caught within 8 debounced polls"
+        );
+        reg.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn debounced_poll_sees_rename_deploys_from_the_dir_stamp() {
+        let dir = temp_dir("debounce-mv");
+        let path = dir.join("model.dfqm");
+        quantized(70)
+            .save_artifact(&path, PlanOpts::default())
+            .unwrap();
+        let mut reg = Registry::new(ServeConfig::default());
+        reg.register_file("model", &path).unwrap();
+        reg.client("model", VARIANT_INT8).unwrap();
+        let mut db = WatchDebounce::new();
+        reg.poll_files_debounced(&mut db); // warm the dir stamps
+        // replace-by-rename (the recommended deploy): creating + renaming
+        // bumps the parent dir mtime, so the swap lands on the next
+        // debounced call without waiting out the backoff schedule
+        let tmp = dir.join("model.dfqm.tmp");
+        quantized(71).save_artifact(&tmp, PlanOpts::default()).unwrap();
+        std::fs::rename(&tmp, &path).unwrap();
+        let swapped = (0..2).any(|_| {
+            reg.poll_files_debounced(&mut db)
+                .iter()
+                .any(|(n, r)| n == "model" && r.is_ok())
+        });
+        assert!(swapped, "rename deploy not caught by the dir stamp");
+        reg.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mmap_and_copy_loads_serve_identical_logits() {
+        let dir = temp_dir("mmap-parity");
+        let q = quantized(72);
+        let path = dir.join("model.dfqm");
+        q.save_artifact(&path, PlanOpts::default()).unwrap();
+        let x = testutil::random_input(&q.model, 1, 11);
+        let mut got = Vec::new();
+        for mmap in [true, false] {
+            let mut reg = Registry::new(ServeConfig {
+                mmap,
+                ..ServeConfig::default()
+            });
+            reg.register_file("m", &path).unwrap();
+            got.push(
+                reg.client("m", VARIANT_INT8)
+                    .unwrap()
+                    .infer(x.clone())
+                    .unwrap(),
+            );
+            reg.shutdown();
+        }
+        assert_eq!(
+            got[0].data(),
+            got[1].data(),
+            "mmap-loaded registry output drifted from the copy load"
         );
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -1,0 +1,348 @@
+//! Minimal read-only memory mapping for zero-copy artifact loads.
+//!
+//! On unix targets [`Mmap::map`] maps the file with raw `mmap(2)` FFI —
+//! no external crate, the same vendoring discipline as `vendor/anyhow`.
+//! Elsewhere (and for empty files, which `mmap` rejects) it degrades to
+//! reading the file into an owned `Vec<u8>` with identical observable
+//! behaviour. [`ArcSlice`] layers a cheaply-cloneable typed slice on
+//! top: either an owned `Vec<T>`, or a `(Arc<Mmap>, offset, len)` view
+//! that keeps the mapping alive for as long as any tensor borrows from
+//! it — the page cache holds the weights; eviction drops only plan
+//! structs.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    /// `MAP_FAILED` is `(void*)-1` on every unix.
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+}
+
+/// A read-only byte view of a whole file: page-cache-backed on unix,
+/// an owned read elsewhere. Dereferences to `&[u8]`.
+pub struct Mmap {
+    inner: Inner,
+}
+
+enum Inner {
+    Owned(Vec<u8>),
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+}
+
+// SAFETY: a `Mapped` region is PROT_READ + MAP_PRIVATE — nothing can
+// write through it, and the kernel keeps the pages valid until the
+// `munmap` that only `Drop` issues. Shrinking the underlying file
+// while mapped is the one hazard (SIGBUS on a faulted-out page), which
+// is inherent to mmap'd IO and documented at the artifact API.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only.
+    pub fn map(path: &Path) -> io::Result<Mmap> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = fs::File::open(path)?;
+            let len = file.metadata()?.len();
+            if len == 0 {
+                // zero-length mmap is EINVAL; an empty Vec is identical
+                return Ok(Mmap { inner: Inner::Owned(Vec::new()) });
+            }
+            if len > usize::MAX as u64 {
+                return Err(io::Error::new(
+                    io::ErrorKind::OutOfMemory,
+                    "file larger than the address space",
+                ));
+            }
+            let len = len as usize;
+            // SAFETY: fd is a freshly opened readable file; a private
+            // read-only mapping of it aliases nothing we hand out
+            // mutably.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == sys::map_failed() || ptr.is_null() {
+                return Err(io::Error::last_os_error());
+            }
+            // the fd may close now: the mapping holds its own reference
+            Ok(Mmap { inner: Inner::Mapped { ptr: ptr as *const u8, len } })
+        }
+        #[cfg(not(unix))]
+        {
+            Ok(Mmap { inner: Inner::Owned(fs::read(path)?) })
+        }
+    }
+
+    /// Read `path` into an owned buffer behind the same interface —
+    /// the forced fallback path (`DFQ_NO_MMAP`, CI pinning).
+    pub fn read(path: &Path) -> io::Result<Mmap> {
+        Ok(Mmap { inner: Inner::Owned(fs::read(path)?) })
+    }
+
+    /// Whether the bytes are truly page-cache-backed (vs the owned
+    /// fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.inner {
+            Inner::Owned(_) => false,
+            #[cfg(unix)]
+            Inner::Mapped { .. } => true,
+        }
+    }
+}
+
+impl Deref for Mmap {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match &self.inner {
+            Inner::Owned(v) => v,
+            #[cfg(unix)]
+            Inner::Mapped { ptr, len } => {
+                // SAFETY: `ptr` is a live PROT_READ mapping of exactly
+                // `len` bytes (see `map`), unmapped only on drop.
+                unsafe { std::slice::from_raw_parts(*ptr, *len) }
+            }
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Inner::Mapped { ptr, len } = self.inner {
+            // SAFETY: this pointer/len pair came from a successful
+            // `mmap` and is unmapped exactly once.
+            unsafe {
+                sys::munmap(ptr as *mut std::os::raw::c_void, len);
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mmap({} B, mapped={})", self.len(), self.is_mapped())
+    }
+}
+
+/// A cheaply-cloneable slice of plain little-endian integer data
+/// (`i8`, `i64`, ...): either an owned `Vec<T>`, or a typed view into
+/// an [`Mmap`] kept alive by the `Arc`. Dereferences to `&[T]`, so
+/// every existing `&[T]` call site works by coercion.
+#[derive(Clone)]
+pub enum ArcSlice<T: Copy + 'static> {
+    Owned(Vec<T>),
+    Mapped {
+        map: Arc<Mmap>,
+        /// Byte offset of element 0 inside the mapping.
+        off: usize,
+        /// Element count.
+        len: usize,
+    },
+}
+
+impl<T: Copy + 'static> ArcSlice<T> {
+    /// A typed view of `len` elements at byte offset `off` inside the
+    /// mapping. Returns `None` when the range escapes the mapping (the
+    /// caller turns that into a typed artifact error). A misaligned
+    /// base — possible only through the owned-read fallback, whose
+    /// `Vec<u8>` has no alignment guarantee — degrades to an owned
+    /// element-wise copy rather than failing.
+    ///
+    /// Only sound for plain integer `T` whose in-file bytes are the
+    /// host representation (little-endian targets; the artifact reader
+    /// gates on `cfg!(target_endian)`).
+    pub fn view(map: &Arc<Mmap>, off: usize, len: usize) -> Option<ArcSlice<T>> {
+        let bytes = len.checked_mul(std::mem::size_of::<T>())?;
+        let end = off.checked_add(bytes)?;
+        if end > map.len() {
+            return None;
+        }
+        // SAFETY: off..end is in bounds (checked above).
+        let ptr = unsafe { map.as_ptr().add(off) } as *const T;
+        if (ptr as usize) % std::mem::align_of::<T>() == 0 {
+            Some(ArcSlice::Mapped { map: Arc::clone(map), off, len })
+        } else {
+            let mut v = Vec::with_capacity(len);
+            for i in 0..len {
+                // SAFETY: every element lies inside the checked range;
+                // unaligned reads of plain integers are always valid.
+                v.push(unsafe { std::ptr::read_unaligned(ptr.add(i)) });
+            }
+            Some(ArcSlice::Owned(v))
+        }
+    }
+
+    /// Whether this slice borrows from a live mapping (vs owning).
+    pub fn is_view(&self) -> bool {
+        matches!(self, ArcSlice::Mapped { .. })
+    }
+}
+
+impl<T: Copy + 'static> Deref for ArcSlice<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match self {
+            ArcSlice::Owned(v) => v,
+            ArcSlice::Mapped { map, off, len } => {
+                // SAFETY: bounds and alignment were checked in `view`;
+                // the `Arc` keeps the mapping alive for `&self`'s
+                // lifetime.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        map.as_ptr().add(*off) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl<T: Copy + 'static> Default for ArcSlice<T> {
+    fn default() -> Self {
+        ArcSlice::Owned(Vec::new())
+    }
+}
+
+impl<T: Copy + 'static> From<Vec<T>> for ArcSlice<T> {
+    fn from(v: Vec<T>) -> Self {
+        ArcSlice::Owned(v)
+    }
+}
+
+impl<T: Copy + fmt::Debug + 'static> fmt::Debug for ArcSlice<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let tag = if self.is_view() { "view" } else { "owned" };
+        write!(f, "ArcSlice::{tag}({} elems)", self.len())
+    }
+}
+
+impl<T: Copy + PartialEq + 'static> PartialEq for ArcSlice<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_file(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("dfq_mmap_{tag}_{}", std::process::id()));
+        fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn mapped_bytes_match_read_bytes() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
+        let p = temp_file("bytes", &data);
+        let m = Mmap::map(&p).unwrap();
+        assert_eq!(&m[..], &data[..]);
+        #[cfg(unix)]
+        assert!(m.is_mapped());
+        let owned = Mmap::read(&p).unwrap();
+        assert!(!owned.is_mapped());
+        assert_eq!(&owned[..], &data[..]);
+        fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let p = temp_file("empty", &[]);
+        let m = Mmap::map(&p).unwrap();
+        assert_eq!(m.len(), 0);
+        assert!(!m.is_mapped(), "empty files use the owned fallback");
+        fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(Mmap::map(Path::new("/no/such/dfq_mmap_file")).is_err());
+    }
+
+    #[test]
+    fn typed_views_and_bounds() {
+        let mut bytes = Vec::new();
+        for v in [1i64, -2, 3_000_000_000, i64::MIN] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = temp_file("views", &bytes);
+        let m = Arc::new(Mmap::map(&p).unwrap());
+        let s: ArcSlice<i64> = ArcSlice::view(&m, 0, 4).unwrap();
+        assert_eq!(&s[..], &[1, -2, 3_000_000_000, i64::MIN]);
+        let b: ArcSlice<i8> = ArcSlice::view(&m, 0, 32).unwrap();
+        assert_eq!(b.len(), 32);
+        assert!(ArcSlice::<i64>::view(&m, 0, 5).is_none(), "past the end");
+        assert!(ArcSlice::<i8>::view(&m, 33, 1).is_none(), "bad offset");
+        // a clone keeps the mapping alive after the original drops
+        let c = s.clone();
+        drop(s);
+        drop(m);
+        assert_eq!(c[3], i64::MIN);
+        fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn misaligned_view_degrades_to_owned_copy() {
+        let mut bytes = vec![0u8; 4]; // shift i64 payload off alignment
+        bytes.extend_from_slice(&(-7i64).to_le_bytes());
+        let p = temp_file("misaligned", &bytes);
+        let m = Arc::new(Mmap::map(&p).unwrap());
+        let s: ArcSlice<i64> = ArcSlice::view(&m, 4, 1).unwrap();
+        assert!(!s.is_view());
+        assert_eq!(s[0], -7);
+        fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn owned_round_trip() {
+        let s: ArcSlice<i8> = vec![1i8, -2, 3].into();
+        assert_eq!(&s[..], &[1, -2, 3]);
+        assert!(!s.is_view());
+        assert_eq!(s, s.clone());
+        assert_eq!(ArcSlice::<i8>::default().len(), 0);
+    }
+
+    #[test]
+    fn mmap_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Mmap>();
+        assert_send_sync::<ArcSlice<i8>>();
+        assert_send_sync::<ArcSlice<i64>>();
+    }
+}

@@ -5,6 +5,7 @@
 pub mod align;
 pub mod bench;
 pub mod json;
+pub mod mmap;
 pub mod parallel;
 pub mod rng;
 pub mod stats;

@@ -1,16 +1,18 @@
 //! Artifact round-trip properties: compile → write → read → plan must be
 //! bitwise-identical to the in-memory pipeline across models and
-//! quantisation schemes; corrupt files must surface as typed
-//! [`ArtifactError`]s, never panics; and the registry must serve several
-//! reloaded models concurrently with unchanged outputs.
+//! quantisation schemes — through the owned-copy decode *and* the
+//! zero-copy mmap decode, compressed or not; corrupt files must surface
+//! as typed [`ArtifactError`]s, never panics; and the registry must
+//! serve several reloaded models concurrently with unchanged outputs.
 
 use std::path::PathBuf;
 
-use dfq::artifact::{Artifact, ArtifactError};
+use dfq::artifact::{crc32, section_table, Artifact, ArtifactError};
 use dfq::dfq::{quantize_data_free, testutil, BiasCorrMode, DfqConfig};
 use dfq::nn::qengine::{PlanOpts, QModel};
 use dfq::quant::QScheme;
 use dfq::serve::{registry, Registry, ServeConfig};
+use dfq::util::rng::Rng;
 
 fn temp_dir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir()
@@ -77,6 +79,19 @@ fn roundtrip_is_bitwise_identical_across_schemes() {
                         b.data(),
                         "{mname}/{sname} seed {seed}: reloaded plan \
                          drifted bitwise"
+                    );
+                }
+                // the zero-copy mmap decode must match too: same file,
+                // tensors served as views into the mapping
+                let qm_map = QModel::from_artifact_mmap(&path).unwrap();
+                let y_map = qm_map.run_all(&x).unwrap();
+                assert_eq!(y_mem.len(), y_map.len());
+                for (a, b) in y_mem.iter().zip(&y_map) {
+                    assert_eq!(
+                        a.data(),
+                        b.data(),
+                        "{mname}/{sname} seed {seed}: mmap-loaded plan \
+                         drifted from the copy load"
                     );
                 }
                 cases += 1;
@@ -244,5 +259,295 @@ fn corrupt_artifacts_yield_typed_errors() {
     assert!(reg.client("bad", registry::VARIANT_INT8).is_err());
     reg.shutdown();
 
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Locate one section's table entry in a raw container image. Layout
+/// facts from `artifact::format`: 16-byte header, then 40-byte entries
+/// of `{name[16], offset u64, size u64, crc u32, flags u32}`.
+fn find_entry(bytes: &[u8], name: &str) -> (usize, usize, usize) {
+    let n = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    for i in 0..n {
+        let base = 16 + i * 40;
+        let raw = &bytes[base..base + 16];
+        let end = raw.iter().position(|&b| b == 0).unwrap_or(16);
+        if &raw[..end] == name.as_bytes() {
+            let off = u64::from_le_bytes(
+                bytes[base + 16..base + 24].try_into().unwrap(),
+            ) as usize;
+            let size = u64::from_le_bytes(
+                bytes[base + 24..base + 32].try_into().unwrap(),
+            ) as usize;
+            return (base, off, size);
+        }
+    }
+    panic!("section '{name}' not found in container");
+}
+
+/// `--compress` artifacts: the weight grid stores smaller than raw,
+/// and all three load paths (copy of a plain file, copy of a
+/// compressed file, mmap of a compressed file) produce bitwise-equal
+/// logits on both the residual and the branchy fixture.
+#[test]
+fn compressed_artifacts_shrink_wgrid_and_stay_bitwise() {
+    let dir = temp_dir("compress");
+    let models = [
+        ("resblock", testutil::residual_block_model(501)),
+        ("inception", testutil::inception_block_model(502)),
+    ];
+    for (mname, model) in models {
+        let q = quantize(&model, &QScheme::int8_asymmetric(), 8);
+        let plain = dir.join(format!("{mname}.dfqm"));
+        let packed = dir.join(format!("{mname}_z.dfqm"));
+        let opts = PlanOpts { int8_only: true, ..Default::default() };
+        q.save_artifact(&plain, opts).unwrap();
+        q.save_artifact_compressed(&packed, opts).unwrap();
+
+        let stats = section_table(&packed).unwrap();
+        let wg = stats.iter().find(|s| s.name == "wgrid.i8").unwrap();
+        assert_eq!(
+            wg.flags & dfq::artifact::format::FLAG_COMPRESSED,
+            dfq::artifact::format::FLAG_COMPRESSED,
+            "{mname}: int8 weight codes must actually compress"
+        );
+        let raw = wg.raw.expect("frame header must be readable");
+        assert!(
+            wg.stored < raw,
+            "{mname}: wgrid.i8 stored {} >= raw {raw}",
+            wg.stored
+        );
+        assert_eq!(wg.unknown_flags(), 0);
+
+        let x = testutil::random_input(&model, 2, 503);
+        let y_plain =
+            QModel::from_artifact(&plain).unwrap().run_all(&x).unwrap();
+        let y_packed =
+            QModel::from_artifact(&packed).unwrap().run_all(&x).unwrap();
+        let y_packed_map = QModel::from_artifact_mmap(&packed)
+            .unwrap()
+            .run_all(&x)
+            .unwrap();
+        for (a, b) in y_plain.iter().zip(&y_packed) {
+            assert_eq!(a.data(), b.data(), "{mname}: compression drifted");
+        }
+        for (a, b) in y_plain.iter().zip(&y_packed_map) {
+            assert_eq!(a.data(), b.data(), "{mname}: mmap decode drifted");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The corruption matrix again, through the mmap open path: a mapping
+/// that ends before a section does (truncated file), damaged magic and
+/// flipped payload bytes must all surface as the same typed errors the
+/// owned-copy path reports — never a fault against the mapping.
+#[test]
+fn corrupt_artifacts_yield_typed_errors_via_mmap() {
+    let dir = temp_dir("mmapcorrupt");
+    let model = testutil::residual_block_model(601);
+    let q = quantize(&model, &QScheme::int8_asymmetric(), 8);
+    let path = dir.join("good.dfqm");
+    q.save_artifact(&path, PlanOpts::default()).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    let write = |tag: &str, bytes: &[u8]| -> PathBuf {
+        let p = dir.join(format!("{tag}.dfqm"));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    };
+
+    // the good file maps and decodes
+    assert!(Artifact::open_mmap_typed(&path).is_ok());
+
+    // truncated mapping at several depths: header, table, payloads
+    for keep in [8, 40, good.len() / 2, good.len() - 9] {
+        let p = write(&format!("trunc{keep}"), &good[..keep]);
+        let err = Artifact::open_mmap_typed(&p).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                ArtifactError::Truncated { .. }
+                    | ArtifactError::CrcMismatch { .. }
+            ),
+            "mmap of {keep}-byte truncation gave {err}"
+        );
+    }
+
+    let mut bad = good.clone();
+    bad[0..4].copy_from_slice(b"XXXX");
+    assert!(matches!(
+        Artifact::open_mmap_typed(&write("magic", &bad)),
+        Err(ArtifactError::BadMagic { .. })
+    ));
+
+    let mut bad = good.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x55;
+    assert!(matches!(
+        Artifact::open_mmap_typed(&write("crc", &bad)),
+        Err(ArtifactError::CrcMismatch { .. })
+    ));
+
+    assert!(matches!(
+        Artifact::open_mmap_typed(&dir.join("nonexistent.dfqm")),
+        Err(ArtifactError::Io { .. })
+    ));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Compressed-section damage stays typed: bit flips in the stored
+/// frame trip the CRC *before* the codec runs; a tampered frame header
+/// (decompressed-length mismatch, bogus block count) behind a patched
+/// CRC fails structurally; and flag-bit corruption — compressed bit on
+/// a raw section, or an unknown future bit — is either a typed error
+/// or tolerated, never a panic.
+#[test]
+fn compressed_section_corruption_is_typed_never_a_panic() {
+    let dir = temp_dir("zcorrupt");
+    let model = testutil::residual_block_model(701);
+    let q = quantize(&model, &QScheme::int8_asymmetric(), 8);
+    let path = dir.join("z.dfqm");
+    q.save_artifact_compressed(&path, PlanOpts { int8_only: true, ..Default::default() })
+        .unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let (base, off, size) = find_entry(&good, "wgrid.i8");
+    let flags =
+        u32::from_le_bytes(good[base + 36..base + 40].try_into().unwrap());
+    assert_eq!(flags, dfq::artifact::format::FLAG_COMPRESSED);
+
+    let write = |tag: &str, bytes: &[u8]| -> PathBuf {
+        let p = dir.join(format!("{tag}.dfqm"));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    };
+    let patch_crc = |bytes: &mut [u8]| {
+        let crc = crc32(&bytes[off..off + size]);
+        bytes[base + 32..base + 36].copy_from_slice(&crc.to_le_bytes());
+    };
+
+    // bit flips across the compressed payload: the CRC over the stored
+    // bytes catches every one before decompression is attempted
+    for (i, at) in
+        [off, off + size / 3, off + size / 2, off + size - 1].iter().enumerate()
+    {
+        let mut bad = good.clone();
+        bad[*at] ^= 1 << (i % 8).max(1);
+        assert!(
+            matches!(
+                Artifact::open_typed(&write(&format!("flip{i}"), &bad)),
+                Err(ArtifactError::CrcMismatch { .. })
+            ),
+            "flip at stored byte {at} must trip the section CRC"
+        );
+    }
+
+    // decompressed-length mismatch: bump the frame's raw_len (first u32
+    // of the frame) and re-CRC so the codec actually runs
+    let mut bad = good.clone();
+    let raw_len = u32::from_le_bytes(bad[off..off + 4].try_into().unwrap());
+    bad[off..off + 4].copy_from_slice(&(raw_len + 1).to_le_bytes());
+    patch_crc(&mut bad);
+    let err = Artifact::open_typed(&write("rawlen", &bad)).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            ArtifactError::Malformed { .. } | ArtifactError::Truncated { .. }
+        ),
+        "raw_len mismatch gave {err}"
+    );
+
+    // bogus block count behind a valid CRC
+    let mut bad = good.clone();
+    bad[off + 4..off + 8].copy_from_slice(&0xFFFFu32.to_le_bytes());
+    patch_crc(&mut bad);
+    let err = Artifact::open_typed(&write("blocks", &bad)).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            ArtifactError::Malformed { .. } | ArtifactError::Truncated { .. }
+        ),
+        "bogus block count gave {err}"
+    );
+
+    // flag-bit corruption: marking a *raw* section compressed feeds
+    // non-frame bytes to the codec — typed error, not a panic
+    let mut bad = good.clone();
+    let (bbase, _, _) = find_entry(&good, "bias.i64");
+    let bflags =
+        u32::from_le_bytes(bad[bbase + 36..bbase + 40].try_into().unwrap());
+    assert_eq!(bflags, 0, "bias stays raw so mmap views can point at it");
+    bad[bbase + 36..bbase + 40].copy_from_slice(&1u32.to_le_bytes());
+    let err = Artifact::open_typed(&write("flagbit", &bad)).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            ArtifactError::Malformed { .. } | ArtifactError::Truncated { .. }
+        ),
+        "compressed-flag on a raw section gave {err}"
+    );
+
+    // an unknown future flag bit is tolerated by both load paths
+    let mut fwd = good.clone();
+    fwd[base + 36..base + 40]
+        .copy_from_slice(&(flags | 8).to_le_bytes());
+    let p = write("future", &fwd);
+    assert!(Artifact::open_typed(&p).is_ok());
+    assert!(Artifact::open_mmap_typed(&p).is_ok());
+    let stats = section_table(&p).unwrap();
+    let wg = stats.iter().find(|s| s.name == "wgrid.i8").unwrap();
+    assert_eq!(wg.unknown_flags(), 8, "inspect reports the unknown bit");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Codec property test: compress → decompress is the identity on
+/// random streams across the block-size edge cases, and on the *real*
+/// int8 weight-grid bytes of a compiled fixture — where the entropy
+/// coder must also actually shrink the section.
+#[test]
+fn codec_roundtrips_random_and_real_weight_sections() {
+    use dfq::artifact::codec::{compress, decompress};
+    let mut rng = Rng::new(909);
+    // lengths straddling the 128 KiB block boundary, plus degenerate
+    // sizes; content mixes zero runs, repeats and noise so both the LZ
+    // and the literal coder paths run
+    for len in
+        [0usize, 1, 2, 3, 64, 65, 4095, (1 << 17) - 1, 1 << 17, (1 << 17) + 1]
+    {
+        let data: Vec<u8> = (0..len)
+            .map(|i| match (i / 97) % 3 {
+                0 => 0u8,
+                1 => (i % 11) as u8,
+                _ => rng.below(256) as u8,
+            })
+            .collect();
+        let z = compress(&data);
+        assert_eq!(decompress(&z).unwrap(), data, "len {len} round trip");
+    }
+
+    // pure noise must survive too (stored as RAW blocks internally)
+    let noise: Vec<u8> = (0..50_000).map(|_| rng.below(256) as u8).collect();
+    assert_eq!(decompress(&compress(&noise)).unwrap(), noise);
+
+    // the real weight grid: near-Gaussian int8 codes, ~7 bit entropy —
+    // the acceptance criterion is stored < raw on exactly these bytes
+    let dir = temp_dir("codecreal");
+    let model = testutil::residual_block_model(801);
+    let q = quantize(&model, &QScheme::int8_asymmetric(), 8);
+    let path = dir.join("plain.dfqm");
+    q.save_artifact(&path, PlanOpts { int8_only: true, ..Default::default() })
+        .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let (_, off, size) = find_entry(&bytes, "wgrid.i8");
+    let wgrid = &bytes[off..off + size];
+    let z = compress(wgrid);
+    assert!(
+        z.len() < wgrid.len(),
+        "weight grid must shrink: {} -> {}",
+        wgrid.len(),
+        z.len()
+    );
+    assert_eq!(decompress(&z).unwrap(), wgrid, "weight grid round trip");
     std::fs::remove_dir_all(&dir).ok();
 }
