@@ -245,7 +245,7 @@ fn autoscale_bench() {
     reg.register_quantized("resblock", q).unwrap();
     let client = reg.adaptive_client("resblock").unwrap();
     let failed =
-        dfq::serve::demo::drive_adaptive(&client, &[x], 96, 400.0, 64)
+        dfq::serve::demo::drive_adaptive(&client, &[x], 96, 400.0, 64, 4242)
             .unwrap();
     assert_eq!(failed, 0, "autoscale run dropped {failed} request(s)");
     let report = client.report();
@@ -269,17 +269,63 @@ fn autoscale_bench() {
     }
 }
 
+/// Observability-overhead instrument: the same int8 plan run with the
+/// trace ring + per-op profiling off vs on, over identical inputs. Two
+/// falsifiable claims: the instrumented run stays bitwise-identical to
+/// the plain one, and the on/off mean-latency ratio lands in the JSON
+/// record so regressions diff mechanically. Manifest-free, so it runs
+/// under `--quick` (the CI smoke step).
+fn observability_overhead_bench() -> Vec<String> {
+    section("observability — trace + per-op profile overhead");
+    let q = quantize_resblock(94);
+    let x = testutil::random_input(&q.model, 4, 9);
+    let plain = PlanOpts { int8_only: true, ..Default::default() };
+    let qm_off = q.pack_int8_opts(plain).unwrap();
+    let qm_on = q
+        .pack_int8_opts(PlanOpts { profile: true, ..plain })
+        .unwrap();
+    let was = dfq::obs::trace::enabled();
+    dfq::obs::trace::set_enabled(false);
+    let off = Bench::new("obs/trace-profile-off").run(|| {
+        std::hint::black_box(qm_off.run(&x).unwrap());
+    });
+    off.print().print_json();
+    dfq::obs::trace::set_enabled(true);
+    let on = Bench::new("obs/trace-profile-on").run(|| {
+        std::hint::black_box(qm_on.run(&x).unwrap());
+    });
+    on.print().print_json();
+    // instrumentation must not change the math: bitwise-identical logits
+    let a = qm_off.run(&x).unwrap();
+    let b = qm_on.run(&x).unwrap();
+    dfq::obs::trace::set_enabled(was);
+    assert_eq!(a.data(), b.data(), "profiled run drifted from plain run");
+    let prof = qm_on.profile().expect("profiling was on");
+    assert!(prof.runs > 0 && prof.secs() > 0.0, "profile stayed empty");
+    let ratio = on.secs.mean / off.secs.mean;
+    println!("trace+profile on/off mean-latency ratio: {ratio:.3}x");
+    let rec = format!(
+        "{{\"name\":\"serve/obs-overhead\",\"off_mean_s\":{:.9},\
+         \"on_mean_s\":{:.9},\"on_off_ratio\":{ratio:.4}}}",
+        off.secs.mean, on.secs.mean,
+    );
+    println!("{rec}");
+    vec![off.json(), on.json(), rec]
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     if quick {
         std::env::set_var("DFQ_BENCH_FAST", "1");
     }
-    let records = artifact_boot_bench();
+    let mut records = artifact_boot_bench();
+    records.extend(observability_overhead_bench());
     registry_hot_swap_bench();
     autoscale_bench();
     // persist the boot-comparison records (recompile / copy load / mmap
-    // load / evict+reload) for mechanical diffing across runs — same
-    // JSON-lines format as BENCH_qengine.json; CI uploads it
+    // load / evict+reload) plus the observability-overhead records for
+    // mechanical diffing across runs — same JSON-lines format as
+    // BENCH_qengine.json; CI uploads it
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
     let mut body = records.join("\n");
     body.push('\n');
@@ -312,6 +358,8 @@ fn main() {
             rate,
             64,
             backend,
+            4242,
+            None,
         ) {
             Ok(s) => println!("rate {rate:>6.0} req/s -> {}", s.report()),
             Err(e) => eprintln!("rate {rate}: {e:#}"),
@@ -329,6 +377,8 @@ fn main() {
             500.0,
             batch,
             backend,
+            4242,
+            None,
         ) {
             Ok(s) => println!("batch {batch:>3} -> {}", s.report()),
             Err(e) => eprintln!("batch {batch}: {e:#}"),

@@ -57,7 +57,9 @@ impl Artifact {
     /// malformed content).
     pub fn open_typed(path: &Path) -> AResult<Artifact> {
         let c = ContainerReader::open(path)?;
-        Artifact::decode(&c)
+        let art = Artifact::decode(&c)?;
+        trace_open(path, "copy", &c);
+        Ok(art)
     }
 
     /// [`Artifact::open_typed`] with the error erased into the crate's
@@ -87,7 +89,9 @@ impl Artifact {
             msg: e.to_string(),
         })?;
         let c = ContainerReader::parse_mmap(Arc::new(map))?;
-        Artifact::decode(&c)
+        let art = Artifact::decode(&c)?;
+        trace_open(path, "mmap", &c);
+        Ok(art)
     }
 
     /// [`Artifact::open_mmap_typed`] with the error erased.
@@ -154,6 +158,32 @@ impl QModel {
     pub fn from_artifact_mmap(path: impl AsRef<Path>) -> Result<QModel> {
         Ok(Artifact::open_mmap_typed(path.as_ref())?.into_qmodel())
     }
+}
+
+/// Trace one successful artifact open: storage mode (mmap vs copy) and
+/// how many sections were stored compressed (those decode at load and
+/// cannot serve as zero-copy views). Free when tracing is disabled.
+fn trace_open(path: &Path, mode: &'static str, c: &ContainerReader) {
+    crate::obs::trace::emit_with(
+        crate::obs::trace::Severity::Info,
+        "artifact",
+        || {
+            let stats = c.section_stats();
+            let compressed = stats
+                .iter()
+                .filter(|s| s.flags & super::format::FLAG_COMPRESSED != 0)
+                .count();
+            (
+                "open".into(),
+                vec![
+                    ("path", path.display().to_string()),
+                    ("mode", mode.to_string()),
+                    ("sections", stats.len().to_string()),
+                    ("compressed_sections", compressed.to_string()),
+                ],
+            )
+        },
+    );
 }
 
 /// `DFQ_NO_MMAP` (any non-empty value other than `0`) pins every
@@ -870,5 +900,13 @@ fn decode_plan(c: &ContainerReader) -> AResult<QModel> {
         )));
     }
 
-    Ok(QModel { ops, slots, outputs, int_layers, f32_layers, fallbacks })
+    Ok(QModel {
+        ops,
+        slots,
+        outputs,
+        int_layers,
+        f32_layers,
+        fallbacks,
+        profile: None,
+    })
 }

@@ -118,7 +118,11 @@
 //! (batching servers, router, the [`serve::autoscale`] variant
 //! autoscaler, and the multi-model registry with hot-swap/eviction
 //! lifecycle) → [`runtime`] (PJRT), with [`eval`]/[`experiments`]
-//! reproducing the paper's tables.
+//! reproducing the paper's tables. Cross-cutting: [`obs`] — the
+//! observability layer (bounded event tracing, log-bucket latency
+//! histograms behind [`serve::Metrics`], Prometheus-style/JSON export)
+//! and the per-op runtime profile [`nn::qengine::RunProfile`]
+//! (`dfq profile`, the runtime twin of `dfq report`).
 
 pub mod artifact;
 pub mod dfq;
@@ -126,6 +130,7 @@ pub mod eval;
 pub mod experiments;
 pub mod graph;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

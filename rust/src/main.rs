@@ -9,6 +9,8 @@
 //! compile <arch> [...]  run DFQ once, write a compiled .dfqm artifact
 //! report <arch> [...]   run the instrumented pass pipeline, print the
 //!                       per-pass diagnostics table (or JSON records)
+//! profile <arch> [...]  run the int8 plan with per-op profiling and
+//!                       print the time/bytes/kernel table (or JSON)
 //! eval <arch> [...]     evaluate a model (fp32 / int8 / dfq variants)
 //! serve <arch> [...]    start the batching server + synthetic load
 //!                       (--autoscale steers f32 <-> int8 adaptively)
@@ -55,22 +57,32 @@ fn usage() -> ! {
            report <arch|fixture> [--bits N] [--bc none|analytic] [--json]\n\
                   per-pass DFQ diagnostics (spread, CLE trace, BC |db|);\n\
                   fixtures: two_layer | resblock | inception\n\
+           profile <arch|fixture> [--runs N] [--json]\n\
+                  per-op runtime profile of the int8 plan (wall time,\n\
+                  activation bytes, GEMM calls per kernel flavour);\n\
+                  --json fails loudly on any plan fallback\n\
            eval <arch> [--mode fp32|baseline|dfq] [--bits N] [--limit N]\n\
            serve <arch> [--requests N] [--rate R] [--batch N]\n\
                  [--backend pjrt|engine|qengine] [--autoscale]\n\
+                 [--seed N] [--metrics-dump FILE]\n\
                  --autoscale: steer f32 <-> int8 from live metrics\n\
            serve --models DIR [--requests N] [--rate R] [--batch N]\n\
                  [--watch] [--max-resident N] [--no-mmap]\n\
+                 [--seed N] [--metrics-dump FILE]\n\
                  multi-model registry over compiled artifacts;\n\
                  --watch hot-swaps changed .dfqm files mid-run,\n\
                  --max-resident caps loaded models (LRU eviction),\n\
-                 --no-mmap copies artifacts instead of memory-mapping\n\
+                 --no-mmap copies artifacts instead of memory-mapping,\n\
+                 --seed fixes the Poisson arrival process,\n\
+                 --metrics-dump periodically rewrites FILE with a\n\
+                 Prometheus-style text exposition of the live metrics\n\
            inspect <arch|artifact.dfqm>\n\
          \n\
          env: DFQ_ARTIFACTS (artifacts dir),\n\
               DFQ_BACKEND: serve=pjrt|engine|qengine, eval=pjrt|engine,\n\
               DFQ_EVAL_LIMIT, DFQ_RESULTS (results dir),\n\
-              DFQ_NO_MMAP=1 (force copy loads everywhere)"
+              DFQ_NO_MMAP=1 (force copy loads everywhere),\n\
+              DFQ_TRACE=1 (record runtime events in the trace ring)"
     );
     std::process::exit(2);
 }
@@ -134,6 +146,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "quantize" => cmd_quantize(rest),
         "compile" => cmd_compile(rest),
         "report" => cmd_report(rest),
+        "profile" => cmd_profile(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "inspect" => cmd_inspect(rest),
@@ -313,6 +326,103 @@ fn cmd_report(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `dfq profile <arch|fixture>`: run DFQ, plan the int8 model with
+/// per-op profiling enabled ([`PlanOpts::profile`]), drive a fixed
+/// number of serial passes, and print the per-op time / activation-byte
+/// / GEMM-kernel table — the runtime twin of `dfq report`'s pass
+/// diagnostics. `--json` emits one record per op (plus a totals record)
+/// and treats any surviving f32 fallback op as an error, which is what
+/// the CI smoke step asserts. Fixtures (`two_layer`, `resblock`,
+/// `inception`) need no artifacts directory.
+fn cmd_profile(rest: &[String]) -> Result<()> {
+    let (pos, kv) = flags(rest);
+    let arch = pos.first().context("missing <arch|fixture>")?.as_str();
+    let json = kv.contains_key("json");
+    let runs: usize =
+        kv.get("runs").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    if runs == 0 {
+        bail!("--runs must be at least 1");
+    }
+    let model = match arch {
+        "two_layer" => dfq::dfq::testutil::two_layer_model(1, true),
+        "resblock" => dfq::dfq::testutil::residual_block_model(1),
+        "inception" => dfq::dfq::testutil::inception_block_model(1),
+        _ => {
+            let manifest = Manifest::load(dfq::artifacts_dir())?;
+            Model::load(manifest.path(&manifest.arch(arch)?.model))?
+        }
+    };
+    let prep = quantize_data_free(&model, &DfqConfig::default())?;
+    let q = prep.quantize(
+        &QScheme::int8_asymmetric(),
+        8,
+        BiasCorrMode::Analytic,
+        None,
+    )?;
+    let opts = dfq::nn::qengine::PlanOpts {
+        profile: true,
+        ..Default::default()
+    };
+    let qm = q.pack_int8_opts(opts).context("int8 plan unavailable")?;
+    if json && qm.fallback_ops() > 0 {
+        // the JSON mode feeds the CI smoke step: a fixture whose plan
+        // regresses to f32 fallbacks must fail the step, not pass with
+        // quietly different rows
+        bail!(
+            "plan has {} f32 fallback op(s): {}",
+            qm.fallback_ops(),
+            qm.summary()
+        );
+    }
+    // drive the serial reference path (one image, no batch parallelism)
+    // so the per-op sum is directly comparable to the e2e wall time
+    let x = dfq::dfq::testutil::random_input(&q.model, 1, 7);
+    qm.run_batch(&x)?; // warm-up: arena growth, first-touch paging
+    qm.reset_profile();
+    let t0 = std::time::Instant::now();
+    for _ in 0..runs {
+        qm.run_batch(&x)?;
+    }
+    let e2e = t0.elapsed().as_secs_f64();
+    let prof = qm.profile().expect("profiling was enabled at plan time");
+    if json {
+        for (i, o) in prof.ops.iter().enumerate() {
+            println!(
+                "{{\"name\":\"profile/{}/op{i}\",\"node\":{},\"kind\":\"{}\",\
+                 \"kernel\":\"{}\",\"int8\":{},\"calls\":{},\
+                 \"secs\":{:.9},\"bytes\":{},\"gemm_calls\":{}}}",
+                dfq::obs::export::json_escape(arch),
+                o.node,
+                dfq::obs::export::json_escape(&o.label),
+                o.kernel.map(|k| k.name()).unwrap_or("-"),
+                o.int8,
+                o.calls,
+                o.secs,
+                o.bytes,
+                o.gemm_calls,
+            );
+        }
+        println!(
+            "{{\"name\":\"profile/{}\",\"runs\":{},\"op_secs\":{:.9},\
+             \"total_secs\":{:.9},\"e2e_secs\":{e2e:.9},\"bytes\":{}}}",
+            dfq::obs::export::json_escape(arch),
+            prof.runs,
+            prof.secs(),
+            prof.total_secs,
+            prof.bytes(),
+        );
+    } else {
+        println!("{arch}: {}", qm.summary());
+        print!("{}", prof.table());
+        println!(
+            "e2e: {} over {runs} run(s); per-op sum covers {:.1}%",
+            dfq::util::bench::fmt_secs(e2e),
+            100.0 * prof.secs() / e2e.max(f64::MIN_POSITIVE),
+        );
+    }
+    Ok(())
+}
+
 fn cmd_eval(rest: &[String]) -> Result<()> {
     let (pos, kv) = flags(rest);
     let arch = pos.first().context("missing <arch>")?.as_str();
@@ -362,6 +472,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         kv.get("rate").map(|s| s.parse()).transpose()?.unwrap_or(200.0);
     let batch: usize =
         kv.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let seed: u64 =
+        kv.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(4242);
+    let metrics_dump = kv.get("metrics-dump").map(std::path::PathBuf::from);
     // multi-tenant mode: a directory of compiled artifacts served
     // through the registry (no manifest, no DFQ pipeline at boot)
     if let Some(dir) = kv.get("models") {
@@ -376,6 +489,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 .unwrap_or(0),
             watch: kv.contains_key("watch"),
             mmap: !kv.contains_key("no-mmap"),
+            seed,
+            metrics_dump,
         };
         let snaps = dfq::serve::demo::run_registry_load(dir, opts)?;
         for (name, snap) in snaps {
@@ -391,7 +506,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     // adaptive mode: both variants behind the metrics-driven autoscaler
     if kv.contains_key("autoscale") {
         return dfq::serve::demo::run_adaptive_load(
-            &arch, requests, rate, batch,
+            &arch, requests, rate, batch, seed,
         );
     }
     // explicit flag wins; otherwise DFQ_BACKEND (default pjrt)
@@ -399,7 +514,15 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         Some(s) => dfq::serve::demo::ServeBackend::parse(s)?,
         None => dfq::serve::demo::ServeBackend::from_env(),
     };
-    dfq::serve::demo::run_load(&arch, requests, rate, batch, backend)
+    dfq::serve::demo::run_load(
+        &arch,
+        requests,
+        rate,
+        batch,
+        backend,
+        seed,
+        metrics_dump.as_deref(),
+    )
 }
 
 fn cmd_inspect(rest: &[String]) -> Result<()> {

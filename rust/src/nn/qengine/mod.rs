@@ -104,7 +104,7 @@ pub use ops::{
     gap_int, upsample_codes, QAddInt, QConcatInt, QLinear, QPoolInt,
     Requantizer,
 };
-pub use plan::{plan, AuxGrids, PlanOpts, QModel};
+pub use plan::{plan, AuxGrids, OpStat, PlanOpts, QModel, RunProfile};
 
 use crate::quant::QParams;
 use crate::tensor::Tensor;

@@ -13,6 +13,8 @@
 //! [`PlanOpts::int8_only`].
 
 use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -41,6 +43,12 @@ pub struct PlanOpts {
     /// of the runtime-dispatched SIMD microkernel (same effect as the
     /// `DFQ_FORCE_SCALAR=1` environment override, but per-plan).
     pub force_scalar: bool,
+    /// Accumulate a per-op [`RunProfile`] (wall time, bytes moved, GEMM
+    /// calls per kernel flavour) on every run. Off by default; when off
+    /// the run loop is the untouched non-instrumented path, so outputs
+    /// *and* per-op execution are bit-for-bit identical to a plan
+    /// compiled without this flag.
+    pub profile: bool,
 }
 
 /// Extra grids the planner may use beyond the activation-site rows:
@@ -201,6 +209,156 @@ impl Val {
     }
 }
 
+/// Runtime accounting for one planned op, accumulated across runs by a
+/// profiling-enabled [`QModel`] (see [`PlanOpts::profile`]).
+#[derive(Debug, Clone)]
+pub struct OpStat {
+    /// Graph node whose value this op produces.
+    pub node: usize,
+    /// Display label from the plan (same text as [`QModel::summarize`]).
+    pub label: String,
+    /// Runs on the integer path.
+    pub int8: bool,
+    /// Inner-kernel flavour for GEMM-backed ops (dense conv / linear).
+    pub kernel: Option<KernelKind>,
+    /// GEMM invocations one execution of this op performs (1 for dense
+    /// conv and linear, 0 elsewhere — depthwise uses the direct path).
+    pub gemm_per_call: u64,
+    /// Executions accumulated.
+    pub calls: u64,
+    /// Total wall seconds inside this op.
+    pub secs: f64,
+    /// Activation bytes moved: input values read + output value
+    /// written, per call (weights are resident and not counted).
+    pub bytes: u64,
+    /// Total GEMM invocations (`calls * gemm_per_call`).
+    pub gemm_calls: u64,
+}
+
+/// Per-op runtime profile of a planned model: one [`OpStat`] per plan
+/// op, plus run-level totals. Merging is exact, so the batch-parallel
+/// path can accumulate per-worker profiles without synchronising per op.
+#[derive(Debug, Clone, Default)]
+pub struct RunProfile {
+    pub ops: Vec<OpStat>,
+    /// Batches accumulated (one per `run_batch`-equivalent pass).
+    pub runs: u64,
+    /// Wall seconds of whole profiled passes (includes arena setup and
+    /// output collection, so it is an upper bound on the per-op sum).
+    pub total_secs: f64,
+}
+
+impl RunProfile {
+    fn for_ops(ops: &[PlannedOp]) -> RunProfile {
+        let ops = ops
+            .iter()
+            .map(|p| {
+                let (label, int8, _) = p.op.describe();
+                let (kernel, gemm_per_call) = match &p.op {
+                    QOp::Conv(c) => (
+                        Some(c.kernel_kind()),
+                        if c.is_depthwise() { 0 } else { 1 },
+                    ),
+                    QOp::Linear(l) => (Some(l.kernel_kind()), 1),
+                    _ => (None, 0),
+                };
+                OpStat {
+                    node: p.node,
+                    label,
+                    int8,
+                    kernel,
+                    gemm_per_call,
+                    calls: 0,
+                    secs: 0.0,
+                    bytes: 0,
+                    gemm_calls: 0,
+                }
+            })
+            .collect();
+        RunProfile { ops, runs: 0, total_secs: 0.0 }
+    }
+
+    /// Fold another profile of the *same plan* in (counters add).
+    pub fn merge(&mut self, other: &RunProfile) {
+        assert_eq!(
+            self.ops.len(),
+            other.ops.len(),
+            "profiles of different plans"
+        );
+        for (a, b) in self.ops.iter_mut().zip(&other.ops) {
+            a.calls += b.calls;
+            a.secs += b.secs;
+            a.bytes += b.bytes;
+            a.gemm_calls += b.gemm_calls;
+        }
+        self.runs += other.runs;
+        self.total_secs += other.total_secs;
+    }
+
+    /// Sum of per-op wall seconds.
+    pub fn secs(&self) -> f64 {
+        self.ops.iter().map(|o| o.secs).sum()
+    }
+
+    /// Sum of per-op activation bytes moved.
+    pub fn bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.bytes).sum()
+    }
+
+    /// Total GEMM invocations grouped by kernel flavour.
+    pub fn gemm_by_kind(&self) -> Vec<(KernelKind, u64)> {
+        let mut out: Vec<(KernelKind, u64)> = Vec::new();
+        for o in &self.ops {
+            let (Some(k), true) = (o.kernel, o.gemm_calls > 0) else {
+                continue;
+            };
+            match out.iter_mut().find(|(kk, _)| *kk == k) {
+                Some((_, n)) => *n += o.gemm_calls,
+                None => out.push((k, o.gemm_calls)),
+            }
+        }
+        out
+    }
+
+    /// The per-op time/bytes/kernel table `dfq profile` prints: one row
+    /// per plan op in execution order, plus a totals row.
+    pub fn table(&self) -> String {
+        let total = self.secs().max(f64::MIN_POSITIVE);
+        let mut s = format!(
+            "{:<5} {:<4} {:<24} {:<6} {:>6} {:>11} {:>6} {:>9} {:>5}\n",
+            "op", "node", "kind", "kernel", "calls", "time", "%", "MB",
+            "gemm"
+        );
+        for (i, o) in self.ops.iter().enumerate() {
+            s.push_str(&format!(
+                "[{i:>3}] {:<4} {:<24} {:<6} {:>6} {:>11} {:>5.1}% \
+                 {:>9.2} {:>5}\n",
+                o.node,
+                o.label,
+                o.kernel.map(|k| k.name()).unwrap_or("-"),
+                o.calls,
+                crate::util::bench::fmt_secs(o.secs),
+                100.0 * o.secs / total,
+                o.bytes as f64 / 1e6,
+                o.gemm_calls,
+            ));
+        }
+        let gemm: u64 = self.ops.iter().map(|o| o.gemm_calls).sum();
+        s.push_str(&format!(
+            "total: {} over {} run(s)  {:.2} MB moved  {} gemm call(s)",
+            crate::util::bench::fmt_secs(self.secs()),
+            self.runs,
+            self.bytes() as f64 / 1e6,
+            gemm,
+        ));
+        for (k, n) in self.gemm_by_kind() {
+            s.push_str(&format!("  [{} x{}]", k.name(), n));
+        }
+        s.push('\n');
+        s
+    }
+}
+
 /// A model compiled for integer execution: f32 in (images), f32 out
 /// (dequantised primary outputs), everything between on integer grids
 /// wherever the graph allows.
@@ -214,6 +372,10 @@ pub struct QModel {
     /// Conv/linear layers falling back to f32.
     pub f32_layers: usize,
     pub(crate) fallbacks: usize,
+    /// Shared per-op runtime accounting, present iff profiling is on
+    /// ([`PlanOpts::profile`] / [`QModel::enable_profiling`]). `None`
+    /// keeps every run on the untouched non-instrumented loop.
+    pub(crate) profile: Option<Arc<Mutex<RunProfile>>>,
 }
 
 fn row_qp(row: &SiteCfg) -> QParams {
@@ -669,7 +831,35 @@ pub fn plan(
         );
     }
 
-    Ok(QModel { ops, slots, outputs, int_layers, f32_layers, fallbacks })
+    // plan-compilation trace: one summary event, Warn when the plan
+    // carries f32 fallbacks (free when tracing is disabled)
+    let sev = if fallbacks > 0 {
+        crate::obs::trace::Severity::Warn
+    } else {
+        crate::obs::trace::Severity::Info
+    };
+    crate::obs::trace::emit_with(sev, "plan", || {
+        let fb: Vec<String> = ops
+            .iter()
+            .filter(|p| !p.op.describe().1)
+            .map(|p| format!("node {} {}", p.node, p.op.describe().0))
+            .collect();
+        (
+            "compiled".into(),
+            vec![
+                ("ops", ops.len().to_string()),
+                ("int_layers", int_layers.to_string()),
+                ("f32_layers", f32_layers.to_string()),
+                ("fallbacks", fallbacks.to_string()),
+                ("fallback_ops", fb.join("; ")),
+            ],
+        )
+    });
+
+    let profile = opts
+        .profile
+        .then(|| Arc::new(Mutex::new(RunProfile::for_ops(&ops))));
+    Ok(QModel { ops, slots, outputs, int_layers, f32_layers, fallbacks, profile })
 }
 
 impl QModel {
@@ -741,12 +931,22 @@ impl QModel {
     }
 
     /// [`QModel::run_batch`] over a caller-provided scratch arena (the
-    /// batch-parallel path hands each worker a pooled arena).
+    /// batch-parallel path hands each worker a pooled arena). When
+    /// profiling is off (the default) this is the untouched
+    /// non-instrumented loop; when on, a local [`RunProfile`] is
+    /// accumulated and folded into the shared profile once per batch,
+    /// and outputs are bitwise-identical either way.
     pub fn run_batch_with(
         &self,
         x: &Tensor,
         scratch: &mut Scratch,
     ) -> Result<Vec<Tensor>> {
+        if let Some(shared) = &self.profile {
+            let mut local = RunProfile::for_ops(&self.ops);
+            let out = self.run_batch_profiled(x, scratch, &mut local);
+            shared.lock().unwrap().merge(&local);
+            return out;
+        }
         let mut arena: Vec<Option<Val>> = Vec::with_capacity(self.slots);
         arena.resize_with(self.slots, || None);
         for p in &self.ops {
@@ -767,6 +967,56 @@ impl QModel {
             .collect()
     }
 
+    /// The instrumented twin of the [`QModel::run_batch_with`] loop:
+    /// identical op execution plus per-op wall time and activation-byte
+    /// accounting into `prof`.
+    fn run_batch_profiled(
+        &self,
+        x: &Tensor,
+        scratch: &mut Scratch,
+        prof: &mut RunProfile,
+    ) -> Result<Vec<Tensor>> {
+        let t_run = Instant::now();
+        let mut arena: Vec<Option<Val>> = Vec::with_capacity(self.slots);
+        arena.resize_with(self.slots, || None);
+        for (i, p) in self.ops.iter().enumerate() {
+            let in_bytes: u64 = if p.ins.is_empty() {
+                (x.data().len() * 4) as u64
+            } else {
+                p.ins
+                    .iter()
+                    .map(|&s| {
+                        arena[s].as_ref().map(val_bytes).unwrap_or(0)
+                    })
+                    .sum()
+            };
+            let t0 = Instant::now();
+            let y = exec(p, x, &arena, scratch)?;
+            let st = &mut prof.ops[i];
+            st.secs += t0.elapsed().as_secs_f64();
+            st.calls += 1;
+            st.bytes += in_bytes + val_bytes(&y);
+            st.gemm_calls += st.gemm_per_call;
+            arena[p.out] = Some(y);
+            for &s in &p.free_after {
+                arena[s] = None;
+            }
+        }
+        let out = self
+            .outputs
+            .iter()
+            .map(|&(s, node)| {
+                arena[s]
+                    .as_ref()
+                    .map(Val::to_f32)
+                    .ok_or_else(|| anyhow!("missing output node {node}"))
+            })
+            .collect();
+        prof.runs += 1;
+        prof.total_secs += t_run.elapsed().as_secs_f64();
+        out
+    }
+
     /// Forward one batch, returning the primary output.
     pub fn run(&self, x: &Tensor) -> Result<Tensor> {
         self.run_all(x)?
@@ -779,6 +1029,34 @@ impl QModel {
     /// integer plan).
     pub fn fallback_ops(&self) -> usize {
         self.fallbacks
+    }
+
+    /// Is per-op profiling accumulating on this model?
+    pub fn profiling(&self) -> bool {
+        self.profile.is_some()
+    }
+
+    /// Turn per-op profiling on for a model planned (or loaded from an
+    /// artifact) without [`PlanOpts::profile`]. Idempotent.
+    pub fn enable_profiling(&mut self) {
+        if self.profile.is_none() {
+            let p = RunProfile::for_ops(&self.ops);
+            self.profile = Some(Arc::new(Mutex::new(p)));
+        }
+    }
+
+    /// Snapshot of the accumulated per-op profile (`None` when
+    /// profiling is off).
+    pub fn profile(&self) -> Option<RunProfile> {
+        self.profile.as_ref().map(|p| p.lock().unwrap().clone())
+    }
+
+    /// Zero the accumulated profile (e.g. after warm-up runs).
+    pub fn reset_profile(&self) {
+        if let Some(p) = &self.profile {
+            let mut g = p.lock().unwrap();
+            *g = RunProfile::for_ops(&self.ops);
+        }
     }
 
     /// Number of planned ops.
@@ -818,6 +1096,14 @@ impl QModel {
             ));
         }
         s
+    }
+}
+
+/// Activation payload size of a runtime value (u8 codes, or f32 words).
+fn val_bytes(v: &Val) -> u64 {
+    match v {
+        Val::Q(q) => q.codes.len() as u64,
+        Val::F(t) => (t.data().len() * 4) as u64,
     }
 }
 

@@ -1,0 +1,347 @@
+//! Metrics export rendering: Prometheus-style text exposition and
+//! one-line JSON, plus the line-format checker the tests run over real
+//! output.
+//!
+//! The exposition dialect is the Prometheus text format restricted to
+//! what this crate emits: `# HELP` / `# TYPE` comments and sample lines
+//! `name{label="value",...} float`. Histograms render the conventional
+//! triplet — `name_bucket{le="..."}` (cumulative, closed by `le="+Inf"`),
+//! `name_sum`, `name_count`. No timestamps, no exemplars.
+
+use super::hist::Histogram;
+
+/// Incremental builder for a text exposition document.
+#[derive(Default)]
+pub struct Exposition {
+    out: String,
+}
+
+impl Exposition {
+    pub fn new() -> Exposition {
+        Exposition::default()
+    }
+
+    pub fn counter(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        self.header(name, help, "counter");
+        self.sample(name, labels, value);
+    }
+
+    pub fn gauge(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        self.header(name, help, "gauge");
+        self.sample(name, labels, value);
+    }
+
+    /// One `# TYPE` header, many labelled samples of the same gauge
+    /// (e.g. a quantile family).
+    pub fn gauge_set(
+        &mut self,
+        name: &str,
+        help: &str,
+        rows: &[(&[(&str, &str)], f64)],
+    ) {
+        self.header(name, help, "gauge");
+        for (labels, value) in rows {
+            self.sample(name, labels, *value);
+        }
+    }
+
+    /// Render a [`Histogram`] as `_bucket`/`_sum`/`_count` lines. Only
+    /// non-empty buckets get a line (the cumulative counts are still
+    /// correct); `le="+Inf"` always closes the series.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        h: &Histogram,
+    ) {
+        self.header(name, help, "histogram");
+        let bucket = format!("{name}_bucket");
+        for (le, cum) in h.cumulative_buckets() {
+            let le = format!("{le:.9}");
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", &le));
+            self.sample(&bucket, &ls, cum as f64);
+        }
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", "+Inf"));
+        self.sample(&bucket, &ls, h.count() as f64);
+        self.sample(&format!("{name}_sum"), labels, h.sum());
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n"));
+        self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push_str(&format!(" {value}\n"));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Escape a string for embedding in a JSON document.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn valid_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Validate a text exposition document line by line. Returns the first
+/// offence as `Err("line N: why")`. This is deliberately a *format*
+/// checker (names, label quoting, float values, known TYPE kinds), not
+/// a semantic one — it is what the CI test asserts over live
+/// [`crate::serve::Metrics::exposition`] output.
+pub fn check_exposition(text: &str) -> Result<(), String> {
+    for (i, line) in text.lines().enumerate() {
+        let at = |why: &str| Err(format!("line {}: {why} [{line}]", i + 1));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let (kw, name) = (parts.next().unwrap_or(""), parts.next());
+            match kw {
+                "HELP" => match name {
+                    Some(n) if valid_name(n) => continue,
+                    _ => return at("HELP without a valid metric name"),
+                },
+                "TYPE" => {
+                    let Some(n) = name else {
+                        return at("TYPE without a metric name");
+                    };
+                    if !valid_name(n) {
+                        return at("TYPE with an invalid metric name");
+                    }
+                    match parts.next() {
+                        Some("counter" | "gauge" | "histogram" | "summary"
+                        | "untyped") => continue,
+                        _ => return at("TYPE with an unknown kind"),
+                    }
+                }
+                _ => return at("unknown comment keyword"),
+            }
+        }
+        if line.starts_with('#') {
+            return at("comment must start with '# '");
+        }
+        // sample line: name[{labels}] value
+        let (head, value) = match line.rsplit_once(' ') {
+            Some(x) => x,
+            None => return at("sample line has no value"),
+        };
+        if value.parse::<f64>().is_err()
+            && !matches!(value, "+Inf" | "-Inf" | "NaN")
+        {
+            return at("value is not a float");
+        }
+        let name = match head.split_once('{') {
+            None => head,
+            Some((n, rest)) => {
+                let Some(body) = rest.strip_suffix('}') else {
+                    return at("unterminated label set");
+                };
+                if !check_labels(body) {
+                    return at("malformed label set");
+                }
+                n
+            }
+        };
+        if !valid_name(name) {
+            return at("invalid metric name");
+        }
+    }
+    Ok(())
+}
+
+/// `k="v",k2="v2"` with `\\`, `\"`, `\n` escapes inside values.
+fn check_labels(body: &str) -> bool {
+    let mut chars = body.chars().peekable();
+    loop {
+        // label name
+        let mut name = String::new();
+        while let Some(&c) = chars.peek() {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                name.push(c);
+                chars.next();
+            } else {
+                break;
+            }
+        }
+        if name.is_empty() || chars.next() != Some('=') {
+            return false;
+        }
+        if chars.next() != Some('"') {
+            return false;
+        }
+        // quoted value with escapes
+        loop {
+            match chars.next() {
+                Some('\\') => {
+                    if !matches!(chars.next(), Some('\\' | '"' | 'n')) {
+                        return false;
+                    }
+                }
+                Some('"') => break,
+                Some(_) => {}
+                None => return false,
+            }
+        }
+        match chars.next() {
+            None => return true,
+            Some(',') => continue,
+            Some(_) => return false,
+        }
+    }
+}
+
+/// Check a one-record-per-line JSON stream: every non-empty line must
+/// be a braced object with balanced quotes/braces. (Shallow by design —
+/// the bench/CI records are flat objects.)
+pub fn check_json_lines(text: &str) -> Result<(), String> {
+    for (i, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        if !line.starts_with('{') || !line.ends_with('}') {
+            return Err(format!("line {}: not a JSON object", i + 1));
+        }
+        let mut depth = 0i32;
+        let mut in_str = false;
+        let mut esc = false;
+        for c in line.chars() {
+            if esc {
+                esc = false;
+                continue;
+            }
+            match c {
+                '\\' if in_str => esc = true,
+                '"' => in_str = !in_str,
+                '{' | '[' if !in_str => depth += 1,
+                '}' | ']' if !in_str => depth -= 1,
+                _ => {}
+            }
+        }
+        if depth != 0 || in_str {
+            return Err(format!("line {}: unbalanced object", i + 1));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_roundtrips_through_the_checker() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-4);
+        }
+        let mut e = Exposition::new();
+        e.counter(
+            "dfq_requests_completed",
+            "Requests completed.",
+            &[("model", "alpha"), ("variant", "int8")],
+            100.0,
+        );
+        e.gauge("dfq_queue_depth", "Queue depth.", &[], 3.0);
+        e.histogram(
+            "dfq_latency_seconds",
+            "Request latency.",
+            &[("model", "alpha")],
+            &h,
+        );
+        let text = e.finish();
+        check_exposition(&text).unwrap();
+        assert!(text.contains("# TYPE dfq_latency_seconds histogram"));
+        assert!(text.contains("le=\"+Inf\"} 100"));
+        assert!(text.contains("dfq_latency_seconds_count{model=\"alpha\"} 100"));
+    }
+
+    #[test]
+    fn checker_rejects_malformed_lines() {
+        assert!(check_exposition("dfq_ok 1.5\n").is_ok());
+        assert!(check_exposition("dfq_ok{a=\"b\"} +Inf\n").is_ok());
+        for bad in [
+            "no_value\n",
+            "1leading_digit 2\n",
+            "dfq{unterminated=\"x\" 1\n",
+            "dfq{=\"x\"} 1\n",
+            "dfq{a=unquoted} 1\n",
+            "dfq_ok not_a_float\n",
+            "# TYPE dfq_ok tachometer\n",
+            "#bad comment\n",
+        ] {
+            assert!(check_exposition(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn label_values_escape_cleanly() {
+        let mut e = Exposition::new();
+        e.gauge("dfq_g", "g", &[("path", "a\\b \"q\"\nend")], 1.0);
+        check_exposition(&e.finish()).unwrap();
+    }
+
+    #[test]
+    fn json_escape_and_line_checker() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert!(check_json_lines("{\"a\":1}\n{\"b\":\"x}\"}\n").is_ok());
+        assert!(check_json_lines("{\"a\":1\n").is_err());
+        assert!(check_json_lines("plain text\n").is_err());
+    }
+}

@@ -1,0 +1,364 @@
+//! Fixed log-bucket (HDR-style) histograms.
+//!
+//! A [`Histogram`] spends a constant ~9 KiB of bucket counters no matter
+//! how many samples it sees, so an always-on server can record forever
+//! without the sample-trim cliff a raw `Vec<f64>` forces. Counters
+//! (`count`, `sum`, `sum_sq`, `min`, `max`) are exact; percentile reads
+//! return the **upper bound** of the bucket holding the nearest-rank
+//! sample, so a reported quantile `q` satisfies
+//! `exact <= q <= exact * 2^(1/SUB_PER_OCTAVE)` for in-range values —
+//! with 32 sub-buckets per octave that is ≤ ~2.2% relative error
+//! (property-tested against [`crate::util::stats::percentile_sorted`]).
+//!
+//! Bucket scheme: bucket 0 holds everything `<= MIN_VAL` (1 µs); bucket
+//! `i >= 1` covers `(MIN_VAL·2^((i-1)/32), MIN_VAL·2^(i/32)]`; the last
+//! bucket absorbs overflow (≥ ~19 h). Because cumulative bucket counts
+//! only ever grow, two snapshots of the same stream subtract exactly —
+//! [`Histogram::diff`] is what gives [`crate::serve::Metrics`] its
+//! unbounded-lookback windows.
+
+use crate::util::stats::Summary;
+
+/// Sub-buckets per power of two: relative bucket width `2^(1/32) − 1`.
+pub const SUB_PER_OCTAVE: usize = 32;
+/// Lower edge of the first log bucket (1 µs for latencies; values at or
+/// below it land in bucket 0).
+pub const MIN_VAL: f64 = 1e-6;
+/// Octaves covered above `MIN_VAL` before the overflow bucket
+/// (`1e-6 · 2^36` ≈ 19 hours).
+pub const OCTAVES: usize = 36;
+const N_BUCKETS: usize = 1 + SUB_PER_OCTAVE * OCTAVES;
+
+/// A fixed-size log-bucket histogram with exact counters.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Bucket index for a value (monotonic in `v`; NaN and `<= MIN_VAL`
+/// both land in bucket 0).
+fn bucket_of(v: f64) -> usize {
+    if !(v > MIN_VAL) {
+        return 0;
+    }
+    let idx = ((v / MIN_VAL).log2() * SUB_PER_OCTAVE as f64).ceil();
+    (idx.max(1.0) as usize).min(N_BUCKETS - 1)
+}
+
+/// Upper bound of bucket `i` (`MIN_VAL` for bucket 0).
+fn bucket_bound(i: usize) -> f64 {
+    MIN_VAL * (i as f64 / SUB_PER_OCTAVE as f64).exp2()
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Population standard deviation from the exact running moments.
+    pub fn std(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum_sq / self.count as f64 - m * m).max(0.0).sqrt()
+    }
+
+    /// Nearest-rank percentile as a bucket upper bound, clamped into
+    /// the exact `[min, max]` envelope. `0.0` when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank =
+            ((p / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_bound(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// [`Summary`]-shaped view (p50/p95 are bucket bounds; the rest is
+    /// exact). `None` when empty.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.count == 0 {
+            return None;
+        }
+        Some(Summary {
+            n: self.count as usize,
+            mean: self.mean(),
+            std: self.std(),
+            min: self.min,
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            max: self.max,
+        })
+    }
+
+    /// Fold another histogram in (exact: counters and buckets add).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The samples recorded since `earlier`, where `earlier` is a prior
+    /// snapshot (clone) of `self`'s stream — bucket counts and moments
+    /// subtract exactly. The window's `min`/`max` are reconstructed from
+    /// its outermost non-empty buckets (bound-accurate, not exact),
+    /// clamped into the cumulative envelope.
+    pub fn diff(&self, earlier: &Histogram) -> Histogram {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .zip(&earlier.counts)
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        let lo = counts.iter().position(|&c| c > 0);
+        let hi = counts.iter().rposition(|&c| c > 0);
+        let (min, max) = match (lo, hi) {
+            (Some(l), Some(h)) => (
+                if l == 0 { 0.0 } else { bucket_bound(l - 1) }
+                    .max(self.min),
+                bucket_bound(h).min(self.max),
+            ),
+            _ => (f64::INFINITY, f64::NEG_INFINITY),
+        };
+        Histogram {
+            counts,
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum - earlier.sum,
+            sum_sq: self.sum_sq - earlier.sum_sq,
+            min,
+            max,
+        }
+    }
+
+    /// Non-empty buckets as `(upper_bound, count)` pairs in value order.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_bound(i), c))
+            .collect()
+    }
+
+    /// Cumulative `(le, count)` pairs for Prometheus `_bucket` lines:
+    /// one entry per non-empty bucket, counts monotone non-decreasing.
+    /// The `+Inf` bucket is implied by [`Histogram::count`].
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((bucket_bound(i), cum));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentile_sorted;
+
+    /// Worst-case relative error of a bucket-bound percentile.
+    const REL: f64 = 0.023; // 2^(1/32) - 1 ≈ 0.0219, plus float slop
+
+    fn assert_percentile_bounds(h: &Histogram, xs: &mut [f64]) {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            // nearest-rank oracle (the histogram's contract)
+            let rank = ((p / 100.0 * xs.len() as f64).ceil() as usize)
+                .clamp(1, xs.len());
+            let exact = xs[rank - 1];
+            let got = h.percentile(p);
+            assert!(
+                got >= exact * (1.0 - 1e-9),
+                "p{p}: bound {got} below exact {exact}"
+            );
+            assert!(
+                got <= exact * (1.0 + REL) + 1e-12,
+                "p{p}: bound {got} too far above exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_bounds_vs_exact_uniform_and_lognormal() {
+        let mut rng = Rng::new(77);
+        for trial in 0..8 {
+            let n = 100 + trial * 531;
+            let mut h = Histogram::new();
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // latency-like spread: ~50 µs .. ~5 s
+                let v = if trial % 2 == 0 {
+                    rng.uniform(5e-5, 5.0) as f64
+                } else {
+                    // clamp above MIN_VAL: below it the bucket-bound
+                    // contract intentionally degrades to "<= 1 µs"
+                    (5e-4 * (rng.normal() as f64 * 1.5).exp())
+                        .clamp(5e-6, 4.9)
+                };
+                h.record(v);
+                xs.push(v);
+            }
+            assert_percentile_bounds(&h, &mut xs);
+        }
+    }
+
+    #[test]
+    fn moments_are_exact_and_interpolated_percentiles_bracketed() {
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 1e-4).collect();
+        let mut h = Histogram::new();
+        for &x in &xs {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.05005).abs() < 1e-12);
+        assert_eq!(h.min(), 1e-4);
+        assert!((h.max() - 0.1).abs() < 1e-12);
+        // the linear-interpolated oracle lies within one bucket too
+        let p95 = percentile_sorted(&xs, 95.0);
+        assert!(h.percentile(95.0) >= p95 * (1.0 - 1e-9));
+        assert!(h.percentile(95.0) <= p95 * (1.0 + 2.0 * REL));
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_not_panic() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-1.0); // defensive: negative "latency"
+        h.record(1e9); // overflow bucket
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), 1e9);
+        assert_eq!(h.min(), -1.0);
+        // percentiles stay inside the exact envelope
+        let p = h.percentile(50.0);
+        assert!((-1.0..=1e9).contains(&p));
+    }
+
+    #[test]
+    fn diff_recovers_the_tail_window_exactly() {
+        let mut h = Histogram::new();
+        for i in 0..500 {
+            h.record(0.001 + i as f64 * 1e-5);
+        }
+        let checkpoint = h.clone();
+        let tail: Vec<f64> =
+            (0..250).map(|i| 0.05 + i as f64 * 1e-4).collect();
+        for &v in &tail {
+            h.record(v);
+        }
+        let w = h.diff(&checkpoint);
+        assert_eq!(w.count(), 250);
+        let want_mean = tail.iter().sum::<f64>() / 250.0;
+        assert!((w.mean() - want_mean).abs() < 1e-9);
+        // window min/max are bucket-bound accurate
+        assert!(w.min() <= tail[0] && w.min() >= tail[0] * (1.0 - REL));
+        assert!(w.max() >= tail[249] * (1.0 - 1e-9));
+        assert!(w.max() <= tail[249] * (1.0 + REL));
+        let mut sorted = tail.clone();
+        assert_percentile_bounds(&w, &mut sorted);
+        // empty diff
+        let none = h.diff(&h.clone());
+        assert_eq!(none.count(), 0);
+        assert!(none.summary().is_none());
+    }
+
+    #[test]
+    fn merge_matches_recording_everything_in_one() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        let mut rng = Rng::new(9);
+        for i in 0..400 {
+            let v = rng.uniform(1e-4, 2.0) as f64;
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.percentile(95.0), all.percentile(95.0));
+        assert!((a.sum() - all.sum()).abs() < 1e-9);
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_total() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..300 {
+            h.record(rng.uniform(1e-5, 0.5) as f64);
+        }
+        let cum = h.cumulative_buckets();
+        assert!(!cum.is_empty());
+        for w in cum.windows(2) {
+            assert!(w[0].0 < w[1].0, "le bounds ascend");
+            assert!(w[0].1 <= w[1].1, "counts monotone");
+        }
+        assert_eq!(cum.last().unwrap().1, h.count());
+    }
+}

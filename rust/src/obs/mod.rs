@@ -1,0 +1,30 @@
+//! Observability: bounded tracing, log-bucket histograms, and export
+//! rendering — the runtime's own telemetry, with no external crates.
+//!
+//! Three pieces, each usable on its own:
+//!
+//! * [`trace`] — a lock-cheap, bounded ring-buffer event log. Subsystems
+//!   (the autoscaler, the registry lifecycle, artifact loads, plan
+//!   fallbacks) emit structured [`trace::Event`]s through a global
+//!   buffer that costs one relaxed atomic load when disabled (the
+//!   default). Enable with [`trace::set_enabled`] or `DFQ_TRACE=1`.
+//! * [`hist`] — fixed log-bucket (HDR-style) [`hist::Histogram`]s:
+//!   constant memory regardless of sample count, exact counters/sums,
+//!   and percentile reads that are bucket upper bounds (≤ ~2.2%
+//!   relative error). [`crate::serve::Metrics`] is built on these, which
+//!   is what lets it drop the old 16 384-sample trim cliff.
+//! * [`export`] — Prometheus-style text exposition and one-line JSON
+//!   rendering, plus [`export::check_exposition`], the line-format
+//!   checker the tests (and CI) run over real exposition output.
+//!
+//! The per-op runtime profile ([`crate::nn::qengine::RunProfile`]) lives
+//! with the plan executor in [`crate::nn::qengine::plan`]; this module
+//! only renders it. See `docs/OBSERVABILITY.md` for the full picture.
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+pub use export::{check_exposition, Exposition};
+pub use hist::Histogram;
+pub use trace::{Event, Severity, SpanGuard, TraceBuf};

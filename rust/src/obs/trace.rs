@@ -1,0 +1,385 @@
+//! Bounded ring-buffer event tracing.
+//!
+//! A [`TraceBuf`] keeps the last `capacity` [`Event`]s and an exact
+//! count of everything it overwrote — an always-on server can emit
+//! forever in constant memory, and a reader always knows how much
+//! history it missed. Emission is **off by default**: every emit path
+//! starts with one relaxed atomic load, and the [`emit_with`] /
+//! [`span`] forms do not even build their message (no formatting, no
+//! allocation) when tracing is disabled, so instrumented hot paths cost
+//! nothing until someone turns the buffer on ([`set_enabled`] or
+//! `DFQ_TRACE=1` in the environment).
+//!
+//! Producers in this crate and their scopes:
+//!
+//! | scope       | emitted from                                        |
+//! |-------------|-----------------------------------------------------|
+//! | `autoscale` | every autoscaler transition (tick, from, to, reason)|
+//! | `registry`  | reload / evict / poll / lazy-load / cap eviction    |
+//! | `artifact`  | artifact open (mmap vs copy, compressed sections)   |
+//! | `plan`      | plan compilation summary incl. f32 fallbacks        |
+//! | `serve`     | server lifecycle (start, drain)                     |
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Event importance, ordered `Debug < Info < Warn < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Debug,
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Debug => "DEBUG",
+            Severity::Info => "INFO",
+            Severity::Warn => "WARN",
+            Severity::Error => "ERROR",
+        }
+    }
+}
+
+/// One traced occurrence: position in the stream (`seq`), time since
+/// the buffer was created (`ts`), a static `scope`, a message, and
+/// structured key/value pairs.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// 0-based position in the emission stream (survives wraparound:
+    /// the ring holds a contiguous tail of sequence numbers).
+    pub seq: u64,
+    pub ts: Duration,
+    pub severity: Severity,
+    pub scope: &'static str,
+    pub msg: String,
+    pub kv: Vec<(&'static str, String)>,
+}
+
+impl Event {
+    /// Single-line rendering: `[12.345s] INFO  registry reload model=a`.
+    pub fn line(&self) -> String {
+        let mut s = format!(
+            "[{:9.3}s] {:<5} {} {}",
+            self.ts.as_secs_f64(),
+            self.severity.as_str(),
+            self.scope,
+            self.msg
+        );
+        for (k, v) in &self.kv {
+            s.push_str(&format!(" {k}={v}"));
+        }
+        s
+    }
+}
+
+struct State {
+    ring: Vec<Event>,
+    /// Next slot to write (ring\[head\] is the oldest once full).
+    head: usize,
+    seq: u64,
+    dropped: u64,
+}
+
+/// A bounded, thread-safe event ring. One global instance serves the
+/// whole crate ([`global`]); tests build their own.
+pub struct TraceBuf {
+    enabled: AtomicBool,
+    cap: usize,
+    start: Instant,
+    state: Mutex<State>,
+}
+
+impl TraceBuf {
+    pub fn new(capacity: usize) -> TraceBuf {
+        TraceBuf {
+            enabled: AtomicBool::new(false),
+            cap: capacity.max(1),
+            start: Instant::now(),
+            state: Mutex::new(State {
+                ring: Vec::new(),
+                head: 0,
+                seq: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// One relaxed load — the entire cost of a disabled emit site.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn emit(
+        &self,
+        severity: Severity,
+        scope: &'static str,
+        msg: impl Into<String>,
+        kv: Vec<(&'static str, String)>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.push(severity, scope, msg.into(), kv);
+    }
+
+    /// Emit with a lazily-built payload: `f` runs only when enabled.
+    pub fn emit_with<F>(&self, severity: Severity, scope: &'static str, f: F)
+    where
+        F: FnOnce() -> (String, Vec<(&'static str, String)>),
+    {
+        if !self.enabled() {
+            return;
+        }
+        let (msg, kv) = f();
+        self.push(severity, scope, msg, kv);
+    }
+
+    fn push(
+        &self,
+        severity: Severity,
+        scope: &'static str,
+        msg: String,
+        kv: Vec<(&'static str, String)>,
+    ) {
+        let ts = self.start.elapsed();
+        let mut s = self.state.lock().unwrap();
+        let seq = s.seq;
+        s.seq += 1;
+        let ev = Event { seq, ts, severity, scope, msg, kv };
+        if s.ring.len() < self.cap {
+            s.ring.push(ev);
+        } else {
+            let head = s.head;
+            s.ring[head] = ev;
+            s.head = (head + 1) % self.cap;
+            s.dropped += 1;
+        }
+    }
+
+    /// Time a region: the guard emits a `Debug` event with the elapsed
+    /// seconds on drop. Free when disabled (no clock read, no event).
+    pub fn span(
+        &self,
+        scope: &'static str,
+        name: &'static str,
+    ) -> SpanGuard<'_> {
+        SpanGuard {
+            buf: self,
+            scope,
+            name,
+            start: self.enabled().then(Instant::now),
+        }
+    }
+
+    /// The retained events, oldest first (a snapshot; the ring keeps
+    /// them).
+    pub fn events(&self) -> Vec<Event> {
+        let s = self.state.lock().unwrap();
+        let mut out = Vec::with_capacity(s.ring.len());
+        out.extend_from_slice(&s.ring[s.head..]);
+        out.extend_from_slice(&s.ring[..s.head]);
+        out
+    }
+
+    /// Take and clear the retained events (drop/seq counters persist).
+    pub fn drain(&self) -> Vec<Event> {
+        let mut s = self.state.lock().unwrap();
+        let head = s.head;
+        let mut tail = s.ring.split_off(head);
+        tail.append(&mut s.ring);
+        s.ring = Vec::new();
+        s.head = 0;
+        tail
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.state.lock().unwrap().dropped
+    }
+
+    /// Total events ever emitted (= next sequence number).
+    pub fn emitted(&self) -> u64 {
+        self.state.lock().unwrap().seq
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.ring.clear();
+        s.head = 0;
+    }
+}
+
+/// Default capacity of the process-global buffer.
+pub const GLOBAL_CAPACITY: usize = 1024;
+
+/// The process-global trace buffer. First use decides the initial
+/// enable state from `DFQ_TRACE` (any non-empty value other than `0`).
+pub fn global() -> &'static TraceBuf {
+    static GLOBAL: OnceLock<TraceBuf> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let buf = TraceBuf::new(GLOBAL_CAPACITY);
+        buf.set_enabled(matches!(
+            std::env::var("DFQ_TRACE"), Ok(v) if !v.is_empty() && v != "0"
+        ));
+        buf
+    })
+}
+
+/// Is the global buffer recording? (One relaxed atomic load.)
+pub fn enabled() -> bool {
+    global().enabled()
+}
+
+pub fn set_enabled(on: bool) {
+    global().set_enabled(on)
+}
+
+/// Emit to the global buffer (no-op when disabled).
+pub fn emit(
+    severity: Severity,
+    scope: &'static str,
+    msg: impl Into<String>,
+    kv: Vec<(&'static str, String)>,
+) {
+    global().emit(severity, scope, msg, kv)
+}
+
+/// Lazily-built emit to the global buffer.
+pub fn emit_with<F>(severity: Severity, scope: &'static str, f: F)
+where
+    F: FnOnce() -> (String, Vec<(&'static str, String)>),
+{
+    global().emit_with(severity, scope, f)
+}
+
+/// Span guard on the global buffer.
+pub fn span(scope: &'static str, name: &'static str) -> SpanGuard<'static> {
+    global().span(scope, name)
+}
+
+/// RAII timing guard from [`TraceBuf::span`].
+pub struct SpanGuard<'a> {
+    buf: &'a TraceBuf,
+    scope: &'static str,
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let secs = t0.elapsed().as_secs_f64();
+            self.buf.emit(
+                Severity::Debug,
+                self.scope,
+                self.name,
+                vec![("secs", format!("{secs:.6}"))],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn disabled_buffer_records_nothing() {
+        let b = TraceBuf::new(8);
+        b.emit(Severity::Info, "t", "dropped on the floor", vec![]);
+        let mut ran = false;
+        b.emit_with(Severity::Info, "t", || {
+            ran = true;
+            ("never built".into(), vec![])
+        });
+        drop(b.span("t", "no-op"));
+        assert!(!ran, "payload closure must not run when disabled");
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.emitted(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_the_newest_tail() {
+        let b = TraceBuf::new(8);
+        b.set_enabled(true);
+        for i in 0..20 {
+            b.emit(Severity::Info, "wrap", format!("e{i}"), vec![]);
+        }
+        assert_eq!(b.len(), 8);
+        assert_eq!(b.dropped(), 12);
+        assert_eq!(b.emitted(), 20);
+        let evs = b.events();
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<u64>>());
+        assert_eq!(evs[0].msg, "e12");
+        assert_eq!(evs.last().unwrap().msg, "e19");
+        // drain empties the ring but the stream position survives
+        let drained = b.drain();
+        assert_eq!(drained.len(), 8);
+        assert_eq!(b.len(), 0);
+        b.emit(Severity::Info, "wrap", "after", vec![]);
+        assert_eq!(b.events()[0].seq, 20);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_nothing_from_the_counters() {
+        let b = Arc::new(TraceBuf::new(64));
+        b.set_enabled(true);
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    for i in 0..500 {
+                        b.emit(
+                            Severity::Debug,
+                            "mt",
+                            format!("t{t}:{i}"),
+                            vec![("i", i.to_string())],
+                        );
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(b.emitted(), 2000);
+        assert_eq!(b.len(), 64);
+        assert_eq!(b.dropped(), 2000 - 64);
+        // retained tail is the last 64 sequence numbers, in order
+        let seqs: Vec<u64> = b.events().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (2000 - 64..2000).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn spans_emit_elapsed_seconds() {
+        let b = TraceBuf::new(8);
+        b.set_enabled(true);
+        {
+            let _g = b.span("test", "region");
+        }
+        let evs = b.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].msg, "region");
+        assert_eq!(evs[0].kv[0].0, "secs");
+        assert!(evs[0].kv[0].1.parse::<f64>().unwrap() >= 0.0);
+        assert!(evs[0].line().contains("region"));
+    }
+}

@@ -234,12 +234,28 @@ impl Autoscaler {
     }
 
     fn switch(&mut self, to: Target, reason: String) {
-        self.transitions.push(Transition {
+        let t = Transition {
             tick: self.ticks,
             from: self.target,
             to,
             reason,
-        });
+        };
+        crate::obs::trace::emit_with(
+            crate::obs::trace::Severity::Info,
+            "autoscale",
+            || {
+                (
+                    "transition".into(),
+                    vec![
+                        ("tick", t.tick.to_string()),
+                        ("from", t.from.as_str().to_string()),
+                        ("to", t.to.as_str().to_string()),
+                        ("reason", t.reason.clone()),
+                    ],
+                )
+            },
+        );
+        self.transitions.push(t);
         self.target = to;
         self.dwell = self.policy.min_dwell;
     }

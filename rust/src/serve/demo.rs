@@ -4,6 +4,7 @@
 //! [`QuantExecutor`] plan. Used by `dfq serve`, the `serve_quantized`
 //! example and the serving bench.
 
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -65,17 +66,42 @@ impl ServeBackend {
     }
 }
 
+/// How often the `--metrics-dump` writer refreshes its file, in
+/// submitted requests. Coarse on purpose: the dump is a scrape surface,
+/// not a trace.
+const DUMP_EVERY: usize = 32;
+
+/// Overwrite `path` with a fresh text exposition document (best-effort
+/// during the run; the final write propagates errors from the caller).
+fn dump_exposition(path: &Path, text: &str) {
+    if let Err(e) = std::fs::write(path, text) {
+        eprintln!("[serve] metrics dump to {} failed: {e}", path.display());
+    }
+}
+
 /// Start a server for `arch`'s INT8-DFQ model on `backend` (built inside
-/// the worker thread), fire `requests` Poisson arrivals at `rate` req/s,
-/// and report latency/throughput.
+/// the worker thread), fire `requests` Poisson arrivals at `rate` req/s
+/// (`seed` fixes the arrival process), and report latency/throughput.
+/// `metrics_dump` periodically overwrites the file with a Prometheus-style
+/// text exposition and prints a one-line JSON summary at the end.
 pub fn run_load(
     arch: &str,
     requests: usize,
     rate: f64,
     batch: usize,
     backend: ServeBackend,
+    seed: u64,
+    metrics_dump: Option<&Path>,
 ) -> Result<()> {
-    let snapshot = run_load_quiet(arch, requests, rate, batch, backend)?;
+    let snapshot = run_load_quiet(
+        arch,
+        requests,
+        rate,
+        batch,
+        backend,
+        seed,
+        metrics_dump,
+    )?;
     println!("serve[{arch}/{}] {}", backend.as_str(), snapshot.report());
     Ok(())
 }
@@ -87,6 +113,8 @@ pub fn run_load_quiet(
     rate: f64,
     batch: usize,
     backend: ServeBackend,
+    seed: u64,
+    metrics_dump: Option<&Path>,
 ) -> Result<Snapshot> {
     let manifest = Manifest::load(crate::artifacts_dir())?;
     let entry = manifest.arch(arch)?.clone();
@@ -162,10 +190,17 @@ pub fn run_load_quiet(
     // compilation on that backend); exclude it from the measured load
     client.infer(images[0].clone())?;
     server.reset_metrics();
-    let mut rng = Rng::new(4242);
+    let metrics = server.metrics_handle();
+    let labels = [("model", arch), ("variant", backend.as_str())];
+    let mut rng = Rng::new(seed);
     let mut pending = Vec::with_capacity(requests);
     for i in 0..requests {
         pending.push(client.submit(images[i % images.len()].clone())?);
+        if let Some(path) = metrics_dump {
+            if i % DUMP_EVERY == 0 {
+                dump_exposition(path, &metrics.exposition(&labels));
+            }
+        }
         let gap = rng.exp(rate);
         if gap > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
@@ -174,11 +209,18 @@ pub fn run_load_quiet(
     for rx in pending {
         rx.recv()??;
     }
+    if let Some(path) = metrics_dump {
+        std::fs::write(path, metrics.exposition(&labels))?;
+        println!(
+            "{}",
+            metrics.json_line(&format!("serve/{arch}/{}", backend.as_str()))
+        );
+    }
     Ok(server.shutdown())
 }
 
 /// Options for [`run_registry_load`] (`dfq serve --models dir/`).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct RegistryLoadOpts {
     pub requests: usize,
     /// Poisson arrival rate, req/s.
@@ -194,6 +236,14 @@ pub struct RegistryLoadOpts {
     /// (zero-copy weight views over the page cache, the default);
     /// `dfq serve --models dir/ --no-mmap` clears it.
     pub mmap: bool,
+    /// Seed of the Poisson arrival process and the probe inputs
+    /// (`dfq serve ... --seed N`; a fixed default keeps runs
+    /// reproducible).
+    pub seed: u64,
+    /// Periodically overwrite this file with a Prometheus-style text
+    /// exposition covering every resident (model, variant) server
+    /// (`dfq serve ... --metrics-dump FILE`).
+    pub metrics_dump: Option<PathBuf>,
 }
 
 impl Default for RegistryLoadOpts {
@@ -205,6 +255,8 @@ impl Default for RegistryLoadOpts {
             max_resident: 0,
             watch: false,
             mmap: true,
+            seed: 4242,
+            metrics_dump: None,
         }
     }
 }
@@ -220,8 +272,16 @@ pub fn run_registry_load(
     dir: &str,
     opts: RegistryLoadOpts,
 ) -> Result<Vec<(String, Snapshot)>> {
-    let RegistryLoadOpts { requests, rate, batch, max_resident, watch, mmap } =
-        opts;
+    let RegistryLoadOpts {
+        requests,
+        rate,
+        batch,
+        max_resident,
+        watch,
+        mmap,
+        seed,
+        metrics_dump,
+    } = opts;
     let mut reg = Registry::new(ServeConfig {
         max_batch: batch,
         max_delay: Duration::from_millis(3),
@@ -237,7 +297,7 @@ pub fn run_registry_load(
     // probe every model once for its input shape (under a resident cap
     // this also exercises evict → lazy re-load before the measured load)
     let mut inputs = Vec::with_capacity(names.len());
-    let mut rng = Rng::new(4242);
+    let mut rng = Rng::new(seed);
     for name in &names {
         let info = reg.info(name)?;
         eprintln!("[serve] {name}: {} ({})", info.plan, info.source);
@@ -267,6 +327,11 @@ pub fn run_registry_load(
         // this is what re-loads evicted models lazily
         let client = reg.live_client(&names[k], registry::VARIANT_INT8)?;
         pending.push(client.submit(inputs[k].clone())?);
+        if let Some(path) = &metrics_dump {
+            if i % DUMP_EVERY == 0 {
+                dump_exposition(path, &reg.exposition());
+            }
+        }
         let gap = rng.exp(rate);
         if gap > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
@@ -274,6 +339,9 @@ pub fn run_registry_load(
     }
     for rx in pending {
         rx.recv()??;
+    }
+    if let Some(path) = &metrics_dump {
+        std::fs::write(path, reg.exposition())?;
     }
     Ok(reg
         .shutdown()
@@ -292,8 +360,9 @@ pub fn drive_adaptive(
     requests: usize,
     rate: f64,
     burst: usize,
+    seed: u64,
 ) -> Result<u64> {
-    let mut rng = Rng::new(4242);
+    let mut rng = Rng::new(seed);
     let mut pending = Vec::with_capacity(requests + burst);
     for i in 0..requests {
         pending.push(client.submit(inputs[i % inputs.len()].clone())?);
@@ -328,6 +397,7 @@ pub fn run_adaptive_load(
     requests: usize,
     rate: f64,
     batch: usize,
+    seed: u64,
 ) -> Result<()> {
     let manifest = Manifest::load(crate::artifacts_dir())?;
     let entry = manifest.arch(arch)?.clone();
@@ -352,7 +422,8 @@ pub fn run_adaptive_load(
     reg.register_quantized(arch, q)?;
     let client = reg.adaptive_client(arch)?;
     let burst = requests.min(128);
-    let failed = drive_adaptive(&client, &images, requests, rate, burst)?;
+    let failed =
+        drive_adaptive(&client, &images, requests, rate, burst, seed)?;
     let report = client.report();
     println!("autoscale[{arch}] {}", report.summary_line());
     for t in &report.transitions {

@@ -2,25 +2,40 @@
 //! and a live queue-depth gauge.
 //!
 //! Every server keeps one [`Metrics`]; the registry reports them per
-//! `(model, variant)`. Two consumption styles:
+//! `(model, variant)`. Storage is **constant-size**: both series live in
+//! fixed log-bucket histograms ([`crate::obs::hist::Histogram`]), so an
+//! always-on server records forever without the old 16 384-sample trim
+//! cliff — counters and means are exact, percentiles are bucket upper
+//! bounds (≤ ~2.2% relative error, see the `obs::hist` docs).
+//!
+//! Three consumption styles:
 //!
 //! * [`Metrics::snapshot`] — cumulative, for end-of-run reporting;
-//! * [`Metrics::window_from`] — incremental windows over the recorded
-//!   latencies, consumed by the serve-layer autoscaler
-//!   ([`super::autoscale`]) to make steering decisions on *recent*
-//!   behaviour rather than the whole history.
+//! * [`Metrics::window_from`] — incremental windows over the latency
+//!   stream, consumed by the serve-layer autoscaler
+//!   ([`super::autoscale`]) to steer on *recent* behaviour. Windows are
+//!   histogram differences against per-cursor checkpoints, so
+//!   consecutive windows partition the stream **exactly** — a consumer
+//!   arbitrarily far behind still sees every sample exactly once
+//!   (previously a trim would silently eat the prefix);
+//! * [`Metrics::exposition`] / [`Metrics::json_line`] — machine-readable
+//!   export (Prometheus-style text, one-line JSON) rendered by
+//!   [`crate::obs::export`]; `dfq serve --metrics-dump FILE` writes the
+//!   former periodically.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs::export::{json_escape, Exposition};
+use crate::obs::hist::Histogram;
 use crate::util::stats::Summary;
 
-/// Retained samples per series. An always-on server must not grow
-/// without bound, so once a series exceeds this the oldest half is
-/// discarded: counters (`completed`, throughput) stay exact, summaries
-/// cover the retained tail. At ~8 B/sample this bounds each series to
-/// ~128 KiB.
-const MAX_SAMPLES: usize = 16_384;
+/// Checkpoints retained for [`Metrics::window_from`] consumers. Each is
+/// one histogram (~9 KiB). A `Metrics` normally has one window consumer
+/// (its autoscaler lane); with more than `MAX_CHECKPOINTS` concurrently
+/// *stale* cursors the oldest falls back to a superset window — counts
+/// stay exact, its percentiles then cover a slightly longer tail.
+const MAX_CHECKPOINTS: usize = 8;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -29,12 +44,11 @@ pub struct Metrics {
 
 #[derive(Default)]
 struct Inner {
-    latencies: Vec<f64>,
-    batch_sizes: Vec<f64>,
-    /// Latency samples discarded from the front of `latencies` —
-    /// [`WindowCursor`]s index the *absolute* sample stream, so trims
-    /// never shift a consumer's window.
-    trimmed: usize,
+    lat: Histogram,
+    batch: Histogram,
+    /// Latency samples recorded this epoch — the absolute stream
+    /// position [`WindowCursor`]s index.
+    total: usize,
     completed: u64,
     /// Requests submitted but not yet pulled off the queue by the worker.
     depth: u64,
@@ -43,6 +57,14 @@ struct Inner {
     epoch: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
+    /// Cumulative-histogram snapshots at cursor positions, ascending by
+    /// `idx` (window = current histogram − checkpoint).
+    checkpoints: Vec<Checkpoint>,
+}
+
+struct Checkpoint {
+    idx: usize,
+    lat: Histogram,
 }
 
 /// Opaque position in the recorded-latency stream, used to consume
@@ -74,17 +96,11 @@ impl Metrics {
         m.started.get_or_insert(now);
         m.finished = Some(now);
         m.completed += latencies.len() as u64;
-        m.batch_sizes.push(batch as f64);
-        m.latencies.extend_from_slice(latencies);
-        if m.latencies.len() > MAX_SAMPLES {
-            let drop = m.latencies.len() - MAX_SAMPLES / 2;
-            m.latencies.drain(..drop);
-            m.trimmed += drop;
+        m.batch.record(batch as f64);
+        for &l in latencies {
+            m.lat.record(l);
         }
-        if m.batch_sizes.len() > MAX_SAMPLES {
-            let drop = m.batch_sizes.len() - MAX_SAMPLES / 2;
-            m.batch_sizes.drain(..drop);
-        }
+        m.total += latencies.len();
     }
 
     /// One request entered the queue (called by `Client::submit`).
@@ -132,27 +148,11 @@ impl Metrics {
     /// ```
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
-        let wall = match (m.started, m.finished) {
-            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
-            _ => 0.0,
-        };
         Snapshot {
             completed: m.completed,
-            latency: if m.latencies.is_empty() {
-                None
-            } else {
-                Some(Summary::of(&m.latencies))
-            },
-            batch_size: if m.batch_sizes.is_empty() {
-                None
-            } else {
-                Some(Summary::of(&m.batch_sizes))
-            },
-            throughput: if wall > 0.0 {
-                m.completed as f64 / wall
-            } else {
-                0.0
-            },
+            latency: m.lat.summary(),
+            batch_size: m.batch.summary(),
+            throughput: m.throughput(),
             queue_depth: m.depth,
         }
     }
@@ -161,26 +161,140 @@ impl Metrics {
     /// cursor. Feed the returned cursor back in to consume disjoint
     /// windows; a cursor minted before a [`Metrics::reset`] is from an
     /// older epoch and restarts from the beginning of the new samples.
-    /// A consumer that falls more than `MAX_SAMPLES`' worth behind
-    /// sees the retained tail (the trimmed prefix is gone).
+    ///
+    /// Windows **partition the stream exactly**: the summary's `n`
+    /// counts precisely the samples recorded since `cursor`, no matter
+    /// how far behind the consumer fell (there is no longer a trimmed
+    /// prefix to lose). Percentiles are bucket bounds over the window's
+    /// histogram difference.
     pub fn window_from(
         &self,
         cursor: WindowCursor,
     ) -> (WindowCursor, Option<Summary>) {
-        let m = self.inner.lock().unwrap();
-        let abs_len = m.trimmed + m.latencies.len();
-        let start_abs = if cursor.epoch == m.epoch {
-            cursor.idx.min(abs_len)
+        let mut m = self.inner.lock().unwrap();
+        let total = m.total;
+        let start = if cursor.epoch == m.epoch {
+            cursor.idx.min(total)
         } else {
-            m.trimmed
+            0
         };
-        let rel = start_abs.saturating_sub(m.trimmed);
-        let summary = if rel < m.latencies.len() {
-            Some(Summary::of(&m.latencies[rel..]))
-        } else {
+        let n = total - start;
+        let summary = if n == 0 {
             None
+        } else {
+            // best checkpoint at or before the window start (idx 0 is
+            // an implicit empty histogram); an evicted exact checkpoint
+            // degrades to a superset window with the count kept exact
+            let base = m
+                .checkpoints
+                .iter()
+                .rev()
+                .find(|c| c.idx <= start)
+                .map(|c| &c.lat);
+            let win = match base {
+                Some(b) => m.lat.diff(b),
+                None => m.lat.clone(),
+            };
+            win.summary().map(|mut s| {
+                s.n = n;
+                s
+            })
         };
-        (WindowCursor { epoch: m.epoch, idx: abs_len }, summary)
+        // checkpoint the stream position the returned cursor names
+        if m.checkpoints.last().map(|c| c.idx) != Some(total) {
+            let snap = m.lat.clone();
+            m.checkpoints.push(Checkpoint { idx: total, lat: snap });
+            if m.checkpoints.len() > MAX_CHECKPOINTS {
+                m.checkpoints.remove(0);
+            }
+        }
+        (WindowCursor { epoch: m.epoch, idx: total }, summary)
+    }
+
+    /// Prometheus-style text exposition of everything this `Metrics`
+    /// tracks (counters, gauges, quantile gauges, and the latency /
+    /// batch-size histograms with exact bucket counts). `labels` are
+    /// attached to every sample line.
+    pub fn exposition(&self, labels: &[(&str, &str)]) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut e = Exposition::new();
+        e.counter(
+            "dfq_requests_completed",
+            "Requests completed since start (or last reset).",
+            labels,
+            m.completed as f64,
+        );
+        e.gauge(
+            "dfq_queue_depth",
+            "Requests submitted but not yet picked up by the worker.",
+            labels,
+            m.depth as f64,
+        );
+        e.gauge(
+            "dfq_throughput_rps",
+            "Completed requests per wall second (first to last completion).",
+            labels,
+            m.throughput(),
+        );
+        let quantiles: Vec<(Vec<(&str, &str)>, f64)> =
+            [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)]
+                .iter()
+                .map(|&(q, p)| {
+                    let mut ls = labels.to_vec();
+                    ls.push(("quantile", q));
+                    (ls, m.lat.percentile(p))
+                })
+                .collect();
+        let rows: Vec<(&[(&str, &str)], f64)> =
+            quantiles.iter().map(|(ls, v)| (ls.as_slice(), *v)).collect();
+        e.gauge_set(
+            "dfq_latency_quantile_seconds",
+            "Latency quantiles (log-bucket upper bounds).",
+            &rows,
+        );
+        e.histogram(
+            "dfq_latency_seconds",
+            "Request latency from enqueue to reply.",
+            labels,
+            &m.lat,
+        );
+        e.histogram(
+            "dfq_batch_size",
+            "Executed batch sizes.",
+            labels,
+            &m.batch,
+        );
+        e.finish()
+    }
+
+    /// One-line JSON record of the cumulative state (the machine twin
+    /// of [`Snapshot::report`]).
+    pub fn json_line(&self, name: &str) -> String {
+        let m = self.inner.lock().unwrap();
+        format!(
+            "{{\"name\":\"{}\",\"completed\":{},\"throughput\":{:.3},\
+             \"queue_depth\":{},\"p50_s\":{:.6},\"p95_s\":{:.6},\
+             \"p99_s\":{:.6},\"mean_batch\":{:.2}}}",
+            json_escape(name),
+            m.completed,
+            m.throughput(),
+            m.depth,
+            m.lat.percentile(50.0),
+            m.lat.percentile(95.0),
+            m.lat.percentile(99.0),
+            m.batch.mean(),
+        )
+    }
+}
+
+impl Inner {
+    fn throughput(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) if b > a => {
+                self.completed as f64 / (b - a).as_secs_f64()
+            }
+            _ => 0.0,
+        }
     }
 }
 
@@ -221,34 +335,93 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.completed, 6);
         assert_eq!(s.batch_size.as_ref().unwrap().n, 2);
-        assert!(s.latency.unwrap().mean > 0.0);
+        let lat = s.latency.unwrap();
+        assert!(lat.mean > 0.0);
+        assert_eq!(lat.n, 6);
+        // percentiles are log-bucket upper bounds of the exact sample
+        assert!(lat.p95 >= 0.04 && lat.p95 <= 0.04 * 1.03);
         assert!(s.report().contains("reqs"));
     }
 
     #[test]
-    fn sample_history_is_bounded_and_cursors_survive_trimming() {
+    fn counters_stay_exact_without_sample_trimming() {
         let m = Metrics::default();
         let chunk = vec![0.001f64; 2048];
         let (mut cur, _) = m.window_from(WindowCursor::default());
         for _ in 0..12 {
             m.record_batch(chunk.len(), &chunk);
             let (c, w) = m.window_from(cur);
-            assert_eq!(
-                w.unwrap().n,
-                chunk.len(),
-                "a kept-up consumer's window must not be affected by trims"
-            );
+            assert_eq!(w.unwrap().n, chunk.len());
             cur = c;
         }
-        // counters stay exact; the retained series is bounded
+        // storage is constant-size histograms now: nothing was trimmed,
+        // the cumulative summary covers every sample
         let snap = m.snapshot();
         assert_eq!(snap.completed, 12 * 2048);
-        assert!(snap.latency.unwrap().n <= 16_384);
-        assert!(snap.batch_size.unwrap().n <= 16_384);
-        // a consumer that fell behind the trim sees the retained tail
-        let (_, w) = m.window_from(WindowCursor::default());
-        let n = w.unwrap().n;
-        assert!(n <= 16_384 && n > 0, "stale-consumer window n = {n}");
+        assert_eq!(snap.latency.unwrap().n, 12 * 2048);
+        assert_eq!(snap.batch_size.unwrap().n, 12);
+    }
+
+    /// Regression for the former `MAX_SAMPLES` trim cliff: a cursor
+    /// opened *before* what used to be the 16 384-sample trim boundary
+    /// still partitions the stream exactly — no samples vanish from its
+    /// window, and successive windows tile the stream.
+    #[test]
+    fn stale_cursors_partition_the_stream_exactly() {
+        let m = Metrics::default();
+        let (c0, w) = m.window_from(WindowCursor::default());
+        assert!(w.is_none());
+        // blow far past the former trim boundary while c0 sleeps
+        let chunk = vec![0.002f64; 4096];
+        for _ in 0..6 {
+            m.record_batch(chunk.len(), &chunk);
+        }
+        let (c1, w1) = m.window_from(c0);
+        let w1 = w1.unwrap();
+        assert_eq!(w1.n, 6 * 4096, "stale window lost samples to a trim");
+        assert!((w1.mean - 0.002).abs() < 1e-9);
+        m.record_batch(100, &vec![0.004f64; 100]);
+        let (_, w2) = m.window_from(c1);
+        let w2 = w2.unwrap();
+        assert_eq!(w2.n, 100, "windows must tile the stream");
+        assert!((w2.mean - 0.004).abs() < 1e-9);
+        // the windows partition everything ever recorded
+        assert_eq!(
+            w1.n + w2.n,
+            m.snapshot().completed as usize,
+            "window n's must sum to the stream length"
+        );
+        // a second consumer starting from scratch sees the whole stream
+        let (_, wall) = m.window_from(WindowCursor::default());
+        assert_eq!(wall.unwrap().n, 6 * 4096 + 100);
+    }
+
+    #[test]
+    fn interleaved_consumers_each_get_exact_counts() {
+        let m = Metrics::default();
+        let (mut a, _) = m.window_from(WindowCursor::default());
+        let (mut b, _) = m.window_from(WindowCursor::default());
+        let mut seen_a = 0;
+        let mut seen_b = 0;
+        for round in 0..10 {
+            m.record_batch(8, &[0.001; 8]);
+            if round % 2 == 0 {
+                let (c, w) = m.window_from(a);
+                a = c;
+                seen_a += w.map(|s| s.n).unwrap_or(0);
+            }
+            if round % 3 == 0 {
+                let (c, w) = m.window_from(b);
+                b = c;
+                seen_b += w.map(|s| s.n).unwrap_or(0);
+            }
+        }
+        let (_, wa) = m.window_from(a);
+        let (_, wb) = m.window_from(b);
+        seen_a += wa.map(|s| s.n).unwrap_or(0);
+        seen_b += wb.map(|s| s.n).unwrap_or(0);
+        assert_eq!(seen_a, 80, "consumer A missed or double-counted");
+        assert_eq!(seen_b, 80, "consumer B missed or double-counted");
     }
 
     #[test]
@@ -298,5 +471,29 @@ mod tests {
         // and the refreshed cursor consumes disjointly again
         let (_, w5) = m.window_from(c4);
         assert!(w5.is_none());
+    }
+
+    #[test]
+    fn exposition_and_json_line_are_well_formed() {
+        let m = Metrics::default();
+        m.record_batch(4, &[0.002, 0.004, 0.008, 0.016]);
+        m.enqueued();
+        let text =
+            m.exposition(&[("model", "alpha"), ("variant", "int8")]);
+        crate::obs::export::check_exposition(&text)
+            .expect("live exposition must pass the format checker");
+        assert!(text.contains("dfq_requests_completed"));
+        assert!(text.contains("dfq_latency_seconds_bucket"));
+        assert!(text.contains("variant=\"int8\""));
+        assert!(text.contains("quantile=\"0.99\""));
+        let line = m.json_line("serve/alpha/int8");
+        crate::obs::export::check_json_lines(&line).unwrap();
+        assert!(line.contains("\"completed\":4"));
+        // empty metrics still render validly
+        let empty = Metrics::default();
+        crate::obs::export::check_exposition(&empty.exposition(&[]))
+            .unwrap();
+        crate::obs::export::check_json_lines(&empty.json_line("x"))
+            .unwrap();
     }
 }

@@ -229,11 +229,31 @@ impl Server {
             let mut exec = match factory() {
                 Ok(e) => e,
                 Err(e) => {
+                    crate::obs::trace::emit_with(
+                        crate::obs::Severity::Error,
+                        "serve",
+                        || {
+                            (
+                                "executor construction failed".into(),
+                                vec![("error", format!("{e:#}"))],
+                            )
+                        },
+                    );
                     // fail every request with the construction error
                     drain_with_error(rx, e, &m2);
                     return;
                 }
             };
+            crate::obs::trace::emit_with(
+                crate::obs::Severity::Debug,
+                "serve",
+                || {
+                    (
+                        "worker up".into(),
+                        vec![("max_batch", exec.max_batch().to_string())],
+                    )
+                },
+            );
             worker_loop(rx, cfg, exec.as_mut(), &m2);
         });
         Server { tx, metrics, worker: Some(worker) }
@@ -266,7 +286,18 @@ impl Server {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-        self.metrics.snapshot()
+        let snap = self.metrics.snapshot();
+        crate::obs::trace::emit_with(
+            crate::obs::Severity::Debug,
+            "serve",
+            || {
+                (
+                    "drain".into(),
+                    vec![("completed", snap.completed.to_string())],
+                )
+            },
+        );
+        snap
     }
 }
 
@@ -508,6 +539,18 @@ impl Router {
             .get(name)
             .ok_or_else(|| anyhow!("no model variant '{name}'"))?
             .metrics())
+    }
+
+    /// `(variant, live metrics)` for every hosted variant, sorted by
+    /// variant name so rendered expositions are reproducible.
+    pub fn metrics_handles(&self) -> Vec<(&str, Arc<Metrics>)> {
+        let mut v: Vec<(&str, Arc<Metrics>)> = self
+            .servers
+            .iter()
+            .map(|(k, s)| (k.as_str(), s.metrics_handle()))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(b.0));
+        v
     }
 
     /// One variant's `(client, live metrics)` pair — the lane shape the

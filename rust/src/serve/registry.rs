@@ -41,6 +41,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::artifact::Artifact;
 use crate::dfq::QuantizedModel;
+use crate::obs::trace;
+use crate::obs::Severity;
 use crate::tensor::Tensor;
 
 use super::autoscale::AdaptiveClient;
@@ -421,6 +423,9 @@ impl Registry {
         match e.hosted.take() {
             None => Ok(false),
             Some(h) => {
+                trace::emit_with(Severity::Info, "registry", || {
+                    ("evict".into(), vec![("model", model.to_string())])
+                });
                 for (variant, snap) in h.router.shutdown() {
                     e.retired.push((variant, snap));
                 }
@@ -457,7 +462,24 @@ impl Registry {
         // warm the new generation (one batch per variant) before the
         // LiveClient slots flip, so the first post-swap request never
         // pays cold-start latency
-        let hosted = load_and_repoint(cfg, model, e, true)?;
+        let hosted = match load_and_repoint(cfg, model, e, true) {
+            Ok(h) => h,
+            Err(err) => {
+                trace::emit_with(Severity::Warn, "registry", || {
+                    (
+                        "reload failed".into(),
+                        vec![
+                            ("model", model.to_string()),
+                            ("error", format!("{err:#}")),
+                        ],
+                    )
+                });
+                return Err(err);
+            }
+        };
+        trace::emit_with(Severity::Info, "registry", || {
+            ("reload".into(), vec![("model", model.to_string())])
+        });
         if let Some(old) = e.hosted.replace(hosted) {
             for (variant, snap) in old.router.shutdown() {
                 e.retired.push((variant, snap));
@@ -491,6 +513,14 @@ impl Registry {
             })
             .map(|(name, _)| name.clone())
             .collect();
+        if !stale.is_empty() {
+            trace::emit_with(Severity::Info, "registry", || {
+                (
+                    "poll".into(),
+                    vec![("stale", stale.len().to_string())],
+                )
+            });
+        }
         stale
             .into_iter()
             .map(|name| {
@@ -558,6 +588,29 @@ impl Registry {
         swaps
     }
 
+    /// One Prometheus-style text exposition document covering every
+    /// *resident* `(model, variant)` server, labelled
+    /// `{model="...",variant="..."}`. Models iterate in name order and
+    /// variants in sorted order, so the document is reproducible. Note
+    /// the dialect repeats `# HELP`/`# TYPE` headers per (model,
+    /// variant) series — accepted by
+    /// [`check_exposition`](crate::obs::check_exposition), which is the
+    /// format this crate promises.
+    pub fn exposition(&self) -> String {
+        let mut out = String::new();
+        for (name, e) in &self.entries {
+            if let Some(h) = &e.hosted {
+                for (variant, m) in h.router.metrics_handles() {
+                    out.push_str(&m.exposition(&[
+                        ("model", name.as_str()),
+                        ("variant", variant),
+                    ]));
+                }
+            }
+        }
+        out
+    }
+
     /// Stop every live router; returns `(model, variant, snapshot)` per
     /// server generation — including generations retired earlier by
     /// evict/reload, so multi-generation totals add up.
@@ -589,6 +642,15 @@ impl Registry {
             let cfg = self.cfg;
             let e = self.entries.get_mut(model).expect("checked above");
             let hosted = load_and_repoint(cfg, model, e, false)?;
+            trace::emit_with(Severity::Info, "registry", || {
+                (
+                    "load".into(),
+                    vec![
+                        ("model", model.to_string()),
+                        ("source", hosted.info.source.to_string()),
+                    ],
+                )
+            });
             e.hosted = Some(hosted);
         }
         let e = self.entries.get_mut(model).expect("checked above");
@@ -621,6 +683,15 @@ impl Registry {
                 .map(|(name, _)| name.clone());
             match victim {
                 Some(name) => {
+                    trace::emit_with(Severity::Info, "registry", || {
+                        (
+                            "evict_lru".into(),
+                            vec![
+                                ("victim", name.clone()),
+                                ("keep", keep.to_string()),
+                            ],
+                        )
+                    });
                     let _ = self.evict(&name);
                 }
                 None => break,

@@ -819,7 +819,11 @@ fn force_scalar_plan_is_bitwise_identical_end_to_end() {
             .pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() })
             .unwrap();
         let scalar = q
-            .pack_int8_opts(PlanOpts { int8_only: true, force_scalar: true })
+            .pack_int8_opts(PlanOpts {
+                int8_only: true,
+                force_scalar: true,
+                ..Default::default()
+            })
             .unwrap();
         let x = testutil::random_input(&m, 3, seed);
         let y_native = native.run(&x).unwrap();
@@ -830,5 +834,95 @@ fn force_scalar_plan_is_bitwise_identical_end_to_end() {
             "branchy={branchy} seed {seed}: native dispatch drifted from \
              the scalar reference"
         );
+    }
+}
+
+/// Observability acceptance: a profiling-enabled plan must be
+/// *bitwise-invisible* in its outputs — identical logits to the plain
+/// plan on both the residual and inception fixtures — while the
+/// accumulated [`RunProfile`] itself stays self-consistent (every op
+/// called once per run, per-op seconds bounded by the whole-pass wall
+/// time, GEMM calls matching the static per-call counts).
+#[test]
+fn profiled_plan_is_bitwise_invisible_and_self_consistent() {
+    use dfq::nn::qengine::PlanOpts;
+
+    for (branchy, seed) in [(false, 441u64), (true, 541)] {
+        let m = if branchy {
+            testutil::inception_block_model(seed)
+        } else {
+            testutil::residual_block_model(seed)
+        };
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        let q = prep
+            .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+            .unwrap();
+        let plain = q
+            .pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() })
+            .unwrap();
+        let profiled = q
+            .pack_int8_opts(PlanOpts {
+                int8_only: true,
+                profile: true,
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(!plain.profiling());
+        assert!(profiled.profiling());
+        assert!(plain.profile().is_none());
+
+        let x = testutil::random_input(&m, 3, seed);
+        let runs = 3usize;
+        let mut y_plain = Vec::new();
+        let mut y_prof = Vec::new();
+        for _ in 0..runs {
+            y_plain.push(plain.run(&x).unwrap());
+            y_prof.push(profiled.run(&x).unwrap());
+        }
+        for (a, b) in y_plain.iter().zip(&y_prof) {
+            let bits_a: Vec<u32> =
+                a.data().iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> =
+                b.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                bits_a, bits_b,
+                "branchy={branchy}: profiling changed the logits"
+            );
+        }
+
+        let prof = profiled.profile().unwrap();
+        assert_eq!(prof.ops.len(), profiled.num_ops());
+        // the batch of 3 may split into per-image parallel passes, so
+        // per-op calls count *images x runs* up to the worker split; the
+        // invariant that holds either way is equal calls on every op
+        let calls = prof.ops[0].calls;
+        assert!(calls > 0, "no calls accumulated");
+        for o in &prof.ops {
+            assert_eq!(
+                o.calls, calls,
+                "op {} ({}) called unevenly",
+                o.node, o.label
+            );
+            assert_eq!(o.gemm_calls, o.gemm_per_call * o.calls);
+            assert!(o.secs >= 0.0 && o.secs.is_finite());
+            assert!(o.bytes > 0, "op {} moved no bytes", o.node);
+        }
+        assert!(
+            prof.secs() <= prof.total_secs + 1e-9,
+            "per-op sum {} exceeds whole-pass wall time {}",
+            prof.secs(),
+            prof.total_secs
+        );
+        assert!(prof.runs > 0);
+
+        // reset zeroes the accumulation but keeps profiling on
+        profiled.reset_profile();
+        let zeroed = profiled.profile().unwrap();
+        assert_eq!(zeroed.runs, 0);
+        assert!(zeroed.ops.iter().all(|o| o.calls == 0 && o.secs == 0.0));
+
+        // the rendered table stays in sync with the op count
+        let table = prof.table();
+        assert_eq!(table.lines().count(), prof.ops.len() + 2);
     }
 }
