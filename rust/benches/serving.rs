@@ -4,8 +4,10 @@
 //! zero-copy mmap load, plus the evict/re-load cycle behind
 //! `--max-resident`; records persisted to `BENCH_serving.json` at the
 //! repo root), a registry hot-swap under load (zero dropped
-//! requests), and an
-//! autoscale run steering traffic between the f32 and int8 variants.
+//! requests), an
+//! autoscale run steering traffic between the f32 and int8 variants,
+//! and the sharded-ingress instrument (lane scaling, admission-cap
+//! shedding with per-SLO-class p99s, under-capacity zero-shed gate).
 //! The L3 §Perf instrument (the paper's deployment motivation: INT8
 //! serving). `--quick` runs only the manifest-free sections (the CI
 //! smoke step).
@@ -23,7 +25,8 @@ use dfq::quant::QScheme;
 use dfq::runtime::Manifest;
 use dfq::serve::registry::VARIANT_INT8;
 use dfq::serve::{
-    AutoscalePolicy, EngineExecutor, Registry, ServeConfig, Server,
+    AutoscalePolicy, BatchExecutor, EngineExecutor, Priority,
+    QuantExecutor, Registry, ServeConfig, Server, SubmitError,
 };
 use dfq::tensor::Tensor;
 use dfq::util::bench::{section, Bench};
@@ -313,6 +316,183 @@ fn observability_overhead_bench() -> Vec<String> {
     vec![off.json(), on.json(), rec]
 }
 
+/// Ingress instrument — the three falsifiable claims of the sharded
+/// router: (1) lane scaling: the same int8 model behind 1 vs 4 worker
+/// lanes at saturation (max_batch 1 forces per-request work, so lanes
+/// are the only parallelism axis); (2) bounded admission: ~2x
+/// over-capacity offered load must trip the cap with the *typed* shed
+/// error, stay memory-bounded, surface the shed counter in the
+/// Prometheus exposition, and keep interactive-class p99 at or below
+/// batch-class p99 under the 70/30 SLO mix; (3) a wave-paced run that
+/// never exceeds half the cap must shed exactly nothing. Manifest-free,
+/// so it runs under `--quick`; the CI gate parses the emitted record
+/// for `shed_rate` / `p99_interactive` / `under_capacity_shed_rate`.
+fn ingress_bench() -> Vec<String> {
+    section("ingress — lane scaling, admission control, SLO classes");
+    let fast = std::env::var("DFQ_BENCH_FAST").ok().as_deref() == Some("1");
+    let q = std::sync::Arc::new(quantize_resblock(95));
+    let x = testutil::random_input(&q.model, 1, 3);
+    let mk = |lanes: usize, cap: usize, max_batch: usize| {
+        let q = std::sync::Arc::clone(&q);
+        Server::start_sharded(
+            ServeConfig {
+                max_batch,
+                max_delay: Duration::from_millis(1),
+                queue_depth: 8192,
+                lanes_per_model: lanes,
+                admission_cap: cap,
+                ..ServeConfig::default()
+            },
+            move || {
+                Ok(Box::new(QuantExecutor::from_quantized(&q, max_batch)?)
+                    as Box<dyn BatchExecutor>)
+            },
+        )
+    };
+
+    // (1) lane scaling at saturation: submit everything up front, time
+    // the drain. Warm-up requests spin up every lane's executor first so
+    // the measured window is pure service time.
+    let requests = if fast { 96 } else { 512 };
+    let mut rps = [0.0f64; 2];
+    for (slot, lanes) in [(0usize, 1usize), (1, 4)] {
+        let server = mk(lanes, 0, 1);
+        let client = server.client();
+        let warm: Vec<_> = (0..lanes * 4)
+            .map(|_| client.submit(x.clone()).unwrap())
+            .collect();
+        for rx in warm {
+            rx.recv().unwrap().unwrap();
+        }
+        server.reset_metrics();
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = (0..requests)
+            .map(|_| client.submit(x.clone()).unwrap())
+            .collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        rps[slot] = requests as f64 / dt;
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, requests as u64, "lost requests");
+        println!("lanes {lanes}: {:>8.0} req/s  ({})", rps[slot], snap.report());
+    }
+    let speedup = rps[1] / rps[0];
+    println!(
+        "lane speedup 4v1: {speedup:.2}x (host parallelism: {})",
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    );
+
+    // (2) 2x over-capacity: back-to-back submission outruns service, so
+    // the admission window fills almost immediately and stays full —
+    // everything past it must come back as the typed shed error.
+    let cap = 32usize;
+    let offered = if fast { 256usize } else { 1024 };
+    let server = mk(1, cap, 4);
+    let client = server.client();
+    client.infer(x.clone()).unwrap();
+    server.reset_metrics();
+    let mut rng = Rng::new(17);
+    let mut shed = 0u64;
+    let mut pending = Vec::new();
+    for _ in 0..offered {
+        let prio = if rng.f64() < 0.7 {
+            Priority::Interactive
+        } else {
+            Priority::Batch
+        };
+        match client.submit_prio(x.clone(), prio) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => match e.downcast_ref::<SubmitError>() {
+                Some(SubmitError::Shed { in_flight, cap: c }) => {
+                    assert!(*in_flight >= *c, "shed below the cap");
+                    shed += 1;
+                }
+                _ => panic!("expected typed Shed, got: {e:#}"),
+            },
+        }
+    }
+    let admitted = pending.len();
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = server.metrics_handle();
+    let p99_i = m.class_percentile(Priority::Interactive, 99.0);
+    let p99_b = m.class_percentile(Priority::Batch, 99.0);
+    let expo = m.exposition(&[("model", "resblock"), ("variant", "int8")]);
+    assert!(
+        expo.contains("dfq_requests_shed"),
+        "shed counter missing from Prometheus exposition"
+    );
+    let shed_rate = shed as f64 / offered as f64;
+    assert!(shed > 0, "2x over-capacity load never tripped the cap");
+    assert_eq!(shed, m.shed(), "client-side and metrics shed counts differ");
+    assert!(
+        p99_i <= p99_b,
+        "SLO inversion: interactive p99 {p99_i}s > batch p99 {p99_b}s"
+    );
+    println!(
+        "over-capacity (cap {cap}): admitted {admitted}, shed {shed}/{offered} \
+         ({:.1}%), p99 interactive {:.6}s vs batch {:.6}s",
+        100.0 * shed_rate,
+        p99_i,
+        p99_b
+    );
+    server.shutdown();
+
+    // (3) calibrated under-capacity: waves of 16 against a cap of 64,
+    // each wave fully drained before the next — the admission window can
+    // never fill, so any shed here is a bug (CI gates on it).
+    let server = mk(2, 64, 8);
+    let client = server.client();
+    client.infer(x.clone()).unwrap();
+    let waves = if fast { 8usize } else { 24 };
+    let mut under_shed = 0u64;
+    for _ in 0..waves {
+        let wave: Vec<_> = (0..16)
+            .map(|i| {
+                let prio = if i % 4 == 0 {
+                    Priority::Batch
+                } else {
+                    Priority::Interactive
+                };
+                client.submit_prio(x.clone(), prio)
+            })
+            .collect();
+        for sub in wave {
+            match sub {
+                Ok(rx) => {
+                    rx.recv().unwrap().unwrap();
+                }
+                Err(_) => under_shed += 1,
+            }
+        }
+    }
+    let under_rate = under_shed as f64 / (waves * 16) as f64;
+    assert_eq!(under_shed, 0, "calibrated under-capacity load shed requests");
+    println!(
+        "under-capacity (cap 64, waves of 16): shed {under_shed}/{} -> rate \
+         {under_rate:.4}",
+        waves * 16
+    );
+    server.shutdown();
+
+    let rec = format!(
+        "{{\"name\":\"serve/ingress\",\"requests\":{requests},\
+         \"lanes1_rps\":{:.1},\"lanes4_rps\":{:.1},\
+         \"lane_speedup\":{speedup:.3},\"offered\":{offered},\
+         \"admission_cap\":{cap},\"shed\":{shed},\"shed_rate\":{shed_rate:.4},\
+         \"p99_interactive\":{p99_i:.6},\"p99_batch\":{p99_b:.6},\
+         \"under_capacity_shed_rate\":{under_rate:.4}}}",
+        rps[0], rps[1],
+    );
+    println!("{rec}");
+    vec![rec]
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     if quick {
@@ -320,6 +500,7 @@ fn main() {
     }
     let mut records = artifact_boot_bench();
     records.extend(observability_overhead_bench());
+    records.extend(ingress_bench());
     registry_hot_swap_bench();
     autoscale_bench();
     // persist the boot-comparison records (recompile / copy load / mmap
@@ -354,12 +535,14 @@ fn main() {
     for rate in [50.0, 200.0, 1000.0] {
         match dfq::serve::demo::run_load_quiet(
             "micronet_v2",
-            requests,
-            rate,
-            64,
-            backend,
-            4242,
-            None,
+            &dfq::serve::demo::LoadOpts {
+                requests,
+                rate,
+                batch: 64,
+                backend,
+                seed: 4242,
+                ..Default::default()
+            },
         ) {
             Ok(s) => println!("rate {rate:>6.0} req/s -> {}", s.report()),
             Err(e) => eprintln!("rate {rate}: {e:#}"),
@@ -373,12 +556,14 @@ fn main() {
     for batch in [1usize, 64] {
         match dfq::serve::demo::run_load_quiet(
             "micronet_v2",
-            requests,
-            500.0,
-            batch,
-            backend,
-            4242,
-            None,
+            &dfq::serve::demo::LoadOpts {
+                requests,
+                rate: 500.0,
+                batch,
+                backend,
+                seed: 4242,
+                ..Default::default()
+            },
         ) {
             Ok(s) => println!("batch {batch:>3} -> {}", s.report()),
             Err(e) => eprintln!("batch {batch}: {e:#}"),

@@ -64,16 +64,28 @@ fn usage() -> ! {
            eval <arch> [--mode fp32|baseline|dfq] [--bits N] [--limit N]\n\
            serve <arch> [--requests N] [--rate R] [--batch N]\n\
                  [--backend pjrt|engine|qengine] [--autoscale]\n\
+                 [--lanes N] [--admission-cap N] [--slo-mix F]\n\
                  [--seed N] [--metrics-dump FILE]\n\
-                 --autoscale: steer f32 <-> int8 from live metrics\n\
+                 --autoscale: steer f32 <-> int8 from live metrics,\n\
+                 --lanes shards the server across N worker lanes,\n\
+                 --admission-cap sheds over-cap submissions (typed),\n\
+                 --slo-mix F routes fraction F as interactive class\n\
            serve --models DIR [--requests N] [--rate R] [--batch N]\n\
                  [--watch] [--max-resident N] [--no-mmap]\n\
+                 [--lanes N] [--admission-cap N] [--slo-mix F]\n\
+                 [--zipf S] [--diurnal-amp F] [--burst-mult F]\n\
                  [--seed N] [--metrics-dump FILE]\n\
                  multi-model registry over compiled artifacts;\n\
                  --watch hot-swaps changed .dfqm files mid-run,\n\
                  --max-resident caps loaded models (LRU eviction),\n\
                  --no-mmap copies artifacts instead of memory-mapping,\n\
-                 --seed fixes the Poisson arrival process,\n\
+                 --lanes N worker lanes per (model, variant),\n\
+                 --admission-cap per-model in-flight cap (0 = off),\n\
+                 --slo-mix interactive fraction of the generated load,\n\
+                 --zipf Zipf popularity skew across models (0 = RR),\n\
+                 --diurnal-amp sinusoidal rate modulation in [0,1),\n\
+                 --burst-mult burst-window rate multiplier (1 = off),\n\
+                 --seed fixes the whole arrival trace,\n\
                  --metrics-dump periodically rewrites FILE with a\n\
                  Prometheus-style text exposition of the live metrics\n\
            inspect <arch|artifact.dfqm>\n\
@@ -474,6 +486,15 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         kv.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(64);
     let seed: u64 =
         kv.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(4242);
+    let lanes: usize =
+        kv.get("lanes").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let admission_cap: usize = kv
+        .get("admission-cap")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
+    let slo_mix: f64 =
+        kv.get("slo-mix").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
     let metrics_dump = kv.get("metrics-dump").map(std::path::PathBuf::from);
     // multi-tenant mode: a directory of compiled artifacts served
     // through the registry (no manifest, no DFQ pipeline at boot)
@@ -491,6 +512,24 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             mmap: !kv.contains_key("no-mmap"),
             seed,
             metrics_dump,
+            lanes,
+            admission_cap,
+            slo_mix,
+            zipf_s: kv
+                .get("zipf")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(0.0),
+            diurnal_amp: kv
+                .get("diurnal-amp")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(0.0),
+            burst_mult: kv
+                .get("burst-mult")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(1.0),
         };
         let snaps = dfq::serve::demo::run_registry_load(dir, opts)?;
         for (name, snap) in snaps {
@@ -516,12 +555,17 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     };
     dfq::serve::demo::run_load(
         &arch,
-        requests,
-        rate,
-        batch,
-        backend,
-        seed,
-        metrics_dump.as_deref(),
+        &dfq::serve::demo::LoadOpts {
+            requests,
+            rate,
+            batch,
+            backend,
+            seed,
+            lanes,
+            admission_cap,
+            slo_mix,
+            metrics_dump,
+        },
     )
 }
 

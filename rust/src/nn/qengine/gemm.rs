@@ -420,10 +420,13 @@ pub fn rowsums_u8(a: &[u8], m: usize, k: usize) -> Vec<i32> {
 /// M) + zp_out, q_lo, q_hi)`. When `M` is an exact power of two with a
 /// right shift in `1..=15` and a SIMD kind is active, a 16-lane i16
 /// shift kernel runs (`t = q − z_in ∈ [−255, 255]` fits i16; `|t| +
-/// 2^(s−1) ≤ 255 + 2^14` never overflows); otherwise a scalar loop with
-/// the same shift classification. Bitwise-identical either way: the
-/// vector idiom `sign(t) · ((|t| + half) >> s)` is exactly the scalar
-/// round-half-away-from-zero.
+/// 2^(s−1) ≤ 255 + 2^14` never overflows); a *generic* fixed-point
+/// multiplier takes the 8-lane 64-bit-product kernel
+/// ([`requant_i32`]) through a stack-chunked i32 widening of the
+/// codes; everything else is a scalar loop with the same shift
+/// classification. Bitwise-identical every way: the shift idiom
+/// `sign(t) · ((|t| + half) >> s)` and the generic rounding divide
+/// both reproduce the scalar round-half-away-from-zero exactly.
 pub(crate) fn requant_codes(
     src: &[u8],
     dst: &mut [u8],
@@ -494,7 +497,100 @@ pub(crate) fn requant_codes(
             }
         }
     }
+    if let Mult::Fixed { m: mf, shift } = *m {
+        // generic (non-pow2) fixed-point multiplier: widen the codes to
+        // i32 in stack chunks and run the 64-bit-product SIMD kernel.
+        // z_in ∈ [0, 255] keeps |t| ≤ 255 and shift ≥ 9 then bounds
+        // |round(t·mf·2^-shift)| < 2^30, so the scalar path's `as i32`
+        // truncation is the identity and both paths stay
+        // bitwise-identical (degenerate multipliers stay scalar).
+        if mf > 0
+            && (9..=62).contains(&shift)
+            && (0..=255).contains(&z_in)
+            && active_kind() != KernelKind::Scalar
+        {
+            const CHUNK: usize = 128;
+            let mut t = [0i32; CHUNK];
+            for (sc, dc) in src.chunks(CHUNK).zip(dst.chunks_mut(CHUNK)) {
+                for (ti, &q) in t.iter_mut().zip(sc) {
+                    *ti = q as i32 - z_in;
+                }
+                requant_i32(&t[..sc.len()], dc, mf, shift, zp_out, q_lo, q_hi);
+            }
+            return;
+        }
+    }
     requant_scalar(src, dst, m, z_in, zp_out, q_lo, q_hi);
+}
+
+/// Requantise a contiguous i32 plane with a generic fixed-point
+/// multiplier: `dst[i] = clamp(round(src[i] · m · 2^-shift) + zp_out,
+/// q_lo, q_hi)`, round half away from zero, the add/clamp in the i64
+/// domain (never truncated through i32 first) — exactly the dense conv
+/// epilogue's scalar arithmetic. Exact for every i32 input: `|src[i]| <
+/// 2^31` and `m < 2^31` keep the product below `2^62`, inside i64, so
+/// the SIMD lanes are bitwise-equal to [`apply_mult`]'s i128 reference.
+/// `q_lo/q_hi` must lie in `[0, 255]` (u8 output grid). Requires
+/// `m > 0` and `shift ∈ 1..=62` (the `mult_for` envelope).
+pub(crate) fn requant_i32(
+    src: &[i32],
+    dst: &mut [u8],
+    m: i32,
+    shift: u32,
+    zp_out: i32,
+    q_lo: i32,
+    q_hi: i32,
+) {
+    assert!(dst.len() == src.len(), "requant_i32: bad output buffer");
+    assert!(
+        m > 0 && (1..=62).contains(&shift),
+        "requant_i32: multiplier outside the fixed-point envelope"
+    );
+    let mu = Mult::Fixed { m, shift };
+    let scalar = |src: &[i32], dst: &mut [u8]| {
+        for (d, &t) in dst.iter_mut().zip(src) {
+            let q = (apply_mult(t as i64, &mu) + zp_out as i64)
+                .clamp(q_lo as i64, q_hi as i64);
+            *d = q as u8;
+        }
+    };
+    match active_kind() {
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => {
+            let head = src.len() - src.len() % 8;
+            // SAFETY: active_kind() checked AVX2 availability.
+            unsafe {
+                avx2::requant_mul(
+                    &src[..head],
+                    &mut dst[..head],
+                    m,
+                    shift,
+                    zp_out,
+                    q_lo,
+                    q_hi,
+                );
+            }
+            scalar(&src[head..], &mut dst[head..]);
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => {
+            let head = src.len() - src.len() % 8;
+            // SAFETY: active_kind() checked NEON availability.
+            unsafe {
+                neon::requant_mul(
+                    &src[..head],
+                    &mut dst[..head],
+                    m,
+                    shift,
+                    zp_out,
+                    q_lo,
+                    q_hi,
+                );
+            }
+            scalar(&src[head..], &mut dst[head..]);
+        }
+        _ => scalar(src, dst),
+    }
 }
 
 fn requant_scalar(
@@ -746,6 +842,104 @@ mod avx2 {
         }
     }
 
+    /// Broadcast constants of the generic fixed-point requant kernel.
+    struct RqConst {
+        maskv: __m256i,
+        thr0: __m256i,
+        zp: __m256i,
+        lo: __m256i,
+        hi: __m256i,
+        cs: __m128i,
+        cinv: __m128i,
+    }
+
+    /// `clamp(round(p · 2^-s) + zp, lo, hi)` on 4 i64 lanes, round half
+    /// away from zero. AVX2 has no 64-bit arithmetic shift: emulate as
+    /// `srl(p, s) | sll(sign_smear, 64−s)`, then add 1 where the kept
+    /// remainder clears the sign-adjusted halfway mark — the gemmlowp
+    /// rounding-divide identity, bitwise-equal to the i128 scalar.
+    ///
+    /// # Safety
+    /// AVX2.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn rq_lane4(p: __m256i, c: &RqConst) -> __m256i {
+        let zero = _mm256_setzero_si256();
+        let negm = _mm256_cmpgt_epi64(zero, p);
+        let sh = _mm256_or_si256(
+            _mm256_srl_epi64(p, c.cs),
+            _mm256_sll_epi64(negm, c.cinv),
+        );
+        let rem = _mm256_and_si256(p, c.maskv);
+        // threshold is (mask >> 1) + 1 for negative p (negm = −1)
+        let thr = _mm256_sub_epi64(c.thr0, negm);
+        let up = _mm256_cmpgt_epi64(rem, thr);
+        let v = _mm256_add_epi64(_mm256_sub_epi64(sh, up), c.zp);
+        // clamp while still in the i64 domain (the scalar reference
+        // never truncates before clamping)
+        let v = _mm256_blendv_epi8(v, c.lo, _mm256_cmpgt_epi64(c.lo, v));
+        _mm256_blendv_epi8(v, c.hi, _mm256_cmpgt_epi64(v, c.hi))
+    }
+
+    /// 8-lane generic fixed-point requantise: exact 64-bit products
+    /// `t·m` via `mul_epi32` on sign-extended lanes, the [`rq_lane4`]
+    /// rounding divide + clamp, exact narrowing. Deliberately avoids
+    /// `mulhrs`-style idioms: the full i64 product sidesteps their
+    /// half-up-only rounding, keeping every lane bitwise-equal to the
+    /// scalar i128 reference.
+    ///
+    /// # Safety
+    /// AVX2; `src.len() == dst.len()` and a multiple of 8; `m > 0`;
+    /// `1 ≤ s ≤ 62`; `[q_lo, q_hi] ⊆ [0, 255]`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn requant_mul(
+        src: &[i32],
+        dst: &mut [u8],
+        m: i32,
+        s: u32,
+        zp_out: i32,
+        q_lo: i32,
+        q_hi: i32,
+    ) {
+        let mask = (1i64 << s) - 1;
+        let c = RqConst {
+            maskv: _mm256_set1_epi64x(mask),
+            thr0: _mm256_set1_epi64x(mask >> 1),
+            zp: _mm256_set1_epi64x(zp_out as i64),
+            lo: _mm256_set1_epi64x(q_lo as i64),
+            hi: _mm256_set1_epi64x(q_hi as i64),
+            cs: _mm_cvtsi32_si128(s as i32),
+            cinv: _mm_cvtsi32_si128(64 - s as i32),
+        };
+        let mv = _mm256_set1_epi64x(m as i64);
+        for (sc, dc) in src.chunks_exact(8).zip(dst.chunks_exact_mut(8)) {
+            let t = _mm256_loadu_si256(sc.as_ptr() as *const __m256i);
+            let t_lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(t));
+            let t_hi =
+                _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(t));
+            // the low dword of each sign-extended lane IS the i32
+            // value, so mul_epi32 (signed 32×32→64) is the exact t·m
+            let q_a = rq_lane4(_mm256_mul_epi32(t_lo, mv), &c);
+            let q_b = rq_lane4(_mm256_mul_epi32(t_hi, mv), &c);
+            // 2×4 i64 → 8 ordered i32: clamped values fit [0, 255], so
+            // keeping each lane's low dword is exact
+            let a32 = _mm256_shuffle_epi32::<0b11_01_10_00>(q_a);
+            let b32 = _mm256_shuffle_epi32::<0b11_01_10_00>(q_b);
+            let v32 = _mm256_permute4x64_epi64::<0b11_01_10_00>(
+                _mm256_unpacklo_epi64(a32, b32),
+            );
+            // 8 i32 → 8 u8 (saturating packs are exact in [0, 255])
+            let p16 = _mm256_permute4x64_epi64::<0b11011000>(
+                _mm256_packs_epi32(v32, v32),
+            );
+            let p8 = _mm_packus_epi16(
+                _mm256_castsi256_si128(p16),
+                _mm256_castsi256_si128(p16),
+            );
+            _mm_storel_epi64(dc.as_mut_ptr() as *mut __m128i, p8);
+        }
+    }
+
     /// 8-wide depthwise window accumulate (see [`super::dw_span8`]).
     ///
     /// # Safety
@@ -936,6 +1130,83 @@ mod neon {
         }
     }
 
+    /// Broadcast constants of the generic fixed-point requant kernel.
+    struct RqConst {
+        mask: int64x2_t,
+        thr0: int64x2_t,
+        neg_s: int64x2_t,
+        zp: int64x2_t,
+        lo: int64x2_t,
+        hi: int64x2_t,
+    }
+
+    /// `clamp(round(p · 2^-s) + zp, lo, hi)` on 2 i64 lanes, round half
+    /// away from zero: arithmetic shift via a negative `vshlq_s64`
+    /// count, then add 1 where the kept remainder clears the
+    /// sign-adjusted halfway mark — the gemmlowp rounding-divide
+    /// identity, bitwise-equal to the i128 scalar.
+    ///
+    /// # Safety
+    /// NEON.
+    #[target_feature(enable = "neon")]
+    #[inline]
+    unsafe fn rq_lane2(p: int64x2_t, c: &RqConst) -> int64x2_t {
+        let negm = vcltq_s64(p, vdupq_n_s64(0));
+        let sh = vshlq_s64(p, c.neg_s);
+        let rem = vandq_s64(p, c.mask);
+        // threshold is (mask >> 1) + 1 for negative p (negm = −1)
+        let thr = vsubq_s64(c.thr0, vreinterpretq_s64_u64(negm));
+        let up = vcgtq_s64(rem, thr);
+        let v = vaddq_s64(vsubq_s64(sh, vreinterpretq_s64_u64(up)), c.zp);
+        // clamp while still in the i64 domain (the scalar reference
+        // never truncates before clamping)
+        let v = vbslq_s64(vcltq_s64(v, c.lo), c.lo, v);
+        vbslq_s64(vcgtq_s64(v, c.hi), c.hi, v)
+    }
+
+    /// 8-lane generic fixed-point requantise (see the AVX2 twin for the
+    /// rounding identity): exact `vmull_s32` 64-bit products, the
+    /// [`rq_lane2`] rounding divide + clamp, exact narrowing.
+    ///
+    /// # Safety
+    /// NEON; `src.len() == dst.len()` and a multiple of 8; `m > 0`;
+    /// `1 ≤ s ≤ 62`; `[q_lo, q_hi] ⊆ [0, 255]`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn requant_mul(
+        src: &[i32],
+        dst: &mut [u8],
+        m: i32,
+        s: u32,
+        zp_out: i32,
+        q_lo: i32,
+        q_hi: i32,
+    ) {
+        let mask = (1i64 << s) - 1;
+        let c = RqConst {
+            mask: vdupq_n_s64(mask),
+            thr0: vdupq_n_s64(mask >> 1),
+            neg_s: vdupq_n_s64(-(s as i64)),
+            zp: vdupq_n_s64(zp_out as i64),
+            lo: vdupq_n_s64(q_lo as i64),
+            hi: vdupq_n_s64(q_hi as i64),
+        };
+        let mv = vdup_n_s32(m);
+        for (sc, dc) in src.chunks_exact(8).zip(dst.chunks_exact_mut(8)) {
+            let t_a = vld1q_s32(sc.as_ptr());
+            let t_b = vld1q_s32(sc.as_ptr().add(4));
+            let q0 = rq_lane2(vmull_s32(vget_low_s32(t_a), mv), &c);
+            let q1 = rq_lane2(vmull_s32(vget_high_s32(t_a), mv), &c);
+            let q2 = rq_lane2(vmull_s32(vget_low_s32(t_b), mv), &c);
+            let q3 = rq_lane2(vmull_s32(vget_high_s32(t_b), mv), &c);
+            // i64 → i32 → i16 truncation is exact: clamped values fit
+            // [0, 255]
+            let v_a = vcombine_s32(vmovn_s64(q0), vmovn_s64(q1));
+            let v_b = vcombine_s32(vmovn_s64(q2), vmovn_s64(q3));
+            let p16 = vcombine_s16(vmovn_s32(v_a), vmovn_s32(v_b));
+            vst1_u8(dc.as_mut_ptr(), vqmovun_s16(p16));
+        }
+    }
+
     /// 8-wide depthwise window accumulate (see [`super::dw_span8`]).
     ///
     /// # Safety
@@ -1105,6 +1376,59 @@ mod tests {
 
     fn mult_for_test(x: f64) -> Mult {
         super::super::kernels::mult_for(x)
+    }
+
+    #[test]
+    fn requant_i32_matches_apply_mult_bitwise() {
+        let mut rng = Rng::new(9005);
+        let mut src: Vec<i32> =
+            vec![0, 1, -1, 255, -255, i32::MAX, i32::MIN, 1 << 20, -(1 << 20)];
+        for _ in 0..503 {
+            // full-range i32, odd length so the SIMD tail runs
+            src.push(rng.below(1 << 32) as u32 as i32);
+        }
+        for _ in 0..16 {
+            let m = ((1usize << 30) + rng.below(1 << 30)) as i32;
+            let shift = (1 + rng.below(62)) as u32;
+            let mu = Mult::Fixed { m, shift };
+            for &(zp, q_lo, q_hi) in &[(0, 0, 255), (128, 3, 250)] {
+                let mut got = vec![0u8; src.len()];
+                requant_i32(&src, &mut got, m, shift, zp, q_lo, q_hi);
+                for (i, &t) in src.iter().enumerate() {
+                    let want = (apply_mult(t as i64, &mu) + zp as i64)
+                        .clamp(q_lo as i64, q_hi as i64)
+                        as u8;
+                    assert_eq!(
+                        got[i], want,
+                        "requant_i32 m={m} shift={shift} diverged at {i} \
+                         (t={t})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn requant_codes_generic_mults_cover_all_codes_bitwise() {
+        let mut rng = Rng::new(9006);
+        let src: Vec<u8> = (0u8..=255).collect();
+        for _ in 0..32 {
+            // random non-pow2 mantissa in [2^30, 2^31), shift across the
+            // whole SIMD window 9..=62, random grids
+            let m = ((1usize << 30) + rng.below(1 << 30)) as i32;
+            let shift = (9 + rng.below(54)) as u32;
+            let mu = Mult::Fixed { m, shift };
+            let z_in = rng.below(256) as i32;
+            let zp_out = rng.below(256) as i32;
+            let mut got = vec![0u8; src.len()];
+            requant_codes(&src, &mut got, &mu, z_in, zp_out, 0, 255);
+            let mut want = vec![0u8; src.len()];
+            requant_scalar(&src, &mut want, &mu, z_in, zp_out, 0, 255);
+            assert_eq!(
+                got, want,
+                "generic requant m={m} shift={shift} z_in={z_in} diverged"
+            );
+        }
     }
 
     #[test]

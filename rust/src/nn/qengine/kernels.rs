@@ -612,15 +612,90 @@ impl QConv {
                             }
                         }
                         None => {
-                            for (p, d) in dst.iter_mut().enumerate() {
-                                let t = scratch.acc[p * self.c_out + o]
-                                    as i64
-                                    - zpw * scratch.rows[p] as i64
-                                    + bq;
-                                let q = (apply_mult(t, m)
-                                    + epi.zp_out as i64)
-                                    .clamp(epi.q_lo as i64, epi.q_hi as i64);
-                                *d = q as u8;
+                            let fixed = match *m {
+                                Mult::Fixed { m: mf, shift }
+                                    if mf > 0
+                                        && (1..=62).contains(&shift)
+                                        && gemm::active_kind()
+                                            != KernelKind::Scalar =>
+                                {
+                                    Some((mf, shift))
+                                }
+                                _ => None,
+                            };
+                            if let Some((mf, shift)) = fixed {
+                                // generic multiplier, SIMD: gather the
+                                // strided accumulator column into
+                                // contiguous i32 chunks for the 64-bit
+                                // product kernel; a chunk whose
+                                // pre-requant term escapes i32 (the
+                                // kernel's exactness envelope) takes
+                                // the exact scalar epilogue instead
+                                const CH: usize = 128;
+                                let mut t32 = [0i32; CH];
+                                let mut p0 = 0usize;
+                                while p0 < ohw {
+                                    let len = CH.min(ohw - p0);
+                                    let mut fits = true;
+                                    for (i, ti) in
+                                        t32[..len].iter_mut().enumerate()
+                                    {
+                                        let p = p0 + i;
+                                        let t = scratch.acc
+                                            [p * self.c_out + o]
+                                            as i64
+                                            - zpw * scratch.rows[p] as i64
+                                            + bq;
+                                        fits &= i32::try_from(t).is_ok();
+                                        *ti = t as i32;
+                                    }
+                                    if fits {
+                                        gemm::requant_i32(
+                                            &t32[..len],
+                                            &mut dst[p0..p0 + len],
+                                            mf,
+                                            shift,
+                                            epi.zp_out,
+                                            epi.q_lo,
+                                            epi.q_hi,
+                                        );
+                                    } else {
+                                        for (i, d) in dst[p0..p0 + len]
+                                            .iter_mut()
+                                            .enumerate()
+                                        {
+                                            let p = p0 + i;
+                                            let t = scratch.acc
+                                                [p * self.c_out + o]
+                                                as i64
+                                                - zpw
+                                                    * scratch.rows[p] as i64
+                                                + bq;
+                                            let q = (apply_mult(t, m)
+                                                + epi.zp_out as i64)
+                                                .clamp(
+                                                    epi.q_lo as i64,
+                                                    epi.q_hi as i64,
+                                                );
+                                            *d = q as u8;
+                                        }
+                                    }
+                                    p0 += len;
+                                }
+                            } else {
+                                for (p, d) in dst.iter_mut().enumerate() {
+                                    let t = scratch.acc[p * self.c_out + o]
+                                        as i64
+                                        - zpw * scratch.rows[p] as i64
+                                        + bq;
+                                    let q = (apply_mult(t, m)
+                                        + epi.zp_out as i64)
+                                        .clamp(
+                                            epi.q_lo as i64,
+                                            epi.q_hi as i64,
+                                        );
+                                    *d = q as u8;
+                                }
                             }
                         }
                     }

@@ -18,7 +18,7 @@
 //! | `registry`  | reload / evict / poll / lazy-load / cap eviction    |
 //! | `artifact`  | artifact open (mmap vs copy, compressed sections)   |
 //! | `plan`      | plan compilation summary incl. f32 fallbacks        |
-//! | `serve`     | server lifecycle (start, drain)                     |
+//! | `serve`     | server lifecycle (start, drain), admission sheds    |
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, OnceLock};

@@ -1,0 +1,194 @@
+//! Bounded admission control: cap the number of in-flight requests per
+//! model and shed the excess immediately instead of queueing forever.
+//!
+//! An [`AdmissionQueue`] is a lock-free counter triple shared by every
+//! lane (and every variant) of one model: [`AdmissionQueue::try_admit`]
+//! either hands out an [`AdmissionPermit`] or rejects with the observed
+//! in-flight count. The permit rides inside the request and releases
+//! its slot on `Drop`, so *every* exit path — answered, failed at
+//! executor construction, died with a drained channel — returns the
+//! slot without any per-path bookkeeping.
+//!
+//! Overload therefore stays memory-bounded: at most `cap` requests
+//! (plus the rejections' error returns) exist per model at any instant,
+//! and callers see a typed [`SubmitError::Shed`] they can back off on.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Why a submission did not enter the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission cap was reached: the request was rejected
+    /// immediately (load shedding), not queued.
+    Shed {
+        /// In-flight requests observed at rejection time.
+        in_flight: u64,
+        /// The configured cap ([`super::ServeConfig::admission_cap`]).
+        cap: u64,
+    },
+    /// The server behind this handle is shut down.
+    Closed,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Shed { in_flight, cap } => write!(
+                f,
+                "request shed: {in_flight} in flight >= admission cap {cap}"
+            ),
+            SubmitError::Closed => write!(f, "server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Per-model in-flight cap with shed/admit accounting. `cap == 0`
+/// means unbounded (admission always succeeds; counters still track).
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    cap: u64,
+    in_flight: AtomicU64,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl AdmissionQueue {
+    pub fn new(cap: usize) -> AdmissionQueue {
+        AdmissionQueue { cap: cap as u64, ..AdmissionQueue::default() }
+    }
+
+    /// An always-admitting queue (counters still run).
+    pub fn unbounded() -> AdmissionQueue {
+        AdmissionQueue::new(0)
+    }
+
+    /// The configured cap (`0` = unbounded).
+    pub fn cap(&self) -> u64 {
+        self.cap
+    }
+
+    /// Requests currently holding a permit.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Total admissions granted.
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Total rejections.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Claim one in-flight slot. `Err(in_flight)` means the cap is
+    /// reached and the request must be shed; the failed reservation is
+    /// rolled back before returning, so rejected submissions leave no
+    /// residue.
+    pub fn try_admit(self: &Arc<Self>) -> Result<AdmissionPermit, u64> {
+        let prev = self.in_flight.fetch_add(1, Ordering::AcqRel);
+        if self.cap != 0 && prev >= self.cap {
+            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(prev);
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(AdmissionPermit { queue: Arc::clone(self) })
+    }
+}
+
+/// One claimed in-flight slot; releases on `Drop`. Carried inside the
+/// queued request so the slot frees exactly when the request's life
+/// ends, whichever path it takes.
+#[derive(Debug)]
+pub struct AdmissionPermit {
+    queue: Arc<AdmissionQueue>,
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        self.queue.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_cap_then_sheds() {
+        let q = Arc::new(AdmissionQueue::new(2));
+        let p1 = q.try_admit().unwrap();
+        let p2 = q.try_admit().unwrap();
+        assert_eq!(q.in_flight(), 2);
+        let err = q.try_admit().unwrap_err();
+        assert_eq!(err, 2);
+        assert_eq!(q.shed(), 1);
+        assert_eq!(q.in_flight(), 2, "rejected claim must roll back");
+        // releasing one slot re-opens admission
+        drop(p1);
+        assert_eq!(q.in_flight(), 1);
+        let p3 = q.try_admit().unwrap();
+        assert_eq!(q.admitted(), 3);
+        drop((p2, p3));
+        assert_eq!(q.in_flight(), 0);
+    }
+
+    #[test]
+    fn unbounded_queue_always_admits() {
+        let q = Arc::new(AdmissionQueue::unbounded());
+        let permits: Vec<_> =
+            (0..1000).map(|_| q.try_admit().unwrap()).collect();
+        assert_eq!(q.in_flight(), 1000);
+        assert_eq!(q.shed(), 0);
+        drop(permits);
+        assert_eq!(q.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_cap() {
+        let q = Arc::new(AdmissionQueue::new(16));
+        let peak = Arc::new(AtomicU64::new(0));
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let peak = Arc::clone(&peak);
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        if let Ok(p) = q.try_admit() {
+                            peak.fetch_max(
+                                q.in_flight(),
+                                Ordering::Relaxed,
+                            );
+                            drop(p);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(peak.load(Ordering::Relaxed) <= 16);
+        assert_eq!(q.in_flight(), 0);
+        assert_eq!(q.admitted() + q.shed(), 8 * 500);
+    }
+
+    #[test]
+    fn submit_error_formats_and_types() {
+        let e = SubmitError::Shed { in_flight: 9, cap: 8 };
+        assert!(e.to_string().contains("9 in flight"));
+        assert!(e.to_string().contains("cap 8"));
+        let any: anyhow::Error = e.into();
+        assert_eq!(
+            any.downcast_ref::<SubmitError>(),
+            Some(&SubmitError::Shed { in_flight: 9, cap: 8 })
+        );
+        assert!(SubmitError::Closed.to_string().contains("shut down"));
+    }
+}

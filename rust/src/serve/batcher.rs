@@ -1,11 +1,143 @@
-//! Dynamic batching policy.
+//! Dynamic batching policy and SLO-class scheduling.
 //!
 //! Classic serving trade-off (vLLM-style): wait up to `max_delay` after
 //! the first queued request to fill a batch of `max_batch`, but never
 //! hold a full batch. Single-threaded collector over an mpsc channel.
+//!
+//! On top of the arrival batcher sits [`WeightedBacklog`], the per-lane
+//! SLO scheduler: requests carry a [`Priority`] class, interactive work
+//! drains first, and a starvation bound guarantees batch-class work
+//! ships at least every `starvation_limit` formed batches.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
+
+/// SLO class of one request. `Interactive` is latency-sensitive and
+/// drains first; `Batch` is throughput work that may wait, bounded by
+/// the [`WeightedBacklog`] starvation limit.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+impl Priority {
+    /// Stable index (histogram/label slot): interactive 0, batch 1.
+    pub fn idx(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    /// Label value used in the metrics exposition.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Batches a batch-class reservation after this many consecutive formed
+/// batches shipped no batch-class work while some was waiting.
+pub const DEFAULT_STARVATION_LIMIT: u32 = 4;
+
+/// Two-class weighted scheduler: a FIFO per [`Priority`], drained
+/// interactive-first with a starvation bound. Arrival order is
+/// preserved *within* a class, so the scheduler is deterministic given
+/// the arrival sequence.
+#[derive(Debug)]
+pub struct WeightedBacklog<T> {
+    classes: [VecDeque<T>; 2], // indexed by Priority::idx()
+    /// Consecutive [`WeightedBacklog::take`]s that shipped no
+    /// batch-class item while batch work was waiting.
+    starved: u32,
+    limit: u32,
+}
+
+impl<T> WeightedBacklog<T> {
+    pub fn new(starvation_limit: u32) -> WeightedBacklog<T> {
+        WeightedBacklog {
+            classes: [VecDeque::new(), VecDeque::new()],
+            starved: 0,
+            limit: starvation_limit.max(1),
+        }
+    }
+
+    pub fn push(&mut self, prio: Priority, item: T) {
+        self.classes[prio.idx()].push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.iter().map(VecDeque::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.iter().all(VecDeque::is_empty)
+    }
+
+    /// Form the next batch of at most `max` items.
+    ///
+    /// Policy: interactive first, spill leftover slots to batch-class.
+    /// Once `starvation_limit` consecutive batches have shipped no
+    /// batch-class work while some waited, `max(1, max/4)` slots are
+    /// *reserved* for batch-class before interactive fills the rest —
+    /// interactive load can therefore delay batch work, but never
+    /// indefinitely.
+    pub fn take(&mut self, max: usize) -> Vec<(Priority, T)> {
+        let max = max.max(1);
+        let mut out = Vec::new();
+        let batch_waiting = !self.classes[Priority::Batch.idx()].is_empty();
+        if batch_waiting && self.starved >= self.limit {
+            let reserve = (max / 4).max(1);
+            for _ in 0..reserve {
+                match self.classes[Priority::Batch.idx()].pop_front() {
+                    Some(t) => out.push((Priority::Batch, t)),
+                    None => break,
+                }
+            }
+        }
+        while out.len() < max {
+            if let Some(t) =
+                self.classes[Priority::Interactive.idx()].pop_front()
+            {
+                out.push((Priority::Interactive, t));
+            } else {
+                break;
+            }
+        }
+        while out.len() < max {
+            match self.classes[Priority::Batch.idx()].pop_front() {
+                Some(t) => out.push((Priority::Batch, t)),
+                None => break,
+            }
+        }
+        if !out.is_empty() {
+            let shipped_batch =
+                out.iter().any(|(p, _)| *p == Priority::Batch);
+            if shipped_batch {
+                self.starved = 0;
+            } else if batch_waiting {
+                self.starved += 1;
+            }
+        }
+        out
+    }
+
+    /// Drain everything, interactive first (shutdown path — the
+    /// starvation counter no longer matters).
+    pub fn drain_all(&mut self) -> Vec<(Priority, T)> {
+        let mut out = Vec::with_capacity(self.len());
+        for (i, q) in self.classes.iter_mut().enumerate() {
+            let p = if i == 0 { Priority::Interactive } else { Priority::Batch };
+            out.extend(q.drain(..).map(|t| (p, t)));
+        }
+        out
+    }
+}
 
 /// A batching decision loop over any request type.
 pub struct Batcher {
@@ -72,5 +204,73 @@ mod tests {
             Batcher { max_batch: 2, max_delay: Duration::from_millis(200) };
         let batch = b.next_batch(&rx).unwrap();
         assert_eq!(batch, vec![1, 2]);
+    }
+
+    #[test]
+    fn backlog_drains_interactive_first_then_spills() {
+        let mut b = WeightedBacklog::new(4);
+        b.push(Priority::Batch, "b0");
+        b.push(Priority::Interactive, "i0");
+        b.push(Priority::Interactive, "i1");
+        assert_eq!(b.len(), 3);
+        let got = b.take(4);
+        // both interactive ship first, leftover slots spill to batch
+        assert_eq!(
+            got.iter().map(|(_, t)| *t).collect::<Vec<_>>(),
+            vec!["i0", "i1", "b0"]
+        );
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn backlog_bounds_batch_class_starvation() {
+        let mut b = WeightedBacklog::new(2);
+        b.push(Priority::Batch, -1i32);
+        // endless interactive pressure: feed more than one batch's worth
+        // every round so batch-class work never ships for free
+        for i in 0..8 {
+            b.push(Priority::Interactive, i);
+        }
+        let all_interactive = |v: &[(Priority, i32)]| {
+            v.iter().all(|(p, _)| *p == Priority::Interactive)
+        };
+        // rounds 1 and 2: pure interactive (starvation builds)
+        for _ in 0..2 {
+            for i in 100..104 {
+                b.push(Priority::Interactive, i);
+            }
+            assert!(all_interactive(&b.take(4)));
+        }
+        // round 3: the bound trips — max(1, 4/4) slot is reserved for
+        // the starving batch-class request before interactive fills up
+        for i in 200..204 {
+            b.push(Priority::Interactive, i);
+        }
+        let got = b.take(4);
+        assert_eq!(got[0], (Priority::Batch, -1));
+        assert_eq!(got.len(), 4);
+    }
+
+    #[test]
+    fn backlog_keeps_fifo_within_a_class() {
+        let mut b = WeightedBacklog::new(4);
+        for i in 0..6 {
+            let p = if i % 2 == 0 {
+                Priority::Interactive
+            } else {
+                Priority::Batch
+            };
+            b.push(p, i);
+        }
+        let got: Vec<i32> =
+            b.take(6).into_iter().map(|(_, t)| t).collect();
+        assert_eq!(got, vec![0, 2, 4, 1, 3, 5]);
+        // drain_all empties everything that remains
+        b.push(Priority::Batch, 9);
+        b.push(Priority::Interactive, 8);
+        let rest: Vec<i32> =
+            b.drain_all().into_iter().map(|(_, t)| t).collect();
+        assert_eq!(rest, vec![8, 9]);
+        assert!(b.is_empty());
     }
 }

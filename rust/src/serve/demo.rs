@@ -1,8 +1,10 @@
-//! Serving demo / load generator: Poisson arrivals against the batching
-//! server backed by the INT8 DFQ model on a selectable backend — PJRT
-//! (production), the fake-quant f32 engine, or the true-int8
-//! [`QuantExecutor`] plan. Used by `dfq serve`, the `serve_quantized`
-//! example and the serving bench.
+//! Serving demo / load generator: trace-driven arrivals (diurnal
+//! sinusoid + burst windows over a Poisson base process, Zipf-skewed
+//! model popularity, two-class SLO mix — all seeded) against the
+//! batching server backed by the INT8 DFQ model on a selectable
+//! backend — PJRT (production), the fake-quant f32 engine, or the
+//! true-int8 [`QuantExecutor`] plan. Used by `dfq serve`, the
+//! `serve_quantized` example and the serving bench.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -16,11 +18,125 @@ use crate::quant::QScheme;
 use crate::runtime::{Manifest, Runtime};
 use crate::serve::{
     registry, AdaptiveClient, AutoscalePolicy, BatchExecutor,
-    EngineExecutor, PjrtExecutor, QuantExecutor, Registry, ServeConfig,
-    Server, Snapshot,
+    EngineExecutor, PjrtExecutor, Priority, QuantExecutor, Registry,
+    ServeConfig, Server, Snapshot, SubmitError,
 };
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Trace-driven arrival model. Time is *virtual* — the accumulated sum
+/// of sampled inter-arrival gaps — so the whole trace (arrival times,
+/// model choices, SLO classes) is a pure function of the seed and never
+/// depends on wall-clock scheduling.
+///
+/// The instantaneous rate is a diurnal sinusoid over the base rate with
+/// periodic burst windows multiplied on top:
+/// `rate(t) = rate · (1 + amp · sin(2πt / period)) · (burst? mult : 1)`.
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    /// Base arrival rate, req/s.
+    pub rate: f64,
+    /// Diurnal modulation amplitude in `[0, 1)` (0 = flat Poisson).
+    pub diurnal_amp: f64,
+    /// Diurnal period in virtual seconds (a 24 h cycle compressed to
+    /// something a bench can sweep).
+    pub diurnal_period: f64,
+    /// Rate multiplier inside a burst window (1 = no bursts).
+    pub burst_mult: f64,
+    /// Virtual seconds between burst-window starts.
+    pub burst_every: f64,
+    /// Burst-window length, virtual seconds.
+    pub burst_len: f64,
+    /// Zipf popularity exponent across models: weight of the k-th model
+    /// is `1/(k+1)^s`. 0 keeps the legacy deterministic round-robin.
+    pub zipf_s: f64,
+    /// Fraction of arrivals in the [`Priority::Interactive`] class.
+    pub slo_mix: f64,
+}
+
+impl LoadGen {
+    /// Plain Poisson arrivals, uniform round-robin, all-interactive —
+    /// the legacy load shape.
+    pub fn poisson(rate: f64) -> LoadGen {
+        LoadGen {
+            rate,
+            diurnal_amp: 0.0,
+            diurnal_period: 4.0,
+            burst_mult: 1.0,
+            burst_every: 2.0,
+            burst_len: 0.25,
+            zipf_s: 0.0,
+            slo_mix: 1.0,
+        }
+    }
+
+    /// Instantaneous arrival rate at virtual time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut r = self.rate;
+        if self.diurnal_amp > 0.0 && self.diurnal_period > 0.0 {
+            let phase = 2.0 * std::f64::consts::PI * t / self.diurnal_period;
+            r *= 1.0 + self.diurnal_amp * phase.sin();
+        }
+        if self.burst_mult > 1.0
+            && self.burst_every > 0.0
+            && t.rem_euclid(self.burst_every) < self.burst_len
+        {
+            r *= self.burst_mult;
+        }
+        r.max(1e-9)
+    }
+
+    /// Sample the next inter-arrival gap at virtual time `t`
+    /// (exponential at the instantaneous rate).
+    pub fn next_gap(&self, rng: &mut Rng, t: f64) -> f64 {
+        rng.exp(self.rate_at(t))
+    }
+
+    /// Sample the SLO class of one arrival.
+    pub fn pick_class(&self, rng: &mut Rng) -> Priority {
+        if rng.f64() < self.slo_mix {
+            Priority::Interactive
+        } else {
+            Priority::Batch
+        }
+    }
+
+    /// Cumulative Zipf popularity distribution over `n` models (index =
+    /// popularity rank). Empty when `zipf_s == 0` — callers fall back
+    /// to round-robin.
+    pub fn zipf_cdf(&self, n: usize) -> Vec<f64> {
+        if self.zipf_s <= 0.0 || n == 0 {
+            return Vec::new();
+        }
+        let mut cdf: Vec<f64> = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(self.zipf_s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        cdf
+    }
+
+    /// Sample a model index: Zipf-skewed when `cdf` is non-empty,
+    /// otherwise deterministic round-robin on the arrival index `i`.
+    pub fn pick_model(
+        &self,
+        cdf: &[f64],
+        rng: &mut Rng,
+        i: usize,
+        n: usize,
+    ) -> usize {
+        if cdf.is_empty() {
+            return i % n.max(1);
+        }
+        let u = rng.f64();
+        cdf.partition_point(|&c| c <= u).min(cdf.len() - 1)
+    }
+}
 
 /// Which executor backs the serve worker.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -79,43 +195,63 @@ fn dump_exposition(path: &Path, text: &str) {
     }
 }
 
-/// Start a server for `arch`'s INT8-DFQ model on `backend` (built inside
-/// the worker thread), fire `requests` Poisson arrivals at `rate` req/s
-/// (`seed` fixes the arrival process), and report latency/throughput.
-/// `metrics_dump` periodically overwrites the file with a Prometheus-style
-/// text exposition and prints a one-line JSON summary at the end.
-pub fn run_load(
-    arch: &str,
-    requests: usize,
-    rate: f64,
-    batch: usize,
-    backend: ServeBackend,
-    seed: u64,
-    metrics_dump: Option<&Path>,
-) -> Result<()> {
-    let snapshot = run_load_quiet(
-        arch,
-        requests,
-        rate,
-        batch,
-        backend,
-        seed,
-        metrics_dump,
-    )?;
+/// Options for [`run_load`] / [`run_load_quiet`] (`dfq serve <arch>`).
+#[derive(Debug, Clone)]
+pub struct LoadOpts {
+    pub requests: usize,
+    /// Poisson base arrival rate, req/s.
+    pub rate: f64,
+    pub batch: usize,
+    pub backend: ServeBackend,
+    /// Seed of the arrival process and SLO-class draws.
+    pub seed: u64,
+    /// Worker lanes behind the server (`--lanes N`).
+    pub lanes: usize,
+    /// In-flight admission cap, 0 = unbounded (`--admission-cap N`).
+    /// Over-cap submissions are shed (counted, not served).
+    pub admission_cap: usize,
+    /// Fraction of arrivals in the interactive SLO class
+    /// (`--slo-mix F`, default 1.0 = all interactive).
+    pub slo_mix: f64,
+    /// Periodically overwrite this file with a Prometheus-style text
+    /// exposition (`--metrics-dump FILE`).
+    pub metrics_dump: Option<PathBuf>,
+}
+
+impl Default for LoadOpts {
+    fn default() -> Self {
+        LoadOpts {
+            requests: 256,
+            rate: 200.0,
+            batch: 64,
+            backend: ServeBackend::default(),
+            seed: 4242,
+            lanes: 1,
+            admission_cap: 0,
+            slo_mix: 1.0,
+            metrics_dump: None,
+        }
+    }
+}
+
+/// Start a server for `arch`'s INT8-DFQ model on the configured backend
+/// (built inside each worker lane), fire seeded arrivals, and report
+/// latency/throughput. With a metrics dump path set, the file is
+/// periodically overwritten with a Prometheus-style text exposition and
+/// a one-line JSON summary prints at the end.
+pub fn run_load(arch: &str, opts: &LoadOpts) -> Result<()> {
+    let backend = opts.backend;
+    let snapshot = run_load_quiet(arch, opts)?;
     println!("serve[{arch}/{}] {}", backend.as_str(), snapshot.report());
     Ok(())
 }
 
 /// Same as [`run_load`] but returns the metrics snapshot (bench use).
-pub fn run_load_quiet(
-    arch: &str,
-    requests: usize,
-    rate: f64,
-    batch: usize,
-    backend: ServeBackend,
-    seed: u64,
-    metrics_dump: Option<&Path>,
-) -> Result<Snapshot> {
+pub fn run_load_quiet(arch: &str, opts: &LoadOpts) -> Result<Snapshot> {
+    let requests = opts.requests;
+    let batch = opts.batch;
+    let backend = opts.backend;
+    let metrics_dump = opts.metrics_dump.as_deref();
     let manifest = Manifest::load(crate::artifacts_dir())?;
     let entry = manifest.arch(arch)?.clone();
     let arch_name = arch.to_string();
@@ -126,11 +262,13 @@ pub fn run_load_quiet(
     let images: Vec<Tensor> =
         (0..64.min(ds.len())).map(|i| ds.batch(i, i + 1)).collect();
 
-    let server = Server::start(
+    let server = Server::start_sharded(
         ServeConfig {
             max_batch: batch,
             max_delay: Duration::from_millis(3),
             queue_depth: 4096,
+            lanes_per_model: opts.lanes.max(1),
+            admission_cap: opts.admission_cap,
             ..ServeConfig::default()
         },
         move || {
@@ -192,22 +330,44 @@ pub fn run_load_quiet(
     server.reset_metrics();
     let metrics = server.metrics_handle();
     let labels = [("model", arch), ("variant", backend.as_str())];
-    let mut rng = Rng::new(seed);
+    let traffic = LoadGen {
+        slo_mix: opts.slo_mix,
+        ..LoadGen::poisson(opts.rate)
+    };
+    let mut rng = Rng::new(opts.seed);
+    let mut t = 0.0;
+    let mut shed = 0u64;
     let mut pending = Vec::with_capacity(requests);
     for i in 0..requests {
-        pending.push(client.submit(images[i % images.len()].clone())?);
+        let prio = traffic.pick_class(&mut rng);
+        match client.submit_prio(images[i % images.len()].clone(), prio) {
+            Ok(rx) => pending.push(rx),
+            Err(e)
+                if matches!(
+                    e.downcast_ref::<SubmitError>(),
+                    Some(SubmitError::Shed { .. })
+                ) =>
+            {
+                shed += 1;
+            }
+            Err(e) => return Err(e),
+        }
         if let Some(path) = metrics_dump {
             if i % DUMP_EVERY == 0 {
                 dump_exposition(path, &metrics.exposition(&labels));
             }
         }
-        let gap = rng.exp(rate);
+        let gap = traffic.next_gap(&mut rng, t);
+        t += gap;
         if gap > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
         }
     }
     for rx in pending {
         rx.recv()??;
+    }
+    if shed > 0 {
+        eprintln!("[serve] shed {shed}/{requests} over-cap submissions");
     }
     if let Some(path) = metrics_dump {
         std::fs::write(path, metrics.exposition(&labels))?;
@@ -244,6 +404,22 @@ pub struct RegistryLoadOpts {
     /// exposition covering every resident (model, variant) server
     /// (`dfq serve ... --metrics-dump FILE`).
     pub metrics_dump: Option<PathBuf>,
+    /// Worker lanes per (model, variant) (`--lanes N`).
+    pub lanes: usize,
+    /// Per-model in-flight admission cap, 0 = unbounded
+    /// (`--admission-cap N`). Over-cap submissions shed typed.
+    pub admission_cap: usize,
+    /// Fraction of arrivals in the interactive SLO class
+    /// (`--slo-mix F`, default 1.0 = all interactive).
+    pub slo_mix: f64,
+    /// Zipf popularity exponent across models (`--zipf S`; 0 keeps the
+    /// legacy round-robin).
+    pub zipf_s: f64,
+    /// Diurnal rate-modulation amplitude in `[0, 1)`
+    /// (`--diurnal-amp F`; 0 = flat Poisson).
+    pub diurnal_amp: f64,
+    /// Burst-window rate multiplier (`--burst-mult F`; 1 = no bursts).
+    pub burst_mult: f64,
 }
 
 impl Default for RegistryLoadOpts {
@@ -257,6 +433,12 @@ impl Default for RegistryLoadOpts {
             mmap: true,
             seed: 4242,
             metrics_dump: None,
+            lanes: 1,
+            admission_cap: 0,
+            slo_mix: 1.0,
+            zipf_s: 0.0,
+            diurnal_amp: 0.0,
+            burst_mult: 1.0,
         }
     }
 }
@@ -264,9 +446,9 @@ impl Default for RegistryLoadOpts {
 /// Multi-tenant load over a directory of compiled `.dfqm` artifacts:
 /// scan + load every model into a [`Registry`] (no python manifest, no
 /// DFQ re-run — the plans boot straight off the artifact bytes), fire
-/// Poisson arrivals round-robin across models on the int8 variant, and
-/// return per-`model/variant` metrics (one entry per server generation
-/// when hot swaps or evictions happened). Used by
+/// trace-driven arrivals (see [`LoadGen`]) across models on the int8
+/// variant, and return per-`model/variant` metrics (one entry per
+/// server generation when hot swaps or evictions happened). Used by
 /// `dfq serve --models dir/` and the serving bench.
 pub fn run_registry_load(
     dir: &str,
@@ -281,13 +463,28 @@ pub fn run_registry_load(
         mmap,
         seed,
         metrics_dump,
+        lanes,
+        admission_cap,
+        slo_mix,
+        zipf_s,
+        diurnal_amp,
+        burst_mult,
     } = opts;
+    let traffic = LoadGen {
+        diurnal_amp,
+        burst_mult,
+        zipf_s,
+        slo_mix,
+        ..LoadGen::poisson(rate)
+    };
     let mut reg = Registry::new(ServeConfig {
         max_batch: batch,
         max_delay: Duration::from_millis(3),
         queue_depth: 4096,
         max_resident,
         mmap,
+        lanes_per_model: lanes.max(1),
+        admission_cap,
         ..ServeConfig::default()
     });
     let names = reg.scan_dir(dir)?;
@@ -306,6 +503,9 @@ pub fn run_registry_load(
         inputs.push(Tensor::new(&[1, c, h, w], data));
     }
     let mut pending = Vec::with_capacity(requests);
+    let cdf = traffic.zipf_cdf(names.len());
+    let mut t = 0.0;
+    let mut shed = 0u64;
     // dir-stamp debounce lets the watch tick run 4x as often as the old
     // per-file poll for less stat traffic on quiet zoos: a quiet tick is
     // one stat per artifact *directory*, not per artifact
@@ -322,23 +522,39 @@ pub fn run_registry_load(
                 }
             }
         }
-        let k = i % names.len();
+        let k = traffic.pick_model(&cdf, &mut rng, i, names.len());
+        let prio = traffic.pick_class(&mut rng);
         // route through the registry each time: under a resident cap
         // this is what re-loads evicted models lazily
         let client = reg.live_client(&names[k], registry::VARIANT_INT8)?;
-        pending.push(client.submit(inputs[k].clone())?);
+        match client.submit_prio(inputs[k].clone(), prio) {
+            Ok(rx) => pending.push(rx),
+            Err(e)
+                if matches!(
+                    e.downcast_ref::<SubmitError>(),
+                    Some(SubmitError::Shed { .. })
+                ) =>
+            {
+                shed += 1;
+            }
+            Err(e) => return Err(e),
+        }
         if let Some(path) = &metrics_dump {
             if i % DUMP_EVERY == 0 {
                 dump_exposition(path, &reg.exposition());
             }
         }
-        let gap = rng.exp(rate);
+        let gap = traffic.next_gap(&mut rng, t);
+        t += gap;
         if gap > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
         }
     }
     for rx in pending {
         rx.recv()??;
+    }
+    if shed > 0 {
+        eprintln!("[serve] shed {shed}/{requests} over-cap submissions");
     }
     if let Some(path) = &metrics_dump {
         std::fs::write(path, reg.exposition())?;
@@ -437,4 +653,78 @@ pub fn run_adaptive_load(
         bail!("{failed} request(s) failed under adaptive routing");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_gen_is_deterministic_and_diurnal() {
+        let traffic =
+            LoadGen { diurnal_amp: 0.5, ..LoadGen::poisson(100.0) };
+        // sinusoid peaks a quarter-period in, troughs at three quarters
+        let peak = traffic.rate_at(traffic.diurnal_period * 0.25);
+        let trough = traffic.rate_at(traffic.diurnal_period * 0.75);
+        assert!((140.0..160.0).contains(&peak), "peak {peak}");
+        assert!((40.0..60.0).contains(&trough), "trough {trough}");
+        // same seed -> identical trace; different seed -> different one
+        let gaps = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut t = 0.0;
+            (0..64)
+                .map(|_| {
+                    let g = traffic.next_gap(&mut rng, t);
+                    t += g;
+                    g
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(gaps(7), gaps(7));
+        assert_ne!(gaps(7), gaps(8));
+    }
+
+    #[test]
+    fn load_gen_bursts_multiply_the_rate() {
+        let traffic = LoadGen {
+            burst_mult: 4.0,
+            burst_every: 2.0,
+            burst_len: 0.25,
+            ..LoadGen::poisson(50.0)
+        };
+        assert_eq!(traffic.rate_at(0.1), 200.0); // inside the window
+        assert_eq!(traffic.rate_at(1.0), 50.0); // between windows
+        assert_eq!(traffic.rate_at(2.1), 200.0); // next window
+    }
+
+    #[test]
+    fn load_gen_zipf_skews_popularity_and_mix_splits_classes() {
+        let traffic = LoadGen {
+            zipf_s: 1.2,
+            slo_mix: 0.75,
+            ..LoadGen::poisson(100.0)
+        };
+        let cdf = traffic.zipf_cdf(4);
+        assert_eq!(cdf.len(), 4);
+        assert!((cdf[3] - 1.0).abs() < 1e-12, "cdf must end at 1");
+        let mut rng = Rng::new(11);
+        let mut counts = [0usize; 4];
+        let mut interactive = 0usize;
+        for i in 0..4000 {
+            counts[traffic.pick_model(&cdf, &mut rng, i, 4)] += 1;
+            if traffic.pick_class(&mut rng) == Priority::Interactive {
+                interactive += 1;
+            }
+        }
+        assert!(
+            counts[0] > counts[1] && counts[1] > counts[3],
+            "no Zipf skew: {counts:?}"
+        );
+        let frac = interactive as f64 / 4000.0;
+        assert!((0.70..0.80).contains(&frac), "slo mix off: {frac}");
+        // zipf_s == 0 keeps the legacy deterministic round-robin
+        let rr = LoadGen::poisson(1.0);
+        assert!(rr.zipf_cdf(4).is_empty());
+        assert_eq!(rr.pick_model(&[], &mut rng, 6, 4), 2);
+    }
 }

@@ -30,6 +30,8 @@ use crate::obs::export::{json_escape, Exposition};
 use crate::obs::hist::Histogram;
 use crate::util::stats::Summary;
 
+use super::batcher::Priority;
+
 /// Checkpoints retained for [`Metrics::window_from`] consumers. Each is
 /// one histogram (~9 KiB). A `Metrics` normally has one window consumer
 /// (its autoscaler lane); with more than `MAX_CHECKPOINTS` concurrently
@@ -46,10 +48,18 @@ pub struct Metrics {
 struct Inner {
     lat: Histogram,
     batch: Histogram,
+    /// Per-SLO-class latency streams, indexed by [`Priority::idx`].
+    /// `lat` stays the combined stream so [`Metrics::window_from`]
+    /// consumers (the autoscaler) are unchanged.
+    lat_class: [Histogram; 2],
     /// Latency samples recorded this epoch — the absolute stream
     /// position [`WindowCursor`]s index.
     total: usize,
     completed: u64,
+    /// Submissions rejected by admission control (load shedding).
+    shed: u64,
+    /// Submissions that passed admission control.
+    accepted: u64,
     /// Requests submitted but not yet pulled off the queue by the worker.
     depth: u64,
     /// Bumped by [`Metrics::reset`] so stale [`WindowCursor`]s are
@@ -87,6 +97,14 @@ pub struct Snapshot {
     pub throughput: f64,
     /// Requests waiting in the queue at snapshot time.
     pub queue_depth: u64,
+    /// Submissions rejected by admission control.
+    pub shed: u64,
+    /// Submissions that passed admission control.
+    pub accepted: u64,
+    /// Latency of the interactive SLO class only.
+    pub latency_interactive: Option<Summary>,
+    /// Latency of the batch SLO class only.
+    pub latency_batch: Option<Summary>,
 }
 
 impl Metrics {
@@ -101,6 +119,50 @@ impl Metrics {
             m.lat.record(l);
         }
         m.total += latencies.len();
+    }
+
+    /// Like [`Metrics::record_batch`] but each latency carries its SLO
+    /// class: the combined stream records every sample (so windows and
+    /// the existing quantiles are identical to the unclassed path) and
+    /// each class additionally lands in its own histogram.
+    pub fn record_batch_classed(
+        &self,
+        batch: usize,
+        latencies: &[(f64, Priority)],
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        let now = Instant::now();
+        m.started.get_or_insert(now);
+        m.finished = Some(now);
+        m.completed += latencies.len() as u64;
+        m.batch.record(batch as f64);
+        for &(l, p) in latencies {
+            m.lat.record(l);
+            m.lat_class[p.idx()].record(l);
+        }
+        m.total += latencies.len();
+    }
+
+    /// One submission rejected by admission control.
+    pub fn shed_one(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// One submission admitted past admission control.
+    pub fn accepted_one(&self) {
+        self.inner.lock().unwrap().accepted += 1;
+    }
+
+    /// Total submissions rejected by admission control.
+    pub fn shed(&self) -> u64 {
+        self.inner.lock().unwrap().shed
+    }
+
+    /// Latency percentile of one SLO class (log-bucket upper bound,
+    /// seconds; 0 when the class has no samples).
+    pub fn class_percentile(&self, class: Priority, p: f64) -> f64 {
+        let m = self.inner.lock().unwrap();
+        m.lat_class[class.idx()].percentile(p)
     }
 
     /// One request entered the queue (called by `Client::submit`).
@@ -154,6 +216,12 @@ impl Metrics {
             batch_size: m.batch.summary(),
             throughput: m.throughput(),
             queue_depth: m.depth,
+            shed: m.shed,
+            accepted: m.accepted,
+            latency_interactive: m.lat_class
+                [Priority::Interactive.idx()]
+            .summary(),
+            latency_batch: m.lat_class[Priority::Batch.idx()].summary(),
         }
     }
 
@@ -236,6 +304,18 @@ impl Metrics {
             labels,
             m.throughput(),
         );
+        e.counter(
+            "dfq_requests_shed",
+            "Submissions rejected by admission control (load shedding).",
+            labels,
+            m.shed as f64,
+        );
+        e.counter(
+            "dfq_requests_accepted",
+            "Submissions admitted past admission control.",
+            labels,
+            m.accepted as f64,
+        );
         let quantiles: Vec<(Vec<(&str, &str)>, f64)> =
             [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)]
                 .iter()
@@ -251,6 +331,22 @@ impl Metrics {
             "dfq_latency_quantile_seconds",
             "Latency quantiles (log-bucket upper bounds).",
             &rows,
+        );
+        let mut class_q: Vec<(Vec<(&str, &str)>, f64)> = Vec::new();
+        for c in [Priority::Interactive, Priority::Batch] {
+            for (q, p) in [("0.95", 95.0), ("0.99", 99.0)] {
+                let mut ls = labels.to_vec();
+                ls.push(("class", c.as_str()));
+                ls.push(("quantile", q));
+                class_q.push((ls, m.lat_class[c.idx()].percentile(p)));
+            }
+        }
+        let class_rows: Vec<(&[(&str, &str)], f64)> =
+            class_q.iter().map(|(ls, v)| (ls.as_slice(), *v)).collect();
+        e.gauge_set(
+            "dfq_latency_class_quantile_seconds",
+            "Per-SLO-class latency quantiles (log-bucket upper bounds).",
+            &class_rows,
         );
         e.histogram(
             "dfq_latency_seconds",
@@ -274,7 +370,9 @@ impl Metrics {
         format!(
             "{{\"name\":\"{}\",\"completed\":{},\"throughput\":{:.3},\
              \"queue_depth\":{},\"p50_s\":{:.6},\"p95_s\":{:.6},\
-             \"p99_s\":{:.6},\"mean_batch\":{:.2}}}",
+             \"p99_s\":{:.6},\"mean_batch\":{:.2},\"shed\":{},\
+             \"accepted\":{},\"p99_interactive_s\":{:.6},\
+             \"p99_batch_s\":{:.6}}}",
             json_escape(name),
             m.completed,
             m.throughput(),
@@ -283,6 +381,10 @@ impl Metrics {
             m.lat.percentile(95.0),
             m.lat.percentile(99.0),
             m.batch.mean(),
+            m.shed,
+            m.accepted,
+            m.lat_class[Priority::Interactive.idx()].percentile(99.0),
+            m.lat_class[Priority::Batch.idx()].percentile(99.0),
         )
     }
 }
@@ -471,6 +573,51 @@ mod tests {
         // and the refreshed cursor consumes disjointly again
         let (_, w5) = m.window_from(c4);
         assert!(w5.is_none());
+    }
+
+    #[test]
+    fn classed_recording_splits_streams_and_counts_sheds() {
+        let m = Metrics::default();
+        m.record_batch_classed(
+            3,
+            &[
+                (0.002, Priority::Interactive),
+                (0.004, Priority::Interactive),
+                (0.100, Priority::Batch),
+            ],
+        );
+        m.shed_one();
+        m.shed_one();
+        m.accepted_one();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.accepted, 1);
+        // combined stream sees every sample; classes split exactly
+        assert_eq!(s.latency.unwrap().n, 3);
+        let li = s.latency_interactive.unwrap();
+        let lb = s.latency_batch.unwrap();
+        assert_eq!((li.n, lb.n), (2, 1));
+        assert!(li.p95 < lb.p95, "interactive class absorbed batch work");
+        // classed recording feeds the same windows as the plain path
+        let (_, w) = m.window_from(WindowCursor::default());
+        assert_eq!(w.unwrap().n, 3);
+        // new counters and class quantiles render in the exposition
+        let text = m.exposition(&[("model", "alpha")]);
+        crate::obs::export::check_exposition(&text).unwrap();
+        assert!(text.contains("dfq_requests_shed"));
+        assert!(text.contains("dfq_requests_accepted"));
+        assert!(text.contains("class=\"interactive\""));
+        assert!(text.contains("class=\"batch\""));
+        let line = m.json_line("serve/alpha");
+        crate::obs::export::check_json_lines(&line).unwrap();
+        assert!(line.contains("\"shed\":2"));
+        assert!(line.contains("\"p99_interactive_s\""));
+        // reset clears the class histograms and counters too
+        m.reset();
+        let s2 = m.snapshot();
+        assert_eq!((s2.shed, s2.accepted), (0, 0));
+        assert!(s2.latency_interactive.is_none());
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //!   LRU eviction of idle models under
 //!   [`ServeConfig::max_resident`] with lazy re-load.
 
+pub mod admission;
 pub mod autoscale;
 pub mod batcher;
 pub mod demo;
@@ -27,8 +28,9 @@ pub mod metrics;
 pub mod registry;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -38,9 +40,13 @@ use crate::graph::Model;
 use crate::nn::{self, QuantCfg};
 use crate::tensor::Tensor;
 
+use batcher::WeightedBacklog;
+
+pub use admission::{AdmissionPermit, AdmissionQueue, SubmitError};
 pub use autoscale::{
     AdaptiveClient, AdaptiveReport, AutoscalePolicy, Autoscaler,
 };
+pub use batcher::Priority;
 pub use metrics::{Metrics, Snapshot, WindowCursor};
 pub use registry::{LiveClient, ModelInfo, Registry, WatchDebounce};
 
@@ -162,6 +168,13 @@ struct Request {
     x: Tensor, // (1, C, H, W)
     resp: Sender<Result<Tensor>>,
     enqueued: Instant,
+    /// SLO class: the per-lane [`WeightedBacklog`] drains interactive
+    /// work first (starvation-bounded), and latency is recorded per
+    /// class.
+    prio: Priority,
+    /// The admission slot this request holds; released on drop, so any
+    /// exit path (answered, failed, drained) frees it.
+    permit: Option<AdmissionPermit>,
 }
 
 /// Queue message: a job, or an explicit stop. The stop sentinel (rather
@@ -193,6 +206,16 @@ pub struct ServeConfig {
     /// file into memory. On by default; `dfq serve --models DIR
     /// --no-mmap` or `DFQ_NO_MMAP=1` turn it off.
     pub mmap: bool,
+    /// Worker lanes per (model, variant) server started through
+    /// [`Server::start_sharded`] — each lane is its own queue + worker
+    /// thread + executor instance, and submissions least-loaded-balance
+    /// across them. `dfq serve --lanes N`. [`Server::start`] (single
+    /// executor factory) always runs one lane.
+    pub lanes_per_model: usize,
+    /// Admission cap: maximum in-flight requests per model before
+    /// submissions are rejected with [`SubmitError::Shed`] instead of
+    /// queueing. `0` means unbounded. `dfq serve --admission-cap N`.
+    pub admission_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -204,64 +227,198 @@ impl Default for ServeConfig {
             autoscale: None,
             max_resident: 0,
             mmap: true,
+            lanes_per_model: 1,
+            admission_cap: 0,
         }
     }
 }
 
-/// One model-variant server: a worker thread + request queue.
-pub struct Server {
+/// One lane of a server: its queue sender, a lock-free count of
+/// requests submitted but not yet scheduled (the balancer's load
+/// signal), and the lane-local metrics view.
+struct LaneHandle {
     tx: SyncSender<Msg>,
+    queued: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
-    worker: Option<JoinHandle<()>>,
+}
+
+/// What a lane worker records into: the shared per-variant [`Metrics`]
+/// (exposition / windows / autoscaler — identical semantics to the
+/// single-lane world) plus its lane-local view, and the lane's queued
+/// counter. With one lane the two metrics handles alias and are
+/// recorded once.
+struct LaneCtx {
+    shared: Arc<Metrics>,
+    lane: Arc<Metrics>,
+    queued: Arc<AtomicU64>,
+}
+
+impl LaneCtx {
+    /// `n` requests left the waiting set (scheduled for execution).
+    fn dequeued(&self, n: u64) {
+        self.queued.fetch_sub(n, Ordering::AcqRel);
+        self.shared.dequeued(n);
+    }
+
+    fn record(&self, batch: usize, lats: &[(f64, Priority)]) {
+        self.shared.record_batch_classed(batch, lats);
+        if !Arc::ptr_eq(&self.shared, &self.lane) {
+            self.lane.record_batch_classed(batch, lats);
+        }
+    }
+}
+
+/// One model-variant server: N worker lanes, each a request queue +
+/// worker thread + executor instance, behind one admission queue and
+/// one shared per-variant [`Metrics`].
+pub struct Server {
+    lanes: Arc<Vec<LaneHandle>>,
+    rr: Arc<AtomicUsize>,
+    metrics: Arc<Metrics>,
+    admission: Arc<AdmissionQueue>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Spawn the worker. `factory` builds the executor on the worker
-    /// thread (PJRT handles are not `Send`).
+    /// Spawn a single-lane server. `factory` builds the executor on the
+    /// worker thread (PJRT handles are not `Send`). One executor means
+    /// one lane regardless of [`ServeConfig::lanes_per_model`]; use
+    /// [`Server::start_sharded`] for sharded ingress.
     pub fn start<F>(cfg: ServeConfig, factory: F) -> Server
     where
         F: FnOnce() -> Result<Box<dyn BatchExecutor>> + Send + 'static,
     {
-        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
+        let once = Mutex::new(Some(factory));
+        Server::start_lanes(cfg, 1, None, move || {
+            let f = once
+                .lock()
+                .unwrap()
+                .take()
+                .expect("single-lane factory called once");
+            f()
+        })
+    }
+
+    /// Spawn [`ServeConfig::lanes_per_model`] worker lanes, calling
+    /// `factory` once per lane (each lane owns its executor instance).
+    /// Submissions least-loaded-balance across lanes; per-lane metrics
+    /// additionally merge into the shared per-variant view.
+    pub fn start_sharded<F>(cfg: ServeConfig, factory: F) -> Server
+    where
+        F: Fn() -> Result<Box<dyn BatchExecutor>> + Send + Sync + 'static,
+    {
+        let n = cfg.lanes_per_model.max(1);
+        Server::start_lanes(cfg, n, None, factory)
+    }
+
+    /// Like [`Server::start_sharded`] but sharing an externally-owned
+    /// [`AdmissionQueue`] — the registry passes one queue per *model*
+    /// so its cap spans all variants.
+    pub fn start_sharded_shared<F>(
+        cfg: ServeConfig,
+        admission: Arc<AdmissionQueue>,
+        factory: F,
+    ) -> Server
+    where
+        F: Fn() -> Result<Box<dyn BatchExecutor>> + Send + Sync + 'static,
+    {
+        let n = cfg.lanes_per_model.max(1);
+        Server::start_lanes(cfg, n, Some(admission), factory)
+    }
+
+    fn start_lanes<F>(
+        cfg: ServeConfig,
+        n: usize,
+        admission: Option<Arc<AdmissionQueue>>,
+        factory: F,
+    ) -> Server
+    where
+        F: Fn() -> Result<Box<dyn BatchExecutor>> + Send + Sync + 'static,
+    {
+        let factory = Arc::new(factory);
         let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let worker = std::thread::spawn(move || {
-            let mut exec = match factory() {
-                Ok(e) => e,
-                Err(e) => {
-                    crate::obs::trace::emit_with(
-                        crate::obs::Severity::Error,
-                        "serve",
-                        || {
-                            (
-                                "executor construction failed".into(),
-                                vec![("error", format!("{e:#}"))],
-                            )
-                        },
-                    );
-                    // fail every request with the construction error
-                    drain_with_error(rx, e, &m2);
-                    return;
-                }
-            };
-            crate::obs::trace::emit_with(
-                crate::obs::Severity::Debug,
-                "serve",
-                || {
-                    (
-                        "worker up".into(),
-                        vec![("max_batch", exec.max_batch().to_string())],
-                    )
-                },
-            );
-            worker_loop(rx, cfg, exec.as_mut(), &m2);
+        let admission = admission.unwrap_or_else(|| {
+            Arc::new(AdmissionQueue::new(cfg.admission_cap))
         });
-        Server { tx, metrics, worker: Some(worker) }
+        let mut lanes = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for lane_id in 0..n {
+            let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
+            // one lane: the lane view IS the shared view (no double
+            // recording); sharded: separate histograms, merged at
+            // record time
+            let lane_metrics = if n == 1 {
+                metrics.clone()
+            } else {
+                Arc::new(Metrics::default())
+            };
+            let ctx = LaneCtx {
+                shared: metrics.clone(),
+                lane: lane_metrics.clone(),
+                queued: Arc::new(AtomicU64::new(0)),
+            };
+            let queued = ctx.queued.clone();
+            let f = factory.clone();
+            let worker = std::thread::spawn(move || {
+                let mut exec = match f() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        crate::obs::trace::emit_with(
+                            crate::obs::Severity::Error,
+                            "serve",
+                            || {
+                                (
+                                    "executor construction failed".into(),
+                                    vec![
+                                        ("lane", lane_id.to_string()),
+                                        ("error", format!("{e:#}")),
+                                    ],
+                                )
+                            },
+                        );
+                        // fail every request with the construction error
+                        drain_with_error(rx, e, &ctx);
+                        return;
+                    }
+                };
+                crate::obs::trace::emit_with(
+                    crate::obs::Severity::Debug,
+                    "serve",
+                    || {
+                        (
+                            "worker up".into(),
+                            vec![
+                                ("lane", lane_id.to_string()),
+                                (
+                                    "max_batch",
+                                    exec.max_batch().to_string(),
+                                ),
+                            ],
+                        )
+                    },
+                );
+                worker_loop(rx, cfg, exec.as_mut(), &ctx);
+            });
+            lanes.push(LaneHandle { tx, queued, metrics: lane_metrics });
+            workers.push(worker);
+        }
+        Server {
+            lanes: Arc::new(lanes),
+            rr: Arc::new(AtomicUsize::new(0)),
+            metrics,
+            admission,
+            workers,
+        }
     }
 
     /// A cheap cloneable submission handle.
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone(), metrics: self.metrics.clone() }
+        Client {
+            lanes: self.lanes.clone(),
+            rr: self.rr.clone(),
+            metrics: self.metrics.clone(),
+            admission: self.admission.clone(),
+        }
     }
 
     pub fn metrics(&self) -> Snapshot {
@@ -273,17 +430,55 @@ impl Server {
         self.metrics.clone()
     }
 
+    /// Per-lane metrics views, in lane order. With one lane this is the
+    /// same handle as [`Server::metrics_handle`]; sharded lanes each
+    /// record their own slice of the traffic (summing to the shared
+    /// view).
+    pub fn lane_metrics(&self) -> Vec<Arc<Metrics>> {
+        self.lanes.iter().map(|l| l.metrics.clone()).collect()
+    }
+
+    /// Number of worker lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// This server's admission queue (shared across lanes; possibly
+    /// across variants when started via
+    /// [`Server::start_sharded_shared`]).
+    pub fn admission_handle(&self) -> Arc<AdmissionQueue> {
+        self.admission.clone()
+    }
+
     /// Clear recorded metrics (use after warm-up traffic).
     pub fn reset_metrics(&self) {
         self.metrics.reset();
+        for l in self.lanes.iter() {
+            if !Arc::ptr_eq(&l.metrics, &self.metrics) {
+                l.metrics.reset();
+            }
+        }
     }
 
-    /// Stop the worker (queued jobs are still served) and join it.
-    /// Live `Client` handles error out afterwards.
+    /// Send the stop sentinel to every lane without joining — phase one
+    /// of a concurrent drain ([`Router::shutdown`] signals *all* its
+    /// servers before joining any, so retired lanes drain in parallel).
+    pub fn signal_stop(&self) {
+        for lane in self.lanes.iter() {
+            if lane.tx.try_send(Msg::Stop).is_err() {
+                // queue full: block until the draining worker frees a
+                // slot; a dead worker makes this fail, which is fine —
+                // it needs no sentinel
+                let _ = lane.tx.send(Msg::Stop);
+            }
+        }
+    }
+
+    /// Stop every lane (queued jobs are still served) and join the
+    /// workers. Live `Client` handles error out afterwards.
     pub fn shutdown(mut self) -> Snapshot {
-        let _ = self.tx.send(Msg::Stop);
-        drop(self.tx);
-        if let Some(w) = self.worker.take() {
+        self.signal_stop();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
         let snap = self.metrics.snapshot();
@@ -301,10 +496,10 @@ impl Server {
     }
 }
 
-fn drain_with_error(rx: Receiver<Msg>, e: anyhow::Error, metrics: &Metrics) {
+fn drain_with_error(rx: Receiver<Msg>, e: anyhow::Error, ctx: &LaneCtx) {
     let msg = format!("executor construction failed: {e:#}");
     let fail = |req: Request| {
-        metrics.dequeued(1);
+        ctx.dequeued(1);
         let _ = req.resp.send(Err(anyhow!("{msg}")));
     };
     while let Ok(m) = rx.recv() {
@@ -326,27 +521,39 @@ fn worker_loop(
     rx: Receiver<Msg>,
     cfg: ServeConfig,
     exec: &mut dyn BatchExecutor,
-    metrics: &Metrics,
+    ctx: &LaneCtx,
 ) {
     let policy = batcher::Batcher {
         max_batch: cfg.max_batch.min(exec.max_batch()),
         max_delay: cfg.max_delay,
     };
-    while let Some(msgs) = policy.next_batch(&rx) {
+    let mut backlog: WeightedBacklog<Request> =
+        WeightedBacklog::new(batcher::DEFAULT_STARVATION_LIMIT);
+    loop {
         let mut stop = false;
-        let mut batch = Vec::with_capacity(msgs.len());
-        for m in msgs {
-            match m {
-                Msg::Job(req) => batch.push(req),
-                Msg::Stop => stop = true,
+        if backlog.is_empty() {
+            // block like the plain batcher: first arrival, then fill
+            // until max_batch or the delay deadline
+            match policy.next_batch(&rx) {
+                Some(msgs) => {
+                    for m in msgs {
+                        match m {
+                            Msg::Job(r) => backlog.push(r.prio, r),
+                            Msg::Stop => stop = true,
+                        }
+                    }
+                }
+                None => break, // channel closed and nothing queued
             }
-        }
-        if !batch.is_empty() {
-            // the batch has left the queue: the depth gauge drops
-            // *before* execution so the autoscaler sees waiting work,
-            // not in-flight work
-            metrics.dequeued(batch.len() as u64);
-            serve_batch(batch, exec, metrics);
+        } else {
+            // backlog pending: top up without blocking so buffered
+            // arrivals join this scheduling round
+            while let Ok(m) = rx.try_recv() {
+                match m {
+                    Msg::Job(r) => backlog.push(r.prio, r),
+                    Msg::Stop => stop = true,
+                }
+            }
         }
         if stop {
             // a submission racing a shutdown/hot-swap can land behind
@@ -360,43 +567,44 @@ fn worker_loop(
             // which the caller observes as a recv error, and
             // `LiveClient::infer` resubmits (an unanswered request was
             // never executed).
-            drain_backlog(&rx, policy.max_batch, exec, metrics);
+            while let Ok(m) = rx.try_recv() {
+                if let Msg::Job(r) = m {
+                    backlog.push(r.prio, r);
+                }
+            }
+            while !backlog.is_empty() {
+                run_scheduled(&mut backlog, policy.max_batch, exec, ctx);
+            }
             break;
         }
+        run_scheduled(&mut backlog, policy.max_batch, exec, ctx);
     }
 }
 
-/// Serve every job already sitting in the queue, in batches, without
-/// blocking for more. Used on the shutdown path after the Stop
-/// sentinel.
-fn drain_backlog(
-    rx: &Receiver<Msg>,
+/// Take one scheduled batch off the backlog (interactive first,
+/// starvation-bounded) and execute it.
+fn run_scheduled(
+    backlog: &mut WeightedBacklog<Request>,
     max_batch: usize,
     exec: &mut dyn BatchExecutor,
-    metrics: &Metrics,
+    ctx: &LaneCtx,
 ) {
-    loop {
-        let mut batch = Vec::new();
-        while batch.len() < max_batch {
-            match rx.try_recv() {
-                Ok(Msg::Job(req)) => batch.push(req),
-                Ok(Msg::Stop) => {}
-                Err(_) => break,
-            }
-        }
-        if batch.is_empty() {
-            break;
-        }
-        metrics.dequeued(batch.len() as u64);
-        serve_batch(batch, exec, metrics);
+    let batch: Vec<Request> =
+        backlog.take(max_batch).into_iter().map(|(_, r)| r).collect();
+    if batch.is_empty() {
+        return;
     }
+    // the batch is scheduled: the depth gauge drops *before* execution
+    // so the autoscaler sees waiting work, not in-flight work
+    ctx.dequeued(batch.len() as u64);
+    serve_batch(batch, exec, ctx);
 }
 
 /// Execute one assembled batch and reply to every request in it.
 fn serve_batch(
     batch: Vec<Request>,
     exec: &mut dyn BatchExecutor,
-    metrics: &Metrics,
+    ctx: &LaneCtx,
 ) {
     let n = batch.len();
     let x = stack(&batch);
@@ -410,11 +618,11 @@ fn serve_batch(
             // record *before* replying so a client that resets
             // metrics right after its response cannot race the
             // bookkeeping of its own batch
-            let lats: Vec<f64> = batch
+            let lats: Vec<(f64, Priority)> = batch
                 .iter()
-                .map(|r| (done - r.enqueued).as_secs_f64())
+                .map(|r| ((done - r.enqueued).as_secs_f64(), r.prio))
                 .collect();
-            metrics.record_batch(n, &lats);
+            ctx.record(n, &lats);
             for (i, req) in batch.into_iter().enumerate() {
                 let one = Tensor::new(
                     &shape,
@@ -459,38 +667,121 @@ fn truncate(x: &Tensor, n: usize) -> Tensor {
     Tensor::new(&shape, x.data()[..n * per].to_vec())
 }
 
+/// Why a `try_submit` did not enqueue: the server is gone (tensor
+/// handed back so a newer route can retry without cloning), or the
+/// admission cap shed the request (no retry — that's the point).
+pub(crate) enum TrySubmitErr {
+    Closed(Tensor),
+    Shed { in_flight: u64, cap: u64 },
+}
+
 /// Submission handle for one server.
 #[derive(Clone)]
 pub struct Client {
-    tx: SyncSender<Msg>,
+    lanes: Arc<Vec<LaneHandle>>,
+    rr: Arc<AtomicUsize>,
     /// Same handle the server records into — submissions bump the live
     /// queue-depth gauge so the autoscaler sees backlog as it forms.
     metrics: Arc<Metrics>,
+    admission: Arc<AdmissionQueue>,
 }
 
 impl Client {
-    /// Submit one image (1, C, H, W); returns a receiver for the result.
+    /// Submit one image (1, C, H, W) as interactive-class; returns a
+    /// receiver for the result.
     pub fn submit(&self, x: Tensor) -> Result<Receiver<Result<Tensor>>> {
-        self.try_submit(x).map_err(|_| anyhow!("server is shut down"))
+        self.submit_prio(x, Priority::Interactive)
     }
 
-    /// Like [`Client::submit`] but hands the tensor back when this
-    /// server is gone, so a caller holding a newer route (the registry's
-    /// hot-swap [`LiveClient`]) can retry without cloning the input.
-    pub(crate) fn try_submit(
+    /// Submit one image with an explicit SLO class. An over-cap
+    /// submission fails immediately with a typed
+    /// [`SubmitError::Shed`] in the error chain (downcastable) instead
+    /// of queueing.
+    pub fn submit_prio(
         &self,
         x: Tensor,
-    ) -> std::result::Result<Receiver<Result<Tensor>>, Tensor> {
+        prio: Priority,
+    ) -> Result<Receiver<Result<Tensor>>> {
+        self.try_submit_prio(x, prio).map_err(|e| match e {
+            TrySubmitErr::Closed(_) => SubmitError::Closed.into(),
+            TrySubmitErr::Shed { in_flight, cap } => {
+                SubmitError::Shed { in_flight, cap }.into()
+            }
+        })
+    }
+
+    /// Least-loaded lane, scanning from a rotating start so ties (the
+    /// idle steady state) round-robin instead of pinning lane 0.
+    fn pick_lane(&self) -> &LaneHandle {
+        let lanes = &*self.lanes;
+        if lanes.len() == 1 {
+            return &lanes[0];
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % lanes.len();
+        let mut best = start;
+        let mut best_q = lanes[start].queued.load(Ordering::Relaxed);
+        for k in 1..lanes.len() {
+            let i = (start + k) % lanes.len();
+            let q = lanes[i].queued.load(Ordering::Relaxed);
+            if q < best_q {
+                best = i;
+                best_q = q;
+            }
+        }
+        &lanes[best]
+    }
+
+    /// Like [`Client::submit_prio`] but hands the tensor back when this
+    /// server is gone, so a caller holding a newer route (the registry's
+    /// hot-swap [`LiveClient`]) can retry without cloning the input.
+    /// A shed is *not* retryable — the admission queue spans server
+    /// generations of the same model.
+    pub(crate) fn try_submit_prio(
+        &self,
+        x: Tensor,
+        prio: Priority,
+    ) -> std::result::Result<Receiver<Result<Tensor>>, TrySubmitErr> {
+        let permit = match self.admission.try_admit() {
+            Ok(p) => Some(p),
+            Err(in_flight) => {
+                let cap = self.admission.cap();
+                self.metrics.shed_one();
+                crate::obs::trace::emit_with(
+                    crate::obs::Severity::Warn,
+                    "serve",
+                    || {
+                        (
+                            "shed".into(),
+                            vec![
+                                ("in_flight", in_flight.to_string()),
+                                ("cap", cap.to_string()),
+                                ("class", prio.as_str().to_string()),
+                            ],
+                        )
+                    },
+                );
+                return Err(TrySubmitErr::Shed { in_flight, cap });
+            }
+        };
+        self.metrics.accepted_one();
         let (rtx, rrx) = mpsc::channel();
+        let lane = self.pick_lane();
         self.metrics.enqueued();
-        match self
-            .tx
-            .send(Msg::Job(Request { x, resp: rtx, enqueued: Instant::now() }))
-        {
+        lane.queued.fetch_add(1, Ordering::AcqRel);
+        match lane.tx.send(Msg::Job(Request {
+            x,
+            resp: rtx,
+            enqueued: Instant::now(),
+            prio,
+            permit,
+        })) {
             Ok(()) => Ok(rrx),
             Err(mpsc::SendError(Msg::Job(req))) => {
+                lane.queued.fetch_sub(1, Ordering::AcqRel);
                 self.metrics.dequeued(1);
-                Err(req.x)
+                // dismantle the request: the admission permit drops
+                // here, freeing the slot for the retry route
+                Err(TrySubmitErr::Closed(req.x))
             }
             Err(mpsc::SendError(Msg::Stop)) => {
                 unreachable!("submit only sends jobs")
@@ -498,9 +789,14 @@ impl Client {
         }
     }
 
-    /// Submit and block for the answer.
+    /// Submit and block for the answer (interactive-class).
     pub fn infer(&self, x: Tensor) -> Result<Tensor> {
-        self.submit(x)?
+        self.infer_prio(x, Priority::Interactive)
+    }
+
+    /// Submit with an explicit SLO class and block for the answer.
+    pub fn infer_prio(&self, x: Tensor, prio: Priority) -> Result<Tensor> {
+        self.submit_prio(x, prio)?
             .recv()
             .map_err(|_| anyhow!("server dropped the request"))?
     }
@@ -563,10 +859,22 @@ impl Router {
         Ok((s.client(), s.metrics_handle()))
     }
 
+    /// Stop every variant server and collect their final snapshots.
+    ///
+    /// Two-phase: the stop sentinel goes to **every lane of every
+    /// server first**, then the workers are joined. All retired lanes
+    /// therefore drain concurrently — a hot-swapped router with
+    /// `lanes_per_model` lanes × variants drains in the time of its
+    /// slowest lane, not the sum (the old serial drain scaled with lane
+    /// count). The zero-dropped-requests invariant is unchanged: every
+    /// queued job is still served before its worker exits.
     pub fn shutdown(self) -> Vec<(String, Snapshot)> {
+        for s in self.servers.values() {
+            s.signal_stop();
+        }
         self.servers
             .into_iter()
-            .map(|(k, s)| (k.clone(), s.shutdown()))
+            .map(|(k, s)| (k, s.shutdown()))
             .collect()
     }
 }
@@ -708,5 +1016,132 @@ mod tests {
             assert!(y.max_abs_diff(&solo) < 1e-6);
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn sharded_lanes_spread_traffic_and_merge_into_shared_metrics() {
+        let model =
+            bn_fold::fold(&testutil::two_layer_model(77, true)).unwrap();
+        let cfg = QuantCfg::fp32(&model);
+        let server = Server::start_sharded(
+            ServeConfig {
+                lanes_per_model: 3,
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                ..ServeConfig::default()
+            },
+            move || {
+                Ok(Box::new(EngineExecutor {
+                    model: model.clone(),
+                    cfg: cfg.clone(),
+                    max_batch: 8,
+                }))
+            },
+        );
+        assert_eq!(server.lanes(), 3);
+        let client = server.client();
+        let x = Tensor::full(&[1, 3, 8, 8], 0.5);
+        let want = client.infer(x.clone()).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..29 {
+            let prio = if i % 3 == 0 {
+                Priority::Batch
+            } else {
+                Priority::Interactive
+            };
+            rxs.push(client.submit_prio(x.clone(), prio).unwrap());
+        }
+        for rx in rxs {
+            let y = rx.recv().unwrap().unwrap();
+            assert!(y.max_abs_diff(&want) < 1e-6, "lanes must agree");
+        }
+        let lane_totals: Vec<u64> = server
+            .lane_metrics()
+            .iter()
+            .map(|m| m.snapshot().completed)
+            .collect();
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 30);
+        assert_eq!(
+            lane_totals.iter().sum::<u64>(),
+            30,
+            "per-lane metrics must merge to the shared total: {lane_totals:?}"
+        );
+        assert!(
+            lane_totals.iter().all(|&t| t > 0),
+            "idle-tie round-robin should reach every lane: {lane_totals:?}"
+        );
+        // both SLO classes recorded into their own streams
+        assert_eq!(snap.latency_interactive.unwrap().n, 20);
+        assert_eq!(snap.latency_batch.unwrap().n, 10);
+        assert_eq!(snap.accepted, 30);
+        assert_eq!(snap.shed, 0);
+    }
+
+    /// Executor that blocks on an external gate, making admission-cap
+    /// tests deterministic: a permit stays held exactly until the gate
+    /// releases its batch.
+    struct GateExec {
+        gate: std::sync::mpsc::Receiver<()>,
+    }
+
+    impl BatchExecutor for GateExec {
+        fn max_batch(&self) -> usize {
+            1
+        }
+        fn run_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+            self.gate
+                .recv()
+                .map_err(|_| anyhow!("gate closed"))?;
+            Ok(x.clone())
+        }
+    }
+
+    #[test]
+    fn admission_cap_sheds_with_typed_error_and_recovers() {
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let server = Server::start(
+            ServeConfig {
+                admission_cap: 1,
+                max_batch: 1,
+                max_delay: Duration::from_millis(1),
+                ..ServeConfig::default()
+            },
+            move || Ok(Box::new(GateExec { gate: gate_rx })),
+        );
+        let client = server.client();
+        let x = Tensor::full(&[1, 2, 2, 2], 0.5);
+        // #1 holds the only slot while the gate blocks it
+        let rx1 = client.submit(x.clone()).unwrap();
+        // #2 is over cap: typed, immediate rejection — not queued
+        let err = client.submit(x.clone()).unwrap_err();
+        match err.downcast_ref::<SubmitError>() {
+            Some(SubmitError::Shed { in_flight, cap }) => {
+                assert_eq!((*in_flight, *cap), (1, 1));
+            }
+            other => panic!("expected typed Shed, got {other:?}"),
+        }
+        // the shed is visible in metrics + exposition
+        assert_eq!(server.metrics().shed, 1);
+        let text = server.metrics_handle().exposition(&[]);
+        assert!(text.contains("dfq_requests_shed 1"), "{text}");
+        // release #1; its permit frees on reply, so admission recovers
+        gate_tx.send(()).unwrap();
+        rx1.recv().unwrap().unwrap();
+        let rx3 = loop {
+            // the permit drops moments after the reply lands; poll past
+            // the tiny race window
+            match client.submit(x.clone()) {
+                Ok(rx) => break rx,
+                Err(_) => std::thread::sleep(Duration::from_millis(1)),
+            }
+        };
+        gate_tx.send(()).unwrap();
+        rx3.recv().unwrap().unwrap();
+        drop(gate_tx);
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.accepted, 2);
+        assert_eq!(snap.shed, 1);
     }
 }

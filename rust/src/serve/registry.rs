@@ -34,7 +34,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::Receiver;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::SystemTime;
 
 use anyhow::{anyhow, bail, Result};
@@ -47,8 +47,9 @@ use crate::tensor::Tensor;
 
 use super::autoscale::AdaptiveClient;
 use super::{
-    Client, EngineExecutor, QuantExecutor, Router, ServeConfig, Server,
-    Snapshot,
+    AdmissionQueue, BatchExecutor, Client, EngineExecutor, Priority,
+    QuantExecutor, Router, ServeConfig, Server, Snapshot, SubmitError,
+    TrySubmitErr,
 };
 
 /// The variant every registry model exposes (true-int8 plan).
@@ -164,18 +165,36 @@ pub struct LiveClient {
 
 impl LiveClient {
     /// Submit one image (1, C, H, W); returns a receiver for the result.
+    /// Interactive SLO class — see [`LiveClient::submit_prio`].
     pub fn submit(&self, x: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        self.submit_prio(x, Priority::Interactive)
+    }
+
+    /// Submit with an explicit SLO class. A hot-swap race (the cloned
+    /// generation drained before the send landed) is retried once
+    /// against the swapped-in slot; a typed
+    /// [`SubmitError::Shed`](super::SubmitError::Shed) rejection is
+    /// surfaced as-is — shedding signals real overload, and an
+    /// immediate retry would defeat the admission cap.
+    pub fn submit_prio(
+        &self,
+        x: Tensor,
+        prio: Priority,
+    ) -> Result<Receiver<Result<Tensor>>> {
         // clone the current-generation client so the slot lock is not
         // held while a full queue blocks the send
         let client = self.slot.read().unwrap().clone();
-        match client.try_submit(x) {
+        match client.try_submit_prio(x, prio) {
             Ok(rx) => Ok(rx),
-            Err(x) => {
+            Err(TrySubmitErr::Shed { in_flight, cap }) => {
+                Err(SubmitError::Shed { in_flight, cap }.into())
+            }
+            Err(TrySubmitErr::Closed(x)) => {
                 // lost a race with a hot swap: the generation we cloned
                 // drained before the send landed. The slot already holds
                 // the replacement — retry once against it.
                 let client = self.slot.read().unwrap().clone();
-                client.submit(x)
+                client.submit_prio(x, prio)
             }
         }
     }
@@ -186,10 +205,15 @@ impl LiveClient {
     /// happens the request is resubmitted once against the swapped-in
     /// generation.
     pub fn infer(&self, x: Tensor) -> Result<Tensor> {
-        match self.submit(x.clone())?.recv() {
+        self.infer_prio(x, Priority::Interactive)
+    }
+
+    /// [`LiveClient::infer`] with an explicit SLO class.
+    pub fn infer_prio(&self, x: Tensor, prio: Priority) -> Result<Tensor> {
+        match self.submit_prio(x.clone(), prio)?.recv() {
             Ok(result) => result,
             Err(_) => self
-                .submit(x)?
+                .submit_prio(x, prio)?
                 .recv()
                 .map_err(|_| anyhow!("server dropped the request"))?,
         }
@@ -439,7 +463,11 @@ impl Registry {
     /// swap the router behind every [`LiveClient`] *before* draining
     /// the old generation — in-flight and queued requests complete on
     /// the old server while new submissions hit the new one, so nothing
-    /// is dropped. The new generation is *warmed up* (one zero batch per
+    /// is dropped. Every retired lane is stop-signalled before any is
+    /// joined ([`super::Router::shutdown`] drains them concurrently),
+    /// so swap latency does not scale with
+    /// [`ServeConfig::lanes_per_model`](super::ServeConfig::lanes_per_model).
+    /// The new generation is *warmed up* (one zero batch per
     /// variant) before any slot flips, so the first real request after a
     /// swap never pays worker spin-up or arena-growth latency. On
     /// failure (missing / corrupt / version-skewed file) the typed
@@ -755,27 +783,65 @@ fn warm_up(hosted: &Hosted) {
     }
 }
 
+/// Turn a pre-built pool of executors (one per lane, constructed
+/// eagerly so load errors surface at load time, not per-request) into
+/// the lane factory [`Server::start_sharded_shared`] expects: each lane
+/// pops one executor. Pre-building sidesteps any `Clone` requirement on
+/// the executor while keeping every lane on its own scratch arenas.
+fn lane_pool(
+    execs: Vec<Box<dyn BatchExecutor + Send>>,
+) -> impl Fn() -> Result<Box<dyn BatchExecutor>> + Send + Sync + 'static {
+    let pool = Mutex::new(execs);
+    move || {
+        let exec: Box<dyn BatchExecutor> = pool
+            .lock()
+            .unwrap()
+            .pop()
+            .ok_or_else(|| anyhow!("lane executor pool exhausted"))?;
+        Ok(exec)
+    }
+}
+
 fn load_entry(cfg: ServeConfig, name: &str, source: &Source) -> Result<Hosted> {
     let max_batch = cfg.max_batch;
+    let lanes = cfg.lanes_per_model.max(1);
+    // one admission queue per *model*, shared by every lane of every
+    // variant — the cap bounds the model's total in-flight work, so
+    // spreading load across variants cannot exceed it
+    let admission = Arc::new(AdmissionQueue::new(cfg.admission_cap));
     match source {
         Source::File(path) => {
             // mmap by default: weight tensors become typed views into
-            // the page-cache-backed mapping, so N resident models (or N
-            // serving processes on one zoo) share physical weight pages
-            // and a cold boot skips the full-file read
-            let art = if cfg.mmap {
-                Artifact::open_mmap(path)?
-            } else {
-                Artifact::open(path)?
-            };
-            let (ainfo, qmodel) = art.into_parts();
-            let plan = qmodel.summary();
+            // the page-cache-backed mapping, so N resident models, N
+            // lanes, or N serving processes on one zoo share physical
+            // weight pages and a cold boot skips the full-file read.
+            // Each lane decodes its own plan (scratch arenas are
+            // per-worker); with mmap the per-lane cost is the decode
+            // walk, not a weight copy.
+            let mut pool: Vec<Box<dyn BatchExecutor + Send>> =
+                Vec::with_capacity(lanes);
+            let mut meta = None;
+            for _ in 0..lanes {
+                let art = if cfg.mmap {
+                    Artifact::open_mmap(path)?
+                } else {
+                    Artifact::open(path)?
+                };
+                let (ainfo, qmodel) = art.into_parts();
+                if meta.is_none() {
+                    meta = Some((ainfo, qmodel.summary()));
+                }
+                pool.push(Box::new(QuantExecutor { qmodel, max_batch }));
+            }
+            let (ainfo, plan) = meta.expect("lanes >= 1");
             let mut router = Router::new();
             router.add(
                 VARIANT_INT8,
-                Server::start(cfg, move || {
-                    Ok(Box::new(QuantExecutor { qmodel, max_batch }))
-                }),
+                Server::start_sharded_shared(
+                    cfg,
+                    admission,
+                    lane_pool(pool),
+                ),
             );
             Ok(Hosted {
                 router,
@@ -790,27 +856,43 @@ fn load_entry(cfg: ServeConfig, name: &str, source: &Source) -> Result<Hosted> {
             })
         }
         Source::Memory(q) => {
-            // build the plan eagerly so load errors surface here (and
-            // the summary is reportable), then hand it to the worker
-            let qmodel = q.pack_int8()?;
-            let plan = qmodel.summary();
+            // build the plans eagerly so load errors surface here (and
+            // the summary is reportable), then hand them to the workers
+            let mut int8_pool: Vec<Box<dyn BatchExecutor + Send>> =
+                Vec::with_capacity(lanes);
+            let mut f32_pool: Vec<Box<dyn BatchExecutor + Send>> =
+                Vec::with_capacity(lanes);
+            let mut plan = None;
+            for _ in 0..lanes {
+                let qmodel = q.pack_int8()?;
+                if plan.is_none() {
+                    plan = Some(qmodel.summary());
+                }
+                int8_pool
+                    .push(Box::new(QuantExecutor { qmodel, max_batch }));
+                f32_pool.push(Box::new(EngineExecutor {
+                    model: q.model.clone(),
+                    cfg: q.act_cfg.clone(),
+                    max_batch,
+                }));
+            }
+            let plan = plan.expect("lanes >= 1");
             let mut router = Router::new();
-            let (model, act_cfg) = (q.model.clone(), q.act_cfg.clone());
             router.add(
                 VARIANT_F32,
-                Server::start(cfg, move || {
-                    Ok(Box::new(EngineExecutor {
-                        model,
-                        cfg: act_cfg,
-                        max_batch,
-                    }))
-                }),
+                Server::start_sharded_shared(
+                    cfg,
+                    admission.clone(),
+                    lane_pool(f32_pool),
+                ),
             );
             router.add(
                 VARIANT_INT8,
-                Server::start(cfg, move || {
-                    Ok(Box::new(QuantExecutor { qmodel, max_batch }))
-                }),
+                Server::start_sharded_shared(
+                    cfg,
+                    admission,
+                    lane_pool(int8_pool),
+                ),
             );
             Ok(Hosted {
                 router,
@@ -1081,6 +1163,43 @@ mod tests {
             "mmap-loaded registry output drifted from the copy load"
         );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_registry_serves_identical_logits_and_merged_totals() {
+        let q = quantized(73);
+        let x = testutil::random_input(&q.model, 1, 13);
+        let want = q.pack_int8().unwrap().run(&x).unwrap();
+        let mut reg = Registry::new(ServeConfig {
+            lanes_per_model: 3,
+            ..ServeConfig::default()
+        });
+        reg.register_quantized("m", q).unwrap();
+        let client = reg.live_client("m", VARIANT_INT8).unwrap();
+        let pending: Vec<_> = (0..12)
+            .map(|i| {
+                let p = if i % 2 == 0 {
+                    Priority::Interactive
+                } else {
+                    Priority::Batch
+                };
+                client.submit_prio(x.clone(), p).unwrap()
+            })
+            .collect();
+        for rx in pending {
+            let y = rx.recv().unwrap().unwrap();
+            assert_eq!(
+                y.data(),
+                want.data(),
+                "sharded lane output drifted from the serial plan"
+            );
+        }
+        let int8 = reg.metrics("m", VARIANT_INT8).unwrap();
+        assert_eq!(
+            int8.completed, 12,
+            "per-lane traffic must merge into the shared variant view"
+        );
+        reg.shutdown();
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Sharded-ingress integration tests: the exactly-once answering
+//! property under random interleavings of shed-inducing bursts, hot
+//! swaps and evictions, and the per-lane metrics merge invariant
+//! (lane views sum to the shared per-variant view, which matches a
+//! single-lane baseline on the same workload). Companion to
+//! `tests/serve_lifecycle.rs` (registry lifecycle) — this file covers
+//! the admission/lane layer underneath it.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dfq::dfq::{
+    quantize_data_free, testutil, BiasCorrMode, DfqConfig, QuantizedModel,
+};
+use dfq::nn::qengine::PlanOpts;
+use dfq::quant::QScheme;
+use dfq::serve::registry::VARIANT_INT8;
+use dfq::serve::{
+    BatchExecutor, Priority, QuantExecutor, Registry, ServeConfig, Server,
+    SubmitError,
+};
+use dfq::util::rng::Rng;
+
+fn quantized(seed: u64) -> QuantizedModel {
+    let m = testutil::two_layer_model(seed, true);
+    let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+    prep.quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+        .unwrap()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("dfq-ingress-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The exactly-once property: under a random interleaving of
+/// over-capacity bursts, hot swaps and evict/re-load cycles, every
+/// submitted request is either answered exactly once or rejected
+/// exactly once with the typed shed error — nothing vanishes, nothing
+/// double-fires, and the shed path actually triggers.
+#[test]
+fn random_shed_swap_evict_interleavings_answer_every_request_once() {
+    let dir = temp_dir("exactly-once");
+    let path = dir.join("m.dfqm");
+    let qa = quantized(71);
+    let qb = quantized(72); // same arch, different weights (swap target)
+    qa.save_artifact(&path, PlanOpts::default()).unwrap();
+    let x = testutil::random_input(&qa.model, 1, 3);
+
+    let mut reg = Registry::new(ServeConfig {
+        max_batch: 4,
+        max_delay: Duration::from_millis(1),
+        queue_depth: 4096,
+        lanes_per_model: 2,
+        admission_cap: 3,
+        ..ServeConfig::default()
+    });
+    reg.register_file("m", &path).unwrap();
+
+    let mut rng = Rng::new(4711);
+    let (mut submitted, mut answered, mut shed) = (0u64, 0u64, 0u64);
+    let mut swap_to_b = true;
+    for _round in 0..12 {
+        // burst far past the admission cap: the submit loop outruns the
+        // service loop, so a slice of each burst must shed
+        let client = reg.client("m", VARIANT_INT8).unwrap();
+        let burst = 16 + rng.below(48);
+        let mut pending = Vec::with_capacity(burst);
+        for i in 0..burst {
+            let prio = if i % 3 == 0 {
+                Priority::Batch
+            } else {
+                Priority::Interactive
+            };
+            submitted += 1;
+            match client.submit_prio(x.clone(), prio) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => {
+                    match e.downcast_ref::<SubmitError>() {
+                        Some(SubmitError::Shed { in_flight, cap }) => {
+                            assert!(
+                                in_flight >= cap,
+                                "shed below the admission cap"
+                            );
+                            shed += 1;
+                        }
+                        other => panic!(
+                            "expected the typed Shed rejection, got \
+                             {other:?}: {e:#}"
+                        ),
+                    };
+                }
+            }
+        }
+        // random lifecycle op with the burst still in flight: hot swap
+        // (retired lanes drain concurrently), evict (shutdown drains
+        // queued jobs), or nothing
+        match rng.below(3) {
+            0 => {
+                let q = if swap_to_b { &qb } else { &qa };
+                q.save_artifact(&path, PlanOpts::default()).unwrap();
+                swap_to_b = !swap_to_b;
+                reg.reload("m").unwrap();
+            }
+            1 => {
+                assert!(reg.evict("m").unwrap());
+            }
+            _ => {}
+        }
+        // drain: every admitted request resolves with a real answer —
+        // from the old generation or the new one, never an error
+        for rx in pending {
+            let y = rx
+                .recv()
+                .expect("request vanished (reply channel dropped)")
+                .expect("admitted request answered with an error");
+            assert_eq!(y.shape()[0], 1);
+            answered += 1;
+        }
+    }
+    assert_eq!(
+        answered + shed,
+        submitted,
+        "exactly-once violated: {answered} answered + {shed} shed != \
+         {submitted} submitted"
+    );
+    assert!(shed > 0, "over-capacity bursts never exercised the shed path");
+    assert!(answered > 0, "admission starved every request");
+    reg.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Per-lane metrics merge invariant: lane views sum to the shared
+/// per-variant view, and the shared totals match a single-lane baseline
+/// serving the identical workload (same outputs, same counts).
+#[test]
+fn lane_metrics_sum_to_shared_view_and_match_single_lane_baseline() {
+    let q = Arc::new(quantized(73));
+    let x = testutil::random_input(&q.model, 1, 5);
+    let want = q.pack_int8().unwrap().run(&x).unwrap();
+    let requests = 30usize;
+
+    let run = |lanes: usize| {
+        let q = Arc::clone(&q);
+        let server = Server::start_sharded(
+            ServeConfig {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                queue_depth: 2048,
+                lanes_per_model: lanes,
+                ..ServeConfig::default()
+            },
+            move || {
+                Ok(Box::new(QuantExecutor::from_quantized(&q, 4)?)
+                    as Box<dyn BatchExecutor>)
+            },
+        );
+        assert_eq!(server.lanes(), lanes);
+        let client = server.client();
+        let pending: Vec<_> = (0..requests)
+            .map(|i| {
+                let prio = if i % 2 == 0 {
+                    Priority::Interactive
+                } else {
+                    Priority::Batch
+                };
+                client.submit_prio(x.clone(), prio).unwrap()
+            })
+            .collect();
+        for rx in pending {
+            let y = rx.recv().unwrap().unwrap();
+            assert_eq!(y.data(), want.data(), "lane output drifted");
+        }
+        let lane_sum: u64 = server
+            .lane_metrics()
+            .iter()
+            .map(|m| m.snapshot().completed)
+            .sum();
+        let shared = server.shutdown();
+        (lane_sum, shared)
+    };
+
+    let (lane_sum_1, baseline) = run(1);
+    let (lane_sum_3, sharded) = run(3);
+
+    // every lane view merges into the shared view, on both shapes
+    assert_eq!(lane_sum_1, baseline.completed);
+    assert_eq!(lane_sum_3, sharded.completed, "lane views lost traffic");
+
+    // the sharded totals equal the single-lane baseline's
+    assert_eq!(sharded.completed, baseline.completed);
+    assert_eq!(sharded.completed, requests as u64);
+    assert_eq!(sharded.accepted, baseline.accepted);
+    assert_eq!(sharded.shed, 0);
+    assert_eq!(baseline.shed, 0);
+}

@@ -2,25 +2,30 @@
 //!
 //! The build image has no crates.io access, so this vendored shim provides
 //! exactly the surface the crate uses: [`Error`], [`Result`], the
-//! [`anyhow!`]/[`bail!`] macros and the [`Context`] extension trait for
-//! both `Result` and `Option`. Error values carry a context chain;
-//! `{e}` prints the outermost message, `{e:#}` the full `a: b: c` chain
-//! (matching real-anyhow formatting closely enough for logs and tests).
+//! [`anyhow!`]/[`bail!`] macros, the [`Context`] extension trait for
+//! both `Result` and `Option`, and [`Error::downcast_ref`] for typed
+//! root causes. Error values carry a context chain; `{e}` prints the
+//! outermost message, `{e:#}` the full `a: b: c` chain (matching
+//! real-anyhow formatting closely enough for logs and tests).
 
+use std::any::Any;
 use std::fmt;
 
 /// A dynamic error with a chain of context messages.
 ///
 /// `msgs[0]` is the outermost (most recently attached) message; the last
-/// entry is the root cause.
+/// entry is the root cause. An error converted from a concrete
+/// `std::error::Error` value also retains that value for
+/// [`Error::downcast_ref`]; one built from a bare message does not.
 pub struct Error {
     msgs: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from a displayable message (what `anyhow!` expands to).
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msgs: vec![message.to_string()] }
+        Error { msgs: vec![message.to_string()], payload: None }
     }
 
     /// Attach an outer context message.
@@ -37,6 +42,13 @@ impl Error {
     /// The root cause (innermost message).
     pub fn root_cause(&self) -> &str {
         self.msgs.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// The typed root cause, when this error was converted from a
+    /// concrete error value of type `E` (possibly context-wrapped
+    /// since). `None` for message-only errors or a type mismatch.
+    pub fn downcast_ref<E: Any>(&self) -> Option<&E> {
+        self.payload.as_ref()?.downcast_ref::<E>()
     }
 }
 
@@ -67,7 +79,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             msgs.push(s.to_string());
             src = s.source();
         }
-        Error { msgs }
+        Error { msgs, payload: Some(Box::new(e)) }
     }
 }
 
@@ -156,6 +168,22 @@ mod tests {
             Ok(())
         })();
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn downcast_survives_context_wrapping() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        impl fmt::Display for Typed {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "typed {}", self.0)
+            }
+        }
+        impl std::error::Error for Typed {}
+        let e: Error = Error::from(Typed(7)).context("outer");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        assert!(Error::msg("plain").downcast_ref::<Typed>().is_none());
     }
 
     #[test]
