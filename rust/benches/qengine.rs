@@ -239,13 +239,17 @@ fn main() {
     }
 
     section("end-to-end model — fake-quant f32 engine vs int8 plan");
-    // two model shapes: the residual block (dense + depthwise +
-    // requantise-add + GAP + head) and the inception-style block
-    // (max-pool stem + avg-pool branch + requantise-concat), both
-    // planned with zero f32 fallback ops
+    // four model shapes: the residual block (dense + depthwise +
+    // requantise-add + GAP + head), the inception-style block (max-pool
+    // stem + avg-pool branch + requantise-concat), the deeplab-style
+    // segmentation head (transposed-conv decoder + global-pool branch)
+    // and the ssd-style detection head (rectangular + global pool
+    // pyramid) — all planned with zero f32 fallback ops
     let models = [
         ("resblock", testutil::residual_block_model(77)),
         ("inception", testutil::inception_block_model(78)),
+        ("deeplab", testutil::deeplab_head_model(79)),
+        ("ssd", testutil::ssd_head_model(80)),
     ];
     for (name, m) in models {
         let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();

@@ -7,7 +7,7 @@
 //!
 //! ```text
 //! offset 0   magic          b"DFQP"           (4 bytes)
-//!        4   version        u32 LE            (currently 3; 1/2 still read)
+//!        4   version        u32 LE            (currently 4; 1–3 still read)
 //!        8   n_sections     u32 LE
 //!       12   reserved       u32 LE            (0)
 //!       16   section table  n_sections × 40-byte entries:
@@ -49,9 +49,11 @@ pub const MAGIC: [u8; 4] = *b"DFQP";
 
 /// Current container format version. Version 2 added the concat/pool2d
 /// op tags (12–15) to the plan stream; version 3 turned the per-entry
-/// pad word into section flags (compressed storage). Both older
-/// versions wrote zeros in that slot, so they still load unchanged.
-pub const VERSION: u32 = 3;
+/// pad word into section flags (compressed storage); version 4 added
+/// the transposed-conv and rectangular/global-pool op tags (16–19).
+/// Every older version still loads unchanged (v1/v2 wrote zeros in the
+/// flags slot; v3 plans simply never contain the new tags).
+pub const VERSION: u32 = 4;
 
 /// Oldest format version this build still reads.
 pub const MIN_VERSION: u32 = 1;

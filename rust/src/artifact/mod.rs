@@ -56,6 +56,14 @@
 //!   [`format::FLAG_COMPRESSED`] in the BOM); they are CRC-checked over
 //!   the stored bytes and decompressed once at load. v1/v2 artifacts
 //!   (flags word always 0) read unchanged.
+//!
+//! Container version 4 adds the segmentation/detection op tags:
+//! transposed conv (`OP_CONVT` wraps the inner flipped-kernel stride-1
+//! conv encoding plus the logical stride/pad; `OP_CONVTF` is its f32
+//! fallback) and rectangular/global pooling (`OP_POOL_RECT_INT` /
+//! `OP_POOL_RECTF` carry per-axis `k/stride/pad` and the global flag;
+//! square non-global pools still use the legacy tags). v1–v3 artifacts
+//! read unchanged.
 
 pub mod codec;
 pub mod format;
@@ -94,6 +102,13 @@ pub(crate) const OP_CONCAT_INT: u8 = 12;
 pub(crate) const OP_CONCATF: u8 = 13;
 pub(crate) const OP_POOL_INT: u8 = 14;
 pub(crate) const OP_POOLF: u8 = 15;
+// Version-4 tags: transposed conv + rectangular/global pooling. Square
+// non-global pools keep the legacy 14/15 encodings, so models without
+// these ops produce byte-identical containers across the version bump.
+pub(crate) const OP_CONVT: u8 = 16;
+pub(crate) const OP_CONVTF: u8 = 17;
+pub(crate) const OP_POOL_RECT_INT: u8 = 18;
+pub(crate) const OP_POOL_RECTF: u8 = 19;
 
 // Pool-kind tags inside pool op payloads.
 pub(crate) const POOL_MAX: u8 = 0;

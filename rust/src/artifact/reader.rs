@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use crate::graph::{PoolKind, MAX_CONCAT_INPUTS, MAX_POOL_DIM};
 use crate::nn::qengine::gemm::{self, KernelKind, PackedB};
-use crate::nn::qengine::kernels::{Epilogue, QConv};
+use crate::nn::qengine::kernels::{Epilogue, QConv, QConvT};
 use crate::nn::qengine::ops::{
     QAddInt, QConcatInt, QLinear, QPoolInt, Requantizer, MAX_REQUANT_MULT,
 };
@@ -35,8 +35,9 @@ use super::format::{
 };
 use super::{
     ArtifactError, ArtifactInfo, OP_ACTF, OP_ACT_REQUANT, OP_ADDF,
-    OP_ADD_INT, OP_CONCATF, OP_CONCAT_INT, OP_CONV, OP_CONV_F32, OP_GAP,
-    OP_GAPF, OP_LINEAR, OP_LINEARF, OP_POOLF, OP_POOL_INT, OP_QUANT_IN,
+    OP_ADD_INT, OP_CONCATF, OP_CONCAT_INT, OP_CONV, OP_CONVT, OP_CONVTF,
+    OP_CONV_F32, OP_GAP, OP_GAPF, OP_LINEAR, OP_LINEARF, OP_POOLF,
+    OP_POOL_INT, OP_POOL_RECTF, OP_POOL_RECT_INT, OP_QUANT_IN,
     OP_UPSAMPLE, POOL_AVG, POOL_MAX, SEC_BIAS, SEC_FALLBACK, SEC_META,
     SEC_MULT, SEC_PLAN, SEC_QPARAMS, SEC_WGRID,
 };
@@ -467,6 +468,60 @@ fn get_pool_window(
     Ok((k, stride, pad))
 }
 
+/// Decode and validate a per-axis (v4 rectangular/global) pool window:
+/// the `QPoolInt::pack` invariants applied to each axis independently,
+/// plus the canonical-form rule for global pools (a corrupt global flag
+/// on a real window, or a fabricated window on a global pool, is a
+/// malformed file — the executor would silently pool the wrong extent).
+#[allow(clippy::type_complexity)]
+fn get_pool_rect(
+    r: &mut ByteReader,
+    what: &str,
+) -> AResult<((usize, usize), (usize, usize), (usize, usize), bool)> {
+    let global = match r.u8()? {
+        0 => false,
+        1 => true,
+        t => {
+            return Err(malformed(format!("{what}: bad global flag {t}")))
+        }
+    };
+    let mut k = (0usize, 0usize);
+    let mut stride = (0usize, 0usize);
+    let mut pad = (0usize, 0usize);
+    for d in [&mut k, &mut stride, &mut pad] {
+        d.0 = r.u32()? as usize;
+        d.1 = r.u32()? as usize;
+    }
+    for (axis, (kd, sd, pd)) in
+        [(k.0, stride.0, pad.0), (k.1, stride.1, pad.1)].into_iter().enumerate()
+    {
+        if kd == 0 || sd == 0 {
+            return Err(malformed(format!(
+                "{what}: zero window/stride on axis {axis}"
+            )));
+        }
+        if kd > MAX_POOL_DIM || sd > MAX_POOL_DIM {
+            return Err(malformed(format!(
+                "{what}: implausible pool window on axis {axis} \
+                 (k {kd}, stride {sd})"
+            )));
+        }
+        if pd >= kd {
+            return Err(malformed(format!(
+                "{what}: pad {pd} >= window {kd} on axis {axis} \
+                 (empty windows)"
+            )));
+        }
+    }
+    if global && (k != (1, 1) || stride != (1, 1) || pad != (0, 0)) {
+        return Err(malformed(format!(
+            "{what}: global pool not in canonical form \
+             (k {k:?}, stride {stride:?}, pad {pad:?})"
+        )));
+    }
+    Ok((k, stride, pad, global))
+}
+
 fn fallback_cursor<'a, 'c>(
     cur: &'c mut Cursors<'a>,
 ) -> AResult<&'c mut ByteReader<'a>> {
@@ -553,6 +608,47 @@ fn get_conv(cur: &mut Cursors, node: usize) -> AResult<QConv> {
     Ok(conv)
 }
 
+/// Decode a transposed conv: the logical stride/pad, then the inner
+/// stride-1 flipped-kernel conv. The gather-form lowering is only
+/// correct when the stored geometry satisfies its derivation
+/// (`inner.stride == 1`, `inner.pad == k-1-pad`, square dense kernel),
+/// so those relations are re-proved here rather than trusted.
+fn get_convt(cur: &mut Cursors, node: usize) -> AResult<QConvT> {
+    let what = format!("convT op (node {node})");
+    let stride = cur.plan.u32()? as usize;
+    let pad = cur.plan.u32()? as usize;
+    if stride == 0 {
+        return Err(malformed(format!("{what}: zero stride")));
+    }
+    let inner = get_conv(cur, node)?;
+    if inner.kh != inner.kw {
+        return Err(malformed(format!(
+            "{what}: non-square kernel {}x{}",
+            inner.kh, inner.kw
+        )));
+    }
+    if inner.groups != 1 {
+        return Err(malformed(format!(
+            "{what}: grouped transposed conv (groups {})",
+            inner.groups
+        )));
+    }
+    if inner.stride != 1 {
+        return Err(malformed(format!(
+            "{what}: inner conv stride {} != 1",
+            inner.stride
+        )));
+    }
+    if pad >= inner.kh || inner.pad != inner.kh - 1 - pad {
+        return Err(malformed(format!(
+            "{what}: inner pad {} inconsistent with k {} and logical \
+             pad {pad}",
+            inner.pad, inner.kh
+        )));
+    }
+    Ok(QConvT { stride, pad, inner })
+}
+
 fn get_linear(cur: &mut Cursors, node: usize) -> AResult<QLinear> {
     let what = format!("linear op (node {node})");
     let in_dim = cur.plan.u32()? as usize;
@@ -596,6 +692,44 @@ fn get_op(cur: &mut Cursors, node: usize) -> AResult<QOp> {
             QOp::QuantIn { qp }
         }
         OP_CONV => QOp::Conv(Box::new(get_conv(cur, node)?)),
+        OP_CONVT => QOp::ConvT(Box::new(get_convt(cur, node)?)),
+        OP_CONVTF => {
+            let what = format!("convT-f32 op (node {node})");
+            let stride = cur.plan.u32()? as usize;
+            let pad = cur.plan.u32()? as usize;
+            if stride == 0 {
+                return Err(malformed(format!("{what}: zero stride")));
+            }
+            let ndim = cur.plan.u32()? as usize;
+            if ndim != 4 {
+                return Err(malformed(format!(
+                    "{what}: weights need 4 dims, got {ndim}"
+                )));
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            let mut count = 1usize;
+            for _ in 0..ndim {
+                let d = cur.plan.usize()?;
+                if d == 0 {
+                    return Err(malformed(format!(
+                        "{what}: zero weight dimension"
+                    )));
+                }
+                count = checked_len(count, d, &what)?;
+                shape.push(d);
+            }
+            if shape[2] != shape[3] || pad >= shape[2] {
+                return Err(malformed(format!(
+                    "{what}: bad geometry (k {}x{}, pad {pad})",
+                    shape[2], shape[3]
+                )));
+            }
+            let b_len = cur.plan.u32()? as usize;
+            let fb = fallback_cursor(cur)?;
+            let data = fb.f32_vec(count)?;
+            let b = fb.f32_vec(b_len)?;
+            QOp::ConvTFp32 { w: Tensor::new(&shape, data), b, stride, pad }
+        }
         OP_CONV_F32 => {
             let what = format!("conv-f32 op (node {node})");
             let stride = cur.plan.u32()? as usize;
@@ -683,13 +817,42 @@ fn get_op(cur: &mut Cursors, node: usize) -> AResult<QOp> {
             let (k, stride, pad) = get_pool_window(&mut cur.plan, &what)?;
             let qp = get_qparams(&mut cur.plan)?;
             check_act_qparams(&qp, &what)?;
-            QOp::Pool(QPoolInt { kind, k, stride, pad, qp })
+            QOp::Pool(QPoolInt {
+                kind,
+                k: (k, k),
+                stride: (stride, stride),
+                pad: (pad, pad),
+                global: false,
+                qp,
+            })
         }
         OP_POOLF => {
             let what = format!("pool-f32 op (node {node})");
             let kind = get_pool_kind(&mut cur.plan, &what)?;
             let (k, stride, pad) = get_pool_window(&mut cur.plan, &what)?;
-            QOp::PoolF { kind, k, stride, pad }
+            QOp::PoolF {
+                kind,
+                k: (k, k),
+                stride: (stride, stride),
+                pad: (pad, pad),
+                global: false,
+            }
+        }
+        OP_POOL_RECT_INT => {
+            let what = format!("rect-pool op (node {node})");
+            let kind = get_pool_kind(&mut cur.plan, &what)?;
+            let (k, stride, pad, global) =
+                get_pool_rect(&mut cur.plan, &what)?;
+            let qp = get_qparams(&mut cur.plan)?;
+            check_act_qparams(&qp, &what)?;
+            QOp::Pool(QPoolInt { kind, k, stride, pad, global, qp })
+        }
+        OP_POOL_RECTF => {
+            let what = format!("rect-pool-f32 op (node {node})");
+            let kind = get_pool_kind(&mut cur.plan, &what)?;
+            let (k, stride, pad, global) =
+                get_pool_rect(&mut cur.plan, &what)?;
+            QOp::PoolF { kind, k, stride, pad, global }
         }
         OP_ACT_REQUANT => {
             let what = format!("act op (node {node})");
@@ -881,12 +1044,19 @@ fn decode_plan(c: &ContainerReader) -> AResult<QModel> {
         ops.iter().filter(|p| !p.op.describe().1).count();
     let counted_int = ops
         .iter()
-        .filter(|p| matches!(p.op, QOp::Conv(_) | QOp::Linear(_)))
+        .filter(|p| {
+            matches!(p.op, QOp::Conv(_) | QOp::ConvT(_) | QOp::Linear(_))
+        })
         .count();
     let counted_f32 = ops
         .iter()
         .filter(|p| {
-            matches!(p.op, QOp::ConvFp32 { .. } | QOp::LinearF { .. })
+            matches!(
+                p.op,
+                QOp::ConvFp32 { .. }
+                    | QOp::ConvTFp32 { .. }
+                    | QOp::LinearF { .. }
+            )
         })
         .count();
     if counted_fallbacks != fallbacks

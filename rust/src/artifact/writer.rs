@@ -16,7 +16,7 @@ use std::path::Path;
 use anyhow::{Context as _, Result};
 
 use crate::dfq::QuantizedModel;
-use crate::nn::qengine::kernels::QConv;
+use crate::nn::qengine::kernels::{QConv, QConvT};
 use crate::nn::qengine::ops::QLinear;
 use crate::nn::qengine::plan::{PlannedOp, QModel, QOp};
 use crate::nn::qengine::{Mult, PlanOpts};
@@ -29,10 +29,11 @@ use crate::graph::PoolKind;
 use super::format::{ByteWriter, ContainerWriter};
 use super::{
     ArtifactInfo, OP_ACTF, OP_ACT_REQUANT, OP_ADDF, OP_ADD_INT,
-    OP_CONCATF, OP_CONCAT_INT, OP_CONV, OP_CONV_F32, OP_GAP, OP_GAPF,
-    OP_LINEAR, OP_LINEARF, OP_POOLF, OP_POOL_INT, OP_QUANT_IN,
-    OP_UPSAMPLE, POOL_AVG, POOL_MAX, SEC_BIAS, SEC_FALLBACK, SEC_META,
-    SEC_MULT, SEC_PLAN, SEC_QPARAMS, SEC_WGRID,
+    OP_CONCATF, OP_CONCAT_INT, OP_CONV, OP_CONVT, OP_CONVTF, OP_CONV_F32,
+    OP_GAP, OP_GAPF, OP_LINEAR, OP_LINEARF, OP_POOLF, OP_POOL_INT,
+    OP_POOL_RECTF, OP_POOL_RECT_INT, OP_QUANT_IN, OP_UPSAMPLE, POOL_AVG,
+    POOL_MAX, SEC_BIAS, SEC_FALLBACK, SEC_META, SEC_MULT, SEC_PLAN,
+    SEC_QPARAMS, SEC_WGRID,
 };
 
 /// The section streams an encode pass appends to.
@@ -114,6 +115,46 @@ fn put_conv(s: &mut Streams, c: &QConv) {
     }
 }
 
+/// Transposed conv: the logical stride/pad (the zero-insertion
+/// geometry), then the inner flipped-kernel stride-1 conv verbatim — the
+/// reader re-derives and re-validates the `pad' = k-1-pad` relation.
+fn put_convt(s: &mut Streams, c: &QConvT) {
+    s.plan.u32(c.stride as u32);
+    s.plan.u32(c.pad as u32);
+    put_conv(s, &c.inner);
+}
+
+/// Per-axis pool window: `kind, global, kh, kw, sh, sw, ph, pw`. Global
+/// pools travel in their canonical `k=(1,1) s=(1,1) p=(0,0)` form.
+fn put_pool_rect(
+    w: &mut ByteWriter,
+    kind: PoolKind,
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    global: bool,
+) {
+    put_pool_kind(w, kind);
+    w.u8(global as u8);
+    w.u32(k.0 as u32);
+    w.u32(k.1 as u32);
+    w.u32(stride.0 as u32);
+    w.u32(stride.1 as u32);
+    w.u32(pad.0 as u32);
+    w.u32(pad.1 as u32);
+}
+
+/// Square non-global pools keep the legacy single-scalar encoding, so
+/// pre-v4 plans re-encode byte-identically under the v4 writer.
+fn pool_is_square(
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    global: bool,
+) -> bool {
+    !global && k.0 == k.1 && stride.0 == stride.1 && pad.0 == pad.1
+}
+
 fn put_linear(s: &mut Streams, l: &QLinear) {
     let w = &mut s.plan;
     w.u32(l.in_dim as u32);
@@ -148,6 +189,22 @@ fn put_op(s: &mut Streams, p: &PlannedOp) {
         QOp::Conv(c) => {
             w.u8(OP_CONV);
             put_conv(s, c);
+        }
+        QOp::ConvT(c) => {
+            w.u8(OP_CONVT);
+            put_convt(s, c);
+        }
+        QOp::ConvTFp32 { w: wt, b, stride, pad } => {
+            w.u8(OP_CONVTF);
+            w.u32(*stride as u32);
+            w.u32(*pad as u32);
+            w.u32(wt.shape().len() as u32);
+            for &d in wt.shape() {
+                w.u64(d as u64);
+            }
+            w.u32(b.len() as u32);
+            s.fallback.f32_slice(wt.data());
+            s.fallback.f32_slice(b);
         }
         QOp::ConvFp32 { w: wt, b, stride, pad, groups } => {
             w.u8(OP_CONV_F32);
@@ -188,19 +245,29 @@ fn put_op(s: &mut Streams, p: &PlannedOp) {
             put_site(w, row);
         }
         QOp::Pool(pl) => {
-            w.u8(OP_POOL_INT);
-            put_pool_kind(w, pl.kind);
-            w.u32(pl.k as u32);
-            w.u32(pl.stride as u32);
-            w.u32(pl.pad as u32);
+            if pool_is_square(pl.k, pl.stride, pl.pad, pl.global) {
+                w.u8(OP_POOL_INT);
+                put_pool_kind(w, pl.kind);
+                w.u32(pl.k.0 as u32);
+                w.u32(pl.stride.0 as u32);
+                w.u32(pl.pad.0 as u32);
+            } else {
+                w.u8(OP_POOL_RECT_INT);
+                put_pool_rect(w, pl.kind, pl.k, pl.stride, pl.pad, pl.global);
+            }
             put_qparams(w, &pl.qp);
         }
-        QOp::PoolF { kind, k, stride, pad } => {
-            w.u8(OP_POOLF);
-            put_pool_kind(w, *kind);
-            w.u32(*k as u32);
-            w.u32(*stride as u32);
-            w.u32(*pad as u32);
+        QOp::PoolF { kind, k, stride, pad, global } => {
+            if pool_is_square(*k, *stride, *pad, *global) {
+                w.u8(OP_POOLF);
+                put_pool_kind(w, *kind);
+                w.u32(k.0 as u32);
+                w.u32(stride.0 as u32);
+                w.u32(pad.0 as u32);
+            } else {
+                w.u8(OP_POOL_RECTF);
+                put_pool_rect(w, *kind, *k, *stride, *pad, *global);
+            }
         }
         QOp::Act(r) => {
             w.u8(OP_ACT_REQUANT);

@@ -59,7 +59,12 @@ fn correct_layer(
 ) -> Result<(usize, f64)> {
     let n = quantized.node(id);
     match &n.op {
-        Op::Conv { w, b, out_ch, .. } => {
+        // ConvT shares the dense-conv weight layout [out_ch, in_ch, k, k];
+        // with stride > 1 the k² taps partition across output-position
+        // phases, so the full eps_sum corrects the phase-averaged mean —
+        // the same spatial-constancy approximation App. B makes for
+        // padded conv borders.
+        Op::Conv { w, b, out_ch, .. } | Op::ConvT2d { w, b, out_ch, .. } => {
             let dw = n.op.is_depthwise();
             let (w_name, b_name, out_ch) =
                 (w.clone(), b.clone().expect("folded"), *out_ch);
@@ -144,7 +149,9 @@ pub fn empirical_traced(
         let cfg_q = QuantCfg::fp32(quantized);
         let q_means = layer_preact_means(quantized, calib, &cfg_q, id)?;
         let b_name = match &quantized.node(id).op {
-            Op::Conv { b, .. } => b.clone().expect("folded"),
+            Op::Conv { b, .. } | Op::ConvT2d { b, .. } => {
+                b.clone().expect("folded")
+            }
             Op::Linear { b, .. } => b.clone(),
             _ => continue,
         };

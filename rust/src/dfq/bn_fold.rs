@@ -53,11 +53,12 @@ pub fn fold_in_place(m: &mut Model) -> Result<()> {
         let (w_name, b_name, out_ch) = {
             let p = m.node(conv_id);
             match &p.op {
-                Op::Conv { w, b, out_ch, .. } => {
+                Op::Conv { w, b, out_ch, .. }
+                | Op::ConvT2d { w, b, out_ch, .. } => {
                     (w.clone(), b.clone(), *out_ch)
                 }
                 other => bail!(
-                    "bn node {bn_id} follows {:?}, only conv supported",
+                    "bn node {bn_id} follows {:?}, only conv/convT supported",
                     other.kind()
                 ),
             }
@@ -102,7 +103,7 @@ pub fn fold_in_place(m: &mut Model) -> Result<()> {
             .insert(bias_name.clone(), crate::tensor::Tensor::from_vec(bias));
         {
             let p = m.node_mut(conv_id);
-            if let Op::Conv { b, .. } = &mut p.op {
+            if let Op::Conv { b, .. } | Op::ConvT2d { b, .. } = &mut p.op {
                 *b = Some(bias_name);
             }
         }

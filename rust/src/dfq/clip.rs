@@ -17,7 +17,9 @@ pub fn clip_weights(model: &mut Model, c: f32) -> Result<usize> {
         .layers()
         .iter()
         .map(|n| match &n.op {
-            Op::Conv { w, .. } | Op::Linear { w, .. } => w.clone(),
+            Op::Conv { w, .. }
+            | Op::ConvT2d { w, .. }
+            | Op::Linear { w, .. } => w.clone(),
             _ => unreachable!(),
         })
         .collect();
@@ -41,7 +43,9 @@ pub fn quantile_clip_level(model: &Model, q: f64) -> f32 {
     let mut all: Vec<f32> = Vec::new();
     for n in model.layers() {
         let w = match &n.op {
-            Op::Conv { w, .. } | Op::Linear { w, .. } => w,
+            Op::Conv { w, .. }
+            | Op::ConvT2d { w, .. }
+            | Op::Linear { w, .. } => w,
             _ => unreachable!(),
         };
         all.extend(model.tensor(w).unwrap().data().iter().map(|x| x.abs()));

@@ -13,17 +13,25 @@ use anyhow::Result;
 use crate::graph::{Model, Op};
 
 /// A CLE-eligible pair: conv `a` feeds conv `b` through a
-/// single-consumer chain of act nodes (folded graph), possibly none.
+/// single-consumer chain of act / pool nodes (folded graph), possibly
+/// none.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ClePair {
     pub a: usize,
     pub b: usize,
     /// The act node on the chain, if any.
     pub act: Option<usize>,
+    /// True when the chain crosses a `Pool2d` node: max and avg pool
+    /// commute with per-channel positive scaling (`max(s·x) = s·max(x)`
+    /// for `s > 0`; avg is linear), so the pair stays CLE-eligible.
+    pub through_pool: bool,
 }
 
 /// Discover CLE pairs (paper §4.1.2: "pairs of layers that are connected
-/// to each other without input or output splits in between").
+/// to each other without input or output splits in between"). The chain
+/// may cross act and pool nodes — both are per-channel
+/// positive-scale-equivariant — but stops at concat (channel identity is
+/// lost), add, and every other non-monotone boundary.
 pub fn find_pairs(model: &Model) -> Vec<ClePair> {
     assert!(model.folded, "CLE runs on the folded graph");
     let mut pairs = Vec::new();
@@ -33,6 +41,7 @@ pub fn find_pairs(model: &Model) -> Vec<ClePair> {
         }
         let mut cur = n.id;
         let mut act = None;
+        let mut through_pool = false;
         loop {
             let cons = model.consumers(cur);
             if cons.len() != 1 {
@@ -44,8 +53,17 @@ pub fn find_pairs(model: &Model) -> Vec<ClePair> {
                     act = Some(next.id);
                     cur = next.id;
                 }
+                Op::Pool2d { .. } => {
+                    through_pool = true;
+                    cur = next.id;
+                }
                 Op::Conv { .. } => {
-                    pairs.push(ClePair { a: n.id, b: next.id, act });
+                    pairs.push(ClePair {
+                        a: n.id,
+                        b: next.id,
+                        act,
+                        through_pool,
+                    });
                     break;
                 }
                 _ => break,

@@ -176,7 +176,9 @@ pub fn weight_range_spread(m: &Model) -> f64 {
     let mut worst = 1.0f64;
     for n in m.layers() {
         let w = match &n.op {
-            Op::Conv { w, .. } | Op::Linear { w, .. } => match m.tensor(w) {
+            Op::Conv { w, .. }
+            | Op::ConvT2d { w, .. }
+            | Op::Linear { w, .. } => match m.tensor(w) {
                 Ok(t) => t,
                 Err(_) => continue,
             },
@@ -329,11 +331,15 @@ impl Pass for EqualizePass {
 
     fn run(&self, m: &mut Model, _cx: &mut PassCx) -> Result<PassReport> {
         let mut r = PassReport::new(self.name());
-        let pairs = equalize::find_pairs(m).len();
+        let pairs = equalize::find_pairs(m);
+        let through_pool =
+            pairs.iter().filter(|p| p.through_pool).count();
+        let pairs = pairs.len();
         let spread_before = weight_range_spread(m);
         let trace = equalize::equalize_traced(m, self.iters, self.tol)?;
         r.changed = trace.len(); // sweeps
         r.push("pairs", pairs as f64);
+        r.push("pairs_through_pool", through_pool as f64);
         r.push("spread_before", spread_before);
         r.push("spread_after", weight_range_spread(m));
         r.trace = trace;
@@ -400,7 +406,9 @@ impl Pass for QuantizePass {
         let layer_ids: Vec<usize> = m.layers().iter().map(|n| n.id).collect();
         for id in layer_ids {
             let w = match &m.node(id).op {
-                Op::Conv { w, .. } | Op::Linear { w, .. } => w.clone(),
+                Op::Conv { w, .. }
+                | Op::ConvT2d { w, .. }
+                | Op::Linear { w, .. } => w.clone(),
                 _ => unreachable!(),
             };
             let t = m.tensors.get_mut(&w).expect("weight tensor");

@@ -337,7 +337,7 @@ pub fn inception_block_model(seed: u64) -> Model {
     nodes.push(Node {
         id: pool0,
         inputs: vec![stem],
-        op: Op::Pool2d { kind: PoolKind::Max, k: 3, stride: 2, pad: 1 },
+        op: Op::pool2d(PoolKind::Max, 3, 2, 1),
     });
 
     // branch a: 1x1 conv
@@ -356,7 +356,7 @@ pub fn inception_block_model(seed: u64) -> Model {
     nodes.push(Node {
         id: poolc,
         inputs: vec![pool0],
-        op: Op::Pool2d { kind: PoolKind::Avg, k: 3, stride: 1, pad: 1 },
+        op: Op::pool2d(PoolKind::Avg, 3, 1, 1),
     });
     let bc = conv_bn(
         &mut nodes, &mut tensors, &mut rng, &mut id, poolc, c, c / 2, 1,
@@ -384,6 +384,332 @@ pub fn inception_block_model(seed: u64) -> Model {
 
     Model {
         name: "test_inception".into(),
+        task: Task::Classification,
+        input_shape: [3, 8, 8],
+        num_classes: 10,
+        nodes,
+        outputs: vec![lin_id],
+        tensors,
+        meta: BTreeMap::new(),
+        act_stats: HashMap::new(),
+        folded: false,
+    }
+}
+
+/// Shared conv+bn+relu builder for the branchy fixtures: threads `id`
+/// by `&mut` so pool/concat/upsample nodes can be appended between
+/// calls. BN params follow the inception recipe: gamma ~ N(1, .3),
+/// beta ~ N(.1, .3), mean ~ N(0, .3), var = |N(0, .3)| + .5.
+#[allow(clippy::too_many_arguments)]
+fn conv_bn_relu(
+    nodes: &mut Vec<Node>,
+    tensors: &mut BTreeMap<String, Tensor>,
+    rng: &mut Rng,
+    id: &mut usize,
+    input: usize,
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+) -> usize {
+    *id += 1;
+    let w = format!("w{id}");
+    tensors.insert(w.clone(), rand_t(rng, &[out_ch, in_ch, k, k], 0.4));
+    nodes.push(Node {
+        id: *id,
+        inputs: vec![input],
+        op: Op::Conv {
+            w,
+            b: None,
+            in_ch,
+            out_ch,
+            k,
+            stride: 1,
+            pad: k / 2,
+            groups: 1,
+        },
+    });
+    push_bn_relu(nodes, tensors, rng, id, out_ch)
+}
+
+/// ConvT+bn+relu builder (decoder upsampling stage).
+#[allow(clippy::too_many_arguments)]
+fn convt_bn_relu(
+    nodes: &mut Vec<Node>,
+    tensors: &mut BTreeMap<String, Tensor>,
+    rng: &mut Rng,
+    id: &mut usize,
+    input: usize,
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> usize {
+    *id += 1;
+    let w = format!("w{id}");
+    tensors.insert(w.clone(), rand_t(rng, &[out_ch, in_ch, k, k], 0.4));
+    nodes.push(Node {
+        id: *id,
+        inputs: vec![input],
+        op: Op::ConvT2d { w, b: None, in_ch, out_ch, k, stride, pad },
+    });
+    push_bn_relu(nodes, tensors, rng, id, out_ch)
+}
+
+fn push_bn_relu(
+    nodes: &mut Vec<Node>,
+    tensors: &mut BTreeMap<String, Tensor>,
+    rng: &mut Rng,
+    id: &mut usize,
+    out_ch: usize,
+) -> usize {
+    *id += 1;
+    for (p, std, ofs) in [
+        ("g", 0.3f32, 1.0f32),
+        ("be", 0.3, 0.1),
+        ("m", 0.3, 0.0),
+        ("v", 0.0, 0.0),
+    ] {
+        let name = format!("{p}{id}");
+        let mut t = rand_t(rng, &[out_ch], std);
+        t.map_inplace(|x| x + ofs);
+        if p == "v" {
+            t = rand_t(rng, &[out_ch], 0.3);
+            t.map_inplace(|x| x.abs() + 0.5);
+        }
+        tensors.insert(name, t);
+    }
+    nodes.push(Node {
+        id: *id,
+        inputs: vec![*id - 1],
+        op: Op::BatchNorm {
+            ch: out_ch,
+            gamma: format!("g{id}"),
+            beta: format!("be{id}"),
+            mean: format!("m{id}"),
+            var: format!("v{id}"),
+        },
+    });
+    *id += 1;
+    nodes.push(Node {
+        id: *id,
+        inputs: vec![*id - 1],
+        op: Op::Act(ActKind::Relu),
+    });
+    *id
+}
+
+/// DeepLab-style segmentation head:
+///
+/// ```text
+/// input → conv3x3(3→8) → bn → relu → maxpool(3, s2, p1)   ← through-pool
+///       → conv3x3(8→8) → bn → relu                          CLE pair
+///           ┌──────────────────┬──────────────────────┐
+///   conv1x1(8→4)       conv3x3(8→4)        global avgpool → conv1x1(8→4)
+///     → bn → relu        → bn → relu         → bn → relu → upsample(4)
+///           └────────→ concat (12ch) ←─────────────────┘
+///                          ↓
+///        convT2d(12→8, k4, s2, p1) → bn → relu   (decoder upsample 4→8)
+///                          ↓
+///        conv3x3(8→8) → bn → relu → gap → linear(8→10)
+/// ```
+///
+/// Exercises the decoder path end to end: the transposed-conv integer
+/// lowering, a global pool inside a branch (ASPP image pooling), the
+/// requantise-concat merge, and a CLE pair whose chain crosses the stem
+/// max-pool (`through_pool`).
+pub fn deeplab_head_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let mut tensors = BTreeMap::new();
+    let mut nodes = vec![Node { id: 0, inputs: vec![], op: Op::Input }];
+    let mut id = 0usize;
+    let c = 8usize;
+
+    // backbone: conv → pool → conv (the pool sits inside a CLE pair)
+    let stem1 =
+        conv_bn_relu(&mut nodes, &mut tensors, &mut rng, &mut id, 0, 3, c, 3);
+    id += 1;
+    let pool0 = id;
+    nodes.push(Node {
+        id: pool0,
+        inputs: vec![stem1],
+        op: Op::pool2d(PoolKind::Max, 3, 2, 1),
+    });
+    let stem2 = conv_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, pool0, c, c, 3,
+    );
+
+    // atrous-style branches over the 4x4 feature map
+    let b1 = conv_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, stem2, c, c / 2, 1,
+    );
+    let b2 = conv_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, stem2, c, c / 2, 3,
+    );
+    // image-pooling branch: global avg pool → 1x1 conv → upsample back
+    id += 1;
+    let gp = id;
+    nodes.push(Node {
+        id: gp,
+        inputs: vec![stem2],
+        op: Op::global_pool2d(PoolKind::Avg),
+    });
+    let b3c = conv_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, gp, c, c / 2, 1,
+    );
+    id += 1;
+    let b3 = id;
+    nodes.push(Node {
+        id: b3,
+        inputs: vec![b3c],
+        op: Op::Upsample { factor: 4 },
+    });
+
+    // merge + transposed-conv decoder
+    id += 1;
+    let cat = id;
+    nodes.push(Node { id: cat, inputs: vec![b1, b2, b3], op: Op::Concat });
+    let c_cat = 3 * (c / 2); // 12
+    let dec = convt_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, cat, c_cat, c, 4, 2, 1,
+    );
+    let head = conv_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, dec, c, c, 3,
+    );
+
+    id += 1;
+    let gap_id = id;
+    nodes.push(Node { id: gap_id, inputs: vec![head], op: Op::Gap });
+    id += 1;
+    let lin_id = id;
+    let wl = format!("wl{lin_id}");
+    tensors.insert(wl.clone(), rand_t(&mut rng, &[10, c], 0.4));
+    let bl = format!("bl{lin_id}");
+    tensors.insert(bl.clone(), rand_t(&mut rng, &[10], 0.2));
+    nodes.push(Node {
+        id: lin_id,
+        inputs: vec![gap_id],
+        op: Op::Linear { w: wl, b: bl, in_dim: c, out_dim: 10 },
+    });
+
+    Model {
+        name: "test_deeplab".into(),
+        task: Task::Classification,
+        input_shape: [3, 8, 8],
+        num_classes: 10,
+        nodes,
+        outputs: vec![lin_id],
+        tensors,
+        meta: BTreeMap::new(),
+        act_stats: HashMap::new(),
+        folded: false,
+    }
+}
+
+/// SSD-style detection head: multi-scale feature taps, a per-scale conv
+/// head each, global pools onto a shared 1x1 grid, channel concat:
+///
+/// ```text
+/// input → conv3x3(3→8) → bn → relu                          (8x8 tap)
+///   ├→ conv1x1(8→4) → bn → relu → global maxpool ──┐
+///   └→ maxpool k=(2,3) s=(2,1) p=(0,1)             │        (4x8 tap)
+///        ├→ conv3x3(8→4) → bn → relu → global avgpool ─┤
+///        └→ maxpool k=(1,3) s=(1,2) p=(0,1)            │    (4x4 tap)
+///             └→ conv1x1(8→4) → bn → relu → global avgpool ─┤
+///                            concat (12ch, 1x1) ←───────────┘
+///                 → conv1x1(12→8) → bn → relu → gap → linear(8→10)
+/// ```
+///
+/// Exercises rectangular windows/strides/pads on the int8 pool path,
+/// global max *and* avg pooling, and the multi-branch requantise-concat.
+pub fn ssd_head_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let mut tensors = BTreeMap::new();
+    let mut nodes = vec![Node { id: 0, inputs: vec![], op: Op::Input }];
+    let mut id = 0usize;
+    let c = 8usize;
+
+    let stem =
+        conv_bn_relu(&mut nodes, &mut tensors, &mut rng, &mut id, 0, 3, c, 3);
+
+    // scale 1: head on the full-resolution tap
+    let h1 = conv_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, stem, c, c / 2, 1,
+    );
+    // scale 2: rectangular downsample (8x8 → 4x8), then a 3x3 head
+    id += 1;
+    let pool1 = id;
+    nodes.push(Node {
+        id: pool1,
+        inputs: vec![stem],
+        op: Op::Pool2d {
+            kind: PoolKind::Max,
+            k: (2, 3),
+            stride: (2, 1),
+            pad: (0, 1),
+            global: false,
+        },
+    });
+    let h2 = conv_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, pool1, c, c / 2, 3,
+    );
+    // scale 3: second rectangular pool (4x8 → 4x4), then a 1x1 head
+    id += 1;
+    let pool2 = id;
+    nodes.push(Node {
+        id: pool2,
+        inputs: vec![pool1],
+        op: Op::Pool2d {
+            kind: PoolKind::Max,
+            k: (1, 3),
+            stride: (1, 2),
+            pad: (0, 1),
+            global: false,
+        },
+    });
+    let h3 = conv_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, pool2, c, c / 2, 1,
+    );
+
+    // per-scale global pools onto the shared 1x1 grid
+    let mut gpool = |input: usize, kind: PoolKind| -> usize {
+        id += 1;
+        nodes.push(Node {
+            id,
+            inputs: vec![input],
+            op: Op::global_pool2d(kind),
+        });
+        id
+    };
+    let g1 = gpool(h1, PoolKind::Max);
+    let g2 = gpool(h2, PoolKind::Avg);
+    let g3 = gpool(h3, PoolKind::Avg);
+
+    id += 1;
+    let cat = id;
+    nodes.push(Node { id: cat, inputs: vec![g1, g2, g3], op: Op::Concat });
+    let c_cat = 3 * (c / 2); // 12
+    let merge = conv_bn_relu(
+        &mut nodes, &mut tensors, &mut rng, &mut id, cat, c_cat, c, 1,
+    );
+
+    id += 1;
+    let gap_id = id;
+    nodes.push(Node { id: gap_id, inputs: vec![merge], op: Op::Gap });
+    id += 1;
+    let lin_id = id;
+    let wl = format!("wl{lin_id}");
+    tensors.insert(wl.clone(), rand_t(&mut rng, &[10, c], 0.4));
+    let bl = format!("bl{lin_id}");
+    tensors.insert(bl.clone(), rand_t(&mut rng, &[10], 0.2));
+    nodes.push(Node {
+        id: lin_id,
+        inputs: vec![gap_id],
+        op: Op::Linear { w: wl, b: bl, in_dim: c, out_dim: 10 },
+    });
+
+    Model {
+        name: "test_ssd".into(),
         task: Task::Classification,
         input_shape: [3, 8, 8],
         num_classes: 10,
@@ -455,14 +781,29 @@ pub fn forward_with_bn(model: &Model, x: &Tensor) -> Tensor {
                 ops::concat_channels(&ins)
             }
             Op::Gap => ops::global_avg_pool(&vals[&n.inputs[0]]),
-            Op::Pool2d { kind, k, stride, pad } => match kind {
-                PoolKind::Max => {
-                    ops::max_pool2d(&vals[&n.inputs[0]], *k, *stride, *pad)
+            Op::Pool2d { kind, k, stride, pad, global } => {
+                let x = &vals[&n.inputs[0]];
+                let (k, stride, pad) = if *global {
+                    let s = x.shape();
+                    ((s[2], s[3]), (1, 1), (0, 0))
+                } else {
+                    (*k, *stride, *pad)
+                };
+                match kind {
+                    PoolKind::Max => ops::max_pool2d_rect(x, k, stride, pad),
+                    PoolKind::Avg => ops::avg_pool2d_rect(x, k, stride, pad),
                 }
-                PoolKind::Avg => {
-                    ops::avg_pool2d(&vals[&n.inputs[0]], *k, *stride, *pad)
-                }
-            },
+            }
+            Op::ConvT2d { w, b, stride, pad, .. } => {
+                let bias = b.as_ref().map(|b| model.tensor(b).unwrap().data());
+                conv::conv_transpose2d(
+                    &vals[&n.inputs[0]],
+                    model.tensor(w).unwrap(),
+                    bias,
+                    *stride,
+                    *pad,
+                )
+            }
             Op::Linear { w, b, .. } => ops::linear(
                 &vals[&n.inputs[0]],
                 model.tensor(w).unwrap(),

@@ -157,7 +157,9 @@ pub fn fig3(ctx: &mut Context) -> Result<Table> {
             .layers()
             .iter()
             .map(|n| match &n.op {
-                Op::Conv { w, .. } | Op::Linear { w, .. } => w.clone(),
+                Op::Conv { w, .. }
+                | Op::ConvT2d { w, .. }
+                | Op::Linear { w, .. } => w.clone(),
                 _ => unreachable!(),
             })
             .collect();

@@ -121,8 +121,38 @@ fn parse_node(j: &Json) -> Result<Node> {
         "add" => Op::Add,
         "concat" => Op::Concat,
         "gap" => Op::Gap,
-        "pool2d" => Op::Pool2d {
-            kind: PoolKind::parse(j.req("kind")?.as_str()?)?,
+        "pool2d" => {
+            let kind = PoolKind::parse(j.req("kind")?.as_str()?)?;
+            if j.get("kh").is_some() {
+                // rectangular / global form (container additions for the
+                // segmentation/detection heads); legacy square readers
+                // never see these keys because the writer keeps emitting
+                // k/stride/pad for square non-global pools
+                Op::Pool2d {
+                    kind,
+                    k: (j.req("kh")?.as_usize()?, j.req("kw")?.as_usize()?),
+                    stride: (
+                        j.req("sh")?.as_usize()?,
+                        j.req("sw")?.as_usize()?,
+                    ),
+                    pad: (j.req("ph")?.as_usize()?, j.req("pw")?.as_usize()?),
+                    global: matches!(j.get("global"), Some(Json::Bool(true))),
+                }
+            } else {
+                let k = j.req("k")?.as_usize()?;
+                let stride = j.req("stride")?.as_usize()?;
+                let pad = j.req("pad")?.as_usize()?;
+                Op::pool2d(kind, k, stride, pad)
+            }
+        }
+        "convT" => Op::ConvT2d {
+            w: j.req("w")?.as_str()?.to_string(),
+            b: match j.req("b")? {
+                Json::Null => None,
+                v => Some(v.as_str()?.to_string()),
+            },
+            in_ch: j.req("in_ch")?.as_usize()?,
+            out_ch: j.req("out_ch")?.as_usize()?,
             k: j.req("k")?.as_usize()?,
             stride: j.req("stride")?.as_usize()?,
             pad: j.req("pad")?.as_usize()?,
@@ -187,9 +217,35 @@ fn node_to_json(n: &Node) -> Json {
         Op::Gap => {
             m.insert("op".into(), s("gap"));
         }
-        Op::Pool2d { kind, k, stride, pad } => {
+        Op::Pool2d { kind, k, stride, pad, global } => {
             m.insert("op".into(), s("pool2d"));
             m.insert("kind".into(), s(kind.as_str()));
+            if !*global && k.0 == k.1 && stride.0 == stride.1 && pad.0 == pad.1
+            {
+                // legacy square encoding — containers with only square
+                // pools stay readable by pre-rectangular loaders
+                m.insert("k".into(), num(k.0));
+                m.insert("stride".into(), num(stride.0));
+                m.insert("pad".into(), num(pad.0));
+            } else {
+                m.insert("kh".into(), num(k.0));
+                m.insert("kw".into(), num(k.1));
+                m.insert("sh".into(), num(stride.0));
+                m.insert("sw".into(), num(stride.1));
+                m.insert("ph".into(), num(pad.0));
+                m.insert("pw".into(), num(pad.1));
+                m.insert("global".into(), Json::Bool(*global));
+            }
+        }
+        Op::ConvT2d { w, b, in_ch, out_ch, k, stride, pad } => {
+            m.insert("op".into(), s("convT"));
+            m.insert("w".into(), s(w));
+            m.insert(
+                "b".into(),
+                b.as_ref().map(|x| s(x)).unwrap_or(Json::Null),
+            );
+            m.insert("in_ch".into(), num(*in_ch));
+            m.insert("out_ch".into(), num(*out_ch));
             m.insert("k".into(), num(*k));
             m.insert("stride".into(), num(*stride));
             m.insert("pad".into(), num(*pad));

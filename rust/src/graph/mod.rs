@@ -136,11 +136,30 @@ pub enum Op {
     /// output grid (inception-style branch merges).
     Concat,
     Gap,
-    /// Spatial pooling with a square window. Out-of-bounds window
-    /// positions are excluded (max ignores padding; avg divides by the
-    /// number of in-bounds taps), so both kinds stay on the input grid.
+    /// Spatial pooling with a rectangular `(kh, kw)` window. Out-of-bounds
+    /// window positions are excluded (max ignores padding; avg divides by
+    /// the number of in-bounds taps), so both kinds stay on the input
+    /// grid. With `global` set the window covers the full spatial extent
+    /// of the input (the stored `k`/`stride`/`pad` are the canonical
+    /// placeholders `(1,1)/(1,1)/(0,0)`); output is N×C×1×1.
     Pool2d {
         kind: PoolKind,
+        k: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+        global: bool,
+    },
+    /// Transposed convolution (decoder upsampling head). Weights are
+    /// `[out_ch, in_ch, k, k]` — out-channel first, like `Conv`, so
+    /// per-out-channel passes (BN folding, CLE, bias correction) apply
+    /// unchanged. Dense only (no groups); requires `pad < k` so the
+    /// gather-form lowering (zero-insertion + flipped-kernel conv with
+    /// `pad' = k - 1 - pad`) stays valid.
+    ConvT2d {
+        w: String,
+        b: Option<String>,
+        in_ch: usize,
+        out_ch: usize,
         k: usize,
         stride: usize,
         pad: usize,
@@ -161,6 +180,7 @@ impl Op {
         match self {
             Op::Input => "input",
             Op::Conv { .. } => "conv",
+            Op::ConvT2d { .. } => "convT",
             Op::BatchNorm { .. } => "bn",
             Op::Act(_) => "act",
             Op::Add => "add",
@@ -169,6 +189,30 @@ impl Op {
             Op::Pool2d { .. } => "pool2d",
             Op::Linear { .. } => "linear",
             Op::Upsample { .. } => "upsample",
+        }
+    }
+
+    /// Square-window pooling (the historical form): `k × k` window,
+    /// uniform stride and pad on both axes.
+    pub fn pool2d(kind: PoolKind, k: usize, stride: usize, pad: usize) -> Op {
+        Op::Pool2d {
+            kind,
+            k: (k, k),
+            stride: (stride, stride),
+            pad: (pad, pad),
+            global: false,
+        }
+    }
+
+    /// Global pooling over the full spatial extent (canonical form:
+    /// placeholder window `(1,1)`, stride `(1,1)`, pad `(0,0)`).
+    pub fn global_pool2d(kind: PoolKind) -> Op {
+        Op::Pool2d {
+            kind,
+            k: (1, 1),
+            stride: (1, 1),
+            pad: (0, 0),
+            global: true,
         }
     }
 
@@ -239,11 +283,16 @@ impl Model {
         self.nodes.iter().filter(|n| n.inputs.contains(&id)).collect()
     }
 
-    /// All conv/linear nodes in order (the quantizable layers).
+    /// All conv/convT/linear nodes in order (the quantizable layers).
     pub fn layers(&self) -> Vec<&Node> {
         self.nodes
             .iter()
-            .filter(|n| matches!(n.op, Op::Conv { .. } | Op::Linear { .. }))
+            .filter(|n| {
+                matches!(
+                    n.op,
+                    Op::Conv { .. } | Op::ConvT2d { .. } | Op::Linear { .. }
+                )
+            })
             .collect()
     }
 
@@ -257,6 +306,10 @@ impl Model {
                 Op::Conv { w, b, .. } => {
                     out.push(w.clone());
                     out.push(b.clone().expect("folded conv has bias"));
+                }
+                Op::ConvT2d { w, b, .. } => {
+                    out.push(w.clone());
+                    out.push(b.clone().expect("folded convT has bias"));
                 }
                 Op::Linear { w, b, .. } => {
                     out.push(w.clone());
@@ -307,6 +360,29 @@ impl Model {
                         }
                     }
                 }
+                Op::ConvT2d { w, b, out_ch, in_ch, k, stride, pad } => {
+                    let wt = self.tensor(w)?;
+                    let want = [*out_ch, *in_ch, *k, *k];
+                    if wt.shape() != want {
+                        bail!("node {}: convT weight {:?} != {:?}", n.id,
+                              wt.shape(), want);
+                    }
+                    if let Some(b) = b {
+                        if self.tensor(b)?.shape() != [*out_ch] {
+                            bail!("node {}: bad convT bias shape", n.id);
+                        }
+                    }
+                    if *k == 0 || *stride == 0 {
+                        bail!("node {}: convT with zero k/stride", n.id);
+                    }
+                    if *pad >= *k {
+                        // the gather-form lowering needs pad' = k-1-pad >= 0
+                        bail!(
+                            "node {}: convT pad {pad} >= kernel {k}",
+                            n.id
+                        );
+                    }
+                }
                 Op::Linear { w, b, in_dim, out_dim } => {
                     if self.tensor(w)?.shape() != [*out_dim, *in_dim] {
                         bail!("node {}: bad linear weight", n.id);
@@ -332,24 +408,41 @@ impl Model {
                         );
                     }
                 }
-                Op::Pool2d { k, stride, pad, .. } => {
-                    if *k == 0 || *stride == 0 {
-                        bail!("node {}: pool2d with zero k/stride", n.id);
-                    }
-                    if *k > MAX_POOL_DIM || *stride > MAX_POOL_DIM {
+                Op::Pool2d { k, stride, pad, global, .. } => {
+                    if *global && (*k != (1, 1) || *stride != (1, 1)
+                        || *pad != (0, 0))
+                    {
                         bail!(
-                            "node {}: pool2d window/stride beyond \
-                             {MAX_POOL_DIM}",
+                            "node {}: global pool2d must use the canonical \
+                             k=(1,1)/stride=(1,1)/pad=(0,0) placeholders",
                             n.id
                         );
                     }
-                    if *pad >= *k {
-                        // a window fully inside the padding would have no
-                        // valid taps (avg would divide by zero)
-                        bail!(
-                            "node {}: pool2d pad {pad} >= window {k}",
-                            n.id
-                        );
+                    for ((kd, sd), pd) in [(k.0, stride.0), (k.1, stride.1)]
+                        .into_iter()
+                        .zip([pad.0, pad.1])
+                    {
+                        if kd == 0 || sd == 0 {
+                            bail!("node {}: pool2d with zero k/stride", n.id);
+                        }
+                        if kd > MAX_POOL_DIM || sd > MAX_POOL_DIM {
+                            bail!(
+                                "node {}: pool2d window/stride beyond \
+                                 {MAX_POOL_DIM}",
+                                n.id
+                            );
+                        }
+                        if pd >= kd {
+                            // a window fully inside the padding would have
+                            // no valid taps (avg would divide by zero) —
+                            // enforced per axis so rectangular windows
+                            // cannot smuggle an empty window along the
+                            // short axis
+                            bail!(
+                                "node {}: pool2d pad {pd} >= window {kd}",
+                                n.id
+                            );
+                        }
                     }
                 }
                 _ => {}

@@ -56,6 +56,19 @@ pub fn propagate(model: &Model) -> Result<HashMap<usize, TensorStats>> {
                     None => conv_pushforward(model, n.id, *out_ch, &out)?,
                 }
             }
+            Op::ConvT2d { out_ch, .. } => {
+                match model.act_stats.get(&n.id) {
+                    Some(ChannelStats { mean, std }) => TensorStats {
+                        mean: mean.clone(),
+                        std: std.clone(),
+                    },
+                    // BN-less decoder heads: the full-tap output position
+                    // of a transposed conv sees exactly the dense-conv
+                    // affine map (every k² weight once), so the conv
+                    // pushforward is the conservative per-channel envelope.
+                    None => conv_pushforward(model, n.id, *out_ch, &out)?,
+                }
+            }
             Op::Linear { out_dim, .. } => {
                 linear_pushforward(model, n.id, *out_dim, &out)?
             }
@@ -139,6 +152,7 @@ fn conv_pushforward(
         Op::Conv { w, b, groups, k, .. } => {
             (w.clone(), b.clone(), *groups, *k)
         }
+        Op::ConvT2d { w, b, k, .. } => (w.clone(), b.clone(), 1, *k),
         _ => unreachable!(),
     };
     let x = stats

@@ -56,7 +56,8 @@ fn usage() -> ! {
                    [-o|--out FILE]     write a compiled .dfqm artifact\n\
            report <arch|fixture> [--bits N] [--bc none|analytic] [--json]\n\
                   per-pass DFQ diagnostics (spread, CLE trace, BC |db|);\n\
-                  fixtures: two_layer | resblock | inception\n\
+                  fixtures: two_layer | resblock | inception |\n\
+                            deeplab | ssd\n\
            profile <arch|fixture> [--runs N] [--json]\n\
                   per-op runtime profile of the int8 plan (wall time,\n\
                   activation bytes, GEMM calls per kernel flavour);\n\
@@ -265,8 +266,9 @@ fn cmd_compile(rest: &[String]) -> Result<()> {
 /// print the per-pass diagnostics (weight-range spread before/after, the
 /// CLE convergence trace, absorbed-bias mass, bias-correction |Δb|) as a
 /// table, or as the shared one-line JSON records with `--json`. Built-in
-/// fixtures (`two_layer`, `resblock`, `inception`) need no artifacts
-/// directory, so this runs anywhere — including the CI smoke step.
+/// fixtures (`two_layer`, `resblock`, `inception`, `deeplab`, `ssd`)
+/// need no artifacts directory, so this runs anywhere — including the
+/// CI smoke step.
 fn cmd_report(rest: &[String]) -> Result<()> {
     let (pos, kv) = flags(rest);
     let arch = pos.first().context("missing <arch|fixture>")?.as_str();
@@ -281,6 +283,8 @@ fn cmd_report(rest: &[String]) -> Result<()> {
         "two_layer" => dfq::dfq::testutil::two_layer_model(1, true),
         "resblock" => dfq::dfq::testutil::residual_block_model(1),
         "inception" => dfq::dfq::testutil::inception_block_model(1),
+        "deeplab" => dfq::dfq::testutil::deeplab_head_model(1),
+        "ssd" => dfq::dfq::testutil::ssd_head_model(1),
         _ => {
             let manifest = Manifest::load(dfq::artifacts_dir())?;
             Model::load(manifest.path(&manifest.arch(arch)?.model))?
@@ -345,7 +349,7 @@ fn cmd_report(rest: &[String]) -> Result<()> {
 /// diagnostics. `--json` emits one record per op (plus a totals record)
 /// and treats any surviving f32 fallback op as an error, which is what
 /// the CI smoke step asserts. Fixtures (`two_layer`, `resblock`,
-/// `inception`) need no artifacts directory.
+/// `inception`, `deeplab`, `ssd`) need no artifacts directory.
 fn cmd_profile(rest: &[String]) -> Result<()> {
     let (pos, kv) = flags(rest);
     let arch = pos.first().context("missing <arch|fixture>")?.as_str();
@@ -359,6 +363,8 @@ fn cmd_profile(rest: &[String]) -> Result<()> {
         "two_layer" => dfq::dfq::testutil::two_layer_model(1, true),
         "resblock" => dfq::dfq::testutil::residual_block_model(1),
         "inception" => dfq::dfq::testutil::inception_block_model(1),
+        "deeplab" => dfq::dfq::testutil::deeplab_head_model(1),
+        "ssd" => dfq::dfq::testutil::ssd_head_model(1),
         _ => {
             let manifest = Manifest::load(dfq::artifacts_dir())?;
             Model::load(manifest.path(&manifest.arch(arch)?.model))?
@@ -633,6 +639,7 @@ fn cmd_inspect(rest: &[String]) -> Result<()> {
     for n in folded.layers() {
         let w = match &n.op {
             dfq::graph::Op::Conv { w, .. }
+            | dfq::graph::Op::ConvT2d { w, .. }
             | dfq::graph::Op::Linear { w, .. } => w,
             _ => unreachable!(),
         };

@@ -174,6 +174,133 @@ pub(crate) fn im2col_into<T: Copy>(
     }
 }
 
+/// Zero-insertion expansion of an NCHW tensor: each input pixel lands
+/// at `(y·stride, x·stride)` of an `(h-1)·stride+1` grid, everything
+/// else is `fill`. This is the gather-form front half of a transposed
+/// conv; the integer engine reuses it with `fill = zero_point` (the
+/// code that *represents* 0 on the activation grid).
+pub(crate) fn expand_strided<T: Copy>(
+    xd: &[T],
+    n_c: usize,
+    h: usize,
+    w: usize,
+    stride: usize,
+    fill: T,
+) -> (Vec<T>, usize, usize) {
+    let (eh, ew) = ((h - 1) * stride + 1, (w - 1) * stride + 1);
+    let mut out = vec![fill; n_c * eh * ew];
+    for i in 0..n_c {
+        let xoff = i * h * w;
+        let ooff = i * eh * ew;
+        for y in 0..h {
+            for x in 0..w {
+                out[ooff + y * stride * ew + x * stride] =
+                    xd[xoff + y * w + x];
+            }
+        }
+    }
+    (out, eh, ew)
+}
+
+/// Spatially flip an OIHW kernel: `out[o,i,dy,dx] = w[o,i,k-1-dy,k-1-dx]`.
+pub(crate) fn flip_kernel(w: &Tensor) -> Tensor {
+    let (c_out, c_in, kh, kw) = dims4(w);
+    let wd = w.data();
+    let mut out = vec![0f32; wd.len()];
+    for oi in 0..c_out * c_in {
+        let base = oi * kh * kw;
+        for dy in 0..kh {
+            for dx in 0..kw {
+                out[base + dy * kw + dx] =
+                    wd[base + (kh - 1 - dy) * kw + (kw - 1 - dx)];
+            }
+        }
+    }
+    Tensor::new(&[c_out, c_in, kh, kw], out)
+}
+
+/// Transposed conv2d (gather form): zero-insert between input pixels,
+/// then a stride-1 conv with the spatially flipped kernel and
+/// `pad' = k - 1 - pad` (requires `pad < k`). Weights are
+/// `[out_ch, in_ch, k, k]` — out-channel first, matching [`Op::ConvT2d`].
+/// Output is `(h-1)·stride - 2·pad + k` per spatial dim.
+pub fn conv_transpose2d(
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&[f32]>,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let (n, c_in, h, wd) = dims4(x);
+    let (_, _, kh, kw) = dims4(w);
+    debug_assert!(pad < kh && pad < kw, "convT pad {pad} >= kernel");
+    let (ex, eh, ew) = expand_strided(x.data(), n * c_in, h, wd, stride, 0.0);
+    let expanded = Tensor::new(&[n, c_in, eh, ew], ex);
+    conv2d(&expanded, &flip_kernel(w), b, 1, kh - 1 - pad, 1)
+}
+
+/// Independent scatter-form transposed conv (oracle for the gather
+/// form): every input pixel scatters `x·w` into the output window.
+pub fn conv_transpose2d_direct(
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&[f32]>,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let (n, c_in, h, wd) = dims4(x);
+    let (c_out, _, kh, kw) = dims4(w);
+    let oh = (h - 1) * stride + kh - 2 * pad;
+    let ow = (wd - 1) * stride + kw - 2 * pad;
+    let mut acc = vec![0f64; n * c_out * oh * ow];
+    let xd = x.data();
+    let wdat = w.data();
+    for img in 0..n {
+        for i in 0..c_in {
+            let xoff = (img * c_in + i) * h * wd;
+            for o in 0..c_out {
+                let woff = (o * c_in + i) * kh * kw;
+                let ooff = (img * c_out + o) * oh * ow;
+                for iy in 0..h {
+                    for ix in 0..wd {
+                        let xv = xd[xoff + iy * wd + ix] as f64;
+                        for dy in 0..kh {
+                            let oy =
+                                (iy * stride + dy) as isize - pad as isize;
+                            if oy < 0 || oy >= oh as isize {
+                                continue;
+                            }
+                            for dx in 0..kw {
+                                let ox = (ix * stride + dx) as isize
+                                    - pad as isize;
+                                if ox < 0 || ox >= ow as isize {
+                                    continue;
+                                }
+                                acc[ooff
+                                    + oy as usize * ow
+                                    + ox as usize] += xv
+                                    * wdat[woff + dy * kw + dx] as f64;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut out = Tensor::zeros(&[n, c_out, oh, ow]);
+    let od = out.data_mut();
+    for img in 0..n {
+        for o in 0..c_out {
+            let bias = b.map(|bb| bb[o]).unwrap_or(0.0) as f64;
+            let base = (img * c_out + o) * oh * ow;
+            for p in 0..oh * ow {
+                od[base + p] = (acc[base + p] + bias) as f32;
+            }
+        }
+    }
+    out
+}
+
 /// Independent naive conv (triple-checked oracle for property tests).
 pub fn conv2d_direct(
     x: &Tensor,
@@ -277,6 +404,40 @@ mod tests {
             let want = conv2d_direct(&x, &w, Some(&b), stride, 1, 6);
             assert!(got.max_abs_diff(&want) < 1e-4);
         }
+    }
+
+    #[test]
+    fn conv_transpose_gather_matches_scatter() {
+        let mut rng = Rng::new(9);
+        for (stride, pad, k) in
+            [(1, 0, 3), (2, 1, 3), (2, 0, 2), (3, 1, 4), (1, 2, 3)]
+        {
+            let x = rand_tensor(&mut rng, &[2, 3, 5, 6]);
+            let w = rand_tensor(&mut rng, &[4, 3, k, k]);
+            let b: Vec<f32> = rng.normal_vec(4, 1.0);
+            let got = conv_transpose2d(&x, &w, Some(&b), stride, pad);
+            let want = conv_transpose2d_direct(&x, &w, Some(&b), stride, pad);
+            assert_eq!(got.shape(), want.shape(), "s={stride} p={pad} k={k}");
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "s={stride} p={pad} k={k}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn conv_transpose_upsamples_identity_kernel() {
+        // 1x1 input, k=2, stride=2, pad=0: each pixel becomes a 2x2
+        // block scaled by the kernel taps
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::new(&[1, 1, 2, 2], vec![1., 1., 1., 1.]);
+        let y = conv_transpose2d(&x, &w, None, 2, 0);
+        assert_eq!(y.shape(), &[1, 1, 4, 4]);
+        assert_eq!(
+            y.data(),
+            &[1., 1., 2., 2., 1., 1., 2., 2., 3., 3., 4., 4., 3., 3., 4., 4.]
+        );
     }
 
     #[test]

@@ -133,16 +133,32 @@ pub fn forward_collect(
                 t
             }
             Op::Gap => ops::global_avg_pool(&vals[&n.inputs[0]]),
-            Op::Pool2d { kind, k, stride, pad } => {
+            Op::Pool2d { kind, k, stride, pad, global } => {
                 let x = &vals[&n.inputs[0]];
+                // a global pool is a single full-extent window
+                let (k, stride, pad) = if *global {
+                    let s = x.shape();
+                    ((s[2], s[3]), (1, 1), (0, 0))
+                } else {
+                    (*k, *stride, *pad)
+                };
                 match kind {
                     crate::graph::PoolKind::Max => {
-                        ops::max_pool2d(x, *k, *stride, *pad)
+                        ops::max_pool2d_rect(x, k, stride, pad)
                     }
                     crate::graph::PoolKind::Avg => {
-                        ops::avg_pool2d(x, *k, *stride, *pad)
+                        ops::avg_pool2d_rect(x, k, stride, pad)
                     }
                 }
+            }
+            Op::ConvT2d { w, b, stride, pad, .. } => {
+                let xin = &vals[&n.inputs[0]];
+                let wt = model.tensor(w)?;
+                let bias = match b {
+                    Some(b) => Some(model.tensor(b)?.data()),
+                    None => None,
+                };
+                conv::conv_transpose2d(xin, wt, bias, *stride, *pad)
             }
             Op::Linear { w, b, .. } => {
                 let wt = model.tensor(w)?;
@@ -173,7 +189,7 @@ pub fn preact_channel_means(
     let mut out = HashMap::new();
     for n in &model.nodes {
         match &n.op {
-            Op::Conv { out_ch, .. } => {
+            Op::Conv { out_ch, .. } | Op::ConvT2d { out_ch, .. } => {
                 let t = &vals[&n.id];
                 let s = t.shape();
                 out.insert(

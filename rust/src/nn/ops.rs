@@ -87,39 +87,41 @@ pub(crate) fn pool_out(h: usize, k: usize, stride: usize, pad: usize) -> usize {
 /// Walk every pool window over `n_c` contiguous (image, channel)
 /// planes: gathers each window's in-bounds elements into a reused
 /// buffer and calls `emit(out_index, window)` per output position.
-/// Generic over the element type so the f32 oracle and the integer
-/// engine share the bounds/padding logic (the [`super::conv::im2col_into`]
-/// precedent for convs).
+/// Window/stride/pad are per-axis `(h, w)` pairs (rectangular windows
+/// for the detection heads). Generic over the element type so the f32
+/// oracle and the integer engine share the bounds/padding logic (the
+/// [`super::conv::im2col_into`] precedent for convs).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn pool_windows<T: Copy>(
     xd: &[T],
     n_c: usize,
     h: usize,
     w: usize,
-    k: usize,
-    stride: usize,
-    pad: usize,
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
     mut emit: impl FnMut(usize, &[T]),
 ) {
-    let (oh, ow) = (pool_out(h, k, stride, pad), pool_out(w, k, stride, pad));
-    let mut win = Vec::with_capacity(k * k);
+    let oh = pool_out(h, k.0, stride.0, pad.0);
+    let ow = pool_out(w, k.1, stride.1, pad.1);
+    let mut win = Vec::with_capacity(k.0 * k.1);
     for i in 0..n_c {
         let xoff = i * h * w;
         let ooff = i * oh * ow;
         for oy in 0..oh {
             for ox in 0..ow {
                 win.clear();
-                for dy in 0..k {
-                    let iy = oy * stride + dy;
-                    if iy < pad || iy >= h + pad {
+                for dy in 0..k.0 {
+                    let iy = oy * stride.0 + dy;
+                    if iy < pad.0 || iy >= h + pad.0 {
                         continue;
                     }
-                    for dx in 0..k {
-                        let ix = ox * stride + dx;
-                        if ix < pad || ix >= w + pad {
+                    for dx in 0..k.1 {
+                        let ix = ox * stride.1 + dx;
+                        if ix < pad.1 || ix >= w + pad.1 {
                             continue;
                         }
-                        win.push(xd[xoff + (iy - pad) * w + (ix - pad)]);
+                        win.push(xd[xoff + (iy - pad.0) * w + (ix - pad.1)]);
                     }
                 }
                 debug_assert!(!win.is_empty(), "empty pool window");
@@ -133,24 +135,56 @@ pub(crate) fn pool_windows<T: Copy>(
 /// positions are excluded from the max, so the output values are always
 /// actual input values (grid-preserving for quantised grids).
 pub fn max_pool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
-    pool2d(x, k, stride, pad, true)
+    pool2d(x, (k, k), (stride, stride), (pad, pad), true)
 }
 
 /// Average pool (N, C, H, W) with a k×k window, averaging over the
 /// in-bounds taps only (`count_include_pad = false`).
 pub fn avg_pool2d(x: &Tensor, k: usize, stride: usize, pad: usize) -> Tensor {
+    pool2d(x, (k, k), (stride, stride), (pad, pad), false)
+}
+
+/// Rectangular max pool: per-axis `(kh, kw)` window/stride/pad.
+pub fn max_pool2d_rect(
+    x: &Tensor,
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Tensor {
+    pool2d(x, k, stride, pad, true)
+}
+
+/// Rectangular average pool over in-bounds taps only.
+pub fn avg_pool2d_rect(
+    x: &Tensor,
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Tensor {
     pool2d(x, k, stride, pad, false)
 }
 
-fn pool2d(x: &Tensor, k: usize, stride: usize, pad: usize, max: bool) -> Tensor {
+fn pool2d(
+    x: &Tensor,
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    max: bool,
+) -> Tensor {
     let s = x.shape();
     let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
-    assert!(pad < k, "pool2d pad {pad} >= window {k}");
+    // per-axis pad < k: no window can land fully inside the padding
+    // (the avg path would otherwise divide by a zero tap count)
     assert!(
-        h + 2 * pad >= k && w + 2 * pad >= k,
-        "pool2d window {k} exceeds padded input {h}x{w} (pad {pad})"
+        pad.0 < k.0 && pad.1 < k.1,
+        "pool2d pad {pad:?} >= window {k:?}"
     );
-    let (oh, ow) = (pool_out(h, k, stride, pad), pool_out(w, k, stride, pad));
+    assert!(
+        h + 2 * pad.0 >= k.0 && w + 2 * pad.1 >= k.1,
+        "pool2d window {k:?} exceeds padded input {h}x{w} (pad {pad:?})"
+    );
+    let oh = pool_out(h, k.0, stride.0, pad.0);
+    let ow = pool_out(w, k.1, stride.1, pad.1);
     let mut out = Tensor::zeros(&[n, c, oh, ow]);
     let od = out.data_mut();
     // one reduction per kind, over the window's in-bounds values only
@@ -300,6 +334,27 @@ mod tests {
         // padded max ignores out-of-bounds
         let mx = max_pool2d(&x, 3, 2, 1);
         assert_eq!(mx.data(), &[5., 6., 8., 9.]);
+    }
+
+    #[test]
+    fn rect_pool_matches_manual() {
+        // 1x1x2x4: a 1x3 window with stride (1,1), pad (0,1)
+        let x = Tensor::new(
+            &[1, 1, 2, 4],
+            vec![1., 2., 3., 4., 5., 6., 7., 8.],
+        );
+        let mx = max_pool2d_rect(&x, (1, 3), (1, 1), (0, 1));
+        assert_eq!(mx.shape(), &[1, 1, 2, 4]);
+        assert_eq!(mx.data(), &[2., 3., 4., 4., 6., 7., 8., 8.]);
+        let av = avg_pool2d_rect(&x, (1, 3), (1, 1), (0, 1));
+        // edges average the two in-bounds taps only
+        assert_eq!(av.data()[0], 1.5);
+        assert_eq!(av.data()[1], 2.0);
+        assert_eq!(av.data()[3], 3.5);
+        // square wrappers still agree with the rect core
+        let sq = max_pool2d(&x, 2, 1, 0);
+        let rc = max_pool2d_rect(&x, (2, 2), (1, 1), (0, 0));
+        assert_eq!(sq.data(), rc.data());
     }
 
     #[test]

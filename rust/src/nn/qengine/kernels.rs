@@ -918,6 +918,147 @@ impl QConv {
     }
 }
 
+// -- packed transposed convolution -------------------------------------------
+
+/// A transposed conv packed for integer execution via the gather-form
+/// lowering: zero-insertion expansion of the input codes (each inserted
+/// position carries the input zero point — the exact quantised zero)
+/// followed by a stride-1 [`QConv`] over the spatially flipped kernel
+/// with `pad' = k-1-pad`. The inner conv owns the weights, grids and
+/// fused epilogue, so every requantisation / zero-point identity — and
+/// the bitwise scalar-vs-SIMD dispatch guarantee — is inherited
+/// unchanged.
+#[derive(Debug, Clone)]
+pub struct QConvT {
+    /// Logical transposed-conv stride (the zero-insertion factor).
+    pub(crate) stride: usize,
+    /// Logical transposed-conv padding (`inner.pad == k - 1 - pad`).
+    pub(crate) pad: usize,
+    pub(crate) inner: QConv,
+}
+
+impl QConvT {
+    /// Pack one transposed conv layer. `w` must hold signed (i8) codes
+    /// with the dense `[c_out, c_in, k, k]` layout; `pad < k` (graph
+    /// validation enforces it) keeps the lowering's `pad' = k-1-pad`
+    /// in range. Dense only — no grouping.
+    pub fn pack(
+        w: &QTensor,
+        bias: &[f32],
+        stride: usize,
+        pad: usize,
+        in_qp: &QParams,
+        epi: EpiSpec,
+    ) -> Result<QConvT> {
+        let shape = w.shape();
+        if shape.len() != 4 || shape[2] != shape[3] {
+            bail!("QConvT wants square OIHW weights, got {:?}", shape);
+        }
+        let k = shape[2];
+        if stride == 0 {
+            bail!("QConvT with zero stride");
+        }
+        if pad >= k {
+            bail!(
+                "QConvT pad {pad} >= kernel {k} (the gather lowering \
+                 wants pad' = k-1-pad >= 0)"
+            );
+        }
+        let codes = w.codes_i8().ok_or_else(|| {
+            anyhow!(
+                "integer packing wants signed (i8) weight codes, got {}",
+                w.storage()
+            )
+        })?;
+        // flip the kernel spatially; the out-channel dim (and with it
+        // any per-channel grid) is untouched
+        let mut flipped = vec![0i8; codes.len()];
+        for oi in 0..shape[0] * shape[1] {
+            let base = oi * k * k;
+            for dy in 0..k {
+                for dx in 0..k {
+                    flipped[base + dy * k + dx] =
+                        codes[base + (k - 1 - dy) * k + (k - 1 - dx)];
+                }
+            }
+        }
+        let wf = QTensor::from_codes_i8(shape, flipped, w.params().to_vec())?;
+        let inner = QConv::pack(&wf, bias, 1, k - 1 - pad, 1, in_qp, epi)?;
+        Ok(QConvT { stride, pad, inner })
+    }
+
+    pub fn out_channels(&self) -> usize {
+        self.inner.c_out
+    }
+
+    /// Does this layer requantise (u8 out) rather than emit exact f32?
+    pub fn is_fused(&self) -> bool {
+        self.inner.is_fused()
+    }
+
+    /// Output grid when the layer requantises.
+    pub fn out_params(&self) -> Option<QParams> {
+        self.inner.out_params()
+    }
+
+    /// The inner-kernel flavour this layer currently dispatches to.
+    pub fn kernel_kind(&self) -> KernelKind {
+        self.inner.kernel_kind()
+    }
+
+    /// Re-target the inner kernel (plan-level `force_scalar`).
+    pub fn set_kernel(&mut self, kind: KernelKind) {
+        self.inner.set_kernel(kind)
+    }
+
+    /// Zero-insertion expansion of the input codes: pixel `(y, x)` moves
+    /// to `(y·s, x·s)` of an `((h-1)·s+1, (w-1)·s+1)` grid whose other
+    /// positions hold the input zero point exactly.
+    fn expand(&self, x: &QActTensor) -> Result<QActTensor> {
+        if x.shape.len() != 4 {
+            bail!("convT wants NCHW input, got {:?}", x.shape);
+        }
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let (ex, eh, ew) = crate::nn::conv::expand_strided(
+            &x.codes,
+            n * c,
+            h,
+            w,
+            self.stride,
+            self.inner.in_qp.zero_point as u8,
+        );
+        Ok(QActTensor { shape: vec![n, c, eh, ew], codes: ex, qp: x.qp })
+    }
+
+    /// Fused path: u8 in → u8 out on the packed output grid.
+    pub fn run_q(&self, x: &QActTensor) -> Result<QActTensor> {
+        self.run_q_with(x, &mut Scratch::new())
+    }
+
+    /// Fused path over a caller-provided scratch arena.
+    pub fn run_q_with(
+        &self,
+        x: &QActTensor,
+        scratch: &mut Scratch,
+    ) -> Result<QActTensor> {
+        self.inner.run_q_with(&self.expand(x)?, scratch)
+    }
+
+    /// Unfused path: u8 in → exact f32 pre-activation output.
+    pub fn run_f32(&self, x: &QActTensor) -> Result<Tensor> {
+        self.run_f32_with(x, &mut Scratch::new())
+    }
+
+    /// Unfused path over a caller-provided scratch arena.
+    pub fn run_f32_with(
+        &self,
+        x: &QActTensor,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        self.inner.run_f32_with(&self.expand(x)?, scratch)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1107,5 +1248,93 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn convt_gather_lowering_matches_f32_reference() {
+        // the packed transposed conv against the f32 oracle on the same
+        // fake-quantised operands, plus the scalar-vs-native bitwise
+        // guarantee on the fused path
+        let mut rng = Rng::new(91);
+        for (c_out, c_in, k, stride, pad) in [
+            (4usize, 3usize, 3usize, 2usize, 1usize),
+            (5, 2, 4, 2, 1),
+            (3, 3, 3, 1, 0),
+            (2, 4, 2, 3, 0),
+        ] {
+            let t = crate::tensor::Tensor::new(
+                &[c_out, c_in, k, k],
+                rng.normal_vec(c_out * c_in * k * k, 0.5),
+            );
+            let (_, codes) = crate::quant::quantize_weights_retaining(
+                &mut t.clone(),
+                &crate::quant::QScheme::int8_asymmetric(),
+            )
+            .unwrap();
+            let x = crate::tensor::Tensor::new(
+                &[2, c_in, 5, 6],
+                rng.normal_vec(2 * c_in * 5 * 6, 1.0),
+            );
+            let in_qp =
+                crate::quant::params_for_range(x.min(), x.max(), 8, false);
+            let xq = QActTensor::quantize(&x, &in_qp);
+            let bias: Vec<f32> =
+                (0..c_out).map(|o| o as f32 * 0.1 - 0.2).collect();
+
+            // f32 path: integer accumulate + float epilogue vs the
+            // oracle's conv_transpose2d on the dequantised operands
+            let qc = QConvT::pack(
+                &codes, &bias, stride, pad, &in_qp, EpiSpec::F32,
+            )
+            .unwrap();
+            let got = qc.run_f32(&xq).unwrap();
+            let want = crate::nn::conv::conv_transpose2d(
+                &xq.dequantize(),
+                &codes.dequantize(),
+                Some(&bias),
+                stride,
+                pad,
+            );
+            assert_eq!(got.shape(), want.shape(), "k={k} s={stride}");
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-3, "convT f32 path off by {d} (k={k} s={stride})");
+
+            // fused path: scalar vs native dispatch must be bitwise
+            let row = SiteCfg {
+                scale: 0.05,
+                zero_point: 2.0,
+                n_levels: 256.0,
+                clip_hi: f32::INFINITY,
+            };
+            let native = QConvT::pack(
+                &codes, &bias, stride, pad, &in_qp, EpiSpec::Act(&row),
+            )
+            .unwrap();
+            let mut scalar = native.clone();
+            scalar.set_kernel(KernelKind::Scalar);
+            let a = native.run_q(&xq).unwrap();
+            let b = scalar.run_q(&xq).unwrap();
+            assert_eq!(a.codes, b.codes, "convT dispatch diverged");
+            assert_eq!(
+                a.shape,
+                vec![2, c_out, 4 * stride + k - 2 * pad,
+                     5 * stride + k - 2 * pad],
+            );
+        }
+    }
+
+    #[test]
+    fn convt_pack_rejects_degenerate_geometry() {
+        let mut rng = Rng::new(92);
+        let t = crate::tensor::Tensor::new(&[2, 2, 3, 3], rng.normal_vec(36, 0.5));
+        let (_, codes) = crate::quant::quantize_weights_retaining(
+            &mut t.clone(),
+            &crate::quant::QScheme::int8_asymmetric(),
+        )
+        .unwrap();
+        let qp = crate::quant::params_for_range(-1.0, 1.0, 8, false);
+        let b = [0.0f32; 2];
+        assert!(QConvT::pack(&codes, &b, 0, 1, &qp, EpiSpec::F32).is_err());
+        assert!(QConvT::pack(&codes, &b, 2, 3, &qp, EpiSpec::F32).is_err());
     }
 }

@@ -54,12 +54,13 @@
 //! | input        | quantise onto site-0 grid        | —                    |
 //! | conv (dense) | GEMM + fused requant / f32 out   | fake-quant f32 conv  |
 //! | conv (dw)    | direct + fused requant / f32 out | fake-quant f32 conv  |
+//! | convT (dense)| zero-insert + flipped-kernel stride-1 GEMM ([`kernels::QConvT`]) | fake-quant f32 convT |
 //! | act          | fused into conv, or requantizer  | clip + quantise      |
 //! | add          | requantise-add                   | f32 add + quantise   |
 //! | concat       | requantise-concat (Q20 per input)| f32 concat + quantise|
 //! | gap          | integer mean on input grid       | f32 mean             |
-//! | pool2d (max) | exact code max (grid-preserving) | f32 max-pool         |
-//! | pool2d (avg) | i64 accumulate + rounded mean    | f32 avg-pool         |
+//! | pool2d (max) | exact code max (grid-preserving; square, rect, global) | f32 max-pool |
+//! | pool2d (avg) | i64 accumulate + rounded mean (square, rect, global)   | f32 avg-pool |
 //! | linear       | GEMM + f32 logits                | f32 linear           |
 //! | upsample     | code copy (grid-preserving)      | f32 copy             |
 //!
@@ -81,9 +82,11 @@
 //! [`PlanOpts::force_scalar`].
 //!
 //! MobileNet-style graphs (convs + depthwise + residual adds + GAP +
-//! linear head) **and** inception-style graphs (max-pool stems,
-//! multi-branch concat blocks, avg-pool branches) therefore plan with
-//! **zero** fallback ops; fallbacks only appear when a value genuinely
+//! linear head), inception-style graphs (max-pool stems, multi-branch
+//! concat blocks, avg-pool branches), **and** segmentation/detection
+//! heads (transposed-conv decoders, rectangular and global max/avg
+//! pools, multi-scale concat — `deeplab_head_model`, `ssd_head_model`)
+//! therefore plan with **zero** fallback ops; fallbacks only appear when a value genuinely
 //! has no quantised grid (e.g. a conv that is itself a model output
 //! feeding further layers), are reported by [`QModel::summarize`], and
 //! can be rejected outright with [`PlanOpts::int8_only`]. Parity with
@@ -99,7 +102,9 @@ pub use gemm::{
     active_kind, available_kinds, qgemm, qgemm_into, qgemm_into_kind,
     qgemm_into_scalar, rowsums_u8, rowsums_u8_into, KernelKind,
 };
-pub use kernels::{apply_mult, mult_for, EpiSpec, Mult, QConv, Scratch};
+pub use kernels::{
+    apply_mult, mult_for, EpiSpec, Mult, QConv, QConvT, Scratch,
+};
 pub use ops::{
     gap_int, upsample_codes, QAddInt, QConcatInt, QLinear, QPoolInt,
     Requantizer,

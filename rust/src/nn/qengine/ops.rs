@@ -241,36 +241,73 @@ impl QConcatInt {
 /// both kinds: max of u8 codes (dequantisation is monotone, so
 /// `max(codes)` *is* the code of the f32 max — exact) and an
 /// i64-accumulate rounded average on the input grid (within half a
-/// step of the f32 mean). Out-of-bounds window positions are excluded,
-/// matching [`crate::nn::ops::max_pool2d`] / `avg_pool2d`.
+/// step of the f32 mean). Windows are per-axis `(kh, kw)` (rectangular
+/// pools for the detection heads); a `global` pool takes its full
+/// spatial extent as the window at run time. Out-of-bounds window
+/// positions are excluded, matching [`crate::nn::ops::max_pool2d_rect`]
+/// / `avg_pool2d_rect`.
 #[derive(Debug, Clone)]
 pub struct QPoolInt {
     pub(crate) kind: PoolKind,
-    pub(crate) k: usize,
-    pub(crate) stride: usize,
-    pub(crate) pad: usize,
+    pub(crate) k: (usize, usize),
+    pub(crate) stride: (usize, usize),
+    pub(crate) pad: (usize, usize),
+    /// Full-extent window (`(h, w)` of the runtime input), stored in
+    /// the canonical `k=(1,1), stride=(1,1), pad=(0,0)` form.
+    pub(crate) global: bool,
     pub(crate) qp: QParams,
 }
 
 impl QPoolInt {
     pub fn pack(
         kind: PoolKind,
+        k: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+        global: bool,
+        qp: &QParams,
+    ) -> Result<QPoolInt> {
+        if global && (k != (1, 1) || stride != (1, 1) || pad != (0, 0)) {
+            bail!(
+                "global pool wants its canonical k=(1,1) s=(1,1) p=(0,0) \
+                 form, got k={k:?} s={stride:?} p={pad:?}"
+            );
+        }
+        for ((kd, sd), pd) in [(k.0, stride.0), (k.1, stride.1)]
+            .into_iter()
+            .zip([pad.0, pad.1])
+        {
+            if kd == 0 || sd == 0 {
+                bail!("pool with zero window/stride");
+            }
+            if kd > MAX_POOL_DIM || sd > MAX_POOL_DIM {
+                bail!("implausible pool window (k {kd}, stride {sd})");
+            }
+            if pd >= kd {
+                bail!("pool pad {pd} >= window {kd} (empty windows)");
+            }
+        }
+        assert_act_grid(qp);
+        Ok(QPoolInt { kind, k, stride, pad, global, qp: *qp })
+    }
+
+    /// Square-window convenience used by the legacy artifact decode
+    /// path and tests.
+    pub fn pack_square(
+        kind: PoolKind,
         k: usize,
         stride: usize,
         pad: usize,
         qp: &QParams,
     ) -> Result<QPoolInt> {
-        if k == 0 || stride == 0 {
-            bail!("pool with zero window/stride");
-        }
-        if k > MAX_POOL_DIM || stride > MAX_POOL_DIM {
-            bail!("implausible pool window (k {k}, stride {stride})");
-        }
-        if pad >= k {
-            bail!("pool pad {pad} >= window {k} (empty windows)");
-        }
-        assert_act_grid(qp);
-        Ok(QPoolInt { kind, k, stride, pad, qp: *qp })
+        QPoolInt::pack(
+            kind,
+            (k, k),
+            (stride, stride),
+            (pad, pad),
+            false,
+            qp,
+        )
     }
 
     pub fn out_params(&self) -> QParams {
@@ -289,15 +326,22 @@ impl QPoolInt {
             );
         }
         let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-        let (k, stride, pad) = (self.k, self.stride, self.pad);
-        if h + 2 * pad < k || w + 2 * pad < k {
+        let (k, stride, pad) = if self.global {
+            if h == 0 || w == 0 {
+                bail!("global pool over empty spatial dims {h}x{w}");
+            }
+            ((h, w), (1, 1), (0, 0))
+        } else {
+            (self.k, self.stride, self.pad)
+        };
+        if h + 2 * pad.0 < k.0 || w + 2 * pad.1 < k.1 {
             // typed error, not a usize underflow inside pool_out
             bail!(
-                "pool window {k} exceeds padded input {h}x{w} (pad {pad})"
+                "pool window {k:?} exceeds padded input {h}x{w} (pad {pad:?})"
             );
         }
-        let oh = crate::nn::ops::pool_out(h, k, stride, pad);
-        let ow = crate::nn::ops::pool_out(w, k, stride, pad);
+        let oh = crate::nn::ops::pool_out(h, k.0, stride.0, pad.0);
+        let ow = crate::nn::ops::pool_out(w, k.1, stride.1, pad.1);
         let z = self.qp.zero_point as i64;
         let n_hi = self.qp.n_levels as i64 - 1;
         let mut codes = vec![0u8; n * c * oh * ow];
@@ -708,7 +752,7 @@ mod tests {
             let t = Tensor::new(&[2, 3, 7, 7], rng.normal_vec(294, 1.0));
             let qp = params_for_range(t.min(), t.max(), 8, false);
             let q = QActTensor::quantize(&t, &qp);
-            let p = QPoolInt::pack(PoolKind::Max, k, stride, pad, &qp)
+            let p = QPoolInt::pack_square(PoolKind::Max, k, stride, pad, &qp)
                 .unwrap();
             let got = p.run(&q).unwrap();
             let want = fops::max_pool2d(&q.dequantize(), k, stride, pad);
@@ -728,7 +772,7 @@ mod tests {
             let t = Tensor::new(&[2, 3, 8, 8], rng.normal_vec(384, 1.0));
             let qp = params_for_range(t.min(), t.max(), 8, false);
             let q = QActTensor::quantize(&t, &qp);
-            let p = QPoolInt::pack(PoolKind::Avg, k, stride, pad, &qp)
+            let p = QPoolInt::pack_square(PoolKind::Avg, k, stride, pad, &qp)
                 .unwrap();
             let got = p.run(&q).unwrap();
             let want = fops::avg_pool2d(&q.dequantize(), k, stride, pad);
@@ -744,9 +788,94 @@ mod tests {
     #[test]
     fn pool_pack_rejects_degenerate_windows() {
         let qp = params_for_range(0.0, 1.0, 8, false);
-        assert!(QPoolInt::pack(PoolKind::Max, 0, 1, 0, &qp).is_err());
-        assert!(QPoolInt::pack(PoolKind::Max, 2, 0, 0, &qp).is_err());
-        assert!(QPoolInt::pack(PoolKind::Avg, 2, 1, 2, &qp).is_err());
+        assert!(QPoolInt::pack_square(PoolKind::Max, 0, 1, 0, &qp).is_err());
+        assert!(QPoolInt::pack_square(PoolKind::Max, 2, 0, 0, &qp).is_err());
+        assert!(QPoolInt::pack_square(PoolKind::Avg, 2, 1, 2, &qp).is_err());
+        // per-axis pad < k: the W axis alone can be degenerate
+        assert!(QPoolInt::pack(
+            PoolKind::Avg,
+            (2, 2),
+            (1, 1),
+            (0, 2),
+            false,
+            &qp
+        )
+        .is_err());
+        // non-canonical global form
+        assert!(QPoolInt::pack(
+            PoolKind::Max,
+            (2, 2),
+            (1, 1),
+            (0, 0),
+            true,
+            &qp
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rect_and_global_pool_match_oracle() {
+        let mut rng = Rng::new(14);
+        let t = Tensor::new(&[2, 3, 4, 8], rng.normal_vec(192, 1.0));
+        let qp = params_for_range(t.min(), t.max(), 8, false);
+        let q = QActTensor::quantize(&t, &qp);
+        // rectangular max: exact
+        let p = QPoolInt::pack(
+            PoolKind::Max,
+            (1, 3),
+            (1, 2),
+            (0, 1),
+            false,
+            &qp,
+        )
+        .unwrap();
+        let got = p.run(&q).unwrap();
+        let want = fops::max_pool2d_rect(
+            &q.dequantize(),
+            (1, 3),
+            (1, 2),
+            (0, 1),
+        );
+        assert_eq!(got.shape, vec![2, 3, 4, 4]);
+        assert_eq!(got.dequantize(), want, "rect max-pool must be exact");
+        // global avg: full-extent window, within half a step
+        let g = QPoolInt::pack(
+            PoolKind::Avg,
+            (1, 1),
+            (1, 1),
+            (0, 0),
+            true,
+            &qp,
+        )
+        .unwrap();
+        let got = g.run(&q).unwrap();
+        assert_eq!(got.shape, vec![2, 3, 1, 1]);
+        let want = fops::avg_pool2d_rect(
+            &q.dequantize(),
+            (4, 8),
+            (1, 1),
+            (0, 0),
+        );
+        let diff = got.dequantize().max_abs_diff(&want);
+        assert!(diff <= qp.scale / 2.0 + 1e-5, "global avg off by {diff}");
+        // global max equals gap-free max over all positions
+        let gm = QPoolInt::pack(
+            PoolKind::Max,
+            (1, 1),
+            (1, 1),
+            (0, 0),
+            true,
+            &qp,
+        )
+        .unwrap();
+        let got = gm.run(&q).unwrap();
+        let want = fops::max_pool2d_rect(
+            &q.dequantize(),
+            (4, 8),
+            (1, 1),
+            (0, 0),
+        );
+        assert_eq!(got.dequantize(), want, "global max must be exact");
     }
 
     #[test]

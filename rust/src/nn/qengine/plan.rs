@@ -26,7 +26,7 @@ use crate::tensor::{QTensor, Tensor};
 use crate::util::parallel;
 
 use super::gemm::KernelKind;
-use super::kernels::{EpiSpec, QConv, Scratch};
+use super::kernels::{EpiSpec, QConv, QConvT, Scratch};
 use super::ops::{
     gap_int, upsample_codes, QAddInt, QConcatInt, QLinear, QPoolInt,
     Requantizer,
@@ -87,6 +87,11 @@ pub(crate) enum QOp {
         pad: usize,
         groups: usize,
     },
+    /// Integer transposed conv (gather-form lowering over a packed
+    /// stride-1 [`QConv`]); the epilogue decides the output kind.
+    ConvT(Box<QConvT>),
+    /// Pure f32 transposed-conv fallback over fake-quantised weights.
+    ConvTFp32 { w: Tensor, b: Vec<f32>, stride: usize, pad: usize },
     /// Integer requantise-add on the add-site grid.
     Add(QAddInt),
     /// f32 add fallback (≥ 1 f32 input), quantised onto the site grid.
@@ -96,10 +101,18 @@ pub(crate) enum QOp {
     Concat(QConcatInt),
     /// f32 concat fallback (≥ 1 f32 input), quantised onto the site grid.
     ConcatF { row: SiteCfg },
-    /// Grid-preserving integer spatial pool (exact max / rounded avg).
+    /// Grid-preserving integer spatial pool (exact max / rounded avg;
+    /// rectangular windows and full-extent global pools included).
     Pool(QPoolInt),
-    /// f32 pool fallback.
-    PoolF { kind: PoolKind, k: usize, stride: usize, pad: usize },
+    /// f32 pool fallback (per-axis window; `global` takes the full
+    /// runtime extent).
+    PoolF {
+        kind: PoolKind,
+        k: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+        global: bool,
+    },
     /// Standalone activation: integer requant with fused clip bounds.
     Act(Requantizer),
     /// f32 activation fallback: clip + quantise from f32.
@@ -136,6 +149,13 @@ impl QOp {
             QOp::ConvFp32 { .. } => {
                 ("conv [f32 FALLBACK]".into(), false, None)
             }
+            QOp::ConvT(c) => match c.out_params() {
+                Some(qp) => ("convT [int8]".into(), true, Some(qp)),
+                None => ("convT [int8->f32]".into(), true, None),
+            },
+            QOp::ConvTFp32 { .. } => {
+                ("convT [f32 FALLBACK]".into(), false, None)
+            }
             QOp::Add(a) => {
                 ("add-requant [int8]".into(), true, Some(a.out_params()))
             }
@@ -149,9 +169,11 @@ impl QOp {
                 ("concat [f32 FALLBACK]".into(), false, Some(row_qp(row)))
             }
             QOp::Pool(p) => {
-                let label = match p.kind {
-                    PoolKind::Max => "pool-max [int8]",
-                    PoolKind::Avg => "pool-avg [int8]",
+                let label = match (p.kind, p.global) {
+                    (PoolKind::Max, false) => "pool-max [int8]",
+                    (PoolKind::Avg, false) => "pool-avg [int8]",
+                    (PoolKind::Max, true) => "pool-max-global [int8]",
+                    (PoolKind::Avg, true) => "pool-avg-global [int8]",
                 };
                 (label.into(), true, Some(p.out_params()))
             }
@@ -259,6 +281,7 @@ impl RunProfile {
                         Some(c.kernel_kind()),
                         if c.is_depthwise() { 0 } else { 1 },
                     ),
+                    QOp::ConvT(c) => (Some(c.kernel_kind()), 1),
                     QOp::Linear(l) => (Some(l.kernel_kind()), 1),
                     _ => (None, 0),
                 };
@@ -577,6 +600,108 @@ pub fn plan(
                     }
                 }
             }
+            Op::ConvT2d { w, b, stride, pad, out_ch, .. } => {
+                // the dense-conv lowering shape-for-shape: fuse the sole
+                // consuming act, else requantise onto the pre-activation
+                // grid when one exists, else exact f32 out; an f32 input
+                // takes the oracle fallback
+                let input = n.inputs[0];
+                let in_slot = input_slot(&slot_of, input)?;
+                let bias: Vec<f32> = match b {
+                    Some(b) => model.tensor(b)?.data().to_vec(),
+                    None => vec![0.0; *out_ch],
+                };
+                let in_grid = grids
+                    .get(&input)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("convT {} before input", n.id))?;
+                match in_grid {
+                    Some(in_qp) => {
+                        let wq = weights_of(n.id).ok_or_else(|| {
+                            anyhow!(
+                                "no retained int8 weight codes for convT \
+                                 node {} (quantise with bits <= 8)",
+                                n.id
+                            )
+                        })?;
+                        let cons = model.consumers(n.id);
+                        let is_out = model.outputs.contains(&n.id);
+                        let fuse = match cons.as_slice() {
+                            [c] if matches!(c.op, Op::Act(_)) && !is_out => {
+                                Some(c.id)
+                            }
+                            _ => None,
+                        };
+                        if let Some(act_id) = fuse {
+                            let row = cfg.rows[site_of(act_id)
+                                .expect("act node is a site")];
+                            let conv = QConvT::pack(
+                                wq,
+                                &bias,
+                                *stride,
+                                *pad,
+                                &in_qp,
+                                EpiSpec::Act(&row),
+                            )?;
+                            let out = intern(&mut slot_of, act_id);
+                            ops.push(PlannedOp {
+                                node: act_id,
+                                ins: vec![in_slot],
+                                out,
+                                op: QOp::ConvT(Box::new(conv)),
+                                free_after: vec![],
+                            });
+                            grids.insert(act_id, Some(row_qp(&row)));
+                            grids.insert(n.id, None);
+                            fused_acts.insert(act_id);
+                        } else {
+                            let epi = if !is_out && !cons.is_empty() {
+                                match aux.preact_of(n.id) {
+                                    Some(qp) => EpiSpec::Grid(qp),
+                                    None => EpiSpec::F32,
+                                }
+                            } else {
+                                EpiSpec::F32
+                            };
+                            let grid = match &epi {
+                                EpiSpec::Grid(qp) => Some(*qp),
+                                _ => None,
+                            };
+                            let conv = QConvT::pack(
+                                wq, &bias, *stride, *pad, &in_qp, epi,
+                            )?;
+                            let out = intern(&mut slot_of, n.id);
+                            ops.push(PlannedOp {
+                                node: n.id,
+                                ins: vec![in_slot],
+                                out,
+                                op: QOp::ConvT(Box::new(conv)),
+                                free_after: vec![],
+                            });
+                            grids.insert(n.id, grid);
+                        }
+                        int_layers += 1;
+                    }
+                    None => {
+                        let wt = model.tensor(w)?.clone();
+                        let out = intern(&mut slot_of, n.id);
+                        ops.push(PlannedOp {
+                            node: n.id,
+                            ins: vec![in_slot],
+                            out,
+                            op: QOp::ConvTFp32 {
+                                w: wt,
+                                b: bias,
+                                stride: *stride,
+                                pad: *pad,
+                            },
+                            free_after: vec![],
+                        });
+                        grids.insert(n.id, None);
+                        f32_layers += 1;
+                    }
+                }
+            }
             Op::Act(_) => {
                 if fused_acts.contains(&n.id) {
                     continue;
@@ -667,7 +792,7 @@ pub fn plan(
                 });
                 grids.insert(n.id, Some(row_qp(&row)));
             }
-            Op::Pool2d { kind, k, stride, pad } => {
+            Op::Pool2d { kind, k, stride, pad, global } => {
                 let in_slot = input_slot(&slot_of, n.inputs[0])?;
                 let in_grid = grids
                     .get(&n.inputs[0])
@@ -680,11 +805,13 @@ pub fn plan(
                     k: *k,
                     stride: *stride,
                     pad: *pad,
+                    global: *global,
                 };
                 let (op, grid) = match in_grid {
                     Some(qp) => {
-                        match QPoolInt::pack(*kind, *k, *stride, *pad, &qp)
-                        {
+                        match QPoolInt::pack(
+                            *kind, *k, *stride, *pad, *global, &qp,
+                        ) {
                             Ok(p) => (QOp::Pool(p), Some(qp)),
                             Err(_) => (fallback(), None),
                         }
@@ -809,6 +936,7 @@ pub fn plan(
         for p in &mut ops {
             match &mut p.op {
                 QOp::Conv(c) => c.set_kernel(KernelKind::Scalar),
+                QOp::ConvT(c) => c.set_kernel(KernelKind::Scalar),
                 QOp::Linear(l) => l.set_kernel(KernelKind::Scalar),
                 _ => {}
             }
@@ -1139,6 +1267,24 @@ fn exec(
                 *groups,
             ))
         }
+        QOp::ConvT(c) => {
+            let xin = val(0)?.as_q()?;
+            if c.is_fused() {
+                Val::Q(c.run_q_with(xin, scratch)?)
+            } else {
+                Val::F(c.run_f32_with(xin, scratch)?)
+            }
+        }
+        QOp::ConvTFp32 { w, b, stride, pad } => {
+            let xin = val(0)?.to_f32();
+            Val::F(crate::nn::conv::conv_transpose2d(
+                &xin,
+                w,
+                Some(b),
+                *stride,
+                *pad,
+            ))
+        }
         QOp::Add(add) => {
             Val::Q(add.run(val(0)?.as_q()?, val(1)?.as_q()?)?)
         }
@@ -1162,15 +1308,23 @@ fn exec(
             Val::Q(QActTensor::quantize(&t, &row_qp(row)))
         }
         QOp::Pool(pl) => Val::Q(pl.run(val(0)?.as_q()?)?),
-        QOp::PoolF { kind, k, stride, pad } => {
+        QOp::PoolF { kind, k, stride, pad, global } => {
             let xin = val(0)?.to_f32();
             let s = xin.shape();
-            if s.len() != 4 || s[2] + 2 * pad < *k || s[3] + 2 * pad < *k {
-                bail!("pool window {k} exceeds input {s:?} (pad {pad})");
+            if s.len() != 4 {
+                bail!("pool wants NCHW input, got {s:?}");
+            }
+            let (k, stride, pad) = if *global {
+                ((s[2], s[3]), (1, 1), (0, 0))
+            } else {
+                (*k, *stride, *pad)
+            };
+            if s[2] + 2 * pad.0 < k.0 || s[3] + 2 * pad.1 < k.1 {
+                bail!("pool window {k:?} exceeds input {s:?} (pad {pad:?})");
             }
             Val::F(match kind {
-                PoolKind::Max => fops::max_pool2d(&xin, *k, *stride, *pad),
-                PoolKind::Avg => fops::avg_pool2d(&xin, *k, *stride, *pad),
+                PoolKind::Max => fops::max_pool2d_rect(&xin, k, stride, pad),
+                PoolKind::Avg => fops::avg_pool2d_rect(&xin, k, stride, pad),
             })
         }
         QOp::Act(rq) => Val::Q(rq.run(val(0)?.as_q()?)?),

@@ -138,7 +138,7 @@ pub fn preact_qparams_with(
     }
     let mut out = Vec::new();
     for n in &model.nodes {
-        if !matches!(n.op, Op::Conv { .. }) {
+        if !matches!(n.op, Op::Conv { .. } | Op::ConvT2d { .. }) {
             continue;
         }
         let (lo, hi) = site_range(&stats[&n.id], n_sigma, None);
@@ -178,7 +178,9 @@ mod tests {
         let convs = m
             .layers()
             .iter()
-            .filter(|n| matches!(n.op, Op::Conv { .. }))
+            .filter(|n| {
+                matches!(n.op, Op::Conv { .. } | Op::ConvT2d { .. })
+            })
             .count();
         assert_eq!(grids.len(), convs);
         for (_, p) in &grids {

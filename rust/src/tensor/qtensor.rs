@@ -139,6 +139,20 @@ impl QTensor {
         Ok(QTensor { shape: shape.to_vec(), data: QData::U8(codes), params })
     }
 
+    /// Wrap pre-computed signed offset codes (e.g. a spatially flipped
+    /// weight layout re-using the original per-channel grids).
+    pub fn from_codes_i8(
+        shape: &[usize],
+        codes: Vec<i8>,
+        params: Vec<QParams>,
+    ) -> Result<QTensor> {
+        if shape.iter().product::<usize>() != codes.len() {
+            bail!("shape {:?} vs {} codes", shape, codes.len());
+        }
+        check_params(shape, &params)?;
+        Ok(QTensor { shape: shape.to_vec(), data: QData::I8(codes), params })
+    }
+
     /// Unpack to f32 — the exact fake-quantised image of the source
     /// tensor (same rounding as [`crate::nn::ops::fake_quant`]).
     pub fn dequantize(&self) -> Tensor {

@@ -50,6 +50,10 @@ fn roundtrip_is_bitwise_identical_across_schemes() {
             ("resblock", testutil::residual_block_model(seed)),
             // branchy graph: concat + max/avg-pool ops round-trip too
             ("inception", testutil::inception_block_model(seed)),
+            // v4 codec tags: transposed conv + global pool (deeplab),
+            // rectangular + global max/avg pools (ssd)
+            ("deeplab", testutil::deeplab_head_model(seed)),
+            ("ssd", testutil::ssd_head_model(seed)),
         ];
         for (mname, model) in models {
             for (sname, scheme) in &schemes {
@@ -98,7 +102,7 @@ fn roundtrip_is_bitwise_identical_across_schemes() {
             }
         }
     }
-    assert_eq!(cases, 24);
+    assert_eq!(cases, 40);
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -130,6 +134,67 @@ fn inception_artifact_roundtrips_bitwise_with_new_op_tags() {
     let y_disk = qm_disk.run_all(&x).unwrap();
     for (a, b) in y_mem.iter().zip(&y_disk) {
         assert_eq!(a.data(), b.data(), "reloaded branchy plan drifted");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The segmentation/detection fixtures exercise every version-4 codec
+/// tag: transposed conv (16), rectangular pools (18) and canonical
+/// global pools. Save → reload must preserve the plan report verbatim
+/// and the logits bitwise, through both the copy and the mmap decode.
+#[test]
+fn segdet_artifacts_roundtrip_bitwise_with_v4_op_tags() {
+    let dir = temp_dir("segdet");
+    let cases = [
+        (
+            "deeplab",
+            testutil::deeplab_head_model(411),
+            vec!["convT [int8]", "pool-avg-global [int8]", "pool-max [int8]"],
+        ),
+        (
+            "ssd",
+            testutil::ssd_head_model(412),
+            vec![
+                "pool-max [int8]",
+                "pool-max-global [int8]",
+                "pool-avg-global [int8]",
+            ],
+        ),
+    ];
+    for (mname, model, needles) in cases {
+        let q = quantize(&model, &QScheme::int8_asymmetric(), 8);
+        let qm_mem = q
+            .pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() })
+            .unwrap();
+        let path = dir.join(format!("{mname}.dfqm"));
+        let info = q
+            .save_artifact(&path, PlanOpts { int8_only: true, ..Default::default() })
+            .unwrap();
+        assert_eq!(info.fallback_ops, 0, "{mname}: must plan fully integer");
+        let qm_disk = QModel::from_artifact(&path).unwrap();
+        assert_eq!(
+            qm_disk.summarize(),
+            qm_mem.summarize(),
+            "{mname}: decoded plan report drifted"
+        );
+        for needle in needles {
+            assert!(
+                qm_disk.summarize().contains(needle),
+                "{mname}: missing '{needle}' after reload"
+            );
+        }
+        assert!(!qm_disk.summarize().contains("FALLBACK"), "{mname}");
+        let x = testutil::random_input(&model, 4, 413);
+        let y_mem = qm_mem.run_all(&x).unwrap();
+        let y_disk = qm_disk.run_all(&x).unwrap();
+        let y_map =
+            QModel::from_artifact_mmap(&path).unwrap().run_all(&x).unwrap();
+        for (a, b) in y_mem.iter().zip(&y_disk) {
+            assert_eq!(a.data(), b.data(), "{mname}: reloaded plan drifted");
+        }
+        for (a, b) in y_mem.iter().zip(&y_map) {
+            assert_eq!(a.data(), b.data(), "{mname}: mmap decode drifted");
+        }
     }
     std::fs::remove_dir_all(&dir).ok();
 }
@@ -282,6 +347,187 @@ fn find_entry(bytes: &[u8], name: &str) -> (usize, usize, usize) {
         }
     }
     panic!("section '{name}' not found in container");
+}
+
+/// First offset of `needle` inside `hay` — for locating a specific op
+/// payload in the raw plan stream by its distinctive encoded bytes.
+fn find_subslice(hay: &[u8], needle: &[u8]) -> usize {
+    hay.windows(needle.len())
+        .position(|w| w == needle)
+        .expect("op payload pattern not found in plan section")
+}
+
+fn le_u32s(vals: &[u32]) -> Vec<u8> {
+    vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+/// Corruption matrix for the version-4 tags: tampered transposed-conv
+/// geometry, rectangular-pool shape damage and global-flag corruption
+/// hiding behind a *valid* section CRC must all decode to typed
+/// [`ArtifactError::Malformed`]; a truncated fixed-point multiplier
+/// stream stays a typed error. Never a panic.
+#[test]
+fn v4_codec_corruption_is_typed_never_a_panic() {
+    let dir = temp_dir("v4corrupt");
+    let write = |tag: &str, bytes: &[u8]| -> PathBuf {
+        let p = dir.join(format!("{tag}.dfqm"));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    };
+    let opts = PlanOpts { int8_only: true, ..Default::default() };
+
+    // ---- transposed conv (deeplab: convT 12->8, k4, s2, p1) ----------
+    let q = quantize(&testutil::deeplab_head_model(901), &QScheme::int8_asymmetric(), 8);
+    let dpath = dir.join("deeplab.dfqm");
+    q.save_artifact(&dpath, opts).unwrap();
+    let dgood = std::fs::read(&dpath).unwrap();
+    assert!(Artifact::open_typed(&dpath).is_ok());
+    let (pbase, poff, psize) = find_entry(&dgood, "plan");
+    // OP_CONVT payload: tag 16, logical stride 2, logical pad 1, then
+    // the inner conv header c_out=8 cig=12 kh=4 kw=4 stride=1 pad=2 g=1
+    let mut pat = vec![16u8];
+    pat.extend(le_u32s(&[2, 1, 8, 12, 4, 4, 1, 2, 1]));
+    let at = poff + find_subslice(&dgood[poff..poff + psize], &pat);
+    let patch_plan = |bytes: &mut [u8]| {
+        let crc = crc32(&bytes[poff..poff + psize]);
+        bytes[pbase + 32..pbase + 36].copy_from_slice(&crc.to_le_bytes());
+    };
+
+    // zero logical stride
+    let mut bad = dgood.clone();
+    bad[at + 1..at + 5].copy_from_slice(&0u32.to_le_bytes());
+    patch_plan(&mut bad);
+    assert!(
+        matches!(
+            Artifact::open_typed(&write("convt_stride0", &bad)),
+            Err(ArtifactError::Malformed { .. })
+        ),
+        "zero ConvT stride must be malformed"
+    );
+
+    // break the pad' = k-1-pad relation (logical pad 1 -> 3)
+    let mut bad = dgood.clone();
+    bad[at + 5..at + 9].copy_from_slice(&3u32.to_le_bytes());
+    patch_plan(&mut bad);
+    assert!(
+        matches!(
+            Artifact::open_typed(&write("convt_pad", &bad)),
+            Err(ArtifactError::Malformed { .. })
+        ),
+        "inconsistent ConvT pad geometry must be malformed"
+    );
+
+    // truncated fixed-point multiplier stream: shrink `mult.fix` so the
+    // last requant record is cut mid-way, with a matching CRC
+    let (mbase, moff, msize) = find_entry(&dgood, "mult.fix");
+    assert!(msize > 8, "deeplab must carry multiplier records");
+    let mut bad = dgood.clone();
+    let cut = msize - 5;
+    bad[mbase + 24..mbase + 32]
+        .copy_from_slice(&(cut as u64).to_le_bytes());
+    let crc = crc32(&bad[moff..moff + cut]);
+    bad[mbase + 32..mbase + 36].copy_from_slice(&crc.to_le_bytes());
+    let err = Artifact::open_typed(&write("mult_trunc", &bad)).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            ArtifactError::Truncated { .. } | ArtifactError::Malformed { .. }
+        ),
+        "truncated multiplier stream gave {err}"
+    );
+
+    // ---- rectangular / global pools (ssd) ----------------------------
+    let q = quantize(&testutil::ssd_head_model(902), &QScheme::int8_asymmetric(), 8);
+    let spath = dir.join("ssd.dfqm");
+    q.save_artifact(&spath, opts).unwrap();
+    let sgood = std::fs::read(&spath).unwrap();
+    assert!(Artifact::open_typed(&spath).is_ok());
+    let (pbase, poff, psize) = find_entry(&sgood, "plan");
+    let patch_plan = |bytes: &mut [u8]| {
+        let crc = crc32(&bytes[poff..poff + psize]);
+        bytes[pbase + 32..pbase + 36].copy_from_slice(&crc.to_le_bytes());
+    };
+    // OP_POOL_RECT_INT payload of pool1: tag 18, kind Max(0),
+    // global 0, then k=(2,3) stride=(2,1) pad=(0,1)
+    let mut rect = vec![18u8, 0, 0];
+    rect.extend(le_u32s(&[2, 3, 2, 1, 0, 1]));
+    let rat = poff + find_subslice(&sgood[poff..poff + psize], &rect);
+    // canonical global pool (Avg): tag 18, kind 1, global 1, all-unit
+    let mut glob = vec![18u8, 1, 1];
+    glob.extend(le_u32s(&[1, 1, 1, 1, 0, 0]));
+    let gat = poff + find_subslice(&sgood[poff..poff + psize], &glob);
+
+    // (field byte offset from the tag, new value, label) — each entry
+    // rewrites one u32 of the window geometry or one flag byte
+    let rect_cases: [(usize, u32, &str); 2] = [
+        (3, 0, "zero pool window on one axis"),
+        (3 + 16, 2, "pad >= window on one axis"),
+    ];
+    for (field, val, label) in rect_cases {
+        let mut bad = sgood.clone();
+        bad[rat + field..rat + field + 4]
+            .copy_from_slice(&val.to_le_bytes());
+        patch_plan(&mut bad);
+        assert!(
+            matches!(
+                Artifact::open_typed(&write(&format!("rect{field}"), &bad)),
+                Err(ArtifactError::Malformed { .. })
+            ),
+            "{label} must be malformed"
+        );
+    }
+    // global-flag corruption: an out-of-range flag byte, and a window
+    // that contradicts the canonical global form
+    let mut bad = sgood.clone();
+    bad[gat + 2] = 7;
+    patch_plan(&mut bad);
+    assert!(
+        matches!(
+            Artifact::open_typed(&write("glob_flag", &bad)),
+            Err(ArtifactError::Malformed { .. })
+        ),
+        "out-of-range global flag must be malformed"
+    );
+    let mut bad = sgood.clone();
+    bad[gat + 3..gat + 7].copy_from_slice(&3u32.to_le_bytes());
+    patch_plan(&mut bad);
+    assert!(
+        matches!(
+            Artifact::open_typed(&write("glob_window", &bad)),
+            Err(ArtifactError::Malformed { .. })
+        ),
+        "non-canonical global window must be malformed"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Back-compat: the reader accepts every historical container version.
+/// A plan using only pre-v4 tags is encoded identically under v4, so
+/// re-stamping its header to 1, 2 or 3 must decode to the same model
+/// with bitwise-identical logits.
+#[test]
+fn historical_container_versions_still_read() {
+    let dir = temp_dir("backcompat");
+    let model = testutil::residual_block_model(951);
+    let q = quantize(&model, &QScheme::int8_asymmetric(), 8);
+    let path = dir.join("v4.dfqm");
+    q.save_artifact(&path, PlanOpts { int8_only: true, ..Default::default() })
+        .unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let x = testutil::random_input(&model, 2, 952);
+    let want = QModel::from_artifact(&path).unwrap().run_all(&x).unwrap();
+    for v in [1u32, 2, 3] {
+        let mut old = good.clone();
+        old[4..8].copy_from_slice(&v.to_le_bytes());
+        let p = dir.join(format!("v{v}.dfqm"));
+        std::fs::write(&p, &old).unwrap();
+        let got = QModel::from_artifact(&p).unwrap().run_all(&x).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.data(), b.data(), "v{v}-stamped container drifted");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// `--compress` artifacts: the weight grid stores smaller than raw,

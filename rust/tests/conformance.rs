@@ -1,0 +1,532 @@
+//! Differential conformance fuzzing: seeded random graphs over the full
+//! op vocabulary (dense/depthwise conv, transposed conv, square /
+//! rectangular / global pooling, concat, add, GAP, linear) are compiled
+//! end to end and checked against three oracles per graph:
+//!
+//! 1. the fake-quant reference forward, within the propagated per-op
+//!    error budget (no hand-tuned tolerances);
+//! 2. the `.dfqm` artifact: the writer is deterministic (same plan →
+//!    same bytes) and the reloaded plan reproduces the logits bitwise;
+//! 3. forced-scalar dispatch, which must be bitwise-identical to the
+//!    native (SIMD) dispatch.
+//!
+//! The full run covers 200 graphs; `DFQ_CONFORMANCE_QUICK=1` trims it
+//! to a 20-graph smoke subset for the forced-scalar CI re-run. Seeds
+//! are fixed, so every failure is reproducible by its graph id.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+
+use dfq::dfq::{quantize_data_free, testutil, BiasCorrMode, DfqConfig};
+use dfq::graph::{ActKind, Model, Node, Op, PoolKind, Task};
+use dfq::nn::{self, qengine::PlanOpts, qengine::QModel};
+use dfq::quant::QScheme;
+use dfq::tensor::Tensor;
+use dfq::util::rng::Rng;
+
+fn temp_dir() -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("dfq-conformance-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Incremental graph builder: every conv/convT gets the fixture BN
+/// recipe (gamma ~ N(1, .3), beta ~ N(.1, .3), mean ~ N(0, .3),
+/// var = |N(0, .3)| + .5) so the data-free range estimation has real
+/// statistics to work from, plus an optional fused ReLU.
+struct Gen {
+    nodes: Vec<Node>,
+    tensors: BTreeMap<String, Tensor>,
+    id: usize,
+    rng: Rng,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen {
+            nodes: vec![Node { id: 0, inputs: vec![], op: Op::Input }],
+            tensors: BTreeMap::new(),
+            id: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn fresh(&mut self) -> usize {
+        self.id += 1;
+        self.id
+    }
+
+    fn push_bn(&mut self, input: usize, ch: usize) -> usize {
+        let nid = self.fresh();
+        for (p, std, ofs) in [
+            ("g", 0.3f32, 1.0f32),
+            ("be", 0.3, 0.1),
+            ("m", 0.3, 0.0),
+            ("v", 0.0, 0.0),
+        ] {
+            let name = format!("{p}{nid}");
+            let mut t = testutil::rand_t(&mut self.rng, &[ch], std);
+            t.map_inplace(|x| x + ofs);
+            if p == "v" {
+                t = testutil::rand_t(&mut self.rng, &[ch], 0.3);
+                t.map_inplace(|x| x.abs() + 0.5);
+            }
+            self.tensors.insert(name, t);
+        }
+        self.nodes.push(Node {
+            id: nid,
+            inputs: vec![input],
+            op: Op::BatchNorm {
+                ch,
+                gamma: format!("g{nid}"),
+                beta: format!("be{nid}"),
+                mean: format!("m{nid}"),
+                var: format!("v{nid}"),
+            },
+        });
+        nid
+    }
+
+    fn relu(&mut self, input: usize) -> usize {
+        let nid = self.fresh();
+        self.nodes.push(Node {
+            id: nid,
+            inputs: vec![input],
+            op: Op::Act(ActKind::Relu),
+        });
+        nid
+    }
+
+    /// conv + bn (+ relu). `groups == in_ch` gives the depthwise form.
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        &mut self,
+        input: usize,
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        groups: usize,
+        act: bool,
+    ) -> usize {
+        let nid = self.fresh();
+        let w = format!("w{nid}");
+        self.tensors.insert(
+            w.clone(),
+            testutil::rand_t(&mut self.rng, &[out_ch, in_ch / groups, k, k], 0.4),
+        );
+        self.nodes.push(Node {
+            id: nid,
+            inputs: vec![input],
+            op: Op::Conv {
+                w,
+                b: None,
+                in_ch,
+                out_ch,
+                k,
+                stride: 1,
+                pad: k / 2,
+                groups,
+            },
+        });
+        let bn = self.push_bn(nid, out_ch);
+        if act { self.relu(bn) } else { bn }
+    }
+
+    /// transposed conv + bn + relu.
+    #[allow(clippy::too_many_arguments)]
+    fn convt(
+        &mut self,
+        input: usize,
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> usize {
+        let nid = self.fresh();
+        let w = format!("w{nid}");
+        self.tensors.insert(
+            w.clone(),
+            testutil::rand_t(&mut self.rng, &[out_ch, in_ch, k, k], 0.4),
+        );
+        self.nodes.push(Node {
+            id: nid,
+            inputs: vec![input],
+            op: Op::ConvT2d { w, b: None, in_ch, out_ch, k, stride, pad },
+        });
+        let bn = self.push_bn(nid, out_ch);
+        self.relu(bn)
+    }
+
+    fn pool(
+        &mut self,
+        input: usize,
+        kind: PoolKind,
+        k: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+    ) -> usize {
+        let nid = self.fresh();
+        self.nodes.push(Node {
+            id: nid,
+            inputs: vec![input],
+            op: Op::Pool2d { kind, k, stride, pad, global: false },
+        });
+        nid
+    }
+
+    fn global_pool(&mut self, input: usize, kind: PoolKind) -> usize {
+        let nid = self.fresh();
+        self.nodes.push(Node {
+            id: nid,
+            inputs: vec![input],
+            op: Op::global_pool2d(kind),
+        });
+        nid
+    }
+}
+
+/// One seeded random graph: conv stem on the 8x8 input, then 3–6 body
+/// segments drawn from the op vocabulary (each gated on the tracked
+/// spatial dims staying valid), then the gap → linear head. All window
+/// geometries respect `pad < k` per axis, additions join same-shape
+/// branches, and a global pool collapses the rest of the body to 1x1
+/// ops — so every generated graph passes validation by construction.
+fn random_model(seed: u64) -> Model {
+    let mut g = Gen::new(seed);
+    let mut ch = if g.rng.below(2) == 0 { 4usize } else { 8 };
+    let (mut h, mut w) = (8usize, 8usize);
+    let mut cur = g.conv(0, 3, ch, 3, 1, true);
+    let body = 3 + g.rng.below(4);
+    let mut spatial = true;
+    for _ in 0..body {
+        match g.rng.below(8) {
+            0 | 1 => {
+                // dense conv (1x1 once the map is collapsed)
+                let k = if spatial && g.rng.below(2) == 0 { 3 } else { 1 };
+                let out = if g.rng.below(2) == 0 { 4 } else { 8 };
+                cur = g.conv(cur, ch, out, k, 1, true);
+                ch = out;
+            }
+            2 => {
+                // depthwise conv
+                if spatial {
+                    cur = g.conv(cur, ch, ch, 3, ch, true);
+                } else {
+                    cur = g.conv(cur, ch, ch, 1, 1, true);
+                }
+            }
+            3 => {
+                // transposed conv, bounded so the map stays <= 16x16
+                if spatial && h * 2 <= 16 && w * 2 <= 16 {
+                    let out = if g.rng.below(2) == 0 { 4 } else { 8 };
+                    let (k, s, p) = match g.rng.below(3) {
+                        0 => (4, 2, 1),
+                        1 => (3, 1, 1),
+                        _ => (2, 2, 0),
+                    };
+                    cur = g.convt(cur, ch, out, k, s, p);
+                    ch = out;
+                    h = (h - 1) * s + k - 2 * p;
+                    w = (w - 1) * s + k - 2 * p;
+                } else {
+                    cur = g.conv(cur, ch, ch, 1, 1, true);
+                }
+            }
+            4 => {
+                // pooling: square, or one of the rectangular windows
+                if spatial && h >= 2 && w >= 2 {
+                    let kind = if g.rng.below(2) == 0 {
+                        PoolKind::Max
+                    } else {
+                        PoolKind::Avg
+                    };
+                    match g.rng.below(3) {
+                        0 => {
+                            cur = g.pool(cur, kind, (3, 3), (2, 2), (1, 1));
+                            h = (h + 2 - 3) / 2 + 1;
+                            w = (w + 2 - 3) / 2 + 1;
+                        }
+                        1 => {
+                            cur = g.pool(cur, kind, (2, 3), (2, 1), (0, 1));
+                            h = (h - 2) / 2 + 1;
+                        }
+                        _ => {
+                            cur = g.pool(cur, kind, (1, 3), (1, 2), (0, 1));
+                            w = (w + 2 - 3) / 2 + 1;
+                        }
+                    }
+                } else {
+                    cur = g.conv(cur, ch, ch, 1, 1, true);
+                }
+            }
+            5 => {
+                // residual join: activated branch + pre-activation branch
+                let k = if spatial { 3 } else { 1 };
+                let a = g.conv(cur, ch, ch, k, 1, true);
+                let b = g.conv(cur, ch, ch, 1, 1, false);
+                let nid = g.fresh();
+                g.nodes.push(Node {
+                    id: nid,
+                    inputs: vec![a, b],
+                    op: Op::Add,
+                });
+                cur = nid;
+            }
+            6 => {
+                // multi-branch concat of 1x1 heads
+                let n_br = 2 + g.rng.below(2);
+                let ins: Vec<usize> = (0..n_br)
+                    .map(|_| g.conv(cur, ch, 4, 1, 1, true))
+                    .collect();
+                let nid = g.fresh();
+                g.nodes.push(Node {
+                    id: nid,
+                    inputs: ins,
+                    op: Op::Concat,
+                });
+                ch = 4 * n_br;
+                cur = nid;
+            }
+            _ => {
+                // global pool collapses the map once; afterwards 1x1 only
+                if spatial {
+                    let kind = if g.rng.below(2) == 0 {
+                        PoolKind::Max
+                    } else {
+                        PoolKind::Avg
+                    };
+                    cur = g.global_pool(cur, kind);
+                    h = 1;
+                    w = 1;
+                    spatial = false;
+                } else {
+                    cur = g.conv(cur, ch, ch, 1, 1, true);
+                }
+            }
+        }
+    }
+    let gap = g.fresh();
+    g.nodes.push(Node { id: gap, inputs: vec![cur], op: Op::Gap });
+    let lin = g.fresh();
+    let wl = format!("wl{lin}");
+    g.tensors
+        .insert(wl.clone(), testutil::rand_t(&mut g.rng, &[10, ch], 0.4));
+    let bl = format!("bl{lin}");
+    g.tensors
+        .insert(bl.clone(), testutil::rand_t(&mut g.rng, &[10], 0.2));
+    g.nodes.push(Node {
+        id: lin,
+        inputs: vec![gap],
+        op: Op::Linear { w: wl, b: bl, in_dim: ch, out_dim: 10 },
+    });
+    Model {
+        name: format!("conf{seed}"),
+        task: Task::Classification,
+        input_shape: [3, 8, 8],
+        num_classes: 10,
+        nodes: g.nodes,
+        outputs: vec![lin],
+        tensors: g.tensors,
+        meta: BTreeMap::new(),
+        act_stats: HashMap::new(),
+        folded: false,
+    }
+}
+
+/// Propagated per-op error budget — the recurrence shared with
+/// `tests/qengine_parity.rs`: max-pool is exact on identical inputs,
+/// averaging ops add half a step of their input grid, a conv amplifies
+/// an upstream diff by at most its max row L1 norm, add sums branch
+/// errors and concat takes the worst branch.
+fn propagated_budget(q: &dfq::dfq::QuantizedModel) -> f32 {
+    let m = &q.model;
+    let mut site_scale: HashMap<usize, f32> = HashMap::new();
+    let mut row = 1usize;
+    for n in &m.nodes {
+        if matches!(n.op, Op::Act(_) | Op::Add | Op::Concat) {
+            site_scale.insert(n.id, q.act_cfg.rows[row].scale);
+            row += 1;
+        }
+    }
+    let l1_of = |w: &str| -> f32 {
+        let t = m.tensor(w).unwrap();
+        (0..t.shape()[0])
+            .map(|o| t.out_channel(o).iter().map(|v| v.abs()).sum())
+            .fold(0f32, f32::max)
+    };
+    let mut e: HashMap<usize, f32> = HashMap::new();
+    let mut g: HashMap<usize, f32> = HashMap::new();
+    let mut tol = 0f32;
+    for n in &m.nodes {
+        let (en, gn) = match &n.op {
+            Op::Input => (0.0, q.act_cfg.rows[0].scale),
+            Op::Conv { w, .. } | Op::ConvT2d { w, .. } => {
+                let a = e[&n.inputs[0]] * l1_of(w);
+                let fused = m.nodes.iter().any(|c| {
+                    matches!(c.op, Op::Act(_))
+                        && c.inputs.first() == Some(&n.id)
+                });
+                if fused {
+                    (a, 0.0)
+                } else {
+                    let s_pre = q
+                        .preact_params
+                        .iter()
+                        .find(|(id, _)| *id == n.id)
+                        .map(|(_, p)| p.scale)
+                        .unwrap_or(0.0);
+                    (a + s_pre, s_pre)
+                }
+            }
+            Op::Act(_) => {
+                let s = site_scale[&n.id];
+                (e[&n.inputs[0]] + s, s)
+            }
+            Op::Pool2d { kind, .. } => {
+                let (ein, gin) = (e[&n.inputs[0]], g[&n.inputs[0]]);
+                match kind {
+                    PoolKind::Max => (ein, gin),
+                    PoolKind::Avg => (ein + 0.5 * gin, gin),
+                }
+            }
+            Op::Upsample { .. } => (e[&n.inputs[0]], g[&n.inputs[0]]),
+            Op::Concat => {
+                let s = site_scale[&n.id];
+                let worst =
+                    n.inputs.iter().map(|i| e[i]).fold(0f32, f32::max);
+                (worst + s, s)
+            }
+            Op::Add => {
+                let s = site_scale[&n.id];
+                (n.inputs.iter().map(|i| e[i]).sum::<f32>() + s, s)
+            }
+            Op::Gap => {
+                (e[&n.inputs[0]] + 0.5 * g[&n.inputs[0]], g[&n.inputs[0]])
+            }
+            Op::Linear { w, .. } => {
+                tol = tol.max(1.5 * e[&n.inputs[0]] * l1_of(w) + 1e-3);
+                (0.0, 0.0)
+            }
+            Op::BatchNorm { .. } => {
+                unreachable!("budget wants a folded model")
+            }
+        };
+        e.insert(n.id, en);
+        g.insert(n.id, gn);
+    }
+    tol
+}
+
+/// The harness: every graph must plan fully integer, hit all three
+/// oracles, and report zero violations across the whole corpus.
+#[test]
+fn conformance_random_graphs_match_all_oracles() {
+    let quick = std::env::var("DFQ_CONFORMANCE_QUICK")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let total = if quick { 20 } else { 200 };
+    let dir = temp_dir();
+    let schemes = [
+        QScheme::int8_asymmetric(),
+        QScheme::int8_symmetric(),
+        QScheme::per_channel(8),
+        QScheme::int8_asymmetric().with_bits(6),
+    ];
+    let int8_only = PlanOpts { int8_only: true, ..Default::default() };
+    let mut op_tally: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for i in 0..total {
+        let seed = 40_000 + i as u64;
+        let model = random_model(seed);
+        for n in &model.nodes {
+            let label = match &n.op {
+                Op::Conv { groups, .. } if *groups > 1 => "conv-dw",
+                Op::Conv { .. } => "conv",
+                Op::ConvT2d { .. } => "convT",
+                Op::Pool2d { global: true, .. } => "pool-global",
+                Op::Pool2d { k, .. } if k.0 != k.1 => "pool-rect",
+                Op::Pool2d { .. } => "pool-square",
+                Op::Concat => "concat",
+                Op::Add => "add",
+                _ => continue,
+            };
+            *op_tally.entry(label).or_default() += 1;
+        }
+        let prep = quantize_data_free(&model, &DfqConfig::default())
+            .unwrap_or_else(|e| panic!("graph {seed}: dfq failed: {e:#}"));
+        let q = prep
+            .quantize(&schemes[i % schemes.len()], 8, BiasCorrMode::None, None)
+            .unwrap_or_else(|e| panic!("graph {seed}: quantize failed: {e:#}"));
+        let qm = q.pack_int8_opts(int8_only).unwrap_or_else(|e| {
+            panic!("graph {seed}: f32 fallback in plan: {e:#}")
+        });
+        assert_eq!(qm.fallback_ops(), 0, "graph {seed}: {}", qm.summary());
+
+        // oracle 1: fake-quant forward within the propagated budget
+        let x = testutil::random_input(&model, 2, seed ^ 0x9e37);
+        let y_or = nn::forward(&q.model, &x, &q.act_cfg).unwrap();
+        let y = qm.run(&x).unwrap();
+        assert_eq!(y.shape(), y_or[0].shape(), "graph {seed}");
+        let tol = propagated_budget(&q);
+        let diff = y.max_abs_diff(&y_or[0]);
+        assert!(
+            diff <= tol,
+            "graph {seed}: diff {diff} > budget {tol}\n{}",
+            qm.summarize()
+        );
+
+        // oracle 2: deterministic writer + bitwise reload
+        let p1 = dir.join(format!("g{seed}.dfqm"));
+        let p2 = dir.join(format!("g{seed}b.dfqm"));
+        q.save_artifact(&p1, int8_only).unwrap();
+        q.save_artifact(&p2, int8_only).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "graph {seed}: same plan must encode to identical bytes"
+        );
+        let y_disk =
+            QModel::from_artifact(&p1).unwrap().run_all(&x).unwrap();
+        let y_mem = qm.run_all(&x).unwrap();
+        assert_eq!(y_mem.len(), y_disk.len(), "graph {seed}");
+        for (a, b) in y_mem.iter().zip(&y_disk) {
+            assert_eq!(
+                a.data(),
+                b.data(),
+                "graph {seed}: reloaded plan drifted bitwise"
+            );
+        }
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+
+        // oracle 3: forced-scalar dispatch is bitwise-identical
+        let scalar = q
+            .pack_int8_opts(PlanOpts {
+                int8_only: true,
+                force_scalar: true,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(
+            y.data(),
+            scalar.run(&x).unwrap().data(),
+            "graph {seed}: native dispatch drifted from scalar"
+        );
+    }
+    // the full corpus must exercise the whole vocabulary (the quick
+    // subset is a smoke run and may miss rare draws)
+    if !quick {
+        for label in
+            ["conv", "conv-dw", "convT", "pool-square", "pool-rect",
+             "pool-global", "concat", "add"]
+        {
+            assert!(
+                op_tally.get(label).copied().unwrap_or(0) > 0,
+                "conformance corpus never generated a '{label}' op \
+                 ({total} graphs): {op_tally:?}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

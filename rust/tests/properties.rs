@@ -224,3 +224,239 @@ fn prop_validation_catches_corruption() {
     bad.tensors.insert(wname, Tensor::zeros(&[1, 1, 1, 1]));
     assert!(bad.validate().is_err());
 }
+
+/// Chain fixture for the through-pool CLE property: conv → relu →
+/// `pool_op` → conv → relu → gap → linear, biased convs, pre-folded.
+fn pool_chain_model(pool_op: Op, seed: u64) -> Model {
+    use dfq::graph::{ActKind, Node, Task};
+    use std::collections::{BTreeMap, HashMap};
+    let mut rng = Rng::new(seed);
+    let mut tensors = BTreeMap::new();
+    let t = |rng: &mut Rng, shape: &[usize], std: f32| {
+        Tensor::new(shape, rng.normal_vec(shape.iter().product(), std))
+    };
+    tensors.insert("w1".into(), t(&mut rng, &[8, 3, 3, 3], 0.4));
+    tensors.insert("b1".into(), t(&mut rng, &[8], 0.2));
+    tensors.insert("w4".into(), t(&mut rng, &[8, 8, 3, 3], 0.4));
+    tensors.insert("b4".into(), t(&mut rng, &[8], 0.2));
+    tensors.insert("wl".into(), t(&mut rng, &[10, 8], 0.4));
+    tensors.insert("bl".into(), t(&mut rng, &[10], 0.2));
+    let nodes = vec![
+        Node { id: 0, inputs: vec![], op: Op::Input },
+        Node {
+            id: 1,
+            inputs: vec![0],
+            op: Op::Conv {
+                w: "w1".into(),
+                b: Some("b1".into()),
+                in_ch: 3,
+                out_ch: 8,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                groups: 1,
+            },
+        },
+        Node { id: 2, inputs: vec![1], op: Op::Act(ActKind::Relu) },
+        Node { id: 3, inputs: vec![2], op: pool_op },
+        Node {
+            id: 4,
+            inputs: vec![3],
+            op: Op::Conv {
+                w: "w4".into(),
+                b: Some("b4".into()),
+                in_ch: 8,
+                out_ch: 8,
+                k: 3,
+                stride: 1,
+                pad: 1,
+                groups: 1,
+            },
+        },
+        Node { id: 5, inputs: vec![4], op: Op::Act(ActKind::Relu) },
+        Node { id: 6, inputs: vec![5], op: Op::Gap },
+        Node {
+            id: 7,
+            inputs: vec![6],
+            op: Op::Linear {
+                w: "wl".into(),
+                b: "bl".into(),
+                in_dim: 8,
+                out_dim: 10,
+            },
+        },
+    ];
+    Model {
+        name: "test_poolchain".into(),
+        task: Task::Classification,
+        input_shape: [3, 8, 8],
+        num_classes: 10,
+        nodes,
+        outputs: vec![7],
+        tensors,
+        meta: BTreeMap::new(),
+        act_stats: HashMap::new(),
+        folded: true,
+    }
+}
+
+/// CLE-through-pool equivariance, pinned *bitwise*: max and avg pooling
+/// (square, rectangular and global) commute with per-channel positive
+/// scaling, so applying power-of-two scales `s_i` to the producer and
+/// `1/s_i` to the consumer across the pool leaves the f32 forward
+/// bit-for-bit unchanged (power-of-two scaling only shifts exponents,
+/// so every conv product and pool average is float-exact).
+#[test]
+fn prop_cle_through_pool_scaling_is_bitwise_equivariant() {
+    use dfq::graph::PoolKind;
+    let pools = [
+        Op::pool2d(PoolKind::Max, 3, 2, 1),
+        Op::pool2d(PoolKind::Avg, 3, 2, 1),
+        Op::Pool2d {
+            kind: PoolKind::Max,
+            k: (2, 3),
+            stride: (2, 1),
+            pad: (0, 1),
+            global: false,
+        },
+        Op::global_pool2d(PoolKind::Avg),
+    ];
+    for (pi, pool_op) in pools.iter().enumerate() {
+        for case in 0..8u64 {
+            let seed = 7000 + 100 * pi as u64 + case;
+            let m0 = pool_chain_model(pool_op.clone(), seed);
+            let pairs = equalize::find_pairs(&m0);
+            assert_eq!(pairs.len(), 1, "pool {pi}: {pairs:?}");
+            let p = pairs[0];
+            assert!(p.through_pool, "pool {pi}: pair must cross the pool");
+            assert!(p.act.is_some());
+            let x = random_input(&m0, 2, seed ^ 0xabc);
+            let y0 = nn::forward(&m0, &x, &QuantCfg::fp32(&m0)).unwrap();
+            let mut m = m0.clone();
+            let mut rng = Rng::new(seed);
+            let s: Vec<f32> = (0..8)
+                .map(|_| (2f32).powi(rng.below(5) as i32 - 2))
+                .collect();
+            {
+                let w = m.tensor_mut("w1").unwrap();
+                for (i, &si) in s.iter().enumerate() {
+                    w.scale_out_channel(i, 1.0 / si);
+                }
+                let b = m.tensor_mut("b1").unwrap();
+                for (i, &si) in s.iter().enumerate() {
+                    b.data_mut()[i] /= si;
+                }
+                let w = m.tensor_mut("w4").unwrap();
+                for (i, &si) in s.iter().enumerate() {
+                    w.scale_in_channel(i, si);
+                }
+            }
+            let y1 = nn::forward(&m, &x, &QuantCfg::fp32(&m)).unwrap();
+            assert_eq!(
+                y0[0].data(),
+                y1[0].data(),
+                "pool {pi} case {case}: scaling across the pool changed \
+                 the f32 forward"
+            );
+        }
+    }
+}
+
+/// Pair discovery still stops where it must: output splits, concat
+/// (channel identity lost), add, gap and upsample all end a chain; only
+/// single-consumer act/pool hops survive. Pinned against all four
+/// branchy fixtures.
+#[test]
+fn prop_cle_discovery_stops_at_splits_and_boundaries() {
+    // deeplab: exactly one pair, and it crosses the stem max pool
+    let m = bn_fold::fold(&testutil::deeplab_head_model(31)).unwrap();
+    let pairs = equalize::find_pairs(&m);
+    assert_eq!(pairs.len(), 1, "{pairs:?}");
+    assert!(pairs[0].through_pool);
+    for p in &pairs {
+        assert!(matches!(m.node(p.a).op, Op::Conv { .. }));
+        assert!(matches!(m.node(p.b).op, Op::Conv { .. }));
+    }
+    // ssd: every chain hits a split, a global pool feeding concat, or
+    // the gap head — no eligible pair anywhere
+    let m = bn_fold::fold(&testutil::ssd_head_model(32)).unwrap();
+    assert!(equalize::find_pairs(&m).is_empty());
+    // inception: only the in-branch squeeze→expand pair; its chain
+    // crosses no pool
+    let m = bn_fold::fold(&testutil::inception_block_model(33)).unwrap();
+    let pairs = equalize::find_pairs(&m);
+    assert_eq!(pairs.len(), 1, "{pairs:?}");
+    assert!(!pairs[0].through_pool);
+    // resblock: dw→pw pair only; the chain out of the pw conv stops at
+    // the residual add
+    let m = bn_fold::fold(&testutil::residual_block_model(34)).unwrap();
+    let pairs = equalize::find_pairs(&m);
+    assert_eq!(pairs.len(), 1, "{pairs:?}");
+    assert!(!pairs[0].through_pool);
+}
+
+/// Full CLE (arbitrary eq.-11 scales, iterated to convergence) on the
+/// through-pool fixture still preserves the FP32 function to float
+/// noise — the through-pool extension introduces no drift.
+#[test]
+fn prop_cle_through_pool_preserves_fp32_on_deeplab() {
+    for case in 0..8u64 {
+        let mut m =
+            bn_fold::fold(&testutil::deeplab_head_model(8100 + case)).unwrap();
+        let x = random_input(&m, 2, case);
+        let y0 = nn::forward(&m, &x, &QuantCfg::fp32(&m)).unwrap();
+        equalize::equalize(&mut m, 30, 1e-4).unwrap();
+        let y1 = nn::forward(&m, &x, &QuantCfg::fp32(&m)).unwrap();
+        let rel = y0[0].max_abs_diff(&y1[0]) / y0[0].abs_max().max(1e-6);
+        assert!(rel < 2e-3, "case {case}: through-pool CLE broke FP32 by {rel}");
+    }
+}
+
+/// A pool window lying entirely in the padding (reachable with
+/// rectangular `k` + large pad on the short axis) would make the avg
+/// path divide by a zero tap count. The semantics are defined at
+/// validation instead: `pad < k` per axis, so every admitted window
+/// keeps at least one real tap — and at the maximal legal pad the avg
+/// kernel still produces only finite values.
+#[test]
+fn prop_pool_empty_window_is_rejected_at_validation() {
+    use dfq::graph::PoolKind;
+    // maximal legal pad on both axes is fine
+    let rect = |k: (usize, usize), pad: (usize, usize)| Op::Pool2d {
+        kind: PoolKind::Avg,
+        k,
+        stride: (1, 1),
+        pad,
+        global: false,
+    };
+    pool_chain_model(rect((2, 3), (1, 2)), 61).validate().unwrap();
+    // pad >= k on either axis admits an all-padding window
+    for (k, pad) in [((2, 3), (2, 2)), ((2, 3), (0, 3)), ((1, 3), (1, 1))] {
+        let err = pool_chain_model(rect(k, pad), 62).validate().unwrap_err();
+        assert!(
+            err.to_string().contains("pad"),
+            "k={k:?} pad={pad:?}: wrong error: {err:#}"
+        );
+    }
+    // zero-sized windows and non-canonical global forms are structural
+    // errors too, never runtime surprises
+    assert!(pool_chain_model(rect((0, 3), (0, 1)), 63).validate().is_err());
+    let bad_global = Op::Pool2d {
+        kind: PoolKind::Max,
+        k: (2, 2),
+        stride: (1, 1),
+        pad: (0, 0),
+        global: true,
+    };
+    assert!(pool_chain_model(bad_global, 64).validate().is_err());
+
+    // the runtime pin: every window of a maximal-pad avg pool has at
+    // least one real tap, so no output is NaN/inf
+    let mut rng = Rng::new(65);
+    let x = Tensor::new(&[1, 1, 4, 5], rng.normal_vec(20, 1.0));
+    let y = ops::avg_pool2d_rect(&x, (2, 3), (1, 1), (1, 2));
+    assert!(
+        y.data().iter().all(|v| v.is_finite()),
+        "avg pool with pad = k-1 produced non-finite outputs"
+    );
+}

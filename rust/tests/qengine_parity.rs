@@ -544,6 +544,221 @@ fn inception_block_plans_fully_integer_and_matches_oracle() {
     }
 }
 
+/// Generic propagated per-op error budget for a quantised fixture: the
+/// same recurrence the residual/inception tests derive by hand, walked
+/// over the node list so branchier graphs don't need bespoke algebra.
+/// Per op the integer path is within one step of the oracle on identical
+/// inputs (max-pool exact; avg-pool/GAP add half a step of their input
+/// grid); a conv amplifies an upstream diff by at most its max row L1
+/// norm; add sums branch errors, concat takes the worst branch.
+fn propagated_budget(q: &dfq::dfq::QuantizedModel) -> f32 {
+    use dfq::graph::{Op, PoolKind};
+    use std::collections::HashMap;
+    let m = &q.model;
+    // Act/Add/Concat nodes map to activation-site rows in node order
+    // (row 0 is the input site)
+    let mut site_scale: HashMap<usize, f32> = HashMap::new();
+    let mut row = 1usize;
+    for n in &m.nodes {
+        if matches!(n.op, Op::Act(_) | Op::Add | Op::Concat) {
+            site_scale.insert(n.id, q.act_cfg.rows[row].scale);
+            row += 1;
+        }
+    }
+    let l1_of = |w: &str| -> f32 {
+        let t = m.tensor(w).unwrap();
+        (0..t.shape()[0])
+            .map(|o| t.out_channel(o).iter().map(|v| v.abs()).sum())
+            .fold(0f32, f32::max)
+    };
+    // e: accumulated diff vs the oracle at each node's output;
+    // g: scale of the grid that output lives on (for the half-step
+    // rounding of averaging ops)
+    let mut e: HashMap<usize, f32> = HashMap::new();
+    let mut g: HashMap<usize, f32> = HashMap::new();
+    let mut tol = 0f32;
+    for n in &m.nodes {
+        let (en, gn) = match &n.op {
+            Op::Input => (0.0, q.act_cfg.rows[0].scale),
+            Op::Conv { w, .. } | Op::ConvT2d { w, .. } => {
+                let a = e[&n.inputs[0]] * l1_of(w);
+                let fused = m.nodes.iter().any(|c| {
+                    matches!(c.op, Op::Act(_))
+                        && c.inputs.first() == Some(&n.id)
+                });
+                if fused {
+                    // the following act site contributes the step
+                    (a, 0.0)
+                } else {
+                    let s_pre = q
+                        .preact_params
+                        .iter()
+                        .find(|(id, _)| *id == n.id)
+                        .map(|(_, p)| p.scale)
+                        .unwrap_or(0.0);
+                    (a + s_pre, s_pre)
+                }
+            }
+            Op::Act(_) => {
+                let s = site_scale[&n.id];
+                (e[&n.inputs[0]] + s, s)
+            }
+            Op::Pool2d { kind, .. } => {
+                let (ein, gin) = (e[&n.inputs[0]], g[&n.inputs[0]]);
+                match kind {
+                    PoolKind::Max => (ein, gin),
+                    PoolKind::Avg => (ein + 0.5 * gin, gin),
+                }
+            }
+            Op::Upsample { .. } => (e[&n.inputs[0]], g[&n.inputs[0]]),
+            Op::Concat => {
+                let s = site_scale[&n.id];
+                let worst = n
+                    .inputs
+                    .iter()
+                    .map(|i| e[i])
+                    .fold(0f32, f32::max);
+                (worst + s, s)
+            }
+            Op::Add => {
+                let s = site_scale[&n.id];
+                (n.inputs.iter().map(|i| e[i]).sum::<f32>() + s, s)
+            }
+            Op::Gap => {
+                (e[&n.inputs[0]] + 0.5 * g[&n.inputs[0]], g[&n.inputs[0]])
+            }
+            Op::Linear { w, .. } => {
+                // f32 logits are float-exact given their inputs
+                tol = tol.max(1.5 * e[&n.inputs[0]] * l1_of(w) + 1e-3);
+                (0.0, 0.0)
+            }
+            Op::BatchNorm { .. } => unreachable!("budget wants a folded model"),
+        };
+        e.insert(n.id, en);
+        g.insert(n.id, gn);
+    }
+    tol
+}
+
+/// End-to-end acceptance for the segmentation decoder ops: the
+/// DeepLab-style fixture (max-pool stem inside a CLE pair, global-pool
+/// ASPP branch + upsample, concat merge, transposed-conv decoder) plans
+/// with ZERO f32 fallback ops under `int8_only`, matches the fake-quant
+/// oracle within the propagated per-op budget, and runs bitwise
+/// identically under forced-scalar dispatch.
+#[test]
+fn deeplab_head_plans_fully_integer_and_matches_oracle() {
+    for seed in [601u64, 602, 603] {
+        let m = testutil::deeplab_head_model(seed);
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        let q = prep
+            .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+            .unwrap();
+        let qm = q
+            .pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() })
+            .unwrap();
+        assert_eq!(qm.fallback_ops(), 0, "seed {seed}: {}", qm.summary());
+        assert_eq!(qm.f32_layers, 0, "seed {seed}: {}", qm.summary());
+        // 7 convs (2 stem + 3 branch + convT decoder + head) + linear
+        assert_eq!(qm.int_layers, 8, "seed {seed}: {}", qm.summary());
+        let report = qm.summarize();
+        for needle in [
+            "convT [int8]",
+            "pool-max [int8]",
+            "pool-avg-global [int8]",
+            "concat-requant [int8]",
+            "gap [int8]",
+            "linear [int8->f32]",
+        ] {
+            assert!(report.contains(needle), "missing '{needle}' in\n{report}");
+        }
+        assert!(!report.contains("FALLBACK"), "{report}");
+
+        let x = testutil::random_input(&m, 2, seed);
+        let y_or = nn::forward(&q.model, &x, &q.act_cfg).unwrap();
+        let y_int = qm.run(&x).unwrap();
+        assert_eq!(y_int.shape(), y_or[0].shape());
+        let tol = propagated_budget(&q);
+        let diff = y_int.max_abs_diff(&y_or[0]);
+        assert!(
+            diff <= tol,
+            "seed {seed}: end-to-end diff {diff} > budget {tol}"
+        );
+
+        let scalar = q
+            .pack_int8_opts(PlanOpts {
+                int8_only: true,
+                force_scalar: true,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(
+            y_int.data(),
+            scalar.run(&x).unwrap().data(),
+            "seed {seed}: native dispatch drifted from scalar"
+        );
+    }
+}
+
+/// End-to-end acceptance for the detection-head ops: the SSD-style
+/// fixture (rectangular max-pool pyramid, global max *and* avg pools
+/// onto a shared 1x1 grid, concat merge) plans with ZERO f32 fallback
+/// ops under `int8_only`, matches the oracle within the propagated
+/// budget, and is bitwise-stable under forced-scalar dispatch.
+#[test]
+fn ssd_head_plans_fully_integer_and_matches_oracle() {
+    for seed in [701u64, 702, 703] {
+        let m = testutil::ssd_head_model(seed);
+        let prep = quantize_data_free(&m, &DfqConfig::default()).unwrap();
+        let q = prep
+            .quantize(&QScheme::int8_asymmetric(), 8, BiasCorrMode::None, None)
+            .unwrap();
+        let qm = q
+            .pack_int8_opts(PlanOpts { int8_only: true, ..Default::default() })
+            .unwrap();
+        assert_eq!(qm.fallback_ops(), 0, "seed {seed}: {}", qm.summary());
+        assert_eq!(qm.f32_layers, 0, "seed {seed}: {}", qm.summary());
+        // 5 convs (stem + 3 per-scale heads + merge) + linear
+        assert_eq!(qm.int_layers, 6, "seed {seed}: {}", qm.summary());
+        let report = qm.summarize();
+        for needle in [
+            "pool-max [int8]",
+            "pool-max-global [int8]",
+            "pool-avg-global [int8]",
+            "concat-requant [int8]",
+            "gap [int8]",
+            "linear [int8->f32]",
+        ] {
+            assert!(report.contains(needle), "missing '{needle}' in\n{report}");
+        }
+        assert!(!report.contains("FALLBACK"), "{report}");
+
+        let x = testutil::random_input(&m, 2, seed);
+        let y_or = nn::forward(&q.model, &x, &q.act_cfg).unwrap();
+        let y_int = qm.run(&x).unwrap();
+        assert_eq!(y_int.shape(), y_or[0].shape());
+        let tol = propagated_budget(&q);
+        let diff = y_int.max_abs_diff(&y_or[0]);
+        assert!(
+            diff <= tol,
+            "seed {seed}: end-to-end diff {diff} > budget {tol}"
+        );
+
+        let scalar = q
+            .pack_int8_opts(PlanOpts {
+                int8_only: true,
+                force_scalar: true,
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(
+            y_int.data(),
+            scalar.run(&x).unwrap().data(),
+            "seed {seed}: native dispatch drifted from scalar"
+        );
+    }
+}
+
 /// Batch-parallel `run_all` over the branchy fixture stays bitwise equal
 /// to the serial path (concat/pool kernels are image-independent too).
 #[test]
